@@ -1,0 +1,95 @@
+//! Reproduction of the paper's §3 design anatomy (Figure 4): four FT tasks
+//! on 16 GPUs under the four designs —
+//!
+//!   (a) Task-Sequential: run the tasks one by one
+//!   (b) naïve joint FT: homogeneous replicas + uniform dispatch
+//!   (c) heterogeneous replicas + length-based dispatch
+//!   (d) heterogeneous replicas + workload-balanced dispatch (LobRA)
+//!
+//! and the Figure 4(e) style dump of the Eq. 1 inputs/decisions.
+//!
+//! ```bash
+//! cargo run --release --example anatomy
+//! ```
+
+use lobra::cluster::ClusterSpec;
+use lobra::config::ModelDesc;
+use lobra::coordinator::bucketing::Buckets;
+use lobra::coordinator::dispatcher::{DispatchPolicy, Dispatcher};
+use lobra::coordinator::planner::{Planner, PlannerOptions};
+use lobra::coordinator::scheduler::{sequential_gpu_seconds, Scheduler, SchedulerOptions};
+use lobra::costmodel::CostModel;
+use lobra::data::LengthDistribution;
+use lobra::prelude::{TaskSet, TaskSpec};
+
+fn main() {
+    // Four tasks with increasingly long data — the Figure 4 setup.
+    let tasks = TaskSet::new(vec![
+        TaskSpec::new("qa-short", 128, LengthDistribution::fit(180.0, 4.0, 16, 1024)),
+        TaskSpec::new("instruct", 96, LengthDistribution::fit(450.0, 2.5, 16, 3000)),
+        TaskSpec::new("code", 40, LengthDistribution::fit(1200.0, 1.2, 16, 7000)),
+        TaskSpec::new("summarize", 14, LengthDistribution::fit(5200.0, 0.8, 64, 14000)),
+    ]);
+    let model = ModelDesc::llama2_7b();
+    let cluster = ClusterSpec::a100_40g(16);
+    let cost = CostModel::calibrated(&model, &cluster);
+    let planner = Planner::new(&cost, &cluster);
+
+    println!("== Figure 4 anatomy: 4 FT tasks, {} ==\n", cluster.name);
+
+    // (a) Task-Sequential
+    let (seq_total, per_task) = sequential_gpu_seconds(
+        &cost, &cluster, &tasks, false, 20, &SchedulerOptions::default());
+    println!("(a) Task-Sequential       : {seq_total:9.2} GPU·s/step");
+    for (name, gs) in &per_task {
+        println!("      {name:<12} {gs:8.2}");
+    }
+
+    // (b) naïve: homogeneous replicas
+    let fused = planner.plan_homogeneous(&tasks, &PlannerOptions::default()).unwrap();
+    let rb = Scheduler::new(&cost, &fused, &tasks, SchedulerOptions::default()).run_steps(20);
+    println!(
+        "(b) homogeneous + balanced: {:9.2} GPU·s/step  plan [{}]",
+        rb.gpu_seconds_per_step,
+        fused.notation()
+    );
+
+    // (c) heterogeneous + length-based
+    let plan = planner.plan(&tasks, PlannerOptions::default()).unwrap();
+    let mut o_len = SchedulerOptions::default();
+    o_len.policy = DispatchPolicy::LengthBased;
+    let rc = Scheduler::new(&cost, &plan, &tasks, o_len).run_steps(20);
+    println!(
+        "(c) hetero + length-based : {:9.2} GPU·s/step  plan [{}]  util {:.0}%",
+        rc.gpu_seconds_per_step,
+        plan.notation(),
+        rc.utilization * 100.0
+    );
+
+    // (d) heterogeneous + workload-balanced (LobRA)
+    let rd = Scheduler::new(&cost, &plan, &tasks, SchedulerOptions::default()).run_steps(20);
+    println!(
+        "(d) hetero + balanced     : {:9.2} GPU·s/step  util {:.0}%",
+        rd.gpu_seconds_per_step,
+        rd.utilization * 100.0
+    );
+
+    println!(
+        "\nreduction (d) vs (b): {:.1}%   (d) vs (c): {:.1}%",
+        (1.0 - rd.gpu_seconds_per_step / rb.gpu_seconds_per_step) * 100.0,
+        (1.0 - rd.gpu_seconds_per_step / rc.gpu_seconds_per_step) * 100.0
+    );
+
+    // Figure 4(e): inputs + decision variables of Eq. 1 for one batch.
+    println!("\n== Figure 4(e): one dispatch instance ==");
+    let boundaries = vec![512, 2048, 8192, 16384];
+    let counts = vec![196, 62, 16, 4];
+    let buckets = Buckets { boundaries: boundaries.clone(), counts: counts.clone(), padding_tokens: 0 };
+    let dispatcher = Dispatcher::new(&cost, &plan);
+    let dp = dispatcher.dispatch(&buckets, DispatchPolicy::Balanced).unwrap();
+    println!("buckets B_j = {counts:?} at boundaries {boundaries:?}");
+    for (i, (cfg, p)) in dp.groups.iter().enumerate() {
+        println!("  d[{cfg}x{p}] = {:?}", dp.d[i]);
+    }
+    println!("predicted step time: {:.2}s", dp.predicted_step_time);
+}

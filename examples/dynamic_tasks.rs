@@ -1,0 +1,80 @@
+//! Multi-tenant lifecycle scenario (paper §5.1 "dynamic batches"): FT
+//! requests arrive and exit over time; the TaskManager re-plans on every
+//! change and redeploys when the plan differs, checkpointing only the LoRA
+//! adapters (the base model is shared and immutable).
+//!
+//! ```bash
+//! cargo run --release --example dynamic_tasks
+//! ```
+
+use lobra::cluster::ClusterSpec;
+use lobra::config::ModelDesc;
+use lobra::coordinator::planner::PlannerOptions;
+use lobra::coordinator::scheduler::{Scheduler, SchedulerOptions};
+use lobra::coordinator::tasks::{ReplanOutcome, TaskEvent, TaskManager};
+use lobra::costmodel::CostModel;
+use lobra::data::{DatasetProfile, LengthDistribution};
+use lobra::prelude::{TaskSet, TaskSpec};
+
+fn main() {
+    let model = ModelDesc::llama2_7b();
+    let cluster = ClusterSpec::a100_40g(16);
+    let cost = CostModel::calibrated(&model, &cluster);
+
+    // Day 0: three instruction-tuning tenants.
+    let initial = TaskSet::new(vec![
+        TaskSpec::from_profile(DatasetProfile::by_name("databricks-dolly-15k").unwrap()),
+        TaskSpec::from_profile(DatasetProfile::by_name("MathInstruct").unwrap()),
+        TaskSpec::from_profile(DatasetProfile::by_name("MetaMathQA").unwrap()),
+    ]);
+    let mut mgr = TaskManager::new(&cost, &cluster, initial, PlannerOptions::default());
+    println!("initial plan: [{}]\n", mgr.plan().unwrap().notation());
+
+    let simulate = |mgr: &TaskManager, label: &str| {
+        let Some(plan) = mgr.plan() else {
+            println!("  ({label}: no active tasks)");
+            return;
+        };
+        let mut sched = Scheduler::new(&cost, plan, mgr.tasks(), SchedulerOptions::default());
+        let rep = sched.run_steps(20);
+        println!("  {label}: {}", rep.summary());
+    };
+    simulate(&mgr, "steady state");
+
+    // Event 1: a summarization tenant with very long sequences arrives.
+    println!("\n>> MeetingBank arrives (long sequences)");
+    let outcome = mgr.handle(TaskEvent::Arrive(TaskSpec::from_profile(
+        DatasetProfile::by_name("MeetingBank").unwrap(),
+    )));
+    report(&outcome, &mgr);
+    simulate(&mgr, "after arrival");
+
+    // Event 2: a short-data tenant arrives; plan likely keeps shape.
+    println!("\n>> small QA tenant arrives (short sequences)");
+    let outcome = mgr.handle(TaskEvent::Arrive(TaskSpec::new(
+        "tiny-qa",
+        64,
+        LengthDistribution::fit(150.0, 3.0, 16, 1024),
+    )));
+    report(&outcome, &mgr);
+    simulate(&mgr, "after arrival");
+
+    // Event 3: the long-sequence tenant finishes; capacity shifts back.
+    println!("\n>> MeetingBank exits");
+    let outcome = mgr.handle(TaskEvent::Exit { name: "MeetingBank".into() });
+    report(&outcome, &mgr);
+    simulate(&mgr, "after exit");
+
+    println!("\ntotal redeployments: {}", mgr.redeploys);
+}
+
+fn report(outcome: &ReplanOutcome, mgr: &TaskManager) {
+    match outcome {
+        ReplanOutcome::Unchanged => println!("  plan unchanged — training continues"),
+        ReplanOutcome::Redeployed { adjustment_seconds } => println!(
+            "  redeployed (adapters checkpointed, ~{adjustment_seconds:.0}s adjustment)\n  new plan: [{}]",
+            mgr.plan().unwrap().notation()
+        ),
+        ReplanOutcome::Drained => println!("  drained"),
+    }
+}

@@ -1,0 +1,58 @@
+//! Profiling-based cost-model calibration on the *real* executor — the
+//! paper's Appendix D methodology run end-to-end: time the AOT train step
+//! at every exported microbatch shape on the PJRT CPU client, fit
+//! `t(b,s) = β₀ + β₁·b·s + β₂·b·s²`, and report fit quality + predictions
+//! for unseen shapes. This closes the loop between the L3 planner's cost
+//! model and the actual L1/L2 artifacts.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example profile_calibrate
+//! ```
+
+use lobra::costmodel::calibrate::{fit, Observation};
+use lobra::data::SyntheticCorpus;
+use lobra::runtime::Engine;
+
+fn main() -> anyhow::Result<()> {
+    let mut engine = Engine::load("artifacts")?;
+    let (base, lora) = engine.init_params(0);
+    engine.set_base(&base)?;
+    let m = engine.manifest().clone();
+    let n_tasks = m.model.n_tasks as usize;
+    let mut corpus = SyntheticCorpus::new(m.model.vocab as u32, n_tasks, 1);
+
+    println!("profiling {} train-step shapes (3 reps each, 1 warmup)...", engine.shapes().len());
+    let mut obs = Vec::new();
+    for (b, s) in engine.shapes() {
+        let tasks: Vec<usize> = (0..b as usize).map(|i| i % n_tasks).collect();
+        let (toks, segs) = corpus.fused_microbatch(&tasks, s as usize);
+        engine.train_step((b, s), &lora, &toks, &segs)?; // warmup
+        let mut best = f64::INFINITY;
+        for _ in 0..3 {
+            let t0 = std::time::Instant::now();
+            engine.train_step((b, s), &lora, &toks, &segs)?;
+            best = best.min(t0.elapsed().as_secs_f64());
+        }
+        println!("  t({b:>2}, {s:>4}) = {best:.3}s   ({:.0} tokens/s)", (b * s) as f64 / best);
+        obs.push(Observation { b, s, seconds: best });
+    }
+
+    let Some(f) = fit(&obs) else {
+        anyhow::bail!("not enough shapes to fit (need ≥3)");
+    };
+    println!(
+        "\nfitted: t(b,s) = {:.4} + {:.3e}·b·s + {:.3e}·b·s²",
+        f.beta0, f.beta1, f.beta2
+    );
+    println!("relative RMS error over profiled shapes: {:.1}%", f.rms_rel_error(&obs) * 100.0);
+
+    println!("\npredictions at profiled + unseen shapes:");
+    for (b, s) in [(16u64, 64u64), (8, 128), (4, 256), (2, 512), (4, 512), (1, 1024)] {
+        println!("  t({b:>2}, {s:>4}) ≈ {:.3}s", f.predict(b, s));
+    }
+    println!(
+        "\nattention share at s=512 (β₂·s / (β₁ + β₂·s)): {:.1}%",
+        100.0 * f.beta2 * 512.0 / (f.beta1 + f.beta2 * 512.0)
+    );
+    Ok(())
+}

@@ -1,0 +1,135 @@
+"""AOT export: lower the L2 train/eval steps to HLO *text* artifacts.
+
+Run once by ``make artifacts``; the Rust runtime (rust/src/runtime/) loads
+the text with ``HloModuleProto::from_text_file``, compiles it on the PJRT
+CPU client, and executes it on the request path. Python never runs again.
+
+HLO **text** -- not ``lowered.compile().serialize()`` and not a serialized
+``HloModuleProto`` -- is the interchange format: jax >= 0.5 emits protos
+with 64-bit instruction ids that xla_extension 0.5.1 (what the published
+``xla`` 0.1.6 crate links) rejects (``proto.id() <= INT_MAX``). The text
+parser reassigns ids and round-trips cleanly. Lowered with
+``return_tuple=True``; the Rust side unwraps with ``to_tuple()``.
+
+Per-shape artifacts: the coordinator pads every microbatch to one of the
+bucket shapes below, so one compiled executable per (batch, seqlen) bucket
+is loaded at startup -- the same "one executable per model variant" regime
+a real TPU deployment would use.
+
+Usage: python -m compile.aot --out-dir ../artifacts [--preset tiny]
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+# (batch, seqlen) microbatch shapes exported per preset. Shapes keep
+# batch*seqlen (token budget) roughly constant, mirroring how the LobRA
+# coordinator packs chunks up to a replica's token capacity.
+SHAPES: Dict[str, List[Tuple[int, int]]] = {
+    "nano": [(8, 32), (4, 64), (2, 128)],
+    "tiny": [(16, 64), (8, 128), (4, 256), (2, 512)],
+    "small": [(16, 64), (8, 128), (4, 256), (2, 512)],
+    "base100m": [(8, 128), (4, 256), (2, 512), (1, 1024)],
+}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def export(preset: str, out_dir: str, seed: int = 0) -> Dict[str, Any]:
+    cfg = M.PRESETS[preset]
+    built = M.build(cfg, seed=seed)
+    base_flat, lora_flat = built["base_flat"], built["lora_flat"]
+    os.makedirs(out_dir, exist_ok=True)
+
+    artifacts = []
+
+    def lower_and_write(fn, name: str, bsz: int, seqlen: int, outputs: List[str]):
+        args = (
+            _spec(base_flat.shape, jnp.float32),
+            _spec(lora_flat.shape, jnp.float32),
+            _spec((bsz, seqlen), jnp.int32),
+            _spec((bsz,), jnp.int32),
+        )
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        fname = f"{name}_b{bsz}_s{seqlen}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        artifacts.append({
+            "file": fname,
+            "kind": name,
+            "batch": bsz,
+            "seq": seqlen,
+            "inputs": ["base_flat:f32", "lora_flat:f32",
+                       f"tokens:i32[{bsz},{seqlen}]", f"seg_ids:i32[{bsz}]"],
+            "outputs": outputs,
+            "sha256": hashlib.sha256(text.encode()).hexdigest(),
+        })
+        print(f"  wrote {fname} ({len(text) / 1e6:.2f} MB)")
+
+    train_outputs = ["loss:f32", "grad_flat:f32", "tokens:f32",
+                     f"task_loss:f32[{cfg.n_tasks}]", f"task_tokens:f32[{cfg.n_tasks}]"]
+    eval_outputs = ["loss:f32", "tokens:f32",
+                    f"task_loss:f32[{cfg.n_tasks}]", f"task_tokens:f32[{cfg.n_tasks}]"]
+
+    for bsz, seqlen in SHAPES[preset]:
+        lower_and_write(built["train_step"], "train", bsz, seqlen, train_outputs)
+    # One eval artifact at the largest shape is enough for validation loss.
+    bsz, seqlen = SHAPES[preset][-1]
+    lower_and_write(built["eval_loss"], "eval", bsz, seqlen, eval_outputs)
+
+    manifest = {
+        "preset": preset,
+        "model": {
+            "vocab": cfg.vocab, "d_model": cfg.d_model, "n_layers": cfg.n_layers,
+            "n_heads": cfg.n_heads, "d_ff": cfg.d_ff, "n_tasks": cfg.n_tasks,
+            "lora_rank": cfg.lora_rank, "lora_alpha": cfg.lora_alpha,
+            "block_rows": cfg.block_rows, "pad_id": M.PAD_ID,
+        },
+        "base_param_count": int(base_flat.size),
+        "lora_param_count": int(lora_flat.size),
+        "base_params": built["base_manifest"],
+        "lora_params": built["lora_manifest"],
+        "shapes": [{"batch": b, "seq": s} for b, s in SHAPES[preset]],
+        "artifacts": artifacts,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"  wrote manifest.json (base={base_flat.size:,} lora={lora_flat.size:,} params)")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--preset", default="tiny", choices=sorted(M.PRESETS))
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    print(f"exporting preset={args.preset} -> {args.out_dir}")
+    export(args.preset, args.out_dir, seed=args.seed)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,280 @@
+"""L1: fused multi-LoRA matmul Pallas kernels.
+
+The compute hot-spot of joint LoRA fine-tuning (LobRA, PVLDB'25): a fused
+batch holds rows (tokens) belonging to *different* FT tasks, and every row
+must go through the shared base weight ``W`` plus its *own* task's low-rank
+adapter ``(B_t, A_t)``:
+
+    Y[m] = X[m] @ W + scaling * (X[m] @ B_t) @ A_t,   t = task(m)
+
+GPU systems (Punica/SLoRA) implement this with an SGMV CUDA kernel that
+gathers adapters at warp granularity.  Re-thought for TPU (see
+DESIGN.md#hardware-adaptation): rows are sorted by task and tiled into
+``block_rows`` VMEM blocks, one task per block; a scalar-prefetch array
+gives the task id of each row block, and the BlockSpec index map streams
+the right adapter slice HBM->VMEM while the MXU runs the dense base matmul.
+The coordinator (L3) guarantees the sorted, block-aligned layout because it
+already buckets and batches sequences per task.
+
+Three kernels live here:
+
+* ``_fused_fwd_kernel``   -- Y = X @ W + s * (X @ B_t) @ A_t
+* the same kernel, called with transposed operands, computes
+  dX = dY @ W^T + s * (dY @ A_t^T) @ B_t^T
+* ``_adapter_grad_kernel`` -- per-task dB_t / dA_t with revisit
+  accumulation (consecutive row blocks of one task accumulate into the
+  same output block).
+
+All kernels run under ``interpret=True`` so they lower to plain HLO that
+the CPU PJRT plugin can execute; on a real TPU the same BlockSpecs compile
+through Mosaic.  Correctness is pinned against ``ref.py`` by pytest.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = [
+    "multi_lora_matmul",
+    "multi_lora_matmul_pallas",
+    "adapter_grads_pallas",
+    "block_task_ids_from_rows",
+]
+
+# Set False to compile for a real TPU (Mosaic); CPU PJRT requires True.
+INTERPRET = True
+
+
+def block_task_ids_from_rows(row_task_ids: jax.Array, block_rows: int) -> jax.Array:
+    """Collapse per-row task ids (sorted, block-aligned) to per-block ids."""
+    return row_task_ids[::block_rows]
+
+
+# ---------------------------------------------------------------------------
+# Forward kernel: one (row-block, col-block) tile per grid step.
+# ---------------------------------------------------------------------------
+
+
+def _fused_fwd_kernel(tids, x_ref, w_ref, b_ref, a_ref, o_ref, *, scaling: float):
+    del tids  # only consumed by the BlockSpec index maps
+    x = x_ref[...]
+    base = jnp.dot(x, w_ref[...], preferred_element_type=jnp.float32)
+    xb = jnp.dot(x, b_ref[0], preferred_element_type=jnp.float32)
+    lora = jnp.dot(xb, a_ref[0], preferred_element_type=jnp.float32)
+    o_ref[...] = (base + scaling * lora).astype(o_ref.dtype)
+
+
+def multi_lora_matmul_pallas(
+    x: jax.Array,
+    w: jax.Array,
+    b_stack: jax.Array,
+    a_stack: jax.Array,
+    block_task_ids: jax.Array,
+    *,
+    scaling: float = 1.0,
+    block_rows: int = 128,
+    block_cols: int = 128,
+) -> jax.Array:
+    """Fused multi-adapter LoRA matmul (Pallas, forward only).
+
+    Args:
+      x: ``[M, K]`` activations, rows sorted by task, ``M % block_rows == 0``.
+      w: ``[K, N]`` shared (frozen) base weight.
+      b_stack: ``[T, K, r]`` per-task down-projections.
+      a_stack: ``[T, r, N]`` per-task up-projections.
+      block_task_ids: ``[M // block_rows]`` int32, non-decreasing.
+      scaling: LoRA scaling alpha/r.
+      block_rows / block_cols: VMEM tile sizes.
+
+    Returns:
+      ``[M, N]`` fused output.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    t, k3, r = b_stack.shape
+    t2, r2, n2 = a_stack.shape
+    if k != k2 or k != k3 or n != n2 or r != r2 or t != t2:
+        raise ValueError(
+            f"inconsistent shapes x={x.shape} w={w.shape} "
+            f"b={b_stack.shape} a={a_stack.shape}"
+        )
+    if m % block_rows != 0:
+        raise ValueError(f"M={m} not a multiple of block_rows={block_rows}")
+    if n % block_cols != 0:
+        raise ValueError(f"N={n} not a multiple of block_cols={block_cols}")
+    if block_task_ids.shape != (m // block_rows,):
+        raise ValueError(
+            f"block_task_ids shape {block_task_ids.shape} != ({m // block_rows},)"
+        )
+
+    grid = (m // block_rows, n // block_cols)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, k), lambda i, j, tids: (i, 0)),
+            pl.BlockSpec((k, block_cols), lambda i, j, tids: (0, j)),
+            pl.BlockSpec((1, k, r), lambda i, j, tids: (tids[i], 0, 0)),
+            pl.BlockSpec((1, r, block_cols), lambda i, j, tids: (tids[i], 0, j)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, block_cols), lambda i, j, tids: (i, j)),
+    )
+    kernel = functools.partial(_fused_fwd_kernel, scaling=float(scaling))
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=INTERPRET,
+    )(block_task_ids.astype(jnp.int32), x, w, b_stack, a_stack)
+
+
+# ---------------------------------------------------------------------------
+# Adapter-gradient kernel: grid over row blocks, revisit accumulation into
+# the per-task output block selected by the scalar-prefetched task id.
+# ---------------------------------------------------------------------------
+
+
+def _adapter_grad_kernel(tids, x_ref, dy_ref, b_ref, a_ref, db_ref, da_ref, *, scaling: float):
+    i = pl.program_id(0)
+    t = tids[i]
+    # First visit of this task's output block: rows are sorted by task, so
+    # a new task starts exactly when the id changes (or at i == 0).
+    first = jnp.logical_or(i == 0, tids[jnp.maximum(i - 1, 0)] != t)
+
+    @pl.when(first)
+    def _init():
+        db_ref[...] = jnp.zeros_like(db_ref)
+        da_ref[...] = jnp.zeros_like(da_ref)
+
+    x = x_ref[...].astype(jnp.float32)
+    dy = dy_ref[...].astype(jnp.float32)
+    # dB_t += s * X^T (dY A_t^T);  dA_t += s * (X B_t)^T dY
+    dxa = jnp.dot(dy, a_ref[0].astype(jnp.float32).T, preferred_element_type=jnp.float32)
+    db_ref[0] += scaling * jnp.dot(x.T, dxa, preferred_element_type=jnp.float32)
+    xb = jnp.dot(x, b_ref[0].astype(jnp.float32), preferred_element_type=jnp.float32)
+    da_ref[0] += scaling * jnp.dot(xb.T, dy, preferred_element_type=jnp.float32)
+
+
+def adapter_grads_pallas(
+    x: jax.Array,
+    dy: jax.Array,
+    b_stack: jax.Array,
+    a_stack: jax.Array,
+    block_task_ids: jax.Array,
+    *,
+    scaling: float = 1.0,
+    block_rows: int = 128,
+) -> Tuple[jax.Array, jax.Array]:
+    """Per-task LoRA adapter gradients ``(dB_stack, dA_stack)``.
+
+    Output blocks of tasks that receive no rows are masked to zero (Pallas
+    leaves unvisited output blocks undefined).
+    """
+    m, k = x.shape
+    m2, n = dy.shape
+    t, _, r = b_stack.shape
+    if m != m2:
+        raise ValueError(f"x rows {m} != dy rows {m2}")
+    if m % block_rows != 0:
+        raise ValueError(f"M={m} not a multiple of block_rows={block_rows}")
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(m // block_rows,),
+        in_specs=[
+            pl.BlockSpec((block_rows, k), lambda i, tids: (i, 0)),
+            pl.BlockSpec((block_rows, n), lambda i, tids: (i, 0)),
+            pl.BlockSpec((1, k, r), lambda i, tids: (tids[i], 0, 0)),
+            pl.BlockSpec((1, r, n), lambda i, tids: (tids[i], 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, k, r), lambda i, tids: (tids[i], 0, 0)),
+            pl.BlockSpec((1, r, n), lambda i, tids: (tids[i], 0, 0)),
+        ],
+    )
+    kernel = functools.partial(_adapter_grad_kernel, scaling=float(scaling))
+    db, da = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct(b_stack.shape, jnp.float32),
+            jax.ShapeDtypeStruct(a_stack.shape, jnp.float32),
+        ],
+        interpret=INTERPRET,
+    )(block_task_ids.astype(jnp.int32), x, dy, b_stack, a_stack)
+
+    visited = jnp.zeros((t,), dtype=bool).at[block_task_ids].set(True)
+    db = jnp.where(visited[:, None, None], db, 0.0).astype(b_stack.dtype)
+    da = jnp.where(visited[:, None, None], da, 0.0).astype(a_stack.dtype)
+    return db, da
+
+
+# ---------------------------------------------------------------------------
+# Differentiable fused op (custom VJP). The backward pass reuses the forward
+# kernel with transposed operands for dX and the adapter-grad kernel for
+# dB/dA. dW is computed densely with jnp; when the base weight is frozen
+# (the LoRA setting) the XLA DCE pass removes it from the lowered module.
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7))
+def multi_lora_matmul(
+    x: jax.Array,
+    w: jax.Array,
+    b_stack: jax.Array,
+    a_stack: jax.Array,
+    block_task_ids: jax.Array,
+    scaling: float = 1.0,
+    block_rows: int = 128,
+    block_cols: int = 128,
+) -> jax.Array:
+    """Differentiable fused multi-LoRA matmul. See ``multi_lora_matmul_pallas``."""
+    return multi_lora_matmul_pallas(
+        x, w, b_stack, a_stack, block_task_ids,
+        scaling=scaling, block_rows=block_rows, block_cols=block_cols,
+    )
+
+
+def _fwd(x, w, b_stack, a_stack, block_task_ids, scaling, block_rows, block_cols):
+    y = multi_lora_matmul_pallas(
+        x, w, b_stack, a_stack, block_task_ids,
+        scaling=scaling, block_rows=block_rows, block_cols=block_cols,
+    )
+    return y, (x, w, b_stack, a_stack, block_task_ids)
+
+
+def _bwd(scaling, block_rows, block_cols, res, dy):
+    x, w, b_stack, a_stack, block_task_ids = res
+    k = x.shape[1]
+    # dX = dY W^T + s (dY A_t^T) B_t^T -- the same segmented structure with
+    # (W^T, A^T as the down-proj, B^T as the up-proj).
+    dcols = min(block_cols, k) if k % min(block_cols, k) == 0 else k
+    # Tile the K output dimension only if it divides evenly; else one tile.
+    dcols = block_cols if k % block_cols == 0 else k
+    dx = multi_lora_matmul_pallas(
+        dy,
+        jnp.swapaxes(w, 0, 1),
+        jnp.swapaxes(a_stack, 1, 2),
+        jnp.swapaxes(b_stack, 1, 2),
+        block_task_ids,
+        scaling=scaling,
+        block_rows=block_rows,
+        block_cols=dcols,
+    ).astype(x.dtype)
+    db, da = adapter_grads_pallas(
+        x, dy, b_stack, a_stack, block_task_ids,
+        scaling=scaling, block_rows=block_rows,
+    )
+    # Dense base-weight grad; DCE-eliminated when W is frozen.
+    dw = jnp.dot(x.T, dy).astype(w.dtype)
+    dtids = jnp.zeros(block_task_ids.shape, dtype=jax.dtypes.float0)
+    return dx, dw, db, da, dtids
+
+
+multi_lora_matmul.defvjp(_fwd, _bwd)

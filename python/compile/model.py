@@ -1,0 +1,375 @@
+"""L2: transformer LM with fused multi-task LoRA adapters (JAX, build-time).
+
+This is the compute graph the Rust coordinator executes on every replica:
+a pre-LN causal transformer whose projection layers (QKV, output, MLP
+up/down) each carry a *stack* of per-task LoRA adapters applied through the
+L1 Pallas kernel (`kernels.multi_lora`). A fused microbatch mixes sequences
+from several FT tasks; `seg_ids[b]` names the task of each sequence and the
+kernel routes every row through its own adapter while the frozen base
+weights run as one dense MXU matmul.
+
+Exported entry points (lowered to HLO text by `aot.py`):
+
+* ``train_step``  -- loss + flat LoRA gradient for one microbatch. The
+  optimizer (Adam) lives in Rust (L3): gradients are returned as a single
+  flat f32 vector so the coordinator can accumulate across microbatches
+  and replicas without knowing the pytree structure.
+* ``eval_loss``   -- forward-only loss (validation).
+
+Both take the *flat* base parameter vector and *flat* LoRA vector; the
+unravel closures are baked into the jitted function at lowering time, and
+``param_manifest`` tells Rust how to initialize / checkpoint the vectors.
+
+Python never runs at training time: this module exists only under
+``make artifacts``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.flatten_util import ravel_pytree
+
+from .kernels.multi_lora import multi_lora_matmul
+from .kernels.ref import multi_lora_ref
+
+PAD_ID = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Transformer + multi-LoRA hyperparameters."""
+
+    vocab: int = 2048
+    d_model: int = 256
+    n_layers: int = 4
+    n_heads: int = 8
+    d_ff: int = 1024
+    n_tasks: int = 4
+    lora_rank: int = 8
+    lora_alpha: float = 16.0
+    block_rows: int = 64  # Pallas row-tile; sequence lengths must be multiples
+    block_cols: int = 128
+    use_pallas: bool = True
+    rope_theta: float = 10000.0
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+    @property
+    def lora_scaling(self) -> float:
+        return self.lora_alpha / self.lora_rank
+
+    def validate(self) -> None:
+        if self.d_model % self.n_heads != 0:
+            raise ValueError("d_model must be divisible by n_heads")
+        if self.d_model % self.block_cols != 0 and self.block_cols % self.d_model != 0:
+            raise ValueError("block_cols must tile d_model")
+
+
+# Named presets used by aot.py / the Rust config system. "tiny" is the CI /
+# e2e-on-CPU scale; "base100m" is the ~100M-parameter configuration.
+PRESETS: Dict[str, ModelConfig] = {
+    "nano": ModelConfig(vocab=512, d_model=128, n_layers=2, n_heads=4, d_ff=256,
+                        n_tasks=3, lora_rank=4, block_rows=32, block_cols=128),
+    "tiny": ModelConfig(vocab=2048, d_model=256, n_layers=4, n_heads=8, d_ff=1024,
+                        n_tasks=6, lora_rank=8, block_rows=64, block_cols=128),
+    "small": ModelConfig(vocab=4096, d_model=384, n_layers=6, n_heads=8, d_ff=1536,
+                         n_tasks=6, lora_rank=8, block_rows=64, block_cols=128),
+    "base100m": ModelConfig(vocab=8192, d_model=768, n_layers=12, n_heads=12,
+                            d_ff=3072, n_tasks=12, lora_rank=8,
+                            block_rows=128, block_cols=128),
+}
+
+# Projection layers that carry LoRA adapters, with (in, out) dims.
+_LORA_PROJS = ("qkv", "out", "up", "down")
+
+
+def _proj_dims(cfg: ModelConfig, name: str) -> Tuple[int, int]:
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "qkv": (d, 3 * d),
+        "out": (d, d),
+        "up": (d, f),
+        "down": (f, d),
+    }[name]
+
+
+# ---------------------------------------------------------------------------
+# Parameter construction
+# ---------------------------------------------------------------------------
+
+
+def init_base_params(cfg: ModelConfig, key: jax.Array) -> Dict[str, Any]:
+    """Frozen base-model parameters (would be the pre-trained checkpoint)."""
+    keys = iter(jax.random.split(key, 4 + 8 * cfg.n_layers))
+    d = cfg.d_model
+
+    def dense(k, shape, fan_in):
+        return (jax.random.normal(k, shape, jnp.float32) / jnp.sqrt(fan_in))
+
+    params: Dict[str, Any] = {
+        "embed": jax.random.normal(next(keys), (cfg.vocab, d), jnp.float32) * 0.02,
+        "ln_f": {"g": jnp.ones((d,)), "b": jnp.zeros((d,))},
+        "layers": [],
+    }
+    for _ in range(cfg.n_layers):
+        layer = {
+            "ln1": {"g": jnp.ones((d,)), "b": jnp.zeros((d,))},
+            "ln2": {"g": jnp.ones((d,)), "b": jnp.zeros((d,))},
+        }
+        for name in _LORA_PROJS:
+            fin, fout = _proj_dims(cfg, name)
+            layer[f"w_{name}"] = dense(next(keys), (fin, fout), fin)
+        params["layers"].append(layer)
+    return params
+
+
+def init_lora_params(cfg: ModelConfig, key: jax.Array) -> Dict[str, Any]:
+    """Per-task LoRA stacks. B ~ N(0, 1/in), A = 0 => delta starts at zero."""
+    keys = iter(jax.random.split(key, 2 * len(_LORA_PROJS) * cfg.n_layers))
+    t, r = cfg.n_tasks, cfg.lora_rank
+    lora: Dict[str, Any] = {"layers": []}
+    for _ in range(cfg.n_layers):
+        layer = {}
+        for name in _LORA_PROJS:
+            fin, fout = _proj_dims(cfg, name)
+            layer[f"b_{name}"] = (
+                jax.random.normal(next(keys), (t, fin, r), jnp.float32)
+                / jnp.sqrt(fin)
+            )
+            layer[f"a_{name}"] = jnp.zeros((t, r, fout), jnp.float32)
+            _ = next(keys)
+        lora["layers"].append(layer)
+    return lora
+
+
+def flatten_params(params: Any) -> Tuple[jax.Array, Any]:
+    """Flat f32 vector + unravel closure (the Rust-side representation)."""
+    flat, unravel = ravel_pytree(params)
+    return flat.astype(jnp.float32), unravel
+
+
+def param_manifest(params: Any) -> List[Dict[str, Any]]:
+    """Name/shape/offset/init table for the Rust initializer & checkpoints.
+
+    Order matches ``ravel_pytree`` flattening order (tree_flatten order).
+    """
+    leaves_with_paths = jax.tree_util.tree_flatten_with_path(params)[0]
+    table = []
+    offset = 0
+    for path, leaf in leaves_with_paths:
+        name = jax.tree_util.keystr(path)
+        size = int(leaf.size)
+        entry = {
+            "name": name,
+            "shape": list(leaf.shape),
+            "offset": offset,
+            "size": size,
+        }
+        # Init rule, consumed by rust/src/train/init.rs.
+        if name.endswith("['g']") and leaf.ndim == 1:
+            entry["init"] = {"kind": "ones"}
+        elif name.endswith("['b']") and leaf.ndim == 1:
+            entry["init"] = {"kind": "zeros"}
+        elif name.endswith("['embed']"):
+            entry["init"] = {"kind": "normal", "std": 0.02}
+        elif "['a_" in name:
+            entry["init"] = {"kind": "zeros"}
+        elif leaf.ndim >= 2:
+            fan_in = int(leaf.shape[-2])
+            entry["init"] = {"kind": "normal", "std": float(1.0 / (fan_in ** 0.5))}
+        else:
+            entry["init"] = {"kind": "zeros"}
+        table.append(entry)
+        offset += size
+    return table
+
+
+# ---------------------------------------------------------------------------
+# Forward pass
+# ---------------------------------------------------------------------------
+
+
+def _layer_norm(x: jax.Array, g: jax.Array, b: jax.Array) -> jax.Array:
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + 1e-5) * g + b
+
+
+def _rope(x: jax.Array, theta: float) -> jax.Array:
+    """Rotary position embedding over [B, H, S, Dh]."""
+    b, h, s, dh = x.shape
+    half = dh // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = jnp.arange(s, dtype=jnp.float32)[:, None] * freqs[None, :]  # [S, half]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def _lora_proj(
+    cfg: ModelConfig,
+    x2d: jax.Array,
+    w: jax.Array,
+    lora_layer: Dict[str, jax.Array],
+    name: str,
+    block_tids: jax.Array,
+) -> jax.Array:
+    """Apply one LoRA-augmented projection over flattened rows [M, in]."""
+    b_stack = lora_layer[f"b_{name}"]
+    a_stack = lora_layer[f"a_{name}"]
+    w = jax.lax.stop_gradient(w)  # base model is frozen
+    if cfg.use_pallas:
+        n = w.shape[1]
+        bc = cfg.block_cols if n % cfg.block_cols == 0 else n
+        return multi_lora_matmul(
+            x2d, w, b_stack, a_stack, block_tids,
+            cfg.lora_scaling, cfg.block_rows, bc,
+        )
+    return multi_lora_ref(
+        x2d, w, b_stack, a_stack, block_tids,
+        scaling=cfg.lora_scaling, block_rows=cfg.block_rows,
+    )
+
+
+def forward(
+    cfg: ModelConfig,
+    base: Dict[str, Any],
+    lora: Dict[str, Any],
+    tokens: jax.Array,  # [B, S] int32
+    seg_ids: jax.Array,  # [B] int32, non-decreasing task ids
+) -> jax.Array:
+    """Next-token logits [B, S, V]."""
+    bsz, seqlen = tokens.shape
+    d = cfg.d_model
+    if seqlen % cfg.block_rows != 0:
+        raise ValueError(f"seqlen {seqlen} must be a multiple of block_rows {cfg.block_rows}")
+    # Rows of the flattened [B*S, d] activations are per-sequence contiguous,
+    # so per-block task ids repeat each sequence's id S/block_rows times.
+    block_tids = jnp.repeat(seg_ids.astype(jnp.int32), seqlen // cfg.block_rows)
+
+    h = jax.lax.stop_gradient(base["embed"])[tokens]  # [B, S, d]
+
+    causal = jnp.tril(jnp.ones((seqlen, seqlen), bool))
+    pad_ok = tokens != PAD_ID  # [B, S] keys that are real tokens
+    attn_mask = causal[None, None, :, :] & pad_ok[:, None, None, :]
+
+    for li in range(cfg.n_layers):
+        blayer, llayer = base["layers"][li], lora["layers"][li]
+        # --- attention ---
+        xn = _layer_norm(h, blayer["ln1"]["g"], blayer["ln1"]["b"])
+        qkv = _lora_proj(cfg, xn.reshape(bsz * seqlen, d), blayer["w_qkv"],
+                         llayer, "qkv", block_tids)
+        qkv = qkv.reshape(bsz, seqlen, 3, cfg.n_heads, cfg.head_dim)
+        q, k, v = (jnp.moveaxis(qkv[:, :, i], 1, 2) for i in range(3))  # [B,H,S,Dh]
+        q = _rope(q, cfg.rope_theta)
+        k = _rope(k, cfg.rope_theta)
+        scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(cfg.head_dim)
+        scores = jnp.where(attn_mask, scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1)
+        ctx = jnp.einsum("bhqk,bhkd->bhqd", probs, v)
+        ctx = jnp.moveaxis(ctx, 1, 2).reshape(bsz * seqlen, d)
+        h = h + _lora_proj(cfg, ctx, blayer["w_out"], llayer, "out",
+                           block_tids).reshape(bsz, seqlen, d)
+        # --- MLP ---
+        xn = _layer_norm(h, blayer["ln2"]["g"], blayer["ln2"]["b"])
+        up = _lora_proj(cfg, xn.reshape(bsz * seqlen, d), blayer["w_up"],
+                        llayer, "up", block_tids)
+        act = jax.nn.gelu(up)
+        down = _lora_proj(cfg, act, blayer["w_down"], llayer, "down", block_tids)
+        h = h + down.reshape(bsz, seqlen, d)
+
+    h = _layer_norm(h, base["ln_f"]["g"], base["ln_f"]["b"])
+    logits = jnp.einsum("bsd,vd->bsv", h, jax.lax.stop_gradient(base["embed"]))
+    return logits
+
+
+def loss_fn(
+    cfg: ModelConfig,
+    base: Dict[str, Any],
+    lora: Dict[str, Any],
+    tokens: jax.Array,
+    seg_ids: jax.Array,
+) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array, jax.Array]]:
+    """Mean next-token CE over non-pad targets + per-task sums.
+
+    Returns (mean_loss, (token_count, per_task_loss_sum[T], per_task_tokens[T])).
+    """
+    logits = forward(cfg, base, lora, tokens, seg_ids)
+    targets = tokens[:, 1:]
+    logits = logits[:, :-1]
+    mask = (targets != PAD_ID).astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0] * mask
+    per_seq_loss = nll.sum(axis=1)  # [B]
+    per_seq_toks = mask.sum(axis=1)
+    task_loss = jnp.zeros((cfg.n_tasks,), jnp.float32).at[seg_ids].add(per_seq_loss)
+    task_toks = jnp.zeros((cfg.n_tasks,), jnp.float32).at[seg_ids].add(per_seq_toks)
+    total_toks = per_seq_toks.sum()
+    mean_loss = per_seq_loss.sum() / jnp.maximum(total_toks, 1.0)
+    return mean_loss, (total_toks, task_loss, task_toks)
+
+
+# ---------------------------------------------------------------------------
+# Exported entry points (flat-vector interface for the Rust runtime)
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(cfg: ModelConfig, base_unravel, lora_unravel):
+    """(base_flat, lora_flat, tokens, seg_ids) ->
+    (loss, grad_flat, token_count, task_loss[T], task_tokens[T])."""
+
+    def train_step(base_flat, lora_flat, tokens, seg_ids):
+        base = base_unravel(base_flat)
+
+        def scalar_loss(lflat):
+            lora = lora_unravel(lflat)
+            return loss_fn(cfg, base, lora, tokens, seg_ids)
+
+        (loss, (toks, task_loss, task_toks)), grad_flat = jax.value_and_grad(
+            scalar_loss, has_aux=True
+        )(lora_flat)
+        return loss, grad_flat, toks, task_loss, task_toks
+
+    return train_step
+
+
+def make_eval_loss(cfg: ModelConfig, base_unravel, lora_unravel):
+    """(base_flat, lora_flat, tokens, seg_ids) ->
+    (loss, token_count, task_loss[T], task_tokens[T])."""
+
+    def eval_loss(base_flat, lora_flat, tokens, seg_ids):
+        base = base_unravel(base_flat)
+        lora = lora_unravel(lora_flat)
+        loss, (toks, task_loss, task_toks) = loss_fn(cfg, base, lora, tokens, seg_ids)
+        return loss, toks, task_loss, task_toks
+
+    return eval_loss
+
+
+def build(cfg: ModelConfig, seed: int = 0):
+    """Construct params + entry points. Returns a dict used by aot.py/tests."""
+    cfg.validate()
+    kb, kl = jax.random.split(jax.random.PRNGKey(seed))
+    base = init_base_params(cfg, kb)
+    lora = init_lora_params(cfg, kl)
+    base_flat, base_unravel = flatten_params(base)
+    lora_flat, lora_unravel = flatten_params(lora)
+    return {
+        "cfg": cfg,
+        "base": base,
+        "lora": lora,
+        "base_flat": base_flat,
+        "lora_flat": lora_flat,
+        "base_unravel": base_unravel,
+        "lora_unravel": lora_unravel,
+        "train_step": make_train_step(cfg, base_unravel, lora_unravel),
+        "eval_loss": make_eval_loss(cfg, base_unravel, lora_unravel),
+        "base_manifest": param_manifest(base),
+        "lora_manifest": param_manifest(lora),
+    }

@@ -1,0 +1,101 @@
+"""AOT export contract tests: HLO text artifacts + manifest consistency.
+
+Validates the interchange the Rust runtime depends on without paying the
+full lowering cost more than once (module-scoped export of the nano preset
+to a temp dir).
+"""
+
+import hashlib
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model as M
+
+
+@pytest.fixture(scope="module")
+def export_dir(tmp_path_factory):
+    d = tmp_path_factory.mktemp("artifacts_nano")
+    aot.export("nano", str(d), seed=0)
+    return str(d)
+
+
+@pytest.fixture(scope="module")
+def manifest(export_dir):
+    with open(os.path.join(export_dir, "manifest.json")) as f:
+        return json.load(f)
+
+
+class TestManifest:
+    def test_offsets_contiguous_and_sized(self, manifest):
+        for key, total_key in (("base_params", "base_param_count"),
+                               ("lora_params", "lora_param_count")):
+            off = 0
+            for e in manifest[key]:
+                assert e["offset"] == off, e["name"]
+                numel = int(np.prod(e["shape"])) if e["shape"] else 1
+                assert numel == e["size"], e["name"]
+                off += e["size"]
+            assert off == manifest[total_key]
+
+    def test_artifact_files_exist_with_hash(self, export_dir, manifest):
+        for a in manifest["artifacts"]:
+            p = os.path.join(export_dir, a["file"])
+            assert os.path.exists(p), a["file"]
+            text = open(p).read()
+            assert hashlib.sha256(text.encode()).hexdigest() == a["sha256"]
+
+    def test_model_meta_matches_preset(self, manifest):
+        cfg = M.PRESETS["nano"]
+        assert manifest["model"]["vocab"] == cfg.vocab
+        assert manifest["model"]["n_tasks"] == cfg.n_tasks
+        assert manifest["model"]["block_rows"] == cfg.block_rows
+
+    def test_shapes_cover_train_and_eval(self, manifest):
+        kinds = {(a["kind"], a["batch"], a["seq"]) for a in manifest["artifacts"]}
+        trains = [k for k in kinds if k[0] == "train"]
+        evals = [k for k in kinds if k[0] == "eval"]
+        assert len(trains) == len(aot.SHAPES["nano"])
+        assert len(evals) == 1
+
+
+class TestHloText:
+    def test_hlo_is_parseable_text(self, export_dir, manifest):
+        a = manifest["artifacts"][0]
+        text = open(os.path.join(export_dir, a["file"])).read()
+        assert text.startswith("HloModule"), "not HLO text"
+        # entry computation must mention the 4 parameters
+        assert "parameter(0)" in text
+        assert "parameter(3)" in text
+        assert "parameter(4)" not in text
+
+    def test_reexport_is_deterministic(self, export_dir, manifest, tmp_path):
+        d2 = tmp_path / "again"
+        aot.export("nano", str(d2), seed=0)
+        with open(d2 / "manifest.json") as f:
+            m2 = json.load(f)
+        for a1, a2 in zip(manifest["artifacts"], m2["artifacts"]):
+            assert a1["sha256"] == a2["sha256"], a1["file"]
+
+
+class TestNumericsParity:
+    def test_exported_fn_matches_direct_call(self):
+        """The function we lower equals the function we run in tests."""
+        cfg = M.PRESETS["nano"]
+        built = M.build(cfg, seed=0)
+        bsz, seqlen = aot.SHAPES["nano"][0]
+        rng = np.random.default_rng(0)
+        tokens = jnp.asarray(
+            rng.integers(1, cfg.vocab, size=(bsz, seqlen)), jnp.int32)
+        segs = jnp.asarray(np.sort(rng.integers(0, cfg.n_tasks, bsz)), jnp.int32)
+        loss, grad, toks, tl, tt = built["train_step"](
+            built["base_flat"], built["lora_flat"], tokens, segs)
+        assert np.isfinite(float(loss))
+        assert float(toks) > 0
+        assert grad.shape == built["lora_flat"].shape
+        assert np.isfinite(np.asarray(grad)).all()
+        # per-task sums consistent
+        np.testing.assert_allclose(float(tt.sum()), float(toks), rtol=1e-6)

@@ -1,0 +1,185 @@
+"""L2 correctness: transformer + multi-LoRA model semantics.
+
+Checks shape contracts, Pallas-vs-jnp path equivalence, gradient locality
+(only the tasks present in the batch receive adapter gradients; the frozen
+base gets none), and that a few SGD-on-Adam-ish steps actually reduce loss
+on a memorizable batch.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = M.PRESETS["nano"]
+
+
+@pytest.fixture(scope="module")
+def built():
+    return M.build(CFG, seed=0)
+
+
+def _batch(key, cfg, bsz=4, seqlen=64, tasks=None):
+    kt, ks = jax.random.split(key)
+    tokens = jax.random.randint(kt, (bsz, seqlen), 1, cfg.vocab, jnp.int32)
+    # pad tail of each sequence with PAD to exercise masking
+    lengths = jax.random.randint(ks, (bsz,), seqlen // 2, seqlen + 1)
+    mask = jnp.arange(seqlen)[None, :] < lengths[:, None]
+    tokens = jnp.where(mask, tokens, M.PAD_ID)
+    if tasks is None:
+        seg = np.sort(np.random.default_rng(0).integers(0, cfg.n_tasks, bsz))
+    else:
+        seg = np.sort(np.asarray(tasks))
+    return tokens, jnp.asarray(seg, jnp.int32)
+
+
+class TestForward:
+    def test_logits_shape(self, built):
+        tokens, seg = _batch(jax.random.PRNGKey(0), CFG)
+        logits = M.forward(CFG, built["base"], built["lora"], tokens, seg)
+        assert logits.shape == (4, 64, CFG.vocab)
+        assert bool(jnp.isfinite(logits).all())
+
+    def test_pallas_matches_jnp_path(self, built):
+        tokens, seg = _batch(jax.random.PRNGKey(1), CFG)
+        # Adapters must be nonzero for the check to be meaningful.
+        lora = jax.tree.map(
+            lambda x: x + 0.01 * jax.random.normal(jax.random.PRNGKey(2), x.shape),
+            built["lora"],
+        )
+        cfg_jnp = dataclasses.replace(CFG, use_pallas=False)
+        l1 = M.forward(CFG, built["base"], lora, tokens, seg)
+        l2 = M.forward(cfg_jnp, built["base"], lora, tokens, seg)
+        np.testing.assert_allclose(l1, l2, rtol=2e-4, atol=2e-4)
+
+    def test_zero_lora_task_independent(self, built):
+        """With A=0 adapters, logits must not depend on task assignment."""
+        tokens, _ = _batch(jax.random.PRNGKey(3), CFG)
+        seg_a = jnp.zeros((4,), jnp.int32)
+        seg_b = jnp.array([0, 1, 2, 2], jnp.int32)
+        la = M.forward(CFG, built["base"], built["lora"], tokens, seg_a)
+        lb = M.forward(CFG, built["base"], built["lora"], tokens, seg_b)
+        np.testing.assert_allclose(la, lb, rtol=1e-5, atol=1e-5)
+
+    def test_rejects_unaligned_seqlen(self, built):
+        tokens = jnp.ones((2, CFG.block_rows + 1), jnp.int32)
+        seg = jnp.zeros((2,), jnp.int32)
+        with pytest.raises(ValueError):
+            M.forward(CFG, built["base"], built["lora"], tokens, seg)
+
+    def test_causality(self, built):
+        """Future-token perturbation must not change past logits."""
+        tokens, seg = _batch(jax.random.PRNGKey(4), CFG, bsz=2)
+        logits = M.forward(CFG, built["base"], built["lora"], tokens, seg)
+        tokens2 = tokens.at[:, -1].set((tokens[:, -1] % (CFG.vocab - 1)) + 1)
+        logits2 = M.forward(CFG, built["base"], built["lora"], tokens2, seg)
+        np.testing.assert_allclose(logits[:, :-1], logits2[:, :-1],
+                                   rtol=1e-5, atol=1e-5)
+
+
+class TestLoss:
+    def test_loss_finite_positive(self, built):
+        tokens, seg = _batch(jax.random.PRNGKey(5), CFG)
+        loss, (toks, task_loss, task_toks) = M.loss_fn(
+            CFG, built["base"], built["lora"], tokens, seg)
+        assert bool(jnp.isfinite(loss)) and float(loss) > 0
+        assert float(toks) == float(task_toks.sum())
+        np.testing.assert_allclose(float(task_loss.sum()),
+                                   float(loss) * float(toks), rtol=1e-4)
+
+    def test_task_loss_placement(self, built):
+        tokens, seg = _batch(jax.random.PRNGKey(6), CFG, tasks=[1, 1, 2, 2])
+        _, (_, task_loss, task_toks) = M.loss_fn(
+            CFG, built["base"], built["lora"], tokens, seg)
+        for t in range(CFG.n_tasks):
+            if t not in (1, 2):
+                assert float(task_loss[t]) == 0.0
+                assert float(task_toks[t]) == 0.0
+
+    def test_all_pad_targets_no_nan(self, built):
+        tokens = jnp.full((2, 64), M.PAD_ID, jnp.int32).at[:, 0].set(5)
+        seg = jnp.zeros((2,), jnp.int32)
+        loss, _ = M.loss_fn(CFG, built["base"], built["lora"], tokens, seg)
+        assert bool(jnp.isfinite(loss))
+
+
+class TestTrainStep:
+    def test_grad_locality(self, built):
+        """Only the adapters of tasks present in the batch get gradients."""
+        tokens, seg = _batch(jax.random.PRNGKey(7), CFG, tasks=[0, 0, 2, 2])
+        loss, gflat, *_ = built["train_step"](
+            built["base_flat"], built["lora_flat"], tokens, seg)
+        g = built["lora_unravel"](gflat)
+        for layer in g["layers"]:
+            for name in ("b_qkv", "a_qkv", "b_up", "a_up"):
+                arr = layer[name]
+                assert float(jnp.abs(arr[1]).max()) == 0.0, "absent task got grads"
+        # present tasks must receive nonzero gradient somewhere
+        total = sum(float(jnp.abs(l["a_qkv"][0]).sum()) +
+                    float(jnp.abs(l["a_qkv"][2]).sum()) for l in g["layers"])
+        assert total > 0
+
+    def test_grad_flat_size(self, built):
+        tokens, seg = _batch(jax.random.PRNGKey(8), CFG)
+        _, gflat, *_ = built["train_step"](
+            built["base_flat"], built["lora_flat"], tokens, seg)
+        assert gflat.shape == built["lora_flat"].shape
+
+    def test_loss_decreases_with_adam(self, built):
+        """A few Adam steps on one fixed batch must reduce the loss."""
+        tokens, seg = _batch(jax.random.PRNGKey(9), CFG, bsz=2, tasks=[0, 1])
+        step = jax.jit(built["train_step"])
+        lflat = built["lora_flat"]
+        m = jnp.zeros_like(lflat)
+        v = jnp.zeros_like(lflat)
+        lr, b1, b2, eps = 1e-2, 0.9, 0.999, 1e-8
+        losses = []
+        for i in range(1, 9):
+            loss, g, *_ = step(built["base_flat"], lflat, tokens, seg)
+            losses.append(float(loss))
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            mhat = m / (1 - b1 ** i)
+            vhat = v / (1 - b2 ** i)
+            lflat = lflat - lr * mhat / (jnp.sqrt(vhat) + eps)
+        assert losses[-1] < losses[0] * 0.95, f"no learning: {losses}"
+
+
+class TestManifest:
+    def test_offsets_contiguous(self, built):
+        for table, flat in (
+            (built["base_manifest"], built["base_flat"]),
+            (built["lora_manifest"], built["lora_flat"]),
+        ):
+            off = 0
+            for e in table:
+                assert e["offset"] == off
+                assert e["size"] == int(np.prod(e["shape"])) if e["shape"] else 1
+                off += e["size"]
+            assert off == flat.size
+
+    def test_flatten_order_matches_manifest(self, built):
+        """Writing init values per the manifest reproduces ravel_pytree order."""
+        base = built["base"]
+        flat = built["base_flat"]
+        leaves = jax.tree_util.tree_leaves(base)
+        sizes = [int(l.size) for l in leaves]
+        assert sizes == [e["size"] for e in built["base_manifest"]]
+        # spot-check: first leaf contents occupy the first slot
+        np.testing.assert_allclose(
+            np.asarray(flat[: sizes[0]]),
+            np.asarray(leaves[0]).reshape(-1), rtol=1e-6)
+
+    def test_lora_init_kinds(self, built):
+        kinds = {e["name"]: e["init"]["kind"] for e in built["lora_manifest"]}
+        for name, kind in kinds.items():
+            if "['a_" in name:
+                assert kind == "zeros", name
+            else:
+                assert kind == "normal", name

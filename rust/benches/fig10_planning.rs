@@ -1,0 +1,118 @@
+//! Figure 10: the case for the two-stage decomposition (7B, 16×A100).
+//!
+//! Left: per-step cost of solving the *original* joint problem (Eq. 1 —
+//! re-plan deployment + dispatch for the realized batch) vs the two-stage
+//! path (dynamic bucketing + Eq. 3 dispatch on the fixed plan), compared
+//! with the average training-step time. Paper: Eq. 1 is slower than a
+//! step; the two-stage path is microseconds and fully overlappable.
+//!
+//! Right: solution quality over 100 steps — `T_decomp/T_origin` (within
+//! 15% in occasional spike steps) and `T_actual/T_decomp` (cost-model
+//! accuracy, within 10%).
+//!
+//! ```bash
+//! cargo bench --bench fig10_planning
+//! ```
+
+use lobra::coordinator::bucketing::{bucketize, BucketingOptions};
+use lobra::coordinator::dispatcher::{DispatchPolicy, Dispatcher};
+use lobra::coordinator::planner::{Planner, PlanningStats};
+use lobra::data::MultiTaskSampler;
+use lobra::experiments::Scenario;
+use lobra::util::bench::{fmt_secs, Table};
+
+fn main() {
+    let steps: usize = std::env::var("LOBRA_BENCH_STEPS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(100);
+    let sc = Scenario::paper_7b_16();
+    let cost = sc.cost();
+    let planner = Planner::new(&cost, &sc.cluster);
+    let plan = planner.plan(&sc.tasks, sc.planner_opts()).unwrap();
+    let dispatcher = Dispatcher::new(&cost, &plan);
+    println!("== Figure 10: planning cost & quality ({} steps) ==", steps);
+    println!("fixed plan: [{}]\n", plan.notation());
+
+    let mut sampler = MultiTaskSampler::new(&sc.tasks, 11);
+    let opts = BucketingOptions::default();
+
+    let mut t_origin_solve = Vec::new();
+    let mut t_twostage_solve = Vec::new();
+    let mut ratios_decomp = Vec::new();
+    let mut ratios_actual = Vec::new();
+    let mut step_times = Vec::new();
+
+    for step in 0..steps {
+        let batch = sampler.next_batch();
+        let lengths = batch.lengths();
+
+        // two-stage: dynamic bucketing + Eq.3 dispatch on the fixed plan
+        let t0 = std::time::Instant::now();
+        let buckets = bucketize(&lengths, &opts);
+        let dp = dispatcher.dispatch(&buckets, DispatchPolicy::Balanced).unwrap();
+        t_twostage_solve.push(t0.elapsed().as_secs_f64());
+        let t_decomp = dp.solver_makespan.max(1e-9);
+        let t_actual = dp.predicted_step_time;
+        step_times.push(t_actual);
+
+        // original problem: joint re-plan for this very batch (Eq. 1)
+        let t1 = std::time::Instant::now();
+        let mut stats = PlanningStats::default();
+        let origin = planner.plan_for_buckets(
+            &buckets,
+            sc.tasks.len() as u32,
+            &sc.planner_opts(),
+            &mut stats,
+            t1,
+        );
+        t_origin_solve.push(t1.elapsed().as_secs_f64());
+        if let Some(op) = origin {
+            let t_origin = op.expected_step_time.max(1e-9);
+            ratios_decomp.push(t_actual / t_origin);
+            ratios_actual.push(t_actual / t_decomp);
+        }
+        if step < 3 {
+            eprintln!("  step {step}: origin solve {} two-stage {}",
+                fmt_secs(*t_origin_solve.last().unwrap()),
+                fmt_secs(*t_twostage_solve.last().unwrap()));
+        }
+    }
+
+    let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len().max(1) as f64;
+    let max = |v: &[f64]| v.iter().cloned().fold(f64::MIN, f64::max);
+
+    println!("-- left: solve time vs step time --");
+    let mut t = Table::new(&["quantity", "mean", "max"]);
+    t.row(&["Eq.1 re-plan / step".into(), fmt_secs(mean(&t_origin_solve)), fmt_secs(max(&t_origin_solve))]);
+    t.row(&["two-stage (bucket+Eq.3)".into(), fmt_secs(mean(&t_twostage_solve)), fmt_secs(max(&t_twostage_solve))]);
+    t.row(&["training step (simulated)".into(), fmt_secs(mean(&step_times)), fmt_secs(max(&step_times))]);
+    t.print();
+    println!(
+        "\ntwo-stage overlappable: {} (solve << step)",
+        mean(&t_twostage_solve) < 0.1 * mean(&step_times)
+    );
+
+    println!("\n-- right: solution quality over {} steps --", ratios_decomp.len());
+    let mut q = Table::new(&["ratio", "mean", "max"]);
+    q.row(&[
+        "T_twostage / T_origin".into(),
+        format!("{:.3}", mean(&ratios_decomp)),
+        format!("{:.3}", max(&ratios_decomp)),
+    ]);
+    q.row(&[
+        "T_actual / T_decomp-estimate".into(),
+        format!("{:.3}", mean(&ratios_actual)),
+        format!("{:.3}", max(&ratios_actual)),
+    ]);
+    q.print();
+    println!(
+        "\npaper expectation: T_twostage/T_origin ≈ 1 (spikes < 1.15); estimate accurate within ~10%."
+    );
+    println!(
+        "note: the paper's Eq.1 (SCIP MINLP) is slower than a training step; our specialized\n\
+         solver re-plans in ms at 16 GPUs (it grows to minutes at 128-256 GPUs, Table 5).\n\
+         Per-step re-planning is still useless in practice: a plan change costs a ~2-3 min\n\
+         checkpoint/restart redeployment (§5.1), which the two-stage decomposition avoids."
+    );
+}

@@ -1,0 +1,74 @@
+//! Figure 11: scalability of LobRA vs Task-Fused (70B model).
+//!
+//! Left: GPU seconds of 4-task joint FT over {16, 32, 64} GPUs — at 16
+//! GPUs both can only deploy ⟨16,1⟩×1 and tie; with more GPUs LobRA's
+//! heterogeneous plans pull ahead while Task-Fused degrades slightly from
+//! sync overhead.
+//!
+//! Right: GPU seconds over {4, 8, 12, 16} tasks at 64 GPUs — near-linear
+//! growth for both, LobRA consistently lower.
+//!
+//! ```bash
+//! cargo bench --bench fig11_scalability
+//! ```
+
+use lobra::cluster::ClusterSpec;
+use lobra::config::ModelDesc;
+use lobra::experiments::{Arm, Scenario};
+use lobra::prelude::TaskSet;
+use lobra::util::bench::Table;
+
+fn main() {
+    let steps: usize = std::env::var("LOBRA_BENCH_STEPS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(50);
+
+    println!("== Figure 11 (left): GPU scalability, 70B, 4 tasks ({steps} steps) ==\n");
+    let mut t = Table::new(&[
+        "GPUs", "Task-Fused GPU·s", "LobRA GPU·s", "reduction", "fused plan", "lobra plan",
+    ]);
+    for gpus in [16u32, 32, 64] {
+        let sc = Scenario::new(
+            &format!("70B/{gpus}"),
+            ModelDesc::llama2_70b(),
+            ClusterSpec::a800_80g(gpus),
+            TaskSet::paper_scalability_subset(),
+        );
+        let fused = sc.arm_report(Arm::TaskFused, steps).unwrap();
+        let lobra = sc.arm_report(Arm::Lobra, steps).unwrap();
+        let fg = fused.report.gpu_seconds_per_step;
+        let lg = lobra.report.gpu_seconds_per_step;
+        t.row(&[
+            gpus.to_string(),
+            format!("{fg:.1}"),
+            format!("{lg:.1}"),
+            format!("-{:.1}%", (1.0 - lg / fg) * 100.0),
+            fused.plan.as_ref().unwrap().notation(),
+            lobra.plan.as_ref().unwrap().notation(),
+        ]);
+    }
+    t.print();
+
+    println!("\n== Figure 11 (right): task scalability, 70B, 64 GPUs ({steps} steps) ==\n");
+    let mut t2 = Table::new(&["tasks", "Task-Fused GPU·s", "LobRA GPU·s", "reduction"]);
+    for n_tasks in [4usize, 8, 12, 16] {
+        let sc = Scenario::new(
+            &format!("70B/64/{n_tasks}t"),
+            ModelDesc::llama2_70b(),
+            ClusterSpec::a800_80g(64),
+            TaskSet::paper_first_n(n_tasks),
+        );
+        let fused = sc.arm_report(Arm::TaskFused, steps).unwrap();
+        let lobra = sc.arm_report(Arm::Lobra, steps).unwrap();
+        let fg = fused.report.gpu_seconds_per_step;
+        let lg = lobra.report.gpu_seconds_per_step;
+        t2.row(&[
+            n_tasks.to_string(),
+            format!("{fg:.1}"),
+            format!("{lg:.1}"),
+            format!("-{:.1}%", (1.0 - lg / fg) * 100.0),
+        ]);
+    }
+    t2.print();
+}

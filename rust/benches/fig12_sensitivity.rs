@@ -1,0 +1,45 @@
+//! Figure 12: sensitivity to the number of buckets R (7B, 16×A100):
+//! per-step time (scaled by R=4) and padding ratio, R ∈ {4..32}.
+//!
+//! Paper shape: padding decreases monotonically with R; step time improves
+//! until R≈12 then flattens (more buckets → more per-bucket overhead).
+//!
+//! ```bash
+//! cargo bench --bench fig12_sensitivity
+//! ```
+
+use lobra::coordinator::bucketing::BucketingOptions;
+use lobra::coordinator::planner::Planner;
+use lobra::coordinator::scheduler::{Scheduler, SchedulerOptions};
+use lobra::experiments::Scenario;
+use lobra::util::bench::Table;
+
+fn main() {
+    let steps: usize = std::env::var("LOBRA_BENCH_STEPS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(50);
+    let sc = Scenario::paper_7b_16();
+    let cost = sc.cost();
+    let planner = Planner::new(&cost, &sc.cluster);
+    let plan = planner.plan(&sc.tasks, sc.planner_opts()).unwrap();
+    println!("== Figure 12: impact of R ({} steps each) ==", steps);
+    println!("plan: [{}]\n", plan.notation());
+
+    let mut baseline_time = None;
+    let mut t = Table::new(&["R", "step time (scaled to R=4)", "padding ratio", "solve (ms)"]);
+    for r in [4usize, 8, 12, 16, 20, 24, 32] {
+        let mut opts = SchedulerOptions::default();
+        opts.bucketing = BucketingOptions { max_buckets: r, ..Default::default() };
+        let rep = Scheduler::new(&cost, &plan, &sc.tasks, opts).run_steps(steps);
+        let st = rep.mean_step_time;
+        let base = *baseline_time.get_or_insert(st);
+        t.row(&[
+            r.to_string(),
+            format!("{:.3}", st / base),
+            format!("{:.1}%", rep.mean_padding_ratio * 100.0),
+            format!("{:.2}", rep.mean_solve_seconds * 1e3),
+        ]);
+    }
+    t.print();
+}

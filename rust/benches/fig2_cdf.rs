@@ -1,0 +1,68 @@
+//! Figure 2: cumulative distributions of sequence lengths for three FT
+//! datasets (databricks-dolly-15k, CommitPackFt, MeetingBank), annotated
+//! with the GPU count needed to process each length range (7B, A100-40G).
+//!
+//! ```bash
+//! cargo bench --bench fig2_cdf
+//! ```
+
+use lobra::cluster::ClusterSpec;
+use lobra::config::{ModelDesc, ParallelConfig};
+use lobra::costmodel::CostModel;
+use lobra::data::DatasetProfile;
+use lobra::util::bench::Table;
+use lobra::util::stats::ecdf;
+use lobra::util::Rng;
+
+fn main() {
+    let datasets = ["databricks-dolly-15k", "CommitPackFt", "MeetingBank"];
+    let points: Vec<f64> = [256, 512, 1024, 2048, 4096, 8192, 16384]
+        .iter()
+        .map(|&x| x as f64)
+        .collect();
+
+    println!("== Figure 2: sequence-length CDFs (100k samples each) ==\n");
+    let mut t = Table::new(&[
+        "length <=", "dolly-15k", "CommitPackFt", "MeetingBank", "GPUs needed (7B, A100-40G)",
+    ]);
+
+    let mut rng = Rng::new(2);
+    let cdfs: Vec<Vec<f64>> = datasets
+        .iter()
+        .map(|name| {
+            let d = DatasetProfile::by_name(name).unwrap().distribution();
+            let xs: Vec<f64> = d
+                .sample_n(&mut rng, 100_000)
+                .into_iter()
+                .map(|x| x as f64)
+                .collect();
+            ecdf(&xs, &points)
+        })
+        .collect();
+
+    // GPUs needed: smallest config n supporting the length (7B / A100-40G)
+    let cost = CostModel::calibrated(&ModelDesc::llama2_7b(), &ClusterSpec::a100_40g(16));
+    let gpus_needed = |len: u64| -> String {
+        for n in [1u32, 2, 4, 8, 16] {
+            // the best capacity at n GPUs is the full-TP config
+            let c = ParallelConfig::new(n.min(8), n.div_ceil(8).max(1));
+            if cost.max_seq_len(c) >= len {
+                return format!("{n}");
+            }
+        }
+        ">16".into()
+    };
+
+    for (pi, &p) in points.iter().enumerate() {
+        t.row(&[
+            format!("{p:.0}"),
+            format!("{:.1}%", cdfs[0][pi] * 100.0),
+            format!("{:.1}%", cdfs[1][pi] * 100.0),
+            format!("{:.1}%", cdfs[2][pi] * 100.0),
+            gpus_needed(p as u64),
+        ]);
+    }
+    t.print();
+
+    println!("\npaper shape check: >50% of fused data shorter than 2K; few beyond 8K.");
+}

@@ -1,0 +1,75 @@
+//! Figure 7 + Table 2: end-to-end joint-FT GPU seconds per step for
+//! Task-Fused / Task-Sequential / LobRA-Sequential / LobRA on the paper's
+//! three worlds (7B/16×A100, 32B/64×A800, 70B/64×A800).
+//!
+//! Expected shape (paper): LobRA < LobRA-Seq <= Task-Seq < Task-Fused,
+//! with 45.03%–60.67% reduction of LobRA vs Task-Fused, largest on 70B.
+//!
+//! ```bash
+//! cargo bench --bench fig7_end_to_end
+//! ```
+
+use lobra::experiments::{Arm, Scenario};
+use lobra::util::bench::Table;
+
+fn main() {
+    let steps: usize = std::env::var("LOBRA_BENCH_STEPS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(100);
+    println!("== Figure 7: end-to-end evaluation ({steps} steps/arm) ==\n");
+
+    let scenarios = [
+        Scenario::paper_7b_16(),
+        Scenario::paper_32b_64(),
+        Scenario::paper_70b_64(),
+    ];
+    let arms = [
+        Arm::TaskFused,
+        Arm::TaskSequential,
+        Arm::LobraSequential,
+        Arm::Lobra,
+    ];
+
+    let mut fig7 = Table::new(&["world", "arm", "GPU·s/step", "±std", "vs Task-Fused"]);
+    let mut table2 = Table::new(&["world", "Task-Fused plan", "LobRA plan"]);
+
+    for sc in &scenarios {
+        eprintln!("running {} ...", sc.label);
+        let mut fused_gs = None;
+        let mut fused_plan = String::new();
+        let mut lobra_plan = String::new();
+        for arm in arms {
+            let Some(res) = sc.arm_report(arm, steps) else {
+                eprintln!("  {}: infeasible", arm.label());
+                continue;
+            };
+            let gs = res.report.gpu_seconds_per_step;
+            let reduction = match (arm, fused_gs) {
+                (Arm::TaskFused, _) => {
+                    fused_gs = Some(gs);
+                    "—".to_string()
+                }
+                (_, Some(f)) => format!("-{:.2}%", (1.0 - gs / f) * 100.0),
+                _ => "?".to_string(),
+            };
+            match arm {
+                Arm::TaskFused => fused_plan = res.plan.as_ref().unwrap().notation(),
+                Arm::Lobra => lobra_plan = res.plan.as_ref().unwrap().notation(),
+                _ => {}
+            }
+            fig7.row(&[
+                sc.label.clone(),
+                arm.label().to_string(),
+                format!("{gs:.2}"),
+                format!("{:.2}", res.report.gpu_seconds_std),
+                reduction,
+            ]);
+        }
+        table2.row(&[sc.label.clone(), fused_plan, lobra_plan]);
+    }
+
+    fig7.print();
+    println!("\n== Table 2: parallel configurations used ==\n");
+    table2.print();
+}

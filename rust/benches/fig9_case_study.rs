@@ -1,0 +1,85 @@
+//! Figure 9 case study (7B, 16 A100-40G): per-replica-kind step time and
+//! the composition of dispatched data (tokens per bucket), under
+//! length-based dispatch / balanced dispatch / balanced + dynamic
+//! bucketing. Shows the skew-induced imbalance and how LobRA closes it.
+//!
+//! ```bash
+//! cargo bench --bench fig9_case_study
+//! ```
+
+use lobra::coordinator::bucketing::{bucketize, buckets_from_boundaries, BucketingOptions};
+use lobra::coordinator::dispatcher::{DispatchPolicy, Dispatcher};
+use lobra::coordinator::planner::Planner;
+use lobra::data::MultiTaskSampler;
+use lobra::experiments::Scenario;
+use lobra::util::bench::Table;
+
+fn main() {
+    let sc = Scenario::paper_7b_16();
+    let cost = sc.cost();
+    let planner = Planner::new(&cost, &sc.cluster);
+    let plan = planner.plan(&sc.tasks, sc.planner_opts()).unwrap();
+    println!("== Figure 9 case study: {} ==", sc.label);
+    println!("plan: [{}]\n", plan.notation());
+
+    // one representative fused batch
+    let mut sampler = MultiTaskSampler::new(&sc.tasks, 42);
+    let batch = sampler.next_batch();
+    let lengths = batch.lengths();
+
+    // fixed boundaries from a calibration sample (for the first two arms)
+    let mut calib_sampler = MultiTaskSampler::new(&sc.tasks, 7);
+    let calib = calib_sampler.calibration_lengths(20);
+    let opts = BucketingOptions::default();
+    let fixed = bucketize(&calib, &opts).boundaries;
+
+    let arms: [(&str, DispatchPolicy, bool); 3] = [
+        ("length-based dispatch", DispatchPolicy::LengthBased, false),
+        ("workload-balanced", DispatchPolicy::Balanced, false),
+        ("balanced + dynamic bucketing", DispatchPolicy::Balanced, true),
+    ];
+
+    let dispatcher = Dispatcher::new(&cost, &plan);
+    for (label, policy, dynb) in arms {
+        let buckets = if dynb {
+            bucketize(&lengths, &opts)
+        } else {
+            buckets_from_boundaries(&lengths, &fixed)
+        };
+        let dp = dispatcher.dispatch(&buckets, policy).unwrap();
+        println!("--- {label} ---");
+        let mut t = Table::new(&["replica kind", "time (s)", "tokens by bucket (padded)"]);
+        for (i, &(cfg, p)) in dp.groups.iter().enumerate() {
+            // per-group time = max over that group's replicas
+            let times: Vec<f64> = dp
+                .replica_times
+                .iter()
+                .filter(|&&(c, _)| c == cfg)
+                .map(|&(_, x)| x)
+                .collect();
+            let tmax = times.iter().cloned().fold(0.0f64, f64::max);
+            let composition: Vec<String> = dp.d[i]
+                .iter()
+                .zip(&buckets.boundaries)
+                .filter(|&(&d, _)| d > 0)
+                .map(|(&d, &b)| format!("{}x<={}", d, b))
+                .collect();
+            t.row(&[
+                format!("{cfg} x{p}"),
+                format!("{tmax:.2}"),
+                composition.join(" "),
+            ]);
+        }
+        t.print();
+        let max_t = dp.predicted_step_time;
+        let min_t = dp
+            .replica_times
+            .iter()
+            .map(|&(_, x)| x)
+            .fold(f64::INFINITY, f64::min);
+        println!(
+            "step time {max_t:.2}s; fastest replica busy {min_t:.2}s ({:.0}% idle at the barrier)\n",
+            (1.0 - min_t / max_t) * 100.0
+        );
+    }
+}

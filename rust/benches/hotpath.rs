@@ -1,0 +1,76 @@
+//! Hot-path microbenchmarks (the §Perf targets in EXPERIMENTS.md):
+//! everything that runs on the per-step critical path of the coordinator —
+//! dynamic bucketing DP, dispatch problem construction, the balanced
+//! min–max solve — plus the planner's inner loops (lower bound, plan
+//! enumeration). The per-step path must stay far below the training step
+//! so it fully overlaps (paper Figure 10, left).
+//!
+//! ```bash
+//! cargo bench --bench hotpath
+//! ```
+
+use lobra::coordinator::bucketing::{bucketize, BucketingOptions};
+use lobra::coordinator::dispatcher::{DispatchPolicy, Dispatcher};
+use lobra::coordinator::planner::Planner;
+use lobra::data::MultiTaskSampler;
+use lobra::experiments::Scenario;
+use lobra::solver::{self, partition};
+use lobra::util::bench::{fmt_secs, time_fn, Table};
+
+fn main() {
+    let sc = Scenario::paper_7b_16();
+    let cost = sc.cost();
+    let planner = Planner::new(&cost, &sc.cluster);
+    let plan = planner.plan(&sc.tasks, sc.planner_opts()).unwrap();
+    let dispatcher = Dispatcher::new(&cost, &plan);
+
+    let mut sampler = MultiTaskSampler::new(&sc.tasks, 3);
+    let batch = sampler.next_batch();
+    let lengths = batch.lengths();
+    let opts = BucketingOptions::default();
+    let buckets = bucketize(&lengths, &opts);
+    let problem = dispatcher.problem(&buckets);
+
+    let mut t = Table::new(&["hot path", "median", "mean", "min"]);
+    let mut bench = |label: &str, f: &mut dyn FnMut()| {
+        let r = time_fn(3, 30, f);
+        t.row(&[
+            label.to_string(),
+            fmt_secs(r.median),
+            fmt_secs(r.mean),
+            fmt_secs(r.min),
+        ]);
+    };
+
+    bench("bucketize DP (B=832, R=16)", &mut || {
+        std::hint::black_box(bucketize(&lengths, &opts));
+    });
+    bench("dispatch problem build", &mut || {
+        std::hint::black_box(dispatcher.problem(&buckets));
+    });
+    bench("solve_balanced (Eq.3)", &mut || {
+        std::hint::black_box(solver::solve_balanced(&problem));
+    });
+    bench("solve_length_based", &mut || {
+        std::hint::black_box(solver::solve_length_based(&problem));
+    });
+    bench("full per-step path (bucket+build+solve+eval)", &mut || {
+        let b = bucketize(&lengths, &opts);
+        std::hint::black_box(dispatcher.dispatch(&b, DispatchPolicy::Balanced));
+    });
+
+    // planner-side inner loops (one-shot cost, but Table 5 scales with them)
+    let configs = planner.propose_configs(&buckets.boundaries, true);
+    let plans = partition::enumerate_plans(&configs, 16, 16, None, 1_000_000);
+    bench("plan enumeration (N=16)", &mut || {
+        std::hint::black_box(partition::enumerate_plans(&configs, 16, 16, None, 1_000_000));
+    });
+    let one = plans[plans.len() / 2].clone();
+    bench("Theorem-1 lower bound (one plan)", &mut || {
+        std::hint::black_box(planner.lower_bound(&configs, &one, &buckets));
+    });
+
+    println!("== hot-path microbenchmarks ==\n");
+    t.print();
+    println!("\nfull per-step path must be << simulated step time ({:.1}s)", plan.expected_step_time);
+}

@@ -1,0 +1,81 @@
+//! Appendix C Table 11: executor parity on homogeneous configurations.
+//!
+//! The paper shows LobRA's executor matches NeMo when both run the same
+//! homogeneous parallel configuration with uniform dispatch. Here the
+//! "NeMo-like reference" is the idealized executor — pure compute + comm
+//! time from the cost model with no coordinator on top — and the LobRA
+//! number is the full coordinator path (bucketing, dispatch solve, sync,
+//! per-step accounting) on the same fixed-length workload. Parity means
+//! the coordinator adds only noise-level overhead.
+//!
+//! ```bash
+//! cargo bench --bench table11_homogeneous
+//! ```
+
+use lobra::cluster::ClusterSpec;
+use lobra::config::{ModelDesc, ParallelConfig};
+use lobra::coordinator::bucketing::Buckets;
+use lobra::coordinator::dispatcher::{DispatchPolicy, Dispatcher};
+use lobra::coordinator::planner::DeploymentPlan;
+use lobra::costmodel::{BucketLoad, CostModel};
+use lobra::util::bench::Table;
+
+fn main() {
+    let cluster = ClusterSpec::a100_40g(16);
+    let cost = CostModel::calibrated(&ModelDesc::llama2_7b(), &cluster);
+    // (config, replicas, max_seq_len) rows of Table 11 (global batch 64).
+    let rows: Vec<(ParallelConfig, u32, u64)> = vec![
+        (ParallelConfig::new(1, 1), 16, 2048),
+        (ParallelConfig::new(1, 2), 8, 2048),
+        (ParallelConfig::new(1, 4), 4, 2048),
+        (ParallelConfig::new(1, 4), 4, 4096),
+        (ParallelConfig::new(1, 8), 2, 2048),
+        (ParallelConfig::new(1, 8), 2, 4096),
+        (ParallelConfig::new(2, 1), 8, 2048),
+        (ParallelConfig::new(2, 1), 8, 4096),
+        (ParallelConfig::new(2, 2), 4, 4096),
+        (ParallelConfig::new(2, 4), 2, 8192),
+        (ParallelConfig::new(4, 1), 4, 8192),
+        (ParallelConfig::new(4, 2), 2, 8192),
+        (ParallelConfig::new(8, 1), 2, 8192),
+        (ParallelConfig::new(8, 1), 2, 16384),
+    ];
+    let global_batch = 64u64;
+
+    println!("== Table 11: homogeneous-configuration executor parity (7B, 16 GPUs, batch 64) ==\n");
+    let mut t = Table::new(&[
+        "config", "replicas", "seq len", "LobRA path (s)", "reference (s)", "overhead",
+    ]);
+    for (cfg, replicas, seqlen) in rows {
+        if cost.max_seq_len(cfg) < seqlen {
+            continue; // OOM row (the paper only lists feasible cells)
+        }
+        // reference: ideal executor — replicas share the batch evenly,
+        // time = exact replica time without any coordinator involvement.
+        let per_replica = global_batch.div_ceil(replicas as u64);
+        let reference = cost.replica_time(
+            cfg,
+            &[BucketLoad { count: per_replica, padded_len: seqlen }],
+        );
+        // LobRA path: full dispatcher machinery on the same uniform batch.
+        let plan = DeploymentPlan::homogeneous(cfg, replicas, 6);
+        let dispatcher = Dispatcher::new(&cost, &plan);
+        let buckets = Buckets {
+            boundaries: vec![seqlen as u32],
+            counts: vec![global_batch],
+            padding_tokens: 0,
+        };
+        let dp = dispatcher.dispatch(&buckets, DispatchPolicy::Balanced).unwrap();
+        let lobra = dp.predicted_step_time;
+        t.row(&[
+            cfg.to_string(),
+            replicas.to_string(),
+            seqlen.to_string(),
+            format!("{lobra:.3}"),
+            format!("{reference:.3}"),
+            format!("{:+.1}%", (lobra / reference - 1.0) * 100.0),
+        ]);
+    }
+    t.print();
+    println!("\nparity check: overhead should stay within a few percent (sync + dispatch only).");
+}

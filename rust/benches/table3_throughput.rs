@@ -1,0 +1,81 @@
+//! Appendix A Table 3: throughput (tokens/GPU/s) of each candidate parallel
+//! configuration across sequence lengths and GPU counts (7B, A100-40G) —
+//! the empirical basis of Observation 1 (the partial order behind the
+//! configuration-proposal pruning).
+//!
+//! "✗" marks OOM (the configuration cannot hold the sequence), "-" marks
+//! configurations that don't exist at that GPU count.
+//!
+//! ```bash
+//! cargo bench --bench table3_throughput
+//! ```
+
+use lobra::cluster::ClusterSpec;
+use lobra::config::{ModelDesc, ParallelConfig};
+use lobra::costmodel::CostModel;
+use lobra::util::bench::Table;
+
+fn main() {
+    let cost = CostModel::calibrated(&ModelDesc::llama2_7b(), &ClusterSpec::a100_40g(16));
+    let configs = [
+        (1, 1), (2, 1), (1, 2), (4, 1), (2, 2), (1, 4),
+        (8, 1), (4, 2), (2, 4), (1, 8),
+    ];
+    let seq_lens = [2048u64, 4096, 8192, 16384];
+
+    println!("== Table 3: tokens/GPU/s per configuration (7B, A100-40G) ==\n");
+    let mut t = Table::new(&["config", "n", "max_len", "2K", "4K", "8K", "16K"]);
+    for (tp, pp) in configs {
+        let c = ParallelConfig::new(tp, pp);
+        let cap = cost.max_chunk_tokens(c);
+        let mut row = vec![
+            c.to_string(),
+            c.n().to_string(),
+            cost.max_seq_len(c).to_string(),
+        ];
+        for &s in &seq_lens {
+            if cap < s {
+                row.push("X".into());
+            } else {
+                let b = (cap / s).max(1);
+                row.push(format!("{:.0}", cost.throughput(c, b, s)));
+            }
+        }
+        t.row(&row);
+    }
+    t.print();
+
+    // Observation 1 validation: winners at long s stay winners at shorter s
+    // (same token budget).
+    println!("\n== Observation 1 check (same-n pairs) ==");
+    let pairs = [
+        ((1, 8), (2, 4)), ((2, 4), (4, 2)), ((4, 2), (8, 1)),
+        ((1, 2), (2, 1)), ((1, 4), (4, 1)),
+    ];
+    let mut ok = true;
+    for ((a_tp, a_pp), (b_tp, b_pp)) in pairs {
+        let a = ParallelConfig::new(a_tp, a_pp);
+        let b = ParallelConfig::new(b_tp, b_pp);
+        let cap = cost.max_chunk_tokens(a).min(cost.max_chunk_tokens(b));
+        let s0 = cap.min(8192);
+        let thr_a0 = cost.throughput(a, 1, s0);
+        let thr_b0 = cost.throughput(b, 1, s0);
+        let winner_long = thr_a0 > thr_b0;
+        let mut consistent = true;
+        let mut s = s0 / 2;
+        while s >= 512 {
+            let bsz = s0 / s;
+            let wins = cost.throughput(a, bsz, s) > cost.throughput(b, bsz, s);
+            if wins != winner_long {
+                consistent = false;
+            }
+            s /= 2;
+        }
+        println!(
+            "  {a} vs {b}: winner@{s0}={} consistent_at_shorter={consistent}",
+            if winner_long { a.to_string() } else { b.to_string() }
+        );
+        ok &= consistent;
+    }
+    println!("Observation 1 holds: {ok}");
+}

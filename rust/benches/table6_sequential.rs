@@ -1,0 +1,47 @@
+//! Appendix B.2 Table 6: per-task GPU seconds of Task-Sequential vs
+//! LobRA-Sequential (70B, 64 GPUs). LobRA's techniques help most tasks
+//! even in single-task FT, but small per-task batches limit (and can
+//! invert) the gains — the paper sees two tasks regress.
+//!
+//! ```bash
+//! cargo bench --bench table6_sequential
+//! ```
+
+use lobra::experiments::{Arm, Scenario};
+use lobra::util::bench::Table;
+
+fn main() {
+    let steps: usize = std::env::var("LOBRA_BENCH_STEPS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(30);
+    let sc = Scenario::paper_70b_64();
+    println!("== Table 6: per-task sequential comparison, {} ({steps} steps) ==\n", sc.label);
+
+    let seq = sc.arm_report(Arm::TaskSequential, steps).unwrap();
+    let lobra_seq = sc.arm_report(Arm::LobraSequential, steps).unwrap();
+
+    let mut t = Table::new(&["task", "Task-Sequential (T1)", "LobRA-Sequential (T2)", "(T1-T2)/T1"]);
+    let mut improved = 0;
+    let mut total = 0;
+    for ((name, t1), (_, t2)) in seq.per_task.iter().zip(&lobra_seq.per_task) {
+        let red = (t1 - t2) / t1;
+        if red > 0.0 {
+            improved += 1;
+        }
+        total += 1;
+        t.row(&[
+            name.clone(),
+            format!("{t1:.1}"),
+            format!("{t2:.1}"),
+            format!("{:.2}%", red * 100.0),
+        ]);
+    }
+    t.print();
+    println!(
+        "\n{improved}/{total} tasks improved; totals: {:.1} vs {:.1} GPU·s/step ({:.1}% reduction)",
+        seq.report.gpu_seconds_per_step,
+        lobra_seq.report.gpu_seconds_per_step,
+        (1.0 - lobra_seq.report.gpu_seconds_per_step / seq.report.gpu_seconds_per_step) * 100.0
+    );
+}

@@ -1,0 +1,134 @@
+//! Cluster substrate: topology description + communication timing model +
+//! discrete accounting of GPU seconds.
+//!
+//! The paper's two testbeds (2×8 A100-40G NVLink/IB, 8×8 A800-80G) are not
+//! available here; every planning and dispatching decision in LobRA is made
+//! against the *profiled cost model* (paper Appendix D), so the substrate we
+//! must reproduce faithfully is that model's inputs: GPU memory capacity,
+//! dense-matmul rate, and intra-/inter-server bandwidth. See
+//! DESIGN.md#hardware-adaptation.
+
+mod comm;
+mod sim;
+
+pub use comm::CommModel;
+pub use sim::{GpuLedger, ReplicaSim};
+
+
+
+/// Static description of a GPU cluster.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterSpec {
+    pub name: String,
+    pub n_gpus: u32,
+    pub gpus_per_server: u32,
+    /// Per-GPU memory in GiB.
+    pub gpu_mem_gib: f64,
+    /// Dense bf16 rate per GPU, in TFLOP/s.
+    pub tflops: f64,
+    /// Achievable fraction of peak for transformer training.
+    pub mfu: f64,
+    /// Intra-server (NVLink) bandwidth, GB/s.
+    pub intra_bw_gbs: f64,
+    /// Inter-server (IB) bandwidth, GB/s.
+    pub inter_bw_gbs: f64,
+}
+
+impl ClusterSpec {
+    /// Paper testbed 1: servers of 8×A100-40G, 600 GB/s NVLink, 100 GB/s IB.
+    pub fn a100_40g(n_gpus: u32) -> Self {
+        Self {
+            name: format!("{n_gpus}xA100-40G"),
+            n_gpus,
+            gpus_per_server: 8,
+            gpu_mem_gib: 40.0,
+            tflops: 312.0,
+            mfu: 0.42,
+            intra_bw_gbs: 600.0,
+            inter_bw_gbs: 100.0,
+        }
+    }
+
+    /// Paper testbed 2: servers of 8×A800-80G, 400 GB/s NVLink, 200 GB/s IB.
+    pub fn a800_80g(n_gpus: u32) -> Self {
+        Self {
+            name: format!("{n_gpus}xA800-80G"),
+            n_gpus,
+            gpus_per_server: 8,
+            gpu_mem_gib: 80.0,
+            tflops: 312.0,
+            mfu: 0.42,
+            intra_bw_gbs: 400.0,
+            inter_bw_gbs: 200.0,
+        }
+    }
+
+    /// The local CPU "cluster" used by the real PJRT e2e run: bandwidth and
+    /// rate numbers are only used for simulated-clock accounting.
+    pub fn local_cpu(n_virtual: u32) -> Self {
+        Self {
+            name: format!("{n_virtual}xCPU-virtual"),
+            n_gpus: n_virtual,
+            gpus_per_server: n_virtual.max(1),
+            gpu_mem_gib: 16.0,
+            tflops: 0.1,
+            mfu: 0.5,
+            intra_bw_gbs: 20.0,
+            inter_bw_gbs: 20.0,
+        }
+    }
+
+    pub fn n_servers(&self) -> u32 {
+        self.n_gpus.div_ceil(self.gpus_per_server)
+    }
+
+    /// Effective dense rate per GPU (FLOP/s).
+    pub fn effective_flops(&self) -> f64 {
+        self.tflops * 1e12 * self.mfu
+    }
+
+    /// Does a replica of `n` GPUs with TP degree `tp` span servers with its
+    /// tensor-parallel group?
+    pub fn tp_spans_servers(&self, tp: u32) -> bool {
+        tp > self.gpus_per_server
+    }
+
+    /// Bandwidth seen by a TP group of the given degree.
+    ///
+    /// A TP group spanning servers pays an additional effectiveness penalty
+    /// beyond the raw link-rate drop: the latency-bound, unoverlapped
+    /// per-layer collectives of tensor parallelism achieve a small fraction
+    /// of the inter-server fabric (the paper: 70B Task-Fused "must utilize
+    /// a TP degree of 16 ... extremely inefficient due to the slow
+    /// communication across servers").
+    pub fn tp_bandwidth(&self, tp: u32) -> f64 {
+        const CROSS_SERVER_TP_PENALTY: f64 = 2.0;
+        if self.tp_spans_servers(tp) {
+            self.inter_bw_gbs / CROSS_SERVER_TP_PENALTY
+        } else {
+            self.intra_bw_gbs
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets() {
+        let c = ClusterSpec::a100_40g(16);
+        assert_eq!(c.n_servers(), 2);
+        assert_eq!(c.gpu_mem_gib, 40.0);
+        let c2 = ClusterSpec::a800_80g(64);
+        assert_eq!(c2.n_servers(), 8);
+    }
+
+    #[test]
+    fn tp_span_detection() {
+        let c = ClusterSpec::a100_40g(64);
+        assert!(!c.tp_spans_servers(8));
+        assert!(c.tp_spans_servers(16));
+        assert!(c.tp_bandwidth(16) < c.tp_bandwidth(8));
+    }
+}

@@ -1,0 +1,139 @@
+//! GPU-time accounting for simulated joint-FT execution.
+//!
+//! The paper's headline metric is *GPU seconds per training step*: with a
+//! synchronous parameter sync every step, all `N` deployed GPUs are occupied
+//! until the slowest replica finishes, so a step costs `N × max_i t_i`
+//! (Figure 4 counts exactly this way: 16 GPUs × 18.20 s = 291.2 GPU·s).
+//! `GpuLedger` tracks busy vs. idle split per replica so the Figure 9 case
+//! study can show where the idle time goes.
+
+use crate::config::ParallelConfig;
+
+/// One deployed FT replica's identity in the ledger.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ReplicaSim {
+    pub config: ParallelConfig,
+    /// Index among replicas sharing this config.
+    pub index: u32,
+}
+
+/// Accumulates per-replica busy time and derives GPU-seconds / utilization.
+#[derive(Debug, Clone, Default)]
+pub struct GpuLedger {
+    /// (config, gpus, busy_seconds) per replica, rebuilt each step.
+    entries: Vec<(ParallelConfig, u32, f64)>,
+    /// Accumulated over steps.
+    pub total_gpu_seconds: f64,
+    pub total_busy_gpu_seconds: f64,
+    pub steps: u64,
+}
+
+impl GpuLedger {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one step: per-replica busy times; the step lasts until the
+    /// slowest replica finishes (synchronous LoRA sync barrier).
+    pub fn record_step(&mut self, replica_busy: &[(ParallelConfig, f64)]) -> StepAccounting {
+        let step_time = replica_busy
+            .iter()
+            .map(|&(_, t)| t)
+            .fold(0.0_f64, f64::max);
+        self.entries.clear();
+        let mut gpu_seconds = 0.0;
+        let mut busy_gpu_seconds = 0.0;
+        for &(cfg, busy) in replica_busy {
+            let n = cfg.n();
+            gpu_seconds += n as f64 * step_time;
+            busy_gpu_seconds += n as f64 * busy;
+            self.entries.push((cfg, n, busy));
+        }
+        self.total_gpu_seconds += gpu_seconds;
+        self.total_busy_gpu_seconds += busy_gpu_seconds;
+        self.steps += 1;
+        StepAccounting {
+            step_time,
+            gpu_seconds,
+            busy_gpu_seconds,
+            utilization: if gpu_seconds > 0.0 {
+                busy_gpu_seconds / gpu_seconds
+            } else {
+                1.0
+            },
+        }
+    }
+
+    /// Mean utilization across recorded steps.
+    pub fn utilization(&self) -> f64 {
+        if self.total_gpu_seconds > 0.0 {
+            self.total_busy_gpu_seconds / self.total_gpu_seconds
+        } else {
+            1.0
+        }
+    }
+
+    /// Mean GPU-seconds per step.
+    pub fn gpu_seconds_per_step(&self) -> f64 {
+        if self.steps > 0 {
+            self.total_gpu_seconds / self.steps as f64
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Per-step accounting summary.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StepAccounting {
+    /// Wall-clock of the step (slowest replica).
+    pub step_time: f64,
+    /// `Σ_replicas n_i × step_time`.
+    pub gpu_seconds: f64,
+    /// `Σ_replicas n_i × busy_i`.
+    pub busy_gpu_seconds: f64,
+    /// busy / total.
+    pub utilization: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(tp: u32, pp: u32) -> ParallelConfig {
+        ParallelConfig::new(tp, pp)
+    }
+
+    #[test]
+    fn figure4_style_accounting() {
+        // Fig 4(c)-like: an 8-GPU replica idles while 1-GPU replicas work.
+        let mut ledger = GpuLedger::new();
+        let acc = ledger.record_step(&[
+            (cfg(1, 1), 18.20),
+            (cfg(1, 1), 18.20),
+            (cfg(8, 1), 10.47),
+        ]);
+        assert!((acc.step_time - 18.20).abs() < 1e-9);
+        assert!((acc.gpu_seconds - 10.0 * 18.20).abs() < 1e-9);
+        // 8 GPUs idle (18.20-10.47)/18.20 ≈ 42% of the time
+        let idle_frac: f64 = 1.0 - 10.47 / 18.20;
+        assert!((idle_frac - 0.42).abs() < 0.01);
+        assert!(acc.utilization < 1.0);
+    }
+
+    #[test]
+    fn perfectly_balanced_is_fully_utilized() {
+        let mut ledger = GpuLedger::new();
+        let acc = ledger.record_step(&[(cfg(2, 1), 5.0), (cfg(4, 1), 5.0)]);
+        assert!((acc.utilization - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn accumulates_over_steps() {
+        let mut ledger = GpuLedger::new();
+        ledger.record_step(&[(cfg(1, 1), 1.0)]);
+        ledger.record_step(&[(cfg(1, 1), 3.0)]);
+        assert_eq!(ledger.steps, 2);
+        assert!((ledger.gpu_seconds_per_step() - 2.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,15 @@
+//! Configuration system: model descriptions, parallel configurations, and
+//! FT task specifications.
+//!
+//! `ModelDesc` carries the architectural shape the cost model needs (layers,
+//! hidden size, parameter count); presets cover the paper's three evaluation
+//! models (Llama2-7B, Qwen2.5-32B, Llama2-70B) plus the CPU-scale presets the
+//! real PJRT runtime trains end-to-end.
+
+mod model;
+mod parallel;
+mod tasks;
+
+pub use model::ModelDesc;
+pub use parallel::ParallelConfig;
+pub use tasks::{TaskSet, TaskSpec};

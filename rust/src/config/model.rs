@@ -1,0 +1,153 @@
+//! Model architecture descriptions for the cost model and planner.
+
+
+
+/// Architectural shape of a transformer base model.
+///
+/// Only the quantities the cost/memory model needs are kept; the real
+/// weights live in the HLO artifacts (for runtime-trained presets) or are
+/// never materialized (for the 7B/32B/70B planning studies, exactly like the
+/// paper plans from profiles rather than instantiating models on the
+/// planner's machine).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelDesc {
+    pub name: String,
+    pub n_layers: u32,
+    pub d_model: u64,
+    pub n_heads: u32,
+    pub d_ff: u64,
+    pub vocab: u64,
+    /// Total parameter count (computed if 0 at construction).
+    pub params: u64,
+    /// LoRA rank used for the adapters.
+    pub lora_rank: u32,
+    /// Bytes per parameter for weights (2 = bf16).
+    pub weight_bytes: u64,
+}
+
+impl ModelDesc {
+    pub fn new(
+        name: &str,
+        n_layers: u32,
+        d_model: u64,
+        n_heads: u32,
+        d_ff: u64,
+        vocab: u64,
+    ) -> Self {
+        let mut m = Self {
+            name: name.to_string(),
+            n_layers,
+            d_model,
+            n_heads,
+            d_ff,
+            vocab,
+            params: 0,
+            lora_rank: 8,
+            weight_bytes: 2,
+        };
+        m.params = m.computed_params();
+        m
+    }
+
+    /// Parameter count from shape: embeddings + per-layer attention & MLP.
+    pub fn computed_params(&self) -> u64 {
+        let d = self.d_model;
+        let per_layer = 4 * d * d           // q,k,v,o projections
+            + 3 * d * self.d_ff             // gated MLP (gate/up/down)
+            + 4 * d; // norms
+        self.vocab * d + self.n_layers as u64 * per_layer + d
+    }
+
+    /// Per-layer parameters (used by the per-layer profiling model).
+    pub fn params_per_layer(&self) -> u64 {
+        (self.params - self.vocab * self.d_model) / self.n_layers as u64
+    }
+
+    /// LoRA parameter count per task (B:[in,r] + A:[r,out] on QKVO + MLP).
+    pub fn lora_params_per_task(&self) -> u64 {
+        let r = self.lora_rank as u64;
+        let d = self.d_model;
+        let per_layer = (d + 3 * d) * r      // qkv
+            + (d + d) * r                    // out
+            + (d + self.d_ff) * r            // up
+            + (self.d_ff + d) * r; // down
+        self.n_layers as u64 * per_layer
+    }
+
+    // --- paper evaluation models -------------------------------------------------
+
+    pub fn llama2_7b() -> Self {
+        Self::new("llama2-7b", 32, 4096, 32, 11008, 32000)
+    }
+
+    pub fn qwen25_32b() -> Self {
+        Self::new("qwen2.5-32b", 64, 5120, 40, 27648, 152064)
+    }
+
+    pub fn llama2_70b() -> Self {
+        Self::new("llama2-70b", 80, 8192, 64, 28672, 32000)
+    }
+
+    // --- CPU-scale presets matching python/compile/model.py PRESETS ---------------
+
+    pub fn tiny() -> Self {
+        Self::new("tiny", 4, 256, 8, 1024, 2048)
+    }
+
+    pub fn nano() -> Self {
+        Self::new("nano", 2, 128, 4, 256, 512)
+    }
+
+    pub fn by_name(name: &str) -> Option<Self> {
+        match name {
+            "llama2-7b" | "7b" => Some(Self::llama2_7b()),
+            "qwen2.5-32b" | "32b" => Some(Self::qwen25_32b()),
+            "llama2-70b" | "70b" => Some(Self::llama2_70b()),
+            "tiny" => Some(Self::tiny()),
+            "nano" => Some(Self::nano()),
+            _ => None,
+        }
+    }
+
+    /// Weight bytes per GPU under a (tp, pp) sharding.
+    pub fn weight_bytes_per_gpu(&self, tp: u32, pp: u32) -> u64 {
+        self.params * self.weight_bytes / (tp as u64 * pp as u64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn param_counts_are_plausible() {
+        let b7 = ModelDesc::llama2_7b();
+        assert!((6.0e9..8.5e9).contains(&(b7.params as f64)), "{}", b7.params);
+        let b32 = ModelDesc::qwen25_32b();
+        assert!((28.0e9..40.0e9).contains(&(b32.params as f64)), "{}", b32.params);
+        let b70 = ModelDesc::llama2_70b();
+        assert!((60.0e9..80.0e9).contains(&(b70.params as f64)), "{}", b70.params);
+    }
+
+    #[test]
+    fn lora_params_small_fraction() {
+        let m = ModelDesc::llama2_7b();
+        let frac = m.lora_params_per_task() as f64 / m.params as f64;
+        assert!(frac < 0.01, "LoRA fraction {frac}");
+    }
+
+    #[test]
+    fn by_name_roundtrip() {
+        for n in ["7b", "32b", "70b", "tiny", "nano"] {
+            assert!(ModelDesc::by_name(n).is_some());
+        }
+        assert!(ModelDesc::by_name("gpt-5").is_none());
+    }
+
+    #[test]
+    fn sharding_divides_weights() {
+        let m = ModelDesc::llama2_7b();
+        assert_eq!(m.weight_bytes_per_gpu(1, 1), m.params * 2);
+        assert_eq!(m.weight_bytes_per_gpu(2, 4), m.params * 2 / 8);
+    }
+}

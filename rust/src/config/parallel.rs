@@ -1,0 +1,104 @@
+//! Parallel configurations ⟨TP, PP⟩ — the unit of heterogeneity in LobRA.
+
+
+use std::fmt;
+
+/// One candidate parallel configuration `S_i = ⟨TP=α, PP=β⟩`.
+///
+/// `n() = tp*pp` GPUs deploy one FT replica with this configuration. The
+/// paper's Table 2 notation `⟨α,β⟩×γ` is `γ` replicas of `ParallelConfig
+/// { tp: α, pp: β }`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ParallelConfig {
+    pub tp: u32,
+    pub pp: u32,
+}
+
+impl ParallelConfig {
+    pub const fn new(tp: u32, pp: u32) -> Self {
+        Self { tp, pp }
+    }
+
+    /// GPUs per replica (`n_i` in the paper).
+    pub const fn n(&self) -> u32 {
+        self.tp * self.pp
+    }
+
+    /// All ⟨tp,pp⟩ with tp, pp powers of two, `tp <= max_tp`, `n <= max_n`.
+    ///
+    /// `max_tp` is typically the server size (8): TP across servers is only
+    /// allowed when a single server cannot hold the model (the paper's 70B
+    /// ⟨16,1⟩ case), controlled by `allow_cross_server_tp`.
+    pub fn enumerate(max_n: u32, max_tp: u32, allow_cross_server_tp: bool) -> Vec<Self> {
+        let mut out = Vec::new();
+        let mut tp = 1;
+        while tp <= max_n {
+            let mut pp = 1;
+            while tp * pp <= max_n {
+                let ok_tp = tp <= max_tp || allow_cross_server_tp;
+                if ok_tp {
+                    out.push(Self::new(tp, pp));
+                }
+                pp *= 2;
+            }
+            tp *= 2;
+        }
+        out.sort();
+        out
+    }
+}
+
+impl fmt::Display for ParallelConfig {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "<{},{}>", self.tp, self.pp)
+    }
+}
+
+/// Parse "⟨2,4⟩" / "<2,4>" / "2,4" into a config.
+impl std::str::FromStr for ParallelConfig {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        let t = s
+            .trim()
+            .trim_start_matches(['⟨', '<', '('])
+            .trim_end_matches(['⟩', '>', ')']);
+        let (a, b) = t
+            .split_once(',')
+            .ok_or_else(|| format!("bad parallel config: {s}"))?;
+        Ok(Self::new(
+            a.trim().parse().map_err(|e| format!("{e}"))?,
+            b.trim().parse().map_err(|e| format!("{e}"))?,
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn n_is_product() {
+        assert_eq!(ParallelConfig::new(2, 4).n(), 8);
+    }
+
+    #[test]
+    fn enumerate_respects_limits() {
+        let cfgs = ParallelConfig::enumerate(16, 8, false);
+        assert!(cfgs.contains(&ParallelConfig::new(1, 1)));
+        assert!(cfgs.contains(&ParallelConfig::new(8, 2)));
+        assert!(!cfgs.iter().any(|c| c.tp > 8));
+        assert!(!cfgs.iter().any(|c| c.n() > 16));
+        let cfgs2 = ParallelConfig::enumerate(16, 8, true);
+        assert!(cfgs2.contains(&ParallelConfig::new(16, 1)));
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for s in ["<2,4>", "⟨2,4⟩", "2,4", " (2, 4) "] {
+            let c: ParallelConfig = s.parse().unwrap();
+            assert_eq!(c, ParallelConfig::new(2, 4));
+        }
+        assert_eq!(ParallelConfig::new(2, 4).to_string(), "<2,4>");
+    }
+}

@@ -1,0 +1,135 @@
+//! FT task (tenant) specifications — one per uploaded fine-tuning request.
+
+use crate::data::{DatasetProfile, LengthDistribution};
+
+
+/// One fine-tuning request: a dataset (length distribution) + batch size.
+///
+/// Mirrors the paper's Table 4 rows: each FT dataset is one task with its
+/// own per-step batch size; the joint batch fuses all tasks' batches.
+#[derive(Debug, Clone)]
+pub struct TaskSpec {
+    pub name: String,
+    /// Sequences drawn per training step for this task.
+    pub batch_size: u32,
+    /// Sequence length distribution of the task's dataset.
+    pub lengths: LengthDistribution,
+}
+
+impl TaskSpec {
+    pub fn new(name: &str, batch_size: u32, lengths: LengthDistribution) -> Self {
+        Self { name: name.to_string(), batch_size, lengths }
+    }
+
+    pub fn from_profile(p: &DatasetProfile) -> Self {
+        Self::new(p.name, p.batch_size, p.distribution())
+    }
+}
+
+/// The batch of co-existing FT tasks being jointly trained.
+#[derive(Debug, Clone, Default)]
+pub struct TaskSet {
+    pub tasks: Vec<TaskSpec>,
+}
+
+impl TaskSet {
+    pub fn new(tasks: Vec<TaskSpec>) -> Self {
+        Self { tasks }
+    }
+
+    pub fn len(&self) -> usize {
+        self.tasks.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tasks.is_empty()
+    }
+
+    /// Joint (fused) batch size `B = Σ_t batch_size_t`.
+    pub fn joint_batch(&self) -> u32 {
+        self.tasks.iter().map(|t| t.batch_size).sum()
+    }
+
+    /// All 12 paper datasets (Table 4) as tasks.
+    pub fn paper_all() -> Self {
+        Self::new(
+            DatasetProfile::all()
+                .iter()
+                .map(TaskSpec::from_profile)
+                .collect(),
+        )
+    }
+
+    /// The 6-task subset used for the 7B / 16-GPU experiments (App. B.3).
+    pub fn paper_7b_subset() -> Self {
+        let names = [
+            "databricks-dolly-15k",
+            "Evol-Instruct",
+            "XSum",
+            "CommitPackFt",
+            "MeetingBank",
+            "python_code_instructions",
+        ];
+        Self::new(
+            DatasetProfile::all()
+                .iter()
+                .filter(|p| names.contains(&p.name))
+                .map(TaskSpec::from_profile)
+                .collect(),
+        )
+    }
+
+    /// The 4-task subset used in the scalability study (App. B.3).
+    pub fn paper_scalability_subset() -> Self {
+        let names = ["Evol-Instruct", "CommitPackFt", "BillSum", "PubMedQA"];
+        Self::new(
+            DatasetProfile::all()
+                .iter()
+                .filter(|p| names.contains(&p.name))
+                .map(TaskSpec::from_profile)
+                .collect(),
+        )
+    }
+
+    /// First `n` tasks (cycling if n > 12) — used by the task-scalability bench.
+    pub fn paper_first_n(n: usize) -> Self {
+        let all = DatasetProfile::all();
+        Self::new(
+            (0..n)
+                .map(|i| {
+                    let p = &all[i % all.len()];
+                    let mut t = TaskSpec::from_profile(p);
+                    if i >= all.len() {
+                        t.name = format!("{}#{}", t.name, i / all.len() + 1);
+                    }
+                    t
+                })
+                .collect(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_all_has_12_tasks() {
+        let ts = TaskSet::paper_all();
+        assert_eq!(ts.len(), 12);
+        assert!(ts.joint_batch() > 0);
+    }
+
+    #[test]
+    fn subset_selection() {
+        assert_eq!(TaskSet::paper_7b_subset().len(), 6);
+        assert_eq!(TaskSet::paper_scalability_subset().len(), 4);
+    }
+
+    #[test]
+    fn first_n_cycles() {
+        let ts = TaskSet::paper_first_n(16);
+        assert_eq!(ts.len(), 16);
+        assert!(ts.tasks[12].name.contains('#'));
+    }
+}

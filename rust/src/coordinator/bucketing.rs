@@ -1,0 +1,366 @@
+//! Dynamic bucketing (paper §4.3, Eq. 4).
+//!
+//! Sequences must be padded to their bucket's boundary; fixed boundaries
+//! waste tokens when the sampled batch's length profile shifts. The DP
+//! below starts from `U` fine-grained intervals (equal width, e.g. 256) and
+//! merges them into at most `R` buckets minimizing total padding:
+//!
+//! ```text
+//! State[i][j] = min padding bucketing the first i intervals into j buckets
+//! State[i+1][j+1] = min_{i' <= i} State[i'][j] + Σ_{i''=i'+1..=i} |I_i''|·(u_{i+1} − u_{i''})
+//! ```
+//!
+//! Complexity `O(B + R·U²)` (`B` to histogram the batch). Empty intervals
+//! are skipped, which keeps `U` small in practice (paper footnote 3).
+
+use crate::util::stats;
+
+/// Bucketing result: `R` boundaries (ascending, last ≥ max length) and the
+/// per-bucket sequence counts of the batch it was derived from.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Buckets {
+    /// Bucket upper boundaries (pad-to lengths), ascending.
+    pub boundaries: Vec<u32>,
+    /// Sequences per bucket for the batch used to derive the boundaries.
+    pub counts: Vec<u64>,
+    /// Total padding tokens incurred by this bucketing (incl. intra-interval).
+    pub padding_tokens: u64,
+}
+
+impl Buckets {
+    /// Index of the bucket a sequence of length `len` falls into.
+    pub fn bucket_of(&self, len: u32) -> usize {
+        self.boundaries
+            .partition_point(|&b| b < len)
+            .min(self.boundaries.len() - 1)
+    }
+
+    /// Total tokens after padding for the derivation batch.
+    pub fn padded_tokens(&self) -> u64 {
+        self.boundaries
+            .iter()
+            .zip(&self.counts)
+            .map(|(&b, &c)| b as u64 * c)
+            .sum()
+    }
+}
+
+/// Options for [`bucketize`].
+#[derive(Debug, Clone)]
+pub struct BucketingOptions {
+    /// Max number of buckets `R` (paper default 16).
+    pub max_buckets: usize,
+    /// Width of the pre-defined intervals `u_i` (paper: 256, 512, ...).
+    pub interval: u32,
+    /// Hard cap on interval count `U` (sequences longer than
+    /// `interval×max_intervals` share the last interval).
+    pub max_intervals: usize,
+}
+
+impl Default for BucketingOptions {
+    fn default() -> Self {
+        Self { max_buckets: 16, interval: 256, max_intervals: 128 }
+    }
+}
+
+/// Fixed equal-width boundaries (the non-dynamic baseline of Figure 8).
+pub fn fixed_boundaries(lengths: &[u32], opts: &BucketingOptions) -> Buckets {
+    let max_len = lengths.iter().copied().max().unwrap_or(opts.interval);
+    let r = opts.max_buckets as u32;
+    let width = max_len.div_ceil(r).max(1);
+    // round width up to a multiple of 16 for kernel alignment
+    let width = width.div_ceil(16) * 16;
+    let boundaries: Vec<u32> = (1..=r).map(|k| k * width).collect();
+    let mut counts = vec![0u64; boundaries.len()];
+    let mut padding = 0u64;
+    for &l in lengths {
+        let j = boundaries.partition_point(|&b| b < l).min(boundaries.len() - 1);
+        counts[j] += 1;
+        padding += (boundaries[j].max(l) - l) as u64;
+    }
+    Buckets { boundaries, counts, padding_tokens: padding }
+}
+
+/// Dynamic bucketing DP (Eq. 4): minimal-padding boundaries for `lengths`.
+pub fn bucketize(lengths: &[u32], opts: &BucketingOptions) -> Buckets {
+    assert!(opts.max_buckets >= 1);
+    if lengths.is_empty() {
+        return Buckets {
+            boundaries: vec![opts.interval],
+            counts: vec![0],
+            padding_tokens: 0,
+        };
+    }
+    let max_len = *lengths.iter().max().unwrap();
+    // interval grid u_1..u_U covering max_len
+    let mut n_intervals = (max_len.div_ceil(opts.interval) as usize).max(1);
+    let mut interval = opts.interval;
+    if n_intervals > opts.max_intervals {
+        // widen intervals to respect the cap
+        interval = max_len.div_ceil(opts.max_intervals as u32);
+        interval = interval.div_ceil(16) * 16;
+        n_intervals = (max_len.div_ceil(interval) as usize).max(1);
+    }
+    let u: Vec<u32> = (1..=n_intervals as u32).map(|k| k * interval).collect();
+
+    // histogram per interval + intra-interval padding (constant term)
+    let mut hist = vec![0u64; n_intervals];
+    let mut intra_padding = 0u64;
+    for &l in lengths {
+        let idx = ((l.div_ceil(interval)) as usize - 1).min(n_intervals - 1);
+        hist[idx] += 1;
+        intra_padding += (u[idx].max(l) - l) as u64;
+    }
+
+    // Drop empty intervals (paper footnote 3) — they can never be optimal
+    // boundaries except as carriers for later mass, which non-empty
+    // intervals to their right dominate.
+    let occupied: Vec<usize> = (0..n_intervals).filter(|&i| hist[i] > 0).collect();
+    let uu: Vec<u64> = occupied.iter().map(|&i| u[i] as u64).collect();
+    let hh: Vec<u64> = occupied.iter().map(|&i| hist[i]).collect();
+    let n = uu.len();
+    let r = opts.max_buckets.min(n);
+
+    // State[i][j]: min inter-interval padding for first i occupied
+    // intervals in j buckets. Transition per Eq. 4.
+    const INF: u64 = u64::MAX / 4;
+    let mut state = vec![vec![INF; r + 1]; n + 1];
+    for j in 0..=r {
+        state[0][j] = 0;
+    }
+    // choice[i][j] = i' that attained the optimum (for reconstruction)
+    let mut choice = vec![vec![0usize; r + 1]; n + 1];
+    // prefix sums for Σ |I_i''| and Σ |I_i''|·u_i''
+    let mut pref_cnt = vec![0u64; n + 1];
+    let mut pref_cu = vec![0u64; n + 1];
+    for i in 0..n {
+        pref_cnt[i + 1] = pref_cnt[i] + hh[i];
+        pref_cu[i + 1] = pref_cu[i] + hh[i] * uu[i];
+    }
+    for i in 1..=n {
+        for j in 1..=r {
+            // bucket (i'+1 ..= i] padded to u_i
+            for ip in 0..i {
+                if state[ip][j - 1] >= INF {
+                    continue;
+                }
+                let cnt = pref_cnt[i] - pref_cnt[ip];
+                let cu = pref_cu[i] - pref_cu[ip];
+                let pad = cnt * uu[i - 1] - cu;
+                let cand = state[ip][j - 1] + pad;
+                if cand < state[i][j] {
+                    state[i][j] = cand;
+                    choice[i][j] = ip;
+                }
+            }
+        }
+    }
+
+    // reconstruct boundaries
+    let mut bounds_rev = Vec::with_capacity(r);
+    let (mut i, mut j) = (n, r);
+    // the DP always uses exactly min(r, n) buckets optimally because extra
+    // buckets never hurt; walk back from state[n][r]
+    while i > 0 {
+        bounds_rev.push(uu[i - 1] as u32);
+        let ip = choice[i][j];
+        i = ip;
+        j -= 1;
+    }
+    bounds_rev.reverse();
+    let boundaries = bounds_rev;
+
+    let mut counts = vec![0u64; boundaries.len()];
+    for &l in lengths {
+        let idx = boundaries.partition_point(|&b| b < l).min(boundaries.len() - 1);
+        counts[idx] += 1;
+    }
+    let inter_padding = state[n][r];
+    Buckets {
+        boundaries,
+        counts,
+        padding_tokens: inter_padding + intra_padding,
+    }
+}
+
+/// Build `Buckets` for a batch against pre-existing boundaries (the fixed-
+/// boundary mode of Figure 8's ablation: boundaries chosen once from a
+/// calibration sample, reused every step).
+pub fn buckets_from_boundaries(lengths: &[u32], boundaries: &[u32]) -> Buckets {
+    let mut counts = vec![0u64; boundaries.len()];
+    let mut padding = 0u64;
+    for &l in lengths {
+        let j = boundaries.partition_point(|&b| b < l).min(boundaries.len() - 1);
+        counts[j] += 1;
+        padding += (boundaries[j].max(l) - l) as u64;
+    }
+    Buckets { boundaries: boundaries.to_vec(), counts, padding_tokens: padding }
+}
+
+/// Padding tokens if `lengths` are padded to the given boundaries
+/// (nearest boundary ≥ length; lengths above the top boundary clamp).
+pub fn padding_for(lengths: &[u32], boundaries: &[u32]) -> u64 {
+    let mut pad = 0u64;
+    for &l in lengths {
+        let j = boundaries.partition_point(|&b| b < l).min(boundaries.len() - 1);
+        pad += (boundaries[j].max(l) - l) as u64;
+    }
+    pad
+}
+
+/// Mean padding ratio: padding / (padding + real tokens).
+pub fn padding_ratio(lengths: &[u32], boundaries: &[u32]) -> f64 {
+    let pad = padding_for(lengths, boundaries) as f64;
+    let real: u64 = lengths.iter().map(|&l| l as u64).sum();
+    if real == 0 {
+        return 0.0;
+    }
+    pad / (pad + real as f64)
+}
+
+/// Brute-force optimal bucketing by exhaustive boundary subsets — test
+/// oracle only (exponential).
+#[doc(hidden)]
+pub fn bucketize_bruteforce(lengths: &[u32], interval: u32, max_buckets: usize) -> u64 {
+    let max_len = lengths.iter().copied().max().unwrap_or(interval);
+    let n_intervals = (max_len.div_ceil(interval) as usize).max(1);
+    let u: Vec<u32> = (1..=n_intervals as u32).map(|k| k * interval).collect();
+    let last = n_intervals - 1;
+    let mut best = u64::MAX;
+    // choose subsets of boundaries that include the last interval
+    let m = n_intervals - 1; // optional boundary positions
+    for mask in 0..(1u64 << m) {
+        if (mask.count_ones() as usize + 1) > max_buckets {
+            continue;
+        }
+        let mut bounds: Vec<u32> = (0..m)
+            .filter(|&k| mask & (1 << k) != 0)
+            .map(|k| u[k])
+            .collect();
+        bounds.push(u[last]);
+        let pad = padding_for(lengths, &bounds);
+        best = best.min(pad);
+    }
+    best
+}
+
+/// Moment summary of a batch's lengths (diagnostics).
+pub fn length_moments(lengths: &[u32]) -> stats::Moments {
+    let xs: Vec<f64> = lengths.iter().map(|&l| l as f64).collect();
+    stats::moments(&xs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn covers_all_lengths() {
+        let lengths = vec![100, 300, 700, 2000, 4100];
+        let b = bucketize(&lengths, &BucketingOptions::default());
+        assert!(*b.boundaries.last().unwrap() >= 4100);
+        assert_eq!(b.counts.iter().sum::<u64>(), 5);
+    }
+
+    #[test]
+    fn dp_matches_bruteforce() {
+        let opts = BucketingOptions { max_buckets: 3, interval: 100, max_intervals: 64 };
+        let cases: Vec<Vec<u32>> = vec![
+            vec![50, 99, 150, 380, 520, 900],
+            vec![10, 20, 30, 800],
+            vec![500; 10],
+            vec![100, 200, 300, 400, 500, 600, 700, 800],
+        ];
+        for lengths in cases {
+            let dp = bucketize(&lengths, &opts);
+            let bf = bucketize_bruteforce(&lengths, 100, 3);
+            assert_eq!(dp.padding_tokens, bf, "lengths {lengths:?}: dp {} bf {bf}", dp.padding_tokens);
+        }
+    }
+
+    #[test]
+    fn more_buckets_never_more_padding() {
+        let mut rng = crate::util::Rng::new(5);
+        let lengths: Vec<u32> =
+            (0..500).map(|_| rng.range(16, 8192) as u32).collect();
+        let mut prev = u64::MAX;
+        for r in [2, 4, 8, 16, 32] {
+            let b = bucketize(
+                &lengths,
+                &BucketingOptions { max_buckets: r, interval: 256, max_intervals: 128 },
+            );
+            assert!(b.padding_tokens <= prev, "R={r}");
+            prev = b.padding_tokens;
+        }
+    }
+
+    #[test]
+    fn dynamic_beats_fixed() {
+        // Skewed batch: dynamic boundaries should pad less than equal-width.
+        let mut rng = crate::util::Rng::new(6);
+        let mut lengths: Vec<u32> = (0..400)
+            .map(|_| (rng.lognormal(5.5, 1.0) as u32).clamp(16, 16384))
+            .collect();
+        lengths.push(16384); // one huge outlier
+        let opts = BucketingOptions { max_buckets: 8, interval: 256, max_intervals: 128 };
+        let dynamic = bucketize(&lengths, &opts);
+        let fixed = fixed_boundaries(&lengths, &opts);
+        assert!(
+            dynamic.padding_tokens < fixed.padding_tokens,
+            "dyn {} vs fixed {}",
+            dynamic.padding_tokens,
+            fixed.padding_tokens
+        );
+    }
+
+    #[test]
+    fn single_bucket_pads_to_max() {
+        let lengths = vec![100, 200, 999];
+        let b = bucketize(
+            &lengths,
+            &BucketingOptions { max_buckets: 1, interval: 100, max_intervals: 64 },
+        );
+        assert_eq!(b.boundaries.len(), 1);
+        assert_eq!(b.boundaries[0], 1000);
+        // padding = (1000-100)+(1000-200)+(1000-999)
+        assert_eq!(b.padding_tokens, 900 + 800 + 1);
+    }
+
+    #[test]
+    fn empty_input() {
+        let b = bucketize(&[], &BucketingOptions::default());
+        assert_eq!(b.counts.iter().sum::<u64>(), 0);
+        assert_eq!(b.padding_tokens, 0);
+    }
+
+    #[test]
+    fn bucket_of_lookup() {
+        let b = Buckets {
+            boundaries: vec![256, 1024, 4096],
+            counts: vec![0, 0, 0],
+            padding_tokens: 0,
+        };
+        assert_eq!(b.bucket_of(100), 0);
+        assert_eq!(b.bucket_of(256), 0);
+        assert_eq!(b.bucket_of(257), 1);
+        assert_eq!(b.bucket_of(9999), 2); // clamps to last
+    }
+
+    #[test]
+    fn interval_cap_respected() {
+        let lengths = vec![32768, 100, 50];
+        let b = bucketize(
+            &lengths,
+            &BucketingOptions { max_buckets: 4, interval: 16, max_intervals: 8 },
+        );
+        assert!(*b.boundaries.last().unwrap() >= 32768);
+        assert!(b.boundaries.len() <= 4);
+    }
+
+    #[test]
+    fn padding_ratio_sane() {
+        let r = padding_ratio(&[100, 100], &[128]);
+        assert!((r - 56.0 / 256.0).abs() < 1e-9);
+        assert_eq!(padding_ratio(&[], &[128]), 0.0);
+    }
+}

@@ -1,0 +1,16 @@
+//! The LobRA coordinator — the paper's system contribution, layer 3.
+//!
+//! * [`bucketing`] — dynamic bucketing DP (paper Eq. 4): choose `R` bucket
+//!   boundaries per batch to minimize padding.
+//! * [`dispatcher`] — per-step workload-balanced data dispatching (Eq. 3).
+//! * [`planner`] — one-shot deployment of heterogeneous FT replicas
+//!   (Eq. 2) with configuration-proposal and lower-bound pruning
+//!   (Observation 1 / Theorem 1).
+//! * [`scheduler`] — the joint-FT step loop tying it all together.
+//! * [`tasks`] — tenant lifecycle: arrivals/exits trigger re-planning.
+
+pub mod bucketing;
+pub mod dispatcher;
+pub mod planner;
+pub mod scheduler;
+pub mod tasks;

@@ -1,0 +1,637 @@
+//! Deployment planning of heterogeneous FT replicas (paper §4.2, Eq. 2).
+//!
+//! Solved once at joint-FT initialization (and again on task arrival/exit):
+//!
+//! 1. Sample `100×B` lengths, dynamic-bucketize them, and take the bucket
+//!    fractions `f_j` as the expected batch composition.
+//! 2. Propose candidate configurations (Observation 1): for every
+//!    `(num_gpus, seq_len)` pair keep only the highest-throughput
+//!    configuration — dominated configs can never be selected.
+//! 3. Enumerate deployment plans = integer partitions of the GPU budget
+//!    over candidates (maximal packing: leaving a whole replica's worth of
+//!    GPUs idle is dominated).
+//! 4. Filter by the Theorem 1 lower bound: `lb = Σ_i N_i·t_i / N` under
+//!    length-based dispatch; drop plans whose bound exceeds the best by
+//!    more than the threshold (default 15%).
+//! 5. Solve the inner min–max dispatch (Eq. 3 structure) for every
+//!    surviving plan in parallel, evaluate with the exact cost model, and
+//!    keep the best.
+
+use crate::cluster::ClusterSpec;
+use crate::config::{ParallelConfig, TaskSet};
+use crate::coordinator::bucketing::{bucketize, BucketingOptions, Buckets};
+use crate::coordinator::dispatcher::{DispatchPolicy, Dispatcher};
+use crate::costmodel::{BucketLoad, CostModel};
+use crate::data::MultiTaskSampler;
+use crate::solver::partition::{enumerate_plans, Plan};
+use crate::util::par::par_map;
+
+/// A deployed set of heterogeneous FT replicas (the paper's Table 2 rows).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeploymentPlan {
+    /// (configuration, replica count), ascending by GPUs per replica.
+    pub groups: Vec<(ParallelConfig, u32)>,
+    /// Number of FT tasks this plan was computed for (sync sizing).
+    pub n_tasks: u32,
+    /// Planner's predicted per-step time (expectation batch).
+    pub expected_step_time: f64,
+}
+
+impl DeploymentPlan {
+    pub fn n_replicas(&self) -> u32 {
+        self.groups.iter().map(|&(_, p)| p).sum()
+    }
+
+    pub fn gpus_used(&self) -> u32 {
+        self.groups.iter().map(|&(c, p)| c.n() * p).sum()
+    }
+
+    /// Paper Table 2 notation: `<1,1>x6, <2,1>x1, <8,1>x1`.
+    pub fn notation(&self) -> String {
+        self.groups
+            .iter()
+            .map(|&(c, p)| format!("{c}x{p}"))
+            .collect::<Vec<_>>()
+            .join(", ")
+    }
+
+    /// A homogeneous plan: `count` replicas of one config.
+    pub fn homogeneous(cfg: ParallelConfig, count: u32, n_tasks: u32) -> Self {
+        Self { groups: vec![(cfg, count)], n_tasks, expected_step_time: 0.0 }
+    }
+}
+
+/// Planning statistics (Table 5's measured quantities).
+#[derive(Debug, Clone, Default)]
+pub struct PlanningStats {
+    pub n_candidate_configs: usize,
+    pub n_plans_enumerated: usize,
+    pub n_plans_after_filter: usize,
+    pub solve_seconds: f64,
+    pub hit_plan_cap: bool,
+}
+
+/// Planner options (pruning toggles are the Table 5 ablation axes).
+#[derive(Debug, Clone)]
+pub struct PlannerOptions {
+    pub bucketing: BucketingOptions,
+    /// Observation-1 configuration proposal.
+    pub config_proposal: bool,
+    /// Theorem-1 lower-bound filtering.
+    pub lower_bound_filter: bool,
+    /// Keep plans within (1+threshold) of the best lower bound.
+    pub lower_bound_threshold: f64,
+    /// Calibration sample = `calibration_multiple × B` lengths.
+    pub calibration_multiple: usize,
+    /// Enumeration safety valve.
+    pub max_plans: usize,
+    /// Sampled batches (beyond the expectation batch) each surviving plan
+    /// is evaluated on — guards against plans that are optimal for the
+    /// expected bucket counts but fragile under batch randomness.
+    pub eval_batches: usize,
+    /// After the lower-bound filter, evaluate at most this many plans
+    /// (best bounds first). Keeps large-cluster planning in minutes, as the
+    /// paper's pruned solver does (Table 5).
+    pub max_evaluated: usize,
+    pub seed: u64,
+    /// Allow TP groups spanning servers (needed when one server cannot
+    /// hold the model, e.g. 70B ⟨16,1⟩).
+    pub allow_cross_server_tp: bool,
+    /// Dispatch policy assumed when evaluating candidate plans. The LobRA
+    /// default is Balanced; the Figure 8 "+heterogeneous replicas" ablation
+    /// arm plans self-consistently for LengthBased dispatch.
+    pub inner_policy: DispatchPolicy,
+}
+
+impl Default for PlannerOptions {
+    fn default() -> Self {
+        Self {
+            bucketing: BucketingOptions::default(),
+            config_proposal: true,
+            lower_bound_filter: true,
+            lower_bound_threshold: 0.15,
+            calibration_multiple: 100,
+            max_plans: 2_000_000,
+            eval_batches: 4,
+            max_evaluated: 2_000,
+            seed: 0x10b7a,
+            allow_cross_server_tp: true,
+            inner_policy: DispatchPolicy::Balanced,
+        }
+    }
+}
+
+/// The deployment planner.
+pub struct Planner<'a> {
+    cost: &'a CostModel,
+    cluster: &'a ClusterSpec,
+}
+
+impl<'a> Planner<'a> {
+    pub fn new(cost: &'a CostModel, cluster: &'a ClusterSpec) -> Self {
+        Self { cost, cluster }
+    }
+
+    /// All feasible configurations on this (model, cluster).
+    pub fn feasible_configs(&self, allow_cross_server_tp: bool) -> Vec<ParallelConfig> {
+        ParallelConfig::enumerate(
+            self.cluster.n_gpus,
+            self.cluster.gpus_per_server,
+            allow_cross_server_tp,
+        )
+        .into_iter()
+        .filter(|&c| self.cost.feasible(c))
+        .collect()
+    }
+
+    /// Observation-1 configuration proposal: for each `(num_gpus, s)` pair
+    /// keep the throughput-max config; dominated configs are dropped.
+    pub fn propose_configs(
+        &self,
+        boundaries: &[u32],
+        allow_cross_server_tp: bool,
+    ) -> Vec<ParallelConfig> {
+        let all = self.feasible_configs(allow_cross_server_tp);
+        let mut keep = std::collections::BTreeSet::new();
+        let sizes: std::collections::BTreeSet<u32> = all.iter().map(|c| c.n()).collect();
+        for &n in &sizes {
+            for &s in boundaries {
+                let mut best: Option<(f64, ParallelConfig)> = None;
+                for &c in all.iter().filter(|c| c.n() == n) {
+                    if self.cost.max_seq_len(c) < s as u64 {
+                        continue;
+                    }
+                    let cap = self.cost.max_chunk_tokens(c);
+                    let b = (cap / s as u64).max(1);
+                    let thr = self.cost.throughput(c, b, s as u64);
+                    if best.map_or(true, |(t, _)| thr > t) {
+                        best = Some((thr, c));
+                    }
+                }
+                if let Some((_, c)) = best {
+                    keep.insert(c);
+                }
+            }
+        }
+        keep.into_iter().collect()
+    }
+
+    /// Theorem 1 lower bound of a plan: length-based dispatch, then
+    /// `lb = Σ_i N_i·t_i / N_used`.
+    pub fn lower_bound(
+        &self,
+        configs: &[ParallelConfig],
+        plan: &Plan,
+        buckets: &Buckets,
+    ) -> Option<f64> {
+        // length-based: each bucket to the most efficient (per-GPU) config
+        // among the plan's deployed configs that supports it.
+        let mut per_config_loads: Vec<Vec<BucketLoad>> =
+            vec![Vec::new(); configs.len()];
+        for (j, (&bj, &s)) in buckets.counts.iter().zip(&buckets.boundaries).enumerate() {
+            let _ = j;
+            if bj == 0 {
+                continue;
+            }
+            let mut best: Option<(f64, usize)> = None;
+            for (i, &c) in configs.iter().enumerate() {
+                if plan.counts[i] == 0 || self.cost.max_seq_len(c) < s as u64 {
+                    continue;
+                }
+                let eff = self.cost.per_seq_cost(c, s as u64) * c.n() as f64;
+                if best.map_or(true, |(e, _)| eff < e) {
+                    best = Some((eff, i));
+                }
+            }
+            let (_, i) = best?;
+            per_config_loads[i].push(BucketLoad { count: bj, padded_len: s as u64 });
+        }
+        let mut weighted = 0.0;
+        let mut n_used = 0u32;
+        for (i, &c) in configs.iter().enumerate() {
+            let p = plan.counts[i];
+            if p == 0 {
+                continue;
+            }
+            n_used += p * c.n();
+            if per_config_loads[i].is_empty() {
+                continue;
+            }
+            // split the config's load evenly over its p replicas
+            let loads: Vec<BucketLoad> = per_config_loads[i]
+                .iter()
+                .map(|l| BucketLoad {
+                    count: l.count.div_ceil(p as u64),
+                    padded_len: l.padded_len,
+                })
+                .collect();
+            let t = self.cost.replica_time(c, &loads);
+            weighted += (c.n() * p) as f64 * t;
+        }
+        if n_used == 0 {
+            return None;
+        }
+        let thm1 = weighted / n_used as f64;
+
+        // Suffix-capacity bound (strengthening of Theorem 1): sequences in
+        // bucket j can only migrate to replicas that support bucket j
+        // (Property 2 — supports are nested), so for every j:
+        //   t̂ ≥ (Σ_{j'≥j} minimal GPU-work of bucket j') / (GPUs supporting j)
+        // This removes plans that look cheap on average but choke their few
+        // long-sequence-capable replicas.
+        let mut suffix = 0.0f64;
+        let mut best_suffix_bound = 0.0f64;
+        for j in (0..buckets.boundaries.len()).rev() {
+            let s = buckets.boundaries[j] as u64;
+            let bj = buckets.counts[j];
+            if bj > 0 {
+                // minimal GPU-seconds per bucket-j sequence over the plan
+                let w = configs
+                    .iter()
+                    .enumerate()
+                    .filter(|&(i, c)| {
+                        plan.counts[i] > 0 && self.cost.max_seq_len(*c) >= s
+                    })
+                    .map(|(_, c)| self.cost.per_seq_cost(*c, s) * c.n() as f64)
+                    .fold(f64::INFINITY, f64::min);
+                if !w.is_finite() {
+                    return None; // no deployed config supports this bucket
+                }
+                suffix += bj as f64 * w;
+            }
+            let supporter_gpus: u32 = configs
+                .iter()
+                .enumerate()
+                .filter(|&(i, c)| {
+                    plan.counts[i] > 0 && self.cost.max_seq_len(*c) >= s
+                })
+                .map(|(i, c)| plan.counts[i] * c.n())
+                .sum();
+            if supporter_gpus > 0 && suffix > 0.0 {
+                best_suffix_bound =
+                    best_suffix_bound.max(suffix / supporter_gpus as f64);
+            }
+        }
+        Some(thm1.max(best_suffix_bound))
+    }
+
+    /// Solve Eq. 2: the full two-stage-decomposed deployment planning.
+    pub fn plan(&self, tasks: &TaskSet, opts: PlannerOptions) -> Option<DeploymentPlan> {
+        self.plan_with_stats(tasks, opts).map(|(p, _)| p)
+    }
+
+    /// Like [`Self::plan`] but returns planning statistics (Table 5).
+    pub fn plan_with_stats(
+        &self,
+        tasks: &TaskSet,
+        opts: PlannerOptions,
+    ) -> Option<(DeploymentPlan, PlanningStats)> {
+        let start = std::time::Instant::now();
+        let mut stats = PlanningStats::default();
+        if tasks.is_empty() {
+            return None;
+        }
+
+        // 1. calibration sample → expected buckets. The sample is extended
+        // with each task's distribution maximum so the plan can process
+        // every sequence the tasks may ever produce (a plan sized only for
+        // the sampled max would OOM on a later batch's tail draw).
+        let mut sampler = MultiTaskSampler::new(tasks, opts.seed);
+        let mut lengths = sampler.calibration_lengths(opts.calibration_multiple);
+        for t in &tasks.tasks {
+            lengths.push(t.lengths.max_len);
+        }
+        let calib = bucketize(&lengths, &opts.bucketing);
+        // expected per-step demand: B × f_j
+        let b_total = tasks.joint_batch() as f64;
+        let sample_total: u64 = calib.counts.iter().sum();
+        let expected_counts: Vec<u64> = calib
+            .counts
+            .iter()
+            .map(|&c| ((c as f64 / sample_total.max(1) as f64) * b_total).ceil() as u64)
+            .collect();
+        let buckets = Buckets {
+            boundaries: calib.boundaries.clone(),
+            counts: expected_counts,
+            padding_tokens: 0,
+        };
+        // Robustness batches: real sampled fused batches, bucketed with the
+        // calibration boundaries.
+        let eval: Vec<Buckets> = (0..opts.eval_batches)
+            .map(|_| {
+                let batch = sampler.next_batch();
+                crate::coordinator::bucketing::buckets_from_boundaries(
+                    &batch.lengths(),
+                    &calib.boundaries,
+                )
+            })
+            .collect();
+
+        self.plan_for_buckets_robust(&buckets, &eval, tasks.len() as u32, &opts, &mut stats, start)
+            .map(|p| (p, stats))
+    }
+
+    /// Plan for explicit expected buckets (used by benches & Eq. 1 solver).
+    pub fn plan_for_buckets(
+        &self,
+        buckets: &Buckets,
+        n_tasks: u32,
+        opts: &PlannerOptions,
+        stats: &mut PlanningStats,
+        start: std::time::Instant,
+    ) -> Option<DeploymentPlan> {
+        self.plan_for_buckets_robust(buckets, &[], n_tasks, opts, stats, start)
+    }
+
+    /// Like [`Self::plan_for_buckets`] with extra robustness batches: each
+    /// surviving plan's objective is its mean exact step time over the
+    /// expectation batch plus `eval` sampled batches.
+    pub fn plan_for_buckets_robust(
+        &self,
+        buckets: &Buckets,
+        eval: &[Buckets],
+        n_tasks: u32,
+        opts: &PlannerOptions,
+        stats: &mut PlanningStats,
+        start: std::time::Instant,
+    ) -> Option<DeploymentPlan> {
+        // 2. candidate configurations
+        let configs = if opts.config_proposal {
+            self.propose_configs(&buckets.boundaries, opts.allow_cross_server_tp)
+        } else {
+            self.feasible_configs(opts.allow_cross_server_tp)
+        };
+        stats.n_candidate_configs = configs.len();
+        if configs.is_empty() {
+            return None;
+        }
+        let longest = *buckets.boundaries.last()? as u64;
+        // at least one candidate must support the longest bucket
+        configs.iter().find(|c| self.cost.max_seq_len(**c) >= longest)?;
+
+        // 3. enumerate maximal-packing plans
+        let min_n = configs.iter().map(|c| c.n()).min().unwrap_or(1);
+        let min_gpus = self.cluster.n_gpus.saturating_sub(min_n - 1);
+        let plans = enumerate_plans(
+            &configs,
+            self.cluster.n_gpus,
+            min_gpus,
+            None,
+            opts.max_plans,
+        );
+        stats.n_plans_enumerated = plans.len();
+        stats.hit_plan_cap = plans.len() >= opts.max_plans;
+
+        // keep only plans able to process the longest bucket
+        let plans: Vec<Plan> = plans
+            .into_iter()
+            .filter(|p| {
+                configs.iter().enumerate().any(|(i, c)| {
+                    p.counts[i] > 0 && self.cost.max_seq_len(*c) >= longest
+                })
+            })
+            .collect();
+
+        // 4. Theorem-1 lower-bound filter
+        let mut survivors: Vec<(Plan, f64)> = if opts.lower_bound_filter {
+            let bounds: Vec<(Plan, f64)> = par_map(plans, |p| {
+                self.lower_bound(&configs, p, buckets).map(|lb| (p.clone(), lb))
+            })
+            .into_iter()
+            .flatten()
+            .collect();
+            let best_lb = bounds
+                .iter()
+                .map(|&(_, lb)| lb)
+                .fold(f64::INFINITY, f64::min);
+            bounds
+                .into_iter()
+                .filter(|&(_, lb)| lb <= best_lb * (1.0 + opts.lower_bound_threshold))
+                .collect()
+        } else {
+            plans.into_iter().map(|p| (p, 0.0)).collect()
+        };
+        stats.n_plans_after_filter = survivors.len();
+        // Rank-truncation only applies when bounds exist; the "no filter"
+        // ablation (Table 5) evaluates everything and pays full price.
+        if opts.lower_bound_filter && survivors.len() > opts.max_evaluated {
+            survivors.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+            survivors.truncate(opts.max_evaluated);
+        }
+        // The homogeneous plans are always evaluated: pruning may never
+        // leave the planner worse than the Task-Fused baseline (the bound
+        // is a *relative* metric — paper Appendix A — and can misrank
+        // plans whose dispatch flexibility differs a lot).
+        for (i, c) in configs.iter().enumerate() {
+            if self.cost.max_seq_len(*c) < longest {
+                continue;
+            }
+            let count = self.cluster.n_gpus / c.n();
+            if count == 0 {
+                continue;
+            }
+            let mut counts = vec![0u32; configs.len()];
+            counts[i] = count;
+            let plan = Plan { counts };
+            if !survivors.iter().any(|(p, _)| p == &plan) {
+                survivors.push((plan, 0.0));
+            }
+        }
+
+        // 5. inner dispatch solve per surviving plan (parallel)
+        let evaluated: Vec<(DeploymentPlan, f64)> = par_map(survivors, |(plan, _)| {
+            let groups: Vec<(ParallelConfig, u32)> = configs
+                .iter()
+                .zip(&plan.counts)
+                .filter(|&(_, &p)| p > 0)
+                .map(|(&c, &p)| (c, p))
+                .collect();
+            let dp = DeploymentPlan { groups, n_tasks, expected_step_time: 0.0 };
+            let dispatcher = Dispatcher::new(self.cost, &dp);
+            let solved = dispatcher.dispatch(buckets, opts.inner_policy)?;
+            let mut total = solved.predicted_step_time;
+            let mut n_eval = 1.0;
+            for b in eval {
+                let Some(s) = dispatcher.dispatch(b, opts.inner_policy) else {
+                    return None; // plan can't even serve a sampled batch
+                };
+                total += s.predicted_step_time;
+                n_eval += 1.0;
+            }
+            Some((dp, total / n_eval))
+        })
+        .into_iter()
+        .flatten()
+        .collect();
+
+        let (mut best_plan, best_t) = evaluated.into_iter().min_by(|a, b| {
+            a.1.partial_cmp(&b.1).unwrap()
+        })?;
+        best_plan.expected_step_time = best_t;
+        best_plan.groups.sort_by_key(|&(c, _)| (c.n(), c.tp));
+        stats.solve_seconds = start.elapsed().as_secs_f64();
+        Some(best_plan)
+    }
+
+    /// The Task-Fused baseline: best *homogeneous* deployment (tuned over
+    /// candidate configs, like the paper tunes its baselines).
+    pub fn plan_homogeneous(
+        &self,
+        tasks: &TaskSet,
+        opts: &PlannerOptions,
+    ) -> Option<DeploymentPlan> {
+        let mut sampler = MultiTaskSampler::new(tasks, opts.seed);
+        let mut lengths = sampler.calibration_lengths(opts.calibration_multiple);
+        for t in &tasks.tasks {
+            lengths.push(t.lengths.max_len);
+        }
+        let calib = bucketize(&lengths, &opts.bucketing);
+        let longest = *calib.boundaries.last()? as u64;
+        let b_total = tasks.joint_batch() as f64;
+        let sample_total: u64 = calib.counts.iter().sum();
+        let expected: Vec<u64> = calib
+            .counts
+            .iter()
+            .map(|&c| ((c as f64 / sample_total.max(1) as f64) * b_total).ceil() as u64)
+            .collect();
+        let buckets = Buckets {
+            boundaries: calib.boundaries.clone(),
+            counts: expected,
+            padding_tokens: 0,
+        };
+
+        let candidates = self.feasible_configs(opts.allow_cross_server_tp);
+        let mut best: Option<(DeploymentPlan, f64)> = None;
+        for c in candidates {
+            if self.cost.max_seq_len(c) < longest {
+                continue; // homogeneous plan must fit the longest sequences
+            }
+            let count = self.cluster.n_gpus / c.n();
+            if count == 0 {
+                continue;
+            }
+            let dp = DeploymentPlan::homogeneous(c, count, tasks.len() as u32);
+            let dispatcher = Dispatcher::new(self.cost, &dp);
+            let Some(solved) = dispatcher.dispatch(&buckets, DispatchPolicy::Balanced)
+            else {
+                continue;
+            };
+            let t = solved.predicted_step_time;
+            if best.as_ref().map_or(true, |&(_, bt)| t < bt) {
+                let mut dp = dp;
+                dp.expected_step_time = t;
+                best = Some((dp, t));
+            }
+        }
+        best.map(|(p, _)| p)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelDesc;
+
+    fn setup_7b16() -> (CostModel, ClusterSpec) {
+        let cluster = ClusterSpec::a100_40g(16);
+        let cost = CostModel::calibrated(&ModelDesc::llama2_7b(), &cluster);
+        (cost, cluster)
+    }
+
+    #[test]
+    fn config_proposal_shrinks_candidates() {
+        let (cost, cluster) = setup_7b16();
+        let planner = Planner::new(&cost, &cluster);
+        let all = planner.feasible_configs(true);
+        let proposed = planner.propose_configs(&[512, 2048, 8192], true);
+        assert!(!proposed.is_empty());
+        assert!(proposed.len() < all.len(), "{proposed:?} vs {all:?}");
+        // the proposal must retain the ability to process the longest bucket
+        assert!(proposed.iter().any(|&c| cost.max_seq_len(c) >= 8192));
+    }
+
+    #[test]
+    fn plan_is_heterogeneous_under_skew() {
+        let (cost, cluster) = setup_7b16();
+        let planner = Planner::new(&cost, &cluster);
+        let tasks = TaskSet::paper_7b_subset();
+        let plan = planner.plan(&tasks, PlannerOptions::default()).unwrap();
+        assert!(plan.gpus_used() <= 16);
+        assert!(plan.gpus_used() >= 15, "maximal packing: {}", plan.gpus_used());
+        // heterogeneity: more than one configuration deployed
+        assert!(plan.groups.len() >= 2, "plan {}", plan.notation());
+        // must include something able to run the long tail
+        let longest_cap = plan
+            .groups
+            .iter()
+            .map(|&(c, _)| cost.max_seq_len(c))
+            .max()
+            .unwrap();
+        assert!(longest_cap >= 8192, "cap {longest_cap}");
+    }
+
+    #[test]
+    fn heterogeneous_beats_homogeneous() {
+        let (cost, cluster) = setup_7b16();
+        let planner = Planner::new(&cost, &cluster);
+        let tasks = TaskSet::paper_7b_subset();
+        let hetero = planner.plan(&tasks, PlannerOptions::default()).unwrap();
+        let homo = planner.plan_homogeneous(&tasks, &PlannerOptions::default()).unwrap();
+        assert!(
+            hetero.expected_step_time < homo.expected_step_time,
+            "hetero {} vs homo {}",
+            hetero.expected_step_time,
+            homo.expected_step_time
+        );
+        assert_eq!(homo.groups.len(), 1);
+    }
+
+    #[test]
+    fn pruning_preserves_solution_quality() {
+        let (cost, cluster) = setup_7b16();
+        let planner = Planner::new(&cost, &cluster);
+        let tasks = TaskSet::paper_7b_subset();
+        let mut opts_full = PlannerOptions::default();
+        opts_full.config_proposal = false;
+        opts_full.lower_bound_filter = false;
+        let full = planner.plan(&tasks, opts_full).unwrap();
+        let pruned = planner.plan(&tasks, PlannerOptions::default()).unwrap();
+        // paper: identical plans on 16-32 GPUs; we allow tiny tolerance
+        assert!(
+            pruned.expected_step_time <= full.expected_step_time * 1.02,
+            "pruned {} vs full {}",
+            pruned.expected_step_time,
+            full.expected_step_time
+        );
+    }
+
+    #[test]
+    fn stats_reflect_pruning() {
+        let (cost, cluster) = setup_7b16();
+        let planner = Planner::new(&cost, &cluster);
+        let tasks = TaskSet::paper_7b_subset();
+        let (_, s_pruned) = planner
+            .plan_with_stats(&tasks, PlannerOptions::default())
+            .unwrap();
+        let mut o = PlannerOptions::default();
+        o.lower_bound_filter = false;
+        let (_, s_nofilter) = planner.plan_with_stats(&tasks, o).unwrap();
+        assert!(s_pruned.n_plans_after_filter <= s_nofilter.n_plans_after_filter);
+        assert!(s_pruned.n_candidate_configs > 0);
+    }
+
+    #[test]
+    fn notation_format() {
+        let p = DeploymentPlan {
+            groups: vec![
+                (ParallelConfig::new(1, 1), 6),
+                (ParallelConfig::new(8, 1), 1),
+            ],
+            n_tasks: 6,
+            expected_step_time: 1.0,
+        };
+        assert_eq!(p.notation(), "<1,1>x6, <8,1>x1");
+        assert_eq!(p.gpus_used(), 14);
+        assert_eq!(p.n_replicas(), 7);
+    }
+}

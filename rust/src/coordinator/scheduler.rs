@@ -1,0 +1,271 @@
+//! The joint-FT step loop (simulation-clock execution).
+//!
+//! Each training step: draw the fused batch → dynamic-bucketize → solve the
+//! balanced dispatch → "execute" on the deployed replicas (exact cost-model
+//! times) → synchronous LoRA sync → account GPU seconds. This is the engine
+//! behind the end-to-end (Fig. 7), ablation (Fig. 8), case-study (Fig. 9)
+//! and scalability (Fig. 11) benches; the *real* PJRT-backed training loop
+//! in [`crate::train`] shares the same dispatch path but executes HLO.
+
+use crate::cluster::GpuLedger;
+use crate::config::TaskSet;
+use crate::coordinator::bucketing::{
+    bucketize, buckets_from_boundaries, padding_ratio, BucketingOptions, Buckets,
+};
+use crate::coordinator::dispatcher::{DispatchPlan, DispatchPolicy, Dispatcher};
+use crate::coordinator::planner::DeploymentPlan;
+use crate::costmodel::CostModel;
+use crate::data::MultiTaskSampler;
+use crate::metrics::JointFtReport;
+
+/// Scheduler knobs — the Figure 8 ablation axes.
+#[derive(Debug, Clone)]
+pub struct SchedulerOptions {
+    pub bucketing: BucketingOptions,
+    pub policy: DispatchPolicy,
+    /// Dynamic (per-batch DP) vs fixed equal-width boundaries.
+    pub dynamic_bucketing: bool,
+    pub seed: u64,
+}
+
+impl Default for SchedulerOptions {
+    fn default() -> Self {
+        Self {
+            bucketing: BucketingOptions::default(),
+            policy: DispatchPolicy::Balanced,
+            dynamic_bucketing: true,
+            seed: 7,
+        }
+    }
+}
+
+/// Outcome of one simulated step.
+#[derive(Debug, Clone)]
+pub struct StepReport {
+    pub step: u64,
+    pub step_time: f64,
+    pub gpu_seconds: f64,
+    pub utilization: f64,
+    pub padding_ratio: f64,
+    /// Dispatch-solver wall-clock (the overlappable per-step planning cost).
+    pub solve_seconds: f64,
+    pub dispatch: DispatchPlan,
+}
+
+/// Joint-FT scheduler over a fixed deployment plan.
+pub struct Scheduler<'a> {
+    cost: &'a CostModel,
+    plan: &'a DeploymentPlan,
+    sampler: MultiTaskSampler,
+    opts: SchedulerOptions,
+    ledger: GpuLedger,
+    reports: Vec<StepReport>,
+    /// Boundaries fixed at init (used when `dynamic_bucketing = false`):
+    /// derived once from a calibration sample, like the paper's fixed-
+    /// boundary ablation arm.
+    fixed: Vec<u32>,
+}
+
+impl<'a> Scheduler<'a> {
+    pub fn new(
+        cost: &'a CostModel,
+        plan: &'a DeploymentPlan,
+        tasks: &TaskSet,
+        opts: SchedulerOptions,
+    ) -> Self {
+        let mut calib_sampler = MultiTaskSampler::new(tasks, opts.seed ^ 0xCA11B);
+        let calib = calib_sampler.calibration_lengths(20);
+        let fixed = bucketize(&calib, &opts.bucketing).boundaries;
+        Self {
+            cost,
+            plan,
+            sampler: MultiTaskSampler::new(tasks, opts.seed),
+            opts,
+            ledger: GpuLedger::new(),
+            reports: Vec::new(),
+            fixed,
+        }
+    }
+
+    pub fn plan(&self) -> &DeploymentPlan {
+        self.plan
+    }
+
+    /// Bucketize one batch of lengths per the configured policy.
+    pub fn buckets_for(&self, lengths: &[u32]) -> Buckets {
+        if self.opts.dynamic_bucketing {
+            bucketize(lengths, &self.opts.bucketing)
+        } else {
+            // fixed boundaries may not cover an extreme sample: extend with
+            // the batch max if needed (the paper pads to the max boundary).
+            let max_len = lengths.iter().copied().max().unwrap_or(0);
+            if max_len > *self.fixed.last().unwrap_or(&0) {
+                let mut b = self.fixed.clone();
+                *b.last_mut().unwrap() = max_len;
+                buckets_from_boundaries(lengths, &b)
+            } else {
+                buckets_from_boundaries(lengths, &self.fixed)
+            }
+        }
+    }
+
+    /// Run one step; returns its report.
+    pub fn step(&mut self) -> Option<StepReport> {
+        let batch = self.sampler.next_batch();
+        let lengths = batch.lengths();
+        let buckets = self.buckets_for(&lengths);
+
+        let t0 = std::time::Instant::now();
+        let dispatcher = Dispatcher::new(self.cost, self.plan);
+        let dispatch = dispatcher.dispatch(&buckets, self.opts.policy)?;
+        let solve_seconds = t0.elapsed().as_secs_f64();
+
+        let acc = self.ledger.record_step(&dispatch.replica_times);
+        let report = StepReport {
+            step: self.ledger.steps,
+            step_time: dispatch.predicted_step_time,
+            gpu_seconds: self.plan.gpus_used() as f64 * dispatch.predicted_step_time,
+            utilization: acc.utilization,
+            padding_ratio: padding_ratio(&lengths, &buckets.boundaries),
+            solve_seconds,
+            dispatch,
+        };
+        self.reports.push(report.clone());
+        Some(report)
+    }
+
+    /// Run `n` steps and summarize.
+    pub fn run_steps(&mut self, n: usize) -> JointFtReport {
+        for _ in 0..n {
+            if self.step().is_none() {
+                break;
+            }
+        }
+        self.report()
+    }
+
+    /// Aggregate report over all executed steps.
+    pub fn report(&self) -> JointFtReport {
+        JointFtReport::from_steps(
+            &self.plan.notation(),
+            self.plan.gpus_used(),
+            self.reports.iter().map(|r| (r.step_time, r.gpu_seconds, r.utilization, r.padding_ratio, r.solve_seconds)),
+        )
+    }
+
+    pub fn steps(&self) -> &[StepReport] {
+        &self.reports
+    }
+}
+
+/// GPU seconds for running the tasks **sequentially** (Task-Sequential /
+/// LobRA-Sequential baselines): each task is planned and run on its own,
+/// and the totals are summed (paper Figure 4(a) accounting).
+pub fn sequential_gpu_seconds(
+    cost: &CostModel,
+    cluster: &crate::cluster::ClusterSpec,
+    tasks: &TaskSet,
+    heterogeneous: bool,
+    steps: usize,
+    opts: &SchedulerOptions,
+) -> (f64, Vec<(String, f64)>) {
+    use crate::coordinator::planner::{Planner, PlannerOptions};
+    let planner = Planner::new(cost, cluster);
+    let mut total = 0.0;
+    let mut per_task = Vec::new();
+    for t in &tasks.tasks {
+        let single = TaskSet::new(vec![t.clone()]);
+        let plan = if heterogeneous {
+            planner.plan(&single, PlannerOptions::default())
+        } else {
+            planner.plan_homogeneous(&single, &PlannerOptions::default())
+        };
+        let Some(plan) = plan else { continue };
+        let mut sched = Scheduler::new(cost, &plan, &single, opts.clone());
+        let rep = sched.run_steps(steps);
+        total += rep.gpu_seconds_per_step;
+        per_task.push((t.name.clone(), rep.gpu_seconds_per_step));
+    }
+    (total, per_task)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ClusterSpec;
+    use crate::config::ModelDesc;
+    use crate::coordinator::planner::{Planner, PlannerOptions};
+
+    fn world() -> (CostModel, ClusterSpec, TaskSet) {
+        let cluster = ClusterSpec::a100_40g(16);
+        let cost = CostModel::calibrated(&ModelDesc::llama2_7b(), &cluster);
+        let tasks = TaskSet::paper_7b_subset();
+        (cost, cluster, tasks)
+    }
+
+    #[test]
+    fn steps_execute_and_account() {
+        let (cost, cluster, tasks) = world();
+        let planner = Planner::new(&cost, &cluster);
+        let plan = planner.plan(&tasks, PlannerOptions::default()).unwrap();
+        let mut sched = Scheduler::new(&cost, &plan, &tasks, SchedulerOptions::default());
+        let rep = sched.run_steps(10);
+        assert_eq!(rep.steps, 10);
+        assert!(rep.gpu_seconds_per_step > 0.0);
+        assert!(rep.mean_step_time > 0.0);
+        assert!(rep.utilization > 0.3 && rep.utilization <= 1.0);
+    }
+
+    #[test]
+    fn balanced_beats_length_based_end_to_end() {
+        let (cost, cluster, tasks) = world();
+        let planner = Planner::new(&cost, &cluster);
+        let plan = planner.plan(&tasks, PlannerOptions::default()).unwrap();
+        let mut o_lb = SchedulerOptions::default();
+        o_lb.policy = DispatchPolicy::LengthBased;
+        let lb = Scheduler::new(&cost, &plan, &tasks, o_lb).run_steps(20);
+        let bal = Scheduler::new(&cost, &plan, &tasks, SchedulerOptions::default())
+            .run_steps(20);
+        assert!(
+            bal.gpu_seconds_per_step < lb.gpu_seconds_per_step,
+            "balanced {} vs length-based {}",
+            bal.gpu_seconds_per_step,
+            lb.gpu_seconds_per_step
+        );
+    }
+
+    #[test]
+    fn dynamic_bucketing_reduces_padding() {
+        let (cost, cluster, tasks) = world();
+        let planner = Planner::new(&cost, &cluster);
+        let plan = planner.plan(&tasks, PlannerOptions::default()).unwrap();
+        let mut o_fixed = SchedulerOptions::default();
+        o_fixed.dynamic_bucketing = false;
+        let fixed = Scheduler::new(&cost, &plan, &tasks, o_fixed).run_steps(15);
+        let dynamic =
+            Scheduler::new(&cost, &plan, &tasks, SchedulerOptions::default()).run_steps(15);
+        assert!(
+            dynamic.mean_padding_ratio < fixed.mean_padding_ratio,
+            "dyn {} vs fixed {}",
+            dynamic.mean_padding_ratio,
+            fixed.mean_padding_ratio
+        );
+    }
+
+    #[test]
+    fn solve_time_overlappable() {
+        // Paper Fig. 10: the per-step dispatch solve must be much cheaper
+        // than the step itself (so it overlaps with training).
+        let (cost, cluster, tasks) = world();
+        let planner = Planner::new(&cost, &cluster);
+        let plan = planner.plan(&tasks, PlannerOptions::default()).unwrap();
+        let mut sched = Scheduler::new(&cost, &plan, &tasks, SchedulerOptions::default());
+        let rep = sched.run_steps(10);
+        assert!(
+            rep.mean_solve_seconds < rep.mean_step_time,
+            "solve {} vs step {}",
+            rep.mean_solve_seconds,
+            rep.mean_step_time
+        );
+    }
+}

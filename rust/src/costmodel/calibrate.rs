@@ -1,0 +1,230 @@
+//! Profiling-based cost-model calibration (paper Appendix D methodology).
+//!
+//! The paper builds `t(b, s)` by offline-profiling real training steps and
+//! fitting a function linear in `b` and quadratic in `s`:
+//!
+//! ```text
+//! t(b, s) = β₀ + β₁·b·s + β₂·b·s²
+//! ```
+//!
+//! (`β₁` captures the per-token dense work, `β₂` the attention term, `β₀`
+//! fixed launch overhead.) This module provides the least-squares fit and a
+//! [`ProfiledCost`] table the trainer can build from *real* PJRT step
+//! measurements (`examples/e2e_train` / `Trainer`), closing the loop
+//! between the L3 planner and the actual L1/L2 artifacts.
+
+/// One profiled observation: a microbatch of `b` sequences × `s` tokens
+/// took `seconds`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Observation {
+    pub b: u64,
+    pub s: u64,
+    pub seconds: f64,
+}
+
+/// Fitted per-microbatch time model `t(b,s) = β₀ + β₁·b·s + β₂·b·s²`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FittedCost {
+    pub beta0: f64,
+    pub beta1: f64,
+    pub beta2: f64,
+}
+
+impl FittedCost {
+    /// Predicted microbatch seconds.
+    pub fn predict(&self, b: u64, s: u64) -> f64 {
+        let bs = (b * s) as f64;
+        self.beta0 + self.beta1 * bs + self.beta2 * bs * s as f64
+    }
+
+    /// Relative RMS error over a set of observations.
+    pub fn rms_rel_error(&self, obs: &[Observation]) -> f64 {
+        if obs.is_empty() {
+            return 0.0;
+        }
+        let se: f64 = obs
+            .iter()
+            .map(|o| {
+                let p = self.predict(o.b, o.s);
+                let r = (p - o.seconds) / o.seconds.max(1e-12);
+                r * r
+            })
+            .sum();
+        (se / obs.len() as f64).sqrt()
+    }
+}
+
+/// Least-squares fit of the 3-parameter model via the normal equations
+/// (the design matrix is tiny: 3 columns).
+pub fn fit(obs: &[Observation]) -> Option<FittedCost> {
+    if obs.len() < 3 {
+        return None;
+    }
+    // columns: [1, b·s, b·s²]
+    let rows: Vec<[f64; 3]> = obs
+        .iter()
+        .map(|o| {
+            let bs = (o.b * o.s) as f64;
+            [1.0, bs, bs * o.s as f64]
+        })
+        .collect();
+    // AᵀA (3x3) and Aᵀy
+    let mut ata = [[0.0f64; 3]; 3];
+    let mut aty = [0.0f64; 3];
+    for (row, o) in rows.iter().zip(obs) {
+        for i in 0..3 {
+            for j in 0..3 {
+                ata[i][j] += row[i] * row[j];
+            }
+            aty[i] += row[i] * o.seconds;
+        }
+    }
+    let beta = solve3(ata, aty)?;
+    Some(FittedCost { beta0: beta[0].max(0.0), beta1: beta[1], beta2: beta[2] })
+}
+
+/// Solve a 3×3 linear system by Gaussian elimination with partial pivoting.
+fn solve3(mut a: [[f64; 3]; 3], mut y: [f64; 3]) -> Option<[f64; 3]> {
+    for col in 0..3 {
+        // pivot
+        let mut piv = col;
+        for r in col + 1..3 {
+            if a[r][col].abs() > a[piv][col].abs() {
+                piv = r;
+            }
+        }
+        if a[piv][col].abs() < 1e-18 {
+            return None;
+        }
+        a.swap(col, piv);
+        y.swap(col, piv);
+        // eliminate
+        for r in col + 1..3 {
+            let f = a[r][col] / a[col][col];
+            for c in col..3 {
+                a[r][c] -= f * a[col][c];
+            }
+            y[r] -= f * y[col];
+        }
+    }
+    // back-substitute
+    let mut x = [0.0f64; 3];
+    for col in (0..3).rev() {
+        let mut s = y[col];
+        for c in col + 1..3 {
+            s -= a[col][c] * x[c];
+        }
+        x[col] = s / a[col][col];
+    }
+    Some(x)
+}
+
+/// A profiled per-microbatch cost table over a set of discrete shapes —
+/// the live analogue of [`super::CostModel::t_microbatch`] for the real
+/// (CPU-PJRT) executor. Built by timing the engine; consumed by the
+/// trainer's virtual clock and the planner when planning for the local
+/// runtime.
+#[derive(Debug, Clone, Default)]
+pub struct ProfiledCost {
+    pub observations: Vec<Observation>,
+    pub fitted: Option<FittedCost>,
+}
+
+impl ProfiledCost {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, b: u64, s: u64, seconds: f64) {
+        self.observations.push(Observation { b, s, seconds });
+        if self.observations.len() >= 3 {
+            self.fitted = fit(&self.observations);
+        }
+    }
+
+    /// Predict microbatch seconds; falls back to the nearest observation
+    /// when the fit is not available yet.
+    pub fn predict(&self, b: u64, s: u64) -> Option<f64> {
+        if let Some(f) = self.fitted {
+            return Some(f.predict(b, s));
+        }
+        self.observations
+            .iter()
+            .min_by_key(|o| (o.b as i64 - b as i64).abs() + (o.s as i64 - s as i64).abs())
+            .map(|o| o.seconds)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn synth(beta: FittedCost, shapes: &[(u64, u64)]) -> Vec<Observation> {
+        shapes
+            .iter()
+            .map(|&(b, s)| Observation { b, s, seconds: beta.predict(b, s) })
+            .collect()
+    }
+
+    #[test]
+    fn fit_recovers_exact_model() {
+        let truth = FittedCost { beta0: 0.002, beta1: 3e-6, beta2: 2e-9 };
+        let obs = synth(truth, &[(16, 64), (8, 128), (4, 256), (2, 512), (1, 1024), (32, 64)]);
+        let f = fit(&obs).unwrap();
+        assert!((f.beta0 - truth.beta0).abs() < 1e-6, "{f:?}");
+        assert!((f.beta1 - truth.beta1).abs() / truth.beta1 < 1e-6);
+        assert!((f.beta2 - truth.beta2).abs() / truth.beta2 < 1e-6);
+        assert!(f.rms_rel_error(&obs) < 1e-9);
+    }
+
+    #[test]
+    fn fit_tolerates_noise() {
+        let truth = FittedCost { beta0: 0.01, beta1: 5e-6, beta2: 1e-9 };
+        let mut rng = crate::util::Rng::new(3);
+        let obs: Vec<Observation> = [(16u64, 64u64), (8, 128), (4, 256), (2, 512), (8, 64), (4, 128), (2, 256), (1, 512)]
+            .iter()
+            .map(|&(b, s)| Observation {
+                b,
+                s,
+                seconds: truth.predict(b, s) * (1.0 + 0.05 * rng.normal()),
+            })
+            .collect();
+        let f = fit(&obs).unwrap();
+        assert!(f.rms_rel_error(&obs) < 0.15);
+        // prediction at an unseen shape within 20%
+        let pred = f.predict(3, 384);
+        let want = truth.predict(3, 384);
+        assert!((pred - want).abs() / want < 0.2, "pred {pred} want {want}");
+    }
+
+    #[test]
+    fn underdetermined_returns_none() {
+        assert!(fit(&[Observation { b: 1, s: 64, seconds: 0.1 }]).is_none());
+        // colinear observations (same b·s and b·s²) are singular
+        let o = Observation { b: 2, s: 128, seconds: 0.5 };
+        assert!(fit(&[o, o, o]).is_none());
+    }
+
+    #[test]
+    fn profiled_table_lifecycle() {
+        let mut p = ProfiledCost::new();
+        assert!(p.predict(4, 256).is_none());
+        p.record(16, 64, 0.5);
+        assert!(p.predict(4, 256).is_some()); // nearest fallback
+        p.record(8, 128, 0.55);
+        p.record(4, 256, 0.62);
+        p.record(2, 512, 0.8);
+        p.record(16, 128, 1.02); // break b·s colinearity
+        assert!(p.fitted.is_some());
+        let pred = p.predict(4, 256).unwrap();
+        assert!(pred.is_finite() && pred > 0.0, "{pred}");
+        assert!((pred - 0.62).abs() < 0.4, "{pred}");
+    }
+
+    #[test]
+    fn quadratic_term_matters_for_long_sequences() {
+        let f = FittedCost { beta0: 0.0, beta1: 1e-6, beta2: 1e-9 };
+        // same token budget, longer sequences cost more (attention term)
+        assert!(f.predict(1, 4096) > f.predict(16, 256));
+    }
+}

@@ -1,0 +1,337 @@
+//! Cost model of FT replicas (paper §2.2 + Appendix D).
+//!
+//! Everything LobRA decides — which parallel configurations to deploy, how
+//! many replicas of each, and where each training sequence goes — is driven
+//! by two functions of a parallel configuration `S = ⟨TP, PP⟩`:
+//!
+//! * `max_chunk_tokens(S)` — the memory model: how many (padded) tokens one
+//!   chunk (micro-batch) may hold without OOM. Memory is linear in the
+//!   summed chunk length (paper refs [8, 9, 73]), so this is a single
+//!   capacity number per configuration.
+//! * `replica_time({d_j}; S)` — Eq. 10 (no PP) / Eq. 12 (variable-length
+//!   1F1B PP): the per-step running time of one replica given `d_j`
+//!   sequences in bucket `j`.
+//!
+//! Instead of profiling real A100s, the per-microbatch time `t(b, s)` is
+//! built from first principles (FLOP count over MXU rate + Megatron-style
+//! TP all-reduce volume + PP p2p), with constants calibrated so the
+//! resulting throughput table reproduces the *partial order* of the paper's
+//! Table 3 (Observation 1) — see `tests` and `rust/benches/table3_throughput.rs`.
+
+pub mod calibrate;
+mod replica;
+mod timing;
+
+pub use calibrate::{FittedCost, Observation, ProfiledCost};
+pub use replica::{BucketLoad, ChunkPlan};
+pub use timing::MicrobatchTime;
+
+use crate::cluster::{ClusterSpec, CommModel};
+use crate::config::{ModelDesc, ParallelConfig};
+
+/// Fixed per-GPU memory overhead (runtime, fragmentation, comm buffers), GiB.
+const MEM_OVERHEAD_GIB: f64 = 4.0;
+/// Activation bytes per token ≈ C_ACT · L · d · bytes; C_ACT calibrated so a
+/// 7B model on one A100-40G supports ≈2K tokens (paper Figure 2 annotation).
+const C_ACT: f64 = 40.0;
+/// Fixed overhead per chunk (kernel launches, optimizer step slice), sec.
+const CHUNK_OVERHEAD: f64 = 2e-3;
+/// Fixed per-step overhead per replica (data loading, bookkeeping), sec.
+const STEP_OVERHEAD: f64 = 10e-3;
+
+/// Profiled-cost oracle for one (model, cluster) pair.
+#[derive(Debug, Clone)]
+pub struct CostModel {
+    pub model: ModelDesc,
+    pub cluster: ClusterSpec,
+    comm: CommModel,
+}
+
+impl CostModel {
+    /// Build the calibrated cost model (paper: offline profiling; here:
+    /// analytic model with calibrated constants, see module docs).
+    pub fn calibrated(model: &ModelDesc, cluster: &ClusterSpec) -> Self {
+        Self {
+            model: model.clone(),
+            cluster: cluster.clone(),
+            comm: CommModel::new(cluster),
+        }
+    }
+
+    pub fn comm(&self) -> &CommModel {
+        &self.comm
+    }
+
+    // --- memory model -----------------------------------------------------------
+
+    /// Activation bytes per token per GPU under `cfg`.
+    ///
+    /// TP shards activations; PP does *not* reduce the per-GPU activation
+    /// footprint because 1F1B keeps ~`pp` microbatches in flight (each stage
+    /// holds `L/pp` layers × `pp` live chunks).
+    fn act_bytes_per_token(&self, cfg: ParallelConfig) -> f64 {
+        C_ACT * self.model.n_layers as f64 * self.model.d_model as f64
+            * self.model.weight_bytes as f64
+            / cfg.tp as f64
+    }
+
+    /// Max summed tokens per chunk (micro-batch) without OOM; 0 = infeasible.
+    pub fn max_chunk_tokens(&self, cfg: ParallelConfig) -> u64 {
+        let mem = self.cluster.gpu_mem_gib * (1u64 << 30) as f64;
+        let weights = self.model.weight_bytes_per_gpu(cfg.tp, cfg.pp) as f64;
+        let free = mem - weights - MEM_OVERHEAD_GIB * (1u64 << 30) as f64;
+        if free <= 0.0 {
+            return 0;
+        }
+        (free / self.act_bytes_per_token(cfg)) as u64
+    }
+
+    /// Longest single sequence `cfg` can process (one sequence per chunk).
+    pub fn max_seq_len(&self, cfg: ParallelConfig) -> u64 {
+        self.max_chunk_tokens(cfg)
+    }
+
+    /// Whether `cfg` can hold the model at all on this cluster.
+    pub fn feasible(&self, cfg: ParallelConfig) -> bool {
+        cfg.n() <= self.cluster.n_gpus && self.max_chunk_tokens(cfg) >= 64
+    }
+
+    // --- timing model -----------------------------------------------------------
+
+    /// Fwd+bwd FLOPs for a microbatch of `b` sequences of padded length `s`.
+    fn flops(&self, b: u64, s: u64) -> f64 {
+        let dense = 6.0 * (self.model.params - self.model.vocab * self.model.d_model) as f64
+            * (b * s) as f64;
+        let attn = 12.0
+            * self.model.n_layers as f64
+            * self.model.d_model as f64
+            * b as f64
+            * (s as f64) * (s as f64);
+        // LM head (often dominant for small models).
+        let head = 6.0 * (self.model.vocab * self.model.d_model) as f64 * (b * s) as f64;
+        dense + attn + head
+    }
+
+    /// Time of one chunk through one pipeline *stage* (the `t(b,s)` of
+    /// Eq. 11/12): compute + TP collectives + PP p2p, per stage.
+    pub fn t_microbatch(&self, cfg: ParallelConfig, b: u64, s: u64) -> f64 {
+        if b == 0 {
+            return 0.0;
+        }
+        let compute = self.flops(b, s)
+            / cfg.pp as f64
+            / (cfg.tp as f64 * self.cluster.effective_flops());
+        // Megatron TP: ~8 collectives of b·s·d activation bytes per layer
+        // (2 fwd + 2 bwd on attention + MLP, doubled by activation
+        // recomputation in the backward), over the stage's L/pp layers.
+        let tp_comm = if cfg.tp > 1 {
+            let bytes = (b * s * self.model.d_model * self.model.weight_bytes) as f64;
+            let per_layer = 8.0 * self.comm.tp_allreduce(bytes, cfg.tp);
+            per_layer * self.model.n_layers as f64 / cfg.pp as f64
+        } else {
+            0.0
+        };
+        // PP p2p of boundary activations (fwd + bwd).
+        let pp_comm = if cfg.pp > 1 {
+            let bytes = (b * s * self.model.d_model * self.model.weight_bytes) as f64
+                / cfg.tp as f64;
+            2.0 * self.comm.pp_p2p(bytes, cfg.tp)
+        } else {
+            0.0
+        };
+        compute + tp_comm + pp_comm + CHUNK_OVERHEAD
+    }
+
+    /// Throughput in tokens / GPU / second for chunks of shape (b, s) — the
+    /// quantity tabulated in the paper's Table 3.
+    pub fn throughput(&self, cfg: ParallelConfig, b: u64, s: u64) -> f64 {
+        let stage_t = self.t_microbatch(cfg, b, s);
+        // Steady-state pipeline: one chunk completes per stage time.
+        (b * s) as f64 / (stage_t * cfg.n() as f64)
+    }
+
+    /// Per-sequence marginal cost of a bucket-`j` sequence (padded to `s_j`)
+    /// on `cfg` — the linear coefficient `c_{ij}` the dispatch ILP uses.
+    pub fn per_seq_cost(&self, cfg: ParallelConfig, s: u64) -> f64 {
+        let cap = self.max_chunk_tokens(cfg);
+        if cap < s {
+            return f64::INFINITY;
+        }
+        let b = (cap / s).max(1);
+        self.t_microbatch(cfg, b, s) / b as f64
+    }
+
+    /// Chunking of `d` sequences of padded length `s`: full chunks of
+    /// `b = ⌊cap/s⌋` plus a remainder chunk (Eq. 10's m·t(b,s) + t(r,s)).
+    pub fn chunks_for(&self, cfg: ParallelConfig, d: u64, s: u64) -> ChunkPlan {
+        let cap = self.max_chunk_tokens(cfg);
+        let b = (cap / s.max(1)).max(1);
+        ChunkPlan { per_chunk: b, full_chunks: d / b, remainder: d % b }
+    }
+
+    /// Eq. 10 / Eq. 12: replica step time given per-bucket loads.
+    ///
+    /// `loads` = (d_j, s_j) pairs: d_j sequences padded to s_j. Compute time
+    /// sums all chunks across buckets; with PP, the bubble adds
+    /// `(pp−1) × max_j t(chunk_j)` (descending-time chunk ordering — the
+    /// paper's phased critical-path estimate).
+    pub fn replica_time(&self, cfg: ParallelConfig, loads: &[BucketLoad]) -> f64 {
+        let mut compute = 0.0;
+        let mut max_chunk_t: f64 = 0.0;
+        let mut any = false;
+        for &BucketLoad { count: d, padded_len: s } in loads {
+            if d == 0 {
+                continue;
+            }
+            any = true;
+            let plan = self.chunks_for(cfg, d, s);
+            let t_full = self.t_microbatch(cfg, plan.per_chunk, s);
+            compute += plan.full_chunks as f64 * t_full;
+            if plan.full_chunks > 0 {
+                max_chunk_t = max_chunk_t.max(t_full);
+            }
+            if plan.remainder > 0 {
+                let t_rem = self.t_microbatch(cfg, plan.remainder, s);
+                compute += t_rem;
+                max_chunk_t = max_chunk_t.max(t_rem);
+            }
+        }
+        if !any {
+            return 0.0;
+        }
+        let bubble = (cfg.pp as f64 - 1.0) * max_chunk_t;
+        compute + bubble + STEP_OVERHEAD
+    }
+
+    /// Per-step LoRA gradient synchronization across `n_replicas` replicas.
+    pub fn sync_time(&self, n_replicas: u32, n_tasks: u32) -> f64 {
+        if n_replicas <= 1 {
+            return 0.0;
+        }
+        let lora_bytes =
+            (self.model.lora_params_per_task() * n_tasks as u64 * 4) as f64;
+        self.comm.dp_allreduce(lora_bytes, n_replicas)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cm7b_16() -> CostModel {
+        CostModel::calibrated(&ModelDesc::llama2_7b(), &ClusterSpec::a100_40g(16))
+    }
+
+    fn cfg(tp: u32, pp: u32) -> ParallelConfig {
+        ParallelConfig::new(tp, pp)
+    }
+
+    #[test]
+    fn figure2_memory_annotation() {
+        // Fig. 2: 7B on A100-40G needs 1/2/4/8 GPUs for ≈2K/4K/8K/16K.
+        let cm = cm7b_16();
+        let m1 = cm.max_seq_len(cfg(1, 1));
+        assert!((1_500..3_500).contains(&m1), "1 GPU: {m1}");
+        let m2 = cm.max_seq_len(cfg(2, 1));
+        assert!((3_000..7_000).contains(&m2), "2 GPUs: {m2}");
+        let m8 = cm.max_seq_len(cfg(8, 1));
+        assert!(m8 >= 14_000, "8 GPUs: {m8}");
+    }
+
+    #[test]
+    fn pp_does_not_extend_max_length_like_tp() {
+        // Table 3: ⟨1,8⟩ OOMs at 8K while ⟨8,1⟩ reaches 16K.
+        let cm = cm7b_16();
+        assert!(cm.max_seq_len(cfg(8, 1)) > 2 * cm.max_seq_len(cfg(1, 8)));
+    }
+
+    #[test]
+    fn table3_partial_order() {
+        // At n=8 GPUs and 2K: thrpt ⟨1,8⟩ > ⟨2,4⟩ > ⟨4,2⟩ > ⟨8,1⟩.
+        let cm = cm7b_16();
+        let t = |c: ParallelConfig| cm.throughput(c, 4, 2048);
+        assert!(t(cfg(1, 8)) > t(cfg(2, 4)), "1,8 vs 2,4");
+        assert!(t(cfg(2, 4)) > t(cfg(4, 2)), "2,4 vs 4,2");
+        assert!(t(cfg(4, 2)) > t(cfg(8, 1)), "4,2 vs 8,1");
+        // Fewer GPUs per replica is more efficient: ⟨1,1⟩ beats all n=8.
+        assert!(cm.throughput(cfg(1, 1), 1, 2048) > t(cfg(1, 8)));
+    }
+
+    #[test]
+    fn observation1_partial_order_stability() {
+        // Obs. 1: if S_a beats S_b at s0, it also wins at shorter s with
+        // b·s = s0 (same token budget).
+        let cm = cm7b_16();
+        let pairs = [(cfg(1, 8), cfg(8, 1)), (cfg(2, 4), cfg(4, 2))];
+        for (a, b) in pairs {
+            let wins_at = |s: u64, bsz: u64| {
+                cm.throughput(a, bsz, s) > cm.throughput(b, bsz, s)
+            };
+            assert!(wins_at(8192, 1) || !wins_at(2048, 4) || true);
+            // explicit: winner at 8K stays winner at 2K with 4x batch
+            if wins_at(8192, 1) {
+                assert!(wins_at(2048, 4), "{a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn replica_time_monotone_in_load() {
+        let cm = cm7b_16();
+        let c = cfg(2, 1);
+        let t1 = cm.replica_time(c, &[BucketLoad { count: 16, padded_len: 512 }]);
+        let t2 = cm.replica_time(c, &[BucketLoad { count: 32, padded_len: 512 }]);
+        assert!(t2 > t1);
+    }
+
+    #[test]
+    fn replica_time_empty_is_zero() {
+        let cm = cm7b_16();
+        assert_eq!(cm.replica_time(cfg(1, 1), &[]), 0.0);
+        assert_eq!(
+            cm.replica_time(cfg(1, 1), &[BucketLoad { count: 0, padded_len: 512 }]),
+            0.0
+        );
+    }
+
+    #[test]
+    fn pipeline_bubble_increases_time() {
+        let cm = cm7b_16();
+        let loads = [BucketLoad { count: 8, padded_len: 1024 }];
+        // Same GPUs, more stages => bubble overhead exists.
+        let t_pp = cm.replica_time(cfg(1, 4), &loads);
+        let compute_only: f64 = {
+            let plan = cm.chunks_for(cfg(1, 4), 8, 1024);
+            plan.full_chunks as f64 * cm.t_microbatch(cfg(1, 4), plan.per_chunk, 1024)
+                + if plan.remainder > 0 {
+                    cm.t_microbatch(cfg(1, 4), plan.remainder, 1024)
+                } else {
+                    0.0
+                }
+        };
+        assert!(t_pp > compute_only);
+    }
+
+    #[test]
+    fn per_seq_cost_infinite_when_oom() {
+        let cm = cm7b_16();
+        assert!(cm.per_seq_cost(cfg(1, 1), 16384).is_infinite());
+        assert!(cm.per_seq_cost(cfg(8, 1), 16384).is_finite());
+    }
+
+    #[test]
+    fn infeasible_configs_detected() {
+        // 70B on A100-40G: a single GPU cannot hold the weights.
+        let cm = CostModel::calibrated(&ModelDesc::llama2_70b(), &ClusterSpec::a100_40g(16));
+        assert!(!cm.feasible(cfg(1, 1)));
+        let cm64 = CostModel::calibrated(&ModelDesc::llama2_70b(), &ClusterSpec::a800_80g(64));
+        assert!(cm64.feasible(cfg(8, 1)));
+    }
+
+    #[test]
+    fn sync_time_small_but_positive() {
+        let cm = cm7b_16();
+        let s = cm.sync_time(8, 6);
+        assert!(s > 0.0 && s < 0.5, "{s}");
+    }
+}

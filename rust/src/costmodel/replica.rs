@@ -1,0 +1,45 @@
+//! Replica-level load descriptions shared by the cost model and solver.
+
+/// `d_j` sequences padded to `s_j` tokens, bound for one replica.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BucketLoad {
+    pub count: u64,
+    pub padded_len: u64,
+}
+
+/// How `d` sequences of one padded length chunk onto a replica
+/// (Eq. 10's `d = m·b + r` decomposition).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ChunkPlan {
+    /// Sequences per full chunk (`b = ⌊M/s⌋`).
+    pub per_chunk: u64,
+    /// Number of full chunks (`m`).
+    pub full_chunks: u64,
+    /// Remainder chunk size (`r`, 0 = none).
+    pub remainder: u64,
+}
+
+impl ChunkPlan {
+    pub fn n_chunks(&self) -> u64 {
+        self.full_chunks + (self.remainder > 0) as u64
+    }
+
+    pub fn total(&self) -> u64 {
+        self.full_chunks * self.per_chunk + self.remainder
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunk_plan_arithmetic() {
+        let p = ChunkPlan { per_chunk: 8, full_chunks: 3, remainder: 5 };
+        assert_eq!(p.n_chunks(), 4);
+        assert_eq!(p.total(), 29);
+        let q = ChunkPlan { per_chunk: 8, full_chunks: 3, remainder: 0 };
+        assert_eq!(q.n_chunks(), 3);
+        assert_eq!(q.total(), 24);
+    }
+}

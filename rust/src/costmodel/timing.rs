@@ -1,0 +1,39 @@
+//! Decomposed microbatch timing (exposed for benches / the Table 3 study).
+
+/// Breakdown of one chunk's stage time — useful for the ablation benches
+//  and for explaining *why* a configuration wins at a sequence length.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MicrobatchTime {
+    pub compute: f64,
+    pub tp_comm: f64,
+    pub pp_comm: f64,
+    pub overhead: f64,
+}
+
+impl MicrobatchTime {
+    pub fn total(&self) -> f64 {
+        self.compute + self.tp_comm + self.pp_comm + self.overhead
+    }
+
+    /// Fraction of the stage time spent communicating.
+    pub fn comm_fraction(&self) -> f64 {
+        let t = self.total();
+        if t > 0.0 {
+            (self.tp_comm + self.pp_comm) / t
+        } else {
+            0.0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn totals() {
+        let m = MicrobatchTime { compute: 1.0, tp_comm: 0.5, pp_comm: 0.25, overhead: 0.25 };
+        assert_eq!(m.total(), 2.0);
+        assert!((m.comm_fraction() - 0.375).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,180 @@
+//! Sequence-length distributions: lognormal mixtures fitted to summary
+//! moments (mean, skewness) with truncation to a practical length range.
+
+use crate::util::Rng;
+
+
+/// A truncated two-component lognormal mixture over sequence lengths.
+///
+/// Component 0 is the body; the optional component 1 is a heavy tail used
+/// for datasets whose kurtosis far exceeds what a single lognormal with the
+/// right skew can produce (e.g. XSum: skew 7.49, kurtosis 371.8).
+#[derive(Debug, Clone)]
+pub struct LengthDistribution {
+    pub mu: f64,
+    pub sigma: f64,
+    /// Tail component weight in [0, 1).
+    pub tail_weight: f64,
+    pub tail_mu: f64,
+    pub tail_sigma: f64,
+    pub min_len: u32,
+    pub max_len: u32,
+}
+
+impl LengthDistribution {
+    /// Plain truncated lognormal.
+    pub fn lognormal(mu: f64, sigma: f64, min_len: u32, max_len: u32) -> Self {
+        Self {
+            mu,
+            sigma,
+            tail_weight: 0.0,
+            tail_mu: mu,
+            tail_sigma: sigma,
+            min_len,
+            max_len,
+        }
+    }
+
+    /// Fit a single lognormal to (mean, skewness) via the standard relations
+    ///
+    ///   skew = (e^{σ²} + 2) √(e^{σ²} − 1),   mean = e^{μ + σ²/2}
+    ///
+    /// solving the skew equation for σ by bisection.
+    pub fn fit(mean: f64, skewness: f64, min_len: u32, max_len: u32) -> Self {
+        let skew = skewness.max(0.05);
+        // bisect sigma in (0.01, 3.5]
+        let skew_of = |s: f64| {
+            let w = (s * s).exp();
+            (w + 2.0) * (w - 1.0).sqrt()
+        };
+        let (mut lo, mut hi) = (0.01_f64, 3.5_f64);
+        for _ in 0..80 {
+            let mid = 0.5 * (lo + hi);
+            if skew_of(mid) < skew {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+        let sigma = 0.5 * (lo + hi);
+        let mu = mean.ln() - sigma * sigma / 2.0;
+        Self::lognormal(mu, sigma, min_len, max_len)
+    }
+
+    /// Fit with an explicit heavy tail: `tail_weight` of the mass comes from
+    /// a second lognormal centered `tail_ratio`× above the body mean.
+    pub fn fit_heavy_tail(
+        mean: f64,
+        skewness: f64,
+        tail_weight: f64,
+        tail_ratio: f64,
+        min_len: u32,
+        max_len: u32,
+    ) -> Self {
+        assert!((0.0..1.0).contains(&tail_weight));
+        // Body mean adjusted so the mixture hits the target mean.
+        let tail_mean = mean * tail_ratio;
+        let body_mean =
+            (mean - tail_weight * tail_mean) / (1.0 - tail_weight);
+        let body = Self::fit(body_mean.max(8.0), skewness, min_len, max_len);
+        let tail_sigma = 0.6;
+        let tail_mu = tail_mean.ln() - tail_sigma * tail_sigma / 2.0;
+        Self {
+            mu: body.mu,
+            sigma: body.sigma,
+            tail_weight,
+            tail_mu,
+            tail_sigma,
+            min_len,
+            max_len,
+        }
+    }
+
+    /// Draw one sequence length.
+    pub fn sample(&self, rng: &mut Rng) -> u32 {
+        let x = if self.tail_weight > 0.0 && rng.f64() < self.tail_weight {
+            rng.lognormal(self.tail_mu, self.tail_sigma)
+        } else {
+            rng.lognormal(self.mu, self.sigma)
+        };
+        (x.round() as u32).clamp(self.min_len, self.max_len)
+    }
+
+    /// Draw `n` lengths.
+    pub fn sample_n(&self, rng: &mut Rng, n: usize) -> Vec<u32> {
+        (0..n).map(|_| self.sample(rng)).collect()
+    }
+
+    /// Analytic (untruncated) mean of the mixture — used for sanity tests.
+    pub fn analytic_mean(&self) -> f64 {
+        let body = (self.mu + self.sigma * self.sigma / 2.0).exp();
+        let tail = (self.tail_mu + self.tail_sigma * self.tail_sigma / 2.0).exp();
+        (1.0 - self.tail_weight) * body + self.tail_weight * tail
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::moments;
+
+    fn sample_f64(d: &LengthDistribution, n: usize, seed: u64) -> Vec<f64> {
+        let mut rng = Rng::new(seed);
+        d.sample_n(&mut rng, n).into_iter().map(|x| x as f64).collect()
+    }
+
+    #[test]
+    fn fit_recovers_mean() {
+        for (mean, skew) in [(207.0, 7.11), (663.0, 0.79), (3903.0, 0.85)] {
+            let d = LengthDistribution::fit(mean, skew, 16, 32768);
+            let xs = sample_f64(&d, 100_000, 1);
+            let m = moments(&xs);
+            // truncation + heavy tails: allow 15%
+            assert!(
+                (m.mean - mean).abs() / mean < 0.15,
+                "mean {} target {mean}",
+                m.mean
+            );
+        }
+    }
+
+    #[test]
+    fn fit_recovers_skew_direction() {
+        let high = LengthDistribution::fit(500.0, 7.0, 16, 32768);
+        let low = LengthDistribution::fit(500.0, 0.8, 16, 32768);
+        let mh = moments(&sample_f64(&high, 200_000, 2));
+        let ml = moments(&sample_f64(&low, 200_000, 3));
+        assert!(mh.skewness > ml.skewness + 1.0, "{} vs {}", mh.skewness, ml.skewness);
+        assert!(ml.skewness > 0.2 && ml.skewness < 2.5, "{}", ml.skewness);
+    }
+
+    #[test]
+    fn bounds_respected() {
+        let d = LengthDistribution::fit(100.0, 5.0, 32, 1024);
+        let mut rng = Rng::new(4);
+        for _ in 0..10_000 {
+            let x = d.sample(&mut rng);
+            assert!((32..=1024).contains(&x));
+        }
+    }
+
+    #[test]
+    fn heavy_tail_raises_kurtosis() {
+        let plain = LengthDistribution::fit(526.0, 2.0, 16, 32768);
+        let heavy =
+            LengthDistribution::fit_heavy_tail(526.0, 2.0, 0.02, 8.0, 16, 32768);
+        let kp = moments(&sample_f64(&plain, 200_000, 5)).kurtosis;
+        let kh = moments(&sample_f64(&heavy, 200_000, 6)).kurtosis;
+        assert!(kh > kp, "heavy {kh} <= plain {kp}");
+    }
+
+    #[test]
+    fn most_sequences_short_skewness_property() {
+        // Paper §3: "most sequences are relatively short" — median < mean.
+        let d = LengthDistribution::fit(947.0, 0.89, 16, 32768);
+        let xs = sample_f64(&d, 50_000, 7);
+        let m = moments(&xs);
+        let med = crate::util::stats::quantile(&xs, 0.5);
+        assert!(med < m.mean, "median {med} mean {}", m.mean);
+    }
+}

@@ -1,0 +1,21 @@
+//! Dataset substrate: synthetic sequence-length distributions matching the
+//! paper's Table 4 profiles, and the fused multi-task batch sampler.
+//!
+//! The paper's dispatch/bucketing behaviour depends only on the *length
+//! distribution* of each task's data (plus batch size); Table 4 pins those
+//! down with mean / skewness / kurtosis per dataset, and Figure 2 shows the
+//! resulting CDFs. `LengthDistribution` fits a (mixture of) lognormal(s) to
+//! those moments, which reproduces both the skew ("most sequences short")
+//! and the heavy tail that drives LobRA's whole design.
+
+mod corpus;
+mod datasets;
+mod distribution;
+pub mod packing;
+mod sampler;
+
+pub use corpus::{SyntheticCorpus, TaskCorpusSpec};
+pub use datasets::DatasetProfile;
+pub use distribution::LengthDistribution;
+pub use packing::{pack_ffd, packing_efficiency, PackedChunk};
+pub use sampler::{FusedBatch, MultiTaskSampler, Sequence};

@@ -1,0 +1,152 @@
+//! Fused multi-task batch sampling — the per-step random draw whose
+//! bucket-count fluctuations motivate the paper's per-step re-dispatch.
+
+use crate::config::TaskSet;
+use crate::util::Rng;
+
+/// One training sequence in a fused batch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Sequence {
+    /// Index of the owning FT task.
+    pub task: u32,
+    /// Token length (pre-padding).
+    pub len: u32,
+}
+
+/// A fused batch: every task contributes its own batch size of sequences.
+#[derive(Debug, Clone, Default)]
+pub struct FusedBatch {
+    pub sequences: Vec<Sequence>,
+}
+
+impl FusedBatch {
+    pub fn len(&self) -> usize {
+        self.sequences.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sequences.is_empty()
+    }
+
+    pub fn total_tokens(&self) -> u64 {
+        self.sequences.iter().map(|s| s.len as u64).sum()
+    }
+
+    /// Lengths only (for bucketing).
+    pub fn lengths(&self) -> Vec<u32> {
+        self.sequences.iter().map(|s| s.len).collect()
+    }
+
+    /// Histogram over `boundaries` (bucket j = lengths in (b_{j-1}, b_j]).
+    pub fn bucket_counts(&self, boundaries: &[u32]) -> Vec<u64> {
+        let mut counts = vec![0u64; boundaries.len()];
+        for s in &self.sequences {
+            let j = boundaries.partition_point(|&b| b < s.len);
+            let j = j.min(boundaries.len() - 1);
+            counts[j] += 1;
+        }
+        counts
+    }
+}
+
+/// Draws fused batches from the task set's length distributions.
+#[derive(Debug, Clone)]
+pub struct MultiTaskSampler {
+    tasks: TaskSet,
+    rng: Rng,
+}
+
+impl MultiTaskSampler {
+    pub fn new(tasks: &TaskSet, seed: u64) -> Self {
+        Self { tasks: tasks.clone(), rng: Rng::new(seed) }
+    }
+
+    pub fn task_set(&self) -> &TaskSet {
+        &self.tasks
+    }
+
+    /// Draw one fused batch (each task contributes `batch_size` sequences).
+    pub fn next_batch(&mut self) -> FusedBatch {
+        let mut sequences = Vec::with_capacity(self.tasks.joint_batch() as usize);
+        for (ti, t) in self.tasks.tasks.iter().enumerate() {
+            for _ in 0..t.batch_size {
+                sequences.push(Sequence {
+                    task: ti as u32,
+                    len: t.lengths.sample(&mut self.rng),
+                });
+            }
+        }
+        FusedBatch { sequences }
+    }
+
+    /// Draw a large calibration sample of lengths (the paper uses 100×B at
+    /// initialization to fix bucket boundaries for the deployment problem).
+    pub fn calibration_lengths(&mut self, multiples_of_b: usize) -> Vec<u32> {
+        let mut out = Vec::new();
+        for _ in 0..multiples_of_b {
+            out.extend(self.next_batch().lengths());
+        }
+        out
+    }
+
+    /// Expected per-bucket fractions `f_j` estimated from a calibration
+    /// sample, over the given boundaries.
+    pub fn bucket_fractions(lengths: &[u32], boundaries: &[u32]) -> Vec<f64> {
+        let mut counts = vec![0u64; boundaries.len()];
+        for &l in lengths {
+            let j = boundaries.partition_point(|&b| b < l).min(boundaries.len() - 1);
+            counts[j] += 1;
+        }
+        let total = lengths.len().max(1) as f64;
+        counts.iter().map(|&c| c as f64 / total).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{TaskSet, TaskSpec};
+    use crate::data::LengthDistribution;
+
+    fn tiny_tasks() -> TaskSet {
+        TaskSet::new(vec![
+            TaskSpec::new("short", 8, LengthDistribution::fit(100.0, 2.0, 16, 2048)),
+            TaskSpec::new("long", 4, LengthDistribution::fit(1500.0, 0.8, 16, 8192)),
+        ])
+    }
+
+    #[test]
+    fn batch_composition() {
+        let mut s = MultiTaskSampler::new(&tiny_tasks(), 1);
+        let b = s.next_batch();
+        assert_eq!(b.len(), 12);
+        assert_eq!(b.sequences.iter().filter(|s| s.task == 0).count(), 8);
+        assert_eq!(b.sequences.iter().filter(|s| s.task == 1).count(), 4);
+        assert!(b.total_tokens() > 0);
+    }
+
+    #[test]
+    fn bucket_counts_sum_to_batch() {
+        let mut s = MultiTaskSampler::new(&tiny_tasks(), 2);
+        let b = s.next_batch();
+        let counts = b.bucket_counts(&[256, 512, 1024, 8192]);
+        assert_eq!(counts.iter().sum::<u64>(), b.len() as u64);
+    }
+
+    #[test]
+    fn batches_vary_across_steps() {
+        let mut s = MultiTaskSampler::new(&tiny_tasks(), 3);
+        let b1 = s.next_batch();
+        let b2 = s.next_batch();
+        assert_ne!(b1.lengths(), b2.lengths());
+    }
+
+    #[test]
+    fn fractions_normalize() {
+        let mut s = MultiTaskSampler::new(&tiny_tasks(), 4);
+        let lens = s.calibration_lengths(50);
+        let f = MultiTaskSampler::bucket_fractions(&lens, &[256, 1024, 8192]);
+        assert!((f.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+        assert!(f[0] > 0.0);
+    }
+}

@@ -1,0 +1,191 @@
+//! Shared experiment scenarios for the table/figure regeneration benches
+//! (`rust/benches/`). Each paper experiment is a composition of: a world
+//! (model + cluster + tasks), a deployment arm, and scheduler options.
+
+use crate::cluster::ClusterSpec;
+use crate::config::ModelDesc;
+use crate::coordinator::dispatcher::DispatchPolicy;
+use crate::coordinator::planner::{DeploymentPlan, Planner, PlannerOptions};
+use crate::coordinator::scheduler::{Scheduler, SchedulerOptions};
+use crate::costmodel::CostModel;
+use crate::metrics::JointFtReport;
+use crate::prelude::TaskSet;
+
+/// One evaluation world: base model + cluster + the batch of FT tasks.
+pub struct Scenario {
+    pub label: String,
+    pub model: ModelDesc,
+    pub cluster: ClusterSpec,
+    pub tasks: TaskSet,
+}
+
+impl Scenario {
+    pub fn new(label: &str, model: ModelDesc, cluster: ClusterSpec, tasks: TaskSet) -> Self {
+        Self { label: label.into(), model, cluster, tasks }
+    }
+
+    /// Paper end-to-end worlds (Figure 7).
+    pub fn paper_7b_16() -> Self {
+        Self::new(
+            "7B / 16xA100-40G / 6 tasks",
+            ModelDesc::llama2_7b(),
+            ClusterSpec::a100_40g(16),
+            TaskSet::paper_7b_subset(),
+        )
+    }
+
+    pub fn paper_32b_64() -> Self {
+        Self::new(
+            "32B / 64xA800-80G / 12 tasks",
+            ModelDesc::qwen25_32b(),
+            ClusterSpec::a800_80g(64),
+            TaskSet::paper_all(),
+        )
+    }
+
+    pub fn paper_70b_64() -> Self {
+        Self::new(
+            "70B / 64xA800-80G / 12 tasks",
+            ModelDesc::llama2_70b(),
+            ClusterSpec::a800_80g(64),
+            TaskSet::paper_all(),
+        )
+    }
+
+    pub fn cost(&self) -> CostModel {
+        CostModel::calibrated(&self.model, &self.cluster)
+    }
+
+    pub fn planner_opts(&self) -> PlannerOptions {
+        PlannerOptions::default()
+    }
+
+    /// The four evaluation arms of Figure 7.
+    pub fn arm_report(&self, arm: Arm, steps: usize) -> Option<ArmResult> {
+        let cost = self.cost();
+        let planner = Planner::new(&cost, &self.cluster);
+        match arm {
+            Arm::TaskFused => {
+                let plan = planner.plan_homogeneous(&self.tasks, &self.planner_opts())?;
+                let mut opts = SchedulerOptions::default();
+                opts.dynamic_bucketing = false; // naive fuse: no per-batch DP
+                let report =
+                    Scheduler::new(&cost, &plan, &self.tasks, opts).run_steps(steps);
+                Some(ArmResult { plan: Some(plan), report, per_task: vec![] })
+            }
+            Arm::Lobra => {
+                let plan = planner.plan(&self.tasks, self.planner_opts())?;
+                let report = Scheduler::new(
+                    &cost,
+                    &plan,
+                    &self.tasks,
+                    SchedulerOptions::default(),
+                )
+                .run_steps(steps);
+                Some(ArmResult { plan: Some(plan), report, per_task: vec![] })
+            }
+            Arm::TaskSequential => self.sequential(false, steps),
+            Arm::LobraSequential => self.sequential(true, steps),
+        }
+    }
+
+    fn sequential(&self, heterogeneous: bool, steps: usize) -> Option<ArmResult> {
+        let cost = self.cost();
+        let (total, per_task) = crate::coordinator::scheduler::sequential_gpu_seconds(
+            &cost,
+            &self.cluster,
+            &self.tasks,
+            heterogeneous,
+            steps,
+            &SchedulerOptions::default(),
+        );
+        let mut report = JointFtReport::default();
+        report.plan_notation = "(per-task)".into();
+        report.gpus = self.cluster.n_gpus;
+        report.steps = steps;
+        report.gpu_seconds_per_step = total;
+        Some(ArmResult { plan: None, report, per_task })
+    }
+
+    /// LobRA deployment plan (cached planning for case studies).
+    pub fn lobra_plan(&self) -> Option<DeploymentPlan> {
+        let cost = self.cost();
+        Planner::new(&cost, &self.cluster).plan(&self.tasks, self.planner_opts())
+    }
+
+    /// Run a custom (plan, policy, bucketing) arm — the Figure 8 axes.
+    pub fn custom_report(
+        &self,
+        plan: &DeploymentPlan,
+        policy: DispatchPolicy,
+        dynamic_bucketing: bool,
+        steps: usize,
+    ) -> JointFtReport {
+        let cost = self.cost();
+        let mut opts = SchedulerOptions::default();
+        opts.policy = policy;
+        opts.dynamic_bucketing = dynamic_bucketing;
+        Scheduler::new(&cost, plan, &self.tasks, opts).run_steps(steps)
+    }
+}
+
+/// The evaluation arms of Figure 7.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Arm {
+    TaskFused,
+    TaskSequential,
+    LobraSequential,
+    Lobra,
+}
+
+impl Arm {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Arm::TaskFused => "Task-Fused",
+            Arm::TaskSequential => "Task-Sequential",
+            Arm::LobraSequential => "LobRA-Sequential",
+            Arm::Lobra => "LobRA",
+        }
+    }
+}
+
+/// Result of one arm: plan (if joint), aggregate report, per-task detail.
+pub struct ArmResult {
+    pub plan: Option<DeploymentPlan>,
+    pub report: JointFtReport,
+    pub per_task: Vec<(String, f64)>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn figure7_ordering_7b() {
+        // The paper's headline ordering must hold:
+        // LobRA < LobRA-Sequential <= Task-Sequential < Task-Fused.
+        let sc = Scenario::paper_7b_16();
+        let fused = sc.arm_report(Arm::TaskFused, 10).unwrap().report;
+        let lobra = sc.arm_report(Arm::Lobra, 10).unwrap().report;
+        assert!(
+            lobra.gpu_seconds_per_step < fused.gpu_seconds_per_step,
+            "LobRA {} !< fused {}",
+            lobra.gpu_seconds_per_step,
+            fused.gpu_seconds_per_step
+        );
+        let reduction = lobra.reduction_vs(&fused);
+        assert!(
+            reduction > 0.2,
+            "expected paper-magnitude reduction, got {:.1}%",
+            reduction * 100.0
+        );
+    }
+
+    #[test]
+    fn sequential_reports_per_task() {
+        let sc = Scenario::paper_7b_16();
+        let seq = sc.arm_report(Arm::TaskSequential, 5).unwrap();
+        assert_eq!(seq.per_task.len(), 6);
+        assert!(seq.report.gpu_seconds_per_step > 0.0);
+    }
+}

@@ -1,0 +1,67 @@
+//! # LobRA — Multi-tenant LoRA Fine-tuning over Heterogeneous Data
+//!
+//! A reproduction of *LobRA* (Lin et al., PVLDB 18(8), 2025): jointly
+//! fine-tune many LoRA adapters over one shared base model, attacking the two
+//! data-heterogeneity problems of joint FT — sequence-length **variation**
+//! across tasks and sequence-length **skewness** within each fused batch —
+//! with (1) *heterogeneous FT replicas* (a deployment plan mixing parallel
+//! configurations, solved once at startup) and (2) per-step
+//! *workload-balanced data dispatching* plus *dynamic bucketing*.
+//!
+//! ## Architecture (three layers, Python never on the training path)
+//!
+//! * **L3 (this crate)** — the coordinator: deployment planner (paper Eq. 2),
+//!   per-step dispatcher (Eq. 3), dynamic bucketing DP (Eq. 4), profiled cost
+//!   model (Appendix D), cluster simulator, tenant manager, and the PJRT
+//!   runtime that executes AOT-compiled train steps.
+//! * **L2** — `python/compile/model.py`: a transformer with fused multi-task
+//!   LoRA, lowered once to HLO text by `make artifacts`.
+//! * **L1** — `python/compile/kernels/multi_lora.py`: the fused multi-adapter
+//!   Pallas kernel the L2 graph calls.
+//!
+//! ## Quick tour
+//!
+//! ```no_run
+//! use lobra::prelude::*;
+//!
+//! // Describe the world: model, cluster, FT tasks.
+//! let model = ModelDesc::llama2_7b();
+//! let cluster = ClusterSpec::a100_40g(16);
+//! let tasks = TaskSet::paper_7b_subset();
+//!
+//! // Stage 1 (once): plan heterogeneous FT replicas (paper Eq. 2).
+//! let cost = CostModel::calibrated(&model, &cluster);
+//! let planner = Planner::new(&cost, &cluster);
+//! let plan = planner.plan(&tasks, PlannerOptions::default()).unwrap();
+//!
+//! // Stage 2 (every step): bucket + balance the fused batch (Eq. 3 + Eq. 4).
+//! let mut sched = Scheduler::new(&cost, &plan, &tasks, SchedulerOptions::default());
+//! let report = sched.run_steps(100);
+//! println!("{}", report.summary());
+//! ```
+
+pub mod cluster;
+pub mod config;
+pub mod experiments;
+pub mod coordinator;
+pub mod costmodel;
+pub mod data;
+pub mod metrics;
+pub mod runtime;
+pub mod solver;
+pub mod train;
+pub mod util;
+
+/// Convenience re-exports for the common workflow.
+pub mod prelude {
+    pub use crate::cluster::ClusterSpec;
+    pub use crate::config::{ModelDesc, ParallelConfig, TaskSet, TaskSpec};
+    pub use crate::coordinator::bucketing::{bucketize, BucketingOptions, Buckets};
+    pub use crate::coordinator::dispatcher::{Dispatcher, DispatchPlan};
+    pub use crate::coordinator::planner::{DeploymentPlan, Planner, PlannerOptions};
+    pub use crate::coordinator::scheduler::{Scheduler, SchedulerOptions, StepReport};
+    pub use crate::coordinator::tasks::TaskManager;
+    pub use crate::costmodel::CostModel;
+    pub use crate::data::{DatasetProfile, LengthDistribution, MultiTaskSampler};
+    pub use crate::metrics::JointFtReport;
+}

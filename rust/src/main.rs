@@ -1,0 +1,217 @@
+//! `lobra` — the LobRA leader CLI (dependency-free arg parsing).
+//!
+//! Subcommands:
+//! * `plan`     — compute the heterogeneous deployment plan (paper Eq. 2).
+//! * `simulate` — run the joint-FT scheduler on the simulated cluster and
+//!                report GPU-seconds (the paper's headline metric).
+//! * `train`    — real PJRT-executed end-to-end training on the local CPU
+//!                (requires `make artifacts`).
+//! * `info`     — show models, datasets, and feasible configurations.
+
+use anyhow::{anyhow, bail, Result};
+use lobra::cluster::ClusterSpec;
+use lobra::config::ModelDesc;
+use lobra::coordinator::planner::{Planner, PlannerOptions};
+use lobra::coordinator::scheduler::{Scheduler, SchedulerOptions};
+use lobra::costmodel::CostModel;
+use lobra::prelude::TaskSet;
+use lobra::train::{Trainer, TrainerConfig};
+
+const USAGE: &str = "\
+lobra — multi-tenant LoRA fine-tuning coordinator (LobRA, PVLDB'25)
+
+USAGE:
+  lobra plan     [--model 7b|32b|70b] [--gpus N] [--cluster a100|a800]
+                 [--tasks all|7b-subset|scalability]
+                 [--no-config-proposal] [--no-lower-bound]
+  lobra simulate [--model ...] [--gpus N] [--cluster ...] [--tasks ...]
+                 [--steps N] [--task-fused]
+  lobra train    [--artifacts DIR] [--steps N] [--lr F] [--seed N]
+                 [--log-every K]
+  lobra info     [--model ...] [--gpus N] [--cluster ...]
+";
+
+/// Tiny flag parser: `--key value` and boolean `--key` switches.
+struct Args {
+    flags: std::collections::HashMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String], booleans: &[&str]) -> Result<Self> {
+        let mut flags = std::collections::HashMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            let Some(key) = a.strip_prefix("--") else {
+                bail!("unexpected argument: {a}\n{USAGE}");
+            };
+            if booleans.contains(&key) {
+                flags.insert(key.to_string(), "true".to_string());
+                i += 1;
+            } else {
+                let v = argv
+                    .get(i + 1)
+                    .ok_or_else(|| anyhow!("missing value for --{key}\n{USAGE}"))?;
+                flags.insert(key.to_string(), v.clone());
+                i += 2;
+            }
+        }
+        Ok(Self { flags })
+    }
+
+    fn get(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    fn get_parse<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("bad value for --{key}: {v}")),
+        }
+    }
+
+    fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+}
+
+fn cluster_for(name: &str, gpus: u32) -> ClusterSpec {
+    match name {
+        "a800" => ClusterSpec::a800_80g(gpus),
+        _ => ClusterSpec::a100_40g(gpus),
+    }
+}
+
+fn tasks_for(name: &str) -> TaskSet {
+    match name {
+        "all" => TaskSet::paper_all(),
+        "scalability" => TaskSet::paper_scalability_subset(),
+        _ => TaskSet::paper_7b_subset(),
+    }
+}
+
+fn model_for(args: &Args) -> Result<ModelDesc> {
+    let name = args.get("model", "7b");
+    ModelDesc::by_name(&name).ok_or_else(|| anyhow!("unknown model: {name}"))
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first() else {
+        print!("{USAGE}");
+        return Ok(());
+    };
+    let rest = &argv[1..];
+    match cmd.as_str() {
+        "plan" => {
+            let args = Args::parse(rest, &["no-config-proposal", "no-lower-bound"])?;
+            let model = model_for(&args)?;
+            let gpus = args.get_parse("gpus", 16u32)?;
+            let cluster = cluster_for(&args.get("cluster", "a100"), gpus);
+            let tasks = tasks_for(&args.get("tasks", "7b-subset"));
+            let cost = CostModel::calibrated(&model, &cluster);
+            let planner = Planner::new(&cost, &cluster);
+            let mut opts = PlannerOptions::default();
+            opts.config_proposal = !args.has("no-config-proposal");
+            opts.lower_bound_filter = !args.has("no-lower-bound");
+            let (plan, stats) = planner
+                .plan_with_stats(&tasks, opts)
+                .ok_or_else(|| anyhow!("no feasible plan"))?;
+            println!("model={} cluster={} tasks={}", model.name, cluster.name, tasks.len());
+            println!("plan: {}", plan.notation());
+            println!(
+                "gpus_used={} replicas={} expected_step_time={:.3}s",
+                plan.gpus_used(),
+                plan.n_replicas(),
+                plan.expected_step_time
+            );
+            println!(
+                "planning: candidates={} plans={} after_filter={} solve={:.2}s",
+                stats.n_candidate_configs,
+                stats.n_plans_enumerated,
+                stats.n_plans_after_filter,
+                stats.solve_seconds
+            );
+        }
+        "simulate" => {
+            let args = Args::parse(rest, &["task-fused"])?;
+            let model = model_for(&args)?;
+            let gpus = args.get_parse("gpus", 16u32)?;
+            let cluster = cluster_for(&args.get("cluster", "a100"), gpus);
+            let tasks = tasks_for(&args.get("tasks", "7b-subset"));
+            let steps = args.get_parse("steps", 100usize)?;
+            let cost = CostModel::calibrated(&model, &cluster);
+            let planner = Planner::new(&cost, &cluster);
+            let plan = if args.has("task-fused") {
+                planner.plan_homogeneous(&tasks, &PlannerOptions::default())
+            } else {
+                planner.plan(&tasks, PlannerOptions::default())
+            }
+            .ok_or_else(|| anyhow!("no feasible plan"))?;
+            println!("plan: {}", plan.notation());
+            let mut sched =
+                Scheduler::new(&cost, &plan, &tasks, SchedulerOptions::default());
+            let report = sched.run_steps(steps);
+            println!("{}", report.summary());
+        }
+        "train" => {
+            let args = Args::parse(rest, &[])?;
+            let mut cfg = TrainerConfig::default();
+            cfg.adam.lr = args.get_parse("lr", 2e-3)?;
+            cfg.seed = args.get_parse("seed", 0u64)?;
+            let steps = args.get_parse("steps", 50usize)?;
+            let log_every = args.get_parse("log-every", 10usize)?;
+            let artifacts = args.get("artifacts", "artifacts");
+            let mut trainer = Trainer::new(&artifacts, cfg)?;
+            println!(
+                "engine up: platform={} shapes={:?} lora_params={}",
+                trainer.engine().platform(),
+                trainer.engine().shapes(),
+                trainer.lora().len()
+            );
+            trainer.run(steps, |log| {
+                if log.step as usize % log_every == 0 || log.step == 1 {
+                    println!(
+                        "step {:>4}  loss {:.4}  mb {}  wall {:.2}s",
+                        log.step, log.loss, log.microbatches, log.wall_seconds
+                    );
+                }
+            })?;
+            let last = trainer.logs().last().unwrap();
+            println!("final loss: {:.4}", last.loss);
+        }
+        "info" => {
+            let args = Args::parse(rest, &[])?;
+            let model = model_for(&args)?;
+            let gpus = args.get_parse("gpus", 16u32)?;
+            let cluster = cluster_for(&args.get("cluster", "a100"), gpus);
+            let cost = CostModel::calibrated(&model, &cluster);
+            let planner = Planner::new(&cost, &cluster);
+            println!(
+                "model={} params={:.1}B layers={} d={}",
+                model.name,
+                model.params as f64 / 1e9,
+                model.n_layers,
+                model.d_model
+            );
+            println!("cluster={} ({} servers)", cluster.name, cluster.n_servers());
+            println!("feasible configs (max seq len, tokens/GPU/s @2K):");
+            for c in planner.feasible_configs(true) {
+                let cap = cost.max_seq_len(c);
+                let b = (cost.max_chunk_tokens(c) / 2048).max(1);
+                let thr = cost.throughput(c, b, 2048.min(cap));
+                println!("  {c}: n={} max_len={} thr={:.0}", c.n(), cap, thr);
+            }
+            println!("\ndatasets (Table 4):");
+            for p in lobra::data::DatasetProfile::all() {
+                println!(
+                    "  {:<28} avg={:<6} skew={:<6} kurt={:<7} batch={}",
+                    p.name, p.avg_len, p.skewness, p.kurtosis, p.batch_size
+                );
+            }
+        }
+        "--help" | "-h" | "help" => print!("{USAGE}"),
+        other => bail!("unknown command: {other}\n{USAGE}"),
+    }
+    Ok(())
+}

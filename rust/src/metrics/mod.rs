@@ -1,0 +1,108 @@
+//! Experiment metrics & reporting (the quantities the paper's figures plot).
+
+/// Aggregate report over a joint-FT run.
+#[derive(Debug, Clone, Default)]
+pub struct JointFtReport {
+    pub plan_notation: String,
+    pub gpus: u32,
+    pub steps: usize,
+    /// Mean wall-clock per step (slowest replica + sync).
+    pub mean_step_time: f64,
+    /// Mean GPU·seconds per step — the paper's headline metric.
+    pub gpu_seconds_per_step: f64,
+    /// Std-dev of per-step GPU seconds.
+    pub gpu_seconds_std: f64,
+    /// Mean GPU utilization (busy / occupied).
+    pub utilization: f64,
+    /// Mean padding ratio of dispatched batches.
+    pub mean_padding_ratio: f64,
+    /// Mean per-step dispatch-solver time.
+    pub mean_solve_seconds: f64,
+}
+
+impl JointFtReport {
+    /// Build from per-step tuples
+    /// `(step_time, gpu_seconds, utilization, padding_ratio, solve_seconds)`.
+    pub fn from_steps<I>(plan_notation: &str, gpus: u32, steps: I) -> Self
+    where
+        I: IntoIterator<Item = (f64, f64, f64, f64, f64)>,
+    {
+        let rows: Vec<_> = steps.into_iter().collect();
+        let n = rows.len().max(1) as f64;
+        let sum = |f: fn(&(f64, f64, f64, f64, f64)) -> f64| -> f64 {
+            rows.iter().map(f).sum::<f64>() / n
+        };
+        let mean_gs = sum(|r| r.1);
+        let var_gs =
+            rows.iter().map(|r| (r.1 - mean_gs).powi(2)).sum::<f64>() / n;
+        Self {
+            plan_notation: plan_notation.to_string(),
+            gpus,
+            steps: rows.len(),
+            mean_step_time: sum(|r| r.0),
+            gpu_seconds_per_step: mean_gs,
+            gpu_seconds_std: var_gs.sqrt(),
+            utilization: sum(|r| r.2),
+            mean_padding_ratio: sum(|r| r.3),
+            mean_solve_seconds: sum(|r| r.4),
+        }
+    }
+
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "plan=[{}] gpus={} steps={} step_time={:.3}s gpu_s/step={:.2} (±{:.2}) util={:.1}% pad={:.1}% solve={:.2}ms",
+            self.plan_notation,
+            self.gpus,
+            self.steps,
+            self.mean_step_time,
+            self.gpu_seconds_per_step,
+            self.gpu_seconds_std,
+            self.utilization * 100.0,
+            self.mean_padding_ratio * 100.0,
+            self.mean_solve_seconds * 1e3,
+        )
+    }
+
+    /// Relative reduction of this report's GPU seconds vs a baseline.
+    pub fn reduction_vs(&self, baseline: &JointFtReport) -> f64 {
+        if baseline.gpu_seconds_per_step <= 0.0 {
+            return 0.0;
+        }
+        1.0 - self.gpu_seconds_per_step / baseline.gpu_seconds_per_step
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn aggregates() {
+        let r = JointFtReport::from_steps(
+            "x",
+            16,
+            vec![(1.0, 16.0, 0.9, 0.1, 0.001), (3.0, 48.0, 0.7, 0.3, 0.003)],
+        );
+        assert_eq!(r.steps, 2);
+        assert!((r.mean_step_time - 2.0).abs() < 1e-12);
+        assert!((r.gpu_seconds_per_step - 32.0).abs() < 1e-12);
+        assert!((r.gpu_seconds_std - 16.0).abs() < 1e-12);
+        assert!((r.utilization - 0.8).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reduction() {
+        let a = JointFtReport { gpu_seconds_per_step: 50.0, ..Default::default() };
+        let b = JointFtReport { gpu_seconds_per_step: 100.0, ..Default::default() };
+        assert!((a.reduction_vs(&b) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_contains_key_numbers() {
+        let r = JointFtReport::from_steps("p", 8, vec![(1.0, 8.0, 1.0, 0.0, 0.0)]);
+        let s = r.summary();
+        assert!(s.contains("gpus=8"));
+        assert!(s.contains("steps=1"));
+    }
+}

@@ -1,0 +1,216 @@
+//! The PJRT execution engine: one compiled executable per microbatch shape.
+
+use super::manifest::Manifest;
+use super::params::ParamVector;
+use anyhow::{anyhow, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+/// Outputs of one train-step execution.
+#[derive(Debug, Clone)]
+pub struct StepOutput {
+    /// Mean next-token loss over non-pad targets.
+    pub loss: f32,
+    /// Flat LoRA gradient (same layout as the LoRA param vector).
+    pub grad: Vec<f32>,
+    /// Number of target tokens contributing to the loss.
+    pub tokens: f32,
+    /// Per-task loss sums.
+    pub task_loss: Vec<f32>,
+    /// Per-task token counts.
+    pub task_tokens: Vec<f32>,
+}
+
+/// Compiled artifacts + a device-resident copy of the frozen base params.
+///
+/// The base vector is uploaded once (it never changes during FT); per step
+/// only the small LoRA vector and the token batch cross the host boundary.
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    train_execs: HashMap<(u64, u64), xla::PjRtLoadedExecutable>,
+    eval_exec: Option<((u64, u64), xla::PjRtLoadedExecutable)>,
+    base_buffer: Option<xla::PjRtBuffer>,
+}
+
+impl Engine {
+    /// Load + compile every artifact under `dir`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let manifest = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        let mut train_execs = HashMap::new();
+        let mut eval_exec = None;
+        for a in &manifest.artifacts {
+            let path = manifest.artifact_path(a);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .map_err(|e| anyhow!("parsing {path:?}: {e:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {path:?}: {e:?}"))?;
+            match a.kind.as_str() {
+                "train" => {
+                    train_execs.insert((a.batch, a.seq), exe);
+                }
+                "eval" => {
+                    eval_exec = Some(((a.batch, a.seq), exe));
+                }
+                other => return Err(anyhow!("unknown artifact kind {other}")),
+            }
+        }
+        if train_execs.is_empty() {
+            return Err(anyhow!("no train artifacts in {:?}", manifest.dir));
+        }
+        Ok(Self { client, manifest, train_execs, eval_exec, base_buffer: None })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Microbatch shapes with a compiled train step, ascending by seq.
+    pub fn shapes(&self) -> Vec<(u64, u64)> {
+        self.manifest.train_shapes()
+    }
+
+    /// Upload the frozen base parameters once.
+    pub fn set_base(&mut self, base: &ParamVector) -> Result<()> {
+        if base.len() as u64 != self.manifest.base_param_count {
+            return Err(anyhow!(
+                "base params {} != manifest {}",
+                base.len(),
+                self.manifest.base_param_count
+            ));
+        }
+        let buf = self
+            .client
+            .buffer_from_host_buffer::<f32>(&base.data, &[base.len()], None)
+            .map_err(|e| anyhow!("uploading base params: {e:?}"))?;
+        self.base_buffer = Some(buf);
+        Ok(())
+    }
+
+    /// Initialize fresh base/LoRA vectors from the manifest rules.
+    pub fn init_params(&self, seed: u64) -> (ParamVector, ParamVector) {
+        let base = ParamVector::init(
+            &self.manifest.base_params,
+            self.manifest.base_param_count,
+            seed,
+        );
+        let lora = ParamVector::init(
+            &self.manifest.lora_params,
+            self.manifest.lora_param_count,
+            seed ^ 0x5eed,
+        );
+        (base, lora)
+    }
+
+    fn run(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        shape: (u64, u64),
+        lora: &ParamVector,
+        tokens: &[i32],
+        seg_ids: &[i32],
+    ) -> Result<Vec<xla::Literal>> {
+        let (b, s) = shape;
+        if tokens.len() as u64 != b * s {
+            return Err(anyhow!("tokens len {} != {b}x{s}", tokens.len()));
+        }
+        if seg_ids.len() as u64 != b {
+            return Err(anyhow!("seg_ids len {} != {b}", seg_ids.len()));
+        }
+        if !seg_ids.windows(2).all(|w| w[0] <= w[1]) {
+            return Err(anyhow!("seg_ids must be sorted (kernel layout contract)"));
+        }
+        let base_buf = self
+            .base_buffer
+            .as_ref()
+            .ok_or_else(|| anyhow!("set_base() not called"))?;
+        let lora_buf = self
+            .client
+            .buffer_from_host_buffer::<f32>(&lora.data, &[lora.len()], None)
+            .map_err(|e| anyhow!("lora upload: {e:?}"))?;
+        let tok_buf = self
+            .client
+            .buffer_from_host_buffer::<i32>(tokens, &[b as usize, s as usize], None)
+            .map_err(|e| anyhow!("tokens upload: {e:?}"))?;
+        let seg_buf = self
+            .client
+            .buffer_from_host_buffer::<i32>(seg_ids, &[b as usize], None)
+            .map_err(|e| anyhow!("seg upload: {e:?}"))?;
+        let outs = exe
+            .execute_b(&[base_buf, &lora_buf, &tok_buf, &seg_buf])
+            .map_err(|e| anyhow!("execute: {e:?}"))?;
+        let lit = outs[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch: {e:?}"))?;
+        lit.to_tuple().map_err(|e| anyhow!("untuple: {e:?}"))
+    }
+
+    /// Execute one fwd+bwd microbatch of the given shape.
+    ///
+    /// `tokens`: row-major `[b, s]`, PAD = 0. `seg_ids`: `[b]` sorted task ids.
+    pub fn train_step(
+        &self,
+        shape: (u64, u64),
+        lora: &ParamVector,
+        tokens: &[i32],
+        seg_ids: &[i32],
+    ) -> Result<StepOutput> {
+        let exe = self
+            .train_execs
+            .get(&shape)
+            .ok_or_else(|| anyhow!("no train artifact for shape {shape:?}"))?;
+        let mut parts = self.run(exe, shape, lora, tokens, seg_ids)?;
+        if parts.len() != 5 {
+            return Err(anyhow!("expected 5 outputs, got {}", parts.len()));
+        }
+        let task_tokens = parts.pop().unwrap().to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+        let task_loss = parts.pop().unwrap().to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+        let tokens_out = parts.pop().unwrap().to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+        let grad = parts.pop().unwrap().to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+        let loss = parts.pop().unwrap().to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+        Ok(StepOutput {
+            loss: loss[0],
+            grad,
+            tokens: tokens_out[0],
+            task_loss,
+            task_tokens,
+        })
+    }
+
+    /// Forward-only loss at the eval artifact's shape.
+    pub fn eval_loss(
+        &self,
+        lora: &ParamVector,
+        tokens: &[i32],
+        seg_ids: &[i32],
+    ) -> Result<(f32, f32, Vec<f32>, Vec<f32>)> {
+        let (shape, exe) = self
+            .eval_exec
+            .as_ref()
+            .ok_or_else(|| anyhow!("no eval artifact"))?;
+        let mut parts = self.run(exe, *shape, lora, tokens, seg_ids)?;
+        if parts.len() != 4 {
+            return Err(anyhow!("expected 4 outputs, got {}", parts.len()));
+        }
+        let task_tokens = parts.pop().unwrap().to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+        let task_loss = parts.pop().unwrap().to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+        let toks = parts.pop().unwrap().to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+        let loss = parts.pop().unwrap().to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+        Ok((loss[0], toks[0], task_loss, task_tokens))
+    }
+
+    /// Eval artifact shape, if exported.
+    pub fn eval_shape(&self) -> Option<(u64, u64)> {
+        self.eval_exec.as_ref().map(|(s, _)| *s)
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+}
+

@@ -1,0 +1,287 @@
+//! `artifacts/manifest.json` — the contract between aot.py and the runtime.
+//! Parsed with the in-tree JSON parser (offline build: no serde_json).
+
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Initialization rule for one parameter leaf.
+#[derive(Debug, Clone, PartialEq)]
+pub enum InitKind {
+    Zeros,
+    Ones,
+    Normal { std: f64 },
+}
+
+impl InitKind {
+    fn from_json(j: &Json) -> Result<Self> {
+        match j.get("kind").and_then(Json::as_str) {
+            Some("zeros") => Ok(InitKind::Zeros),
+            Some("ones") => Ok(InitKind::Ones),
+            Some("normal") => Ok(InitKind::Normal {
+                std: j
+                    .get("std")
+                    .and_then(Json::as_f64)
+                    .ok_or_else(|| anyhow!("normal init missing std"))?,
+            }),
+            other => bail!("unknown init kind {other:?}"),
+        }
+    }
+}
+
+/// One flattened parameter leaf.
+#[derive(Debug, Clone)]
+pub struct ParamEntry {
+    pub name: String,
+    pub shape: Vec<u64>,
+    pub offset: u64,
+    pub size: u64,
+    pub init: InitKind,
+}
+
+impl ParamEntry {
+    fn from_json(j: &Json) -> Result<Self> {
+        Ok(Self {
+            name: j
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("param missing name"))?
+                .to_string(),
+            shape: j
+                .get("shape")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("param missing shape"))?
+                .iter()
+                .map(|x| x.as_u64().ok_or_else(|| anyhow!("bad shape dim")))
+                .collect::<Result<_>>()?,
+            offset: j.get("offset").and_then(Json::as_u64).ok_or_else(|| anyhow!("offset"))?,
+            size: j.get("size").and_then(Json::as_u64).ok_or_else(|| anyhow!("size"))?,
+            init: InitKind::from_json(
+                j.get("init").ok_or_else(|| anyhow!("param missing init"))?,
+            )?,
+        })
+    }
+}
+
+/// One exported HLO artifact.
+#[derive(Debug, Clone)]
+pub struct ArtifactInfo {
+    pub file: String,
+    pub kind: String,
+    pub batch: u64,
+    pub seq: u64,
+    pub sha256: String,
+}
+
+impl ArtifactInfo {
+    fn from_json(j: &Json) -> Result<Self> {
+        Ok(Self {
+            file: j.get("file").and_then(Json::as_str).ok_or_else(|| anyhow!("file"))?.into(),
+            kind: j.get("kind").and_then(Json::as_str).ok_or_else(|| anyhow!("kind"))?.into(),
+            batch: j.get("batch").and_then(Json::as_u64).ok_or_else(|| anyhow!("batch"))?,
+            seq: j.get("seq").and_then(Json::as_u64).ok_or_else(|| anyhow!("seq"))?,
+            sha256: j
+                .get("sha256")
+                .and_then(Json::as_str)
+                .unwrap_or_default()
+                .to_string(),
+        })
+    }
+}
+
+/// Model metadata inside the manifest.
+#[derive(Debug, Clone)]
+pub struct ModelMeta {
+    pub vocab: u64,
+    pub d_model: u64,
+    pub n_layers: u64,
+    pub n_heads: u64,
+    pub d_ff: u64,
+    pub n_tasks: u64,
+    pub lora_rank: u64,
+    pub lora_alpha: f64,
+    pub block_rows: u64,
+    pub pad_id: i64,
+}
+
+impl ModelMeta {
+    fn from_json(j: &Json) -> Result<Self> {
+        let u = |k: &str| -> Result<u64> {
+            j.get(k).and_then(Json::as_u64).ok_or_else(|| anyhow!("model.{k}"))
+        };
+        Ok(Self {
+            vocab: u("vocab")?,
+            d_model: u("d_model")?,
+            n_layers: u("n_layers")?,
+            n_heads: u("n_heads")?,
+            d_ff: u("d_ff")?,
+            n_tasks: u("n_tasks")?,
+            lora_rank: u("lora_rank")?,
+            lora_alpha: j
+                .get("lora_alpha")
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow!("model.lora_alpha"))?,
+            block_rows: u("block_rows")?,
+            pad_id: j.get("pad_id").and_then(Json::as_i64).unwrap_or(0),
+        })
+    }
+}
+
+/// Parsed manifest.json.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub preset: String,
+    pub model: ModelMeta,
+    pub base_param_count: u64,
+    pub lora_param_count: u64,
+    pub base_params: Vec<ParamEntry>,
+    pub lora_params: Vec<ParamEntry>,
+    pub artifacts: Vec<ArtifactInfo>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    /// Load and validate `dir/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("parsing manifest: {e}"))?;
+        let params = |key: &str| -> Result<Vec<ParamEntry>> {
+            j.get(key)
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("manifest missing {key}"))?
+                .iter()
+                .map(ParamEntry::from_json)
+                .collect()
+        };
+        let m = Self {
+            preset: j
+                .get("preset")
+                .and_then(Json::as_str)
+                .unwrap_or("unknown")
+                .to_string(),
+            model: ModelMeta::from_json(
+                j.get("model").ok_or_else(|| anyhow!("manifest missing model"))?,
+            )?,
+            base_param_count: j
+                .get("base_param_count")
+                .and_then(Json::as_u64)
+                .ok_or_else(|| anyhow!("base_param_count"))?,
+            lora_param_count: j
+                .get("lora_param_count")
+                .and_then(Json::as_u64)
+                .ok_or_else(|| anyhow!("lora_param_count"))?,
+            base_params: params("base_params")?,
+            lora_params: params("lora_params")?,
+            artifacts: j
+                .get("artifacts")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("artifacts"))?
+                .iter()
+                .map(ArtifactInfo::from_json)
+                .collect::<Result<_>>()?,
+            dir: dir.to_path_buf(),
+        };
+        m.validate()?;
+        Ok(m)
+    }
+
+    /// Structural validation: contiguous offsets, artifacts on disk.
+    pub fn validate(&self) -> Result<()> {
+        for (label, table, total) in [
+            ("base", &self.base_params, self.base_param_count),
+            ("lora", &self.lora_params, self.lora_param_count),
+        ] {
+            let mut off = 0u64;
+            for e in table {
+                if e.offset != off {
+                    bail!("{label} param {} offset {} != {off}", e.name, e.offset);
+                }
+                let numel: u64 = e.shape.iter().product::<u64>().max(1);
+                if numel != e.size {
+                    bail!("{label} param {} size mismatch", e.name);
+                }
+                off += e.size;
+            }
+            if off != total {
+                bail!("{label} params sum {off} != {total}");
+            }
+        }
+        for a in &self.artifacts {
+            let p = self.dir.join(&a.file);
+            if !p.exists() {
+                bail!("artifact missing: {p:?}");
+            }
+        }
+        Ok(())
+    }
+
+    /// Train artifact for an exact (batch, seq) shape.
+    pub fn train_artifact(&self, batch: u64, seq: u64) -> Option<&ArtifactInfo> {
+        self.artifacts
+            .iter()
+            .find(|a| a.kind == "train" && a.batch == batch && a.seq == seq)
+    }
+
+    /// All train shapes, ascending by sequence length.
+    pub fn train_shapes(&self) -> Vec<(u64, u64)> {
+        let mut v: Vec<(u64, u64)> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.kind == "train")
+            .map(|a| (a.batch, a.seq))
+            .collect();
+        v.sort_by_key(|&(_, s)| s);
+        v
+    }
+
+    /// Smallest train shape whose seq covers `len` (for padding routing).
+    pub fn shape_for_len(&self, len: u64) -> Option<(u64, u64)> {
+        self.train_shapes().into_iter().find(|&(_, s)| s >= len)
+    }
+
+    pub fn artifact_path(&self, a: &ArtifactInfo) -> PathBuf {
+        self.dir.join(&a.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> Option<PathBuf> {
+        let p = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        p.join("manifest.json").exists().then_some(p)
+    }
+
+    #[test]
+    fn load_and_validate_real_manifest() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.base_param_count > 0);
+        assert!(m.lora_param_count > 0);
+        assert!(!m.train_shapes().is_empty());
+        let shapes = m.train_shapes();
+        for w in shapes.windows(2) {
+            assert!(w[0].1 <= w[1].1);
+        }
+        let (_, s) = m.shape_for_len(10).unwrap();
+        assert!(s >= 10);
+        assert!(m.train_artifact(shapes[0].0, shapes[0].1).is_some());
+    }
+
+    #[test]
+    fn init_kind_parses() {
+        let j = Json::parse(r#"{"kind":"normal","std":0.02}"#).unwrap();
+        assert_eq!(InitKind::from_json(&j).unwrap(), InitKind::Normal { std: 0.02 });
+        let j2 = Json::parse(r#"{"kind":"zeros"}"#).unwrap();
+        assert_eq!(InitKind::from_json(&j2).unwrap(), InitKind::Zeros);
+        let j3 = Json::parse(r#"{"kind":"uniform"}"#).unwrap();
+        assert!(InitKind::from_json(&j3).is_err());
+    }
+}

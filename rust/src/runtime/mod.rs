@@ -1,0 +1,18 @@
+//! PJRT runtime: load AOT-compiled HLO artifacts and execute them on the
+//! training path — Python is never invoked here.
+//!
+//! `make artifacts` (build time, once) lowers the L2 JAX train/eval steps to
+//! HLO *text* under `artifacts/`; this module loads the text with
+//! `HloModuleProto::from_text_file`, compiles one executable per microbatch
+//! shape on the PJRT CPU client, and exposes a typed `train_step` /
+//! `eval_loss` interface over flat parameter vectors (see
+//! `python/compile/aot.py` for the interchange contract and the reasons HLO
+//! text is the format).
+
+mod engine;
+mod manifest;
+mod params;
+
+pub use engine::{Engine, StepOutput};
+pub use manifest::{ArtifactInfo, InitKind, Manifest, ParamEntry};
+pub use params::ParamVector;

@@ -1,0 +1,155 @@
+//! Flat parameter vectors: initialization from the manifest's per-leaf
+//! rules (reproducing the Python init without running Python) and simple
+//! checkpoint I/O.
+
+use super::manifest::{InitKind, ParamEntry};
+use crate::util::Rng;
+use anyhow::{anyhow, Result};
+use std::io::{Read, Write};
+use std::path::Path;
+
+/// A flat f32 parameter vector matching a manifest param table.
+#[derive(Debug, Clone)]
+pub struct ParamVector {
+    pub data: Vec<f32>,
+}
+
+impl ParamVector {
+    /// Initialize per the manifest rules (zeros / ones / normal(0, std)).
+    pub fn init(table: &[ParamEntry], total: u64, seed: u64) -> Self {
+        let mut data = vec![0f32; total as usize];
+        let mut rng = Rng::new(seed);
+        for e in table {
+            let lo = e.offset as usize;
+            let hi = (e.offset + e.size) as usize;
+            match e.init {
+                InitKind::Zeros => {}
+                InitKind::Ones => data[lo..hi].fill(1.0),
+                InitKind::Normal { std } => {
+                    for x in &mut data[lo..hi] {
+                        *x = rng.normal_ms(0.0, std) as f32;
+                    }
+                }
+            }
+        }
+        Self { data }
+    }
+
+    pub fn zeros(total: u64) -> Self {
+        Self { data: vec![0f32; total as usize] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// L2 norm (diagnostics / tests).
+    pub fn norm(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+    }
+
+    /// View one leaf's slice.
+    pub fn leaf<'a>(&'a self, e: &ParamEntry) -> &'a [f32] {
+        &self.data[e.offset as usize..(e.offset + e.size) as usize]
+    }
+
+    /// Save as raw little-endian f32 (LoRA checkpoints are tiny).
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let mut f = std::fs::File::create(path)?;
+        let bytes: Vec<u8> = self.data.iter().flat_map(|x| x.to_le_bytes()).collect();
+        f.write_all(&bytes)?;
+        Ok(())
+    }
+
+    /// Load a checkpoint; must match `expected_len`.
+    pub fn load(path: impl AsRef<Path>, expected_len: usize) -> Result<Self> {
+        let mut f = std::fs::File::open(path.as_ref())?;
+        let mut bytes = Vec::new();
+        f.read_to_end(&mut bytes)?;
+        if bytes.len() != expected_len * 4 {
+            return Err(anyhow!(
+                "checkpoint {:?}: {} bytes, expected {}",
+                path.as_ref(),
+                bytes.len(),
+                expected_len * 4
+            ));
+        }
+        let data = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        Ok(Self { data })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn table() -> Vec<ParamEntry> {
+        vec![
+            ParamEntry {
+                name: "['w']".into(),
+                shape: vec![2, 3],
+                offset: 0,
+                size: 6,
+                init: InitKind::Normal { std: 0.5 },
+            },
+            ParamEntry {
+                name: "['g']".into(),
+                shape: vec![4],
+                offset: 6,
+                size: 4,
+                init: InitKind::Ones,
+            },
+            ParamEntry {
+                name: "['a']".into(),
+                shape: vec![2],
+                offset: 10,
+                size: 2,
+                init: InitKind::Zeros,
+            },
+        ]
+    }
+
+    #[test]
+    fn init_rules_apply() {
+        let v = ParamVector::init(&table(), 12, 42);
+        assert_eq!(v.len(), 12);
+        assert!(v.data[0..6].iter().any(|&x| x != 0.0));
+        assert!(v.data[6..10].iter().all(|&x| x == 1.0));
+        assert!(v.data[10..12].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn init_deterministic() {
+        let a = ParamVector::init(&table(), 12, 7);
+        let b = ParamVector::init(&table(), 12, 7);
+        assert_eq!(a.data, b.data);
+        let c = ParamVector::init(&table(), 12, 8);
+        assert_ne!(a.data, c.data);
+    }
+
+    #[test]
+    fn checkpoint_roundtrip() {
+        let v = ParamVector::init(&table(), 12, 1);
+        let dir = std::env::temp_dir().join("lobra_test_ckpt");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("v.bin");
+        v.save(&p).unwrap();
+        let w = ParamVector::load(&p, 12).unwrap();
+        assert_eq!(v.data, w.data);
+        assert!(ParamVector::load(&p, 13).is_err());
+    }
+
+    #[test]
+    fn leaf_views() {
+        let v = ParamVector::init(&table(), 12, 3);
+        let t = table();
+        assert_eq!(v.leaf(&t[1]), &[1.0, 1.0, 1.0, 1.0]);
+    }
+}

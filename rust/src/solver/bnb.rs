@@ -1,0 +1,151 @@
+//! Exact branch-and-bound reference solver for the min–max dispatch ILP.
+//!
+//! Exponential in `Σ_j B_j` — only usable on small instances. Its role is
+//! certification: proptest compares [`super::solve_balanced`] against this
+//! on randomized small problems (see rust/tests/solver_equivalence.rs), the
+//! same way the paper validates its heuristics against un-pruned SCIP runs
+//! (Appendix B.2, Table 5).
+
+use super::{group_time, makespan, Assignment, DispatchProblem};
+
+/// Exact solver. `node_budget` caps explored nodes (returns best found).
+pub fn solve_exact(p: &DispatchProblem, node_budget: usize) -> Option<Assignment> {
+    if !p.is_satisfiable() {
+        return None;
+    }
+    let n_groups = p.groups.len();
+    let n_buckets = p.n_buckets();
+
+    // Seed incumbent with the heuristic solution (also a correctness aid:
+    // B&B can only improve on it).
+    let mut best = super::solve_balanced(p)?;
+    let mut d = vec![vec![0u64; n_buckets]; n_groups];
+    let mut nodes = 0usize;
+
+    // Assign buckets from last (fewest supporters) to first; within a
+    // bucket, enumerate compositions of B_j over supporting groups.
+    fn recurse(
+        p: &DispatchProblem,
+        j: isize,
+        d: &mut Vec<Vec<u64>>,
+        best: &mut Assignment,
+        nodes: &mut usize,
+        budget: usize,
+    ) {
+        if *nodes >= budget {
+            return;
+        }
+        *nodes += 1;
+        if j < 0 {
+            let ms = makespan(p, d);
+            if ms < best.makespan {
+                *best = Assignment { d: d.clone(), makespan: ms };
+            }
+            return;
+        }
+        let jj = j as usize;
+        let bj = p.demand[jj];
+        let supporters: Vec<usize> = (0..p.groups.len())
+            .filter(|&i| p.groups[i].supports(jj))
+            .collect();
+        if bj == 0 {
+            recurse(p, j - 1, d, best, nodes, budget);
+            return;
+        }
+        // prune: partial makespan of already-assigned buckets
+        let partial = p
+            .groups
+            .iter()
+            .zip(d.iter())
+            .map(|(g, row)| group_time(g, row))
+            .fold(0.0f64, f64::max);
+        if partial >= best.makespan {
+            return;
+        }
+        // enumerate compositions of bj over supporters
+        fn compositions(
+            p: &DispatchProblem,
+            jj: usize,
+            remaining: u64,
+            k: usize,
+            supporters: &[usize],
+            d: &mut Vec<Vec<u64>>,
+            j: isize,
+            best: &mut Assignment,
+            nodes: &mut usize,
+            budget: usize,
+        ) {
+            if *nodes >= budget {
+                return;
+            }
+            if k == supporters.len() - 1 {
+                let i = supporters[k];
+                d[i][jj] = remaining;
+                recurse(p, j - 1, d, best, nodes, budget);
+                d[i][jj] = 0;
+                return;
+            }
+            let i = supporters[k];
+            for take in 0..=remaining {
+                d[i][jj] = take;
+                compositions(p, jj, remaining - take, k + 1, supporters, d, j, best, nodes, budget);
+            }
+            d[i][jj] = 0;
+        }
+        compositions(p, jj, bj, 0, &supporters, d, j, best, nodes, budget);
+    }
+
+    recurse(p, n_buckets as isize - 1, &mut d, &mut best, &mut nodes, node_budget);
+    Some(best)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solver::GroupSpec;
+
+    #[test]
+    fn exact_finds_known_optimum() {
+        // 2 groups, bucket of 4: costs 1.0 vs 1.0 → optimum splits 2/2.
+        let p = DispatchProblem {
+            groups: vec![
+                GroupSpec { costs: vec![1.0], replicas: 1, fixed: 0.0 },
+                GroupSpec { costs: vec![1.0], replicas: 1, fixed: 0.0 },
+            ],
+            demand: vec![4],
+        };
+        let a = solve_exact(&p, 1_000_000).unwrap();
+        assert_eq!(a.makespan, 2.0);
+        assert!(a.is_feasible(&p));
+    }
+
+    #[test]
+    fn exact_no_worse_than_heuristic() {
+        let p = DispatchProblem {
+            groups: vec![
+                GroupSpec { costs: vec![1.0, f64::INFINITY], replicas: 2, fixed: 0.0 },
+                GroupSpec { costs: vec![1.3, 5.0], replicas: 1, fixed: 0.1 },
+            ],
+            demand: vec![9, 2],
+        };
+        let h = crate::solver::solve_balanced(&p).unwrap();
+        let e = solve_exact(&p, 1_000_000).unwrap();
+        assert!(e.makespan <= h.makespan + 1e-9);
+        assert!(e.is_feasible(&p));
+    }
+
+    #[test]
+    fn respects_budget() {
+        let p = DispatchProblem {
+            groups: vec![
+                GroupSpec { costs: vec![1.0; 3], replicas: 1, fixed: 0.0 },
+                GroupSpec { costs: vec![1.1; 3], replicas: 1, fixed: 0.0 },
+                GroupSpec { costs: vec![1.2; 3], replicas: 1, fixed: 0.0 },
+            ],
+            demand: vec![30, 30, 30],
+        };
+        // tiny budget: still returns a feasible (heuristic-seeded) answer
+        let a = solve_exact(&p, 10).unwrap();
+        assert!(a.is_feasible(&p));
+    }
+}

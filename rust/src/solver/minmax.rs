@@ -1,0 +1,430 @@
+//! The fast min–max dispatch solvers: length-based greedy (baseline),
+//! exact fractional via parametric makespan search, and the integer
+//! rounding + local-search polish used on the per-step hot path.
+
+use super::{group_time, makespan, Assignment, DispatchProblem};
+
+/// Figure 4(c)'s baseline: dispatch each bucket to its length class — the
+/// *least capable* group that still supports it (ties broken by cheaper
+/// per-replica cost). This is "dispatch the training data to FT replicas
+/// according to their lengths": short sequences go to the small replicas,
+/// long sequences to the big ones, and nobody balances.
+pub fn solve_length_based(p: &DispatchProblem) -> Option<Assignment> {
+    // support range r_g = number of buckets the group can process
+    let ranges: Vec<usize> = p
+        .groups
+        .iter()
+        .map(|g| g.costs.iter().filter(|c| c.is_finite()).count())
+        .collect();
+    let mut d = vec![vec![0u64; p.n_buckets()]; p.groups.len()];
+    for (j, &bj) in p.demand.iter().enumerate() {
+        if bj == 0 {
+            continue;
+        }
+        let best = p
+            .groups
+            .iter()
+            .enumerate()
+            .filter(|(_, g)| g.supports(j))
+            .min_by(|(ia, a), (ib, b)| {
+                let ca = a.costs[j] / a.replicas as f64;
+                let cb = b.costs[j] / b.replicas as f64;
+                ranges[*ia]
+                    .cmp(&ranges[*ib])
+                    .then(ca.partial_cmp(&cb).unwrap())
+            })?
+            .0;
+        d[best][j] = bj;
+    }
+    let ms = makespan(p, &d);
+    Some(Assignment { d, makespan: ms })
+}
+
+/// Exact *fractional* optimum via binary search on the makespan `t̂`.
+///
+/// Feasibility check for a fixed `t̂`: process buckets from last (longest,
+/// fewest supporters — supports are nested: `supports(j) ⊆ supports(j')`
+/// for `j > j'`) to first, assigning each bucket greedily to its cheapest
+/// supporting groups with remaining capacity `(t̂ − fixed_i)·p_i`. Because
+/// the cost model satisfies Observation 1, the group preference order is
+/// identical for every bucket, making the greedy exchange-optimal.
+///
+/// Returns `(t_star, fractional d)`.
+pub fn solve_fractional(p: &DispatchProblem) -> Option<(f64, Vec<Vec<f64>>)> {
+    if !p.is_satisfiable() {
+        return None;
+    }
+    let feasible = |t_hat: f64| -> Option<Vec<Vec<f64>>> {
+        let mut d = vec![vec![0f64; p.n_buckets()]; p.groups.len()];
+        let mut cap: Vec<f64> = p
+            .groups
+            .iter()
+            .map(|g| ((t_hat - g.fixed).max(0.0)) * g.replicas as f64)
+            .collect();
+        for j in (0..p.n_buckets()).rev() {
+            let mut need = p.demand[j] as f64;
+            if need == 0.0 {
+                continue;
+            }
+            // cheapest groups first
+            let mut order: Vec<usize> = (0..p.groups.len())
+                .filter(|&i| p.groups[i].supports(j))
+                .collect();
+            order.sort_by(|&a, &b| {
+                p.groups[a].costs[j]
+                    .partial_cmp(&p.groups[b].costs[j])
+                    .unwrap()
+            });
+            for i in order {
+                if need <= 1e-12 {
+                    break;
+                }
+                let c = p.groups[i].costs[j];
+                if c <= 0.0 {
+                    d[i][j] += need;
+                    need = 0.0;
+                    break;
+                }
+                let take = (cap[i] / c).min(need);
+                if take > 0.0 {
+                    d[i][j] += take;
+                    cap[i] -= take * c;
+                    need -= take;
+                }
+            }
+            if need > 1e-9 {
+                return None;
+            }
+        }
+        Some(d)
+    };
+
+    // Upper bound: everything on the single cheapest feasible layout —
+    // use the length-based assignment's makespan as a safe upper bound.
+    let ub0 = solve_length_based(p)?.makespan.max(1e-9);
+    let (mut lo, mut hi) = (0.0f64, ub0);
+    if feasible(hi).is_none() {
+        // fixed costs can make length-based evaluation and capacity model
+        // diverge slightly; grow until feasible.
+        let mut h = hi;
+        for _ in 0..64 {
+            h *= 2.0;
+            if feasible(h).is_some() {
+                hi = h;
+                break;
+            }
+        }
+        feasible(hi)?;
+    }
+    for _ in 0..60 {
+        let mid = 0.5 * (lo + hi);
+        if feasible(mid).is_some() {
+            hi = mid;
+        } else {
+            lo = mid;
+        }
+    }
+    let d = feasible(hi)?;
+    Some((hi, d))
+}
+
+/// Production solver: fractional optimum → largest-remainder integer
+/// rounding (conserving each bucket's demand) → local search moving single
+/// sequences off the critical group while it improves the makespan.
+pub fn solve_balanced(p: &DispatchProblem) -> Option<Assignment> {
+    if !p.is_satisfiable() {
+        return None;
+    }
+    let (_, frac) = solve_fractional(p)?;
+    let n_groups = p.groups.len();
+    let n_buckets = p.n_buckets();
+
+    // Largest-remainder rounding per bucket.
+    let mut d = vec![vec![0u64; n_buckets]; n_groups];
+    for j in 0..n_buckets {
+        let bj = p.demand[j];
+        if bj == 0 {
+            continue;
+        }
+        let mut floors = 0u64;
+        let mut rem: Vec<(f64, usize)> = Vec::with_capacity(n_groups);
+        for i in 0..n_groups {
+            let f = frac[i][j];
+            let fl = f.floor() as u64;
+            d[i][j] = fl;
+            floors += fl;
+            rem.push((f - fl as f64, i));
+        }
+        let mut short = bj.saturating_sub(floors);
+        // Hand the leftovers to the largest fractional parts (cheapest on tie).
+        rem.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+        let mut k = 0;
+        while short > 0 {
+            let (_, i) = rem[k % rem.len()];
+            if p.groups[i].supports(j) {
+                d[i][j] += 1;
+                short -= 1;
+            }
+            k += 1;
+            if k > 4 * n_groups && short > 0 {
+                // fall back: any supporting group
+                for (ii, row) in d.iter_mut().enumerate() {
+                    if p.groups[ii].supports(j) && short > 0 {
+                        row[j] += 1;
+                        short -= 1;
+                    }
+                }
+            }
+        }
+        // Rounding may have overshot if floors already exceeded demand
+        // (cannot happen with exact fractional conservation, but guard).
+        let mut total: u64 = (0..n_groups).map(|i| d[i][j]).sum();
+        let mut i = 0;
+        while total > bj {
+            if d[i % n_groups][j] > 0 {
+                d[i % n_groups][j] -= 1;
+                total -= 1;
+            }
+            i += 1;
+        }
+    }
+
+    local_search(p, &mut d, 10_000);
+    let ms = makespan(p, &d);
+    Some(Assignment { d, makespan: ms })
+}
+
+/// Hill-climb: repeatedly move one sequence out of the *critical* group
+/// (the one attaining the makespan) to the destination minimizing the new
+/// makespan; stop when no move improves or the move budget runs out.
+fn local_search(p: &DispatchProblem, d: &mut [Vec<u64>], budget: usize) {
+    let n_groups = p.groups.len();
+    let times = |d: &[Vec<u64>]| -> Vec<f64> {
+        p.groups.iter().zip(d).map(|(g, row)| group_time(g, row)).collect()
+    };
+    let mut t = times(d);
+    for _ in 0..budget {
+        let (crit, &crit_t) = t
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap();
+        // Moves of k ∈ {1, 2, 4, ...} sequences — bulk moves escape the
+        // plateaus where shifting one sequence cannot reduce a replica's
+        // ceiling (counts below the group's replica count).
+        let mut best: Option<(usize, usize, u64, f64)> = None; // (bucket, dst, k, new_max)
+        for j in 0..p.n_buckets() {
+            if d[crit][j] == 0 {
+                continue;
+            }
+            for dst in 0..n_groups {
+                if dst == crit || !p.groups[dst].supports(j) {
+                    continue;
+                }
+                let mut k = 1u64;
+                loop {
+                    let k_eff = k.min(d[crit][j]);
+                    // simulate the move
+                    d[crit][j] -= k_eff;
+                    d[dst][j] += k_eff;
+                    let tc = group_time(&p.groups[crit], &d[crit]);
+                    let td = group_time(&p.groups[dst], &d[dst]);
+                    d[crit][j] += k_eff;
+                    d[dst][j] -= k_eff;
+                    let others = t
+                        .iter()
+                        .enumerate()
+                        .filter(|&(i, _)| i != crit && i != dst)
+                        .map(|(_, &x)| x)
+                        .fold(0.0f64, f64::max);
+                    let new_max = tc.max(td).max(others);
+                    if new_max + 1e-12 < crit_t
+                        && best.map_or(true, |(_, _, _, m)| new_max < m)
+                    {
+                        best = Some((j, dst, k_eff, new_max));
+                    }
+                    if k >= d[crit][j] {
+                        break;
+                    }
+                    k *= 2;
+                }
+            }
+        }
+        if let Some((j, dst, k, _)) = best {
+            d[crit][j] -= k;
+            d[dst][j] += k;
+            t[crit] = group_time(&p.groups[crit], &d[crit]);
+            t[dst] = group_time(&p.groups[dst], &d[dst]);
+            continue;
+        }
+        // No single move improves: try 1-for-1 swaps with the critical
+        // group (move a j-sequence out, take a j2-sequence back) — escapes
+        // integer-granularity local optima on small batches.
+        let mut best_swap: Option<(usize, usize, usize, f64)> = None;
+        for j in 0..p.n_buckets() {
+            if d[crit][j] == 0 {
+                continue;
+            }
+            for dst in 0..n_groups {
+                if dst == crit || !p.groups[dst].supports(j) {
+                    continue;
+                }
+                for j2 in 0..p.n_buckets() {
+                    if j2 == j || d[dst][j2] == 0 || !p.groups[crit].supports(j2) {
+                        continue;
+                    }
+                    d[crit][j] -= 1;
+                    d[dst][j] += 1;
+                    d[dst][j2] -= 1;
+                    d[crit][j2] += 1;
+                    let tc = group_time(&p.groups[crit], &d[crit]);
+                    let td = group_time(&p.groups[dst], &d[dst]);
+                    d[crit][j] += 1;
+                    d[dst][j] -= 1;
+                    d[dst][j2] += 1;
+                    d[crit][j2] -= 1;
+                    let others = t
+                        .iter()
+                        .enumerate()
+                        .filter(|&(i, _)| i != crit && i != dst)
+                        .map(|(_, &x)| x)
+                        .fold(0.0f64, f64::max);
+                    let new_max = tc.max(td).max(others);
+                    if new_max + 1e-12 < crit_t
+                        && best_swap.map_or(true, |(_, _, _, m)| new_max < m)
+                    {
+                        best_swap = Some((j, dst, j2, new_max));
+                    }
+                }
+            }
+        }
+        match best_swap {
+            Some((j, dst, j2, _)) => {
+                d[crit][j] -= 1;
+                d[dst][j] += 1;
+                d[dst][j2] -= 1;
+                d[crit][j2] += 1;
+                t[crit] = group_time(&p.groups[crit], &d[crit]);
+                t[dst] = group_time(&p.groups[dst], &d[dst]);
+            }
+            None => break,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solver::GroupSpec;
+
+    fn problem(groups: Vec<GroupSpec>, demand: Vec<u64>) -> DispatchProblem {
+        DispatchProblem { groups, demand }
+    }
+
+    fn two_group() -> DispatchProblem {
+        problem(
+            vec![
+                GroupSpec { costs: vec![1.0, f64::INFINITY], replicas: 1, fixed: 0.0 },
+                GroupSpec { costs: vec![2.0, 6.0], replicas: 1, fixed: 0.0 },
+            ],
+            vec![12, 2],
+        )
+    }
+
+    #[test]
+    fn length_based_routes_to_cheapest() {
+        let p = two_group();
+        let a = solve_length_based(&p).unwrap();
+        assert!(a.is_feasible(&p));
+        // bucket 0 all on group 0 (cheapest), bucket 1 forced to group 1
+        assert_eq!(a.d[0][0], 12);
+        assert_eq!(a.d[1][1], 2);
+        assert_eq!(a.makespan, 12.0);
+    }
+
+    #[test]
+    fn balanced_beats_length_based() {
+        let p = two_group();
+        let lb = solve_length_based(&p).unwrap();
+        let bal = solve_balanced(&p).unwrap();
+        assert!(bal.is_feasible(&p));
+        assert!(bal.makespan <= lb.makespan + 1e-9);
+        // optimum: move short sequences to group 1 until balanced:
+        // g0: x, g1: 2*(12-x)+12 → x≈8.6.. integer: ~9 vs 2*3+12=18? no:
+        // bucket1 cost 6*2=12 on g1; moving k shorts to g1: g0=12-k,
+        // g1=12+2k → balance at k=0 g0=12 g1=12. Already equal!
+        assert!(bal.makespan <= 12.0 + 1e-9);
+    }
+
+    #[test]
+    fn balanced_migrates_under_skew() {
+        // Heavy skew: many short sequences, one big long-capable group.
+        let p = problem(
+            vec![
+                GroupSpec { costs: vec![1.0, f64::INFINITY], replicas: 4, fixed: 0.0 },
+                GroupSpec { costs: vec![1.5, 10.0], replicas: 1, fixed: 0.0 },
+            ],
+            vec![101, 2],
+        );
+        let lb = solve_length_based(&p).unwrap();
+        let bal = solve_balanced(&p).unwrap();
+        // length-based: g0 gets all 101 shorts → ⌈101/4⌉ = 26; g1 → 20.0
+        assert!((lb.makespan - 26.0).abs() < 1e-9);
+        // balanced should push some shorts to g1
+        assert!(bal.makespan < lb.makespan);
+        assert!(bal.d[1][0] > 0, "no migration happened: {:?}", bal.d);
+    }
+
+    #[test]
+    fn fractional_lower_bounds_integer() {
+        let p = two_group();
+        let (t_frac, _) = solve_fractional(&p).unwrap();
+        let bal = solve_balanced(&p).unwrap();
+        assert!(t_frac <= bal.makespan + 1e-6);
+    }
+
+    #[test]
+    fn unsatisfiable_returns_none() {
+        let p = problem(
+            vec![GroupSpec { costs: vec![1.0, f64::INFINITY], replicas: 1, fixed: 0.0 }],
+            vec![5, 1],
+        );
+        assert!(solve_balanced(&p).is_none());
+        assert!(solve_length_based(&p).is_none());
+    }
+
+    #[test]
+    fn zero_demand_is_trivial() {
+        let p = problem(
+            vec![GroupSpec { costs: vec![1.0], replicas: 1, fixed: 0.5 }],
+            vec![0],
+        );
+        let a = solve_balanced(&p).unwrap();
+        assert_eq!(a.makespan, 0.0);
+    }
+
+    #[test]
+    fn respects_fixed_costs() {
+        // Group 1 has a huge fixed cost; balanced should prefer group 0.
+        let p = problem(
+            vec![
+                GroupSpec { costs: vec![1.0], replicas: 1, fixed: 0.0 },
+                GroupSpec { costs: vec![1.0], replicas: 1, fixed: 100.0 },
+            ],
+            vec![10],
+        );
+        let a = solve_balanced(&p).unwrap();
+        assert_eq!(a.d[0][0], 10, "{:?}", a.d);
+    }
+
+    #[test]
+    fn multi_replica_group_shares_load() {
+        let p = problem(
+            vec![GroupSpec { costs: vec![1.0], replicas: 4, fixed: 0.0 }],
+            vec![10],
+        );
+        let a = solve_balanced(&p).unwrap();
+        // 10 over 4 replicas → ceil = 3
+        assert!((a.makespan - 3.0).abs() < 1e-9);
+    }
+}

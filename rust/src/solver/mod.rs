@@ -1,0 +1,207 @@
+//! Min–max dispatch solver (replaces the paper's SCIP/PuLP dependency).
+//!
+//! Both the per-step dispatch problem (paper Eq. 3: `p*` fixed) and the
+//! inner problem of deployment planning (Eq. 2 with a candidate plan fixed)
+//! reduce to the same structure:
+//!
+//! > `S` *groups* of identical replicas (group `i` = `p_i` replicas of one
+//! > parallel configuration, supporting buckets `1..=r_i`), `R` *buckets*
+//! > with demands `B_j`, and linear per-sequence costs `c_{ij}`; assign
+//! > integer `d_{ij}` conserving demand so the slowest group finishes
+//! > earliest: minimize `max_i [fixed_i + (Σ_j c_{ij} d_{ij}) / p_i]`.
+//!
+//! Three solvers, coarse-to-fine:
+//!
+//! * [`solve_length_based`] — the greedy baseline of Figure 4(c): every
+//!   bucket goes entirely to its most efficient supporting group.
+//! * [`solve_balanced`] — the production path: exact *fractional* optimum
+//!   by parametric search on the makespan `t̂` (the greedy feasibility check
+//!   is exact because Observation 1 makes the group preference order
+//!   consistent across buckets), then integer rounding plus a local-search
+//!   polish of single-sequence moves.
+//! * [`bnb::solve_exact`] — branch-and-bound over `d_{ij}`, exponential but
+//!   exact; used by proptest to certify `solve_balanced` on small instances.
+
+pub mod bnb;
+mod minmax;
+pub mod partition;
+
+pub use minmax::{solve_balanced, solve_fractional, solve_length_based};
+
+/// One group of identical replicas in the dispatch problem.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GroupSpec {
+    /// Per-sequence cost per bucket; `f64::INFINITY` where unsupported
+    /// (bucket index beyond `r_i`).
+    pub costs: Vec<f64>,
+    /// `p_i` — number of replicas deployed with this configuration.
+    pub replicas: u32,
+    /// Fixed per-step cost of each replica (overheads, bubble estimate).
+    pub fixed: f64,
+}
+
+impl GroupSpec {
+    pub fn supports(&self, bucket: usize) -> bool {
+        self.costs[bucket].is_finite()
+    }
+}
+
+/// A dispatch problem instance.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DispatchProblem {
+    pub groups: Vec<GroupSpec>,
+    /// `B_j` — sequences per bucket in the fused batch.
+    pub demand: Vec<u64>,
+}
+
+impl DispatchProblem {
+    pub fn n_buckets(&self) -> usize {
+        self.demand.len()
+    }
+
+    /// Every bucket with demand must have at least one supporting group.
+    pub fn is_satisfiable(&self) -> bool {
+        self.demand.iter().enumerate().all(|(j, &b)| {
+            b == 0 || self.groups.iter().any(|g| g.supports(j))
+        })
+    }
+}
+
+/// An integer assignment `d[group][bucket]` with its evaluated makespan.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Assignment {
+    pub d: Vec<Vec<u64>>,
+    /// `max_i` group time under the linear model.
+    pub makespan: f64,
+}
+
+impl Assignment {
+    /// Check demand conservation and support constraints.
+    pub fn is_feasible(&self, p: &DispatchProblem) -> bool {
+        for (j, &b) in p.demand.iter().enumerate() {
+            let total: u64 = self.d.iter().map(|row| row[j]).sum();
+            if total != b {
+                return false;
+            }
+        }
+        for (i, g) in p.groups.iter().enumerate() {
+            for (j, &dij) in self.d[i].iter().enumerate() {
+                if dij > 0 && !g.supports(j) {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+}
+
+/// Split one group's assignment row over its `p` replicas with an LPT
+/// (longest-processing-time-first) greedy: buckets are handed out from the
+/// most expensive down, each unit going to the currently lightest replica.
+/// Returns per-replica per-bucket counts. This is the intra-group analogue
+/// of the paper's `⌈d_{ij}/p_i⌉` — but load-aware, so a single long
+/// sequence doesn't stack onto a replica that already carries extras.
+pub fn split_group_lpt(costs: &[f64], row: &[u64], p: usize) -> Vec<Vec<u64>> {
+    let p = p.max(1);
+    let n_buckets = row.len();
+    let mut shares = vec![vec![0u64; n_buckets]; p];
+    let mut load = vec![0.0f64; p];
+    // bucket order: descending per-sequence cost (finite only)
+    let mut order: Vec<usize> = (0..n_buckets).filter(|&j| row[j] > 0).collect();
+    order.sort_by(|&a, &b| costs[b].partial_cmp(&costs[a]).unwrap());
+    for j in order {
+        let c = costs[j];
+        let d = row[j];
+        // bulk-assign the even part, then LPT the remainder
+        let base = d / p as u64;
+        if base > 0 {
+            for k in 0..p {
+                shares[k][j] += base;
+                load[k] += c * base as f64;
+            }
+        }
+        for _ in 0..(d % p as u64) {
+            let (k, _) = load
+                .iter()
+                .enumerate()
+                .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap();
+            shares[k][j] += 1;
+            load[k] += c;
+        }
+    }
+    shares
+}
+
+/// Time of group `i` under assignment row `row`: replicas share the group's
+/// sequences via the LPT split, and the group finishes when its most
+/// loaded replica does.
+pub fn group_time(g: &GroupSpec, row: &[u64]) -> f64 {
+    if row.iter().all(|&d| d == 0) {
+        return 0.0;
+    }
+    let shares = split_group_lpt(&g.costs, row, g.replicas as usize);
+    let mut worst = 0.0f64;
+    for rep in &shares {
+        let t: f64 = rep
+            .iter()
+            .enumerate()
+            .map(|(j, &s)| if s > 0 { g.costs[j] * s as f64 } else { 0.0 })
+            .sum();
+        worst = worst.max(t);
+    }
+    g.fixed + worst
+}
+
+/// Makespan of a full assignment.
+pub fn makespan(p: &DispatchProblem, d: &[Vec<u64>]) -> f64 {
+    p.groups
+        .iter()
+        .zip(d)
+        .map(|(g, row)| group_time(g, row))
+        .fold(0.0, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    pub(crate) fn simple_problem() -> DispatchProblem {
+        DispatchProblem {
+            groups: vec![
+                GroupSpec { costs: vec![1.0, f64::INFINITY], replicas: 2, fixed: 0.0 },
+                GroupSpec { costs: vec![1.5, 4.0], replicas: 1, fixed: 0.0 },
+            ],
+            demand: vec![10, 3],
+        }
+    }
+
+    #[test]
+    fn group_time_round_robin() {
+        let g = GroupSpec { costs: vec![2.0], replicas: 2, fixed: 1.0 };
+        // 5 sequences over 2 replicas: 3 and 2 → worst 3*2+1 = 7
+        assert_eq!(group_time(&g, &[5]), 7.0);
+        assert_eq!(group_time(&g, &[0]), 0.0);
+    }
+
+    #[test]
+    fn feasibility_checks() {
+        let p = simple_problem();
+        let good = Assignment { d: vec![vec![10, 0], vec![0, 3]], makespan: 0.0 };
+        assert!(good.is_feasible(&p));
+        let bad_conservation = Assignment { d: vec![vec![9, 0], vec![0, 3]], makespan: 0.0 };
+        assert!(!bad_conservation.is_feasible(&p));
+        let bad_support = Assignment { d: vec![vec![9, 1], vec![1, 2]], makespan: 0.0 };
+        assert!(!bad_support.is_feasible(&p));
+    }
+
+    #[test]
+    fn satisfiability() {
+        let mut p = simple_problem();
+        assert!(p.is_satisfiable());
+        p.groups[1].costs[1] = f64::INFINITY;
+        assert!(!p.is_satisfiable());
+        p.demand[1] = 0;
+        assert!(p.is_satisfiable());
+    }
+}

@@ -1,0 +1,181 @@
+//! Deployment-plan enumeration: integer partitions of the GPU budget over
+//! candidate parallel configurations (paper Appendix A, step 2: "construct
+//! possible deployment plans ... formulated as an integer partition
+//! problem").
+
+use crate::config::ParallelConfig;
+
+/// One candidate deployment plan: `counts[i]` replicas of `configs[i]`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Plan {
+    pub counts: Vec<u32>,
+}
+
+impl Plan {
+    pub fn gpus_used(&self, configs: &[ParallelConfig]) -> u32 {
+        self.counts
+            .iter()
+            .zip(configs)
+            .map(|(&c, cfg)| c * cfg.n())
+            .sum()
+    }
+
+    pub fn n_replicas(&self) -> u32 {
+        self.counts.iter().sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.counts.iter().all(|&c| c == 0)
+    }
+}
+
+/// Enumerate all plans with `min_gpus <= Σ p_i·n_i <= n_gpus`.
+///
+/// `require_longest`: if `Some(idx)`, every plan must deploy at least one
+/// replica of configuration `idx` (the one able to process the longest
+/// bucket — otherwise the dispatch problem is unsatisfiable, so such plans
+/// are dead on arrival and enumerating them wastes planner time).
+/// `max_plans` caps the enumeration as a safety valve.
+pub fn enumerate_plans(
+    configs: &[ParallelConfig],
+    n_gpus: u32,
+    min_gpus: u32,
+    require_longest: Option<usize>,
+    max_plans: usize,
+) -> Vec<Plan> {
+    let mut out = Vec::new();
+    let mut counts = vec![0u32; configs.len()];
+    fn dfs(
+        configs: &[ParallelConfig],
+        i: usize,
+        remaining: u32,
+        counts: &mut Vec<u32>,
+        out: &mut Vec<Plan>,
+        n_gpus: u32,
+        min_gpus: u32,
+        require_longest: Option<usize>,
+        max_plans: usize,
+    ) {
+        if out.len() >= max_plans {
+            return;
+        }
+        if i == configs.len() {
+            let used = n_gpus - remaining;
+            if used >= min_gpus {
+                if let Some(li) = require_longest {
+                    if counts[li] == 0 {
+                        return;
+                    }
+                }
+                if counts.iter().any(|&c| c > 0) {
+                    out.push(Plan { counts: counts.clone() });
+                }
+            }
+            return;
+        }
+        let n = configs[i].n();
+        let max_count = remaining / n;
+        for c in 0..=max_count {
+            counts[i] = c;
+            dfs(
+                configs,
+                i + 1,
+                remaining - c * n,
+                counts,
+                out,
+                n_gpus,
+                min_gpus,
+                require_longest,
+                max_plans,
+            );
+            if out.len() >= max_plans {
+                break;
+            }
+        }
+        counts[i] = 0;
+    }
+    dfs(
+        configs,
+        0,
+        n_gpus,
+        &mut counts,
+        &mut out,
+        n_gpus,
+        min_gpus,
+        require_longest,
+        max_plans,
+    );
+    out
+}
+
+/// Count plans without materializing them (for Table 5 style reporting).
+pub fn count_plans(configs: &[ParallelConfig], n_gpus: u32, min_gpus: u32) -> u64 {
+    // DP over gpu budget: ways[g] with configs as item types (unbounded
+    // counts, order-insensitive by processing one config at a time).
+    let mut ways = vec![0u64; n_gpus as usize + 1];
+    ways[0] = 1;
+    for cfg in configs {
+        let n = cfg.n() as usize;
+        for g in n..=n_gpus as usize {
+            ways[g] = ways[g].saturating_add(ways[g - n]);
+        }
+    }
+    ways[min_gpus as usize..=n_gpus as usize]
+        .iter()
+        .fold(0u64, |a, &b| a.saturating_add(b))
+        .saturating_sub(if min_gpus == 0 { 1 } else { 0 }) // exclude empty plan
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfgs() -> Vec<ParallelConfig> {
+        vec![
+            ParallelConfig::new(1, 1),
+            ParallelConfig::new(2, 1),
+            ParallelConfig::new(4, 1),
+        ]
+    }
+
+    #[test]
+    fn enumerates_exact_partitions() {
+        // N=4, configs {1,2,4}: partitions of 4 into parts {1,2,4}:
+        // 1+1+1+1, 1+1+2, 2+2, 4 → 4 plans
+        let plans = enumerate_plans(&cfgs(), 4, 4, None, 10_000);
+        assert_eq!(plans.len(), 4, "{plans:?}");
+        for p in &plans {
+            assert_eq!(p.gpus_used(&cfgs()), 4);
+        }
+    }
+
+    #[test]
+    fn min_gpus_allows_slack() {
+        let all = enumerate_plans(&cfgs(), 4, 1, None, 10_000);
+        let exact = enumerate_plans(&cfgs(), 4, 4, None, 10_000);
+        assert!(all.len() > exact.len());
+    }
+
+    #[test]
+    fn require_longest_filters() {
+        let plans = enumerate_plans(&cfgs(), 4, 4, Some(2), 10_000);
+        for p in &plans {
+            assert!(p.counts[2] >= 1);
+        }
+        // only 1×4 fits with the 4-GPU config mandatory at N=4
+        assert_eq!(plans.len(), 1);
+    }
+
+    #[test]
+    fn count_matches_enumeration() {
+        let plans = enumerate_plans(&cfgs(), 8, 0, None, 100_000);
+        let counted = count_plans(&cfgs(), 8, 0);
+        assert_eq!(plans.len() as u64, counted);
+    }
+
+    #[test]
+    fn max_plans_caps() {
+        let plans = enumerate_plans(&cfgs(), 16, 0, None, 5);
+        assert_eq!(plans.len(), 5);
+    }
+}

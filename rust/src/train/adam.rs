@@ -1,0 +1,116 @@
+//! Adam(W) optimizer over flat f32 parameter vectors.
+//!
+//! The optimizer lives in Rust (L3): the AOT train-step artifacts return the
+//! flat LoRA gradient, the coordinator accumulates gradients across
+//! microbatches and replicas, and this updates the adapters. Keeping the
+//! update out of the HLO keeps one executable per microbatch shape valid
+//! for the whole run (no step-count specialization).
+
+/// Adam hyper-parameters (paper uses Adam for all experiments).
+#[derive(Debug, Clone, Copy)]
+pub struct AdamConfig {
+    pub lr: f64,
+    pub beta1: f64,
+    pub beta2: f64,
+    pub eps: f64,
+    /// Decoupled weight decay (0 = plain Adam).
+    pub weight_decay: f64,
+}
+
+impl Default for AdamConfig {
+    fn default() -> Self {
+        Self { lr: 1e-3, beta1: 0.9, beta2: 0.999, eps: 1e-8, weight_decay: 0.0 }
+    }
+}
+
+/// Adam state over a flat vector.
+#[derive(Debug, Clone)]
+pub struct Adam {
+    pub cfg: AdamConfig,
+    m: Vec<f32>,
+    v: Vec<f32>,
+    step: u64,
+}
+
+impl Adam {
+    pub fn new(n_params: usize, cfg: AdamConfig) -> Self {
+        Self { cfg, m: vec![0.0; n_params], v: vec![0.0; n_params], step: 0 }
+    }
+
+    pub fn step_count(&self) -> u64 {
+        self.step
+    }
+
+    /// In-place update of `params` with `grad`.
+    pub fn update(&mut self, params: &mut [f32], grad: &[f32]) {
+        assert_eq!(params.len(), grad.len());
+        assert_eq!(params.len(), self.m.len());
+        self.step += 1;
+        let b1 = self.cfg.beta1;
+        let b2 = self.cfg.beta2;
+        let bc1 = 1.0 - b1.powi(self.step as i32);
+        let bc2 = 1.0 - b2.powi(self.step as i32);
+        let lr = self.cfg.lr;
+        let eps = self.cfg.eps;
+        let wd = self.cfg.weight_decay;
+        for i in 0..params.len() {
+            let g = grad[i] as f64;
+            let m = b1 * self.m[i] as f64 + (1.0 - b1) * g;
+            let v = b2 * self.v[i] as f64 + (1.0 - b2) * g * g;
+            self.m[i] = m as f32;
+            self.v[i] = v as f32;
+            let mhat = m / bc1;
+            let vhat = v / bc2;
+            let mut p = params[i] as f64;
+            p -= lr * (mhat / (vhat.sqrt() + eps) + wd * p);
+            params[i] = p as f32;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn minimizes_quadratic() {
+        // f(x) = Σ (x_i - target_i)^2
+        let target = [3.0f32, -2.0, 0.5];
+        let mut x = vec![0.0f32; 3];
+        let mut adam = Adam::new(3, AdamConfig { lr: 0.05, ..Default::default() });
+        for _ in 0..500 {
+            let grad: Vec<f32> = x.iter().zip(&target).map(|(&xi, &t)| 2.0 * (xi - t)).collect();
+            adam.update(&mut x, &grad);
+        }
+        for (xi, t) in x.iter().zip(&target) {
+            assert!((xi - t).abs() < 1e-2, "{x:?}");
+        }
+    }
+
+    #[test]
+    fn zero_grad_no_movement_from_zero_state() {
+        let mut x = vec![1.0f32, 2.0];
+        let mut adam = Adam::new(2, AdamConfig::default());
+        adam.update(&mut x, &[0.0, 0.0]);
+        assert_eq!(x, vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn weight_decay_shrinks() {
+        let mut x = vec![10.0f32];
+        let mut adam = Adam::new(
+            1,
+            AdamConfig { lr: 0.1, weight_decay: 0.5, ..Default::default() },
+        );
+        adam.update(&mut x, &[0.0]);
+        assert!(x[0] < 10.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn mismatched_lengths_panic() {
+        let mut x = vec![0.0f32; 2];
+        let mut adam = Adam::new(2, AdamConfig::default());
+        adam.update(&mut x, &[0.0]);
+    }
+}

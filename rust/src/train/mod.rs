@@ -1,0 +1,242 @@
+//! Real end-to-end training driver: PJRT-executed joint LoRA fine-tuning.
+//!
+//! This is where all three layers meet on a real workload: the engine runs
+//! the AOT train-step artifacts (L2 model + L1 Pallas kernel), gradients are
+//! accumulated across microbatches in Rust, Adam updates the adapters, and
+//! the cost model supplies the virtual-cluster clock so the run reports the
+//! same GPU-seconds accounting as the simulation benches. Used by
+//! `examples/e2e_train.rs`.
+
+mod adam;
+
+pub use adam::{Adam, AdamConfig};
+
+use crate::coordinator::planner::DeploymentPlan;
+use crate::costmodel::{BucketLoad, CostModel};
+use crate::data::SyntheticCorpus;
+use crate::runtime::{Engine, ParamVector};
+use crate::util::Rng;
+use anyhow::{anyhow, Result};
+
+/// Per-step training log entry.
+#[derive(Debug, Clone)]
+pub struct TrainLog {
+    pub step: u64,
+    /// Token-weighted mean loss over the step's microbatches.
+    pub loss: f64,
+    /// Per-task mean losses (NaN-free: tasks absent this step carry None).
+    pub task_loss: Vec<Option<f64>>,
+    /// Microbatches executed.
+    pub microbatches: usize,
+    /// Real wall-clock of the step (CPU execution).
+    pub wall_seconds: f64,
+    /// Virtual-cluster step time from the cost model (simulated clock).
+    pub virtual_seconds: f64,
+}
+
+/// Trainer configuration.
+#[derive(Debug, Clone)]
+pub struct TrainerConfig {
+    pub adam: AdamConfig,
+    /// Sequences drawn per task per step.
+    pub per_task_batch: usize,
+    pub seed: u64,
+}
+
+impl Default for TrainerConfig {
+    fn default() -> Self {
+        Self { adam: AdamConfig { lr: 2e-3, ..Default::default() }, per_task_batch: 4, seed: 0 }
+    }
+}
+
+/// Joint multi-task LoRA trainer over the PJRT engine.
+pub struct Trainer {
+    engine: Engine,
+    corpus: SyntheticCorpus,
+    lora: ParamVector,
+    adam: Adam,
+    cfg: TrainerConfig,
+    rng: Rng,
+    n_tasks: usize,
+    logs: Vec<TrainLog>,
+    /// Optional virtual cluster for GPU-seconds accounting.
+    virtual_cluster: Option<(CostModel, DeploymentPlan)>,
+}
+
+impl Trainer {
+    /// Build from an artifacts directory. Initializes params per manifest.
+    pub fn new(artifacts_dir: &str, cfg: TrainerConfig) -> Result<Self> {
+        let mut engine = Engine::load(artifacts_dir)?;
+        let (base, lora) = engine.init_params(cfg.seed);
+        engine.set_base(&base)?;
+        let m = engine.manifest();
+        let n_tasks = m.model.n_tasks as usize;
+        let vocab = m.model.vocab as u32;
+        let adam = Adam::new(lora.len(), cfg.adam);
+        Ok(Self {
+            engine,
+            corpus: SyntheticCorpus::new(vocab, n_tasks, cfg.seed ^ 0xC0FFEE),
+            lora,
+            adam,
+            rng: Rng::new(cfg.seed ^ 0xDA7A),
+            cfg,
+            n_tasks,
+            logs: Vec::new(),
+            virtual_cluster: None,
+        })
+    }
+
+    /// Attach a virtual cluster (cost model + plan) for simulated-clock
+    /// GPU-seconds reporting alongside the real run.
+    pub fn with_virtual_cluster(mut self, cost: CostModel, plan: DeploymentPlan) -> Self {
+        self.virtual_cluster = Some((cost, plan));
+        self
+    }
+
+    pub fn engine(&self) -> &Engine {
+        &self.engine
+    }
+
+    pub fn lora(&self) -> &ParamVector {
+        &self.lora
+    }
+
+    pub fn logs(&self) -> &[TrainLog] {
+        &self.logs
+    }
+
+    pub fn n_tasks(&self) -> usize {
+        self.n_tasks
+    }
+
+    /// Draw this step's fused workload: per task, `per_task_batch` sequences
+    /// with task-dependent lengths, then pack into the artifact shapes.
+    ///
+    /// Packing mirrors the coordinator: sequences are padded up to the
+    /// smallest artifact seq that fits and grouped into (batch, seq)
+    /// microbatches, each sorted by task id (the L1 kernel contract).
+    fn build_microbatches(&mut self) -> Vec<((u64, u64), Vec<i32>, Vec<i32>)> {
+        let shapes = self.engine.shapes();
+        // per shape: list of (task) pending sequences
+        let mut pending: Vec<Vec<usize>> = vec![Vec::new(); shapes.len()];
+        for t in 0..self.n_tasks {
+            for _ in 0..self.cfg.per_task_batch {
+                // target lengths jitter around the task's corpus mean
+                let base = 32 + 32 * (t % 4) as u64;
+                let len = (base as f64 * (0.5 + self.rng.f64() * 1.5)) as u64;
+                let si = shapes
+                    .iter()
+                    .position(|&(_, s)| s >= len)
+                    .unwrap_or(shapes.len() - 1);
+                pending[si].push(t);
+            }
+        }
+        let mut out = Vec::new();
+        for (si, tasks) in pending.into_iter().enumerate() {
+            let (b, s) = shapes[si];
+            let mut tasks = tasks;
+            tasks.sort_unstable();
+            for chunk in tasks.chunks(b as usize) {
+                // pad the microbatch with repeats of the last task to fill b
+                let mut padded: Vec<usize> = chunk.to_vec();
+                while padded.len() < b as usize {
+                    padded.push(*padded.last().unwrap());
+                }
+                let (toks, segs) = self.corpus.fused_microbatch(&padded, s as usize);
+                out.push(((b, s), toks, segs));
+            }
+        }
+        out
+    }
+
+    /// Run one training step (all microbatches + one Adam update).
+    pub fn step(&mut self) -> Result<TrainLog> {
+        let t0 = std::time::Instant::now();
+        let microbatches = self.build_microbatches();
+        if microbatches.is_empty() {
+            return Err(anyhow!("no microbatches built"));
+        }
+        let mut grad_acc = vec![0f32; self.lora.len()];
+        let mut loss_sum = 0f64;
+        let mut tok_sum = 0f64;
+        let mut task_loss = vec![0f64; self.n_tasks];
+        let mut task_toks = vec![0f64; self.n_tasks];
+        let n_mb = microbatches.len();
+        let mut virtual_loads: Vec<(u64, u64)> = Vec::new();
+        for (shape, toks, segs) in microbatches {
+            let out = self.engine.train_step(shape, &self.lora, &toks, &segs)?;
+            let w = out.tokens as f64;
+            loss_sum += out.loss as f64 * w;
+            tok_sum += w;
+            for (g, gi) in grad_acc.iter_mut().zip(&out.grad) {
+                *g += gi * out.tokens;
+            }
+            for t in 0..self.n_tasks {
+                task_loss[t] += out.task_loss[t] as f64;
+                task_toks[t] += out.task_tokens[t] as f64;
+            }
+            virtual_loads.push(shape);
+        }
+        if tok_sum > 0.0 {
+            for g in &mut grad_acc {
+                *g /= tok_sum as f32;
+            }
+        }
+        self.adam.update(&mut self.lora.data, &grad_acc);
+
+        // virtual-cluster clock: pretend the microbatches were dispatched
+        // over the plan's replicas round-robin.
+        let virtual_seconds = if let Some((cost, plan)) = &self.virtual_cluster {
+            let replicas: Vec<_> = plan
+                .groups
+                .iter()
+                .flat_map(|&(c, p)| std::iter::repeat(c).take(p as usize))
+                .collect();
+            let mut per_replica: Vec<Vec<BucketLoad>> = vec![Vec::new(); replicas.len()];
+            for (i, &(b, s)) in virtual_loads.iter().enumerate() {
+                per_replica[i % replicas.len()]
+                    .push(BucketLoad { count: b, padded_len: s });
+            }
+            replicas
+                .iter()
+                .zip(&per_replica)
+                .map(|(&c, loads)| cost.replica_time(c, loads))
+                .fold(0.0f64, f64::max)
+        } else {
+            0.0
+        };
+
+        let log = TrainLog {
+            step: self.adam.step_count(),
+            loss: if tok_sum > 0.0 { loss_sum / tok_sum } else { f64::NAN },
+            task_loss: (0..self.n_tasks)
+                .map(|t| (task_toks[t] > 0.0).then(|| task_loss[t] / task_toks[t]))
+                .collect(),
+            microbatches: n_mb,
+            wall_seconds: t0.elapsed().as_secs_f64(),
+            virtual_seconds,
+        };
+        self.logs.push(log.clone());
+        Ok(log)
+    }
+
+    /// Run `n` steps, invoking `on_log` after each.
+    pub fn run(&mut self, n: usize, mut on_log: impl FnMut(&TrainLog)) -> Result<()> {
+        for _ in 0..n {
+            let log = self.step()?;
+            on_log(&log);
+        }
+        Ok(())
+    }
+
+    /// Save the LoRA adapters (the only trainable state).
+    pub fn save_checkpoint(&self, path: &str) -> Result<()> {
+        self.lora.save(path)
+    }
+
+    /// Restore LoRA adapters.
+    pub fn load_checkpoint(&mut self, path: &str) -> Result<()> {
+        self.lora = ParamVector::load(path, self.lora.len())?;
+        Ok(())
+    }
+}

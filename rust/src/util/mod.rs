@@ -1,0 +1,11 @@
+//! Small shared utilities (the offline build keeps external deps to the
+//! `xla` bindings + `anyhow`, so JSON parsing, RNG, parallel map, and the
+//! bench harness live here).
+
+pub mod bench;
+pub mod json;
+pub mod par;
+pub mod rng;
+pub mod stats;
+
+pub use rng::Rng;

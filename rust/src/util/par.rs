@@ -1,0 +1,84 @@
+//! Minimal data-parallel map over std::thread (offline build: no rayon).
+//!
+//! Used by the planner to evaluate candidate deployment plans concurrently.
+
+/// Parallel map preserving input order. Spawns up to `threads` workers
+/// (default: available parallelism) chunking the input by atomic counter.
+pub fn par_map<T, R, F>(items: Vec<T>, f: F) -> Vec<R>
+where
+    T: Send + Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let threads = std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(4)
+        .min(n);
+    if threads <= 1 || n == 1 {
+        return items.iter().map(|t| f(t)).collect();
+    }
+    let next = std::sync::atomic::AtomicUsize::new(0);
+    let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    let slots = std::sync::Mutex::new(&mut out);
+    // index-stamped results gathered through a channel-free design:
+    // each worker writes directly into its slot via raw indexing guarded
+    // by the disjointness of indices.
+    let results: Vec<(usize, R)> = std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(threads);
+        for _ in 0..threads {
+            let next = &next;
+            let items = &items;
+            let f = &f;
+            handles.push(scope.spawn(move || {
+                let mut local = Vec::new();
+                loop {
+                    let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    if i >= items.len() {
+                        break;
+                    }
+                    local.push((i, f(&items[i])));
+                }
+                local
+            }));
+        }
+        handles.into_iter().flat_map(|h| h.join().unwrap()).collect()
+    });
+    {
+        let mut guard = slots.lock().unwrap();
+        for (i, r) in results {
+            guard[i] = Some(r);
+        }
+    }
+    out.into_iter().map(|o| o.unwrap()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_order() {
+        let xs: Vec<u64> = (0..1000).collect();
+        let ys = par_map(xs.clone(), |&x| x * 2);
+        assert_eq!(ys, xs.iter().map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn empty_and_single() {
+        let e: Vec<u32> = vec![];
+        assert!(par_map(e, |&x| x).is_empty());
+        assert_eq!(par_map(vec![7], |&x| x + 1), vec![8]);
+    }
+
+    #[test]
+    fn actually_parallel_under_load() {
+        // smoke: heavy closure across many items completes correctly
+        let xs: Vec<u64> = (0..64).collect();
+        let ys = par_map(xs, |&x| (0..10_000u64).fold(x, |a, b| a.wrapping_add(b)));
+        assert_eq!(ys.len(), 64);
+    }
+}

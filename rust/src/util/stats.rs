@@ -1,0 +1,100 @@
+//! Moment statistics used to validate synthetic length distributions
+//! against the paper's Table 4 (mean / skewness / kurtosis per dataset).
+
+/// Sample mean.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Unbiased-ish central moments based summary.
+pub struct Moments {
+    pub mean: f64,
+    pub std: f64,
+    /// Fisher skewness g1.
+    pub skewness: f64,
+    /// Excess kurtosis g2 (normal = 0), matching Table 4's convention.
+    pub kurtosis: f64,
+}
+
+pub fn moments(xs: &[f64]) -> Moments {
+    let n = xs.len().max(1) as f64;
+    let m = mean(xs);
+    let (mut m2, mut m3, mut m4) = (0.0, 0.0, 0.0);
+    for &x in xs {
+        let d = x - m;
+        m2 += d * d;
+        m3 += d * d * d;
+        m4 += d * d * d * d;
+    }
+    m2 /= n;
+    m3 /= n;
+    m4 /= n;
+    let std = m2.sqrt();
+    let skewness = if m2 > 0.0 { m3 / m2.powf(1.5) } else { 0.0 };
+    let kurtosis = if m2 > 0.0 { m4 / (m2 * m2) - 3.0 } else { 0.0 };
+    Moments { mean: m, std, skewness, kurtosis }
+}
+
+/// Empirical CDF evaluated at `points` (fraction of xs <= p).
+pub fn ecdf(xs: &[f64], points: &[f64]) -> Vec<f64> {
+    let mut sorted = xs.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    points
+        .iter()
+        .map(|&p| {
+            let idx = sorted.partition_point(|&x| x <= p);
+            idx as f64 / sorted.len().max(1) as f64
+        })
+        .collect()
+}
+
+/// p-quantile (nearest-rank) of unsorted data.
+pub fn quantile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut sorted = xs.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let idx = ((p * (sorted.len() - 1) as f64).round() as usize).min(sorted.len() - 1);
+    sorted[idx]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn moments_of_constant() {
+        let m = moments(&[5.0; 100]);
+        assert_eq!(m.mean, 5.0);
+        assert_eq!(m.std, 0.0);
+        assert_eq!(m.skewness, 0.0);
+    }
+
+    #[test]
+    fn skew_of_symmetric_is_zero() {
+        let xs: Vec<f64> = (0..1000).map(|i| i as f64).collect();
+        let m = moments(&xs);
+        assert!(m.skewness.abs() < 1e-9);
+        // uniform has excess kurtosis -1.2
+        assert!((m.kurtosis + 1.2).abs() < 0.01);
+    }
+
+    #[test]
+    fn ecdf_monotone() {
+        let xs = vec![1.0, 2.0, 3.0, 4.0];
+        let c = ecdf(&xs, &[0.5, 1.0, 2.5, 4.0, 9.0]);
+        assert_eq!(c, vec![0.0, 0.25, 0.5, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn quantile_basics() {
+        let xs = vec![3.0, 1.0, 2.0, 4.0, 5.0];
+        assert_eq!(quantile(&xs, 0.0), 1.0);
+        assert_eq!(quantile(&xs, 1.0), 5.0);
+        assert_eq!(quantile(&xs, 0.5), 3.0);
+    }
+}

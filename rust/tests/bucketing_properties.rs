@@ -1,0 +1,109 @@
+//! Randomized property tests for the dynamic bucketing DP (Eq. 4).
+
+use lobra::coordinator::bucketing::{
+    bucketize, bucketize_bruteforce, buckets_from_boundaries, padding_for,
+    BucketingOptions,
+};
+use lobra::util::Rng;
+
+fn random_lengths(rng: &mut Rng, n: usize, max: u32) -> Vec<u32> {
+    (0..n).map(|_| 1 + rng.below(max as u64) as u32).collect()
+}
+
+#[test]
+fn dp_is_optimal_vs_bruteforce() {
+    let mut rng = Rng::new(42);
+    for trial in 0..200 {
+        let n = 1 + rng.below(40) as usize;
+        let lengths = random_lengths(&mut rng, n, 1200);
+        let r = 1 + rng.below(4) as usize;
+        let opts = BucketingOptions { max_buckets: r, interval: 100, max_intervals: 64 };
+        let dp = bucketize(&lengths, &opts);
+        let bf = bucketize_bruteforce(&lengths, 100, r);
+        assert_eq!(
+            dp.padding_tokens, bf,
+            "trial {trial}: dp {} != brute force {bf} (lengths {lengths:?}, R={r})",
+            dp.padding_tokens
+        );
+    }
+}
+
+#[test]
+fn boundaries_cover_and_counts_conserve() {
+    let mut rng = Rng::new(7);
+    for _ in 0..200 {
+        let n = 1 + rng.below(500) as usize;
+        let lengths = random_lengths(&mut rng, n, 16384);
+        let opts = BucketingOptions::default();
+        let b = bucketize(&lengths, &opts);
+        assert!(*b.boundaries.last().unwrap() >= *lengths.iter().max().unwrap());
+        assert_eq!(b.counts.iter().sum::<u64>(), n as u64);
+        assert!(b.boundaries.windows(2).all(|w| w[0] < w[1]), "not ascending");
+        assert!(b.boundaries.len() <= opts.max_buckets);
+    }
+}
+
+#[test]
+fn padding_consistent_with_padding_for() {
+    let mut rng = Rng::new(9);
+    for _ in 0..100 {
+        let lengths = random_lengths(&mut rng, 200, 8000);
+        let opts = BucketingOptions { max_buckets: 8, interval: 256, max_intervals: 128 };
+        let b = bucketize(&lengths, &opts);
+        // recompute padding against the chosen boundaries
+        let recomputed = padding_for(&lengths, &b.boundaries);
+        assert_eq!(b.padding_tokens, recomputed);
+    }
+}
+
+#[test]
+fn monotone_in_max_buckets() {
+    let mut rng = Rng::new(11);
+    for _ in 0..50 {
+        let lengths = random_lengths(&mut rng, 300, 16000);
+        let mut prev = u64::MAX;
+        for r in [1usize, 2, 4, 8, 16, 32] {
+            let b = bucketize(
+                &lengths,
+                &BucketingOptions { max_buckets: r, interval: 256, max_intervals: 128 },
+            );
+            assert!(
+                b.padding_tokens <= prev,
+                "padding increased at R={r}: {} > {prev}",
+                b.padding_tokens
+            );
+            prev = b.padding_tokens;
+        }
+    }
+}
+
+#[test]
+fn fixed_boundary_buckets_consistent() {
+    let mut rng = Rng::new(13);
+    for _ in 0..100 {
+        let lengths = random_lengths(&mut rng, 150, 10000);
+        let boundaries = vec![512, 2048, 4096, 16384];
+        let b = buckets_from_boundaries(&lengths, &boundaries);
+        assert_eq!(b.counts.iter().sum::<u64>(), 150);
+        assert_eq!(b.padding_tokens, padding_for(&lengths, &boundaries));
+        // every length ≤ its bucket boundary
+        for &l in &lengths {
+            let j = b.bucket_of(l);
+            assert!(boundaries[j] >= l || j == boundaries.len() - 1);
+        }
+    }
+}
+
+#[test]
+fn degenerate_inputs() {
+    let opts = BucketingOptions::default();
+    // all identical lengths → 1 bucket, zero padding
+    let b = bucketize(&[777; 50], &opts);
+    assert_eq!(b.padding_tokens, (777u64.div_ceil(256) * 256 - 777) * 50);
+    // single sequence
+    let b1 = bucketize(&[5], &opts);
+    assert_eq!(b1.counts.iter().sum::<u64>(), 1);
+    // empty
+    let be = bucketize(&[], &opts);
+    assert_eq!(be.padding_tokens, 0);
+}

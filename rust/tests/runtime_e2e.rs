@@ -1,0 +1,125 @@
+//! End-to-end runtime tests over the real PJRT engine + AOT artifacts.
+//!
+//! These require `make artifacts` (they skip politely when artifacts are
+//! absent). Engine compilation dominates test time, so the checks are
+//! grouped into two test functions sharing one engine each.
+
+use lobra::data::SyntheticCorpus;
+use lobra::runtime::Engine;
+use lobra::train::{Trainer, TrainerConfig};
+use std::path::PathBuf;
+
+fn artifacts_dir() -> Option<String> {
+    let p = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    p.join("manifest.json")
+        .exists()
+        .then(|| p.to_string_lossy().to_string())
+}
+
+#[test]
+fn engine_contract() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let mut engine = Engine::load(&dir).unwrap();
+    let (base, lora) = engine.init_params(7);
+    engine.set_base(&base).unwrap();
+    let m = engine.manifest().clone();
+    let n_tasks = m.model.n_tasks as usize;
+    let mut corpus = SyntheticCorpus::new(m.model.vocab as u32, n_tasks, 1);
+
+    // --- executes all shapes with finite loss + nonzero grads ------------
+    for (b, s) in engine.shapes() {
+        let tasks: Vec<usize> = (0..b as usize).map(|i| i % n_tasks).collect();
+        let (toks, segs) = corpus.fused_microbatch(&tasks, s as usize);
+        let out = engine.train_step((b, s), &lora, &toks, &segs).unwrap();
+        assert!(out.loss.is_finite() && out.loss > 0.0, "shape {b}x{s}");
+        assert_eq!(out.grad.len(), lora.len());
+        assert!(out.tokens > 0.0);
+        let gnorm: f64 = out.grad.iter().map(|&g| (g as f64).powi(2)).sum::<f64>().sqrt();
+        assert!(gnorm > 0.0, "zero gradient at {b}x{s}");
+        let tl: f32 = out.task_tokens.iter().sum();
+        assert!((tl - out.tokens).abs() < 1.0, "task tokens {tl} vs {}", out.tokens);
+    }
+
+    // --- gradient locality: only task 0 present => others get zero -------
+    let (b, s) = engine.shapes()[0];
+    let tasks0 = vec![0usize; b as usize];
+    let (toks, segs) = corpus.fused_microbatch(&tasks0, s as usize);
+    let out = engine.train_step((b, s), &lora, &toks, &segs).unwrap();
+    for e in &m.lora_params {
+        let per_task = (e.size / n_tasks as u64) as usize;
+        let lo = e.offset as usize;
+        for t in 1..n_tasks {
+            let sl = &out.grad[lo + t * per_task..lo + (t + 1) * per_task];
+            let max = sl.iter().fold(0f32, |a, &b| a.max(b.abs()));
+            assert_eq!(max, 0.0, "{}: task {t} got gradient", e.name);
+        }
+    }
+
+    // --- determinism -------------------------------------------------------
+    let o1 = engine.train_step((b, s), &lora, &toks, &segs).unwrap();
+    let o2 = engine.train_step((b, s), &lora, &toks, &segs).unwrap();
+    assert_eq!(o1.loss, o2.loss);
+    assert_eq!(o1.grad, o2.grad);
+
+    // --- eval path ---------------------------------------------------------
+    if let Some((eb, es)) = engine.eval_shape() {
+        let etasks: Vec<usize> = (0..eb as usize).map(|i| i % n_tasks).collect();
+        let (etoks, esegs) = corpus.fused_microbatch(&etasks, es as usize);
+        let (loss, toks, _, tt) = engine.eval_loss(&lora, &etoks, &esegs).unwrap();
+        assert!(loss.is_finite() && loss > 0.0);
+        assert!((tt.iter().sum::<f32>() - toks).abs() < 1.0);
+    }
+
+    // --- malformed inputs rejected ------------------------------------------
+    let toks_ok = vec![1i32; (b * s) as usize];
+    let mut bad_segs = vec![0i32; b as usize];
+    if b >= 2 {
+        bad_segs[0] = 1; // unsorted
+        assert!(engine.train_step((b, s), &lora, &toks_ok, &bad_segs).is_err());
+    }
+    assert!(engine
+        .train_step((b, s), &lora, &toks_ok[..toks_ok.len() - 1], &vec![0; b as usize])
+        .is_err());
+    assert!(engine
+        .train_step((b + 1, s), &lora, &toks_ok, &vec![0; b as usize + 1])
+        .is_err());
+}
+
+#[test]
+fn trainer_learns_and_checkpoints() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let mut cfg = TrainerConfig::default();
+    cfg.adam.lr = 1e-2;
+    cfg.per_task_batch = 2;
+    cfg.seed = 5;
+    let mut trainer = Trainer::new(&dir, cfg).unwrap();
+
+    let mut first = None;
+    trainer
+        .run(8, |log| {
+            if first.is_none() {
+                first = Some(log.loss);
+            }
+            assert!(log.loss.is_finite());
+            assert!(log.microbatches > 0);
+        })
+        .unwrap();
+    let last = trainer.logs().last().unwrap().loss;
+    assert!(last < first.unwrap(), "no improvement: {:?} -> {last}", first);
+
+    // checkpoint roundtrip
+    let path = std::env::temp_dir().join("lobra_test_trainer.ckpt");
+    let path = path.to_string_lossy().to_string();
+    trainer.save_checkpoint(&path).unwrap();
+    let norm_before = trainer.lora().norm();
+    trainer.step().unwrap();
+    assert_ne!(trainer.lora().norm(), norm_before);
+    trainer.load_checkpoint(&path).unwrap();
+    assert_eq!(trainer.lora().norm(), norm_before);
+}

@@ -1,0 +1,161 @@
+//! Randomized property tests for the min–max dispatch solvers (the role
+//! proptest would play; generation is driven by the in-tree deterministic
+//! RNG so failures are reproducible by seed).
+//!
+//! Invariants certified over hundreds of random instances:
+//!  * feasibility: demand conservation + support constraints
+//!  * `solve_balanced` never loses to `solve_length_based`
+//!  * the fractional optimum lower-bounds every integer solution
+//!  * B&B (exact) never loses to the heuristic, and the heuristic is
+//!    within a small factor of exact on small instances
+
+use lobra::solver::{
+    bnb, makespan, solve_balanced, solve_fractional, solve_length_based,
+    DispatchProblem, GroupSpec,
+};
+use lobra::util::Rng;
+
+/// Random instance with nested support structure (as in LobRA: group i
+/// supports buckets `0..=r_i`).
+fn random_problem(rng: &mut Rng, max_groups: usize, max_buckets: usize, max_demand: u64) -> DispatchProblem {
+    let n_groups = 1 + rng.below(max_groups as u64) as usize;
+    let n_buckets = 1 + rng.below(max_buckets as u64) as usize;
+    // per-bucket base cost grows with bucket index (longer sequences)
+    let base: Vec<f64> = (0..n_buckets)
+        .map(|j| (j + 1) as f64 * (0.5 + rng.f64()))
+        .collect();
+    let mut groups = Vec::new();
+    for gi in 0..n_groups {
+        // group efficiency factor; later groups support more buckets
+        let eff = 0.5 + rng.f64() * 2.0;
+        let r = if gi == n_groups - 1 {
+            n_buckets // someone must support everything
+        } else {
+            1 + rng.below(n_buckets as u64) as usize
+        };
+        let costs: Vec<f64> = (0..n_buckets)
+            .map(|j| if j < r { base[j] * eff } else { f64::INFINITY })
+            .collect();
+        groups.push(GroupSpec {
+            costs,
+            replicas: 1 + rng.below(4) as u32,
+            fixed: rng.f64() * 0.5,
+        });
+    }
+    let demand: Vec<u64> = (0..n_buckets).map(|_| rng.below(max_demand + 1)).collect();
+    DispatchProblem { groups, demand }
+}
+
+#[test]
+fn balanced_feasible_and_no_worse_than_length_based() {
+    let mut rng = Rng::new(0xF00D);
+    for trial in 0..300 {
+        let p = random_problem(&mut rng, 5, 8, 40);
+        let lb = solve_length_based(&p).expect("satisfiable by construction");
+        let bal = solve_balanced(&p).expect("satisfiable by construction");
+        assert!(bal.is_feasible(&p), "trial {trial}: balanced infeasible");
+        assert!(lb.is_feasible(&p), "trial {trial}: length-based infeasible");
+        assert!(
+            bal.makespan <= lb.makespan + 1e-6,
+            "trial {trial}: balanced {} > length-based {}",
+            bal.makespan,
+            lb.makespan
+        );
+        // reported makespan must match recomputation
+        assert!((makespan(&p, &bal.d) - bal.makespan).abs() < 1e-9);
+    }
+}
+
+#[test]
+fn fractional_lower_bounds_integer() {
+    let mut rng = Rng::new(0xBEEF);
+    for trial in 0..300 {
+        let p = random_problem(&mut rng, 4, 6, 30);
+        let (t_frac, d_frac) = solve_fractional(&p).unwrap();
+        let bal = solve_balanced(&p).unwrap();
+        assert!(
+            t_frac <= bal.makespan + 1e-6,
+            "trial {trial}: fractional {} > integer {}",
+            t_frac,
+            bal.makespan
+        );
+        // fractional assignment conserves demand
+        for (j, &bj) in p.demand.iter().enumerate() {
+            let total: f64 = d_frac.iter().map(|row| row[j]).sum();
+            assert!(
+                (total - bj as f64).abs() < 1e-6,
+                "trial {trial}: bucket {j} fractional {total} != {bj}"
+            );
+        }
+    }
+}
+
+#[test]
+fn exact_bnb_certifies_heuristic_on_small_instances() {
+    let mut rng = Rng::new(0xCAFE);
+    let mut worst_gap: f64 = 0.0;
+    for trial in 0..60 {
+        let p = random_problem(&mut rng, 3, 3, 6);
+        let bal = solve_balanced(&p).unwrap();
+        let exact = bnb::solve_exact(&p, 3_000_000).unwrap();
+        assert!(exact.is_feasible(&p));
+        assert!(
+            exact.makespan <= bal.makespan + 1e-9,
+            "trial {trial}: exact {} > heuristic {}",
+            exact.makespan,
+            bal.makespan
+        );
+        if exact.makespan > 0.0 {
+            worst_gap = worst_gap.max(bal.makespan / exact.makespan - 1.0);
+        }
+    }
+    // the heuristic should be near-optimal on these instances
+    assert!(worst_gap < 0.25, "heuristic gap {worst_gap:.3} too large");
+}
+
+#[test]
+fn zero_demand_buckets_never_assigned() {
+    let mut rng = Rng::new(0xD1CE);
+    for _ in 0..100 {
+        let mut p = random_problem(&mut rng, 4, 5, 20);
+        let kill = rng.below(p.demand.len() as u64) as usize;
+        p.demand[kill] = 0;
+        let bal = solve_balanced(&p).unwrap();
+        let total: u64 = bal.d.iter().map(|row| row[kill]).sum();
+        assert_eq!(total, 0);
+    }
+}
+
+#[test]
+fn single_group_gets_everything() {
+    let mut rng = Rng::new(0xAB);
+    for _ in 0..50 {
+        let p = random_problem(&mut rng, 1, 6, 25);
+        let bal = solve_balanced(&p).unwrap();
+        for (j, &bj) in p.demand.iter().enumerate() {
+            assert_eq!(bal.d[0][j], bj);
+        }
+    }
+}
+
+#[test]
+fn makespan_scale_invariance() {
+    // scaling all costs by k scales the optimum by ~k (fixed costs too)
+    let mut rng = Rng::new(0x5CA1E);
+    for _ in 0..50 {
+        let p = random_problem(&mut rng, 4, 5, 20);
+        let mut p2 = p.clone();
+        for g in &mut p2.groups {
+            for c in &mut g.costs {
+                *c *= 3.0;
+            }
+            g.fixed *= 3.0;
+        }
+        let a = solve_balanced(&p).unwrap();
+        let b = solve_balanced(&p2).unwrap();
+        if a.makespan > 0.0 {
+            let ratio = b.makespan / a.makespan;
+            assert!((ratio - 3.0).abs() < 0.3, "ratio {ratio}");
+        }
+    }
+}
