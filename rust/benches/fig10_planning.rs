@@ -42,6 +42,7 @@ fn main() {
     let mut ratios_decomp = Vec::new();
     let mut ratios_actual = Vec::new();
     let mut step_times = Vec::new();
+    let mut stats = PlanningStats::default();
 
     for step in 0..steps {
         let batch = sampler.next_batch();
@@ -58,7 +59,7 @@ fn main() {
 
         // original problem: joint re-plan for this very batch (Eq. 1)
         let t1 = std::time::Instant::now();
-        let mut stats = PlanningStats::default();
+        stats = PlanningStats::default();
         let origin = planner.plan_for_buckets(
             &buckets,
             sc.tasks.len() as u32,
@@ -81,6 +82,15 @@ fn main() {
 
     let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len().max(1) as f64;
     let max = |v: &[f64]| v.iter().cloned().fold(f64::MIN, f64::max);
+
+    println!(
+        "planner search (last re-plan): {} candidate configs, {} plans enumerated,\n\
+         {} after lower-bound filter, peak plan storage {} (survivor-bounded)\n",
+        stats.n_candidate_configs,
+        stats.n_plans_enumerated,
+        stats.n_plans_after_filter,
+        stats.peak_plan_storage
+    );
 
     println!("-- left: solve time vs step time --");
     let mut t = Table::new(&["quantity", "mean", "max"]);

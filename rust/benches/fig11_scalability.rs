@@ -23,12 +23,18 @@ fn main() {
         .ok()
         .and_then(|s| s.parse().ok())
         .unwrap_or(50);
+    // the streaming planner keeps 128-GPU planning survivor-bounded; opt in
+    // with LOBRA_BENCH_MAX_GPUS=128 (the default stops at the paper's 64)
+    let max_gpus: u32 = std::env::var("LOBRA_BENCH_MAX_GPUS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(64);
 
     println!("== Figure 11 (left): GPU scalability, 70B, 4 tasks ({steps} steps) ==\n");
     let mut t = Table::new(&[
         "GPUs", "Task-Fused GPU·s", "LobRA GPU·s", "reduction", "fused plan", "lobra plan",
     ]);
-    for gpus in [16u32, 32, 64] {
+    for gpus in [16u32, 32, 64, 128].into_iter().filter(|&g| g <= max_gpus) {
         let sc = Scenario::new(
             &format!("70B/{gpus}"),
             ModelDesc::llama2_70b(),

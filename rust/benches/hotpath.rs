@@ -11,7 +11,8 @@
 
 use lobra::coordinator::bucketing::{bucketize, BucketingOptions};
 use lobra::coordinator::dispatcher::{DispatchPolicy, Dispatcher};
-use lobra::coordinator::planner::Planner;
+use lobra::coordinator::planner::{LowerBoundScratch, Planner};
+use lobra::costmodel::CostTable;
 use lobra::data::MultiTaskSampler;
 use lobra::experiments::Scenario;
 use lobra::solver::{self, partition};
@@ -62,12 +63,37 @@ fn main() {
     // planner-side inner loops (one-shot cost, but Table 5 scales with them)
     let configs = planner.propose_configs(&buckets.boundaries, true);
     let plans = partition::enumerate_plans(&configs, 16, 16, None, 1_000_000);
-    bench("plan enumeration (N=16)", &mut || {
+    bench("plan enumeration (N=16, collected)", &mut || {
         std::hint::black_box(partition::enumerate_plans(&configs, 16, 16, None, 1_000_000));
     });
+    bench("plan enumeration (N=16, streaming)", &mut || {
+        let mut n = 0u64;
+        partition::visit_plans(&configs, 16, 16, None, &mut |_| {
+            n += 1;
+            true
+        });
+        std::hint::black_box(n);
+    });
     let one = plans[plans.len() / 2].clone();
-    bench("Theorem-1 lower bound (one plan)", &mut || {
+    bench("Theorem-1 lower bound (uncached)", &mut || {
         std::hint::black_box(planner.lower_bound(&configs, &one, &buckets));
+    });
+    let table = CostTable::build(&cost, &configs, &buckets.boundaries);
+    bench("CostTable build (configs x buckets)", &mut || {
+        std::hint::black_box(CostTable::build(&cost, &configs, &buckets.boundaries));
+    });
+    let mut scratch = LowerBoundScratch::new();
+    bench("Theorem-1 lower bound (memoized)", &mut || {
+        std::hint::black_box(planner.lower_bound_cached(
+            &table,
+            &one.counts,
+            &buckets,
+            &mut scratch,
+        ));
+    });
+    let popts = sc.planner_opts();
+    bench("fused streaming search (N=16)", &mut || {
+        std::hint::black_box(planner.filtered_plans(&configs, &table, &buckets, &popts));
     });
 
     println!("== hot-path microbenchmarks ==\n");

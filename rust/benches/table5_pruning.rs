@@ -91,6 +91,13 @@ fn main() {
                     }
                     if filter {
                         final_plan = plan.notation();
+                        eprintln!(
+                            "    {gpus} GPUs w/ filter: {} enumerated, {} survivors, \
+                             peak storage {}",
+                            stats.n_plans_enumerated,
+                            stats.n_plans_after_filter,
+                            stats.peak_plan_storage
+                        );
                     }
                 }
                 None => cells.push("-".into()),

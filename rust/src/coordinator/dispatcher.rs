@@ -10,7 +10,7 @@
 use crate::config::ParallelConfig;
 use crate::coordinator::bucketing::Buckets;
 use crate::coordinator::planner::DeploymentPlan;
-use crate::costmodel::{BucketLoad, CostModel};
+use crate::costmodel::{BucketLoad, CostModel, CostTable};
 use crate::solver::{self, DispatchProblem, GroupSpec};
 
 /// Dispatch policy — the ablation axis of Figure 8.
@@ -73,11 +73,41 @@ impl DispatchPlan {
 pub struct Dispatcher<'a> {
     cost: &'a CostModel,
     plan: &'a DeploymentPlan,
+    table: Option<&'a CostTable>,
 }
 
 impl<'a> Dispatcher<'a> {
     pub fn new(cost: &'a CostModel, plan: &'a DeploymentPlan) -> Self {
-        Self { cost, plan }
+        Self { cost, plan, table: None }
+    }
+
+    /// Like [`Self::new`] with a prebuilt [`CostTable`]: `problem` and
+    /// `evaluate` read the memoized per-sequence costs and replica times
+    /// instead of re-deriving them analytically. Lookups outside the
+    /// table's (config × boundary) grid fall back to the model, so results
+    /// are bit-identical either way.
+    pub fn with_table(
+        cost: &'a CostModel,
+        plan: &'a DeploymentPlan,
+        table: &'a CostTable,
+    ) -> Self {
+        Self { cost, plan, table: Some(table) }
+    }
+
+    #[inline]
+    fn per_seq_cost(&self, cfg: ParallelConfig, s: u64) -> f64 {
+        match self.table {
+            Some(t) => t.per_seq_cost(cfg, s),
+            None => self.cost.per_seq_cost(cfg, s),
+        }
+    }
+
+    #[inline]
+    fn replica_time(&self, cfg: ParallelConfig, loads: &[BucketLoad]) -> f64 {
+        match self.table {
+            Some(t) => t.replica_time(cfg, loads),
+            None => self.cost.replica_time(cfg, loads),
+        }
     }
 
     /// Construct the solver instance for the given buckets.
@@ -90,7 +120,7 @@ impl<'a> Dispatcher<'a> {
                 let costs = buckets
                     .boundaries
                     .iter()
-                    .map(|&s| self.cost.per_seq_cost(cfg, s as u64))
+                    .map(|&s| self.per_seq_cost(cfg, s as u64))
                     .collect();
                 GroupSpec {
                     costs,
@@ -134,7 +164,7 @@ impl<'a> Dispatcher<'a> {
                 .boundaries
                 .iter()
                 .map(|&s| {
-                    let c = self.cost.per_seq_cost(cfg, s as u64);
+                    let c = self.per_seq_cost(cfg, s as u64);
                     if c.is_finite() {
                         c
                     } else {
@@ -153,7 +183,7 @@ impl<'a> Dispatcher<'a> {
                         padded_len: buckets.boundaries[j] as u64,
                     })
                     .collect();
-                let t = self.cost.replica_time(cfg, &loads);
+                let t = self.replica_time(cfg, &loads);
                 predicted = predicted.max(t);
                 replica_times.push((cfg, t));
             }
@@ -258,6 +288,31 @@ mod tests {
                 .sum();
             let expected: u64 = dp.d[i].iter().sum();
             assert_eq!(total, expected, "group {i}");
+        }
+    }
+
+    #[test]
+    fn memoized_dispatch_matches_uncached() {
+        let (cost, plan) = setup();
+        let b = buckets();
+        let cfgs: Vec<ParallelConfig> = plan.groups.iter().map(|&(c, _)| c).collect();
+        let table = CostTable::build(&cost, &cfgs, &b.boundaries);
+        for policy in [DispatchPolicy::Balanced, DispatchPolicy::LengthBased] {
+            let plain = Dispatcher::new(&cost, &plan).dispatch(&b, policy).unwrap();
+            let memo = Dispatcher::with_table(&cost, &plan, &table)
+                .dispatch(&b, policy)
+                .unwrap();
+            assert_eq!(plain.d, memo.d, "{policy:?}");
+            assert_eq!(
+                plain.predicted_step_time.to_bits(),
+                memo.predicted_step_time.to_bits(),
+                "{policy:?}"
+            );
+            assert_eq!(
+                plain.solver_makespan.to_bits(),
+                memo.solver_makespan.to_bits(),
+                "{policy:?}"
+            );
         }
     }
 

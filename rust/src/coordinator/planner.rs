@@ -3,28 +3,35 @@
 //! Solved once at joint-FT initialization (and again on task arrival/exit):
 //!
 //! 1. Sample `100×B` lengths, dynamic-bucketize them, and take the bucket
-//!    fractions `f_j` as the expected batch composition.
+//!    fractions `f_j` as the expected batch composition (largest-remainder
+//!    rounded so the expectation batch sums exactly to `B`).
 //! 2. Propose candidate configurations (Observation 1): for every
 //!    `(num_gpus, seq_len)` pair keep only the highest-throughput
 //!    configuration — dominated configs can never be selected.
-//! 3. Enumerate deployment plans = integer partitions of the GPU budget
-//!    over candidates (maximal packing: leaving a whole replica's worth of
-//!    GPUs idle is dominated).
-//! 4. Filter by the Theorem 1 lower bound: `lb = Σ_i N_i·t_i / N` under
-//!    length-based dispatch; drop plans whose bound exceeds the best by
-//!    more than the threshold (default 15%).
+//! 3. Memoize the analytic costs (`per_seq_cost`, `max_seq_len`,
+//!    `max_chunk_tokens`, full-chunk times) once per candidate set ×
+//!    bucket boundaries in a [`CostTable`].
+//! 4. *Fused streaming search*: walk the integer partitions of the GPU
+//!    budget over candidates (maximal packing) with a visitor that scores
+//!    each plan's Theorem-1 lower bound on the fly and discards dominated
+//!    plans immediately — peak plan storage is bounded by the survivor set
+//!    (plus a small compaction slack), never by the enumeration size. The
+//!    search runs as a parallel fold over independent DFS subtrees and
+//!    merges survivors in DFS order, so it is deterministic.
 //! 5. Solve the inner min–max dispatch (Eq. 3 structure) for every
-//!    surviving plan in parallel, evaluate with the exact cost model, and
-//!    keep the best.
+//!    surviving plan in parallel, evaluate with the exact (memoized) cost
+//!    model, and keep the best.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 
 use crate::cluster::ClusterSpec;
 use crate::config::{ParallelConfig, TaskSet};
 use crate::coordinator::bucketing::{bucketize, BucketingOptions, Buckets};
 use crate::coordinator::dispatcher::{DispatchPolicy, Dispatcher};
-use crate::costmodel::{BucketLoad, CostModel};
+use crate::costmodel::{BucketLoad, CostModel, CostTable};
 use crate::data::MultiTaskSampler;
-use crate::solver::partition::{enumerate_plans, Plan};
-use crate::util::par::par_map;
+use crate::solver::partition::{self, Plan};
+use crate::util::par::{max_threads, par_fold, par_map};
 
 /// A deployed set of heterogeneous FT replicas (the paper's Table 2 rows).
 #[derive(Debug, Clone, PartialEq)]
@@ -69,6 +76,10 @@ pub struct PlanningStats {
     pub n_plans_after_filter: usize,
     pub solve_seconds: f64,
     pub hit_plan_cap: bool,
+    /// Upper bound on plans held concurrently during the fused search (sum
+    /// of per-worker buffer peaks) — the quantity the old two-phase path
+    /// blew up to `max_plans` on.
+    pub peak_plan_storage: usize,
 }
 
 /// Planner options (pruning toggles are the Table 5 ablation axes).
@@ -119,6 +130,99 @@ impl Default for PlannerOptions {
             inner_policy: DispatchPolicy::Balanced,
         }
     }
+}
+
+/// Reusable buffers for [`Planner::lower_bound_cached`] — the bound is
+/// evaluated on millions of candidate plans, so per-call allocation would
+/// dominate the search.
+#[derive(Debug, Default)]
+pub struct LowerBoundScratch {
+    per_config: Vec<Vec<BucketLoad>>,
+    loads: Vec<BucketLoad>,
+}
+
+impl LowerBoundScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn reset(&mut self, n_configs: usize) {
+        if self.per_config.len() < n_configs {
+            self.per_config.resize_with(n_configs, Vec::new);
+        }
+        for v in &mut self.per_config {
+            v.clear();
+        }
+    }
+}
+
+/// Survivors + statistics of the fused streaming plan search.
+#[derive(Debug, Clone, Default)]
+pub struct PlanSearch {
+    /// Surviving `(plan, lower bound)` pairs in enumeration (DFS) order.
+    pub survivors: Vec<(Plan, f64)>,
+    pub n_enumerated: usize,
+    pub hit_cap: bool,
+    /// Upper bound on plans held concurrently (sum of per-worker peaks).
+    pub peak_storage: usize,
+}
+
+/// Largest-remainder (Hare quota) rounding: integers proportional to
+/// `counts` summing exactly to `b_total`. Ties break toward lower indices
+/// for determinism. A per-bucket `ceil` would make the expectation batch
+/// exceed `B` and size plans for phantom sequences.
+fn largest_remainder_counts(counts: &[u64], b_total: u64) -> Vec<u64> {
+    let total: u64 = counts.iter().sum();
+    if total == 0 || counts.is_empty() {
+        return vec![0; counts.len()];
+    }
+    let quotas: Vec<f64> = counts
+        .iter()
+        .map(|&c| c as f64 / total as f64 * b_total as f64)
+        .collect();
+    let mut out: Vec<u64> = quotas.iter().map(|&q| q.floor() as u64).collect();
+    let assigned: u64 = out.iter().sum();
+    let mut order: Vec<usize> = (0..counts.len()).collect();
+    order.sort_by(|&a, &b| {
+        let ra = quotas[a] - quotas[a].floor();
+        let rb = quotas[b] - quotas[b].floor();
+        rb.partial_cmp(&ra).unwrap().then(a.cmp(&b))
+    });
+    let mut left = b_total.saturating_sub(assigned);
+    let mut k = 0usize;
+    while left > 0 {
+        out[order[k % order.len()]] += 1;
+        left -= 1;
+        k += 1;
+    }
+    out
+}
+
+/// Calibration sample → expectation-batch buckets, shared by
+/// [`Planner::plan_with_stats`] and [`Planner::plan_homogeneous`]: sample
+/// `calibration_multiple × B` lengths, extend with each task's distribution
+/// maximum (so the plan can process every sequence the tasks may ever
+/// produce — a plan sized only for the sampled max would OOM on a later
+/// batch's tail draw), bucketize, and convert the bucket fractions into
+/// expected per-step counts summing exactly to `B`. The returned sampler
+/// continues the same deterministic stream (for robustness batches).
+fn expectation_buckets(
+    tasks: &TaskSet,
+    opts: &PlannerOptions,
+) -> (MultiTaskSampler, Buckets) {
+    let mut sampler = MultiTaskSampler::new(tasks, opts.seed);
+    let mut lengths = sampler.calibration_lengths(opts.calibration_multiple);
+    for t in &tasks.tasks {
+        lengths.push(t.lengths.max_len);
+    }
+    let calib = bucketize(&lengths, &opts.bucketing);
+    let expected = largest_remainder_counts(&calib.counts, tasks.joint_batch() as u64);
+    let buckets = Buckets {
+        boundaries: calib.boundaries,
+        counts: expected,
+        padding_tokens: 0,
+    };
+    (sampler, buckets)
 }
 
 /// The deployment planner.
@@ -178,55 +282,75 @@ impl<'a> Planner<'a> {
 
     /// Theorem 1 lower bound of a plan: length-based dispatch, then
     /// `lb = Σ_i N_i·t_i / N_used`.
+    ///
+    /// Convenience wrapper over [`Self::lower_bound_cached`] building a
+    /// one-off [`CostTable`]; the planning hot path builds the table once
+    /// and reuses a [`LowerBoundScratch`] across millions of calls.
     pub fn lower_bound(
         &self,
         configs: &[ParallelConfig],
         plan: &Plan,
         buckets: &Buckets,
     ) -> Option<f64> {
+        let table = CostTable::build(self.cost, configs, &buckets.boundaries);
+        let mut scratch = LowerBoundScratch::new();
+        self.lower_bound_cached(&table, &plan.counts, buckets, &mut scratch)
+    }
+
+    /// Memoized Theorem-1 lower bound. `table` must be built for the same
+    /// config order as `counts` indexes and for `buckets.boundaries`.
+    pub fn lower_bound_cached(
+        &self,
+        table: &CostTable,
+        counts: &[u32],
+        buckets: &Buckets,
+        scratch: &mut LowerBoundScratch,
+    ) -> Option<f64> {
+        debug_assert!(table.covers(&buckets.boundaries));
+        debug_assert_eq!(table.n_configs(), counts.len());
+        let n_configs = table.n_configs();
+        let configs = table.configs();
+        scratch.reset(n_configs);
         // length-based: each bucket to the most efficient (per-GPU) config
         // among the plan's deployed configs that supports it.
-        let mut per_config_loads: Vec<Vec<BucketLoad>> =
-            vec![Vec::new(); configs.len()];
-        for (j, (&bj, &s)) in buckets.counts.iter().zip(&buckets.boundaries).enumerate() {
-            let _ = j;
+        for (j, (&bj, &s)) in buckets.counts.iter().zip(&buckets.boundaries).enumerate()
+        {
             if bj == 0 {
                 continue;
             }
+            let s = s as u64;
             let mut best: Option<(f64, usize)> = None;
-            for (i, &c) in configs.iter().enumerate() {
-                if plan.counts[i] == 0 || self.cost.max_seq_len(c) < s as u64 {
+            for i in 0..n_configs {
+                if counts[i] == 0 || table.max_seq_len_at(i) < s {
                     continue;
                 }
-                let eff = self.cost.per_seq_cost(c, s as u64) * c.n() as f64;
+                let eff = table.per_seq_cost_at(i, j) * configs[i].n() as f64;
                 if best.map_or(true, |(e, _)| eff < e) {
                     best = Some((eff, i));
                 }
             }
             let (_, i) = best?;
-            per_config_loads[i].push(BucketLoad { count: bj, padded_len: s as u64 });
+            scratch.per_config[i].push(BucketLoad { count: bj, padded_len: s });
         }
         let mut weighted = 0.0;
         let mut n_used = 0u32;
-        for (i, &c) in configs.iter().enumerate() {
-            let p = plan.counts[i];
+        for i in 0..n_configs {
+            let p = counts[i];
             if p == 0 {
                 continue;
             }
-            n_used += p * c.n();
-            if per_config_loads[i].is_empty() {
+            n_used += p * configs[i].n();
+            if scratch.per_config[i].is_empty() {
                 continue;
             }
             // split the config's load evenly over its p replicas
-            let loads: Vec<BucketLoad> = per_config_loads[i]
-                .iter()
-                .map(|l| BucketLoad {
-                    count: l.count.div_ceil(p as u64),
-                    padded_len: l.padded_len,
-                })
-                .collect();
-            let t = self.cost.replica_time(c, &loads);
-            weighted += (c.n() * p) as f64 * t;
+            scratch.loads.clear();
+            scratch.loads.extend(scratch.per_config[i].iter().map(|l| BucketLoad {
+                count: l.count.div_ceil(p as u64),
+                padded_len: l.padded_len,
+            }));
+            let t = table.replica_time_at(i, &scratch.loads);
+            weighted += (configs[i].n() * p) as f64 * t;
         }
         if n_used == 0 {
             return None;
@@ -246,33 +370,155 @@ impl<'a> Planner<'a> {
             let bj = buckets.counts[j];
             if bj > 0 {
                 // minimal GPU-seconds per bucket-j sequence over the plan
-                let w = configs
-                    .iter()
-                    .enumerate()
-                    .filter(|&(i, c)| {
-                        plan.counts[i] > 0 && self.cost.max_seq_len(*c) >= s
-                    })
-                    .map(|(_, c)| self.cost.per_seq_cost(*c, s) * c.n() as f64)
-                    .fold(f64::INFINITY, f64::min);
+                let mut w = f64::INFINITY;
+                for i in 0..n_configs {
+                    if counts[i] > 0 && table.max_seq_len_at(i) >= s {
+                        w = w.min(table.per_seq_cost_at(i, j) * configs[i].n() as f64);
+                    }
+                }
                 if !w.is_finite() {
                     return None; // no deployed config supports this bucket
                 }
                 suffix += bj as f64 * w;
             }
-            let supporter_gpus: u32 = configs
-                .iter()
-                .enumerate()
-                .filter(|&(i, c)| {
-                    plan.counts[i] > 0 && self.cost.max_seq_len(*c) >= s
-                })
-                .map(|(i, c)| plan.counts[i] * c.n())
-                .sum();
+            let mut supporter_gpus = 0u32;
+            for i in 0..n_configs {
+                if counts[i] > 0 && table.max_seq_len_at(i) >= s {
+                    supporter_gpus += counts[i] * configs[i].n();
+                }
+            }
             if supporter_gpus > 0 && suffix > 0.0 {
-                best_suffix_bound =
-                    best_suffix_bound.max(suffix / supporter_gpus as f64);
+                best_suffix_bound = best_suffix_bound.max(suffix / supporter_gpus as f64);
             }
         }
         Some(thm1.max(best_suffix_bound))
+    }
+
+    /// Fused streaming plan search (steps 3–4 of Eq. 2): enumerate
+    /// maximal-packing plans and filter by the Theorem-1 lower bound *on
+    /// the fly*. Dominated plans are discarded as soon as they are scored,
+    /// so peak storage is bounded by the survivor set (plus a ≤2×
+    /// compaction slack per worker) instead of the full enumeration.
+    ///
+    /// The search folds independent DFS subtrees in parallel and merges
+    /// survivors in DFS order: the result is the exact surviving plan set
+    /// (and order) of the two-phase enumerate-then-filter path, certified
+    /// by `tests/planner_streaming.rs`. When the `max_plans` cap could
+    /// trip, the search runs as a single sequential DFS instead, so the
+    /// capped prefix is the deterministic first-`max_plans`-in-DFS-order
+    /// set (the seed semantics) rather than a thread-timing-dependent one.
+    pub fn filtered_plans(
+        &self,
+        configs: &[ParallelConfig],
+        table: &CostTable,
+        buckets: &Buckets,
+        opts: &PlannerOptions,
+    ) -> PlanSearch {
+        let longest = buckets.boundaries.last().map_or(0, |&s| s as u64);
+        let supports: Vec<bool> =
+            (0..configs.len()).map(|i| table.max_seq_len_at(i) >= longest).collect();
+        let min_n = configs.iter().map(|c| c.n()).min().unwrap_or(1);
+        let min_gpus = self.cluster.n_gpus.saturating_sub(min_n - 1);
+        let n_gpus = self.cluster.n_gpus;
+        let threshold = 1.0 + opts.lower_bound_threshold;
+
+        let enumerated = AtomicUsize::new(0);
+        let capped = AtomicBool::new(false);
+        // Global best bound: non-negative f64 bit patterns order like the
+        // floats, so an integer fetch_min maintains the running minimum
+        // across workers and tightens every worker's pruning cutoff.
+        let best_bits = AtomicU64::new(f64::INFINITY.to_bits());
+
+        struct Acc {
+            survivors: Vec<(Plan, f64)>,
+            peak: usize,
+            floor: usize,
+        }
+
+        // Parallel subtrees race on the shared plan counter, so a capped
+        // run would keep a scheduling-dependent subset; the partition-count
+        // DP is exact and cheap, so use it to detect that case up front
+        // and fall back to one sequential DFS (deterministic cap prefix).
+        let may_cap =
+            partition::count_plans(configs, n_gpus, min_gpus) > opts.max_plans as u64;
+        let prefixes = if may_cap {
+            vec![Vec::new()]
+        } else {
+            partition::dfs_prefixes(configs, n_gpus, max_threads() * 8)
+        };
+
+        let run_prefix = |prefix: &Vec<u32>| -> Acc {
+            let mut acc = Acc { survivors: Vec::new(), peak: 0, floor: 0 };
+            let mut scratch = LowerBoundScratch::new();
+            partition::visit_plans_from(
+                configs,
+                prefix,
+                n_gpus,
+                min_gpus,
+                None,
+                &mut |counts| {
+                    if enumerated.fetch_add(1, Ordering::Relaxed) >= opts.max_plans {
+                        capped.store(true, Ordering::Relaxed);
+                        return false;
+                    }
+                    // plan must deploy something able to run the longest bucket
+                    if !counts.iter().zip(&supports).any(|(&c, &sup)| sup && c > 0) {
+                        return true;
+                    }
+                    if !opts.lower_bound_filter {
+                        acc.survivors.push((Plan { counts: counts.to_vec() }, 0.0));
+                        acc.peak = acc.peak.max(acc.survivors.len());
+                        return true;
+                    }
+                    let Some(lb) =
+                        self.lower_bound_cached(table, counts, buckets, &mut scratch)
+                    else {
+                        return true;
+                    };
+                    let prev =
+                        f64::from_bits(best_bits.fetch_min(lb.to_bits(), Ordering::Relaxed));
+                    // pruning with a stale (higher) best only keeps extras;
+                    // the final cutoff below is exact
+                    if lb <= prev.min(lb) * threshold {
+                        acc.survivors.push((Plan { counts: counts.to_vec() }, lb));
+                        acc.peak = acc.peak.max(acc.survivors.len());
+                        // lazy compaction against the tightened global bound
+                        // keeps the buffer within ~2× of the true survivors
+                        if acc.survivors.len() >= 1024
+                            && acc.survivors.len() >= 2 * acc.floor
+                        {
+                            let cutoff =
+                                f64::from_bits(best_bits.load(Ordering::Relaxed))
+                                    * threshold;
+                            acc.survivors.retain(|&(_, l)| l <= cutoff);
+                            acc.floor = acc.survivors.len();
+                        }
+                    }
+                    true
+                },
+            );
+            acc
+        };
+
+        let merged = par_fold(prefixes, run_prefix, |mut a, mut b| {
+            a.survivors.append(&mut b.survivors);
+            a.peak += b.peak;
+            a
+        });
+        let mut out = PlanSearch::default();
+        let Some(merged) = merged else {
+            return out;
+        };
+        let mut survivors = merged.survivors;
+        if opts.lower_bound_filter {
+            let cutoff = f64::from_bits(best_bits.load(Ordering::Relaxed)) * threshold;
+            survivors.retain(|&(_, lb)| lb <= cutoff);
+        }
+        out.hit_cap = capped.load(Ordering::Relaxed);
+        out.n_enumerated = enumerated.load(Ordering::Relaxed).min(opts.max_plans);
+        out.peak_storage = merged.peak;
+        out.survivors = survivors;
+        out
     }
 
     /// Solve Eq. 2: the full two-stage-decomposed deployment planning.
@@ -292,29 +538,8 @@ impl<'a> Planner<'a> {
             return None;
         }
 
-        // 1. calibration sample → expected buckets. The sample is extended
-        // with each task's distribution maximum so the plan can process
-        // every sequence the tasks may ever produce (a plan sized only for
-        // the sampled max would OOM on a later batch's tail draw).
-        let mut sampler = MultiTaskSampler::new(tasks, opts.seed);
-        let mut lengths = sampler.calibration_lengths(opts.calibration_multiple);
-        for t in &tasks.tasks {
-            lengths.push(t.lengths.max_len);
-        }
-        let calib = bucketize(&lengths, &opts.bucketing);
-        // expected per-step demand: B × f_j
-        let b_total = tasks.joint_batch() as f64;
-        let sample_total: u64 = calib.counts.iter().sum();
-        let expected_counts: Vec<u64> = calib
-            .counts
-            .iter()
-            .map(|&c| ((c as f64 / sample_total.max(1) as f64) * b_total).ceil() as u64)
-            .collect();
-        let buckets = Buckets {
-            boundaries: calib.boundaries.clone(),
-            counts: expected_counts,
-            padding_tokens: 0,
-        };
+        // 1. calibration sample → expected buckets (sums exactly to B).
+        let (mut sampler, buckets) = expectation_buckets(tasks, &opts);
         // Robustness batches: real sampled fused batches, bucketed with the
         // calibration boundaries.
         let eval: Vec<Buckets> = (0..opts.eval_batches)
@@ -322,7 +547,7 @@ impl<'a> Planner<'a> {
                 let batch = sampler.next_batch();
                 crate::coordinator::bucketing::buckets_from_boundaries(
                     &batch.lengths(),
-                    &calib.boundaries,
+                    &buckets.boundaries,
                 )
             })
             .collect();
@@ -369,48 +594,16 @@ impl<'a> Planner<'a> {
         // at least one candidate must support the longest bucket
         configs.iter().find(|c| self.cost.max_seq_len(**c) >= longest)?;
 
-        // 3. enumerate maximal-packing plans
-        let min_n = configs.iter().map(|c| c.n()).min().unwrap_or(1);
-        let min_gpus = self.cluster.n_gpus.saturating_sub(min_n - 1);
-        let plans = enumerate_plans(
-            &configs,
-            self.cluster.n_gpus,
-            min_gpus,
-            None,
-            opts.max_plans,
-        );
-        stats.n_plans_enumerated = plans.len();
-        stats.hit_plan_cap = plans.len() >= opts.max_plans;
+        // 3. memoize the analytic costs once per candidate set × boundaries
+        // — every lower bound and dispatch evaluation below reads the table
+        let table = CostTable::build(self.cost, &configs, &buckets.boundaries);
 
-        // keep only plans able to process the longest bucket
-        let plans: Vec<Plan> = plans
-            .into_iter()
-            .filter(|p| {
-                configs.iter().enumerate().any(|(i, c)| {
-                    p.counts[i] > 0 && self.cost.max_seq_len(*c) >= longest
-                })
-            })
-            .collect();
-
-        // 4. Theorem-1 lower-bound filter
-        let mut survivors: Vec<(Plan, f64)> = if opts.lower_bound_filter {
-            let bounds: Vec<(Plan, f64)> = par_map(plans, |p| {
-                self.lower_bound(&configs, p, buckets).map(|lb| (p.clone(), lb))
-            })
-            .into_iter()
-            .flatten()
-            .collect();
-            let best_lb = bounds
-                .iter()
-                .map(|&(_, lb)| lb)
-                .fold(f64::INFINITY, f64::min);
-            bounds
-                .into_iter()
-                .filter(|&(_, lb)| lb <= best_lb * (1.0 + opts.lower_bound_threshold))
-                .collect()
-        } else {
-            plans.into_iter().map(|p| (p, 0.0)).collect()
-        };
+        // 4. fused streaming enumeration + Theorem-1 lower-bound filter
+        let search = self.filtered_plans(&configs, &table, buckets, opts);
+        stats.n_plans_enumerated = search.n_enumerated;
+        stats.hit_plan_cap = search.hit_cap;
+        stats.peak_plan_storage = search.peak_storage;
+        let mut survivors = search.survivors;
         stats.n_plans_after_filter = survivors.len();
         // Rank-truncation only applies when bounds exist; the "no filter"
         // ablation (Table 5) evaluates everything and pays full price.
@@ -438,7 +631,7 @@ impl<'a> Planner<'a> {
             }
         }
 
-        // 5. inner dispatch solve per surviving plan (parallel)
+        // 5. inner dispatch solve per surviving plan (parallel, memoized)
         let evaluated: Vec<(DeploymentPlan, f64)> = par_map(survivors, |(plan, _)| {
             let groups: Vec<(ParallelConfig, u32)> = configs
                 .iter()
@@ -447,7 +640,7 @@ impl<'a> Planner<'a> {
                 .map(|(&c, &p)| (c, p))
                 .collect();
             let dp = DeploymentPlan { groups, n_tasks, expected_step_time: 0.0 };
-            let dispatcher = Dispatcher::new(self.cost, &dp);
+            let dispatcher = Dispatcher::with_table(self.cost, &dp, &table);
             let solved = dispatcher.dispatch(buckets, opts.inner_policy)?;
             let mut total = solved.predicted_step_time;
             let mut n_eval = 1.0;
@@ -480,25 +673,8 @@ impl<'a> Planner<'a> {
         tasks: &TaskSet,
         opts: &PlannerOptions,
     ) -> Option<DeploymentPlan> {
-        let mut sampler = MultiTaskSampler::new(tasks, opts.seed);
-        let mut lengths = sampler.calibration_lengths(opts.calibration_multiple);
-        for t in &tasks.tasks {
-            lengths.push(t.lengths.max_len);
-        }
-        let calib = bucketize(&lengths, &opts.bucketing);
-        let longest = *calib.boundaries.last()? as u64;
-        let b_total = tasks.joint_batch() as f64;
-        let sample_total: u64 = calib.counts.iter().sum();
-        let expected: Vec<u64> = calib
-            .counts
-            .iter()
-            .map(|&c| ((c as f64 / sample_total.max(1) as f64) * b_total).ceil() as u64)
-            .collect();
-        let buckets = Buckets {
-            boundaries: calib.boundaries.clone(),
-            counts: expected,
-            padding_tokens: 0,
-        };
+        let (_, buckets) = expectation_buckets(tasks, opts);
+        let longest = *buckets.boundaries.last()? as u64;
 
         let candidates = self.feasible_configs(opts.allow_cross_server_tp);
         let mut best: Option<(DeploymentPlan, f64)> = None;
@@ -618,6 +794,41 @@ mod tests {
         let (_, s_nofilter) = planner.plan_with_stats(&tasks, o).unwrap();
         assert!(s_pruned.n_plans_after_filter <= s_nofilter.n_plans_after_filter);
         assert!(s_pruned.n_candidate_configs > 0);
+        // fused search: the filtered run never holds the whole enumeration
+        assert!(
+            s_pruned.peak_plan_storage <= s_nofilter.n_plans_after_filter.max(1024),
+            "peak {} vs enumerated {}",
+            s_pruned.peak_plan_storage,
+            s_nofilter.n_plans_after_filter
+        );
+    }
+
+    #[test]
+    fn expectation_counts_sum_to_joint_batch() {
+        let tasks = TaskSet::paper_7b_subset();
+        let (_, buckets) = expectation_buckets(&tasks, &PlannerOptions::default());
+        assert_eq!(
+            buckets.counts.iter().sum::<u64>(),
+            tasks.joint_batch() as u64,
+            "expectation batch must not contain phantom sequences"
+        );
+    }
+
+    #[test]
+    fn largest_remainder_rounding_exact() {
+        assert_eq!(largest_remainder_counts(&[1, 1, 1], 2), vec![1, 1, 0]);
+        assert_eq!(largest_remainder_counts(&[3, 1], 8), vec![6, 2]);
+        assert_eq!(largest_remainder_counts(&[0, 0], 5), vec![0, 0]);
+        let out = largest_remainder_counts(&[997, 2, 1], 100);
+        assert_eq!(out, vec![100, 0, 0]);
+        for (counts, b) in [
+            (vec![5u64, 7, 11, 13], 64u64),
+            (vec![1, 0, 0, 999], 17),
+            (vec![2, 2, 2], 7),
+        ] {
+            let out = largest_remainder_counts(&counts, b);
+            assert_eq!(out.iter().sum::<u64>(), b, "{counts:?}");
+        }
     }
 
     #[test]

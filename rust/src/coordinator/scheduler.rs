@@ -8,13 +8,13 @@
 //! in [`crate::train`] shares the same dispatch path but executes HLO.
 
 use crate::cluster::GpuLedger;
-use crate::config::TaskSet;
+use crate::config::{ParallelConfig, TaskSet};
 use crate::coordinator::bucketing::{
     bucketize, buckets_from_boundaries, padding_ratio, BucketingOptions, Buckets,
 };
 use crate::coordinator::dispatcher::{DispatchPlan, DispatchPolicy, Dispatcher};
 use crate::coordinator::planner::DeploymentPlan;
-use crate::costmodel::CostModel;
+use crate::costmodel::{CostModel, CostTable};
 use crate::data::MultiTaskSampler;
 use crate::metrics::JointFtReport;
 
@@ -64,6 +64,10 @@ pub struct Scheduler<'a> {
     /// derived once from a calibration sample, like the paper's fixed-
     /// boundary ablation arm.
     fixed: Vec<u32>,
+    /// Memoized cost table, reused while the bucket boundaries repeat
+    /// (always, under fixed bucketing; whenever the per-batch DP lands on
+    /// the same boundaries, under dynamic bucketing).
+    table: Option<CostTable>,
 }
 
 impl<'a> Scheduler<'a> {
@@ -84,6 +88,7 @@ impl<'a> Scheduler<'a> {
             ledger: GpuLedger::new(),
             reports: Vec::new(),
             fixed,
+            table: None,
         }
     }
 
@@ -96,12 +101,14 @@ impl<'a> Scheduler<'a> {
         if self.opts.dynamic_bucketing {
             bucketize(lengths, &self.opts.bucketing)
         } else {
-            // fixed boundaries may not cover an extreme sample: extend with
-            // the batch max if needed (the paper pads to the max boundary).
+            // fixed boundaries may not cover an extreme sample: *append* a
+            // batch-max boundary so the original buckets keep their
+            // coverage — overwriting the last boundary would silently pad
+            // every sequence in the top buckets to the batch max.
             let max_len = lengths.iter().copied().max().unwrap_or(0);
             if max_len > *self.fixed.last().unwrap_or(&0) {
                 let mut b = self.fixed.clone();
-                *b.last_mut().unwrap() = max_len;
+                b.push(max_len);
                 buckets_from_boundaries(lengths, &b)
             } else {
                 buckets_from_boundaries(lengths, &self.fixed)
@@ -116,7 +123,13 @@ impl<'a> Scheduler<'a> {
         let buckets = self.buckets_for(&lengths);
 
         let t0 = std::time::Instant::now();
-        let dispatcher = Dispatcher::new(self.cost, self.plan);
+        if self.table.as_ref().map_or(true, |t| !t.covers(&buckets.boundaries)) {
+            let cfgs: Vec<ParallelConfig> =
+                self.plan.groups.iter().map(|&(c, _)| c).collect();
+            self.table = Some(CostTable::build(self.cost, &cfgs, &buckets.boundaries));
+        }
+        let dispatcher =
+            Dispatcher::with_table(self.cost, self.plan, self.table.as_ref().unwrap());
         let dispatch = dispatcher.dispatch(&buckets, self.opts.policy)?;
         let solve_seconds = t0.elapsed().as_secs_f64();
 
@@ -250,6 +263,33 @@ mod tests {
             dynamic.mean_padding_ratio,
             fixed.mean_padding_ratio
         );
+    }
+
+    #[test]
+    fn fixed_bucketing_appends_overflow_boundary() {
+        // regression: a batch max beyond the last fixed boundary used to
+        // *overwrite* that boundary, silently padding the whole top bucket
+        // to the batch max — it must be appended as a new bucket instead
+        let (cost, cluster, tasks) = world();
+        let planner = Planner::new(&cost, &cluster);
+        let plan = planner.plan(&tasks, PlannerOptions::default()).unwrap();
+        let mut o = SchedulerOptions::default();
+        o.dynamic_bucketing = false;
+        let sched = Scheduler::new(&cost, &plan, &tasks, o);
+        let covered = sched.buckets_for(&[100, 500]);
+        let top = *covered.boundaries.last().unwrap();
+        let huge = top + 4096;
+        let b = sched.buckets_for(&[100, 500, huge]);
+        assert_eq!(b.boundaries.len(), covered.boundaries.len() + 1);
+        assert_eq!(
+            &b.boundaries[..covered.boundaries.len()],
+            &covered.boundaries[..],
+            "original boundaries must keep their coverage"
+        );
+        assert_eq!(*b.boundaries.last().unwrap(), huge);
+        // only the overflow sequence lands in the new top bucket
+        assert_eq!(b.counts.last().copied(), Some(1));
+        assert_eq!(b.counts.iter().sum::<u64>(), 3);
     }
 
     #[test]

@@ -31,6 +31,10 @@ pub enum ReplanOutcome {
     },
     /// No tasks left; the joint FT job drains.
     Drained,
+    /// Arrival rejected: a live task already uses this name. `Exit`
+    /// removes by name, so admitting a duplicate would make teardown
+    /// ambiguous — the tenant must resubmit under a unique name.
+    Rejected,
 }
 
 /// Multi-tenant task manager: owns the live task set + current plan.
@@ -42,6 +46,9 @@ pub struct TaskManager<'a> {
     plan: Option<DeploymentPlan>,
     /// Count of redeployments (exposed for tests / reports).
     pub redeploys: u32,
+    /// Count of planner invocations — events that leave the task set
+    /// unchanged (e.g. an `Exit` naming an unknown task) must not add one.
+    pub replans: u32,
     /// Simulated checkpoint+restart cost per redeploy, seconds.
     pub adjustment_cost: f64,
 }
@@ -60,6 +67,7 @@ impl<'a> TaskManager<'a> {
             tasks: initial,
             plan: None,
             redeploys: 0,
+            replans: 0,
             // paper: "consistently less than 3 minutes"; LoRA checkpoints
             // are tiny, the cost is dominated by process restart + load.
             adjustment_cost: 120.0,
@@ -81,20 +89,35 @@ impl<'a> TaskManager<'a> {
             self.plan = None;
             return None;
         }
+        self.replans += 1;
         let planner = Planner::new(self.cost, self.cluster);
         let plan = planner.plan(&self.tasks, self.opts.clone());
         self.plan = plan.clone();
         plan
     }
 
-    /// Apply an event; re-plan with the updated task batch.
+    /// Apply an event; re-plan with the updated task batch. Events that
+    /// leave the task set unchanged (unknown `Exit`, duplicate-name
+    /// `Arrive`) skip the replan entirely.
     pub fn handle(&mut self, event: TaskEvent) -> ReplanOutcome {
         let before = self.plan.clone();
         match event {
             TaskEvent::Arrive(spec) => {
+                // `Exit` removes by name, so a duplicate name would let one
+                // tenant tear down another's task; silently renaming would
+                // leave the submitter unable to address its own task. The
+                // task set is unchanged, so no replan either.
+                if self.tasks.tasks.iter().any(|t| t.name == spec.name) {
+                    return ReplanOutcome::Rejected;
+                }
                 self.tasks.tasks.push(spec);
             }
             TaskEvent::Exit { name } => {
+                if !self.tasks.tasks.iter().any(|t| t.name == name) {
+                    // unknown task: the set did not change — a full replan
+                    // here would burn minutes of planner time for nothing
+                    return ReplanOutcome::Unchanged;
+                }
                 self.tasks.tasks.retain(|t| t.name != name);
             }
         }
@@ -179,7 +202,7 @@ mod tests {
     }
 
     #[test]
-    fn unknown_exit_keeps_plan() {
+    fn unknown_exit_keeps_plan_without_replanning() {
         let (cost, cluster) = world();
         let mut mgr = TaskManager::new(
             &cost,
@@ -187,8 +210,42 @@ mod tests {
             TaskSet::paper_7b_subset(),
             PlannerOptions::default(),
         );
+        let replans_before = mgr.replans;
         let out = mgr.handle(TaskEvent::Exit { name: "not-a-task".into() });
         assert_eq!(out, ReplanOutcome::Unchanged);
         assert_eq!(mgr.tasks().len(), 6);
+        // regression: the unchanged task set must not trigger a replan
+        assert_eq!(mgr.replans, replans_before, "unknown exit ran the planner");
+        assert_eq!(mgr.redeploys, 0);
+    }
+
+    #[test]
+    fn duplicate_arrival_rejected_without_replanning() {
+        let (cost, cluster) = world();
+        let spec = TaskSpec::new("dup", 64, LengthDistribution::fit(200.0, 2.0, 16, 1024));
+        let initial = TaskSet::new(vec![spec.clone()]);
+        let mut mgr =
+            TaskManager::new(&cost, &cluster, initial, PlannerOptions::default());
+        let replans_before = mgr.replans;
+        let out = mgr.handle(TaskEvent::Arrive(spec.clone()));
+        assert_eq!(out, ReplanOutcome::Rejected);
+        assert_eq!(mgr.tasks().len(), 1, "duplicate must not be admitted");
+        assert_eq!(mgr.replans, replans_before, "rejection must not replan");
+        // a uniquely named resubmission is admitted normally
+        let mut renamed = spec;
+        renamed.name = "dup-2".into();
+        let out = mgr.handle(TaskEvent::Arrive(renamed));
+        assert_ne!(out, ReplanOutcome::Rejected);
+        assert_eq!(mgr.tasks().len(), 2);
+        // exits stay unambiguous: each name removes exactly one task
+        assert_ne!(
+            mgr.handle(TaskEvent::Exit { name: "dup".into() }),
+            ReplanOutcome::Drained
+        );
+        assert_eq!(
+            mgr.handle(TaskEvent::Exit { name: "dup-2".into() }),
+            ReplanOutcome::Drained
+        );
+        assert!(mgr.tasks().is_empty());
     }
 }

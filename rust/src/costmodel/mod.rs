@@ -20,10 +20,12 @@
 
 pub mod calibrate;
 mod replica;
+mod table;
 mod timing;
 
 pub use calibrate::{FittedCost, Observation, ProfiledCost};
 pub use replica::{BucketLoad, ChunkPlan};
+pub use table::CostTable;
 pub use timing::MicrobatchTime;
 
 use crate::cluster::{ClusterSpec, CommModel};

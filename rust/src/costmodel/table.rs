@@ -1,0 +1,278 @@
+//! Memoized cost-model lookups for the planning hot path.
+//!
+//! Deployment planning evaluates the Theorem-1 lower bound and the inner
+//! dispatch problem on up to millions of candidate plans, and every single
+//! evaluation needs `per_seq_cost(cfg, s_j)`, `max_seq_len(cfg)` and
+//! `max_chunk_tokens(cfg)` for the same handful of (configuration ×
+//! bucket-boundary) pairs. Those are pure functions of the (model, cluster,
+//! config, boundary) tuple, so the planner precomputes them once per
+//! candidate set × boundaries and reads them from this table instead of
+//! re-deriving the analytic model from first principles each time.
+//!
+//! Values are stored exactly as computed by [`CostModel`], so lookups are
+//! bit-identical to the uncached calls (certified by the
+//! `costtable_bit_identical_to_costmodel` integration test); by-value
+//! lookups fall back to the model for untabulated inputs, which keeps the
+//! semantics identical everywhere the table is threaded through.
+
+use crate::config::ParallelConfig;
+use crate::costmodel::{BucketLoad, CostModel};
+
+/// Precomputed per-(config × boundary) analytic costs.
+#[derive(Debug, Clone)]
+pub struct CostTable {
+    cost: CostModel,
+    configs: Vec<ParallelConfig>,
+    /// Bucket boundaries (ascending), as padded lengths.
+    boundaries: Vec<u64>,
+    /// Per config: longest supported sequence.
+    max_seq_len: Vec<u64>,
+    /// Per config: memory-model chunk capacity.
+    max_chunk_tokens: Vec<u64>,
+    /// Config-major `[i * boundaries.len() + j]`: linear dispatch cost.
+    per_seq: Vec<f64>,
+    /// Config-major: sequences per full chunk, `(cap_i / s_j).max(1)`.
+    per_chunk: Vec<u64>,
+    /// Config-major: `t_microbatch(cfg_i, per_chunk_ij, s_j)`.
+    t_full: Vec<f64>,
+}
+
+impl CostTable {
+    /// Precompute every (config × boundary) entry from `cost`.
+    pub fn build(
+        cost: &CostModel,
+        configs: &[ParallelConfig],
+        boundaries: &[u32],
+    ) -> Self {
+        let bounds: Vec<u64> = boundaries.iter().map(|&b| b as u64).collect();
+        let nb = bounds.len();
+        let nc = configs.len();
+        let mut max_seq_len = Vec::with_capacity(nc);
+        let mut max_chunk_tokens = Vec::with_capacity(nc);
+        let mut per_seq = Vec::with_capacity(nc * nb);
+        let mut per_chunk = Vec::with_capacity(nc * nb);
+        let mut t_full = Vec::with_capacity(nc * nb);
+        for &cfg in configs {
+            let cap = cost.max_chunk_tokens(cfg);
+            max_chunk_tokens.push(cap);
+            max_seq_len.push(cost.max_seq_len(cfg));
+            for &s in &bounds {
+                per_seq.push(cost.per_seq_cost(cfg, s));
+                let b = (cap / s.max(1)).max(1);
+                per_chunk.push(b);
+                t_full.push(cost.t_microbatch(cfg, b, s));
+            }
+        }
+        Self {
+            cost: cost.clone(),
+            configs: configs.to_vec(),
+            boundaries: bounds,
+            max_seq_len,
+            max_chunk_tokens,
+            per_seq,
+            per_chunk,
+            t_full,
+        }
+    }
+
+    /// The tabulated configurations, in index order.
+    pub fn configs(&self) -> &[ParallelConfig] {
+        &self.configs
+    }
+
+    pub fn n_configs(&self) -> usize {
+        self.configs.len()
+    }
+
+    /// Whether this table was built for exactly these boundaries.
+    pub fn covers(&self, boundaries: &[u32]) -> bool {
+        self.boundaries.len() == boundaries.len()
+            && self
+                .boundaries
+                .iter()
+                .zip(boundaries)
+                .all(|(&a, &b)| a == b as u64)
+    }
+
+    #[inline]
+    pub fn max_seq_len_at(&self, i: usize) -> u64 {
+        self.max_seq_len[i]
+    }
+
+    #[inline]
+    pub fn max_chunk_tokens_at(&self, i: usize) -> u64 {
+        self.max_chunk_tokens[i]
+    }
+
+    #[inline]
+    pub fn per_seq_cost_at(&self, i: usize, j: usize) -> f64 {
+        self.per_seq[i * self.boundaries.len() + j]
+    }
+
+    fn config_index(&self, cfg: ParallelConfig) -> Option<usize> {
+        self.configs.iter().position(|&c| c == cfg)
+    }
+
+    fn boundary_index(&self, s: u64) -> Option<usize> {
+        self.boundaries.binary_search(&s).ok()
+    }
+
+    /// Memoized [`CostModel::max_seq_len`] (falls back for untabulated configs).
+    pub fn max_seq_len(&self, cfg: ParallelConfig) -> u64 {
+        match self.config_index(cfg) {
+            Some(i) => self.max_seq_len[i],
+            None => self.cost.max_seq_len(cfg),
+        }
+    }
+
+    /// Memoized [`CostModel::max_chunk_tokens`] (falls back when untabulated).
+    pub fn max_chunk_tokens(&self, cfg: ParallelConfig) -> u64 {
+        match self.config_index(cfg) {
+            Some(i) => self.max_chunk_tokens[i],
+            None => self.cost.max_chunk_tokens(cfg),
+        }
+    }
+
+    /// Memoized [`CostModel::per_seq_cost`] (falls back when untabulated).
+    pub fn per_seq_cost(&self, cfg: ParallelConfig, s: u64) -> f64 {
+        match (self.config_index(cfg), self.boundary_index(s)) {
+            (Some(i), Some(j)) => self.per_seq_cost_at(i, j),
+            _ => self.cost.per_seq_cost(cfg, s),
+        }
+    }
+
+    /// Memoized [`CostModel::replica_time`]: bit-identical mirror of
+    /// Eq. 10/12 with the full-chunk time read from the table; remainder
+    /// chunks (variable batch) use the exact `t_microbatch`. Untabulated
+    /// configs or padded lengths delegate wholesale to the model.
+    pub fn replica_time(&self, cfg: ParallelConfig, loads: &[BucketLoad]) -> f64 {
+        match self.config_index(cfg) {
+            Some(i) => self.replica_time_at(i, loads),
+            None => self.cost.replica_time(cfg, loads),
+        }
+    }
+
+    /// Index-based [`Self::replica_time`] for the planner's inner loop.
+    pub fn replica_time_at(&self, i: usize, loads: &[BucketLoad]) -> f64 {
+        let cfg = self.configs[i];
+        let nb = self.boundaries.len();
+        let mut compute = 0.0;
+        let mut max_chunk_t: f64 = 0.0;
+        let mut any = false;
+        for &BucketLoad { count: d, padded_len: s } in loads {
+            if d == 0 {
+                continue;
+            }
+            let Some(j) = self.boundary_index(s) else {
+                return self.cost.replica_time(cfg, loads);
+            };
+            any = true;
+            let b = self.per_chunk[i * nb + j];
+            let t_chunk = self.t_full[i * nb + j];
+            let full = d / b;
+            compute += full as f64 * t_chunk;
+            if full > 0 {
+                max_chunk_t = max_chunk_t.max(t_chunk);
+            }
+            let rem = d % b;
+            if rem > 0 {
+                let t_rem = self.cost.t_microbatch(cfg, rem, s);
+                compute += t_rem;
+                max_chunk_t = max_chunk_t.max(t_rem);
+            }
+        }
+        if !any {
+            return 0.0;
+        }
+        let bubble = (cfg.pp as f64 - 1.0) * max_chunk_t;
+        compute + bubble + super::STEP_OVERHEAD
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ClusterSpec;
+    use crate::config::ModelDesc;
+
+    fn world() -> (CostModel, Vec<ParallelConfig>, Vec<u32>) {
+        let cost = CostModel::calibrated(
+            &ModelDesc::llama2_7b(),
+            &ClusterSpec::a100_40g(16),
+        );
+        let configs = vec![
+            ParallelConfig::new(1, 1),
+            ParallelConfig::new(2, 1),
+            ParallelConfig::new(4, 2),
+            ParallelConfig::new(8, 1),
+        ];
+        (cost, configs, vec![512, 2048, 8192])
+    }
+
+    #[test]
+    fn lookups_match_model() {
+        let (cost, configs, bounds) = world();
+        let table = CostTable::build(&cost, &configs, &bounds);
+        for (i, &cfg) in configs.iter().enumerate() {
+            assert_eq!(table.max_seq_len_at(i), cost.max_seq_len(cfg));
+            assert_eq!(table.max_chunk_tokens_at(i), cost.max_chunk_tokens(cfg));
+            for (j, &s) in bounds.iter().enumerate() {
+                let got = table.per_seq_cost_at(i, j);
+                let want = cost.per_seq_cost(cfg, s as u64);
+                assert_eq!(got.to_bits(), want.to_bits(), "{cfg} s={s}");
+            }
+        }
+    }
+
+    #[test]
+    fn replica_time_matches_model() {
+        let (cost, configs, bounds) = world();
+        let table = CostTable::build(&cost, &configs, &bounds);
+        let loads = vec![
+            vec![BucketLoad { count: 13, padded_len: 512 }],
+            vec![
+                BucketLoad { count: 200, padded_len: 512 },
+                BucketLoad { count: 7, padded_len: 2048 },
+            ],
+            vec![
+                BucketLoad { count: 1, padded_len: 8192 },
+                BucketLoad { count: 0, padded_len: 512 },
+            ],
+        ];
+        for &cfg in &configs {
+            for l in &loads {
+                let got = table.replica_time(cfg, l);
+                let want = cost.replica_time(cfg, l);
+                assert_eq!(got.to_bits(), want.to_bits(), "{cfg} {l:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn fallback_for_untabulated_inputs() {
+        let (cost, configs, bounds) = world();
+        let table = CostTable::build(&cost, &configs, &bounds);
+        let other = ParallelConfig::new(16, 1);
+        assert_eq!(table.max_seq_len(other), cost.max_seq_len(other));
+        let odd = 300u64; // not a tabulated boundary
+        let cfg = configs[0];
+        assert_eq!(
+            table.per_seq_cost(cfg, odd).to_bits(),
+            cost.per_seq_cost(cfg, odd).to_bits()
+        );
+        let off_loads = [BucketLoad { count: 3, padded_len: odd }];
+        assert_eq!(
+            table.replica_time(cfg, &off_loads).to_bits(),
+            cost.replica_time(cfg, &off_loads).to_bits()
+        );
+    }
+
+    #[test]
+    fn covers_detects_boundary_changes() {
+        let (cost, configs, bounds) = world();
+        let table = CostTable::build(&cost, &configs, &bounds);
+        assert!(table.covers(&bounds));
+        assert!(!table.covers(&[512, 2048]));
+        assert!(!table.covers(&[512, 2048, 4096]));
+    }
+}

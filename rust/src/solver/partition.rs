@@ -2,6 +2,16 @@
 //! candidate parallel configurations (paper Appendix A, step 2: "construct
 //! possible deployment plans ... formulated as an integer partition
 //! problem").
+//!
+//! The enumeration is *streaming*: [`visit_plans`] walks the DFS over
+//! per-config replica counts and hands each admissible count vector to a
+//! visitor, so callers can score-and-discard plans on the fly (the planner
+//! fuses the Theorem-1 lower-bound filter into the visitor) instead of
+//! materializing millions of `Plan`s. [`dfs_prefixes`] splits the top of
+//! the search tree into independent subtrees for parallel traversal with
+//! [`visit_plans_from`]; traversing the prefixes in order reproduces the
+//! exact sequential DFS order, which keeps parallel searches deterministic.
+//! [`enumerate_plans`] remains as the collecting wrapper.
 
 use crate::config::ParallelConfig;
 
@@ -29,13 +39,147 @@ impl Plan {
     }
 }
 
-/// Enumerate all plans with `min_gpus <= Σ p_i·n_i <= n_gpus`.
+/// DFS over counts for configs `i..`; calls `visit` at admissible leaves.
+/// The visitor returns `false` to stop the whole search; `dfs` propagates
+/// that as its own return value.
+fn dfs<F: FnMut(&[u32]) -> bool>(
+    configs: &[ParallelConfig],
+    i: usize,
+    remaining: u32,
+    counts: &mut [u32],
+    n_gpus: u32,
+    min_gpus: u32,
+    require_longest: Option<usize>,
+    visit: &mut F,
+) -> bool {
+    if i == configs.len() {
+        let used = n_gpus - remaining;
+        if used < min_gpus {
+            return true;
+        }
+        if let Some(li) = require_longest {
+            if counts[li] == 0 {
+                return true;
+            }
+        }
+        if counts.iter().all(|&c| c == 0) {
+            return true;
+        }
+        return visit(counts);
+    }
+    let n = configs[i].n();
+    for c in 0..=remaining / n {
+        counts[i] = c;
+        if !dfs(
+            configs,
+            i + 1,
+            remaining - c * n,
+            counts,
+            n_gpus,
+            min_gpus,
+            require_longest,
+            visit,
+        ) {
+            return false;
+        }
+    }
+    counts[i] = 0;
+    true
+}
+
+/// Streaming enumeration of all plans with `min_gpus <= Σ p_i·n_i <= n_gpus`.
 ///
-/// `require_longest`: if `Some(idx)`, every plan must deploy at least one
-/// replica of configuration `idx` (the one able to process the longest
+/// `visit` receives each admissible plan's count vector in DFS order
+/// (counts of config 0 ascending outermost) and returns `false` to stop
+/// early (e.g. a plan cap). Returns `false` iff the search was stopped.
+///
+/// `require_longest`: if `Some(idx)`, every visited plan deploys at least
+/// one replica of configuration `idx` (the one able to process the longest
 /// bucket — otherwise the dispatch problem is unsatisfiable, so such plans
 /// are dead on arrival and enumerating them wastes planner time).
-/// `max_plans` caps the enumeration as a safety valve.
+pub fn visit_plans<F: FnMut(&[u32]) -> bool>(
+    configs: &[ParallelConfig],
+    n_gpus: u32,
+    min_gpus: u32,
+    require_longest: Option<usize>,
+    visit: &mut F,
+) -> bool {
+    let mut counts = vec![0u32; configs.len()];
+    dfs(
+        configs,
+        0,
+        n_gpus,
+        &mut counts,
+        n_gpus,
+        min_gpus,
+        require_longest,
+        visit,
+    )
+}
+
+/// Like [`visit_plans`] but with the counts of configs `0..prefix.len()`
+/// pinned to `prefix` — one independent subtree of the DFS. Prefixes whose
+/// pinned counts already exceed the GPU budget visit nothing.
+pub fn visit_plans_from<F: FnMut(&[u32]) -> bool>(
+    configs: &[ParallelConfig],
+    prefix: &[u32],
+    n_gpus: u32,
+    min_gpus: u32,
+    require_longest: Option<usize>,
+    visit: &mut F,
+) -> bool {
+    debug_assert!(prefix.len() <= configs.len());
+    let used: u32 = prefix.iter().zip(configs).map(|(&c, cfg)| c * cfg.n()).sum();
+    if used > n_gpus {
+        return true;
+    }
+    let mut counts = vec![0u32; configs.len()];
+    counts[..prefix.len()].copy_from_slice(prefix);
+    dfs(
+        configs,
+        prefix.len(),
+        n_gpus - used,
+        &mut counts,
+        n_gpus,
+        min_gpus,
+        require_longest,
+        visit,
+    )
+}
+
+/// Expand the top levels of the enumeration tree into at least
+/// `target_items` independent DFS subtrees (count prefixes, all of equal
+/// depth). Traversing the prefixes in order with [`visit_plans_from`]
+/// reproduces the exact [`visit_plans`] DFS order, so a parallel fold over
+/// the prefixes that merges results in prefix order stays deterministic.
+pub fn dfs_prefixes(
+    configs: &[ParallelConfig],
+    n_gpus: u32,
+    target_items: usize,
+) -> Vec<Vec<u32>> {
+    let mut items: Vec<Vec<u32>> = vec![Vec::new()];
+    let mut depth = 0;
+    while depth < configs.len() && items.len() < target_items {
+        let n = configs[depth].n();
+        let mut next = Vec::with_capacity(items.len() * 2);
+        for prefix in &items {
+            let used: u32 =
+                prefix.iter().zip(configs).map(|(&c, cfg)| c * cfg.n()).sum();
+            let remaining = n_gpus - used;
+            for c in 0..=remaining / n {
+                let mut p = prefix.clone();
+                p.push(c);
+                next.push(p);
+            }
+        }
+        items = next;
+        depth += 1;
+    }
+    items
+}
+
+/// Collecting wrapper over [`visit_plans`]: materialize up to `max_plans`
+/// plans (the cap is a safety valve against runaway enumerations).
 pub fn enumerate_plans(
     configs: &[ParallelConfig],
     n_gpus: u32,
@@ -44,67 +188,13 @@ pub fn enumerate_plans(
     max_plans: usize,
 ) -> Vec<Plan> {
     let mut out = Vec::new();
-    let mut counts = vec![0u32; configs.len()];
-    fn dfs(
-        configs: &[ParallelConfig],
-        i: usize,
-        remaining: u32,
-        counts: &mut Vec<u32>,
-        out: &mut Vec<Plan>,
-        n_gpus: u32,
-        min_gpus: u32,
-        require_longest: Option<usize>,
-        max_plans: usize,
-    ) {
-        if out.len() >= max_plans {
-            return;
-        }
-        if i == configs.len() {
-            let used = n_gpus - remaining;
-            if used >= min_gpus {
-                if let Some(li) = require_longest {
-                    if counts[li] == 0 {
-                        return;
-                    }
-                }
-                if counts.iter().any(|&c| c > 0) {
-                    out.push(Plan { counts: counts.clone() });
-                }
-            }
-            return;
-        }
-        let n = configs[i].n();
-        let max_count = remaining / n;
-        for c in 0..=max_count {
-            counts[i] = c;
-            dfs(
-                configs,
-                i + 1,
-                remaining - c * n,
-                counts,
-                out,
-                n_gpus,
-                min_gpus,
-                require_longest,
-                max_plans,
-            );
-            if out.len() >= max_plans {
-                break;
-            }
-        }
-        counts[i] = 0;
+    if max_plans == 0 {
+        return out;
     }
-    dfs(
-        configs,
-        0,
-        n_gpus,
-        &mut counts,
-        &mut out,
-        n_gpus,
-        min_gpus,
-        require_longest,
-        max_plans,
-    );
+    visit_plans(configs, n_gpus, min_gpus, require_longest, &mut |counts| {
+        out.push(Plan { counts: counts.to_vec() });
+        out.len() < max_plans
+    });
     out
 }
 
@@ -177,5 +267,51 @@ mod tests {
     fn max_plans_caps() {
         let plans = enumerate_plans(&cfgs(), 16, 0, None, 5);
         assert_eq!(plans.len(), 5);
+    }
+
+    #[test]
+    fn visitor_matches_collector() {
+        let mut visited: Vec<Vec<u32>> = Vec::new();
+        let complete = visit_plans(&cfgs(), 8, 4, None, &mut |c| {
+            visited.push(c.to_vec());
+            true
+        });
+        assert!(complete);
+        let collected: Vec<Vec<u32>> = enumerate_plans(&cfgs(), 8, 4, None, usize::MAX)
+            .into_iter()
+            .map(|p| p.counts)
+            .collect();
+        assert_eq!(visited, collected);
+    }
+
+    #[test]
+    fn visitor_early_stop() {
+        let mut n = 0;
+        let complete = visit_plans(&cfgs(), 16, 0, None, &mut |_| {
+            n += 1;
+            n < 5
+        });
+        assert!(!complete);
+        assert_eq!(n, 5);
+    }
+
+    #[test]
+    fn prefixes_partition_the_search() {
+        let mut full: Vec<Vec<u32>> = Vec::new();
+        visit_plans(&cfgs(), 8, 4, None, &mut |c| {
+            full.push(c.to_vec());
+            true
+        });
+        for target in [1usize, 2, 4, 32, 1000] {
+            let prefixes = dfs_prefixes(&cfgs(), 8, target);
+            let mut seq: Vec<Vec<u32>> = Vec::new();
+            for p in &prefixes {
+                visit_plans_from(&cfgs(), p, 8, 4, None, &mut |c| {
+                    seq.push(c.to_vec());
+                    true
+                });
+            }
+            assert_eq!(seq, full, "target {target}");
+        }
     }
 }

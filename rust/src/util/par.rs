@@ -1,9 +1,21 @@
-//! Minimal data-parallel map over std::thread (offline build: no rayon).
+//! Minimal data-parallel primitives over std::thread (offline build: no
+//! rayon).
 //!
-//! Used by the planner to evaluate candidate deployment plans concurrently.
+//! Used by the planner to evaluate candidate deployment plans concurrently
+//! ([`par_map`]) and to run the fused streaming plan search without a
+//! collect-then-map barrier ([`par_fold`]).
 
-/// Parallel map preserving input order. Spawns up to `threads` workers
-/// (default: available parallelism) chunking the input by atomic counter.
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Worker count for the parallel primitives (available parallelism).
+pub fn max_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(4)
+}
+
+/// Parallel map preserving input order. Spawns up to `max_threads()`
+/// workers pulling items off a shared atomic cursor.
 pub fn par_map<T, R, F>(items: Vec<T>, f: F) -> Vec<R>
 where
     T: Send + Sync,
@@ -14,29 +26,67 @@ where
     if n == 0 {
         return Vec::new();
     }
-    let threads = std::thread::available_parallelism()
-        .map(|p| p.get())
-        .unwrap_or(4)
-        .min(n);
+    let threads = max_threads().min(n);
     if threads <= 1 || n == 1 {
         return items.iter().map(|t| f(t)).collect();
     }
-    let next = std::sync::atomic::AtomicUsize::new(0);
+    let results = run_stealing(&items, threads, &f);
     let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
-    let slots = std::sync::Mutex::new(&mut out);
-    // index-stamped results gathered through a channel-free design:
-    // each worker writes directly into its slot via raw indexing guarded
-    // by the disjointness of indices.
-    let results: Vec<(usize, R)> = std::thread::scope(|scope| {
+    for (i, r) in results {
+        out[i] = Some(r);
+    }
+    out.into_iter().map(|o| o.unwrap()).collect()
+}
+
+/// Bounded work-stealing fold: `fold` maps each item to an accumulator
+/// (items are claimed off a shared cursor, so idle workers steal the next
+/// unprocessed item as soon as they finish), and the per-item accumulators
+/// are merged with `merge` in *input order* — the combined result is
+/// deterministic regardless of thread timing. Returns `None` for empty
+/// input.
+///
+/// Peak memory is bounded by the live accumulators (one per item, each
+/// typically already filtered/pruned by `fold`), never by a full map
+/// output — this is what lets the planner fuse plan enumeration with
+/// lower-bound filtering instead of materializing millions of plans.
+pub fn par_fold<T, A, F, M>(items: Vec<T>, fold: F, mut merge: M) -> Option<A>
+where
+    T: Send + Sync,
+    A: Send,
+    F: Fn(&T) -> A + Sync,
+    M: FnMut(A, A) -> A,
+{
+    let n = items.len();
+    if n == 0 {
+        return None;
+    }
+    let threads = max_threads().min(n);
+    let mut accs: Vec<(usize, A)> = if threads <= 1 {
+        items.iter().enumerate().map(|(i, t)| (i, fold(t))).collect()
+    } else {
+        run_stealing(&items, threads, &fold)
+    };
+    accs.sort_by_key(|&(i, _)| i);
+    accs.into_iter().map(|(_, a)| a).reduce(|a, b| merge(a, b))
+}
+
+/// Shared work-stealing driver: apply `f` to every item, returning
+/// `(index, result)` pairs in arbitrary completion order.
+fn run_stealing<T, R, F>(items: &[T], threads: usize, f: &F) -> Vec<(usize, R)>
+where
+    T: Send + Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    let next = AtomicUsize::new(0);
+    std::thread::scope(|scope| {
         let mut handles = Vec::with_capacity(threads);
         for _ in 0..threads {
             let next = &next;
-            let items = &items;
-            let f = &f;
             handles.push(scope.spawn(move || {
                 let mut local = Vec::new();
                 loop {
-                    let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    let i = next.fetch_add(1, Ordering::Relaxed);
                     if i >= items.len() {
                         break;
                     }
@@ -46,14 +96,7 @@ where
             }));
         }
         handles.into_iter().flat_map(|h| h.join().unwrap()).collect()
-    });
-    {
-        let mut guard = slots.lock().unwrap();
-        for (i, r) in results {
-            guard[i] = Some(r);
-        }
-    }
-    out.into_iter().map(|o| o.unwrap()).collect()
+    })
 }
 
 #[cfg(test)]
@@ -80,5 +123,33 @@ mod tests {
         let xs: Vec<u64> = (0..64).collect();
         let ys = par_map(xs, |&x| (0..10_000u64).fold(x, |a, b| a.wrapping_add(b)));
         assert_eq!(ys.len(), 64);
+    }
+
+    #[test]
+    fn fold_merges_in_input_order() {
+        // merge is order-sensitive (string concat): the result must follow
+        // input order no matter how the items were stolen
+        let xs: Vec<u32> = (0..200).collect();
+        let merged = par_fold(
+            xs.clone(),
+            |&x| x.to_string(),
+            |a, b| format!("{a},{b}"),
+        )
+        .unwrap();
+        let expect = xs.iter().map(|x| x.to_string()).collect::<Vec<_>>().join(",");
+        assert_eq!(merged, expect);
+    }
+
+    #[test]
+    fn fold_empty_is_none() {
+        let e: Vec<u32> = vec![];
+        assert!(par_fold(e, |&x| x, |a, b| a + b).is_none());
+    }
+
+    #[test]
+    fn fold_sums_match_sequential() {
+        let xs: Vec<u64> = (0..10_000).collect();
+        let total = par_fold(xs.clone(), |&x| x, |a, b| a + b).unwrap();
+        assert_eq!(total, xs.iter().sum::<u64>());
     }
 }

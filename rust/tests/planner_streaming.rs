@@ -1,0 +1,237 @@
+//! Property tests for the fused streaming plan search and the memoized
+//! cost table:
+//!
+//!  * on small clusters (N ≤ 16) the streaming enumerate+filter visits
+//!    exactly the surviving plan set (and order) of the two-phase
+//!    enumerate-then-filter reference path, with bit-identical bounds;
+//!  * `CostTable` answers bit-identical values to the uncached `CostModel`
+//!    calls across configs, boundaries, and replica loads.
+
+use lobra::cluster::ClusterSpec;
+use lobra::config::{ModelDesc, ParallelConfig};
+use lobra::coordinator::bucketing::Buckets;
+use lobra::coordinator::dispatcher::{DispatchPolicy, Dispatcher};
+use lobra::coordinator::planner::{LowerBoundScratch, Planner, PlannerOptions};
+use lobra::costmodel::{BucketLoad, CostModel, CostTable};
+use lobra::solver::partition::{enumerate_plans, Plan};
+
+fn world(n_gpus: u32) -> (CostModel, ClusterSpec) {
+    let cluster = ClusterSpec::a100_40g(n_gpus);
+    let cost = CostModel::calibrated(&ModelDesc::llama2_7b(), &cluster);
+    (cost, cluster)
+}
+
+fn paper_buckets() -> Buckets {
+    Buckets {
+        boundaries: vec![512, 2048, 8192],
+        counts: vec![200, 40, 4],
+        padding_tokens: 0,
+    }
+}
+
+/// The seed's two-phase reference path: enumerate everything into a Vec,
+/// drop plans unable to run the longest bucket, bound each survivor, then
+/// filter against the best bound.
+fn two_phase_survivors(
+    planner: &Planner,
+    cost: &CostModel,
+    configs: &[ParallelConfig],
+    n_gpus: u32,
+    buckets: &Buckets,
+    opts: &PlannerOptions,
+) -> Vec<(Plan, f64)> {
+    let min_n = configs.iter().map(|c| c.n()).min().unwrap_or(1);
+    let min_gpus = n_gpus.saturating_sub(min_n - 1);
+    let plans = enumerate_plans(configs, n_gpus, min_gpus, None, opts.max_plans);
+    let longest = *buckets.boundaries.last().unwrap() as u64;
+    let plans: Vec<Plan> = plans
+        .into_iter()
+        .filter(|p| {
+            configs
+                .iter()
+                .enumerate()
+                .any(|(i, c)| p.counts[i] > 0 && cost.max_seq_len(*c) >= longest)
+        })
+        .collect();
+    if !opts.lower_bound_filter {
+        return plans.into_iter().map(|p| (p, 0.0)).collect();
+    }
+    let bounds: Vec<(Plan, f64)> = plans
+        .into_iter()
+        .filter_map(|p| planner.lower_bound(configs, &p, buckets).map(|lb| (p, lb)))
+        .collect();
+    let best = bounds.iter().map(|&(_, lb)| lb).fold(f64::INFINITY, f64::min);
+    bounds
+        .into_iter()
+        .filter(|&(_, lb)| lb <= best * (1.0 + opts.lower_bound_threshold))
+        .collect()
+}
+
+#[test]
+fn streaming_matches_two_phase_on_small_clusters() {
+    for n in [4u32, 8, 12, 16] {
+        let (cost, cluster) = world(n);
+        let planner = Planner::new(&cost, &cluster);
+        let buckets = paper_buckets();
+        let opts = PlannerOptions::default();
+        let configs = planner.propose_configs(&buckets.boundaries, true);
+        if configs.is_empty() {
+            continue;
+        }
+        let table = CostTable::build(&cost, &configs, &buckets.boundaries);
+        let streaming = planner.filtered_plans(&configs, &table, &buckets, &opts);
+        let reference =
+            two_phase_survivors(&planner, &cost, &configs, n, &buckets, &opts);
+        assert_eq!(
+            streaming.survivors.len(),
+            reference.len(),
+            "N={n}: survivor count"
+        );
+        for (k, ((sp, slb), (rp, rlb))) in
+            streaming.survivors.iter().zip(&reference).enumerate()
+        {
+            assert_eq!(sp, rp, "N={n} survivor {k}: plan mismatch");
+            assert_eq!(
+                slb.to_bits(),
+                rlb.to_bits(),
+                "N={n} survivor {k}: bound mismatch"
+            );
+        }
+        assert!(!streaming.hit_cap, "N={n}: unexpected plan cap");
+    }
+}
+
+#[test]
+fn streaming_matches_two_phase_without_filter() {
+    let n = 12u32;
+    let (cost, cluster) = world(n);
+    let planner = Planner::new(&cost, &cluster);
+    let buckets = paper_buckets();
+    let mut opts = PlannerOptions::default();
+    opts.lower_bound_filter = false;
+    let configs = planner.propose_configs(&buckets.boundaries, true);
+    let table = CostTable::build(&cost, &configs, &buckets.boundaries);
+    let streaming = planner.filtered_plans(&configs, &table, &buckets, &opts);
+    let reference = two_phase_survivors(&planner, &cost, &configs, n, &buckets, &opts);
+    let got: Vec<&Plan> = streaming.survivors.iter().map(|(p, _)| p).collect();
+    let want: Vec<&Plan> = reference.iter().map(|(p, _)| p).collect();
+    assert_eq!(got, want);
+    assert!(streaming.n_enumerated > 0);
+}
+
+#[test]
+fn streaming_respects_plan_cap() {
+    let (cost, cluster) = world(16);
+    let planner = Planner::new(&cost, &cluster);
+    let buckets = paper_buckets();
+    let mut opts = PlannerOptions::default();
+    opts.max_plans = 10;
+    let configs = planner.propose_configs(&buckets.boundaries, true);
+    let table = CostTable::build(&cost, &configs, &buckets.boundaries);
+    let search = planner.filtered_plans(&configs, &table, &buckets, &opts);
+    assert!(search.hit_cap);
+    assert_eq!(search.n_enumerated, 10);
+    assert!(search.survivors.len() <= 10);
+}
+
+#[test]
+fn costtable_bit_identical_to_costmodel() {
+    let (cost, cluster) = world(16);
+    let planner = Planner::new(&cost, &cluster);
+    let boundaries = [256u32, 512, 1024, 2048, 4096, 8192, 16384];
+    let configs = planner.feasible_configs(true);
+    assert!(!configs.is_empty());
+    let table = CostTable::build(&cost, &configs, &boundaries);
+    for &cfg in &configs {
+        assert_eq!(table.max_seq_len(cfg), cost.max_seq_len(cfg), "{cfg}");
+        assert_eq!(table.max_chunk_tokens(cfg), cost.max_chunk_tokens(cfg), "{cfg}");
+        for &s in &boundaries {
+            assert_eq!(
+                table.per_seq_cost(cfg, s as u64).to_bits(),
+                cost.per_seq_cost(cfg, s as u64).to_bits(),
+                "{cfg} s={s}"
+            );
+        }
+        let loads = [
+            vec![BucketLoad { count: 13, padded_len: 512 }],
+            vec![
+                BucketLoad { count: 200, padded_len: 256 },
+                BucketLoad { count: 7, padded_len: 2048 },
+            ],
+            vec![
+                BucketLoad { count: 1, padded_len: 16384 },
+                BucketLoad { count: 0, padded_len: 512 },
+            ],
+        ];
+        for l in &loads {
+            assert_eq!(
+                table.replica_time(cfg, l).to_bits(),
+                cost.replica_time(cfg, l).to_bits(),
+                "{cfg} {l:?}"
+            );
+        }
+        // untabulated inputs fall back to the exact model
+        assert_eq!(
+            table.per_seq_cost(cfg, 300).to_bits(),
+            cost.per_seq_cost(cfg, 300).to_bits()
+        );
+    }
+}
+
+#[test]
+fn scratch_reuse_does_not_corrupt_bounds() {
+    // the hot path reuses one LowerBoundScratch across millions of plans;
+    // a fresh scratch per plan must give bit-identical bounds
+    let (cost, cluster) = world(16);
+    let planner = Planner::new(&cost, &cluster);
+    let buckets = paper_buckets();
+    let configs = planner.propose_configs(&buckets.boundaries, true);
+    let table = CostTable::build(&cost, &configs, &buckets.boundaries);
+    let plans = enumerate_plans(&configs, 16, 14, None, 100_000);
+    assert!(!plans.is_empty());
+    let mut shared = LowerBoundScratch::new();
+    for p in plans.iter().take(500) {
+        let mut fresh = LowerBoundScratch::new();
+        let a = planner.lower_bound_cached(&table, &p.counts, &buckets, &mut shared);
+        let b = planner.lower_bound_cached(&table, &p.counts, &buckets, &mut fresh);
+        assert_eq!(a.map(f64::to_bits), b.map(f64::to_bits), "{p:?}");
+    }
+}
+
+#[test]
+fn full_planner_is_deterministic_with_memoization() {
+    // end-to-end: the streaming + memoized planner returns the same plan
+    // (groups and predicted time) across repeated runs and thread timings
+    let (cost, cluster) = world(16);
+    let planner = Planner::new(&cost, &cluster);
+    let tasks = lobra::prelude::TaskSet::paper_7b_subset();
+    let a = planner.plan(&tasks, PlannerOptions::default()).unwrap();
+    let b = planner.plan(&tasks, PlannerOptions::default()).unwrap();
+    assert_eq!(a.groups, b.groups);
+    assert_eq!(
+        a.expected_step_time.to_bits(),
+        b.expected_step_time.to_bits()
+    );
+}
+
+#[test]
+fn memoized_dispatch_equals_uncached_on_planned_deployment() {
+    let (cost, cluster) = world(16);
+    let planner = Planner::new(&cost, &cluster);
+    let tasks = lobra::prelude::TaskSet::paper_7b_subset();
+    let plan = planner.plan(&tasks, PlannerOptions::default()).unwrap();
+    let buckets = paper_buckets();
+    let cfgs: Vec<ParallelConfig> = plan.groups.iter().map(|&(c, _)| c).collect();
+    let table = CostTable::build(&cost, &cfgs, &buckets.boundaries);
+    let plain = Dispatcher::new(&cost, &plan)
+        .dispatch(&buckets, DispatchPolicy::Balanced)
+        .unwrap();
+    let memo = Dispatcher::with_table(&cost, &plan, &table)
+        .dispatch(&buckets, DispatchPolicy::Balanced)
+        .unwrap();
+    assert_eq!(plain.d, memo.d);
+    assert_eq!(
+        plain.predicted_step_time.to_bits(),
+        memo.predicted_step_time.to_bits()
+    );
+}
