@@ -29,11 +29,14 @@ fn main() {
         .ok()
         .and_then(|s| s.parse().ok())
         .unwrap_or(64);
+    // opt-in wall-clock recording (the CI scalability job sets this)
+    let json_path = std::env::var("LOBRA_BENCH_JSON").ok();
 
     println!("== Figure 11 (left): GPU scalability, 70B, 4 tasks ({steps} steps) ==\n");
     let mut t = Table::new(&[
         "GPUs", "Task-Fused GPU·s", "LobRA GPU·s", "reduction", "fused plan", "lobra plan",
     ]);
+    let mut wall_rows: Vec<String> = Vec::new();
     for gpus in [16u32, 32, 64, 128].into_iter().filter(|&g| g <= max_gpus) {
         let sc = Scenario::new(
             &format!("70B/{gpus}"),
@@ -41,8 +44,12 @@ fn main() {
             ClusterSpec::a800_80g(gpus),
             TaskSet::paper_scalability_subset(),
         );
+        let t_fused = std::time::Instant::now();
         let fused = sc.arm_report(Arm::TaskFused, steps).unwrap();
+        let fused_wall = t_fused.elapsed().as_secs_f64();
+        let t_lobra = std::time::Instant::now();
         let lobra = sc.arm_report(Arm::Lobra, steps).unwrap();
+        let lobra_wall = t_lobra.elapsed().as_secs_f64();
         let fg = fused.report.gpu_seconds_per_step;
         let lg = lobra.report.gpu_seconds_per_step;
         t.row(&[
@@ -53,8 +60,25 @@ fn main() {
             fused.plan.as_ref().unwrap().notation(),
             lobra.plan.as_ref().unwrap().notation(),
         ]);
+        wall_rows.push(format!(
+            "    {{\"gpus\": {gpus}, \"steps\": {steps}, \
+             \"task_fused_wall_seconds\": {fused_wall:.3}, \
+             \"lobra_wall_seconds\": {lobra_wall:.3}, \
+             \"task_fused_gpu_seconds\": {fg:.3}, \"lobra_gpu_seconds\": {lg:.3}}}"
+        ));
     }
     t.print();
+    if let Some(path) = &json_path {
+        let json = format!(
+            "{{\n  \"bench\": \"fig11_scalability\",\n  \"max_gpus\": {max_gpus},\n  \
+             \"rows\": [\n{}\n  ]\n}}\n",
+            wall_rows.join(",\n")
+        );
+        match std::fs::write(path, &json) {
+            Ok(()) => println!("\nwall-clocks recorded to {path}"),
+            Err(e) => eprintln!("\nWARNING: could not write {path}: {e}"),
+        }
+    }
 
     println!("\n== Figure 11 (right): task scalability, 70B, 64 GPUs ({steps} steps) ==\n");
     let mut t2 = Table::new(&["tasks", "Task-Fused GPU·s", "LobRA GPU·s", "reduction"]);

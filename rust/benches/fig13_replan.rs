@@ -1,0 +1,129 @@
+//! Figure 13 (ours): cold vs warm replanning latency over a tenant churn
+//! trace (paper §5.1: task arrival/exit forces a replan; the "< 3 minutes"
+//! adjustment budget is dominated by re-running the plan search).
+//!
+//! The trace slides a window of concurrent tasks over the paper's dataset
+//! pool, so task sets leave and return — the regime a multi-tenant
+//! deployment actually sees. Every event is replanned twice:
+//!
+//!  * **cold** — a fresh `Planner::plan` (the pre-session behaviour);
+//!  * **warm** — through one persistent `PlanningSession`, which re-scores
+//!    the previous survivor set to seed the search incumbent and draws its
+//!    cost table from the shared LRU.
+//!
+//! Warm replans are verified plan-identical (bit-identical expected step
+//! time) to cold ones on every event; the wall-clock totals and speedup
+//! are written to `BENCH_fig13.json` (path override: `LOBRA_BENCH_JSON`).
+//!
+//! ```bash
+//! cargo bench --bench fig13_replan
+//! LOBRA_BENCH_GPUS=32 LOBRA_BENCH_EVENTS=18 cargo bench --bench fig13_replan
+//! ```
+
+use std::time::Instant;
+
+use lobra::cluster::ClusterSpec;
+use lobra::config::{ModelDesc, TaskSet, TaskSpec};
+use lobra::coordinator::planner::{Planner, PlannerOptions};
+use lobra::coordinator::session::PlanningSession;
+use lobra::costmodel::CostModel;
+use lobra::util::bench::{fmt_secs, Table};
+
+fn main() {
+    let gpus: u32 = std::env::var("LOBRA_BENCH_GPUS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(64);
+    let n_events: usize = std::env::var("LOBRA_BENCH_EVENTS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(12);
+    let json_path = std::env::var("LOBRA_BENCH_JSON")
+        .unwrap_or_else(|_| "BENCH_fig13.json".to_string());
+
+    let cluster = ClusterSpec::a800_80g(gpus);
+    let model = ModelDesc::llama2_70b();
+    let cost = CostModel::calibrated(&model, &cluster);
+    let planner = Planner::new(&cost, &cluster);
+    let opts = PlannerOptions::default();
+    let mut session = PlanningSession::new(opts.clone());
+
+    // Sliding-window churn over 6 paper datasets: each event retires the
+    // oldest task and admits the next, so 4-task sets recur with period 6
+    // (recurring contexts are what the cost-table LRU and the survivor
+    // memo exist for).
+    let pool: Vec<TaskSpec> = TaskSet::paper_all().tasks.into_iter().take(6).collect();
+    let window = 4usize;
+    let mut live: Vec<TaskSpec> = pool[..window].to_vec();
+    let mut next = window;
+
+    println!(
+        "== Figure 13: cold vs warm replan latency, 70B / {gpus} GPUs, {n_events} churn events ==\n"
+    );
+    let mut t = Table::new(&[
+        "event", "tasks", "cold", "warm", "speedup", "identical", "plan",
+    ]);
+    let mut cold_total = 0.0f64;
+    let mut warm_total = 0.0f64;
+    let mut all_identical = true;
+
+    for event in 0..n_events {
+        // churn: oldest task exits, the next pool task (re-)arrives
+        live.remove(0);
+        live.push(pool[next % pool.len()].clone());
+        next += 1;
+        let tasks = TaskSet::new(live.clone());
+
+        let t0 = Instant::now();
+        let cold = planner.plan(&tasks, opts.clone()).expect("cold plan");
+        let cold_s = t0.elapsed().as_secs_f64();
+
+        let t1 = Instant::now();
+        let warm = session.plan(&planner, &tasks).expect("warm plan");
+        let warm_s = t1.elapsed().as_secs_f64();
+
+        let identical = warm.groups == cold.groups
+            && warm.expected_step_time.to_bits() == cold.expected_step_time.to_bits();
+        all_identical &= identical;
+        cold_total += cold_s;
+        warm_total += warm_s;
+        t.row(&[
+            event.to_string(),
+            tasks.len().to_string(),
+            fmt_secs(cold_s),
+            fmt_secs(warm_s),
+            format!("{:.2}x", cold_s / warm_s.max(1e-12)),
+            if identical { "yes".into() } else { "NO".into() },
+            warm.notation(),
+        ]);
+    }
+    t.print();
+
+    let (hits, misses) = session.tables().stats();
+    let speedup = cold_total / warm_total.max(1e-12);
+    println!(
+        "\ntotals: cold {} vs warm {} ({speedup:.2}x); session: {} warm / {} cold starts, \
+         table LRU {hits} hits / {misses} misses",
+        fmt_secs(cold_total),
+        fmt_secs(warm_total),
+        session.stats.warm_starts,
+        session.stats.cold_starts,
+    );
+    println!(
+        "plan identity warm==cold on every event: {}",
+        if all_identical { "yes" } else { "NO — BUG" }
+    );
+
+    let json = format!(
+        "{{\n  \"bench\": \"fig13_replan\",\n  \"gpus\": {gpus},\n  \"events\": {n_events},\n  \
+         \"cold_seconds\": {cold_total:.6},\n  \"warm_seconds\": {warm_total:.6},\n  \
+         \"speedup\": {speedup:.4},\n  \"plan_identical\": {all_identical},\n  \
+         \"warm_starts\": {},\n  \"cold_starts\": {},\n  \"table_hits\": {hits},\n  \
+         \"table_misses\": {misses}\n}}\n",
+        session.stats.warm_starts, session.stats.cold_starts,
+    );
+    match std::fs::write(&json_path, &json) {
+        Ok(()) => println!("\nwall-clocks recorded to {json_path}"),
+        Err(e) => eprintln!("\nWARNING: could not write {json_path}: {e}"),
+    }
+}

@@ -20,6 +20,14 @@ fn main() {
 
     let seq = sc.arm_report(Arm::TaskSequential, steps).unwrap();
     let lobra_seq = sc.arm_report(Arm::LobraSequential, steps).unwrap();
+    for (arm, res) in [("Task-Sequential", &seq), ("LobRA-Sequential", &lobra_seq)] {
+        if !res.skipped.is_empty() {
+            println!(
+                "WARNING: {arm} could not plan {:?} — its total under-counts\n",
+                res.skipped
+            );
+        }
+    }
 
     let mut t = Table::new(&["task", "Task-Sequential (T1)", "LobRA-Sequential (T2)", "(T1-T2)/T1"]);
     let mut improved = 0;

@@ -148,6 +148,27 @@ impl<'a> Dispatcher<'a> {
         Some(self.evaluate(buckets, assignment.d, assignment.makespan))
     }
 
+    /// Mean exact step time over the expectation batch plus robustness
+    /// batches — the planner's step-5 objective, folded into the search's
+    /// per-candidate evaluation. `None` if any batch is unservable by this
+    /// deployment (a plan that cannot serve a *sampled* batch must never
+    /// win on the expectation batch alone).
+    pub fn mean_step_time(
+        &self,
+        expectation: &Buckets,
+        eval: &[Buckets],
+        policy: DispatchPolicy,
+    ) -> Option<f64> {
+        let solved = self.dispatch(expectation, policy)?;
+        let mut total = solved.predicted_step_time;
+        let mut n_eval = 1.0;
+        for b in eval {
+            total += self.dispatch(b, policy)?.predicted_step_time;
+            n_eval += 1.0;
+        }
+        Some(total / n_eval)
+    }
+
     /// Evaluate an assignment with the exact replica-time model (Eq. 10/12).
     pub fn evaluate(
         &self,

@@ -1,16 +1,63 @@
 //! The LobRA coordinator — the paper's system contribution, layer 3.
 //!
+//! ## Modules
+//!
 //! * [`bucketing`] — dynamic bucketing DP (paper Eq. 4): choose `R` bucket
 //!   boundaries per batch to minimize padding.
 //! * [`dispatcher`] — per-step workload-balanced data dispatching (Eq. 3).
-//! * [`planner`] — one-shot deployment of heterogeneous FT replicas
-//!   (Eq. 2) with configuration-proposal and lower-bound pruning
-//!   (Observation 1 / Theorem 1).
+//! * [`planner`] — deployment of heterogeneous FT replicas (Eq. 2) as a
+//!   fused streaming search: configuration proposal (Observation 1),
+//!   Theorem-1 lower-bound filtering with online top-K selection of the
+//!   evaluation set, and the exact inner dispatch solve.
+//! * [`session`] — persistent planning sessions: the long-lived search
+//!   state between replans (previous survivor set, shared cost-table LRU,
+//!   resume checkpoints of capped searches).
 //! * [`scheduler`] — the joint-FT step loop tying it all together.
 //! * [`tasks`] — tenant lifecycle: arrivals/exits trigger re-planning.
+//!
+//! ## State flow
+//!
+//! The planner itself is stateless: `Planner::plan` derives everything —
+//! expectation buckets, candidate configs, cost table, survivor set — from
+//! scratch, which is the right mental model but the wrong cost model for a
+//! multi-tenant deployment where arrivals/exits force replans against a
+//! mostly-unchanged world. Long-lived search state therefore lives in a
+//! [`session::PlanningSession`]:
+//!
+//! ```text
+//!                   TaskEvent (Arrive/Exit)
+//!                            │
+//!                  ┌─────────▼─────────┐  warm-start seed   ┌──────────┐
+//!                  │   TaskManager     │───────────────────►│ Planner  │
+//!                  │  PlanningSession  │  (prev survivors,   │ top-K    │
+//!                  │   ┌───────────┐   │   re-scored)        │ search   │
+//!                  │   │ CostTables│◄──┼─────────────────────┴──────────┘
+//!                  │   │   (LRU)   │   │  tables keyed by
+//!                  │   └─────▲─────┘   │  (configs, boundaries)
+//!                  └─────────┼─────────┘
+//!                            │ shared handle
+//!                  ┌─────────┴─────────┐
+//!                  │    Scheduler      │  per-step dispatch tables
+//!                  └───────────────────┘
+//! ```
+//!
+//! * `TaskManager` holds one session across events; each replan re-scores
+//!   the previous survivor set against the new expectation buckets and
+//!   seeds the streaming search's incumbent bound, so the visitor prunes
+//!   most candidate plans with cheap table lookups. Warm-started replans
+//!   are plan-identical (bit-identical `expected_step_time`) to a cold
+//!   `Planner::plan` — seeding only accelerates, never alters.
+//! * `Scheduler` draws its per-step cost tables from the same
+//!   [`crate::costmodel::CostTables`] LRU (share the handle via
+//!   `TaskManager::tables` / `Scheduler::with_tables`), so boundary
+//!   vectors revisited by the dynamic-bucketing DP reuse their tables.
+//! * Capped searches record a resume checkpoint;
+//!   `PlanningSession::extend_capped_search` continues strictly after it
+//!   instead of re-walking the enumeration prefix.
 
 pub mod bucketing;
 pub mod dispatcher;
 pub mod planner;
 pub mod scheduler;
+pub mod session;
 pub mod tasks;

@@ -14,14 +14,21 @@
 //! 4. *Fused streaming search*: walk the integer partitions of the GPU
 //!    budget over candidates (maximal packing) with a visitor that scores
 //!    each plan's Theorem-1 lower bound on the fly and discards dominated
-//!    plans immediately — peak plan storage is bounded by the survivor set
-//!    (plus a small compaction slack), never by the enumeration size. The
-//!    search runs as a parallel fold over independent DFS subtrees and
-//!    merges survivors in DFS order, so it is deterministic.
-//! 5. Solve the inner min–max dispatch (Eq. 3 structure) for every
-//!    surviving plan in parallel, evaluate with the exact (memoized) cost
+//!    plans immediately. The planning hot path ([`Planner::search_top_k`])
+//!    additionally keeps only an online top-K of the best-bound survivors
+//!    per worker (replacing the old collect-then-rank-truncate step), so
+//!    peak plan storage is bounded by `K`, never by the survivor count.
+//!    The search runs as a parallel fold over independent DFS subtrees and
+//!    merges survivors in DFS order, so it is deterministic. A
+//!    [`crate::coordinator::session::PlanningSession`] can *seed* the
+//!    incumbent bound from the previous replan's survivors: the visitor
+//!    then prunes most plans with cheap table lookups before ever touching
+//!    the expensive exact replica-time terms, without changing the result.
+//! 5. Solve the inner min–max dispatch (Eq. 3 structure) for the top-K
+//!    surviving plans in parallel, evaluate with the exact (memoized) cost
 //!    model, and keep the best.
 
+use std::collections::BinaryHeap;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 
 use crate::cluster::ClusterSpec;
@@ -167,6 +174,75 @@ pub struct PlanSearch {
     pub peak_storage: usize,
 }
 
+/// Result of the fused streaming search with online top-K selection
+/// ([`Planner::search_top_k`]) — the planning hot path's step 4+5 front.
+#[derive(Debug, Clone, Default)]
+pub struct TopKSearch {
+    /// The `K = max_evaluated` best-bound survivors: sorted by
+    /// `(bound, DFS order)` when the survivor set exceeded `K`, in plain
+    /// DFS order otherwise — exactly the candidate list (set *and* order)
+    /// the old collect-then-rank-truncate path produced.
+    pub candidates: Vec<(Plan, f64)>,
+    /// Exact survivor count (plans within threshold of the best bound).
+    pub n_survivors: usize,
+    pub n_enumerated: usize,
+    pub hit_cap: bool,
+    /// Sum of per-worker peak plan storage (bounded by `workers × K`).
+    pub peak_storage: usize,
+    /// Last enumerated count vector when `hit_cap` — the checkpoint a
+    /// [`crate::coordinator::session::PlanningSession`] resumes from.
+    pub resume: Option<Vec<u32>>,
+    /// Minimum lower bound observed (the final cutoff is `best×(1+τ)`).
+    pub best_bound: f64,
+    /// Whether a warm-start seed was actually applied (a capped fresh
+    /// search silently drops its seed to reproduce the cold cap prefix).
+    pub seeded: bool,
+}
+
+/// Search products a [`crate::coordinator::session::PlanningSession`]
+/// memoizes for the next replan: the top-K survivor plans (the warm-start
+/// seed pool) plus the cap/resume state of the search that produced them.
+#[derive(Debug, Clone)]
+pub struct SearchCarry {
+    pub candidates: Vec<(Plan, f64)>,
+    pub hit_cap: bool,
+    pub resume: Option<Vec<u32>>,
+    pub best_bound: f64,
+    /// Whether the search that produced this carry ran with its seed.
+    pub seeded: bool,
+}
+
+/// Heap entry of the per-worker online top-K: ordered by
+/// `(bound bits, DFS sequence)` so the max-heap's root is the *worst*
+/// candidate. Non-negative f64 bit patterns order like the floats, and the
+/// sequence tie-break reproduces the stable rank-truncation of the old
+/// collect-then-sort path (earlier DFS position wins on equal bounds).
+struct Cand {
+    bits: u64,
+    seq: usize,
+    plan: Plan,
+}
+
+impl PartialEq for Cand {
+    fn eq(&self, other: &Self) -> bool {
+        self.bits == other.bits && self.seq == other.seq
+    }
+}
+
+impl Eq for Cand {}
+
+impl PartialOrd for Cand {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Cand {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        (self.bits, self.seq).cmp(&(other.bits, other.seq))
+    }
+}
+
 /// Largest-remainder (Hare quota) rounding: integers proportional to
 /// `counts` summing exactly to `b_total`. Ties break toward lower indices
 /// for determinism. A per-bucket `ceil` would make the expectation batch
@@ -199,14 +275,15 @@ fn largest_remainder_counts(counts: &[u64], b_total: u64) -> Vec<u64> {
 }
 
 /// Calibration sample → expectation-batch buckets, shared by
-/// [`Planner::plan_with_stats`] and [`Planner::plan_homogeneous`]: sample
+/// [`Planner::plan_with_stats`], [`Planner::plan_homogeneous`] and the
+/// session-aware path in [`crate::coordinator::session`]: sample
 /// `calibration_multiple × B` lengths, extend with each task's distribution
 /// maximum (so the plan can process every sequence the tasks may ever
 /// produce — a plan sized only for the sampled max would OOM on a later
 /// batch's tail draw), bucketize, and convert the bucket fractions into
 /// expected per-step counts summing exactly to `B`. The returned sampler
 /// continues the same deterministic stream (for robustness batches).
-fn expectation_buckets(
+pub(crate) fn expectation_buckets(
     tasks: &TaskSet,
     opts: &PlannerOptions,
 ) -> (MultiTaskSampler, Buckets) {
@@ -225,6 +302,26 @@ fn expectation_buckets(
     (sampler, buckets)
 }
 
+/// Robustness batches for step-5 evaluation: `n` real sampled fused
+/// batches, bucketed with the calibration boundaries. One code path for
+/// the stateless planner and the planning session, so warm-started replans
+/// evaluate on exactly the batches a cold plan would.
+pub(crate) fn robustness_batches(
+    sampler: &mut MultiTaskSampler,
+    boundaries: &[u32],
+    n: usize,
+) -> Vec<Buckets> {
+    (0..n)
+        .map(|_| {
+            let batch = sampler.next_batch();
+            crate::coordinator::bucketing::buckets_from_boundaries(
+                &batch.lengths(),
+                boundaries,
+            )
+        })
+        .collect()
+}
+
 /// The deployment planner.
 pub struct Planner<'a> {
     cost: &'a CostModel,
@@ -234,6 +331,14 @@ pub struct Planner<'a> {
 impl<'a> Planner<'a> {
     pub fn new(cost: &'a CostModel, cluster: &'a ClusterSpec) -> Self {
         Self { cost, cluster }
+    }
+
+    pub fn cost(&self) -> &CostModel {
+        self.cost
+    }
+
+    pub fn cluster(&self) -> &ClusterSpec {
+        self.cluster
     }
 
     /// All feasible configurations on this (model, cluster).
@@ -306,13 +411,36 @@ impl<'a> Planner<'a> {
         buckets: &Buckets,
         scratch: &mut LowerBoundScratch,
     ) -> Option<f64> {
+        self.lower_bound_within(table, counts, buckets, scratch, f64::INFINITY)
+    }
+
+    /// Like [`Self::lower_bound_cached`] with a pruning `cutoff`: returns
+    /// `None` as soon as a *cheap* lower estimate of the bound provably
+    /// exceeds `cutoff`, skipping the expensive exact replica-time terms.
+    /// Whenever the true bound is `<= cutoff` the returned value is exact
+    /// (bit-identical to the uncut call) — the streaming search relies on
+    /// this to keep survivor bounds exact while pruning the rest with a
+    /// few table lookups. `cutoff = INFINITY` disables pruning entirely.
+    pub fn lower_bound_within(
+        &self,
+        table: &CostTable,
+        counts: &[u32],
+        buckets: &Buckets,
+        scratch: &mut LowerBoundScratch,
+        cutoff: f64,
+    ) -> Option<f64> {
         debug_assert!(table.covers(&buckets.boundaries));
         debug_assert_eq!(table.n_configs(), counts.len());
         let n_configs = table.n_configs();
         let configs = table.configs();
+        let prune = cutoff.is_finite();
         scratch.reset(n_configs);
         // length-based: each bucket to the most efficient (per-GPU) config
-        // among the plan's deployed configs that supports it.
+        // among the plan's deployed configs that supports it. `cheap`
+        // accumulates Σ_j b_j·min_i(per_seq·n_i) — a lower estimate of the
+        // Theorem-1 numerator (chunked replica times only add rounding,
+        // bubble and overhead on top of the per-sequence linear cost).
+        let mut cheap = 0.0f64;
         for (j, (&bj, &s)) in buckets.counts.iter().zip(&buckets.boundaries).enumerate()
         {
             if bj == 0 {
@@ -329,40 +457,31 @@ impl<'a> Planner<'a> {
                     best = Some((eff, i));
                 }
             }
-            let (_, i) = best?;
+            let (eff, i) = best?;
+            cheap += bj as f64 * eff;
             scratch.per_config[i].push(BucketLoad { count: bj, padded_len: s });
         }
-        let mut weighted = 0.0;
         let mut n_used = 0u32;
         for i in 0..n_configs {
-            let p = counts[i];
-            if p == 0 {
-                continue;
+            if counts[i] > 0 {
+                n_used += counts[i] * configs[i].n();
             }
-            n_used += p * configs[i].n();
-            if scratch.per_config[i].is_empty() {
-                continue;
-            }
-            // split the config's load evenly over its p replicas
-            scratch.loads.clear();
-            scratch.loads.extend(scratch.per_config[i].iter().map(|l| BucketLoad {
-                count: l.count.div_ceil(p as u64),
-                padded_len: l.padded_len,
-            }));
-            let t = table.replica_time_at(i, &scratch.loads);
-            weighted += (configs[i].n() * p) as f64 * t;
         }
         if n_used == 0 {
             return None;
         }
-        let thm1 = weighted / n_used as f64;
+        if prune && cheap / n_used as f64 > cutoff {
+            return None;
+        }
 
         // Suffix-capacity bound (strengthening of Theorem 1): sequences in
         // bucket j can only migrate to replicas that support bucket j
         // (Property 2 — supports are nested), so for every j:
         //   t̂ ≥ (Σ_{j'≥j} minimal GPU-work of bucket j') / (GPUs supporting j)
         // This removes plans that look cheap on average but choke their few
-        // long-sequence-capable replicas.
+        // long-sequence-capable replicas. Evaluated *before* the exact
+        // Theorem-1 numerator because it needs only table lookups, so a
+        // tight cutoff (e.g. a warm-started incumbent) prunes here.
         let mut suffix = 0.0f64;
         let mut best_suffix_bound = 0.0f64;
         for j in (0..buckets.boundaries.len()).rev() {
@@ -391,6 +510,27 @@ impl<'a> Planner<'a> {
                 best_suffix_bound = best_suffix_bound.max(suffix / supporter_gpus as f64);
             }
         }
+        if prune && best_suffix_bound > cutoff {
+            return None;
+        }
+
+        // Exact Theorem-1 numerator: chunked replica times of the
+        // length-based assignment, split evenly over each config's replicas.
+        let mut weighted = 0.0;
+        for i in 0..n_configs {
+            let p = counts[i];
+            if p == 0 || scratch.per_config[i].is_empty() {
+                continue;
+            }
+            scratch.loads.clear();
+            scratch.loads.extend(scratch.per_config[i].iter().map(|l| BucketLoad {
+                count: l.count.div_ceil(p as u64),
+                padded_len: l.padded_len,
+            }));
+            let t = table.replica_time_at(i, &scratch.loads);
+            weighted += (configs[i].n() * p) as f64 * t;
+        }
+        let thm1 = weighted / n_used as f64;
         Some(thm1.max(best_suffix_bound))
     }
 
@@ -470,8 +610,13 @@ impl<'a> Planner<'a> {
                         acc.peak = acc.peak.max(acc.survivors.len());
                         return true;
                     }
+                    // prune with the running cutoff: plans it rejects are
+                    // provably above the final cutoff, so the survivor set
+                    // and its bounds stay exact
+                    let cut =
+                        f64::from_bits(best_bits.load(Ordering::Relaxed)) * threshold;
                     let Some(lb) =
-                        self.lower_bound_cached(table, counts, buckets, &mut scratch)
+                        self.lower_bound_within(table, counts, buckets, &mut scratch, cut)
                     else {
                         return true;
                     };
@@ -521,6 +666,238 @@ impl<'a> Planner<'a> {
         out
     }
 
+    /// Fused streaming search with *online top-K* selection: like
+    /// [`Self::filtered_plans`] but each worker keeps only its `K =
+    /// max_evaluated` best-bound survivors in a bounded heap (plus an 8-byte
+    /// bound per survivor for exact statistics), folding the old
+    /// collect-all-then-rank-truncate step into the search itself. The
+    /// returned candidate list is identical — set *and* order — to
+    /// truncating the full survivor list, because a per-worker top-K always
+    /// contains that worker's share of the global top-K and buffered extras
+    /// (plans above the final cutoff) can never evict a true survivor.
+    ///
+    /// `seed_bound` warm-starts the incumbent used for pruning (a valid
+    /// Theorem-1 bound of *some plan in this enumeration*, e.g. the previous
+    /// replan's survivors re-scored on the current buckets). Seeding only
+    /// tightens the running cutoff — the final cutoff is still the exact
+    /// minimum over all enumerated bounds — so the result is bit-identical
+    /// to an unseeded (cold) search; it just gets there faster. When the
+    /// `max_plans` cap may trip, the search runs sequentially, drops the
+    /// seed (the seed plan might lie beyond the cap, which would tighten
+    /// the capped prefix's cutoff beyond what a cold run sees) and records
+    /// the last enumerated vector as a resume checkpoint.
+    pub fn search_top_k(
+        &self,
+        configs: &[ParallelConfig],
+        table: &CostTable,
+        buckets: &Buckets,
+        opts: &PlannerOptions,
+        seed_bound: Option<f64>,
+    ) -> TopKSearch {
+        self.search_top_k_impl(configs, table, buckets, opts, seed_bound, None, opts.max_plans)
+    }
+
+    /// Resume a capped [`Self::search_top_k`] strictly after `after` (its
+    /// recorded checkpoint) with a fresh enumeration budget of
+    /// `extra_plans`. The seed *is* honored here: a resumed search's seed
+    /// comes from the already-enumerated prefix, so the combined
+    /// prefix+extension result equals a single larger-cap search.
+    #[allow(clippy::too_many_arguments)]
+    pub fn search_top_k_resume(
+        &self,
+        configs: &[ParallelConfig],
+        table: &CostTable,
+        buckets: &Buckets,
+        opts: &PlannerOptions,
+        seed_bound: Option<f64>,
+        after: &[u32],
+        extra_plans: usize,
+    ) -> TopKSearch {
+        self.search_top_k_impl(
+            configs,
+            table,
+            buckets,
+            opts,
+            seed_bound,
+            Some(after),
+            extra_plans,
+        )
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn search_top_k_impl(
+        &self,
+        configs: &[ParallelConfig],
+        table: &CostTable,
+        buckets: &Buckets,
+        opts: &PlannerOptions,
+        seed_bound: Option<f64>,
+        resume_after: Option<&[u32]>,
+        max_plans: usize,
+    ) -> TopKSearch {
+        let k = opts.max_evaluated.max(1);
+        let longest = buckets.boundaries.last().map_or(0, |&s| s as u64);
+        let supports: Vec<bool> =
+            (0..configs.len()).map(|i| table.max_seq_len_at(i) >= longest).collect();
+        let min_n = configs.iter().map(|c| c.n()).min().unwrap_or(1);
+        let min_gpus = self.cluster.n_gpus.saturating_sub(min_n - 1);
+        let n_gpus = self.cluster.n_gpus;
+        let threshold = 1.0 + opts.lower_bound_threshold;
+
+        let sequential = resume_after.is_some()
+            || partition::count_plans(configs, n_gpus, min_gpus) > max_plans as u64;
+        let seed = if sequential && resume_after.is_none() { None } else { seed_bound };
+        let seed = seed.filter(|s| s.is_finite() && *s > 0.0);
+        let seeded = seed.is_some();
+
+        let enumerated = AtomicUsize::new(0);
+        let capped = AtomicBool::new(false);
+        let best_bits =
+            AtomicU64::new(seed.unwrap_or(f64::INFINITY).to_bits());
+
+        enum Walk {
+            Prefix(Vec<u32>),
+            After(Vec<u32>),
+        }
+
+        let walks: Vec<Walk> = if let Some(after) = resume_after {
+            vec![Walk::After(after.to_vec())]
+        } else if sequential {
+            vec![Walk::Prefix(Vec::new())]
+        } else {
+            partition::dfs_prefixes(configs, n_gpus, max_threads() * 8)
+                .into_iter()
+                .map(Walk::Prefix)
+                .collect()
+        };
+        let track_last = sequential;
+
+        struct Acc {
+            /// Drained per-worker heap, ascending local DFS sequence.
+            items: Vec<(Plan, f64, usize)>,
+            /// Every pushed bound (compacted against the running cutoff) —
+            /// recovers the exact survivor count after the search.
+            bounds: Vec<f64>,
+            peak: usize,
+            last: Vec<u32>,
+        }
+
+        let run = |walk: &Walk| -> Acc {
+            let mut acc =
+                Acc { items: Vec::new(), bounds: Vec::new(), peak: 0, last: Vec::new() };
+            let mut heap: BinaryHeap<Cand> = BinaryHeap::new();
+            let mut scratch = LowerBoundScratch::new();
+            let mut seq = 0usize;
+            let mut floor = 0usize;
+            let mut visitor = |counts: &[u32]| -> bool {
+                if enumerated.fetch_add(1, Ordering::Relaxed) >= max_plans {
+                    capped.store(true, Ordering::Relaxed);
+                    return false;
+                }
+                if track_last {
+                    acc.last.clear();
+                    acc.last.extend_from_slice(counts);
+                }
+                // plan must deploy something able to run the longest bucket
+                if !counts.iter().zip(&supports).any(|(&c, &sup)| sup && c > 0) {
+                    return true;
+                }
+                let cut = f64::from_bits(best_bits.load(Ordering::Relaxed)) * threshold;
+                let Some(lb) =
+                    self.lower_bound_within(table, counts, buckets, &mut scratch, cut)
+                else {
+                    return true;
+                };
+                let prev =
+                    f64::from_bits(best_bits.fetch_min(lb.to_bits(), Ordering::Relaxed));
+                if lb <= prev.min(lb) * threshold {
+                    acc.bounds.push(lb);
+                    if acc.bounds.len() >= 4096 && acc.bounds.len() >= 2 * floor {
+                        let c =
+                            f64::from_bits(best_bits.load(Ordering::Relaxed)) * threshold;
+                        acc.bounds.retain(|&b| b <= c);
+                        floor = acc.bounds.len();
+                    }
+                    let cand =
+                        Cand { bits: lb.to_bits(), seq, plan: Plan { counts: counts.to_vec() } };
+                    seq += 1;
+                    if heap.len() < k {
+                        heap.push(cand);
+                    } else {
+                        // evict the worst (max (bound, seq)) only if the new
+                        // candidate beats it — extras above the final cutoff
+                        // can never displace a true survivor this way
+                        let beats = heap
+                            .peek()
+                            .map_or(false, |w| (cand.bits, cand.seq) < (w.bits, w.seq));
+                        if beats {
+                            heap.pop();
+                            heap.push(cand);
+                        }
+                    }
+                    acc.peak = acc.peak.max(heap.len());
+                }
+                true
+            };
+            match walk {
+                Walk::Prefix(p) => {
+                    partition::visit_plans_from(
+                        configs, p, n_gpus, min_gpus, None, &mut visitor,
+                    );
+                }
+                Walk::After(a) => {
+                    partition::visit_plans_after(
+                        configs, a, n_gpus, min_gpus, None, &mut visitor,
+                    );
+                }
+            }
+            drop(visitor);
+            let mut items: Vec<(Plan, f64, usize)> = heap
+                .into_iter()
+                .map(|c| (c.plan, f64::from_bits(c.bits), c.seq))
+                .collect();
+            items.sort_unstable_by_key(|&(_, _, s)| s);
+            acc.items = items;
+            acc
+        };
+
+        let merged = par_fold(walks, run, |mut a, mut b| {
+            // prefix order = DFS order: concatenation keeps it global
+            a.items.append(&mut b.items);
+            a.bounds.append(&mut b.bounds);
+            a.peak += b.peak;
+            a
+        });
+        let Some(merged) = merged else {
+            return TopKSearch::default();
+        };
+
+        let best = f64::from_bits(best_bits.load(Ordering::Relaxed));
+        let cutoff = best * threshold;
+        let n_survivors = merged.bounds.iter().filter(|&&b| b <= cutoff).count();
+        let mut candidates: Vec<(Plan, f64)> = merged
+            .items
+            .into_iter()
+            .filter(|&(_, lb, _)| lb <= cutoff)
+            .map(|(p, lb, _)| (p, lb))
+            .collect();
+        if n_survivors > k {
+            candidates.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+            candidates.truncate(k);
+        }
+        let was_capped = capped.load(Ordering::Relaxed);
+        TopKSearch {
+            candidates,
+            n_survivors,
+            n_enumerated: enumerated.load(Ordering::Relaxed).min(max_plans),
+            hit_cap: was_capped,
+            peak_storage: merged.peak,
+            resume: (was_capped && !merged.last.is_empty()).then(|| merged.last.clone()),
+            best_bound: best,
+            seeded,
+        }
+    }
+
     /// Solve Eq. 2: the full two-stage-decomposed deployment planning.
     pub fn plan(&self, tasks: &TaskSet, opts: PlannerOptions) -> Option<DeploymentPlan> {
         self.plan_with_stats(tasks, opts).map(|(p, _)| p)
@@ -542,15 +919,8 @@ impl<'a> Planner<'a> {
         let (mut sampler, buckets) = expectation_buckets(tasks, &opts);
         // Robustness batches: real sampled fused batches, bucketed with the
         // calibration boundaries.
-        let eval: Vec<Buckets> = (0..opts.eval_batches)
-            .map(|_| {
-                let batch = sampler.next_batch();
-                crate::coordinator::bucketing::buckets_from_boundaries(
-                    &batch.lengths(),
-                    &buckets.boundaries,
-                )
-            })
-            .collect();
+        let eval =
+            robustness_batches(&mut sampler, &buckets.boundaries, opts.eval_batches);
 
         self.plan_for_buckets_robust(&buckets, &eval, tasks.len() as u32, &opts, &mut stats, start)
             .map(|p| (p, stats))
@@ -570,7 +940,11 @@ impl<'a> Planner<'a> {
 
     /// Like [`Self::plan_for_buckets`] with extra robustness batches: each
     /// surviving plan's objective is its mean exact step time over the
-    /// expectation batch plus `eval` sampled batches.
+    /// expectation batch plus `eval` sampled batches. This is the stateless
+    /// (cold) entry point: it builds a fresh [`CostTable`] and runs the
+    /// pipeline unseeded. [`crate::coordinator::session::PlanningSession`]
+    /// calls [`Self::plan_pipeline`] directly with a cached table and a
+    /// warm-start seed.
     pub fn plan_for_buckets_robust(
         &self,
         buckets: &Buckets,
@@ -586,6 +960,46 @@ impl<'a> Planner<'a> {
         } else {
             self.feasible_configs(opts.allow_cross_server_tp)
         };
+        if configs.is_empty() {
+            stats.n_candidate_configs = 0;
+            return None;
+        }
+        // At least one candidate must support the longest bucket — checked
+        // *before* paying for the table build (an infeasible world, e.g. a
+        // sequential-baseline task too long for this cluster, exits here).
+        let longest = *buckets.boundaries.last()? as u64;
+        if !configs.iter().any(|&c| self.cost.max_seq_len(c) >= longest) {
+            stats.n_candidate_configs = configs.len();
+            return None;
+        }
+        // 3. memoize the analytic costs once per candidate set × boundaries
+        // — every lower bound and dispatch evaluation below reads the table
+        let table = CostTable::build(self.cost, &configs, &buckets.boundaries);
+        self.plan_pipeline(buckets, eval, n_tasks, opts, stats, start, &table, &configs, None)
+            .map(|(plan, _)| plan)
+    }
+
+    /// Steps 4–5 of Eq. 2 against prepared inputs: the fused streaming
+    /// search (top-K when the lower-bound filter is on, full survivor
+    /// collection for the "no filter" ablation) followed by
+    /// [`Self::evaluate_candidates`]. `table` must be built for exactly
+    /// `(configs, buckets.boundaries)`. `seed_bound` warm-starts the
+    /// search's incumbent (see [`Self::search_top_k`]); pass `None` for a
+    /// cold search. Returns the best plan plus the [`SearchCarry`] a
+    /// planning session memoizes for the next replan.
+    #[allow(clippy::too_many_arguments)]
+    pub fn plan_pipeline(
+        &self,
+        buckets: &Buckets,
+        eval: &[Buckets],
+        n_tasks: u32,
+        opts: &PlannerOptions,
+        stats: &mut PlanningStats,
+        start: std::time::Instant,
+        table: &CostTable,
+        configs: &[ParallelConfig],
+        seed_bound: Option<f64>,
+    ) -> Option<(DeploymentPlan, SearchCarry)> {
         stats.n_candidate_configs = configs.len();
         if configs.is_empty() {
             return None;
@@ -594,23 +1008,60 @@ impl<'a> Planner<'a> {
         // at least one candidate must support the longest bucket
         configs.iter().find(|c| self.cost.max_seq_len(**c) >= longest)?;
 
-        // 3. memoize the analytic costs once per candidate set × boundaries
-        // — every lower bound and dispatch evaluation below reads the table
-        let table = CostTable::build(self.cost, &configs, &buckets.boundaries);
+        // 4(+5 front). fused streaming enumeration + Theorem-1 filter with
+        // online top-K selection of the evaluation set. The "no filter"
+        // ablation (Table 5) collects everything and pays full price.
+        let (candidates, carry) = if opts.lower_bound_filter {
+            let search = self.search_top_k(configs, table, buckets, opts, seed_bound);
+            stats.n_plans_enumerated = search.n_enumerated;
+            stats.hit_plan_cap = search.hit_cap;
+            stats.peak_plan_storage = search.peak_storage;
+            stats.n_plans_after_filter = search.n_survivors;
+            let carry = SearchCarry {
+                candidates: search.candidates.clone(),
+                hit_cap: search.hit_cap,
+                resume: search.resume.clone(),
+                best_bound: search.best_bound,
+                seeded: search.seeded,
+            };
+            (search.candidates, carry)
+        } else {
+            let search = self.filtered_plans(configs, table, buckets, opts);
+            stats.n_plans_enumerated = search.n_enumerated;
+            stats.hit_plan_cap = search.hit_cap;
+            stats.peak_plan_storage = search.peak_storage;
+            stats.n_plans_after_filter = search.survivors.len();
+            let carry = SearchCarry {
+                candidates: Vec::new(),
+                hit_cap: search.hit_cap,
+                resume: None,
+                best_bound: f64::INFINITY,
+                seeded: false,
+            };
+            (search.survivors, carry)
+        };
 
-        // 4. fused streaming enumeration + Theorem-1 lower-bound filter
-        let search = self.filtered_plans(&configs, &table, buckets, opts);
-        stats.n_plans_enumerated = search.n_enumerated;
-        stats.hit_plan_cap = search.hit_cap;
-        stats.peak_plan_storage = search.peak_storage;
-        let mut survivors = search.survivors;
-        stats.n_plans_after_filter = survivors.len();
-        // Rank-truncation only applies when bounds exist; the "no filter"
-        // ablation (Table 5) evaluates everything and pays full price.
-        if opts.lower_bound_filter && survivors.len() > opts.max_evaluated {
-            survivors.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
-            survivors.truncate(opts.max_evaluated);
-        }
+        // 5. inner dispatch solve per candidate (parallel, memoized)
+        let plan =
+            self.evaluate_candidates(candidates, buckets, eval, n_tasks, opts, table, configs)?;
+        stats.solve_seconds = start.elapsed().as_secs_f64();
+        Some((plan, carry))
+    }
+
+    /// Step 5 of Eq. 2: exact dispatch evaluation of the candidate plans
+    /// (augmented with the homogeneous plans) and argmin selection.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn evaluate_candidates(
+        &self,
+        mut candidates: Vec<(Plan, f64)>,
+        buckets: &Buckets,
+        eval: &[Buckets],
+        n_tasks: u32,
+        opts: &PlannerOptions,
+        table: &CostTable,
+        configs: &[ParallelConfig],
+    ) -> Option<DeploymentPlan> {
+        let longest = *buckets.boundaries.last()? as u64;
         // The homogeneous plans are always evaluated: pruning may never
         // leave the planner worse than the Task-Fused baseline (the bound
         // is a *relative* metric — paper Appendix A — and can misrank
@@ -626,13 +1077,12 @@ impl<'a> Planner<'a> {
             let mut counts = vec![0u32; configs.len()];
             counts[i] = count;
             let plan = Plan { counts };
-            if !survivors.iter().any(|(p, _)| p == &plan) {
-                survivors.push((plan, 0.0));
+            if !candidates.iter().any(|(p, _)| p == &plan) {
+                candidates.push((plan, 0.0));
             }
         }
 
-        // 5. inner dispatch solve per surviving plan (parallel, memoized)
-        let evaluated: Vec<(DeploymentPlan, f64)> = par_map(survivors, |(plan, _)| {
+        let evaluated: Vec<(DeploymentPlan, f64)> = par_map(candidates, |(plan, _)| {
             let groups: Vec<(ParallelConfig, u32)> = configs
                 .iter()
                 .zip(&plan.counts)
@@ -640,18 +1090,9 @@ impl<'a> Planner<'a> {
                 .map(|(&c, &p)| (c, p))
                 .collect();
             let dp = DeploymentPlan { groups, n_tasks, expected_step_time: 0.0 };
-            let dispatcher = Dispatcher::with_table(self.cost, &dp, &table);
-            let solved = dispatcher.dispatch(buckets, opts.inner_policy)?;
-            let mut total = solved.predicted_step_time;
-            let mut n_eval = 1.0;
-            for b in eval {
-                let Some(s) = dispatcher.dispatch(b, opts.inner_policy) else {
-                    return None; // plan can't even serve a sampled batch
-                };
-                total += s.predicted_step_time;
-                n_eval += 1.0;
-            }
-            Some((dp, total / n_eval))
+            let dispatcher = Dispatcher::with_table(self.cost, &dp, table);
+            let t = dispatcher.mean_step_time(buckets, eval, opts.inner_policy)?;
+            Some((dp, t))
         })
         .into_iter()
         .flatten()
@@ -662,7 +1103,6 @@ impl<'a> Planner<'a> {
         })?;
         best_plan.expected_step_time = best_t;
         best_plan.groups.sort_by_key(|&(c, _)| (c.n(), c.tp));
-        stats.solve_seconds = start.elapsed().as_secs_f64();
         Some(best_plan)
     }
 

@@ -7,6 +7,8 @@
 //! and scalability (Fig. 11) benches; the *real* PJRT-backed training loop
 //! in [`crate::train`] shares the same dispatch path but executes HLO.
 
+use std::sync::Arc;
+
 use crate::cluster::GpuLedger;
 use crate::config::{ParallelConfig, TaskSet};
 use crate::coordinator::bucketing::{
@@ -14,7 +16,7 @@ use crate::coordinator::bucketing::{
 };
 use crate::coordinator::dispatcher::{DispatchPlan, DispatchPolicy, Dispatcher};
 use crate::coordinator::planner::DeploymentPlan;
-use crate::costmodel::{CostModel, CostTable};
+use crate::costmodel::{CostModel, CostTable, CostTables};
 use crate::data::MultiTaskSampler;
 use crate::metrics::JointFtReport;
 
@@ -64,10 +66,15 @@ pub struct Scheduler<'a> {
     /// derived once from a calibration sample, like the paper's fixed-
     /// boundary ablation arm.
     fixed: Vec<u32>,
-    /// Memoized cost table, reused while the bucket boundaries repeat
-    /// (always, under fixed bucketing; whenever the per-batch DP lands on
-    /// the same boundaries, under dynamic bucketing).
-    table: Option<CostTable>,
+    /// Shared cost-table LRU: per-step tables are drawn from here, so a
+    /// boundary vector the dynamic-bucketing DP revisits — even after
+    /// intervening steps landed elsewhere — reuses its table instead of
+    /// rebuilding (the old single-slot memo only survived *consecutive*
+    /// repeats). The handle may be shared with a planning session.
+    tables: CostTables,
+    /// The step's current table (skips the cache lock while consecutive
+    /// batches land on the same boundaries — the common case).
+    table: Option<Arc<CostTable>>,
 }
 
 impl<'a> Scheduler<'a> {
@@ -76,6 +83,19 @@ impl<'a> Scheduler<'a> {
         plan: &'a DeploymentPlan,
         tasks: &TaskSet,
         opts: SchedulerOptions,
+    ) -> Self {
+        Self::with_tables(cost, plan, tasks, opts, CostTables::default())
+    }
+
+    /// Like [`Self::new`] but drawing cost tables from a shared cache
+    /// (e.g. [`crate::coordinator::tasks::TaskManager::tables`]), so the
+    /// scheduler and the planning session reuse each other's builds.
+    pub fn with_tables(
+        cost: &'a CostModel,
+        plan: &'a DeploymentPlan,
+        tasks: &TaskSet,
+        opts: SchedulerOptions,
+        tables: CostTables,
     ) -> Self {
         let mut calib_sampler = MultiTaskSampler::new(tasks, opts.seed ^ 0xCA11B);
         let calib = calib_sampler.calibration_lengths(20);
@@ -88,8 +108,14 @@ impl<'a> Scheduler<'a> {
             ledger: GpuLedger::new(),
             reports: Vec::new(),
             fixed,
+            tables,
             table: None,
         }
+    }
+
+    /// Cloneable handle to the scheduler's cost-table cache.
+    pub fn tables(&self) -> CostTables {
+        self.tables.clone()
     }
 
     pub fn plan(&self) -> &DeploymentPlan {
@@ -126,10 +152,11 @@ impl<'a> Scheduler<'a> {
         if self.table.as_ref().map_or(true, |t| !t.covers(&buckets.boundaries)) {
             let cfgs: Vec<ParallelConfig> =
                 self.plan.groups.iter().map(|&(c, _)| c).collect();
-            self.table = Some(CostTable::build(self.cost, &cfgs, &buckets.boundaries));
+            self.table =
+                Some(self.tables.get_or_build(self.cost, &cfgs, &buckets.boundaries));
         }
-        let dispatcher =
-            Dispatcher::with_table(self.cost, self.plan, self.table.as_ref().unwrap());
+        let table: &CostTable = self.table.as_ref().unwrap();
+        let dispatcher = Dispatcher::with_table(self.cost, self.plan, table);
         let dispatch = dispatcher.dispatch(&buckets, self.opts.policy)?;
         let solve_seconds = t0.elapsed().as_secs_f64();
 
@@ -171,9 +198,24 @@ impl<'a> Scheduler<'a> {
     }
 }
 
+/// Result of [`sequential_gpu_seconds`].
+#[derive(Debug, Clone, Default)]
+pub struct SequentialRuns {
+    /// Sum of per-task GPU seconds per step (the baseline's total).
+    pub total_gpu_seconds: f64,
+    pub per_task: Vec<(String, f64)>,
+    /// Tasks the single-task planner could not place. They contribute
+    /// nothing to `total_gpu_seconds`, so any baseline comparison must
+    /// surface them — silently dropping a task would under-count the
+    /// baseline and overstate LobRA's reduction.
+    pub skipped: Vec<String>,
+}
+
 /// GPU seconds for running the tasks **sequentially** (Task-Sequential /
 /// LobRA-Sequential baselines): each task is planned and run on its own,
-/// and the totals are summed (paper Figure 4(a) accounting).
+/// and the totals are summed (paper Figure 4(a) accounting). Unplannable
+/// tasks are reported in [`SequentialRuns::skipped`], never silently
+/// dropped.
 pub fn sequential_gpu_seconds(
     cost: &CostModel,
     cluster: &crate::cluster::ClusterSpec,
@@ -181,11 +223,10 @@ pub fn sequential_gpu_seconds(
     heterogeneous: bool,
     steps: usize,
     opts: &SchedulerOptions,
-) -> (f64, Vec<(String, f64)>) {
+) -> SequentialRuns {
     use crate::coordinator::planner::{Planner, PlannerOptions};
     let planner = Planner::new(cost, cluster);
-    let mut total = 0.0;
-    let mut per_task = Vec::new();
+    let mut runs = SequentialRuns::default();
     for t in &tasks.tasks {
         let single = TaskSet::new(vec![t.clone()]);
         let plan = if heterogeneous {
@@ -193,13 +234,16 @@ pub fn sequential_gpu_seconds(
         } else {
             planner.plan_homogeneous(&single, &PlannerOptions::default())
         };
-        let Some(plan) = plan else { continue };
+        let Some(plan) = plan else {
+            runs.skipped.push(t.name.clone());
+            continue;
+        };
         let mut sched = Scheduler::new(cost, &plan, &single, opts.clone());
         let rep = sched.run_steps(steps);
-        total += rep.gpu_seconds_per_step;
-        per_task.push((t.name.clone(), rep.gpu_seconds_per_step));
+        runs.total_gpu_seconds += rep.gpu_seconds_per_step;
+        runs.per_task.push((t.name.clone(), rep.gpu_seconds_per_step));
     }
-    (total, per_task)
+    runs
 }
 
 #[cfg(test)]
@@ -290,6 +334,101 @@ mod tests {
         // only the overflow sequence lands in the new top bucket
         assert_eq!(b.counts.last().copied(), Some(1));
         assert_eq!(b.counts.iter().sum::<u64>(), 3);
+    }
+
+    #[test]
+    fn cached_tables_keep_dispatch_bit_identical() {
+        // ROADMAP "CostTable reuse across steps": two schedulers over the
+        // same deployment, one sharing a pre-warmed LRU (every step is a
+        // cache hit) and one building fresh tables, must produce
+        // bit-identical dispatch results step for step.
+        let (cost, cluster, tasks) = world();
+        let planner = Planner::new(&cost, &cluster);
+        let plan = planner.plan(&tasks, PlannerOptions::default()).unwrap();
+        let shared = crate::costmodel::CostTables::with_capacity(16);
+
+        let mut warmup =
+            Scheduler::with_tables(&cost, &plan, &tasks, SchedulerOptions::default(), shared.clone());
+        warmup.run_steps(12);
+        let (_, misses_after_warmup) = shared.stats();
+
+        let mut cached =
+            Scheduler::with_tables(&cost, &plan, &tasks, SchedulerOptions::default(), shared.clone());
+        let mut fresh = Scheduler::new(&cost, &plan, &tasks, SchedulerOptions::default());
+        for step in 0..12 {
+            let a = cached.step().unwrap();
+            let b = fresh.step().unwrap();
+            assert_eq!(a.dispatch.d, b.dispatch.d, "step {step}");
+            assert_eq!(
+                a.step_time.to_bits(),
+                b.step_time.to_bits(),
+                "step {step}: cache hit changed the dispatch result"
+            );
+            assert_eq!(a.gpu_seconds.to_bits(), b.gpu_seconds.to_bits(), "step {step}");
+        }
+        let (hits, misses) = shared.stats();
+        assert_eq!(
+            misses, misses_after_warmup,
+            "identical batch stream must be served entirely from the cache"
+        );
+        assert!(hits > 0);
+    }
+
+    #[test]
+    fn revisited_boundaries_hit_the_lru() {
+        // the old single-slot memo rebuilt on every boundary *change*; the
+        // LRU must serve A→B→A without a third build
+        let (cost, cluster, tasks) = world();
+        let planner = Planner::new(&cost, &cluster);
+        let plan = planner.plan(&tasks, PlannerOptions::default()).unwrap();
+        let sched = Scheduler::new(&cost, &plan, &tasks, SchedulerOptions::default());
+        let cfgs: Vec<ParallelConfig> = plan.groups.iter().map(|&(c, _)| c).collect();
+        let tables = sched.tables();
+        let a = vec![512u32, 2048, 8192];
+        let b = vec![256u32, 1024, 4096, 16384];
+        tables.get_or_build(&cost, &cfgs, &a);
+        tables.get_or_build(&cost, &cfgs, &b);
+        tables.get_or_build(&cost, &cfgs, &a);
+        tables.get_or_build(&cost, &cfgs, &b);
+        assert_eq!(tables.stats(), (2, 2), "A→B→A→B must build exactly twice");
+    }
+
+    #[test]
+    fn sequential_reports_skipped_tasks() {
+        // 70B on 16×A100-40G: no configuration can hold MeetingBank's 16K
+        // sequences, so that task must be *reported* skipped, not silently
+        // dropped from the baseline total
+        let cluster = ClusterSpec::a100_40g(16);
+        let cost = CostModel::calibrated(&ModelDesc::llama2_70b(), &cluster);
+        let tasks = TaskSet::paper_7b_subset();
+        let runs = sequential_gpu_seconds(
+            &cost,
+            &cluster,
+            &tasks,
+            false,
+            2,
+            &SchedulerOptions::default(),
+        );
+        assert_eq!(runs.per_task.len() + runs.skipped.len(), tasks.len());
+        assert!(
+            runs.skipped.iter().any(|n| n == "MeetingBank"),
+            "16K task cannot fit 70B on A100-40G: {:?}",
+            runs.skipped
+        );
+        assert!(!runs.per_task.iter().any(|(n, _)| n == "MeetingBank"));
+        // the plannable world reports no skips
+        let (cost7, cluster7, tasks7) = world();
+        let ok = sequential_gpu_seconds(
+            &cost7,
+            &cluster7,
+            &tasks7,
+            false,
+            2,
+            &SchedulerOptions::default(),
+        );
+        assert!(ok.skipped.is_empty());
+        assert_eq!(ok.per_task.len(), tasks7.len());
+        assert!(ok.total_gpu_seconds > 0.0);
     }
 
     #[test]

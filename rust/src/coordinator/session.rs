@@ -1,0 +1,471 @@
+//! Persistent planning sessions: warm-start incremental replanning with a
+//! shared cost-table cache (paper §5.1 dynamics, ROADMAP "incremental
+//! replanning" / "CostTable reuse across steps").
+//!
+//! The stateless [`Planner`] re-derives everything from scratch on every
+//! task arrival/exit, which is what dominates the paper's "< 3 minutes"
+//! adjustment budget. A [`PlanningSession`] owns the long-lived search
+//! state between replans:
+//!
+//! * the previous replan's **survivor set** (the top-K candidates of the
+//!   streaming search). On the next replan the survivors are re-scored
+//!   against the *new* expectation buckets and their best bound seeds the
+//!   search incumbent — every survivor is still a member of the new
+//!   enumeration (the cluster did not change), so its Theorem-1 bound is an
+//!   upper bound on the new optimum, and the seeded search prunes most
+//!   plans with cheap table lookups before touching the exact replica-time
+//!   terms. Seeding never changes the result: warm-started replans are
+//!   plan-identical (same groups, bit-identical `expected_step_time`) to a
+//!   cold [`Planner::plan`] on the same task set, certified by
+//!   `tests/session_replan.rs`.
+//! * a **[`CostTables`] LRU** keyed by (candidate-config set, bucket
+//!   boundaries): recurring contexts — churn traces cycling through task
+//!   sets, schedulers whose dynamic-bucketing DP revisits boundary vectors
+//!   — reuse the built table instead of re-deriving the analytic model.
+//!   The handle is cloneable; [`crate::coordinator::scheduler::Scheduler`]
+//!   draws its per-step tables from the same cache.
+//! * the **resume checkpoint** of a capped search: when the enumeration
+//!   tripped `max_plans`, [`PlanningSession::extend_capped_search`]
+//!   continues strictly after the recorded count vector (via
+//!   [`crate::solver::partition::visit_plans_after`]) instead of
+//!   re-walking the prefix, so the adjustment budget can be spent
+//!   incrementally.
+//!
+//! The candidate-config set is recomputed every replan (it depends on the
+//! bucket boundaries); warm-starting applies only when it matches the
+//! memoized one *shape-and-content* — otherwise the survivor count vectors
+//! would index different configurations and the session falls back to a
+//! cold search.
+
+use std::time::Instant;
+
+use crate::config::{ParallelConfig, TaskSet};
+use crate::coordinator::bucketing::Buckets;
+use crate::coordinator::planner::{
+    expectation_buckets, robustness_batches, DeploymentPlan, LowerBoundScratch, Planner,
+    PlannerOptions, PlanningStats, SearchCarry,
+};
+use crate::costmodel::{fnv1a, CostTable, CostTables};
+use crate::solver::partition::Plan;
+
+/// Counters of how the session's replans were served.
+#[derive(Debug, Clone, Default)]
+pub struct SessionStats {
+    /// Total successful replans through this session.
+    pub plans: u64,
+    /// Replans whose search was seeded from the previous survivor set.
+    pub warm_starts: u64,
+    /// Replans that ran unseeded (first plan, candidate-set change, or a
+    /// capped fresh search, which must reproduce the cold capped prefix).
+    pub cold_starts: u64,
+    /// Capped searches continued via [`PlanningSession::extend_capped_search`].
+    pub extensions: u64,
+}
+
+/// What the previous replan left behind.
+#[derive(Debug, Clone)]
+struct SearchMemo {
+    /// Fingerprint of the task set the memo was computed for (used to gate
+    /// [`PlanningSession::extend_capped_search`], which only makes sense
+    /// while the task set is unchanged).
+    fingerprint: u64,
+    configs: Vec<ParallelConfig>,
+    boundaries: Vec<u32>,
+    /// Top-K survivors (plan, bound-in-memo-context) of the last search.
+    candidates: Vec<(Plan, f64)>,
+    hit_cap: bool,
+    resume: Option<Vec<u32>>,
+    best_bound: f64,
+}
+
+/// Cheap order-sensitive fingerprint of a task set (names, batch sizes and
+/// the full length-distribution parameters) — detects "the task set
+/// changed" between a capped search and its extension. The distribution
+/// parameters matter: a task whose lengths were refit (same name, same
+/// max) yields different buckets, and resuming against a stale checkpoint
+/// would break the extension's exactness guarantee. Built on the same
+/// FNV-1a step as [`crate::costmodel::structural_hash`].
+fn task_fingerprint(tasks: &TaskSet) -> u64 {
+    let mut h = fnv1a(0xcbf29ce484222325, tasks.tasks.len() as u64);
+    for t in &tasks.tasks {
+        for b in t.name.as_bytes() {
+            h = fnv1a(h, *b as u64);
+        }
+        h = fnv1a(h, 0xFF);
+        h = fnv1a(h, t.batch_size as u64);
+        let d = &t.lengths;
+        for v in [d.mu, d.sigma, d.tail_weight, d.tail_mu, d.tail_sigma] {
+            h = fnv1a(h, v.to_bits());
+        }
+        h = fnv1a(h, d.min_len as u64);
+        h = fnv1a(h, d.max_len as u64);
+    }
+    h
+}
+
+/// A long-lived planning session. Construct once per (cost model, cluster)
+/// pair and feed it every replan of that world; feeding it planners built
+/// over a *different* world invalidates the warm-start reasoning (the memo
+/// plans would no longer be members of the search space), so don't.
+#[derive(Debug)]
+pub struct PlanningSession {
+    opts: PlannerOptions,
+    tables: CostTables,
+    memo: Option<SearchMemo>,
+    pub stats: SessionStats,
+}
+
+impl PlanningSession {
+    pub fn new(opts: PlannerOptions) -> Self {
+        Self::with_tables(opts, CostTables::default())
+    }
+
+    /// Share an existing cost-table cache (e.g. with a running scheduler).
+    pub fn with_tables(opts: PlannerOptions, tables: CostTables) -> Self {
+        Self { opts, tables, memo: None, stats: SessionStats::default() }
+    }
+
+    pub fn options(&self) -> &PlannerOptions {
+        &self.opts
+    }
+
+    /// Cloneable handle to the session's cost-table LRU.
+    pub fn tables(&self) -> CostTables {
+        self.tables.clone()
+    }
+
+    /// Whether the next replan can warm-start (a memo exists).
+    pub fn has_memo(&self) -> bool {
+        self.memo.is_some()
+    }
+
+    /// Drop the memoized search state (the next replan runs cold).
+    pub fn invalidate(&mut self) {
+        self.memo = None;
+    }
+
+    /// Session-aware [`Planner::plan`].
+    pub fn plan(&mut self, planner: &Planner, tasks: &TaskSet) -> Option<DeploymentPlan> {
+        self.plan_with_stats(planner, tasks).map(|(p, _)| p)
+    }
+
+    /// Session-aware [`Planner::plan_with_stats`]: identical output (same
+    /// groups, bit-identical `expected_step_time`), but the search is
+    /// seeded from the previous survivor set when the candidate-config set
+    /// still matches, and the cost table comes from the shared LRU.
+    pub fn plan_with_stats(
+        &mut self,
+        planner: &Planner,
+        tasks: &TaskSet,
+    ) -> Option<(DeploymentPlan, PlanningStats)> {
+        let start = Instant::now();
+        let mut stats = PlanningStats::default();
+        if tasks.is_empty() {
+            self.memo = None;
+            return None;
+        }
+        let opts = self.opts.clone();
+
+        // 1. calibration sample → expectation buckets + robustness batches
+        // (the exact code path of the stateless planner, so warm and cold
+        // replans see the same batches).
+        let (mut sampler, buckets) = expectation_buckets(tasks, &opts);
+        let eval =
+            robustness_batches(&mut sampler, &buckets.boundaries, opts.eval_batches);
+
+        // 2. candidate configurations (depend on the boundaries, so they
+        // are recomputed — warm-starting is gated on them matching).
+        let configs = if opts.config_proposal {
+            planner.propose_configs(&buckets.boundaries, opts.allow_cross_server_tp)
+        } else {
+            planner.feasible_configs(opts.allow_cross_server_tp)
+        };
+        if configs.is_empty() {
+            self.memo = None;
+            return None;
+        }
+        // Infeasible worlds (no candidate supports the longest bucket) must
+        // not pollute the shared LRU with a dead table — bail before the
+        // fetch, mirroring the stateless planner.
+        let longest = *buckets.boundaries.last()? as u64;
+        if !configs.iter().any(|&c| planner.cost().max_seq_len(c) >= longest) {
+            self.memo = None;
+            return None;
+        }
+
+        // 3. cost table from the shared LRU (bit-identical to a fresh build).
+        let table = self.tables.get_or_build(planner.cost(), &configs, &buckets.boundaries);
+
+        // 4. seed the incumbent from the previous survivors, if compatible.
+        let seed = self.seed_bound(planner, &table, &buckets, &configs);
+
+        let out = planner.plan_pipeline(
+            &buckets,
+            &eval,
+            tasks.len() as u32,
+            &opts,
+            &mut stats,
+            start,
+            &table,
+            &configs,
+            seed,
+        );
+        match out {
+            Some((plan, carry)) => {
+                self.stats.plans += 1;
+                // `carry.seeded` (not `seed.is_some()`): a capped fresh
+                // search drops its seed to reproduce the cold cap prefix
+                // and must count as a cold start.
+                if carry.seeded {
+                    self.stats.warm_starts += 1;
+                } else {
+                    self.stats.cold_starts += 1;
+                }
+                self.remember(tasks, configs, buckets.boundaries.clone(), carry);
+                Some((plan, stats))
+            }
+            None => {
+                self.memo = None;
+                None
+            }
+        }
+    }
+
+    /// Continue a replan whose search tripped the `max_plans` cap, with a
+    /// fresh enumeration budget of `extra_plans`. The extension resumes
+    /// strictly after the recorded checkpoint, merges its survivors with
+    /// the memoized ones and re-runs the step-5 evaluation; the combined
+    /// result equals a single search with the summed budget. Returns
+    /// `None` when there is nothing to extend (no capped memo, task set or
+    /// bucketing changed since, or the lower-bound filter is off).
+    ///
+    /// Two caveats versus a literal single larger-cap search:
+    /// * the returned [`PlanningStats`] cover the *extension slice* only
+    ///   (`n_plans_enumerated` excludes the already-walked prefix, and
+    ///   `n_plans_after_filter` is the merged post-truncation candidate
+    ///   count, not the cumulative survivor count);
+    /// * when the capped prefix search truncated to `K`, the memoized
+    ///   candidates are bound-sorted rather than DFS-ordered, so if two
+    ///   candidate plans evaluate to *bit-identical* mean step times the
+    ///   argmin tie could break toward a different (equally optimal) plan
+    ///   than the single search's — distinct plans producing bit-equal
+    ///   mean dispatch times do not occur in practice.
+    pub fn extend_capped_search(
+        &mut self,
+        planner: &Planner,
+        tasks: &TaskSet,
+        extra_plans: usize,
+    ) -> Option<(DeploymentPlan, PlanningStats)> {
+        if !self.opts.lower_bound_filter || extra_plans == 0 {
+            return None;
+        }
+        let memo = self.memo.as_ref()?;
+        if !memo.hit_cap || memo.fingerprint != task_fingerprint(tasks) {
+            return None;
+        }
+        let resume = memo.resume.clone()?;
+        let start = Instant::now();
+        let mut stats = PlanningStats::default();
+        let opts = self.opts.clone();
+
+        let (mut sampler, buckets) = expectation_buckets(tasks, &opts);
+        if buckets.boundaries != memo.boundaries {
+            return None; // bucketing drifted: the checkpoint is stale
+        }
+        let eval =
+            robustness_batches(&mut sampler, &buckets.boundaries, opts.eval_batches);
+        let configs = memo.configs.clone();
+        let table = self.tables.get_or_build(planner.cost(), &configs, &buckets.boundaries);
+        stats.n_candidate_configs = configs.len();
+
+        let seed = Some(memo.best_bound).filter(|b| b.is_finite() && *b > 0.0);
+        let ext = planner.search_top_k_resume(
+            &configs, &table, &buckets, &opts, seed, &resume, extra_plans,
+        );
+        stats.n_plans_enumerated = ext.n_enumerated;
+        stats.hit_plan_cap = ext.hit_cap;
+        stats.peak_plan_storage = ext.peak_storage;
+
+        // Merge prefix + extension survivors under the combined cutoff.
+        // Prefix candidates come first (they precede the checkpoint in DFS
+        // order); a re-sort only happens when the merged set exceeds K,
+        // mirroring the single-search rank-truncation.
+        let threshold = 1.0 + opts.lower_bound_threshold;
+        let best = memo.best_bound.min(ext.best_bound);
+        let cutoff = best * threshold;
+        let k = opts.max_evaluated.max(1);
+        let mut merged: Vec<(Plan, f64)> = memo
+            .candidates
+            .iter()
+            .filter(|(_, lb)| *lb <= cutoff)
+            .cloned()
+            .chain(ext.candidates.into_iter().filter(|(_, lb)| *lb <= cutoff))
+            .collect();
+        if merged.len() > k {
+            merged.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+            merged.truncate(k);
+        }
+        stats.n_plans_after_filter = merged.len();
+
+        let plan = planner.evaluate_candidates(
+            merged.clone(),
+            &buckets,
+            &eval,
+            tasks.len() as u32,
+            &opts,
+            &table,
+            &configs,
+        )?;
+        stats.solve_seconds = start.elapsed().as_secs_f64();
+
+        self.stats.extensions += 1;
+        let carry = SearchCarry {
+            candidates: merged,
+            hit_cap: ext.hit_cap,
+            resume: ext.resume,
+            best_bound: best,
+            seeded: ext.seeded,
+        };
+        self.remember(tasks, configs, buckets.boundaries.clone(), carry);
+        Some((plan, stats))
+    }
+
+    /// Best re-scored bound of the memoized survivors against the *new*
+    /// planning context — the warm-start seed. `None` when no compatible
+    /// memo exists (cold start).
+    fn seed_bound(
+        &self,
+        planner: &Planner,
+        table: &CostTable,
+        buckets: &Buckets,
+        configs: &[ParallelConfig],
+    ) -> Option<f64> {
+        if !self.opts.lower_bound_filter {
+            return None;
+        }
+        let memo = self.memo.as_ref()?;
+        if memo.configs != configs {
+            return None; // survivor count vectors index different configs
+        }
+        let n_gpus = planner.cluster().n_gpus;
+        let min_n = configs.iter().map(|c| c.n()).min().unwrap_or(1);
+        let min_gpus = n_gpus.saturating_sub(min_n - 1);
+        // The search only admits plans deploying a config that supports the
+        // longest *boundary* (even when that bucket's expected count rounds
+        // to 0, in which case `lower_bound_cached` would happily score a
+        // short-only plan). A seed from a plan the cold search never admits
+        // could undercut the cold incumbent and break warm==cold identity,
+        // so mirror the visitor's support filter here.
+        let longest = buckets.boundaries.last().map_or(0, |&s| s as u64);
+        let supports: Vec<bool> =
+            (0..configs.len()).map(|i| table.max_seq_len_at(i) >= longest).collect();
+        let mut scratch = LowerBoundScratch::new();
+        let mut best: Option<f64> = None;
+        for (plan, _) in &memo.candidates {
+            // only members of the current enumeration may seed the cutoff
+            let used = plan.gpus_used(configs);
+            if used < min_gpus || used > n_gpus {
+                continue;
+            }
+            if !plan.counts.iter().zip(&supports).any(|(&c, &sup)| sup && c > 0) {
+                continue;
+            }
+            let Some(lb) = planner.lower_bound_cached(table, &plan.counts, buckets, &mut scratch)
+            else {
+                continue;
+            };
+            if lb > 0.0 && best.map_or(true, |b| lb < b) {
+                best = Some(lb);
+            }
+        }
+        best.filter(|b| b.is_finite())
+    }
+
+    fn remember(
+        &mut self,
+        tasks: &TaskSet,
+        configs: Vec<ParallelConfig>,
+        boundaries: Vec<u32>,
+        carry: SearchCarry,
+    ) {
+        self.memo = Some(SearchMemo {
+            fingerprint: task_fingerprint(tasks),
+            configs,
+            boundaries,
+            candidates: carry.candidates,
+            hit_cap: carry.hit_cap,
+            resume: carry.resume,
+            best_bound: carry.best_bound,
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ClusterSpec;
+    use crate::config::ModelDesc;
+    use crate::costmodel::CostModel;
+
+    fn world() -> (CostModel, ClusterSpec) {
+        let cluster = ClusterSpec::a100_40g(16);
+        let cost = CostModel::calibrated(&ModelDesc::llama2_7b(), &cluster);
+        (cost, cluster)
+    }
+
+    #[test]
+    fn session_plan_matches_stateless_planner() {
+        let (cost, cluster) = world();
+        let planner = Planner::new(&cost, &cluster);
+        let tasks = TaskSet::paper_7b_subset();
+        let mut session = PlanningSession::new(PlannerOptions::default());
+        let cold = planner.plan(&tasks, PlannerOptions::default()).unwrap();
+        let s1 = session.plan(&planner, &tasks).unwrap();
+        assert_eq!(s1.groups, cold.groups);
+        assert_eq!(s1.expected_step_time.to_bits(), cold.expected_step_time.to_bits());
+        assert_eq!(session.stats.cold_starts, 1);
+        // replanning the same task set warm-starts and returns the same plan
+        let s2 = session.plan(&planner, &tasks).unwrap();
+        assert_eq!(session.stats.warm_starts, 1);
+        assert_eq!(s2.groups, cold.groups);
+        assert_eq!(s2.expected_step_time.to_bits(), cold.expected_step_time.to_bits());
+    }
+
+    #[test]
+    fn table_cache_hits_on_recurring_context() {
+        let (cost, cluster) = world();
+        let planner = Planner::new(&cost, &cluster);
+        let tasks = TaskSet::paper_7b_subset();
+        let mut session = PlanningSession::new(PlannerOptions::default());
+        session.plan(&planner, &tasks).unwrap();
+        let (h0, m0) = session.tables().stats();
+        assert_eq!((h0, m0), (0, 1));
+        session.plan(&planner, &tasks).unwrap();
+        let (h1, m1) = session.tables().stats();
+        assert_eq!(m1, m0, "identical context must not rebuild the table");
+        assert!(h1 > h0);
+    }
+
+    #[test]
+    fn fingerprint_detects_task_changes() {
+        let a = TaskSet::paper_7b_subset();
+        let mut b = a.clone();
+        assert_eq!(task_fingerprint(&a), task_fingerprint(&b));
+        b.tasks[0].batch_size += 1;
+        assert_ne!(task_fingerprint(&a), task_fingerprint(&b));
+        let mut c = a.clone();
+        c.tasks.swap(0, 1);
+        assert_ne!(task_fingerprint(&a), task_fingerprint(&c), "order-sensitive");
+    }
+
+    #[test]
+    fn empty_task_set_clears_memo() {
+        let (cost, cluster) = world();
+        let planner = Planner::new(&cost, &cluster);
+        let mut session = PlanningSession::new(PlannerOptions::default());
+        session.plan(&planner, &TaskSet::paper_7b_subset()).unwrap();
+        assert!(session.has_memo());
+        assert!(session.plan(&planner, &TaskSet::default()).is_none());
+        assert!(!session.has_memo());
+    }
+}

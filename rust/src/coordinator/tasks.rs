@@ -6,11 +6,17 @@
 //! is computed from the updated length distributions; if it differs from
 //! the current one, LoRA adapters are checkpointed and the joint task is
 //! restarted under the new plan (the base model needs no checkpoint).
+//!
+//! Replanning goes through a persistent [`PlanningSession`] held across
+//! events: each replan warm-starts the streaming search from the previous
+//! survivor set and draws its cost table from the session's shared LRU,
+//! producing the exact plan a cold `Planner::plan` would — just faster.
 
 use crate::cluster::ClusterSpec;
 use crate::config::{TaskSet, TaskSpec};
 use crate::coordinator::planner::{DeploymentPlan, Planner, PlannerOptions};
-use crate::costmodel::CostModel;
+use crate::coordinator::session::PlanningSession;
+use crate::costmodel::{CostModel, CostTables};
 
 /// Events the manager reacts to.
 #[derive(Debug, Clone)]
@@ -37,11 +43,12 @@ pub enum ReplanOutcome {
     Rejected,
 }
 
-/// Multi-tenant task manager: owns the live task set + current plan.
+/// Multi-tenant task manager: owns the live task set, the current plan and
+/// the persistent [`PlanningSession`] that serves every replan.
 pub struct TaskManager<'a> {
     cost: &'a CostModel,
     cluster: &'a ClusterSpec,
-    opts: PlannerOptions,
+    session: PlanningSession,
     tasks: TaskSet,
     plan: Option<DeploymentPlan>,
     /// Count of redeployments (exposed for tests / reports).
@@ -63,7 +70,7 @@ impl<'a> TaskManager<'a> {
         let mut mgr = Self {
             cost,
             cluster,
-            opts,
+            session: PlanningSession::new(opts),
             tasks: initial,
             plan: None,
             redeploys: 0,
@@ -84,6 +91,18 @@ impl<'a> TaskManager<'a> {
         self.plan.as_ref()
     }
 
+    /// The persistent planning session (warm-start + cache statistics).
+    pub fn session(&self) -> &PlanningSession {
+        &self.session
+    }
+
+    /// Shared cost-table cache — hand this to a
+    /// [`crate::coordinator::scheduler::Scheduler`] so per-step dispatch
+    /// tables and planning tables come from one LRU.
+    pub fn tables(&self) -> CostTables {
+        self.session.tables()
+    }
+
     fn replan(&mut self) -> Option<DeploymentPlan> {
         if self.tasks.is_empty() {
             self.plan = None;
@@ -91,7 +110,7 @@ impl<'a> TaskManager<'a> {
         }
         self.replans += 1;
         let planner = Planner::new(self.cost, self.cluster);
-        let plan = planner.plan(&self.tasks, self.opts.clone());
+        let plan = self.session.plan(&planner, &self.tasks);
         self.plan = plan.clone();
         plan
     }
@@ -181,6 +200,8 @@ mod tests {
             LengthDistribution::fit(3900.0, 0.85, 16, 16384),
         )));
         assert!(matches!(outcome, ReplanOutcome::Redeployed { .. }), "{outcome:?}");
+        // every replan went through the persistent session
+        assert_eq!(mgr.session().stats.plans, mgr.replans as u64);
         let after = mgr.plan().unwrap();
         let cap_before: u64 = before.groups.iter().map(|&(c, _)| cost.max_seq_len(c)).max().unwrap();
         let cap_after: u64 = after.groups.iter().map(|&(c, _)| cost.max_seq_len(c)).max().unwrap();

@@ -25,7 +25,10 @@ mod timing;
 
 pub use calibrate::{FittedCost, Observation, ProfiledCost};
 pub use replica::{BucketLoad, ChunkPlan};
-pub use table::CostTable;
+pub use table::{
+    cost_fingerprint, structural_hash, CostTable, CostTableKey, CostTableLru, CostTables,
+};
+pub(crate) use table::fnv1a;
 pub use timing::MicrobatchTime;
 
 use crate::cluster::{ClusterSpec, CommModel};

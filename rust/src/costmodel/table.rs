@@ -15,8 +15,259 @@
 //! lookups fall back to the model for untabulated inputs, which keeps the
 //! semantics identical everywhere the table is threaded through.
 
+use std::sync::{Arc, Mutex};
+
 use crate::config::ParallelConfig;
 use crate::costmodel::{BucketLoad, CostModel};
+
+/// FNV-1a step (keeps [`structural_hash`] allocation- and RandomState-free,
+/// so cache behaviour is reproducible across runs). Shared with the
+/// session's task fingerprint so the hashing primitive lives in one place.
+#[inline]
+pub(crate) fn fnv1a(h: u64, v: u64) -> u64 {
+    (h ^ v).wrapping_mul(0x100000001b3)
+}
+
+/// Cheap structural hash of a table's identity: the ordered candidate-config
+/// set and the bucket boundaries. Used by [`CostTableLru`] to reject
+/// non-matching entries without a full vector comparison.
+pub fn structural_hash(configs: &[ParallelConfig], boundaries: &[u32]) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    h = fnv1a(h, configs.len() as u64);
+    for c in configs {
+        h = fnv1a(h, c.tp as u64);
+        h = fnv1a(h, c.pp as u64);
+    }
+    h = fnv1a(h, 0x10b7a_5eed);
+    h = fnv1a(h, boundaries.len() as u64);
+    for &b in boundaries {
+        h = fnv1a(h, b as u64);
+    }
+    h
+}
+
+/// Fingerprint of the (model, cluster) identity a table is built from.
+/// Folded into [`CostTableKey`] so one shared LRU can serve several worlds
+/// without ever returning another model's table — table entries are pure
+/// functions of `(model, cluster, config, boundary)`, and config/boundary
+/// sets of different worlds can coincide.
+pub fn cost_fingerprint(cost: &CostModel) -> u64 {
+    let m = &cost.model;
+    let cl = &cost.cluster;
+    let mut h = 0xcbf29ce484222325u64;
+    for b in m.name.as_bytes() {
+        h = fnv1a(h, *b as u64);
+    }
+    for v in [
+        m.n_layers as u64,
+        m.d_model,
+        m.n_heads as u64,
+        m.d_ff,
+        m.vocab,
+        m.params,
+        m.lora_rank as u64,
+        m.weight_bytes,
+    ] {
+        h = fnv1a(h, v);
+    }
+    h = fnv1a(h, cl.n_gpus as u64);
+    h = fnv1a(h, cl.gpus_per_server as u64);
+    for v in [cl.gpu_mem_gib, cl.tflops, cl.mfu, cl.intra_bw_gbs, cl.inter_bw_gbs] {
+        h = fnv1a(h, v.to_bits());
+    }
+    h
+}
+
+/// Cache key identifying a [`CostTable`]'s inputs: the (model, cluster)
+/// fingerprint, the ordered candidate-config set and the bucket boundaries.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CostTableKey {
+    cost: u64,
+    configs: Vec<ParallelConfig>,
+    boundaries: Vec<u32>,
+    hash: u64,
+}
+
+impl CostTableKey {
+    pub fn new(cost: &CostModel, configs: &[ParallelConfig], boundaries: &[u32]) -> Self {
+        let cost_fp = cost_fingerprint(cost);
+        Self {
+            cost: cost_fp,
+            configs: configs.to_vec(),
+            boundaries: boundaries.to_vec(),
+            hash: fnv1a(structural_hash(configs, boundaries), cost_fp),
+        }
+    }
+
+    pub fn hash(&self) -> u64 {
+        self.hash
+    }
+
+    /// Allocation-free equality against raw inputs (hash checked first).
+    pub fn matches(
+        &self,
+        cost_fp: u64,
+        configs: &[ParallelConfig],
+        boundaries: &[u32],
+    ) -> bool {
+        self.cost == cost_fp
+            && self.configs.as_slice() == configs
+            && self.boundaries.as_slice() == boundaries
+    }
+}
+
+/// Bounded LRU of built [`CostTable`]s, keyed by [`CostTableKey`].
+///
+/// Planning and scheduling revisit the same (candidate set × boundaries)
+/// contexts often — skewed workloads land the dynamic-bucketing DP on the
+/// same boundary vectors, and churn traces cycle through recurring task
+/// sets — so a handful of slots absorbs most rebuilds. Entries are shared
+/// via `Arc`, so a hit is a pointer clone, never a table copy.
+#[derive(Debug)]
+pub struct CostTableLru {
+    cap: usize,
+    /// Most-recently-used first.
+    entries: Vec<(CostTableKey, Arc<CostTable>)>,
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl CostTableLru {
+    pub fn new(cap: usize) -> Self {
+        assert!(cap >= 1, "an LRU needs at least one slot");
+        Self { cap, entries: Vec::new(), hits: 0, misses: 0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Probe for `(cost, configs, boundaries)`, counting a hit (and moving
+    /// the entry to the front) or a miss.
+    pub fn get(
+        &mut self,
+        cost_fp: u64,
+        configs: &[ParallelConfig],
+        boundaries: &[u32],
+    ) -> Option<Arc<CostTable>> {
+        let hash = fnv1a(structural_hash(configs, boundaries), cost_fp);
+        if let Some(pos) = self
+            .entries
+            .iter()
+            .position(|(k, _)| k.hash() == hash && k.matches(cost_fp, configs, boundaries))
+        {
+            self.hits += 1;
+            let entry = self.entries.remove(pos);
+            let table = entry.1.clone();
+            self.entries.insert(0, entry);
+            return Some(table);
+        }
+        self.misses += 1;
+        None
+    }
+
+    /// Insert a built table, returning the cached one. If another caller
+    /// raced the build and inserted the same key first, *their* table wins
+    /// (it is bit-identical anyway) and the duplicate is dropped.
+    pub fn insert(&mut self, key: CostTableKey, table: Arc<CostTable>) -> Arc<CostTable> {
+        if let Some(pos) = self.entries.iter().position(|(k, _)| *k == key) {
+            let entry = self.entries.remove(pos);
+            let existing = entry.1.clone();
+            self.entries.insert(0, entry);
+            return existing;
+        }
+        self.entries.insert(0, (key, table.clone()));
+        self.entries.truncate(self.cap);
+        table
+    }
+
+    /// Fetch the table for `(cost, configs, boundaries)`, building (and
+    /// caching) it on a miss. Hit or miss, the returned table is
+    /// bit-identical to a fresh [`CostTable::build`] — entries are
+    /// immutable once built.
+    pub fn get_or_build(
+        &mut self,
+        cost: &CostModel,
+        configs: &[ParallelConfig],
+        boundaries: &[u32],
+    ) -> Arc<CostTable> {
+        let cost_fp = cost_fingerprint(cost);
+        if let Some(table) = self.get(cost_fp, configs, boundaries) {
+            return table;
+        }
+        let table = Arc::new(CostTable::build(cost, configs, boundaries));
+        self.insert(CostTableKey::new(cost, configs, boundaries), table)
+    }
+}
+
+/// Cloneable shared handle to a [`CostTableLru`].
+///
+/// The planning session and the scheduler draw their tables from the same
+/// cache through this handle (the ROADMAP's "CostTable reuse across steps"):
+/// clone it freely, all clones see one LRU.
+#[derive(Debug, Clone)]
+pub struct CostTables {
+    inner: Arc<Mutex<CostTableLru>>,
+}
+
+impl CostTables {
+    /// Default slot count: planning + per-step boundary vectors of a few
+    /// concurrent contexts fit comfortably in 8 tables.
+    pub const DEFAULT_CAPACITY: usize = 8;
+
+    pub fn with_capacity(cap: usize) -> Self {
+        Self { inner: Arc::new(Mutex::new(CostTableLru::new(cap))) }
+    }
+
+    /// See [`CostTableLru::get_or_build`]. The build itself runs *outside*
+    /// the lock: a concurrent user that only needs an already-cached table
+    /// (e.g. a scheduler step) never waits for a replan's table build. Two
+    /// racing builders of the same key both build, but the first insert
+    /// wins and the tables are bit-identical either way.
+    pub fn get_or_build(
+        &self,
+        cost: &CostModel,
+        configs: &[ParallelConfig],
+        boundaries: &[u32],
+    ) -> Arc<CostTable> {
+        let cost_fp = cost_fingerprint(cost);
+        {
+            let mut guard = self.inner.lock().expect("cost-table cache poisoned");
+            if let Some(table) = guard.get(cost_fp, configs, boundaries) {
+                return table;
+            }
+        }
+        let table = Arc::new(CostTable::build(cost, configs, boundaries));
+        self.inner
+            .lock()
+            .expect("cost-table cache poisoned")
+            .insert(CostTableKey::new(cost, configs, boundaries), table)
+    }
+
+    /// `(hits, misses)` so far.
+    pub fn stats(&self) -> (u64, u64) {
+        let g = self.inner.lock().expect("cost-table cache poisoned");
+        (g.hits, g.misses)
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().expect("cost-table cache poisoned").len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl Default for CostTables {
+    fn default() -> Self {
+        Self::with_capacity(Self::DEFAULT_CAPACITY)
+    }
+}
 
 /// Precomputed per-(config × boundary) analytic costs.
 #[derive(Debug, Clone)]
@@ -274,5 +525,84 @@ mod tests {
         assert!(table.covers(&bounds));
         assert!(!table.covers(&[512, 2048]));
         assert!(!table.covers(&[512, 2048, 4096]));
+    }
+
+    #[test]
+    fn structural_hash_distinguishes_contexts() {
+        let (_, configs, bounds) = world();
+        let h = structural_hash(&configs, &bounds);
+        assert_eq!(h, structural_hash(&configs, &bounds), "deterministic");
+        let mut other_bounds = bounds.clone();
+        other_bounds[0] += 256;
+        assert_ne!(h, structural_hash(&configs, &other_bounds));
+        let mut other_cfgs = configs.clone();
+        other_cfgs.swap(0, 1);
+        assert_ne!(h, structural_hash(&other_cfgs, &bounds), "order matters");
+        assert_ne!(h, structural_hash(&configs[..2], &bounds));
+    }
+
+    #[test]
+    fn lru_hits_share_and_evict() {
+        let (cost, configs, bounds) = world();
+        let mut lru = CostTableLru::new(2);
+        let a = lru.get_or_build(&cost, &configs, &bounds);
+        assert_eq!((lru.hits, lru.misses), (0, 1));
+        let a2 = lru.get_or_build(&cost, &configs, &bounds);
+        assert_eq!((lru.hits, lru.misses), (1, 1));
+        assert!(Arc::ptr_eq(&a, &a2), "hit must share the built table");
+
+        let b1 = vec![256u32, 1024];
+        let b2 = vec![256u32, 4096];
+        lru.get_or_build(&cost, &configs, &b1);
+        // touch the original so `b1` is the LRU victim
+        lru.get_or_build(&cost, &configs, &bounds);
+        lru.get_or_build(&cost, &configs, &b2); // evicts b1
+        assert_eq!(lru.len(), 2);
+        let misses_before = lru.misses;
+        lru.get_or_build(&cost, &configs, &b1); // must rebuild
+        assert_eq!(lru.misses, misses_before + 1);
+    }
+
+    #[test]
+    fn cache_key_separates_worlds() {
+        // identical configs + boundaries but a different (model, cluster):
+        // the shared cache must never serve the other world's table
+        let (cost7, configs, bounds) = world();
+        let cost70 = CostModel::calibrated(
+            &ModelDesc::llama2_70b(),
+            &ClusterSpec::a100_40g(16),
+        );
+        assert_ne!(cost_fingerprint(&cost7), cost_fingerprint(&cost70));
+        let tables = CostTables::with_capacity(4);
+        let a = tables.get_or_build(&cost7, &configs, &bounds);
+        let b = tables.get_or_build(&cost70, &configs, &bounds);
+        assert!(!Arc::ptr_eq(&a, &b));
+        assert_eq!(tables.stats(), (0, 2), "different worlds are distinct keys");
+        for (i, &cfg) in configs.iter().enumerate() {
+            assert_eq!(b.max_seq_len_at(i), cost70.max_seq_len(cfg), "{cfg}");
+        }
+        // and each world still hits its own entry
+        let a2 = tables.get_or_build(&cost7, &configs, &bounds);
+        assert!(Arc::ptr_eq(&a, &a2));
+    }
+
+    #[test]
+    fn shared_handle_sees_one_cache() {
+        let (cost, configs, bounds) = world();
+        let tables = CostTables::with_capacity(4);
+        let clone = tables.clone();
+        let a = tables.get_or_build(&cost, &configs, &bounds);
+        let b = clone.get_or_build(&cost, &configs, &bounds);
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(tables.stats(), (1, 1));
+        // cached lookups stay bit-identical to the uncached model
+        for (i, &cfg) in configs.iter().enumerate() {
+            for (j, &s) in bounds.iter().enumerate() {
+                assert_eq!(
+                    b.per_seq_cost_at(i, j).to_bits(),
+                    cost.per_seq_cost(cfg, s as u64).to_bits()
+                );
+            }
+        }
     }
 }

@@ -71,7 +71,7 @@ impl Scenario {
                 opts.dynamic_bucketing = false; // naive fuse: no per-batch DP
                 let report =
                     Scheduler::new(&cost, &plan, &self.tasks, opts).run_steps(steps);
-                Some(ArmResult { plan: Some(plan), report, per_task: vec![] })
+                Some(ArmResult { plan: Some(plan), report, per_task: vec![], skipped: vec![] })
             }
             Arm::Lobra => {
                 let plan = planner.plan(&self.tasks, self.planner_opts())?;
@@ -82,7 +82,7 @@ impl Scenario {
                     SchedulerOptions::default(),
                 )
                 .run_steps(steps);
-                Some(ArmResult { plan: Some(plan), report, per_task: vec![] })
+                Some(ArmResult { plan: Some(plan), report, per_task: vec![], skipped: vec![] })
             }
             Arm::TaskSequential => self.sequential(false, steps),
             Arm::LobraSequential => self.sequential(true, steps),
@@ -91,7 +91,7 @@ impl Scenario {
 
     fn sequential(&self, heterogeneous: bool, steps: usize) -> Option<ArmResult> {
         let cost = self.cost();
-        let (total, per_task) = crate::coordinator::scheduler::sequential_gpu_seconds(
+        let runs = crate::coordinator::scheduler::sequential_gpu_seconds(
             &cost,
             &self.cluster,
             &self.tasks,
@@ -103,8 +103,13 @@ impl Scenario {
         report.plan_notation = "(per-task)".into();
         report.gpus = self.cluster.n_gpus;
         report.steps = steps;
-        report.gpu_seconds_per_step = total;
-        Some(ArmResult { plan: None, report, per_task })
+        report.gpu_seconds_per_step = runs.total_gpu_seconds;
+        Some(ArmResult {
+            plan: None,
+            report,
+            per_task: runs.per_task,
+            skipped: runs.skipped,
+        })
     }
 
     /// LobRA deployment plan (cached planning for case studies).
@@ -154,6 +159,9 @@ pub struct ArmResult {
     pub plan: Option<DeploymentPlan>,
     pub report: JointFtReport,
     pub per_task: Vec<(String, f64)>,
+    /// Tasks the sequential baselines could not plan (always empty for the
+    /// joint arms). A non-empty list means the arm's total under-counts.
+    pub skipped: Vec<String>,
 }
 
 #[cfg(test)]

@@ -60,8 +60,9 @@ pub mod prelude {
     pub use crate::coordinator::dispatcher::{Dispatcher, DispatchPlan};
     pub use crate::coordinator::planner::{DeploymentPlan, Planner, PlannerOptions};
     pub use crate::coordinator::scheduler::{Scheduler, SchedulerOptions, StepReport};
+    pub use crate::coordinator::session::PlanningSession;
     pub use crate::coordinator::tasks::TaskManager;
-    pub use crate::costmodel::CostModel;
+    pub use crate::costmodel::{CostModel, CostTables};
     pub use crate::data::{DatasetProfile, LengthDistribution, MultiTaskSampler};
     pub use crate::metrics::JointFtReport;
 }

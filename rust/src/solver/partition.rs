@@ -147,6 +147,98 @@ pub fn visit_plans_from<F: FnMut(&[u32]) -> bool>(
     )
 }
 
+/// DFS over configs `i..` visiting only leaves strictly *after* `after` in
+/// DFS (lexicographic) order. `tight` is true while `counts[..i] ==
+/// after[..i]`; a tight branch starts its loop at `after[i]` (its subtree
+/// contains the checkpoint), every other branch enumerates freely. The
+/// tight leaf — the checkpoint itself — is skipped.
+#[allow(clippy::too_many_arguments)]
+fn dfs_after<F: FnMut(&[u32]) -> bool>(
+    configs: &[ParallelConfig],
+    i: usize,
+    remaining: u32,
+    counts: &mut [u32],
+    after: &[u32],
+    tight: bool,
+    n_gpus: u32,
+    min_gpus: u32,
+    require_longest: Option<usize>,
+    visit: &mut F,
+) -> bool {
+    if i == configs.len() {
+        if tight {
+            return true; // the checkpoint itself: already visited
+        }
+        let used = n_gpus - remaining;
+        if used < min_gpus {
+            return true;
+        }
+        if let Some(li) = require_longest {
+            if counts[li] == 0 {
+                return true;
+            }
+        }
+        if counts.iter().all(|&c| c == 0) {
+            return true;
+        }
+        return visit(counts);
+    }
+    let n = configs[i].n();
+    let lo = if tight { after[i] } else { 0 };
+    let mut c = lo;
+    while c <= remaining / n {
+        counts[i] = c;
+        if !dfs_after(
+            configs,
+            i + 1,
+            remaining - c * n,
+            counts,
+            after,
+            tight && c == after[i],
+            n_gpus,
+            min_gpus,
+            require_longest,
+            visit,
+        ) {
+            return false;
+        }
+        c += 1;
+    }
+    counts[i] = 0;
+    true
+}
+
+/// Resume the [`visit_plans`] enumeration strictly after the checkpoint
+/// count vector `after` (a previously visited plan): visits exactly the
+/// suffix of the full DFS order that follows `after`. This is the
+/// building block for resumable capped searches — a planning session whose
+/// search tripped the `max_plans` cap records the last enumerated vector
+/// and continues from it on the next budget instead of re-walking the
+/// prefix. Returns `false` iff the visitor stopped the search.
+pub fn visit_plans_after<F: FnMut(&[u32]) -> bool>(
+    configs: &[ParallelConfig],
+    after: &[u32],
+    n_gpus: u32,
+    min_gpus: u32,
+    require_longest: Option<usize>,
+    visit: &mut F,
+) -> bool {
+    assert_eq!(after.len(), configs.len(), "checkpoint arity mismatch");
+    let mut counts = vec![0u32; configs.len()];
+    dfs_after(
+        configs,
+        0,
+        n_gpus,
+        &mut counts,
+        after,
+        true,
+        n_gpus,
+        min_gpus,
+        require_longest,
+        visit,
+    )
+}
+
 /// Expand the top levels of the enumeration tree into at least
 /// `target_items` independent DFS subtrees (count prefixes, all of equal
 /// depth). Traversing the prefixes in order with [`visit_plans_from`]
@@ -293,6 +385,49 @@ mod tests {
         });
         assert!(!complete);
         assert_eq!(n, 5);
+    }
+
+    #[test]
+    fn resume_after_checkpoint_yields_exact_suffix() {
+        let mut full: Vec<Vec<u32>> = Vec::new();
+        visit_plans(&cfgs(), 8, 4, None, &mut |c| {
+            full.push(c.to_vec());
+            true
+        });
+        assert!(full.len() > 3);
+        // resuming after the k-th visited plan must yield plans k+1.. exactly
+        for k in [0usize, 1, full.len() / 2, full.len() - 1] {
+            let mut resumed: Vec<Vec<u32>> = Vec::new();
+            visit_plans_after(&cfgs(), &full[k], 8, 4, None, &mut |c| {
+                resumed.push(c.to_vec());
+                true
+            });
+            assert_eq!(resumed, full[k + 1..].to_vec(), "checkpoint {k}");
+        }
+    }
+
+    #[test]
+    fn resume_respects_filters_and_early_stop() {
+        let mut full: Vec<Vec<u32>> = Vec::new();
+        visit_plans(&cfgs(), 8, 4, Some(2), &mut |c| {
+            full.push(c.to_vec());
+            true
+        });
+        assert!(full.len() >= 2, "{full:?}");
+        let mut resumed: Vec<Vec<u32>> = Vec::new();
+        visit_plans_after(&cfgs(), &full[0], 8, 4, Some(2), &mut |c| {
+            resumed.push(c.to_vec());
+            true
+        });
+        assert_eq!(resumed, full[1..].to_vec());
+        // early stop propagates like visit_plans
+        let mut n = 0;
+        let complete = visit_plans_after(&cfgs(), &full[0], 8, 0, None, &mut |_| {
+            n += 1;
+            n < 3
+        });
+        assert!(!complete);
+        assert_eq!(n, 3);
     }
 
     #[test]

@@ -134,6 +134,77 @@ fn streaming_respects_plan_cap() {
     assert!(search.survivors.len() <= 10);
 }
 
+/// Reference rank-truncation: the seed's collect-all survivors, stable
+/// sorted by bound (when above K) and truncated — what the online top-K
+/// search must reproduce exactly.
+fn truncated_reference(
+    mut survivors: Vec<(Plan, f64)>,
+    k: usize,
+) -> Vec<(Plan, f64)> {
+    if survivors.len() > k {
+        survivors.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+        survivors.truncate(k);
+    }
+    survivors
+}
+
+#[test]
+fn top_k_matches_truncated_survivors() {
+    for (n, k) in [(8u32, 3usize), (12, 5), (16, 4), (16, 10_000)] {
+        let (cost, cluster) = world(n);
+        let planner = Planner::new(&cost, &cluster);
+        let buckets = paper_buckets();
+        let mut opts = PlannerOptions::default();
+        opts.max_evaluated = k;
+        let configs = planner.propose_configs(&buckets.boundaries, true);
+        if configs.is_empty() {
+            continue;
+        }
+        let table = CostTable::build(&cost, &configs, &buckets.boundaries);
+        let full = planner.filtered_plans(&configs, &table, &buckets, &opts);
+        let reference = truncated_reference(full.survivors.clone(), k);
+        let topk = planner.search_top_k(&configs, &table, &buckets, &opts, None);
+        assert_eq!(topk.n_survivors, full.survivors.len(), "N={n} K={k}");
+        assert_eq!(topk.candidates.len(), reference.len(), "N={n} K={k}");
+        for (i, ((tp, tlb), (rp, rlb))) in
+            topk.candidates.iter().zip(&reference).enumerate()
+        {
+            assert_eq!(tp, rp, "N={n} K={k} candidate {i}");
+            assert_eq!(tlb.to_bits(), rlb.to_bits(), "N={n} K={k} bound {i}");
+        }
+        // the top-K search never buffers more plans than it enumerated
+        assert!(topk.peak_storage <= topk.n_enumerated.max(1), "N={n} K={k}");
+    }
+}
+
+#[test]
+fn seeded_search_is_bit_identical_to_cold() {
+    // seeding the incumbent with any valid plan's bound must not change
+    // the candidate set, order, bounds, or survivor count
+    let (cost, cluster) = world(16);
+    let planner = Planner::new(&cost, &cluster);
+    let buckets = paper_buckets();
+    let mut opts = PlannerOptions::default();
+    opts.max_evaluated = 6;
+    let configs = planner.propose_configs(&buckets.boundaries, true);
+    let table = CostTable::build(&cost, &configs, &buckets.boundaries);
+    let cold = planner.search_top_k(&configs, &table, &buckets, &opts, None);
+    assert!(!cold.candidates.is_empty());
+    // seed with the true best bound (tightest valid seed) and a loose one
+    for seed in [cold.best_bound, cold.best_bound * 1.1] {
+        let warm = planner.search_top_k(&configs, &table, &buckets, &opts, Some(seed));
+        assert_eq!(warm.n_survivors, cold.n_survivors, "seed {seed}");
+        assert_eq!(warm.candidates.len(), cold.candidates.len(), "seed {seed}");
+        assert_eq!(warm.best_bound.to_bits(), cold.best_bound.to_bits());
+        for (i, ((wp, wlb), (cp, clb))) in
+            warm.candidates.iter().zip(&cold.candidates).enumerate()
+        {
+            assert_eq!(wp, cp, "seed {seed} candidate {i}");
+            assert_eq!(wlb.to_bits(), clb.to_bits(), "seed {seed} bound {i}");
+        }
+    }
+}
+
 #[test]
 fn costtable_bit_identical_to_costmodel() {
     let (cost, cluster) = world(16);

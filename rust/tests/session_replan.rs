@@ -1,0 +1,231 @@
+//! Warm-start correctness of persistent planning sessions:
+//!
+//!  * after ANY `Arrive`/`Exit` churn sequence, a warm-started session
+//!    replan is plan-identical — same `groups`, bit-identical
+//!    `expected_step_time` — to a cold `Planner::plan` on the same task
+//!    set (seeding the search incumbent only accelerates pruning, it never
+//!    changes the survivor set the evaluation sees);
+//!  * `TaskManager` accounting (`replans`/`redeploys`) stays exact over a
+//!    long churn trace with duplicate arrivals and unknown exits mixed in;
+//!  * a search that tripped the `max_plans` cap can be *extended* from its
+//!    resume checkpoint until the enumeration completes, recovering the
+//!    exact plan of an uncapped cold search.
+
+use lobra::cluster::ClusterSpec;
+use lobra::config::{ModelDesc, TaskSet, TaskSpec};
+use lobra::coordinator::planner::{Planner, PlannerOptions};
+use lobra::coordinator::session::PlanningSession;
+use lobra::coordinator::tasks::{ReplanOutcome, TaskEvent, TaskManager};
+use lobra::costmodel::CostModel;
+use lobra::data::LengthDistribution;
+use lobra::util::Rng;
+
+fn world(n_gpus: u32) -> (CostModel, ClusterSpec) {
+    let cluster = ClusterSpec::a100_40g(n_gpus);
+    let cost = CostModel::calibrated(&ModelDesc::llama2_7b(), &cluster);
+    (cost, cluster)
+}
+
+/// A varied pool of tenants: short instruction tasks through a 16K
+/// summarization tail, so churn moves the bucket boundaries and the
+/// candidate-config set around.
+fn spec_pool() -> Vec<TaskSpec> {
+    vec![
+        TaskSpec::new("qa-short", 128, LengthDistribution::fit(210.0, 6.0, 16, 2048)),
+        TaskSpec::new("code-instr", 96, LengthDistribution::fit(280.0, 8.0, 16, 2048)),
+        TaskSpec::new("evol-like", 64, LengthDistribution::fit(700.0, 6.5, 16, 8192)),
+        TaskSpec::new("commits", 64, LengthDistribution::fit(660.0, 0.8, 16, 4096)),
+        TaskSpec::new("xsum-like", 64, LengthDistribution::fit(520.0, 7.5, 16, 8192)),
+        TaskSpec::new("meetings", 32, LengthDistribution::fit(3600.0, 4.3, 16, 16384)),
+    ]
+}
+
+/// Faster planner options for churn tests (identical for warm and cold
+/// paths, so the identity property is unaffected).
+fn churn_opts() -> PlannerOptions {
+    let mut opts = PlannerOptions::default();
+    opts.calibration_multiple = 25;
+    opts.eval_batches = 2;
+    opts.max_evaluated = 300;
+    opts
+}
+
+#[test]
+fn warm_replan_matches_cold_after_any_churn() {
+    let (cost, cluster) = world(16);
+    let planner = Planner::new(&cost, &cluster);
+    let opts = churn_opts();
+    let mut session = PlanningSession::new(opts.clone());
+    let pool = spec_pool();
+    let mut live: Vec<TaskSpec> = vec![pool[0].clone(), pool[2].clone()];
+    let mut rng = Rng::new(0xC0FFEE);
+
+    let mut checked = 0;
+    for event in 0..10 {
+        // mutate the live set: arrive an absent pool task or exit a live
+        // one (keeping at least one task live, so every event replans)
+        let arriving = live.len() <= 1 || (live.len() < pool.len() && rng.f64() < 0.5);
+        if arriving {
+            let absent: Vec<&TaskSpec> = pool
+                .iter()
+                .filter(|s| !live.iter().any(|l| l.name == s.name))
+                .collect();
+            let pick = absent[rng.below(absent.len() as u64) as usize];
+            live.push(pick.clone());
+        } else {
+            let victim = rng.below(live.len() as u64) as usize;
+            live.remove(victim);
+        }
+        let tasks = TaskSet::new(live.clone());
+        let warm = session.plan(&planner, &tasks).unwrap();
+        let cold = planner.plan(&tasks, opts.clone()).unwrap();
+        assert_eq!(
+            warm.groups, cold.groups,
+            "event {event}: warm plan diverged from cold ({} tasks)",
+            tasks.len()
+        );
+        assert_eq!(
+            warm.expected_step_time.to_bits(),
+            cold.expected_step_time.to_bits(),
+            "event {event}: warm step-time not bit-identical to cold"
+        );
+        checked += 1;
+    }
+    assert_eq!(checked, 10, "every churn event must have replanned");
+
+    // replanning an unchanged task set is guaranteed to warm-start (the
+    // candidate-config set cannot have moved) and stay identical
+    let tasks = TaskSet::new(live.clone());
+    let warm_before = session.stats.warm_starts;
+    let warm = session.plan(&planner, &tasks).unwrap();
+    let cold = planner.plan(&tasks, opts.clone()).unwrap();
+    assert_eq!(session.stats.warm_starts, warm_before + 1);
+    assert_eq!(warm.groups, cold.groups);
+    assert_eq!(warm.expected_step_time.to_bits(), cold.expected_step_time.to_bits());
+}
+
+#[test]
+fn churn_accounting_over_twenty_events() {
+    let (cost, cluster) = world(8);
+    let mut opts = churn_opts();
+    opts.eval_batches = 1;
+    opts.calibration_multiple = 10;
+    let pool = spec_pool();
+    let initial = TaskSet::new(vec![pool[0].clone()]);
+    let mut mgr = TaskManager::new(&cost, &cluster, initial, opts);
+    let mut expected_replans = mgr.replans; // the initial plan
+    assert_eq!(expected_replans, 1);
+
+    let mut rng = Rng::new(0x5EED);
+    let mut live: Vec<String> = vec![pool[0].name.clone()];
+    for event in 0..24 {
+        let roll = rng.f64();
+        let outcome = if roll < 0.35 && live.len() < pool.len() {
+            // fresh arrival: replan expected
+            let absent: Vec<&TaskSpec> = pool
+                .iter()
+                .filter(|s| !live.contains(&s.name))
+                .collect();
+            let pick = absent[rng.below(absent.len() as u64) as usize].clone();
+            live.push(pick.name.clone());
+            expected_replans += 1;
+            let out = mgr.handle(TaskEvent::Arrive(pick));
+            assert_ne!(out, ReplanOutcome::Rejected, "event {event}");
+            out
+        } else if roll < 0.5 && !live.is_empty() {
+            // duplicate arrival: rejected, no replan
+            let name = &live[rng.below(live.len() as u64) as usize];
+            let dup = pool.iter().find(|s| &s.name == name).unwrap().clone();
+            let out = mgr.handle(TaskEvent::Arrive(dup));
+            assert_eq!(out, ReplanOutcome::Rejected, "event {event}");
+            out
+        } else if roll < 0.65 {
+            // unknown exit: unchanged, no replan
+            let out = mgr.handle(TaskEvent::Exit { name: "never-arrived".into() });
+            assert_eq!(out, ReplanOutcome::Unchanged, "event {event}");
+            out
+        } else if live.len() > 1 {
+            // real exit leaving a non-empty set: replan expected
+            let victim = live.remove(rng.below(live.len() as u64) as usize);
+            expected_replans += 1;
+            mgr.handle(TaskEvent::Exit { name: victim })
+        } else {
+            // keep at least one live task so the manager never drains
+            let absent: Vec<&TaskSpec> = pool
+                .iter()
+                .filter(|s| !live.contains(&s.name))
+                .collect();
+            let pick = absent[rng.below(absent.len() as u64) as usize].clone();
+            live.push(pick.name.clone());
+            expected_replans += 1;
+            mgr.handle(TaskEvent::Arrive(pick))
+        };
+        assert_eq!(
+            mgr.replans, expected_replans,
+            "event {event} ({outcome:?}): replan accounting drifted"
+        );
+        assert!(mgr.redeploys <= mgr.replans, "event {event}");
+        assert_eq!(mgr.tasks().len(), live.len(), "event {event}");
+        assert!(mgr.plan().is_some(), "event {event}: live tasks but no plan");
+    }
+    // every replan was served by the persistent session
+    assert_eq!(mgr.session().stats.plans, mgr.replans as u64);
+    assert_eq!(
+        mgr.session().stats.warm_starts + mgr.session().stats.cold_starts,
+        mgr.replans as u64
+    );
+    let (hits, misses) = mgr.tables().stats();
+    assert_eq!(hits + misses, mgr.replans as u64, "one table fetch per replan");
+}
+
+#[test]
+fn extend_capped_search_recovers_uncapped_plan() {
+    let (cost, cluster) = world(16);
+    let planner = Planner::new(&cost, &cluster);
+    let tasks = TaskSet::new(vec![
+        spec_pool()[0].clone(),
+        spec_pool()[2].clone(),
+        spec_pool()[5].clone(),
+    ]);
+
+    let mut capped_opts = churn_opts();
+    // Force the cap: ≥5 distinct replica sizes {1,2,4,8,16} admit ≥36
+    // maximal packings of 16 GPUs, so a 20-plan budget always trips.
+    capped_opts.max_plans = 20;
+    let mut session = PlanningSession::new(capped_opts.clone());
+    let (first, stats) = session.plan_with_stats(&planner, &tasks).unwrap();
+    assert!(stats.hit_plan_cap, "20-plan budget must cap at 16 GPUs");
+    assert!(first.gpus_used() <= 16);
+
+    // extend in slices until the enumeration completes
+    let mut final_plan = first;
+    let mut rounds = 0;
+    loop {
+        let Some((plan, stats)) = session.extend_capped_search(&planner, &tasks, 100_000)
+        else {
+            break;
+        };
+        final_plan = plan;
+        rounds += 1;
+        if !stats.hit_plan_cap {
+            break;
+        }
+        assert!(rounds < 50, "extension failed to converge");
+    }
+    assert!(rounds >= 1, "capped memo must be extendable");
+    // once complete, further extension has nothing to do
+    assert!(session.extend_capped_search(&planner, &tasks, 100_000).is_none());
+
+    // the incrementally-extended search equals one uncapped cold search
+    let mut full_opts = capped_opts;
+    full_opts.max_plans = usize::MAX / 2;
+    let cold = planner.plan(&tasks, full_opts).unwrap();
+    assert_eq!(final_plan.groups, cold.groups);
+    assert_eq!(
+        final_plan.expected_step_time.to_bits(),
+        cold.expected_step_time.to_bits(),
+        "extended {} vs cold {}",
+        final_plan.expected_step_time,
+        cold.expected_step_time
+    );
+}
