@@ -1,9 +1,12 @@
 //! End-to-end validation: real joint multi-LoRA fine-tuning through all
-//! three layers — the Rust coordinator executes the AOT-compiled HLO train
-//! step (JAX transformer + Pallas multi-LoRA kernel) on the PJRT CPU
-//! client, accumulates flat LoRA gradients, and updates adapters with the
-//! in-Rust Adam. Logs the joint and per-task loss curves, proving the
-//! layers compose on a real workload (recorded in EXPERIMENTS.md §E2E).
+//! three layers — the Rust coordinator draws a Table-4-shaped fused batch,
+//! dispatches it over the virtual cluster's replicas with the MINMAX
+//! solve, and the PJRT executor runs the dispatched loads as AOT-compiled
+//! HLO train steps (JAX transformer + Pallas multi-LoRA kernel) on the
+//! CPU client, reducing LoRA gradients deterministically before the
+//! in-Rust Adam update. Logs the joint and per-task loss curves plus the
+//! dispatch-clock GPU-seconds, proving the layers compose on a real
+//! workload (recorded in EXPERIMENTS.md §E2E).
 //!
 //! ```bash
 //! make artifacts                       # once (Python build path)
@@ -70,9 +73,14 @@ fn main() -> anyhow::Result<()> {
     let first = first_loss.unwrap();
     let wall: f64 = logs.iter().map(|l| l.wall_seconds).sum();
     let virt: f64 = logs.iter().map(|l| l.virtual_seconds).sum();
+    let virt_gpu: f64 = logs.iter().map(|l| l.virtual_gpu_seconds).sum();
     println!("\nsummary:");
     println!("  loss: {first:.4} -> {:.4} ({:.1}% reduction)", last.loss, (1.0 - last.loss / first) * 100.0);
-    println!("  wall: {wall:.1}s real CPU, {virt:.2}s virtual-cluster clock");
+    println!(
+        "  wall: {wall:.1}s real CPU, {virt:.2}s virtual-cluster clock \
+         ({virt_gpu:.2} GPU·s via MINMAX dispatch over [{}])",
+        trainer.virtual_plan().notation()
+    );
     // loss must actually go down for this to count as training
     assert!(
         last.loss < first * 0.9,

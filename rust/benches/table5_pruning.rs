@@ -10,8 +10,14 @@
 //! A per-cell time budget (`LOBRA_BENCH_TIMEOUT`, default 120 s — the
 //! paper used 3600 s) marks cells "X" via plan-cap detection.
 //!
+//! Knobs: `LOBRA_BENCH_MAX_GPUS` caps the cluster sweep (default 128; set
+//! 256 to reproduce the paper's full Table 5 — the opt-in CI job does);
+//! `LOBRA_BENCH_JSON` records per-cell wall-clocks to the given path.
+//!
 //! ```bash
 //! cargo bench --bench table5_pruning
+//! LOBRA_BENCH_MAX_GPUS=256 LOBRA_BENCH_JSON=BENCH_table5.json \
+//!   cargo bench --bench table5_pruning
 //! ```
 
 use lobra::cluster::ClusterSpec;
@@ -26,8 +32,16 @@ fn main() {
         .ok()
         .and_then(|s| s.parse().ok())
         .unwrap_or(120.0);
+    let max_gpus: u32 = std::env::var("LOBRA_BENCH_MAX_GPUS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(128);
+    let json_path = std::env::var("LOBRA_BENCH_JSON").ok();
     let tasks = TaskSet::paper_scalability_subset();
-    println!("== Table 5: planning cost, 70B, 4 tasks (timeout {timeout:.0}s/cell) ==\n");
+    println!(
+        "== Table 5: planning cost, 70B, 4 tasks (timeout {timeout:.0}s/cell, \
+         up to {max_gpus} GPUs) ==\n"
+    );
 
     let regimes: [(&str, bool, bool); 3] = [
         ("w/o proposal, w/o filter", false, false),
@@ -41,13 +55,17 @@ fn main() {
     // which regimes already exceeded the budget at a smaller scale — the
     // paper marks larger scales X without re-running.
     let mut dead = [false; 3];
+    let mut json_rows: Vec<String> = Vec::new();
 
-    for gpus in [16u32, 24, 32, 40, 48, 64, 128] {
+    for gpus in [16u32, 24, 32, 40, 48, 64, 128, 256].into_iter().filter(|&g| g <= max_gpus) {
         let cluster = ClusterSpec::a800_80g(gpus);
         let cost = CostModel::calibrated(&ModelDesc::llama2_70b(), &cluster);
         let planner = Planner::new(&cost, &cluster);
         let mut cells = vec![gpus.to_string()];
         let mut final_plan = String::new();
+        // per-regime wall-clock for the JSON record; NaN → null (cell
+        // skipped or over budget)
+        let mut walls = [f64::NAN; 3];
         for (ri, &(_, proposal, filter)) in regimes.iter().enumerate() {
             if dead[ri] {
                 cells.push("X".into());
@@ -88,6 +106,7 @@ fn main() {
                         dead[ri] = true;
                     } else {
                         cells.push(format!("{dt:.2}"));
+                        walls[ri] = dt;
                     }
                     if filter {
                         final_plan = plan.notation();
@@ -103,10 +122,36 @@ fn main() {
                 None => cells.push("-".into()),
             }
         }
-        cells.push(final_plan);
+        cells.push(final_plan.clone());
         t.row(&cells);
+        let cell = |w: f64| {
+            if w.is_nan() {
+                "null".to_string()
+            } else {
+                format!("{w:.3}")
+            }
+        };
+        json_rows.push(format!(
+            "    {{\"gpus\": {gpus}, \"no_proposal_no_filter\": {}, \
+             \"proposal_no_filter\": {}, \"proposal_filter\": {}, \
+             \"plan\": \"{final_plan}\"}}",
+            cell(walls[0]),
+            cell(walls[1]),
+            cell(walls[2])
+        ));
         eprintln!("  {gpus} GPUs done");
     }
     t.print();
+    if let Some(path) = &json_path {
+        let json = format!(
+            "{{\n  \"bench\": \"table5_pruning\",\n  \"max_gpus\": {max_gpus},\n  \
+             \"timeout_seconds\": {timeout},\n  \"rows\": [\n{}\n  ]\n}}\n",
+            json_rows.join(",\n")
+        );
+        match std::fs::write(path, &json) {
+            Ok(()) => println!("\nwall-clocks recorded to {path}"),
+            Err(e) => eprintln!("\nWARNING: could not write {path}: {e}"),
+        }
+    }
     println!("\npaper shape: un-pruned times explode with GPU count; both prunings keep it in minutes.");
 }

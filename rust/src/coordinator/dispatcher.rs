@@ -34,6 +34,11 @@ pub struct DispatchPlan {
     pub d: Vec<Vec<u64>>,
     /// Exact per-replica busy times (flattened: group-major).
     pub replica_times: Vec<(ParallelConfig, f64)>,
+    /// Per-replica dispatched loads (flattened group-major, aligned with
+    /// `replica_times`): exactly the loads [`Dispatcher::evaluate`] timed,
+    /// so executors ([`crate::exec`]) run the very assignment the predicted
+    /// step time was computed from.
+    pub replica_assignments: Vec<Vec<BucketLoad>>,
     /// Predicted step time (max replica time).
     pub predicted_step_time: f64,
     /// Linear-model makespan from the solver (diagnostics).
@@ -41,25 +46,17 @@ pub struct DispatchPlan {
 }
 
 impl DispatchPlan {
-    /// Per-replica loads of group `i`: bucket counts split by the LPT
-    /// greedy (see [`solver::split_group_lpt`]), weighted by padded length.
+    /// Per-replica loads of group `i`, as recorded by
+    /// [`Dispatcher::evaluate`]'s per-sequence-cost LPT split. (This used
+    /// to re-derive the split with boundary-weighted costs, which could
+    /// disagree with the loads the predicted step time was evaluated on.)
     pub fn replica_loads(&self, group: usize) -> Vec<Vec<BucketLoad>> {
-        let (_, p) = self.groups[group];
-        let costs: Vec<f64> = self.boundaries.iter().map(|&b| b as f64).collect();
-        let shares = solver::split_group_lpt(&costs, &self.d[group], p as usize);
-        shares
-            .into_iter()
-            .map(|rep| {
-                rep.iter()
-                    .enumerate()
-                    .filter(|&(_, &s)| s > 0)
-                    .map(|(j, &s)| BucketLoad {
-                        count: s,
-                        padded_len: self.boundaries[j] as u64,
-                    })
-                    .collect()
-            })
-            .collect()
+        let offset: usize = self.groups[..group]
+            .iter()
+            .map(|&(_, p)| p.max(1) as usize)
+            .sum();
+        let p = self.groups[group].1.max(1) as usize;
+        self.replica_assignments[offset..offset + p].to_vec()
     }
 
     /// Total sequences dispatched.
@@ -177,6 +174,7 @@ impl<'a> Dispatcher<'a> {
         solver_makespan: f64,
     ) -> DispatchPlan {
         let mut replica_times = Vec::new();
+        let mut replica_assignments = Vec::new();
         let mut predicted: f64 = 0.0;
         for (i, &(cfg, p)) in self.plan.groups.iter().enumerate() {
             // split this group's sequences over its replicas with the
@@ -207,6 +205,7 @@ impl<'a> Dispatcher<'a> {
                 let t = self.replica_time(cfg, &loads);
                 predicted = predicted.max(t);
                 replica_times.push((cfg, t));
+                replica_assignments.push(loads);
             }
         }
         // synchronous LoRA sync at the end of the step
@@ -218,6 +217,7 @@ impl<'a> Dispatcher<'a> {
             boundaries: buckets.boundaries.clone(),
             d,
             replica_times,
+            replica_assignments,
             predicted_step_time: predicted + sync,
             solver_makespan,
         }
@@ -335,6 +335,32 @@ mod tests {
                 "{policy:?}"
             );
         }
+    }
+
+    #[test]
+    fn recorded_assignments_are_the_timed_loads() {
+        // the per-replica loads recorded in the plan must be exactly the
+        // loads the per-replica times were evaluated on (executors replay
+        // them, so any drift would break sim/dispatch bit-identity)
+        let (cost, plan) = setup();
+        let disp = Dispatcher::new(&cost, &plan);
+        let dp = disp.dispatch(&buckets(), DispatchPolicy::Balanced).unwrap();
+        assert_eq!(dp.replica_assignments.len(), dp.replica_times.len());
+        for (i, (rt, loads)) in
+            dp.replica_times.iter().zip(&dp.replica_assignments).enumerate()
+        {
+            assert_eq!(
+                cost.replica_time(rt.0, loads).to_bits(),
+                rt.1.to_bits(),
+                "replica {i}: recorded loads don't reproduce the timed value"
+            );
+        }
+        // replica_loads(group) slices the same recording
+        let mut flat = Vec::new();
+        for g in 0..dp.groups.len() {
+            flat.extend(dp.replica_loads(g));
+        }
+        assert_eq!(flat, dp.replica_assignments);
     }
 
     #[test]

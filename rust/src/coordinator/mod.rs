@@ -12,7 +12,13 @@
 //! * [`session`] — persistent planning sessions: the long-lived search
 //!   state between replans (previous survivor set, shared cost-table LRU,
 //!   resume checkpoints of capped searches).
-//! * [`scheduler`] — the joint-FT step loop tying it all together.
+//! * [`scheduler`] — the joint-FT step loop tying it all together: per
+//!   step it builds a [`crate::exec::ExecutionPlan`] (dispatch solve +
+//!   concrete per-replica sequence assignment) and hands it to a
+//!   [`crate::exec::ReplicaExecutor`] backend. Simulated benches use the
+//!   cost-clock backend; `lobra train` runs the identical pipeline with
+//!   the PJRT backend, so both report GPU-seconds from the same dispatch
+//!   code (see the [`crate::exec`] module docs for the backend diagram).
 //! * [`tasks`] — tenant lifecycle: arrivals/exits trigger re-planning.
 //!
 //! ## State flow

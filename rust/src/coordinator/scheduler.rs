@@ -1,11 +1,14 @@
 //! The joint-FT step loop (simulation-clock execution).
 //!
 //! Each training step: draw the fused batch → dynamic-bucketize → solve the
-//! balanced dispatch → "execute" on the deployed replicas (exact cost-model
-//! times) → synchronous LoRA sync → account GPU seconds. This is the engine
-//! behind the end-to-end (Fig. 7), ablation (Fig. 8), case-study (Fig. 9)
-//! and scalability (Fig. 11) benches; the *real* PJRT-backed training loop
-//! in [`crate::train`] shares the same dispatch path but executes HLO.
+//! balanced dispatch → build the [`crate::exec::ExecutionPlan`] → execute
+//! it on a [`crate::exec::SimExecutor`] (exact cost-model times) →
+//! synchronous LoRA sync → account GPU seconds. This is the engine behind
+//! the end-to-end (Fig. 7), ablation (Fig. 8), case-study (Fig. 9) and
+//! scalability (Fig. 11) benches; the *real* PJRT-backed training loop in
+//! [`crate::train`] routes through the same dispatch → `ExecutionPlan` →
+//! executor pipeline with the PJRT backend, so both report GPU-seconds
+//! from the same dispatch code.
 
 use std::sync::Arc;
 
@@ -14,10 +17,11 @@ use crate::config::{ParallelConfig, TaskSet};
 use crate::coordinator::bucketing::{
     bucketize, buckets_from_boundaries, padding_ratio, BucketingOptions, Buckets,
 };
-use crate::coordinator::dispatcher::{DispatchPlan, DispatchPolicy, Dispatcher};
+use crate::coordinator::dispatcher::{DispatchPlan, DispatchPolicy};
 use crate::coordinator::planner::DeploymentPlan;
 use crate::costmodel::{CostModel, CostTable, CostTables};
 use crate::data::MultiTaskSampler;
+use crate::exec::{ExecutionPlan, ReplicaExecutor, SimExecutor};
 use crate::metrics::JointFtReport;
 
 /// Scheduler knobs — the Figure 8 ablation axes.
@@ -75,6 +79,8 @@ pub struct Scheduler<'a> {
     /// The step's current table (skips the cache lock while consecutive
     /// batches land on the same boundaries — the common case).
     table: Option<Arc<CostTable>>,
+    /// Execution backend: the scheduler is a thin loop over it.
+    exec: SimExecutor<'a>,
 }
 
 impl<'a> Scheduler<'a> {
@@ -110,6 +116,7 @@ impl<'a> Scheduler<'a> {
             fixed,
             tables,
             table: None,
+            exec: SimExecutor::new(cost),
         }
     }
 
@@ -143,6 +150,12 @@ impl<'a> Scheduler<'a> {
     }
 
     /// Run one step; returns its report.
+    ///
+    /// The step is a thin pipeline: sample → bucketize → build the
+    /// [`ExecutionPlan`] (MINMAX dispatch solve + concrete sequence
+    /// assignment) → hand it to the [`SimExecutor`]. All step-time
+    /// arithmetic lives in the executor; `tests/exec_identity.rs` certifies
+    /// it is bit-identical to the pre-exec inline computation.
     pub fn step(&mut self) -> Option<StepReport> {
         let batch = self.sampler.next_batch();
         let lengths = batch.lengths();
@@ -155,20 +168,30 @@ impl<'a> Scheduler<'a> {
             self.table =
                 Some(self.tables.get_or_build(self.cost, &cfgs, &buckets.boundaries));
         }
-        let table: &CostTable = self.table.as_ref().unwrap();
-        let dispatcher = Dispatcher::with_table(self.cost, self.plan, table);
-        let dispatch = dispatcher.dispatch(&buckets, self.opts.policy)?;
-        let solve_seconds = t0.elapsed().as_secs_f64();
+        let table_seconds = t0.elapsed().as_secs_f64();
+        let eplan = ExecutionPlan::build(
+            self.cost,
+            self.plan,
+            self.table.clone(),
+            batch,
+            buckets,
+            self.opts.policy,
+        )?;
+        // solve cost = table (re)build + the dispatch solve itself; the
+        // concrete-sequence deal-out inside `build` is execution setup, not
+        // planning, and must not inflate the overlappable-solve metric
+        let solve_seconds = table_seconds + eplan.solve_seconds;
 
-        let acc = self.ledger.record_step(&dispatch.replica_times);
+        let exec = self.exec.execute_step(&eplan).ok()?;
+        let acc = self.ledger.record_step(&exec.replica_seconds);
         let report = StepReport {
             step: self.ledger.steps,
-            step_time: dispatch.predicted_step_time,
-            gpu_seconds: self.plan.gpus_used() as f64 * dispatch.predicted_step_time,
+            step_time: exec.step_time,
+            gpu_seconds: self.plan.gpus_used() as f64 * exec.step_time,
             utilization: acc.utilization,
-            padding_ratio: padding_ratio(&lengths, &buckets.boundaries),
+            padding_ratio: padding_ratio(&lengths, &eplan.buckets.boundaries),
             solve_seconds,
-            dispatch,
+            dispatch: eplan.dispatch,
         };
         self.reports.push(report.clone());
         Some(report)

@@ -72,6 +72,16 @@ impl SyntheticCorpus {
         let mean = spec.mean_len.min(seqlen as u32) as f64;
         let len = (self.rng.normal_ms(mean, mean / 4.0).round() as i64)
             .clamp(8, seqlen as i64) as usize;
+        self.sequence_exact(task, len, seqlen)
+    }
+
+    /// One sequence for `task` with exactly `len.min(seqlen)` real tokens,
+    /// padded with 0 (PAD) to `seqlen`. Used by the execution layer, where
+    /// the length was already drawn by the coordinator's sampler — the
+    /// corpus must not second-guess the dispatched workload.
+    pub fn sequence_exact(&mut self, task: usize, len: usize, seqlen: usize) -> Vec<i32> {
+        let spec = &self.specs[task];
+        let len = len.min(seqlen);
         let (start, span, stride) = (spec.start, spec.span, spec.stride);
         let mut off = self.rng.below(span as u64) as u32;
         let mut out = Vec::with_capacity(seqlen);
@@ -163,6 +173,22 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn sequence_exact_honors_requested_length() {
+        let mut c = SyntheticCorpus::new(512, 3, 5);
+        for len in [1usize, 8, 17, 64] {
+            let s = c.sequence_exact(1, len, 64);
+            assert_eq!(s.len(), 64);
+            let real = s.iter().take_while(|&&t| t != 0).count();
+            assert_eq!(real, len, "requested {len}");
+            assert!(s[real..].iter().all(|&t| t == 0));
+        }
+        // over-long requests truncate to the pad length
+        let s = c.sequence_exact(0, 100, 32);
+        assert_eq!(s.len(), 32);
+        assert!(s.iter().all(|&t| t != 0));
     }
 
     #[test]

@@ -1,0 +1,380 @@
+//! Backend-agnostic per-step execution of dispatched replica workloads.
+//!
+//! LobRA's headline claim is that per-step MINMAX dispatching over
+//! heterogeneous FT replicas balances sequence-length skew. That claim is
+//! only as good as the execution layer that realizes it: before this module
+//! existed, the simulated step loop ([`crate::coordinator::scheduler`])
+//! inlined its own cost-model arithmetic while the real PJRT training loop
+//! ([`crate::train`]) round-robined microbatch shapes over replicas — two
+//! different executions of two different workload assignments, neither
+//! shared with the other. This module is the single execution layer both
+//! now route through:
+//!
+//! ```text
+//!   MultiTaskSampler ──► bucketize ──► Dispatcher::dispatch (MINMAX solve)
+//!                                              │
+//!                                     ExecutionPlan::build
+//!                              (per-replica BucketLoads + concrete
+//!                               sequence assignment, group-major order)
+//!                                              │
+//!                      ┌───────────────────────┴───────────────────────┐
+//!                      ▼            ReplicaExecutor                    ▼
+//!              ┌──────────────┐                              ┌──────────────────┐
+//!              │ SimExecutor  │  advances the cost-model     │  PjrtExecutor    │
+//!              │ (cost clock) │  clock per replica; bit-     │ (runtime::Engine)│
+//!              │              │  identical to the dispatch   │  maps BucketLoads│
+//!              │              │  solve's predicted times     │  to compiled     │
+//!              └──────┬───────┘                              │  (batch, seq)    │
+//!                     │                                      │  artifacts, runs │
+//!                     │                                      │  replicas via    │
+//!                     │                                      │  util::par       │
+//!                     │                                      └────────┬─────────┘
+//!                     ▼                                               ▼
+//!               StepExecution { replica_seconds, step_time, [TrainOutput] }
+//! ```
+//!
+//! Both backends account the *virtual-cluster clock* identically — per
+//! replica, the cost model's `replica_time` over its dispatched loads; per
+//! step, the max over replicas plus the synchronous LoRA sync — so the
+//! GPU-seconds reported by simulated benches and by real `lobra train` runs
+//! come from the same dispatch code path. The real backend additionally
+//! executes the assignment on the PJRT engine (replicas run concurrently
+//! via [`crate::util::par`]) and reduces gradients deterministically:
+//! per-replica partials are combined in fixed replica order with a
+//! token-weighted binary-tree reduction ([`tree_reduce`]), so results are
+//! seed-reproducible regardless of `LOBRA_NUM_THREADS`.
+
+mod pjrt;
+mod sim;
+
+pub use pjrt::{materialize_assignment, Microbatch, PjrtExecutor};
+pub use sim::SimExecutor;
+
+use std::collections::VecDeque;
+use std::sync::Arc;
+
+use crate::config::ParallelConfig;
+use crate::coordinator::bucketing::Buckets;
+use crate::coordinator::dispatcher::{DispatchPlan, DispatchPolicy, Dispatcher};
+use crate::coordinator::planner::DeploymentPlan;
+use crate::costmodel::{BucketLoad, CostModel, CostTable};
+use crate::data::{FusedBatch, Sequence};
+use anyhow::Result;
+
+/// One replica's workload for one step: its dispatched bucket loads plus
+/// the concrete sequences backing them (grouped per load, same order).
+#[derive(Debug, Clone)]
+pub struct ReplicaAssignment {
+    /// Global replica index (group-major, fixed across the run).
+    pub replica: usize,
+    /// Index of the owning group in the deployment plan.
+    pub group: usize,
+    pub config: ParallelConfig,
+    /// Dispatched loads, exactly as timed by `Dispatcher::evaluate`.
+    pub loads: Vec<BucketLoad>,
+    /// Concrete sequences per load (parallel to `loads`; each inner vec has
+    /// `loads[k].count` entries).
+    pub sequences: Vec<Vec<Sequence>>,
+}
+
+impl ReplicaAssignment {
+    /// Total sequences assigned to this replica.
+    pub fn n_sequences(&self) -> u64 {
+        self.loads.iter().map(|l| l.count).sum()
+    }
+}
+
+/// A fully-resolved step workload: the fused batch, its buckets, the MINMAX
+/// dispatch solve, and the per-replica assignment of concrete sequences —
+/// everything an executor backend needs, and nothing it must re-derive.
+#[derive(Debug, Clone)]
+pub struct ExecutionPlan {
+    pub batch: FusedBatch,
+    pub buckets: Buckets,
+    pub dispatch: DispatchPlan,
+    /// Per-replica workloads, group-major (fixed replica order).
+    pub assignments: Vec<ReplicaAssignment>,
+    /// Deployment-wide constants for the sync-time term.
+    pub n_replicas: u32,
+    pub n_tasks: u32,
+    /// Wall-clock of the dispatch solve alone (the overlappable per-step
+    /// planning cost — excludes the concrete-sequence deal-out below).
+    pub solve_seconds: f64,
+    /// Cost table the dispatch was solved with (if any); executors read
+    /// replica times through it so execution is bit-identical to the solve.
+    pub table: Option<Arc<CostTable>>,
+}
+
+impl ExecutionPlan {
+    /// Run the coordinator pipeline tail for one step: solve the dispatch
+    /// over `buckets` and deal the batch's concrete sequences onto replicas
+    /// in deterministic (bucket-queue, group-major) order.
+    ///
+    /// Returns `None` when the deployment cannot serve the batch (some
+    /// bucket is infeasible on every group).
+    pub fn build(
+        cost: &CostModel,
+        deployment: &DeploymentPlan,
+        table: Option<Arc<CostTable>>,
+        batch: FusedBatch,
+        buckets: Buckets,
+        policy: DispatchPolicy,
+    ) -> Option<ExecutionPlan> {
+        let t0 = std::time::Instant::now();
+        let dispatch = match &table {
+            Some(t) => {
+                Dispatcher::with_table(cost, deployment, t).dispatch(&buckets, policy)?
+            }
+            None => Dispatcher::new(cost, deployment).dispatch(&buckets, policy)?,
+        };
+        let solve_seconds = t0.elapsed().as_secs_f64();
+
+        // Deal concrete sequences: per bucket, a FIFO queue in batch order;
+        // replicas draw from it in fixed group-major order. Deterministic
+        // given (batch, dispatch), independent of any thread timing.
+        let nb = buckets.boundaries.len();
+        let mut queues: Vec<VecDeque<Sequence>> = vec![VecDeque::new(); nb];
+        for s in &batch.sequences {
+            queues[buckets.bucket_of(s.len)].push_back(*s);
+        }
+
+        let mut assignments = Vec::with_capacity(dispatch.replica_assignments.len());
+        let mut replica = 0usize;
+        let mut group = 0usize;
+        let mut left_in_group = dispatch.groups.first().map_or(0, |&(_, p)| p.max(1));
+        for loads in &dispatch.replica_assignments {
+            while left_in_group == 0 {
+                group += 1;
+                left_in_group = dispatch.groups[group].1.max(1);
+            }
+            let config = dispatch.groups[group].0;
+            let mut sequences = Vec::with_capacity(loads.len());
+            for load in loads {
+                // padded_len is always one of the solve's boundary values
+                let j = buckets.bucket_of(load.padded_len as u32);
+                debug_assert_eq!(buckets.boundaries[j] as u64, load.padded_len);
+                let mut seqs = Vec::with_capacity(load.count as usize);
+                for _ in 0..load.count {
+                    seqs.push(queues[j].pop_front()?);
+                }
+                sequences.push(seqs);
+            }
+            assignments.push(ReplicaAssignment {
+                replica,
+                group,
+                config,
+                loads: loads.clone(),
+                sequences,
+            });
+            replica += 1;
+            left_in_group -= 1;
+        }
+
+        Some(ExecutionPlan {
+            batch,
+            buckets,
+            dispatch,
+            assignments,
+            n_replicas: deployment.n_replicas(),
+            n_tasks: deployment.n_tasks,
+            solve_seconds,
+            table,
+        })
+    }
+
+    /// Total sequences across all replica assignments.
+    pub fn total_assigned(&self) -> u64 {
+        self.assignments.iter().map(|a| a.n_sequences()).sum()
+    }
+}
+
+/// What a backend reports for one executed step.
+#[derive(Debug, Clone)]
+pub struct StepExecution {
+    /// Per-replica virtual busy seconds, group-major (feeds `GpuLedger`).
+    pub replica_seconds: Vec<(ParallelConfig, f64)>,
+    /// Virtual-cluster step wall-clock: max replica time + LoRA sync.
+    pub step_time: f64,
+    /// Real host wall-clock spent executing (0 for the simulated backend).
+    pub wall_seconds: f64,
+    /// Real-backend training outputs (gradients, losses); `None` for sim.
+    pub train: Option<TrainOutput>,
+}
+
+/// Aggregated training outputs of one real (engine-executed) step.
+#[derive(Debug, Clone)]
+pub struct TrainOutput {
+    /// Token-weighted gradient *sum* over all microbatches (divide by
+    /// `tokens` for the mean the optimizer consumes).
+    pub grad: Vec<f32>,
+    /// Token-weighted loss sum.
+    pub loss_sum: f64,
+    /// Total target tokens.
+    pub tokens: f64,
+    /// Per-task loss sums / token counts.
+    pub task_loss: Vec<f64>,
+    pub task_tokens: Vec<f64>,
+    /// Microbatches executed across all replicas.
+    pub microbatches: usize,
+}
+
+/// A per-step replica executor backend.
+///
+/// Contract: `execute_step` runs every [`ReplicaAssignment`] in
+/// `plan.assignments` and reports per-replica virtual busy seconds in the
+/// same (group-major) order, with `step_time = max(replica) + sync` — the
+/// exact accounting of the dispatch solve, so a backend swap never changes
+/// the reported GPU-seconds model.
+pub trait ReplicaExecutor {
+    /// Stable backend name for logs and reports.
+    fn backend(&self) -> &'static str;
+
+    /// Execute one step's assignments.
+    fn execute_step(&mut self, plan: &ExecutionPlan) -> Result<StepExecution>;
+}
+
+/// Virtual-cluster accounting shared by both backends: per-replica busy
+/// time via the cost table (bit-identical to the dispatch solve when the
+/// plan carries the table it was solved with), max-folded in fixed replica
+/// order, plus the synchronous LoRA sync.
+pub(crate) fn virtual_clock(
+    cost: &CostModel,
+    plan: &ExecutionPlan,
+) -> (Vec<(ParallelConfig, f64)>, f64) {
+    let mut replica_seconds = Vec::with_capacity(plan.assignments.len());
+    let mut busiest: f64 = 0.0;
+    for a in &plan.assignments {
+        let t = match &plan.table {
+            Some(table) => table.replica_time(a.config, &a.loads),
+            None => cost.replica_time(a.config, &a.loads),
+        };
+        busiest = busiest.max(t);
+        replica_seconds.push((a.config, t));
+    }
+    let sync = cost.sync_time(plan.n_replicas, plan.n_tasks.max(1));
+    (replica_seconds, busiest + sync)
+}
+
+/// Deterministic binary-tree reduction in input order: pairs `(0,1)`,
+/// `(2,3)`, … are combined level by level until one value remains. The
+/// shape depends only on `items.len()`, never on thread timing, so
+/// reductions over `par_map` outputs are reproducible for any worker count.
+pub fn tree_reduce<T>(items: Vec<T>, mut combine: impl FnMut(T, T) -> T) -> Option<T> {
+    let mut level = items;
+    while level.len() > 1 {
+        let mut next = Vec::with_capacity(level.len().div_ceil(2));
+        let mut it = level.into_iter();
+        while let Some(a) = it.next() {
+            match it.next() {
+                Some(b) => next.push(combine(a, b)),
+                None => next.push(a),
+            }
+        }
+        level = next;
+    }
+    level.pop()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ClusterSpec;
+    use crate::config::{ModelDesc, TaskSet};
+    use crate::coordinator::bucketing::{bucketize, BucketingOptions};
+    use crate::coordinator::planner::{Planner, PlannerOptions};
+    use crate::data::MultiTaskSampler;
+
+    fn world() -> (CostModel, DeploymentPlan, TaskSet) {
+        let cluster = ClusterSpec::a100_40g(16);
+        let cost = CostModel::calibrated(&ModelDesc::llama2_7b(), &cluster);
+        let tasks = TaskSet::paper_7b_subset();
+        let planner = Planner::new(&cost, &cluster);
+        let plan = planner.plan(&tasks, PlannerOptions::default()).unwrap();
+        (cost, plan, tasks)
+    }
+
+    #[test]
+    fn plan_partitions_batch_exactly() {
+        let (cost, plan, tasks) = world();
+        let mut sampler = MultiTaskSampler::new(&tasks, 3);
+        for _ in 0..5 {
+            let batch = sampler.next_batch();
+            let n = batch.len() as u64;
+            let buckets = bucketize(&batch.lengths(), &BucketingOptions::default());
+            let ep = ExecutionPlan::build(
+                &cost,
+                &plan,
+                None,
+                batch,
+                buckets,
+                DispatchPolicy::Balanced,
+            )
+            .unwrap();
+            assert_eq!(ep.total_assigned(), n);
+            assert_eq!(ep.dispatch.total_sequences(), n);
+            // every load's concrete sequences fit its bucket's pad length
+            for a in &ep.assignments {
+                assert_eq!(a.loads.len(), a.sequences.len());
+                for (load, seqs) in a.loads.iter().zip(&a.sequences) {
+                    assert_eq!(load.count as usize, seqs.len());
+                    for s in seqs {
+                        assert!(
+                            (s.len as u64) <= load.padded_len,
+                            "len {} over pad {}",
+                            s.len,
+                            load.padded_len
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn assignment_order_is_group_major() {
+        let (cost, plan, tasks) = world();
+        let mut sampler = MultiTaskSampler::new(&tasks, 5);
+        let batch = sampler.next_batch();
+        let buckets = bucketize(&batch.lengths(), &BucketingOptions::default());
+        let ep = ExecutionPlan::build(
+            &cost,
+            &plan,
+            None,
+            batch,
+            buckets,
+            DispatchPolicy::Balanced,
+        )
+        .unwrap();
+        assert_eq!(ep.assignments.len(), ep.dispatch.replica_times.len());
+        let mut expect = Vec::new();
+        for (gi, &(cfg, p)) in plan.groups.iter().enumerate() {
+            for _ in 0..p.max(1) {
+                expect.push((gi, cfg));
+            }
+        }
+        for (a, (gi, cfg)) in ep.assignments.iter().zip(expect) {
+            assert_eq!(a.group, gi);
+            assert_eq!(a.config, cfg);
+        }
+        for (i, a) in ep.assignments.iter().enumerate() {
+            assert_eq!(a.replica, i);
+        }
+    }
+
+    #[test]
+    fn tree_reduce_matches_linear_for_ints() {
+        for n in [0usize, 1, 2, 3, 7, 8, 33] {
+            let xs: Vec<u64> = (0..n as u64).collect();
+            let tree = tree_reduce(xs.clone(), |a, b| a + b);
+            assert_eq!(tree, xs.iter().copied().reduce(|a, b| a + b));
+        }
+    }
+
+    #[test]
+    fn tree_reduce_shape_is_input_order() {
+        // order-sensitive combine certifies the pairing is positional
+        let xs: Vec<String> = (0..5).map(|i| i.to_string()).collect();
+        let r = tree_reduce(xs, |a, b| format!("({a}{b})")).unwrap();
+        assert_eq!(r, "(((01)(23))4)");
+    }
+}

@@ -1,0 +1,336 @@
+//! Real backend: dispatched loads executed on the PJRT engine.
+
+use super::{
+    tree_reduce, virtual_clock, ExecutionPlan, ReplicaAssignment, ReplicaExecutor,
+    StepExecution, TrainOutput,
+};
+use crate::costmodel::CostModel;
+use crate::data::SyntheticCorpus;
+use crate::runtime::{Engine, ParamVector};
+use crate::util::par::par_map;
+use anyhow::{anyhow, Result};
+
+/// One engine-executable microbatch materialized from a dispatched load.
+#[derive(Debug, Clone)]
+pub struct Microbatch {
+    /// Compiled artifact shape `(batch, seq)` this microbatch targets.
+    pub shape: (u64, u64),
+    /// Row-major `[b, s]` tokens, PAD = 0.
+    pub tokens: Vec<i32>,
+    /// Sorted per-row task ids (the L1 kernel contract).
+    pub seg_ids: Vec<i32>,
+    /// Rows backed by real sequences; rows `real_rows..b` are PAD rows
+    /// (all-zero tokens) that contribute no targets to loss or gradient.
+    pub real_rows: usize,
+}
+
+/// Materialize one replica's dispatched loads into engine microbatches.
+///
+/// Each [`crate::costmodel::BucketLoad`] maps to the compiled artifact
+/// whose `seq` matches the bucket's pad length (smallest covering shape,
+/// falling back to the largest, which truncates over-long sequences); its
+/// sequences are chunked into groups of the artifact's batch size, sorted
+/// by task id within each chunk. A final partial chunk is completed with
+/// true PAD rows — all-zero token rows with zero targets — never by
+/// repeating a real sequence, which would double-count its gradient.
+pub fn materialize_assignment(
+    corpus: &mut SyntheticCorpus,
+    shapes: &[(u64, u64)],
+    assignment: &ReplicaAssignment,
+) -> Vec<Microbatch> {
+    let mut out = Vec::new();
+    for (load, seqs) in assignment.loads.iter().zip(&assignment.sequences) {
+        if load.count == 0 {
+            continue;
+        }
+        let si = shapes
+            .iter()
+            .position(|&(_, s)| s >= load.padded_len)
+            .unwrap_or(shapes.len() - 1);
+        let (b, s) = shapes[si];
+        for chunk in seqs.chunks(b as usize) {
+            let mut rows: Vec<_> = chunk.to_vec();
+            rows.sort_unstable_by_key(|r| r.task);
+            let mut tokens = Vec::with_capacity((b * s) as usize);
+            let mut seg_ids = Vec::with_capacity(b as usize);
+            for r in &rows {
+                tokens.extend(corpus.sequence_exact(
+                    r.task as usize,
+                    r.len as usize,
+                    s as usize,
+                ));
+                seg_ids.push(r.task as i32);
+            }
+            // PAD rows: zero tokens (no targets), seg id repeats the last
+            // real row's task to keep the sorted-seg-ids kernel contract.
+            let pad_seg = seg_ids.last().copied().unwrap_or(0);
+            for _ in rows.len()..b as usize {
+                tokens.resize(tokens.len() + s as usize, 0);
+                seg_ids.push(pad_seg);
+            }
+            out.push(Microbatch {
+                shape: (b, s),
+                tokens,
+                seg_ids,
+                real_rows: rows.len(),
+            });
+        }
+    }
+    out
+}
+
+/// Per-replica training partial, combined by a deterministic tree
+/// reduction in fixed replica order.
+struct ReplicaPartial {
+    grad: Vec<f32>,
+    loss_sum: f64,
+    tokens: f64,
+    task_loss: Vec<f64>,
+    task_tokens: Vec<f64>,
+    microbatches: usize,
+}
+
+impl ReplicaPartial {
+    fn empty(n_params: usize, n_tasks: usize) -> Self {
+        Self {
+            grad: vec![0.0; n_params],
+            loss_sum: 0.0,
+            tokens: 0.0,
+            task_loss: vec![0.0; n_tasks],
+            task_tokens: vec![0.0; n_tasks],
+            microbatches: 0,
+        }
+    }
+
+    fn merge(mut self, other: Self) -> Self {
+        for (g, o) in self.grad.iter_mut().zip(&other.grad) {
+            *g += o;
+        }
+        self.loss_sum += other.loss_sum;
+        self.tokens += other.tokens;
+        for (a, b) in self.task_loss.iter_mut().zip(&other.task_loss) {
+            *a += b;
+        }
+        for (a, b) in self.task_tokens.iter_mut().zip(&other.task_tokens) {
+            *a += b;
+        }
+        self.microbatches += other.microbatches;
+        self
+    }
+}
+
+/// PJRT-backed executor: wraps [`runtime::Engine`](crate::runtime::Engine)
+/// and executes each replica's dispatched loads as compiled `(batch, seq)`
+/// artifacts.
+///
+/// Replicas run concurrently via [`crate::util::par::par_map`] (the
+/// vendored PJRT stub and the CPU client are shareable across threads);
+/// microbatch materialization happens up front on one thread so the corpus
+/// RNG stream — and therefore the training data — is identical for every
+/// `LOBRA_NUM_THREADS` setting. Gradients are reduced token-weighted in
+/// fixed replica order with [`tree_reduce`], so the optimizer sees a
+/// bit-reproducible update no matter how the replicas were scheduled onto
+/// worker threads. The virtual-cluster clock is accounted with the same
+/// [`virtual_clock`] as the simulated backend.
+pub struct PjrtExecutor {
+    engine: Engine,
+    cost: CostModel,
+    corpus: SyntheticCorpus,
+    lora: ParamVector,
+}
+
+impl PjrtExecutor {
+    pub fn new(engine: Engine, cost: CostModel, corpus: SyntheticCorpus) -> Self {
+        let n = engine.manifest().lora_param_count;
+        Self { engine, cost, corpus, lora: ParamVector::zeros(n) }
+    }
+
+    pub fn engine(&self) -> &Engine {
+        &self.engine
+    }
+
+    pub fn engine_mut(&mut self) -> &mut Engine {
+        &mut self.engine
+    }
+
+    /// Cost model accounting the virtual-cluster clock.
+    pub fn cost(&self) -> &CostModel {
+        &self.cost
+    }
+
+    /// Swap the virtual cluster's cost model (e.g. after planning a real
+    /// deployment to account against).
+    pub fn set_cost(&mut self, cost: CostModel) {
+        self.cost = cost;
+    }
+
+    /// Snapshot the adapter vector the next `execute_step` runs with.
+    pub fn set_lora(&mut self, lora: &ParamVector) {
+        self.lora = lora.clone();
+    }
+}
+
+impl ReplicaExecutor for PjrtExecutor {
+    fn backend(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn execute_step(&mut self, plan: &ExecutionPlan) -> Result<StepExecution> {
+        let t0 = std::time::Instant::now();
+        let shapes = self.engine.shapes();
+        // materialize sequentially (deterministic corpus RNG order) ...
+        let per_replica: Vec<Vec<Microbatch>> = plan
+            .assignments
+            .iter()
+            .map(|a| materialize_assignment(&mut self.corpus, &shapes, a))
+            .collect();
+
+        let n_params = self.lora.len();
+        let n_tasks = self.engine.manifest().model.n_tasks as usize;
+        let engine = &self.engine;
+        let lora = &self.lora;
+        // ... then execute replicas concurrently
+        let partials: Vec<Result<ReplicaPartial>> = par_map(per_replica, |mbs| {
+            let mut acc = ReplicaPartial::empty(n_params, n_tasks);
+            for mb in mbs {
+                let out = engine.train_step(mb.shape, lora, &mb.tokens, &mb.seg_ids)?;
+                let w = out.tokens as f64;
+                acc.loss_sum += out.loss as f64 * w;
+                acc.tokens += w;
+                for (g, gi) in acc.grad.iter_mut().zip(&out.grad) {
+                    *g += gi * out.tokens;
+                }
+                for t in 0..n_tasks {
+                    acc.task_loss[t] += out.task_loss[t] as f64;
+                    acc.task_tokens[t] += out.task_tokens[t] as f64;
+                }
+                acc.microbatches += 1;
+            }
+            Ok(acc)
+        });
+        let mut ordered = Vec::with_capacity(partials.len());
+        for p in partials {
+            ordered.push(p?);
+        }
+        let total = tree_reduce(ordered, ReplicaPartial::merge)
+            .unwrap_or_else(|| ReplicaPartial::empty(n_params, n_tasks));
+        if total.microbatches == 0 {
+            return Err(anyhow!("execution plan produced no microbatches"));
+        }
+
+        let (replica_seconds, step_time) = virtual_clock(&self.cost, plan);
+        Ok(StepExecution {
+            replica_seconds,
+            step_time,
+            wall_seconds: t0.elapsed().as_secs_f64(),
+            train: Some(TrainOutput {
+                grad: total.grad,
+                loss_sum: total.loss_sum,
+                tokens: total.tokens,
+                task_loss: total.task_loss,
+                task_tokens: total.task_tokens,
+                microbatches: total.microbatches,
+            }),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ParallelConfig;
+    use crate::costmodel::BucketLoad;
+    use crate::data::Sequence;
+
+    fn assignment(lens: &[(u32, u32)], padded_len: u64) -> ReplicaAssignment {
+        let seqs: Vec<Sequence> =
+            lens.iter().map(|&(task, len)| Sequence { task, len }).collect();
+        ReplicaAssignment {
+            replica: 0,
+            group: 0,
+            config: ParallelConfig::new(1, 1),
+            loads: vec![BucketLoad { count: seqs.len() as u64, padded_len }],
+            sequences: vec![seqs],
+        }
+    }
+
+    #[test]
+    fn partial_chunks_pad_with_pad_rows_not_duplicates() {
+        // regression: the pre-exec trainer filled a short microbatch by
+        // repeating the last real sequence, double-counting its gradient;
+        // padding must be true PAD rows that contribute zero targets
+        let mut corpus = SyntheticCorpus::new(512, 3, 42);
+        let shapes = [(2u64, 32u64)];
+        let a = assignment(&[(0, 10), (1, 20), (2, 15)], 32);
+        let mbs = materialize_assignment(&mut corpus, &shapes, &a);
+        assert_eq!(mbs.len(), 2, "3 sequences at b=2 -> 2 microbatches");
+        assert_eq!(mbs[0].real_rows, 2);
+        assert_eq!(mbs[1].real_rows, 1);
+        for mb in &mbs {
+            assert_eq!(mb.tokens.len(), 2 * 32);
+            assert_eq!(mb.seg_ids.len(), 2);
+            assert!(mb.seg_ids.windows(2).all(|w| w[0] <= w[1]));
+            // pad rows are all-PAD
+            for row in mb.real_rows..2 {
+                assert!(
+                    mb.tokens[row * 32..(row + 1) * 32].iter().all(|&t| t == 0),
+                    "pad row has real tokens"
+                );
+            }
+        }
+        // gradient-weight proxy: per-task non-pad token exposure must equal
+        // each sequence's length exactly once (duplicate-padding doubled
+        // the last sequence's task here)
+        let mut per_task = [0usize; 3];
+        for mb in &mbs {
+            for row in 0..mb.real_rows {
+                let task = mb.seg_ids[row] as usize;
+                per_task[task] += mb.tokens[row * 32..(row + 1) * 32]
+                    .iter()
+                    .filter(|&&t| t != 0)
+                    .count();
+            }
+        }
+        assert_eq!(per_task, [10, 20, 15]);
+    }
+
+    #[test]
+    fn full_chunks_have_no_pad_rows() {
+        let mut corpus = SyntheticCorpus::new(512, 2, 7);
+        let shapes = [(2u64, 16u64)];
+        let a = assignment(&[(0, 8), (1, 8), (0, 8), (1, 8)], 16);
+        let mbs = materialize_assignment(&mut corpus, &shapes, &a);
+        assert_eq!(mbs.len(), 2);
+        assert!(mbs.iter().all(|mb| mb.real_rows == 2));
+    }
+
+    #[test]
+    fn load_maps_to_smallest_covering_shape() {
+        let mut corpus = SyntheticCorpus::new(512, 2, 9);
+        let shapes = [(8u64, 16u64), (4, 64), (2, 128)];
+        let a = assignment(&[(0, 20), (1, 60)], 64);
+        let mbs = materialize_assignment(&mut corpus, &shapes, &a);
+        assert_eq!(mbs.len(), 1);
+        assert_eq!(mbs[0].shape, (4, 64));
+        assert_eq!(mbs[0].real_rows, 2);
+        // over-long buckets fall back to the largest shape (truncating)
+        let b = assignment(&[(0, 300)], 4096);
+        let mbs = materialize_assignment(&mut corpus, &shapes, &b);
+        assert_eq!(mbs[0].shape, (2, 128));
+        assert!(mbs[0].tokens[..128].iter().all(|&t| t != 0));
+    }
+
+    #[test]
+    fn empty_loads_are_skipped() {
+        let mut corpus = SyntheticCorpus::new(512, 2, 3);
+        let shapes = [(2u64, 16u64)];
+        let a = ReplicaAssignment {
+            replica: 0,
+            group: 0,
+            config: ParallelConfig::new(1, 1),
+            loads: vec![BucketLoad { count: 0, padded_len: 16 }],
+            sequences: vec![Vec::new()],
+        };
+        assert!(materialize_assignment(&mut corpus, &shapes, &a).is_empty());
+    }
+}

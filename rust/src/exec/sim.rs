@@ -1,0 +1,81 @@
+//! Simulated backend: executing a replica = advancing the cost-model clock.
+
+use super::{virtual_clock, ExecutionPlan, ReplicaExecutor, StepExecution};
+use crate::costmodel::CostModel;
+use anyhow::Result;
+
+/// Cost-model-clock executor — the engine behind every simulated bench.
+///
+/// "Executing" a [`super::ReplicaAssignment`] evaluates the cost model's
+/// `replica_time` over the replica's dispatched loads, through the same
+/// [`crate::costmodel::CostTable`] the dispatch was solved with, so the
+/// resulting step time is bit-identical to the solve's
+/// `predicted_step_time`. This replaces the arithmetic that used to live
+/// inline in `Scheduler::step`; the scheduler is now a thin loop over this
+/// executor, and real runs ([`super::PjrtExecutor`]) account their virtual
+/// clock with the identical code path.
+pub struct SimExecutor<'a> {
+    cost: &'a CostModel,
+}
+
+impl<'a> SimExecutor<'a> {
+    pub fn new(cost: &'a CostModel) -> Self {
+        Self { cost }
+    }
+}
+
+impl ReplicaExecutor for SimExecutor<'_> {
+    fn backend(&self) -> &'static str {
+        "sim"
+    }
+
+    fn execute_step(&mut self, plan: &ExecutionPlan) -> Result<StepExecution> {
+        let (replica_seconds, step_time) = virtual_clock(self.cost, plan);
+        Ok(StepExecution { replica_seconds, step_time, wall_seconds: 0.0, train: None })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ClusterSpec;
+    use crate::config::{ModelDesc, TaskSet};
+    use crate::coordinator::bucketing::{bucketize, BucketingOptions};
+    use crate::coordinator::dispatcher::DispatchPolicy;
+    use crate::coordinator::planner::{Planner, PlannerOptions};
+    use crate::data::MultiTaskSampler;
+
+    #[test]
+    fn sim_step_time_matches_dispatch_prediction_bitwise() {
+        let cluster = ClusterSpec::a100_40g(16);
+        let cost = CostModel::calibrated(&ModelDesc::llama2_7b(), &cluster);
+        let tasks = TaskSet::paper_7b_subset();
+        let plan = Planner::new(&cost, &cluster)
+            .plan(&tasks, PlannerOptions::default())
+            .unwrap();
+        let mut sampler = MultiTaskSampler::new(&tasks, 11);
+        let mut exec = SimExecutor::new(&cost);
+        for policy in [DispatchPolicy::Balanced, DispatchPolicy::LengthBased] {
+            for _ in 0..6 {
+                let batch = sampler.next_batch();
+                let buckets = bucketize(&batch.lengths(), &BucketingOptions::default());
+                let ep =
+                    ExecutionPlan::build(&cost, &plan, None, batch, buckets, policy)
+                        .unwrap();
+                let out = exec.execute_step(&ep).unwrap();
+                assert_eq!(
+                    out.step_time.to_bits(),
+                    ep.dispatch.predicted_step_time.to_bits(),
+                    "executor re-derived a different clock than the solve"
+                );
+                assert_eq!(out.replica_seconds.len(), ep.dispatch.replica_times.len());
+                for (a, b) in out.replica_seconds.iter().zip(&ep.dispatch.replica_times)
+                {
+                    assert_eq!(a.0, b.0);
+                    assert_eq!(a.1.to_bits(), b.1.to_bits());
+                }
+                assert!(out.train.is_none());
+            }
+        }
+    }
+}

@@ -12,8 +12,12 @@
 //!
 //! * **L3 (this crate)** — the coordinator: deployment planner (paper Eq. 2),
 //!   per-step dispatcher (Eq. 3), dynamic bucketing DP (Eq. 4), profiled cost
-//!   model (Appendix D), cluster simulator, tenant manager, and the PJRT
-//!   runtime that executes AOT-compiled train steps.
+//!   model (Appendix D), cluster simulator, tenant manager, the PJRT
+//!   runtime that executes AOT-compiled train steps, and the
+//!   backend-agnostic execution layer ([`exec`]) that runs each step's
+//!   dispatched replica workloads on either the cost-model clock
+//!   (simulation) or the PJRT engine (real training) — both through the
+//!   same dispatch pipeline.
 //! * **L2** — `python/compile/model.py`: a transformer with fused multi-task
 //!   LoRA, lowered once to HLO text by `make artifacts`.
 //! * **L1** — `python/compile/kernels/multi_lora.py`: the fused multi-adapter
@@ -42,10 +46,11 @@
 
 pub mod cluster;
 pub mod config;
-pub mod experiments;
 pub mod coordinator;
 pub mod costmodel;
 pub mod data;
+pub mod exec;
+pub mod experiments;
 pub mod metrics;
 pub mod runtime;
 pub mod solver;
@@ -64,5 +69,8 @@ pub mod prelude {
     pub use crate::coordinator::tasks::TaskManager;
     pub use crate::costmodel::{CostModel, CostTables};
     pub use crate::data::{DatasetProfile, LengthDistribution, MultiTaskSampler};
+    pub use crate::exec::{
+        ExecutionPlan, PjrtExecutor, ReplicaExecutor, SimExecutor, StepExecution,
+    };
     pub use crate::metrics::JointFtReport;
 }

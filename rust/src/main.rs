@@ -25,9 +25,13 @@ USAGE:
                  [--tasks all|7b-subset|scalability]
                  [--no-config-proposal] [--no-lower-bound]
   lobra simulate [--model ...] [--gpus N] [--cluster ...] [--tasks ...]
-                 [--steps N] [--task-fused]
+                 [--steps N] [--seed N] [--task-fused]
   lobra train    [--artifacts DIR] [--steps N] [--lr F] [--seed N]
                  [--log-every K]
+                 [--model 7b|32b|70b|tiny] [--gpus N] [--cluster a100|a800]
+                 [--tasks all|7b-subset|scalability]
+                 (with --model: plan a virtual cluster and report the real
+                  run's GPU-seconds under its MINMAX dispatch clock)
   lobra info     [--model ...] [--gpus N] [--cluster ...]
 ";
 
@@ -149,8 +153,9 @@ fn main() -> Result<()> {
             }
             .ok_or_else(|| anyhow!("no feasible plan"))?;
             println!("plan: {}", plan.notation());
-            let mut sched =
-                Scheduler::new(&cost, &plan, &tasks, SchedulerOptions::default());
+            let mut opts = SchedulerOptions::default();
+            opts.seed = args.get_parse("seed", opts.seed)?;
+            let mut sched = Scheduler::new(&cost, &plan, &tasks, opts);
             let report = sched.run_steps(steps);
             println!("{}", report.summary());
         }
@@ -160,9 +165,31 @@ fn main() -> Result<()> {
             cfg.adam.lr = args.get_parse("lr", 2e-3)?;
             cfg.seed = args.get_parse("seed", 0u64)?;
             let steps = args.get_parse("steps", 50usize)?;
-            let log_every = args.get_parse("log-every", 10usize)?;
+            // 0 would panic in the `% log_every` below — treat it as "every step"
+            let log_every = args.get_parse("log-every", 10usize)?.max(1);
             let artifacts = args.get("artifacts", "artifacts");
             let mut trainer = Trainer::new(&artifacts, cfg)?;
+            // --model attaches a *planned* virtual cluster: the real run's
+            // microbatches are dispatched by the MINMAX solve over the
+            // planned heterogeneous replicas, and GPU-seconds are reported
+            // under that clock (the paper's accounting).
+            if args.has("model") {
+                let model = model_for(&args)?;
+                let gpus = args.get_parse("gpus", 16u32)?;
+                let cluster = cluster_for(&args.get("cluster", "a100"), gpus);
+                let tasks = tasks_for(&args.get("tasks", "7b-subset"));
+                let cost = CostModel::calibrated(&model, &cluster);
+                let plan = Planner::new(&cost, &cluster)
+                    .plan(&tasks, PlannerOptions::default())
+                    .ok_or_else(|| anyhow!("no feasible plan for the virtual cluster"))?;
+                println!(
+                    "virtual cluster: model={} cluster={} plan=[{}]",
+                    model.name,
+                    cluster.name,
+                    plan.notation()
+                );
+                trainer = trainer.with_virtual_cluster(cost, plan);
+            }
             println!(
                 "engine up: platform={} shapes={:?} lora_params={}",
                 trainer.engine().platform(),
@@ -172,13 +199,28 @@ fn main() -> Result<()> {
             trainer.run(steps, |log| {
                 if log.step as usize % log_every == 0 || log.step == 1 {
                     println!(
-                        "step {:>4}  loss {:.4}  mb {}  wall {:.2}s",
-                        log.step, log.loss, log.microbatches, log.wall_seconds
+                        "step {:>4}  loss {:.4}  mb {}  wall {:.2}s  virtual {:.3}s ({:.2} GPU·s)",
+                        log.step,
+                        log.loss,
+                        log.microbatches,
+                        log.wall_seconds,
+                        log.virtual_seconds,
+                        log.virtual_gpu_seconds
                     );
                 }
             })?;
-            let last = trainer.logs().last().unwrap();
-            println!("final loss: {:.4}", last.loss);
+            if let Some(last) = trainer.logs().last() {
+                let virt_gpu: f64 =
+                    trainer.logs().iter().map(|l| l.virtual_gpu_seconds).sum();
+                println!("final loss: {:.4}", last.loss);
+                println!(
+                    "virtual cluster [{}]: {:.2} GPU·s over {} steps ({:.2}/step, MINMAX dispatch)",
+                    trainer.virtual_plan().notation(),
+                    virt_gpu,
+                    trainer.logs().len(),
+                    virt_gpu / trainer.logs().len() as f64
+                );
+            }
         }
         "info" => {
             let args = Args::parse(rest, &[])?;

@@ -1,0 +1,198 @@
+//! Complete training-state checkpoints (adapters + optimizer).
+//!
+//! The seed trainer persisted only the LoRA vector, so a resumed run
+//! silently reset Adam's moments and step count — the bias-correction
+//! schedule restarted and the first post-resume updates were wrong. A
+//! checkpoint now carries everything `Trainer::step` depends on:
+//!
+//! ```text
+//! magic "LOBRACK2" | n_params u64 LE | step u64 LE
+//!   | lora [f32; n] | m [f32; n] | v [f32; n]      (all little-endian)
+//! ```
+//!
+//! Legacy raw-f32 checkpoints (adapters only) still load — the optimizer
+//! state comes back zeroed, exactly the old behavior, but now explicit in
+//! the return value instead of silent.
+
+use anyhow::{anyhow, Result};
+use std::io::{Read, Write};
+use std::path::Path;
+
+/// File magic; bump the trailing digit on layout changes.
+pub const CHECKPOINT_MAGIC: &[u8; 8] = b"LOBRACK2";
+
+/// Everything a training run needs to resume exactly where it stopped.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrainCheckpoint {
+    /// Flat LoRA adapter vector.
+    pub lora: Vec<f32>,
+    /// Adam first moments (same length as `lora`).
+    pub m: Vec<f32>,
+    /// Adam second moments (same length as `lora`).
+    pub v: Vec<f32>,
+    /// Optimizer step count (drives bias correction).
+    pub step: u64,
+}
+
+fn push_f32s(out: &mut Vec<u8>, xs: &[f32]) {
+    for x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+fn read_f32s(bytes: &[u8]) -> Vec<f32> {
+    bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect()
+}
+
+impl TrainCheckpoint {
+    /// A fresh-state checkpoint (zero moments, step 0) around adapters.
+    pub fn from_lora(lora: Vec<f32>) -> Self {
+        let n = lora.len();
+        Self { lora, m: vec![0.0; n], v: vec![0.0; n], step: 0 }
+    }
+
+    /// Serialize to `path`.
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let n = self.lora.len();
+        if self.m.len() != n || self.v.len() != n {
+            return Err(anyhow!(
+                "inconsistent checkpoint: lora {} m {} v {}",
+                n,
+                self.m.len(),
+                self.v.len()
+            ));
+        }
+        let mut bytes = Vec::with_capacity(24 + 12 * n);
+        bytes.extend_from_slice(CHECKPOINT_MAGIC);
+        bytes.extend_from_slice(&(n as u64).to_le_bytes());
+        bytes.extend_from_slice(&self.step.to_le_bytes());
+        push_f32s(&mut bytes, &self.lora);
+        push_f32s(&mut bytes, &self.m);
+        push_f32s(&mut bytes, &self.v);
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(&bytes)?;
+        Ok(())
+    }
+
+    /// Load from `path`; `expected_params` guards against artifact
+    /// mismatch. Returns `(checkpoint, legacy)` where `legacy` is true for
+    /// pre-optimizer-state files (adapters restored, moments zeroed).
+    pub fn load(path: impl AsRef<Path>, expected_params: usize) -> Result<(Self, bool)> {
+        let mut f = std::fs::File::open(path.as_ref())?;
+        let mut bytes = Vec::new();
+        f.read_to_end(&mut bytes)?;
+        if bytes.len() >= 24 && &bytes[..8] == CHECKPOINT_MAGIC {
+            let n = u64::from_le_bytes(bytes[8..16].try_into().unwrap()) as usize;
+            let step = u64::from_le_bytes(bytes[16..24].try_into().unwrap());
+            if n != expected_params {
+                return Err(anyhow!(
+                    "checkpoint {:?}: {} params, expected {}",
+                    path.as_ref(),
+                    n,
+                    expected_params
+                ));
+            }
+            let body = &bytes[24..];
+            if body.len() != 12 * n {
+                return Err(anyhow!(
+                    "checkpoint {:?}: truncated body ({} bytes, expected {})",
+                    path.as_ref(),
+                    body.len(),
+                    12 * n
+                ));
+            }
+            Ok((
+                Self {
+                    lora: read_f32s(&body[..4 * n]),
+                    m: read_f32s(&body[4 * n..8 * n]),
+                    v: read_f32s(&body[8 * n..12 * n]),
+                    step,
+                },
+                false,
+            ))
+        } else if bytes.len() == 4 * expected_params {
+            // legacy adapters-only checkpoint
+            Ok((Self::from_lora(read_f32s(&bytes)), true))
+        } else {
+            Err(anyhow!(
+                "checkpoint {:?}: {} bytes is neither v2 nor legacy ({} expected)",
+                path.as_ref(),
+                bytes.len(),
+                4 * expected_params
+            ))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("lobra_ckpt_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn roundtrip_preserves_optimizer_state() {
+        let ck = TrainCheckpoint {
+            lora: vec![1.0, -2.5, 3.25],
+            m: vec![0.1, 0.2, -0.3],
+            v: vec![0.01, 0.02, 0.03],
+            step: 41,
+        };
+        let p = tmp("roundtrip.ckpt");
+        ck.save(&p).unwrap();
+        let (back, legacy) = TrainCheckpoint::load(&p, 3).unwrap();
+        assert!(!legacy);
+        assert_eq!(back, ck);
+    }
+
+    #[test]
+    fn legacy_adapters_only_loads_with_zero_moments() {
+        let p = tmp("legacy.ckpt");
+        let lora = [4.0f32, 5.0];
+        let bytes: Vec<u8> = lora.iter().flat_map(|x| x.to_le_bytes()).collect();
+        std::fs::write(&p, bytes).unwrap();
+        let (ck, legacy) = TrainCheckpoint::load(&p, 2).unwrap();
+        assert!(legacy);
+        assert_eq!(ck.lora, vec![4.0, 5.0]);
+        assert_eq!(ck.m, vec![0.0, 0.0]);
+        assert_eq!(ck.step, 0);
+    }
+
+    #[test]
+    fn param_count_mismatch_rejected() {
+        let ck = TrainCheckpoint::from_lora(vec![1.0, 2.0]);
+        let p = tmp("mismatch.ckpt");
+        ck.save(&p).unwrap();
+        assert!(TrainCheckpoint::load(&p, 3).is_err());
+    }
+
+    #[test]
+    fn truncated_file_rejected() {
+        let p = tmp("truncated.ckpt");
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(CHECKPOINT_MAGIC);
+        bytes.extend_from_slice(&2u64.to_le_bytes());
+        bytes.extend_from_slice(&7u64.to_le_bytes());
+        bytes.extend_from_slice(&[0u8; 8]); // body too short for n=2
+        std::fs::write(&p, &bytes).unwrap();
+        assert!(TrainCheckpoint::load(&p, 2).is_err());
+    }
+
+    #[test]
+    fn inconsistent_state_rejected_on_save() {
+        let ck = TrainCheckpoint {
+            lora: vec![1.0, 2.0],
+            m: vec![0.0],
+            v: vec![0.0, 0.0],
+            step: 0,
+        };
+        assert!(ck.save(tmp("bad.ckpt")).is_err());
+    }
+}

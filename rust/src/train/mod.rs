@@ -1,19 +1,33 @@
 //! Real end-to-end training driver: PJRT-executed joint LoRA fine-tuning.
 //!
-//! This is where all three layers meet on a real workload: the engine runs
-//! the AOT train-step artifacts (L2 model + L1 Pallas kernel), gradients are
-//! accumulated across microbatches in Rust, Adam updates the adapters, and
-//! the cost model supplies the virtual-cluster clock so the run reports the
-//! same GPU-seconds accounting as the simulation benches. Used by
-//! `examples/e2e_train.rs`.
+//! This is where all three layers meet on a real workload, and — since the
+//! exec-layer refactor — through the *same* per-step pipeline the paper
+//! evaluates: sequences are drawn with `DatasetProfile`-shaped lengths,
+//! bucketized to the compiled artifact shapes, dispatched over the virtual
+//! cluster's replicas by the MINMAX solve
+//! ([`crate::coordinator::dispatcher`]), and executed by a
+//! [`crate::exec::PjrtExecutor`] (replicas concurrent via
+//! [`crate::util::par`], gradients reduced deterministically in fixed
+//! replica order). The virtual GPU-seconds each step reports therefore
+//! come from the dispatch algorithm itself, not from a round-robin
+//! approximation of it. Adam updates the adapters in Rust; checkpoints
+//! persist adapters *and* optimizer state ([`TrainCheckpoint`]). Used by
+//! `examples/e2e_train.rs` and `lobra train`.
 
 mod adam;
+mod checkpoint;
 
 pub use adam::{Adam, AdamConfig};
+pub use checkpoint::{TrainCheckpoint, CHECKPOINT_MAGIC};
 
+use crate::cluster::ClusterSpec;
+use crate::config::{ModelDesc, ParallelConfig};
+use crate::coordinator::bucketing::buckets_from_boundaries;
+use crate::coordinator::dispatcher::DispatchPolicy;
 use crate::coordinator::planner::DeploymentPlan;
-use crate::costmodel::{BucketLoad, CostModel};
-use crate::data::SyntheticCorpus;
+use crate::costmodel::CostModel;
+use crate::data::{DatasetProfile, FusedBatch, LengthDistribution, Sequence, SyntheticCorpus};
+use crate::exec::{ExecutionPlan, PjrtExecutor, ReplicaExecutor};
 use crate::runtime::{Engine, ParamVector};
 use crate::util::Rng;
 use anyhow::{anyhow, Result};
@@ -30,8 +44,13 @@ pub struct TrainLog {
     pub microbatches: usize,
     /// Real wall-clock of the step (CPU execution).
     pub wall_seconds: f64,
-    /// Virtual-cluster step time from the cost model (simulated clock).
+    /// Virtual-cluster step time: max dispatched replica time + LoRA sync,
+    /// from the MINMAX dispatch solve.
     pub virtual_seconds: f64,
+    /// Virtual GPU·seconds of the step (`gpus_used × virtual_seconds`) —
+    /// the paper's headline accounting, now produced by the same dispatch
+    /// path the simulated benches run.
+    pub virtual_gpu_seconds: f64,
 }
 
 /// Trainer configuration.
@@ -50,21 +69,33 @@ impl Default for TrainerConfig {
 }
 
 /// Joint multi-task LoRA trainer over the PJRT engine.
+///
+/// Holds the model state (adapters + Adam) and drives the dispatch→execute
+/// pipeline each step; execution itself lives in the [`PjrtExecutor`].
 pub struct Trainer {
-    engine: Engine,
-    corpus: SyntheticCorpus,
+    exec: PjrtExecutor,
     lora: ParamVector,
     adam: Adam,
     cfg: TrainerConfig,
     rng: Rng,
     n_tasks: usize,
     logs: Vec<TrainLog>,
-    /// Optional virtual cluster for GPU-seconds accounting.
-    virtual_cluster: Option<(CostModel, DeploymentPlan)>,
+    /// Virtual deployment the step workload is dispatched over.
+    vplan: DeploymentPlan,
+    /// Table-4 profiles driving each task's sequence-length draws.
+    profiles: Vec<&'static DatasetProfile>,
+    lengths: Vec<LengthDistribution>,
+    /// Bucket boundaries = the compiled artifact sequence lengths.
+    boundaries: Vec<u32>,
 }
 
 impl Trainer {
     /// Build from an artifacts directory. Initializes params per manifest.
+    ///
+    /// The default virtual cluster is `local_cpu(4)` with four `<1,1>`
+    /// replicas of the tiny model — enough for the dispatch pipeline to be
+    /// exercised end to end; attach a planned deployment with
+    /// [`Self::with_virtual_cluster`] for paper-scale accounting.
     pub fn new(artifacts_dir: &str, cfg: TrainerConfig) -> Result<Self> {
         let mut engine = Engine::load(artifacts_dir)?;
         let (base, lora) = engine.init_params(cfg.seed);
@@ -72,29 +103,52 @@ impl Trainer {
         let m = engine.manifest();
         let n_tasks = m.model.n_tasks as usize;
         let vocab = m.model.vocab as u32;
+        let mut boundaries: Vec<u32> =
+            engine.shapes().iter().map(|&(_, s)| s as u32).collect();
+        boundaries.dedup();
+        if boundaries.is_empty() {
+            return Err(anyhow!("no train artifact shapes"));
+        }
         let adam = Adam::new(lora.len(), cfg.adam);
+        let corpus = SyntheticCorpus::new(vocab, n_tasks, cfg.seed ^ 0xC0FFEE);
+
+        // each FT task draws lengths shaped like one of the paper's
+        // Table 4 datasets, rescaled into the artifact window
+        let profiles: Vec<&'static DatasetProfile> = (0..n_tasks)
+            .map(|t| &DatasetProfile::all()[t % DatasetProfile::all().len()])
+            .collect();
+        let lengths = profiles.iter().map(|p| p.distribution()).collect();
+
+        let cluster = ClusterSpec::local_cpu(4);
+        let cost = CostModel::calibrated(&ModelDesc::tiny(), &cluster);
+        let vplan =
+            DeploymentPlan::homogeneous(ParallelConfig::new(1, 1), 4, n_tasks as u32);
         Ok(Self {
-            engine,
-            corpus: SyntheticCorpus::new(vocab, n_tasks, cfg.seed ^ 0xC0FFEE),
+            exec: PjrtExecutor::new(engine, cost, corpus),
             lora,
             adam,
             rng: Rng::new(cfg.seed ^ 0xDA7A),
             cfg,
             n_tasks,
             logs: Vec::new(),
-            virtual_cluster: None,
+            vplan,
+            profiles,
+            lengths,
+            boundaries,
         })
     }
 
-    /// Attach a virtual cluster (cost model + plan) for simulated-clock
-    /// GPU-seconds reporting alongside the real run.
+    /// Attach a virtual cluster (cost model + deployment plan): subsequent
+    /// steps dispatch over `plan`'s replicas and report GPU-seconds under
+    /// `cost`'s clock.
     pub fn with_virtual_cluster(mut self, cost: CostModel, plan: DeploymentPlan) -> Self {
-        self.virtual_cluster = Some((cost, plan));
+        self.exec.set_cost(cost);
+        self.vplan = plan;
         self
     }
 
     pub fn engine(&self) -> &Engine {
-        &self.engine
+        self.exec.engine()
     }
 
     pub fn lora(&self) -> &ParamVector {
@@ -109,112 +163,82 @@ impl Trainer {
         self.n_tasks
     }
 
-    /// Draw this step's fused workload: per task, `per_task_batch` sequences
-    /// with task-dependent lengths, then pack into the artifact shapes.
-    ///
-    /// Packing mirrors the coordinator: sequences are padded up to the
-    /// smallest artifact seq that fits and grouped into (batch, seq)
-    /// microbatches, each sorted by task id (the L1 kernel contract).
-    fn build_microbatches(&mut self) -> Vec<((u64, u64), Vec<i32>, Vec<i32>)> {
-        let shapes = self.engine.shapes();
-        // per shape: list of (task) pending sequences
-        let mut pending: Vec<Vec<usize>> = vec![Vec::new(); shapes.len()];
-        for t in 0..self.n_tasks {
-            for _ in 0..self.cfg.per_task_batch {
-                // target lengths jitter around the task's corpus mean
-                let base = 32 + 32 * (t % 4) as u64;
-                let len = (base as f64 * (0.5 + self.rng.f64() * 1.5)) as u64;
-                let si = shapes
-                    .iter()
-                    .position(|&(_, s)| s >= len)
-                    .unwrap_or(shapes.len() - 1);
-                pending[si].push(t);
-            }
-        }
-        let mut out = Vec::new();
-        for (si, tasks) in pending.into_iter().enumerate() {
-            let (b, s) = shapes[si];
-            let mut tasks = tasks;
-            tasks.sort_unstable();
-            for chunk in tasks.chunks(b as usize) {
-                // pad the microbatch with repeats of the last task to fill b
-                let mut padded: Vec<usize> = chunk.to_vec();
-                while padded.len() < b as usize {
-                    padded.push(*padded.last().unwrap());
-                }
-                let (toks, segs) = self.corpus.fused_microbatch(&padded, s as usize);
-                out.push(((b, s), toks, segs));
-            }
-        }
-        out
+    /// The virtual deployment steps are dispatched over.
+    pub fn virtual_plan(&self) -> &DeploymentPlan {
+        &self.vplan
     }
 
-    /// Run one training step (all microbatches + one Adam update).
+    /// Draw this step's fused batch: per task, `per_task_batch` sequences
+    /// with lengths sampled from the task's Table-4 profile, rescaled from
+    /// the profile's native range into the artifact window. This preserves
+    /// the per-task skew the dispatcher exists to balance (the seed
+    /// trainer used a hard-coded `32 + 32·(t mod 4)` jitter instead).
+    fn draw_batch(&mut self) -> FusedBatch {
+        let max_seq = *self.boundaries.last().unwrap();
+        let min_len = 8.min(max_seq);
+        let mut sequences = Vec::with_capacity(self.n_tasks * self.cfg.per_task_batch);
+        for t in 0..self.n_tasks {
+            let scale = max_seq as f64 / self.profiles[t].max_len as f64;
+            for _ in 0..self.cfg.per_task_batch {
+                let raw = self.lengths[t].sample(&mut self.rng);
+                let len =
+                    ((raw as f64 * scale).round() as u32).clamp(min_len, max_seq);
+                sequences.push(Sequence { task: t as u32, len });
+            }
+        }
+        FusedBatch { sequences }
+    }
+
+    /// Run one training step: dispatch the fused batch over the virtual
+    /// replicas (MINMAX solve), execute the dispatched loads on the PJRT
+    /// engine, reduce gradients deterministically, and apply one Adam
+    /// update.
     pub fn step(&mut self) -> Result<TrainLog> {
         let t0 = std::time::Instant::now();
-        let microbatches = self.build_microbatches();
-        if microbatches.is_empty() {
-            return Err(anyhow!("no microbatches built"));
-        }
-        let mut grad_acc = vec![0f32; self.lora.len()];
-        let mut loss_sum = 0f64;
-        let mut tok_sum = 0f64;
-        let mut task_loss = vec![0f64; self.n_tasks];
-        let mut task_toks = vec![0f64; self.n_tasks];
-        let n_mb = microbatches.len();
-        let mut virtual_loads: Vec<(u64, u64)> = Vec::new();
-        for (shape, toks, segs) in microbatches {
-            let out = self.engine.train_step(shape, &self.lora, &toks, &segs)?;
-            let w = out.tokens as f64;
-            loss_sum += out.loss as f64 * w;
-            tok_sum += w;
-            for (g, gi) in grad_acc.iter_mut().zip(&out.grad) {
-                *g += gi * out.tokens;
-            }
-            for t in 0..self.n_tasks {
-                task_loss[t] += out.task_loss[t] as f64;
-                task_toks[t] += out.task_tokens[t] as f64;
-            }
-            virtual_loads.push(shape);
-        }
-        if tok_sum > 0.0 {
-            for g in &mut grad_acc {
-                *g /= tok_sum as f32;
-            }
-        }
-        self.adam.update(&mut self.lora.data, &grad_acc);
+        let batch = self.draw_batch();
+        let buckets = buckets_from_boundaries(&batch.lengths(), &self.boundaries);
+        let eplan = ExecutionPlan::build(
+            self.exec.cost(),
+            &self.vplan,
+            None,
+            batch,
+            buckets,
+            DispatchPolicy::Balanced,
+        )
+        .ok_or_else(|| anyhow!("virtual cluster cannot serve the sampled batch"))?;
 
-        // virtual-cluster clock: pretend the microbatches were dispatched
-        // over the plan's replicas round-robin.
-        let virtual_seconds = if let Some((cost, plan)) = &self.virtual_cluster {
-            let replicas: Vec<_> = plan
-                .groups
-                .iter()
-                .flat_map(|&(c, p)| std::iter::repeat(c).take(p as usize))
-                .collect();
-            let mut per_replica: Vec<Vec<BucketLoad>> = vec![Vec::new(); replicas.len()];
-            for (i, &(b, s)) in virtual_loads.iter().enumerate() {
-                per_replica[i % replicas.len()]
-                    .push(BucketLoad { count: b, padded_len: s });
+        self.exec.set_lora(&self.lora);
+        let out = self.exec.execute_step(&eplan)?;
+        let train = out
+            .train
+            .ok_or_else(|| anyhow!("pjrt executor returned no training output"))?;
+
+        let mut grad = train.grad;
+        if train.tokens > 0.0 {
+            let inv = 1.0 / train.tokens as f32;
+            for g in &mut grad {
+                *g *= inv;
             }
-            replicas
-                .iter()
-                .zip(&per_replica)
-                .map(|(&c, loads)| cost.replica_time(c, loads))
-                .fold(0.0f64, f64::max)
-        } else {
-            0.0
-        };
+        }
+        self.adam.update(&mut self.lora.data, &grad);
 
         let log = TrainLog {
             step: self.adam.step_count(),
-            loss: if tok_sum > 0.0 { loss_sum / tok_sum } else { f64::NAN },
+            loss: if train.tokens > 0.0 {
+                train.loss_sum / train.tokens
+            } else {
+                f64::NAN
+            },
             task_loss: (0..self.n_tasks)
-                .map(|t| (task_toks[t] > 0.0).then(|| task_loss[t] / task_toks[t]))
+                .map(|t| {
+                    (train.task_tokens[t] > 0.0)
+                        .then(|| train.task_loss[t] / train.task_tokens[t])
+                })
                 .collect(),
-            microbatches: n_mb,
+            microbatches: train.microbatches,
             wall_seconds: t0.elapsed().as_secs_f64(),
-            virtual_seconds,
+            virtual_seconds: out.step_time,
+            virtual_gpu_seconds: self.vplan.gpus_used() as f64 * out.step_time,
         };
         self.logs.push(log.clone());
         Ok(log)
@@ -229,14 +253,31 @@ impl Trainer {
         Ok(())
     }
 
-    /// Save the LoRA adapters (the only trainable state).
+    /// Save the complete training state (adapters + Adam moments + step).
     pub fn save_checkpoint(&self, path: &str) -> Result<()> {
-        self.lora.save(path)
+        let (m, v) = self.adam.moments();
+        TrainCheckpoint {
+            lora: self.lora.data.clone(),
+            m: m.to_vec(),
+            v: v.to_vec(),
+            step: self.adam.step_count(),
+        }
+        .save(path)
     }
 
-    /// Restore LoRA adapters.
+    /// Restore training state. Legacy adapters-only checkpoints load with a
+    /// fresh optimizer — the old behavior, but now warned about instead of
+    /// silent.
     pub fn load_checkpoint(&mut self, path: &str) -> Result<()> {
-        self.lora = ParamVector::load(path, self.lora.len())?;
+        let (ck, legacy) = TrainCheckpoint::load(path, self.lora.len())?;
+        if legacy {
+            eprintln!(
+                "warning: {path}: legacy adapters-only checkpoint — optimizer \
+                 moments and step count reset"
+            );
+        }
+        self.lora = ParamVector { data: ck.lora };
+        self.adam = Adam::from_state(self.cfg.adam, ck.m, ck.v, ck.step);
         Ok(())
     }
 }

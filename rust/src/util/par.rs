@@ -7,8 +7,18 @@
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 
-/// Worker count for the parallel primitives (available parallelism).
+/// Worker count for the parallel primitives: `LOBRA_NUM_THREADS` if set
+/// (≥ 1), else available parallelism. Results never depend on this — the
+/// executors reduce in input order (see [`crate::exec::tree_reduce`]) and
+/// `par_map`/`par_fold` preserve it — so the env var is a tuning and
+/// determinism-*testing* knob, not a correctness one.
 pub fn max_threads() -> usize {
+    if let Some(n) = std::env::var("LOBRA_NUM_THREADS")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+    {
+        return n.max(1);
+    }
     std::thread::available_parallelism()
         .map(|p| p.get())
         .unwrap_or(4)

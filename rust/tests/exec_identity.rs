@@ -1,0 +1,118 @@
+//! Certifies the exec-layer refactor changed *where* the step arithmetic
+//! lives, not *what* it computes: `Scheduler::step` (now a thin loop over
+//! `SimExecutor`) produces bit-identical step times / GPU-seconds to the
+//! pre-refactor inline computation (re-implemented here verbatim), across
+//! seeds, dispatch policies, and bucketing modes.
+//!
+//! The `LOBRA_NUM_THREADS` determinism property lives in its own binary
+//! (`tests/par_determinism.rs`): it mutates the process environment, which
+//! must not race with this binary's concurrent env readers.
+
+use lobra::cluster::ClusterSpec;
+use lobra::config::{ModelDesc, TaskSet};
+use lobra::coordinator::bucketing::bucketize;
+use lobra::coordinator::dispatcher::{DispatchPolicy, Dispatcher};
+use lobra::coordinator::planner::{DeploymentPlan, Planner, PlannerOptions};
+use lobra::coordinator::scheduler::{Scheduler, SchedulerOptions};
+use lobra::costmodel::CostModel;
+use lobra::data::MultiTaskSampler;
+
+fn world() -> (CostModel, DeploymentPlan, TaskSet) {
+    let cluster = ClusterSpec::a100_40g(16);
+    let cost = CostModel::calibrated(&ModelDesc::llama2_7b(), &cluster);
+    let tasks = TaskSet::paper_7b_subset();
+    let plan = Planner::new(&cost, &cluster)
+        .plan(&tasks, PlannerOptions::default())
+        .unwrap();
+    (cost, plan, tasks)
+}
+
+/// The pre-refactor `Scheduler::step` arithmetic, verbatim: sample →
+/// bucketize → dispatch → report the solve's predicted step time.
+fn legacy_step_times(
+    cost: &CostModel,
+    plan: &DeploymentPlan,
+    tasks: &TaskSet,
+    opts: &SchedulerOptions,
+    steps: usize,
+) -> Vec<(u64, u64)> {
+    // a never-stepped scheduler reproduces the fixed-boundary calibration
+    // (seeded identically) and serves as the bucketing oracle
+    let oracle = Scheduler::new(cost, plan, tasks, opts.clone());
+    let mut sampler = MultiTaskSampler::new(tasks, opts.seed);
+    let mut out = Vec::with_capacity(steps);
+    for _ in 0..steps {
+        let lengths = sampler.next_batch().lengths();
+        let buckets = if opts.dynamic_bucketing {
+            bucketize(&lengths, &opts.bucketing)
+        } else {
+            oracle.buckets_for(&lengths)
+        };
+        let dispatch = Dispatcher::new(cost, plan)
+            .dispatch(&buckets, opts.policy)
+            .expect("legacy dispatch must succeed");
+        let step_time = dispatch.predicted_step_time;
+        let gpu_seconds = plan.gpus_used() as f64 * step_time;
+        out.push((step_time.to_bits(), gpu_seconds.to_bits()));
+    }
+    out
+}
+
+#[test]
+fn executor_step_times_bit_identical_to_pre_refactor() {
+    let (cost, plan, tasks) = world();
+    for seed in [1u64, 7, 42] {
+        for policy in [DispatchPolicy::Balanced, DispatchPolicy::LengthBased] {
+            for dynamic in [true, false] {
+                let mut opts = SchedulerOptions::default();
+                opts.seed = seed;
+                opts.policy = policy;
+                opts.dynamic_bucketing = dynamic;
+                let legacy = legacy_step_times(&cost, &plan, &tasks, &opts, 8);
+                let mut sched = Scheduler::new(&cost, &plan, &tasks, opts);
+                for (i, &(t_bits, g_bits)) in legacy.iter().enumerate() {
+                    let rep = sched.step().unwrap();
+                    assert_eq!(
+                        rep.step_time.to_bits(),
+                        t_bits,
+                        "seed {seed} {policy:?} dynamic={dynamic} step {i}: step_time drifted"
+                    );
+                    assert_eq!(
+                        rep.gpu_seconds.to_bits(),
+                        g_bits,
+                        "seed {seed} {policy:?} dynamic={dynamic} step {i}: gpu_seconds drifted"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn executor_reports_dispatch_solve_not_round_robin() {
+    // the dispatch the report carries is the MINMAX solve the executor ran:
+    // its replica times must re-derive the reported step time exactly
+    let (cost, plan, tasks) = world();
+    let mut sched = Scheduler::new(&cost, &plan, &tasks, SchedulerOptions::default());
+    for _ in 0..5 {
+        let rep = sched.step().unwrap();
+        let busiest = rep
+            .dispatch
+            .replica_times
+            .iter()
+            .map(|&(_, t)| t)
+            .fold(0.0f64, f64::max);
+        let sync = cost.sync_time(plan.n_replicas(), plan.n_tasks.max(1));
+        assert_eq!(rep.step_time.to_bits(), (busiest + sync).to_bits());
+        // per-replica loads recorded by the solve partition the demand
+        let assigned: u64 = rep
+            .dispatch
+            .replica_assignments
+            .iter()
+            .flatten()
+            .map(|l| l.count)
+            .sum();
+        assert_eq!(assigned, rep.dispatch.total_sequences());
+    }
+}
+

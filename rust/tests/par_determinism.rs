@@ -1,0 +1,53 @@
+//! The parallel execution path is deterministic across `LOBRA_NUM_THREADS`
+//! settings: `par_map` (input-order results) + fixed-order token-weighted
+//! `tree_reduce` yield bit-identical gradients for any worker count — the
+//! property `exec::PjrtExecutor` relies on for seed-reproducible training.
+//!
+//! This test mutates the process environment, so it lives alone in its own
+//! test binary: concurrent `set_var`/`getenv` across threads is undefined
+//! behavior on glibc, and every other test binary has concurrent env
+//! readers (`util::par::max_threads`). Keep env-touching tests here only.
+
+use lobra::exec::tree_reduce;
+use lobra::util::par::par_map;
+use lobra::util::Rng;
+
+/// Synthetic per-replica gradient partial: (weighted grad sum, tokens).
+fn fake_partial(replica: usize, n_params: usize) -> (Vec<f32>, f64) {
+    let mut rng = Rng::new(0xFEED ^ replica as u64);
+    let tokens = 10.0 + rng.f64() * 100.0;
+    let grad: Vec<f32> = (0..n_params)
+        .map(|_| (rng.f64() as f32 - 0.5) * tokens as f32)
+        .collect();
+    (grad, tokens)
+}
+
+fn reduced_gradient_with_threads(threads: &str, n_replicas: usize) -> Vec<u32> {
+    std::env::set_var("LOBRA_NUM_THREADS", threads);
+    // mimic the executor: replicas produce partials under par_map (order
+    // preserved), then a fixed-order token-weighted tree reduction
+    let ids: Vec<usize> = (0..n_replicas).collect();
+    let partials = par_map(ids, |&r| fake_partial(r, 257));
+    let (grad, tokens) = tree_reduce(partials, |(mut ga, ta), (gb, tb)| {
+        for (a, b) in ga.iter_mut().zip(&gb) {
+            *a += b;
+        }
+        (ga, ta + tb)
+    })
+    .unwrap();
+    let inv = 1.0 / tokens as f32;
+    grad.iter().map(|g| (g * inv).to_bits()).collect()
+}
+
+#[test]
+fn gradient_reduction_deterministic_across_thread_counts() {
+    let baseline = reduced_gradient_with_threads("1", 11);
+    for threads in ["2", "3", "8", "16"] {
+        let got = reduced_gradient_with_threads(threads, 11);
+        assert_eq!(
+            got, baseline,
+            "LOBRA_NUM_THREADS={threads} changed the reduced gradient"
+        );
+    }
+    std::env::remove_var("LOBRA_NUM_THREADS");
+}

@@ -113,13 +113,18 @@ fn trainer_learns_and_checkpoints() {
     let last = trainer.logs().last().unwrap().loss;
     assert!(last < first.unwrap(), "no improvement: {:?} -> {last}", first);
 
-    // checkpoint roundtrip
+    // checkpoint roundtrip (adapters + optimizer moments + step count)
     let path = std::env::temp_dir().join("lobra_test_trainer.ckpt");
     let path = path.to_string_lossy().to_string();
     trainer.save_checkpoint(&path).unwrap();
     let norm_before = trainer.lora().norm();
+    let step_before = trainer.logs().last().unwrap().step;
     trainer.step().unwrap();
     assert_ne!(trainer.lora().norm(), norm_before);
     trainer.load_checkpoint(&path).unwrap();
     assert_eq!(trainer.lora().norm(), norm_before);
+    // the optimizer resumed too (step count was persisted, not reset):
+    // the next step continues the pre-save sequence exactly
+    let log = trainer.step().unwrap();
+    assert_eq!(log.step, step_before + 1, "optimizer step count not restored");
 }
