@@ -1,0 +1,158 @@
+//! Calibration fit quality (ours): sim-backed in-situ calibration of the
+//! cost model (ROADMAP "real profiling hooks", paper Appendix D).
+//!
+//! Runs `lobra calibrate`'s loop — dispatch steps through the
+//! `SimExecutor`, which tags every executed microbatch with an exact
+//! `(b, s, seconds)` observation — then fits `t(b,s) = β₀ + β₁·bs + β₂·bs²`
+//! per parallel configuration and reports:
+//!
+//!  * **rms_rel_error** — the fit's error against its own observations;
+//!  * **max_rel_divergence** — worst-case relative gap between the fitted
+//!    prediction and the analytic `t_microbatch` over the observed shapes.
+//!    The sim's analytic model is exactly in the fitted family, so both
+//!    numbers measure end-to-end calibration fidelity (target: ~1e-6);
+//!  * whether a deployment plan computed from the measured profile
+//!    reproduces the analytic plan.
+//!
+//! Results go to `BENCH_calibration.json` (path override:
+//! `LOBRA_BENCH_JSON`; knobs: `LOBRA_BENCH_GPUS`, `LOBRA_BENCH_STEPS`).
+//!
+//! ```bash
+//! cargo bench --bench calibration
+//! LOBRA_BENCH_GPUS=32 LOBRA_BENCH_STEPS=32 cargo bench --bench calibration
+//! ```
+
+use std::time::Instant;
+
+use lobra::cluster::ClusterSpec;
+use lobra::config::ModelDesc;
+use lobra::coordinator::planner::{Planner, PlannerOptions};
+use lobra::costmodel::{CalibrationStore, CostModel};
+use lobra::exec::profile_sim_steps;
+use lobra::prelude::TaskSet;
+use lobra::util::bench::{fmt_secs, Table};
+
+/// JSON-safe float: non-finite values become `null`.
+fn json_f64(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x:?}")
+    } else {
+        "null".to_string()
+    }
+}
+
+fn main() {
+    let gpus: u32 = std::env::var("LOBRA_BENCH_GPUS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(16);
+    let steps: usize = std::env::var("LOBRA_BENCH_STEPS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(16);
+    let json_path = std::env::var("LOBRA_BENCH_JSON")
+        .unwrap_or_else(|_| "BENCH_calibration.json".to_string());
+
+    let cluster = ClusterSpec::a100_40g(gpus);
+    let model = ModelDesc::llama2_7b();
+    let tasks = TaskSet::paper_7b_subset();
+    let cost = CostModel::calibrated(&model, &cluster);
+    let planner = Planner::new(&cost, &cluster);
+    let plan = planner
+        .plan(&tasks, PlannerOptions::default())
+        .expect("no feasible analytic plan");
+
+    println!(
+        "== Calibration: sim-backed fit of t(b,s), 7B / {gpus} GPUs, {steps} profiling steps ==\n"
+    );
+    let t0 = Instant::now();
+    let mut store = CalibrationStore::new(&cost);
+    let n_obs = profile_sim_steps(&cost, &plan, &tasks, steps, 7, &mut store);
+    let profile_s = t0.elapsed().as_secs_f64();
+    let t1 = Instant::now();
+    let n_fitted = store.refit();
+    let fit_s = t1.elapsed().as_secs_f64();
+
+    let mut t = Table::new(&["config", "obs", "shapes", "rms_rel_error", "max_rel_divergence"]);
+    let mut rows_json = String::new();
+    let mut worst_divergence = 0.0f64;
+    for (i, e) in store.entries().iter().enumerate() {
+        let mut shapes: Vec<(u64, u64)> =
+            e.observations.iter().map(|o| (o.b, o.s)).collect();
+        shapes.sort_unstable();
+        shapes.dedup();
+        let (rms, max_div) = match e.fitted {
+            Some(f) => {
+                let rms = f.rms_rel_error(&e.observations).unwrap_or(f64::NAN);
+                let mut d = 0.0f64;
+                for &(b, s) in &shapes {
+                    let analytic = cost.t_microbatch(e.config, b, s);
+                    if analytic > 0.0 {
+                        d = d.max(((f.predict(b, s) - analytic) / analytic).abs());
+                    }
+                }
+                (rms, d)
+            }
+            None => (f64::NAN, f64::NAN),
+        };
+        if max_div.is_finite() {
+            worst_divergence = worst_divergence.max(max_div);
+        }
+        t.row(&[
+            e.config.to_string(),
+            e.observations.len().to_string(),
+            shapes.len().to_string(),
+            if rms.is_finite() { format!("{rms:.3e}") } else { "n/a".to_string() },
+            if max_div.is_finite() { format!("{max_div:.3e}") } else { "n/a".to_string() },
+        ]);
+        rows_json.push_str(&format!(
+            "{}\n    {{\"tp\": {}, \"pp\": {}, \"observations\": {}, \"shapes\": {}, \
+             \"rms_rel_error\": {}, \"max_rel_divergence\": {}}}",
+            if i > 0 { "," } else { "" },
+            e.config.tp,
+            e.config.pp,
+            e.observations.len(),
+            shapes.len(),
+            json_f64(rms),
+            json_f64(max_div),
+        ));
+    }
+    t.print();
+
+    // Close the loop: plan from the measured profile and compare.
+    let profiled = CostModel::from_profile(&model, &cluster, store.profile())
+        .expect("freshly measured profile must attach to its own world");
+    let replan = Planner::new(&profiled, &cluster)
+        .plan(&tasks, PlannerOptions::default())
+        .expect("no feasible plan from the measured profile");
+    let plans_agree = replan.groups == plan.groups;
+
+    println!(
+        "\n{n_obs} observations; {n_fitted}/{} configs fitted; \
+         profiling {} + fit {}; worst divergence {worst_divergence:.3e}",
+        store.entries().len(),
+        fmt_secs(profile_s),
+        fmt_secs(fit_s),
+    );
+    println!(
+        "plan from measured profile: [{}]  analytic: [{}]  agree: {plans_agree}",
+        replan.notation(),
+        plan.notation()
+    );
+
+    let json = format!(
+        "{{\n  \"bench\": \"calibration\",\n  \"gpus\": {gpus},\n  \"steps\": {steps},\n  \
+         \"observations\": {n_obs},\n  \"configs_fitted\": {n_fitted},\n  \
+         \"configs_total\": {},\n  \"profile_generation\": {},\n  \
+         \"profiling_seconds\": {profile_s:.6},\n  \"fit_seconds\": {fit_s:.6},\n  \
+         \"worst_rel_divergence\": {},\n  \"plans_agree\": {plans_agree},\n  \
+         \"configs\": [{rows_json}\n  ]\n}}\n",
+        store.entries().len(),
+        store.generation(),
+        json_f64(worst_divergence),
+    );
+    match std::fs::write(&json_path, &json) {
+        Ok(()) => println!("\nfit quality recorded to {json_path}"),
+        Err(e) => eprintln!("\nWARNING: could not write {json_path}: {e}"),
+    }
+}

@@ -45,7 +45,7 @@ use crate::coordinator::planner::{
     expectation_buckets, robustness_batches, DeploymentPlan, LowerBoundScratch, Planner,
     PlannerOptions, PlanningStats, SearchCarry,
 };
-use crate::costmodel::{fnv1a, CostTable, CostTables};
+use crate::costmodel::{cost_fingerprint, fnv1a, CostTable, CostTables};
 use crate::solver::partition::Plan;
 
 /// Counters of how the session's replans were served.
@@ -69,6 +69,11 @@ struct SearchMemo {
     /// [`PlanningSession::extend_capped_search`], which only makes sense
     /// while the task set is unchanged).
     fingerprint: u64,
+    /// [`cost_fingerprint`] of the cost model the memo was searched under.
+    /// Recalibration (a new profile generation) changes it, and survivors
+    /// scored under the old `t(b,s)` must not seed — or extend — a search
+    /// over the new one.
+    cost_fp: u64,
     configs: Vec<ParallelConfig>,
     boundaries: Vec<u32>,
     /// Top-K survivors (plan, bound-in-memo-context) of the last search.
@@ -164,6 +169,13 @@ impl PlanningSession {
             self.memo = None;
             return None;
         }
+        // The memo only describes the cost world it was searched under;
+        // a swapped cost model (e.g. recalibration bumping the profile
+        // generation) invalidates it wholesale — the next replan is cold.
+        let cost_fp = cost_fingerprint(planner.cost());
+        if self.memo.as_ref().is_some_and(|m| m.cost_fp != cost_fp) {
+            self.memo = None;
+        }
         let opts = self.opts.clone();
 
         // 1. calibration sample → expectation buckets + robustness batches
@@ -221,7 +233,7 @@ impl PlanningSession {
                 } else {
                     self.stats.cold_starts += 1;
                 }
-                self.remember(tasks, configs, buckets.boundaries.clone(), carry);
+                self.remember(tasks, cost_fp, configs, buckets.boundaries.clone(), carry);
                 Some((plan, stats))
             }
             None => {
@@ -262,6 +274,10 @@ impl PlanningSession {
         let memo = self.memo.as_ref()?;
         if !memo.hit_cap || memo.fingerprint != task_fingerprint(tasks) {
             return None;
+        }
+        let cost_fp = cost_fingerprint(planner.cost());
+        if memo.cost_fp != cost_fp {
+            return None; // cost world changed (e.g. recalibration): checkpoint is stale
         }
         let resume = memo.resume.clone()?;
         let start = Instant::now();
@@ -326,7 +342,7 @@ impl PlanningSession {
             best_bound: best,
             seeded: ext.seeded,
         };
-        self.remember(tasks, configs, buckets.boundaries.clone(), carry);
+        self.remember(tasks, cost_fp, configs, buckets.boundaries.clone(), carry);
         Some((plan, stats))
     }
 
@@ -384,12 +400,14 @@ impl PlanningSession {
     fn remember(
         &mut self,
         tasks: &TaskSet,
+        cost_fp: u64,
         configs: Vec<ParallelConfig>,
         boundaries: Vec<u32>,
         carry: SearchCarry,
     ) {
         self.memo = Some(SearchMemo {
             fingerprint: task_fingerprint(tasks),
+            cost_fp,
             configs,
             boundaries,
             candidates: carry.candidates,
@@ -456,6 +474,36 @@ mod tests {
         let mut c = a.clone();
         c.tasks.swap(0, 1);
         assert_ne!(task_fingerprint(&a), task_fingerprint(&c), "order-sensitive");
+    }
+
+    #[test]
+    fn recalibration_invalidates_warm_start_memo() {
+        let (cost, cluster) = world();
+        let planner = Planner::new(&cost, &cluster);
+        let tasks = TaskSet::paper_7b_subset();
+        let mut session = PlanningSession::new(PlannerOptions::default());
+        session.plan(&planner, &tasks).unwrap();
+        session.plan(&planner, &tasks).unwrap();
+        assert_eq!(session.stats.warm_starts, 1);
+        // recalibrate: a measured profile changes the cost fingerprint, so
+        // survivors scored under analytic t(b,s) must not seed the search
+        let c = ParallelConfig::new(1, 1);
+        let mut store = crate::costmodel::CalibrationStore::new(&cost);
+        for &(b, s) in &[(16u64, 512u64), (4, 2048), (1, 8192), (8, 512), (2, 2048)] {
+            store.record(c, b, s, 1.5 * cost.t_microbatch(c, b, s));
+        }
+        let profiled =
+            CostModel::from_profile(&cost.model, &cluster, store.profile()).unwrap();
+        assert_ne!(cost_fingerprint(&cost), cost_fingerprint(&profiled));
+        let planner2 = Planner::new(&profiled, &cluster);
+        session.plan(&planner2, &tasks).unwrap();
+        assert_eq!(
+            session.stats.cold_starts, 2,
+            "recalibrated world must cold-start, not reuse stale survivors"
+        );
+        // the recalibrated world warm-starts against itself thereafter
+        session.plan(&planner2, &tasks).unwrap();
+        assert_eq!(session.stats.warm_starts, 2);
     }
 
     #[test]

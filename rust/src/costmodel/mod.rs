@@ -12,27 +12,39 @@
 //!   1F1B PP): the per-step running time of one replica given `d_j`
 //!   sequences in bucket `j`.
 //!
-//! Instead of profiling real A100s, the per-microbatch time `t(b, s)` is
-//! built from first principles (FLOP count over MXU rate + Megatron-style
-//! TP all-reduce volume + PP p2p), with constants calibrated so the
-//! resulting throughput table reproduces the *partial order* of the paper's
-//! Table 3 (Observation 1) — see `tests` and `rust/benches/table3_throughput.rs`.
+//! Out of the box the per-microbatch time `t(b, s)` is built from first
+//! principles (FLOP count over MXU rate + Megatron-style TP all-reduce
+//! volume + PP p2p), with constants calibrated so the resulting throughput
+//! table reproduces the *partial order* of the paper's Table 3
+//! (Observation 1) — see `tests` and `rust/benches/table3_throughput.rs`.
+//! When a measured [`CalibrationProfile`] is attached
+//! ([`CostModel::from_profile`]), configurations it covers read `t(b, s)`
+//! from the fitted coefficients instead — the paper's actual
+//! offline-profiling methodology, fed in situ by the executors (see
+//! [`calibrate`]); the memory model stays analytic either way.
 
 pub mod calibrate;
 mod replica;
 mod table;
 mod timing;
 
-pub use calibrate::{FittedCost, Observation, ProfiledCost};
+pub use calibrate::{
+    load_profile_or_analytic, CalibrationProfile, CalibrationStore, ConfigCalibration,
+    FittedCost, Observation,
+};
 pub use replica::{BucketLoad, ChunkPlan};
 pub use table::{
-    cost_fingerprint, structural_hash, CostTable, CostTableKey, CostTableLru, CostTables,
+    cost_fingerprint, structural_hash, world_fingerprint, CostTable, CostTableKey,
+    CostTableLru, CostTables,
 };
 pub(crate) use table::fnv1a;
 pub use timing::MicrobatchTime;
 
+use std::sync::Arc;
+
 use crate::cluster::{ClusterSpec, CommModel};
 use crate::config::{ModelDesc, ParallelConfig};
+use anyhow::{anyhow, Result};
 
 /// Fixed per-GPU memory overhead (runtime, fragmentation, comm buffers), GiB.
 const MEM_OVERHEAD_GIB: f64 = 4.0;
@@ -50,6 +62,11 @@ pub struct CostModel {
     pub model: ModelDesc,
     pub cluster: ClusterSpec,
     comm: CommModel,
+    /// Measured per-config `t(b,s)` overriding the analytic timing model
+    /// for the configurations it covers. Part of the cost identity: folded
+    /// into [`cost_fingerprint`] so cost tables built from different
+    /// profile generations never alias.
+    profile: Option<Arc<CalibrationProfile>>,
 }
 
 impl CostModel {
@@ -60,7 +77,47 @@ impl CostModel {
             model: model.clone(),
             cluster: cluster.clone(),
             comm: CommModel::new(cluster),
+            profile: None,
         }
+    }
+
+    /// Build a cost model that plans against *measured* microbatch times:
+    /// configurations covered by `profile` read `t(b,s)` from the fitted
+    /// coefficients, everything else (and the memory model) stays
+    /// analytic. Fails when the profile was measured on a different
+    /// `(model, cluster)` world or fitted nothing.
+    pub fn from_profile(
+        model: &ModelDesc,
+        cluster: &ClusterSpec,
+        profile: CalibrationProfile,
+    ) -> Result<Self> {
+        let want = world_fingerprint(model, cluster);
+        if profile.fingerprint() != want {
+            return Err(anyhow!(
+                "calibration profile was measured on a different (model, cluster) world \
+                 (profile {:016x}, this world {:016x})",
+                profile.fingerprint(),
+                want
+            ));
+        }
+        if profile.is_empty() {
+            return Err(anyhow!(
+                "calibration profile holds no fitted configuration — nothing to plan from"
+            ));
+        }
+        let mut cost = Self::calibrated(model, cluster);
+        cost.profile = Some(Arc::new(profile));
+        Ok(cost)
+    }
+
+    /// The attached measured profile, if any.
+    pub fn profile(&self) -> Option<&CalibrationProfile> {
+        self.profile.as_deref()
+    }
+
+    /// Whether timing comes from measured coefficients (for any config).
+    pub fn is_profiled(&self) -> bool {
+        self.profile.is_some()
     }
 
     pub fn comm(&self) -> &CommModel {
@@ -118,10 +175,17 @@ impl CostModel {
     }
 
     /// Time of one chunk through one pipeline *stage* (the `t(b,s)` of
-    /// Eq. 11/12): compute + TP collectives + PP p2p, per stage.
+    /// Eq. 11/12): compute + TP collectives + PP p2p, per stage. With a
+    /// profiled configuration the measured fit replaces the whole analytic
+    /// sum (measurements already include comm and launch overhead).
     pub fn t_microbatch(&self, cfg: ParallelConfig, b: u64, s: u64) -> f64 {
         if b == 0 {
             return 0.0;
+        }
+        if let Some(f) = self.profile.as_ref().and_then(|p| p.fitted_for(cfg)) {
+            // a noisy fit can dip below zero at tiny shapes; time is not
+            // allowed to
+            return f.predict(b, s).max(0.0);
         }
         let compute = self.flops(b, s)
             / cfg.pp as f64
@@ -331,6 +395,46 @@ mod tests {
         assert!(!cm.feasible(cfg(1, 1)));
         let cm64 = CostModel::calibrated(&ModelDesc::llama2_70b(), &ClusterSpec::a800_80g(64));
         assert!(cm64.feasible(cfg(8, 1)));
+    }
+
+    #[test]
+    fn profiled_config_overrides_analytic_timing_only() {
+        let model = ModelDesc::llama2_7b();
+        let cluster = ClusterSpec::a100_40g(16);
+        let analytic = CostModel::calibrated(&model, &cluster);
+        let c = cfg(2, 1);
+        // synthetic measured world running exactly 2× slower than analytic
+        let mut store = CalibrationStore::for_world(&model, &cluster);
+        for &(b, s) in &[(16u64, 512u64), (4, 2048), (1, 8192), (8, 512), (2, 2048)] {
+            store.record(c, b, s, 2.0 * analytic.t_microbatch(c, b, s));
+        }
+        let profiled = CostModel::from_profile(&model, &cluster, store.profile()).unwrap();
+        assert!(profiled.is_profiled());
+        let got = profiled.t_microbatch(c, 4, 2048);
+        let want = 2.0 * analytic.t_microbatch(c, 4, 2048);
+        assert!((got - want).abs() / want < 1e-3, "{got} vs {want}");
+        // unprofiled configurations and the memory model stay analytic
+        let other = cfg(8, 1);
+        assert_eq!(
+            profiled.t_microbatch(other, 4, 2048).to_bits(),
+            analytic.t_microbatch(other, 4, 2048).to_bits()
+        );
+        assert_eq!(profiled.max_chunk_tokens(c), analytic.max_chunk_tokens(c));
+        // a profile from another world never attaches
+        let other_world = CalibrationStore::for_world(&ModelDesc::llama2_70b(), &cluster);
+        assert!(CostModel::from_profile(
+            &model,
+            &cluster,
+            other_world.clone().profile()
+        )
+        .is_err());
+        // ... and an empty profile is rejected too
+        assert!(CostModel::from_profile(
+            &ModelDesc::llama2_70b(),
+            &cluster,
+            other_world.clone().profile()
+        )
+        .is_err());
     }
 
     #[test]

@@ -46,14 +46,14 @@ pub fn structural_hash(configs: &[ParallelConfig], boundaries: &[u32]) -> u64 {
     h
 }
 
-/// Fingerprint of the (model, cluster) identity a table is built from.
-/// Folded into [`CostTableKey`] so one shared LRU can serve several worlds
-/// without ever returning another model's table — table entries are pure
-/// functions of `(model, cluster, config, boundary)`, and config/boundary
-/// sets of different worlds can coincide.
-pub fn cost_fingerprint(cost: &CostModel) -> u64 {
-    let m = &cost.model;
-    let cl = &cost.cluster;
+/// Fingerprint of the *analytic* (model, cluster) world — the identity a
+/// calibration profile is measured against. Deliberately excludes any
+/// attached profile: a profile saved under this fingerprint stays loadable
+/// by the same world regardless of how many recalibrations happened since.
+pub fn world_fingerprint(
+    m: &crate::config::ModelDesc,
+    cl: &crate::cluster::ClusterSpec,
+) -> u64 {
     let mut h = 0xcbf29ce484222325u64;
     for b in m.name.as_bytes() {
         h = fnv1a(h, *b as u64);
@@ -74,6 +74,21 @@ pub fn cost_fingerprint(cost: &CostModel) -> u64 {
     h = fnv1a(h, cl.gpus_per_server as u64);
     for v in [cl.gpu_mem_gib, cl.tflops, cl.mfu, cl.intra_bw_gbs, cl.inter_bw_gbs] {
         h = fnv1a(h, v.to_bits());
+    }
+    h
+}
+
+/// Fingerprint of the full cost identity a table is built from: the
+/// analytic [`world_fingerprint`] plus, when a calibration profile is
+/// attached, the profile's generation and fitted coefficients. Folded into
+/// [`CostTableKey`] so one shared LRU can serve several worlds without ever
+/// returning another model's table — and so *recalibration changes the
+/// key*: tables built from analytic constants (or from a stale profile
+/// generation) are never served to a planner running on measured times.
+pub fn cost_fingerprint(cost: &CostModel) -> u64 {
+    let mut h = world_fingerprint(&cost.model, &cost.cluster);
+    if let Some(profile) = cost.profile() {
+        h = profile.fold_fingerprint(h);
     }
     h
 }

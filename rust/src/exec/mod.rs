@@ -30,7 +30,7 @@
 //!                     │                                      │  util::par       │
 //!                     │                                      └────────┬─────────┘
 //!                     ▼                                               ▼
-//!               StepExecution { replica_seconds, step_time, [TrainOutput] }
+//!        StepExecution { replica_seconds, step_time, observations, [TrainOutput] }
 //! ```
 //!
 //! Both backends account the *virtual-cluster clock* identically — per
@@ -53,12 +53,12 @@ pub use sim::SimExecutor;
 use std::collections::VecDeque;
 use std::sync::Arc;
 
-use crate::config::ParallelConfig;
-use crate::coordinator::bucketing::Buckets;
+use crate::config::{ParallelConfig, TaskSet};
+use crate::coordinator::bucketing::{bucketize, BucketingOptions, Buckets};
 use crate::coordinator::dispatcher::{DispatchPlan, DispatchPolicy, Dispatcher};
 use crate::coordinator::planner::DeploymentPlan;
-use crate::costmodel::{BucketLoad, CostModel, CostTable};
-use crate::data::{FusedBatch, Sequence};
+use crate::costmodel::{BucketLoad, CalibrationStore, CostModel, CostTable, Observation};
+use crate::data::{FusedBatch, MultiTaskSampler, Sequence};
 use anyhow::Result;
 
 /// One replica's workload for one step: its dispatched bucket loads plus
@@ -197,6 +197,15 @@ pub struct StepExecution {
     pub step_time: f64,
     /// Real host wall-clock spent executing (0 for the simulated backend).
     pub wall_seconds: f64,
+    /// One `(b, s, seconds)` [`Observation`] per executed microbatch,
+    /// tagged with the replica configuration it ran under — the raw feed
+    /// of [`CalibrationStore`]. PJRT reports measured wall-clocks for
+    /// single-GPU configs (the local engine realizes no tp/pp stages, so
+    /// multi-GPU replicas keep analytic constants); the sim backend, in
+    /// profiling mode ([`SimExecutor::profiling`]), reports exact
+    /// cost-model chunk times (the deterministic test double). Empty on
+    /// the plain scheduler path.
+    pub observations: Vec<(ParallelConfig, Observation)>,
     /// Real-backend training outputs (gradients, losses); `None` for sim.
     pub train: Option<TrainOutput>,
 }
@@ -253,6 +262,46 @@ pub(crate) fn virtual_clock(
     }
     let sync = cost.sync_time(plan.n_replicas, plan.n_tasks.max(1));
     (replica_seconds, busiest + sync)
+}
+
+/// Run `steps` simulated profiling steps of `plan` over `tasks` and feed
+/// every emitted microbatch observation into `store` — the sim-backed
+/// calibration loop behind `lobra calibrate`, `benches/calibration.rs` and
+/// the calibration tests. Each step samples a fused batch, bucketizes it,
+/// solves the MINMAX dispatch and "executes" it on the [`SimExecutor`]
+/// clock; steps whose batch the deployment cannot serve are skipped.
+/// Returns the number of observations recorded.
+pub fn profile_sim_steps(
+    cost: &CostModel,
+    plan: &DeploymentPlan,
+    tasks: &TaskSet,
+    steps: usize,
+    seed: u64,
+    store: &mut CalibrationStore,
+) -> usize {
+    let mut sampler = MultiTaskSampler::new(tasks, seed);
+    let mut exec = SimExecutor::profiling(cost);
+    let mut recorded = 0usize;
+    for _ in 0..steps {
+        let batch = sampler.next_batch();
+        let buckets = bucketize(&batch.lengths(), &BucketingOptions::default());
+        let Some(eplan) = ExecutionPlan::build(
+            cost,
+            plan,
+            None,
+            batch,
+            buckets,
+            DispatchPolicy::Balanced,
+        ) else {
+            continue;
+        };
+        let Ok(out) = exec.execute_step(&eplan) else {
+            continue;
+        };
+        recorded += out.observations.len();
+        store.record_all(&out.observations);
+    }
+    recorded
 }
 
 /// Deterministic binary-tree reduction in input order: pairs `(0,1)`,

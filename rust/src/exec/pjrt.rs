@@ -4,7 +4,8 @@ use super::{
     tree_reduce, virtual_clock, ExecutionPlan, ReplicaAssignment, ReplicaExecutor,
     StepExecution, TrainOutput,
 };
-use crate::costmodel::CostModel;
+use crate::config::ParallelConfig;
+use crate::costmodel::{CostModel, Observation};
 use crate::data::SyntheticCorpus;
 use crate::runtime::{Engine, ParamVector};
 use crate::util::par::par_map;
@@ -88,6 +89,9 @@ struct ReplicaPartial {
     task_loss: Vec<f64>,
     task_tokens: Vec<f64>,
     microbatches: usize,
+    /// Per-microbatch wall-clock observations, tagged with the replica's
+    /// parallel configuration (the in-situ calibration feed).
+    observations: Vec<(ParallelConfig, Observation)>,
 }
 
 impl ReplicaPartial {
@@ -99,6 +103,7 @@ impl ReplicaPartial {
             task_loss: vec![0.0; n_tasks],
             task_tokens: vec![0.0; n_tasks],
             microbatches: 0,
+            observations: Vec::new(),
         }
     }
 
@@ -115,6 +120,7 @@ impl ReplicaPartial {
             *a += b;
         }
         self.microbatches += other.microbatches;
+        self.observations.extend(other.observations);
         self
     }
 }
@@ -179,21 +185,40 @@ impl ReplicaExecutor for PjrtExecutor {
         let t0 = std::time::Instant::now();
         let shapes = self.engine.shapes();
         // materialize sequentially (deterministic corpus RNG order) ...
-        let per_replica: Vec<Vec<Microbatch>> = plan
+        let per_replica: Vec<(ParallelConfig, Vec<Microbatch>)> = plan
             .assignments
             .iter()
-            .map(|a| materialize_assignment(&mut self.corpus, &shapes, a))
+            .map(|a| (a.config, materialize_assignment(&mut self.corpus, &shapes, a)))
             .collect();
 
         let n_params = self.lora.len();
         let n_tasks = self.engine.manifest().model.n_tasks as usize;
         let engine = &self.engine;
         let lora = &self.lora;
-        // ... then execute replicas concurrently
-        let partials: Vec<Result<ReplicaPartial>> = par_map(per_replica, |mbs| {
+        // ... then execute replicas concurrently, timing each microbatch
+        // in situ: the (b, s, seconds) observations feed cost-model
+        // calibration (`costmodel::calibrate`). Only single-GPU configs
+        // are recorded: the local engine realizes no tp/pp parallelism,
+        // so a multi-GPU replica's wall-clock here is a whole-microbatch
+        // time, not the per-*stage* `t(b,s)` the cost model fits (pp
+        // division and the pipeline bubble would be double-counted) —
+        // those configs keep their analytic constants.
+        let partials: Vec<Result<ReplicaPartial>> = par_map(per_replica, |(config, mbs)| {
             let mut acc = ReplicaPartial::empty(n_params, n_tasks);
+            let observe = config.n() == 1;
             for mb in mbs {
+                let mb_t0 = std::time::Instant::now();
                 let out = engine.train_step(mb.shape, lora, &mb.tokens, &mb.seg_ids)?;
+                if observe {
+                    acc.observations.push((
+                        *config,
+                        Observation {
+                            b: mb.shape.0,
+                            s: mb.shape.1,
+                            seconds: mb_t0.elapsed().as_secs_f64(),
+                        },
+                    ));
+                }
                 let w = out.tokens as f64;
                 acc.loss_sum += out.loss as f64 * w;
                 acc.tokens += w;
@@ -223,6 +248,7 @@ impl ReplicaExecutor for PjrtExecutor {
             replica_seconds,
             step_time,
             wall_seconds: t0.elapsed().as_secs_f64(),
+            observations: total.observations,
             train: Some(TrainOutput {
                 grad: total.grad,
                 loss_sum: total.loss_sum,

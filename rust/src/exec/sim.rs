@@ -1,7 +1,7 @@
 //! Simulated backend: executing a replica = advancing the cost-model clock.
 
 use super::{virtual_clock, ExecutionPlan, ReplicaExecutor, StepExecution};
-use crate::costmodel::CostModel;
+use crate::costmodel::{CostModel, Observation};
 use anyhow::Result;
 
 /// Cost-model-clock executor — the engine behind every simulated bench.
@@ -16,11 +16,23 @@ use anyhow::Result;
 /// clock with the identical code path.
 pub struct SimExecutor<'a> {
     cost: &'a CostModel,
+    /// Emit per-chunk [`Observation`]s in [`super::StepExecution`]. Off by
+    /// default: the scheduler's step loop (and every sim bench timed
+    /// through it) drops them, so the O(chunks) emission would be pure
+    /// overhead on the path whose wall-clock the benches record.
+    record_observations: bool,
 }
 
 impl<'a> SimExecutor<'a> {
     pub fn new(cost: &'a CostModel) -> Self {
-        Self { cost }
+        Self { cost, record_observations: false }
+    }
+
+    /// A profiling-mode executor: every executed chunk is reported as an
+    /// exact analytic [`Observation`] (the calibration test double). Used
+    /// by [`super::profile_sim_steps`].
+    pub fn profiling(cost: &'a CostModel) -> Self {
+        Self { cost, record_observations: true }
     }
 }
 
@@ -31,7 +43,58 @@ impl ReplicaExecutor for SimExecutor<'_> {
 
     fn execute_step(&mut self, plan: &ExecutionPlan) -> Result<StepExecution> {
         let (replica_seconds, step_time) = virtual_clock(self.cost, plan);
-        Ok(StepExecution { replica_seconds, step_time, wall_seconds: 0.0, train: None })
+        // In profiling mode: one observation per "executed" microbatch,
+        // mirroring what the real backend reports — except the measured
+        // duration is the exact analytic chunk time, which makes this the
+        // deterministic test double for the calibration loop: a fit over
+        // these observations must reproduce the cost model it was sampled
+        // from.
+        let mut observations = Vec::new();
+        if self.record_observations {
+            for a in &plan.assignments {
+                for load in &a.loads {
+                    if load.count == 0 {
+                        continue;
+                    }
+                    let cp = self.cost.chunks_for(a.config, load.count, load.padded_len);
+                    if cp.full_chunks > 0 {
+                        let t_full =
+                            self.cost.t_microbatch(a.config, cp.per_chunk, load.padded_len);
+                        for _ in 0..cp.full_chunks {
+                            observations.push((
+                                a.config,
+                                Observation {
+                                    b: cp.per_chunk,
+                                    s: load.padded_len,
+                                    seconds: t_full,
+                                },
+                            ));
+                        }
+                    }
+                    if cp.remainder > 0 {
+                        observations.push((
+                            a.config,
+                            Observation {
+                                b: cp.remainder,
+                                s: load.padded_len,
+                                seconds: self.cost.t_microbatch(
+                                    a.config,
+                                    cp.remainder,
+                                    load.padded_len,
+                                ),
+                            },
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(StepExecution {
+            replica_seconds,
+            step_time,
+            wall_seconds: 0.0,
+            observations,
+            train: None,
+        })
     }
 }
 
@@ -77,5 +140,59 @@ mod tests {
                 assert!(out.train.is_none());
             }
         }
+    }
+
+    #[test]
+    fn sim_observations_are_exact_chunk_times() {
+        let cluster = ClusterSpec::a100_40g(16);
+        let cost = CostModel::calibrated(&ModelDesc::llama2_7b(), &cluster);
+        let tasks = TaskSet::paper_7b_subset();
+        let plan = Planner::new(&cost, &cluster)
+            .plan(&tasks, PlannerOptions::default())
+            .unwrap();
+        let mut sampler = MultiTaskSampler::new(&tasks, 3);
+        let batch = sampler.next_batch();
+        let buckets = bucketize(&batch.lengths(), &BucketingOptions::default());
+        let ep = ExecutionPlan::build(
+            &cost,
+            &plan,
+            None,
+            batch,
+            buckets,
+            DispatchPolicy::Balanced,
+        )
+        .unwrap();
+        // the default (scheduler-path) executor emits nothing ...
+        let silent = SimExecutor::new(&cost).execute_step(&ep).unwrap();
+        assert!(silent.observations.is_empty());
+        // ... the profiling executor emits one observation per chunk of
+        // every dispatched load ...
+        let out = SimExecutor::profiling(&cost).execute_step(&ep).unwrap();
+        let expected: u64 = ep
+            .assignments
+            .iter()
+            .map(|a| {
+                a.loads
+                    .iter()
+                    .filter(|l| l.count > 0)
+                    .map(|l| cost.chunks_for(a.config, l.count, l.padded_len).n_chunks())
+                    .sum::<u64>()
+            })
+            .sum();
+        assert!(expected > 0);
+        assert_eq!(out.observations.len() as u64, expected);
+        // ... bit-identical to the analytic chunk time ...
+        for (cfg, o) in &out.observations {
+            assert_eq!(
+                o.seconds.to_bits(),
+                cost.t_microbatch(*cfg, o.b, o.s).to_bits(),
+                "{cfg} b={} s={}",
+                o.b,
+                o.s
+            );
+        }
+        // ... and accounting every dispatched sequence exactly once
+        let obs_seqs: u64 = out.observations.iter().map(|(_, o)| o.b).sum();
+        assert_eq!(obs_seqs, ep.total_assigned());
     }
 }

@@ -1,19 +1,23 @@
 //! `lobra` — the LobRA leader CLI (dependency-free arg parsing).
 //!
 //! Subcommands:
-//! * `plan`     — compute the heterogeneous deployment plan (paper Eq. 2).
-//! * `simulate` — run the joint-FT scheduler on the simulated cluster and
-//!                report GPU-seconds (the paper's headline metric).
-//! * `train`    — real PJRT-executed end-to-end training on the local CPU
-//!                (requires `make artifacts`).
-//! * `info`     — show models, datasets, and feasible configurations.
+//! * `plan`      — compute the heterogeneous deployment plan (paper Eq. 2).
+//! * `simulate`  — run the joint-FT scheduler on the simulated cluster and
+//!                 report GPU-seconds (the paper's headline metric).
+//! * `calibrate` — sim-backed profiling run: execute dispatch steps, fit
+//!                 `t(b,s)` per configuration from the executor's
+//!                 microbatch observations, and write a reusable profile.
+//! * `train`     — real PJRT-executed end-to-end training on the local CPU
+//!                 (requires `make artifacts`).
+//! * `info`      — show models, datasets, and feasible configurations.
 
 use anyhow::{anyhow, bail, Result};
 use lobra::cluster::ClusterSpec;
 use lobra::config::ModelDesc;
 use lobra::coordinator::planner::{Planner, PlannerOptions};
 use lobra::coordinator::scheduler::{Scheduler, SchedulerOptions};
-use lobra::costmodel::CostModel;
+use lobra::costmodel::{load_profile_or_analytic, CalibrationStore, CostModel};
+use lobra::exec::profile_sim_steps;
 use lobra::prelude::TaskSet;
 use lobra::train::{Trainer, TrainerConfig};
 
@@ -21,18 +25,29 @@ const USAGE: &str = "\
 lobra — multi-tenant LoRA fine-tuning coordinator (LobRA, PVLDB'25)
 
 USAGE:
-  lobra plan     [--model 7b|32b|70b] [--gpus N] [--cluster a100|a800]
-                 [--tasks all|7b-subset|scalability]
-                 [--no-config-proposal] [--no-lower-bound]
-  lobra simulate [--model ...] [--gpus N] [--cluster ...] [--tasks ...]
-                 [--steps N] [--seed N] [--task-fused]
-  lobra train    [--artifacts DIR] [--steps N] [--lr F] [--seed N]
-                 [--log-every K]
-                 [--model 7b|32b|70b|tiny] [--gpus N] [--cluster a100|a800]
-                 [--tasks all|7b-subset|scalability]
-                 (with --model: plan a virtual cluster and report the real
-                  run's GPU-seconds under its MINMAX dispatch clock)
-  lobra info     [--model ...] [--gpus N] [--cluster ...]
+  lobra plan      [--model 7b|32b|70b|tiny] [--gpus N]
+                  [--cluster a100|a800|local]
+                  [--tasks all|7b-subset|scalability] [--profile PATH]
+                  [--no-config-proposal] [--no-lower-bound]
+  lobra simulate  [--model ...] [--gpus N] [--cluster ...] [--tasks ...]
+                  [--steps N] [--seed N] [--task-fused] [--profile PATH]
+  lobra calibrate [--model ...] [--gpus N] [--cluster ...] [--tasks ...]
+                  [--steps N] [--seed N] [--out PATH]
+                  (run profiling steps through the sim executor, fit
+                   t(b,s) per config, write the calibration profile)
+  lobra train     [--artifacts DIR] [--steps N] [--lr F] [--seed N]
+                  [--log-every K]
+                  [--model 7b|32b|70b|tiny] [--gpus N]
+                  [--cluster a100|a800|local]
+                  [--tasks all|7b-subset|scalability]
+                  [--profile PATH] [--save-profile PATH]
+                  (with --model/--profile: plan a virtual cluster — from
+                   measured times when --profile is given — and report the
+                   real run's GPU-seconds under its MINMAX dispatch clock;
+                   --save-profile persists the run's in-situ wall-clocks,
+                   keyed to the local engine world: reload them with
+                   --profile ... --model <engine model> --cluster local)
+  lobra info      [--model ...] [--gpus N] [--cluster ...]
 ";
 
 /// Tiny flag parser: `--key value` and boolean `--key` switches.
@@ -82,6 +97,9 @@ impl Args {
 fn cluster_for(name: &str, gpus: u32) -> ClusterSpec {
     match name {
         "a800" => ClusterSpec::a800_80g(gpus),
+        // the local CPU world `lobra train` measures in situ — needed to
+        // reload a --save-profile'd profile (it is keyed to this world)
+        "local" => ClusterSpec::local_cpu(gpus),
         _ => ClusterSpec::a100_40g(gpus),
     }
 }
@@ -99,6 +117,26 @@ fn model_for(args: &Args) -> Result<ModelDesc> {
     ModelDesc::by_name(&name).ok_or_else(|| anyhow!("unknown model: {name}"))
 }
 
+/// Cost model for the `(model, cluster)` world: measured (from
+/// `--profile PATH`, falling back to analytic with a warning when the file
+/// is corrupt or from another world) or analytic.
+fn cost_for(args: &Args, model: &ModelDesc, cluster: &ClusterSpec) -> CostModel {
+    match args.flags.get("profile") {
+        Some(path) => {
+            let cost = load_profile_or_analytic(path, model, cluster);
+            if let Some(p) = cost.profile() {
+                println!(
+                    "cost model: measured profile {path} (generation {}, {} configs)",
+                    p.generation(),
+                    p.n_configs()
+                );
+            }
+            cost
+        }
+        None => CostModel::calibrated(model, cluster),
+    }
+}
+
 fn main() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let Some(cmd) = argv.first() else {
@@ -113,7 +151,7 @@ fn main() -> Result<()> {
             let gpus = args.get_parse("gpus", 16u32)?;
             let cluster = cluster_for(&args.get("cluster", "a100"), gpus);
             let tasks = tasks_for(&args.get("tasks", "7b-subset"));
-            let cost = CostModel::calibrated(&model, &cluster);
+            let cost = cost_for(&args, &model, &cluster);
             let planner = Planner::new(&cost, &cluster);
             let mut opts = PlannerOptions::default();
             opts.config_proposal = !args.has("no-config-proposal");
@@ -144,7 +182,7 @@ fn main() -> Result<()> {
             let cluster = cluster_for(&args.get("cluster", "a100"), gpus);
             let tasks = tasks_for(&args.get("tasks", "7b-subset"));
             let steps = args.get_parse("steps", 100usize)?;
-            let cost = CostModel::calibrated(&model, &cluster);
+            let cost = cost_for(&args, &model, &cluster);
             let planner = Planner::new(&cost, &cluster);
             let plan = if args.has("task-fused") {
                 planner.plan_homogeneous(&tasks, &PlannerOptions::default())
@@ -159,6 +197,68 @@ fn main() -> Result<()> {
             let report = sched.run_steps(steps);
             println!("{}", report.summary());
         }
+        "calibrate" => {
+            let args = Args::parse(rest, &[])?;
+            let model = model_for(&args)?;
+            let gpus = args.get_parse("gpus", 16u32)?;
+            let cluster = cluster_for(&args.get("cluster", "a100"), gpus);
+            let tasks = tasks_for(&args.get("tasks", "7b-subset"));
+            let steps = args.get_parse("steps", 24usize)?;
+            let seed = args.get_parse("seed", 7u64)?;
+            let out = args.get("out", "lobra_profile.json");
+            let cost = CostModel::calibrated(&model, &cluster);
+            let plan = Planner::new(&cost, &cluster)
+                .plan(&tasks, PlannerOptions::default())
+                .ok_or_else(|| anyhow!("no feasible plan to profile under"))?;
+            println!(
+                "profiling {} on {} under plan [{}] for {steps} steps",
+                model.name,
+                cluster.name,
+                plan.notation()
+            );
+            let mut store = CalibrationStore::new(&cost);
+            let n = profile_sim_steps(&cost, &plan, &tasks, steps, seed, &mut store);
+            store.refit();
+            println!(
+                "{n} microbatch observations, profile generation {}",
+                store.generation()
+            );
+            for e in store.entries() {
+                match (e.fitted, e.rms_rel_error()) {
+                    (Some(f), Some(rms)) => println!(
+                        "  {}: {:>4} obs  rms_rel_error {rms:.2e}  \
+                         t(b,s) = {:.3e} + {:.3e}·bs + {:.3e}·bs²",
+                        e.config,
+                        e.observations.len(),
+                        f.beta0,
+                        f.beta1,
+                        f.beta2
+                    ),
+                    _ => println!(
+                        "  {}: {:>4} obs  underdetermined — analytic constants kept",
+                        e.config,
+                        e.observations.len()
+                    ),
+                }
+            }
+            store.save(&out)?;
+            println!("profile written to {out}");
+            // close the loop: a plan computed from the freshly measured
+            // profile (what `lobra train --profile` will do)
+            let profiled = CostModel::from_profile(
+                &model,
+                &cluster,
+                CalibrationStore::load(&out)?.profile(),
+            )?;
+            let replan = Planner::new(&profiled, &cluster)
+                .plan(&tasks, PlannerOptions::default())
+                .ok_or_else(|| anyhow!("no feasible plan from the measured profile"))?;
+            println!(
+                "plan from measured profile: [{}] (analytic plan: [{}])",
+                replan.notation(),
+                plan.notation()
+            );
+        }
         "train" => {
             let args = Args::parse(rest, &[])?;
             let mut cfg = TrainerConfig::default();
@@ -169,16 +269,18 @@ fn main() -> Result<()> {
             let log_every = args.get_parse("log-every", 10usize)?.max(1);
             let artifacts = args.get("artifacts", "artifacts");
             let mut trainer = Trainer::new(&artifacts, cfg)?;
-            // --model attaches a *planned* virtual cluster: the real run's
-            // microbatches are dispatched by the MINMAX solve over the
-            // planned heterogeneous replicas, and GPU-seconds are reported
-            // under that clock (the paper's accounting).
-            if args.has("model") {
+            // --model (or --profile) attaches a *planned* virtual cluster:
+            // the real run's microbatches are dispatched by the MINMAX
+            // solve over the planned heterogeneous replicas, and
+            // GPU-seconds are reported under that clock (the paper's
+            // accounting). With --profile the plan comes from *measured*
+            // microbatch times instead of the analytic constants.
+            if args.has("model") || args.has("profile") {
                 let model = model_for(&args)?;
                 let gpus = args.get_parse("gpus", 16u32)?;
                 let cluster = cluster_for(&args.get("cluster", "a100"), gpus);
                 let tasks = tasks_for(&args.get("tasks", "7b-subset"));
-                let cost = CostModel::calibrated(&model, &cluster);
+                let cost = cost_for(&args, &model, &cluster);
                 let plan = Planner::new(&cost, &cluster)
                     .plan(&tasks, PlannerOptions::default())
                     .ok_or_else(|| anyhow!("no feasible plan for the virtual cluster"))?;
@@ -219,6 +321,26 @@ fn main() -> Result<()> {
                     virt_gpu,
                     trainer.logs().len(),
                     virt_gpu / trainer.logs().len() as f64
+                );
+            }
+            if let Some(path) = args.flags.get("save-profile").cloned() {
+                trainer.save_profile(&path)?;
+                let calib = trainer.calibration();
+                println!(
+                    "in-situ calibration profile ({} microbatch observations, \
+                     generation {}) written to {path}",
+                    calib.n_observations(),
+                    calib.generation()
+                );
+                // the profile describes the *local engine* world, not any
+                // --model/--cluster virtual world this run was accounted
+                // against — print the flags that load it back
+                println!(
+                    "profile world: model={} cluster={}; reload with: \
+                     lobra train --profile {path} --model {} --cluster local --gpus 4",
+                    calib.model(),
+                    calib.cluster(),
+                    calib.model()
                 );
             }
         }

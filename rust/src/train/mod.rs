@@ -10,9 +10,12 @@
 //! [`crate::util::par`], gradients reduced deterministically in fixed
 //! replica order). The virtual GPU-seconds each step reports therefore
 //! come from the dispatch algorithm itself, not from a round-robin
-//! approximation of it. Adam updates the adapters in Rust; checkpoints
-//! persist adapters *and* optimizer state ([`TrainCheckpoint`]). Used by
-//! `examples/e2e_train.rs` and `lobra train`.
+//! approximation of it. Every executed microbatch's measured wall-clock
+//! also feeds an in-situ [`CalibrationStore`]
+//! ([`Trainer::save_profile`] persists it for `--profile` planning). Adam
+//! updates the adapters in Rust; checkpoints persist adapters *and*
+//! optimizer state ([`TrainCheckpoint`]). Used by `examples/e2e_train.rs`
+//! and `lobra train`.
 
 mod adam;
 mod checkpoint;
@@ -25,7 +28,7 @@ use crate::config::{ModelDesc, ParallelConfig};
 use crate::coordinator::bucketing::buckets_from_boundaries;
 use crate::coordinator::dispatcher::DispatchPolicy;
 use crate::coordinator::planner::DeploymentPlan;
-use crate::costmodel::CostModel;
+use crate::costmodel::{CalibrationStore, CostModel};
 use crate::data::{DatasetProfile, FusedBatch, LengthDistribution, Sequence, SyntheticCorpus};
 use crate::exec::{ExecutionPlan, PjrtExecutor, ReplicaExecutor};
 use crate::runtime::{Engine, ParamVector};
@@ -87,6 +90,10 @@ pub struct Trainer {
     lengths: Vec<LengthDistribution>,
     /// Bucket boundaries = the compiled artifact sequence lengths.
     boundaries: Vec<u32>,
+    /// In-situ calibration: every executed microbatch's measured
+    /// wall-clock accumulates here, keyed to the virtual cluster's
+    /// world ([`Self::save_profile`] persists it).
+    calib: CalibrationStore,
 }
 
 impl Trainer {
@@ -103,6 +110,7 @@ impl Trainer {
         let m = engine.manifest();
         let n_tasks = m.model.n_tasks as usize;
         let vocab = m.model.vocab as u32;
+        let preset = m.preset.clone();
         let mut boundaries: Vec<u32> =
             engine.shapes().iter().map(|&(_, s)| s as u32).collect();
         boundaries.dedup();
@@ -119,8 +127,16 @@ impl Trainer {
             .collect();
         let lengths = profiles.iter().map(|p| p.distribution()).collect();
 
+        // The *engine world*: the model actually compiled into the
+        // artifacts, on the local CPU "cluster". The in-situ calibration
+        // store is keyed to this world — its observations are wall-clocks
+        // of THIS engine, and must never masquerade as measurements of
+        // whatever virtual cluster the run is accounted against.
+        let engine_model =
+            ModelDesc::by_name(&preset).unwrap_or_else(ModelDesc::tiny);
         let cluster = ClusterSpec::local_cpu(4);
-        let cost = CostModel::calibrated(&ModelDesc::tiny(), &cluster);
+        let cost = CostModel::calibrated(&engine_model, &cluster);
+        let calib = CalibrationStore::new(&cost);
         let vplan =
             DeploymentPlan::homogeneous(ParallelConfig::new(1, 1), 4, n_tasks as u32);
         Ok(Self {
@@ -135,12 +151,17 @@ impl Trainer {
             profiles,
             lengths,
             boundaries,
+            calib,
         })
     }
 
     /// Attach a virtual cluster (cost model + deployment plan): subsequent
     /// steps dispatch over `plan`'s replicas and report GPU-seconds under
-    /// `cost`'s clock.
+    /// `cost`'s clock. The in-situ calibration store is deliberately NOT
+    /// re-keyed: its observations are CPU wall-clocks of the local engine
+    /// world, not measurements of the virtual cluster — keying them to
+    /// the virtual (model, cluster) would let a saved profile attach as
+    /// "measured A100 times" and mix units with the analytic model.
     pub fn with_virtual_cluster(mut self, cost: CostModel, plan: DeploymentPlan) -> Self {
         self.exec.set_cost(cost);
         self.vplan = plan;
@@ -166,6 +187,20 @@ impl Trainer {
     /// The virtual deployment steps are dispatched over.
     pub fn virtual_plan(&self) -> &DeploymentPlan {
         &self.vplan
+    }
+
+    /// The in-situ calibration store (one observation per executed
+    /// microbatch so far).
+    pub fn calibration(&self) -> &CalibrationStore {
+        &self.calib
+    }
+
+    /// Refit the in-situ observations and persist them as a calibration
+    /// profile at `path` (loadable by `lobra train --profile` /
+    /// [`crate::costmodel::load_profile_or_analytic`]).
+    pub fn save_profile(&mut self, path: &str) -> Result<()> {
+        self.calib.refit();
+        self.calib.save(path)
     }
 
     /// Draw this step's fused batch: per task, `per_task_batch` sequences
@@ -209,6 +244,7 @@ impl Trainer {
 
         self.exec.set_lora(&self.lora);
         let out = self.exec.execute_step(&eplan)?;
+        self.calib.record_all(&out.observations);
         let train = out
             .train
             .ok_or_else(|| anyhow!("pjrt executor returned no training output"))?;

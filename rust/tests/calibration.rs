@@ -1,0 +1,261 @@
+//! Calibration-loop integration tests: fit edge cases, profile
+//! persistence (including corrupt-file fallback), sim-replay fidelity
+//! (the executor observations must reproduce the cost model they were
+//! sampled from), and cost-table invalidation on recalibration.
+
+use std::sync::Arc;
+
+use lobra::cluster::ClusterSpec;
+use lobra::config::{ModelDesc, ParallelConfig};
+use lobra::coordinator::planner::{Planner, PlannerOptions};
+use lobra::costmodel::{
+    calibrate, cost_fingerprint, load_profile_or_analytic, world_fingerprint,
+    CalibrationStore, CostModel, CostTables, FittedCost, Observation,
+};
+use lobra::exec::profile_sim_steps;
+use lobra::prelude::TaskSet;
+
+fn tmp_path(tag: &str) -> String {
+    let mut p = std::env::temp_dir();
+    p.push(format!("lobra_test_profile_{tag}_{}.json", std::process::id()));
+    p.to_string_lossy().into_owned()
+}
+
+fn world() -> (ModelDesc, ClusterSpec, TaskSet) {
+    (
+        ModelDesc::llama2_7b(),
+        ClusterSpec::a100_40g(16),
+        TaskSet::paper_7b_subset(),
+    )
+}
+
+/// Diverse shapes spanning the fitted family's rank (distinct `b·s` and
+/// `b·s²` directions).
+const SHAPES: [(u64, u64); 5] = [(16, 512), (4, 2048), (1, 8192), (8, 512), (2, 2048)];
+
+#[test]
+fn collinear_shapes_hit_the_singular_pivot() {
+    // every observation at one sequence length: the b·s and b·s² columns
+    // are exactly proportional (ratio s), so the normal equations are
+    // singular and the fit must be refused, not inverted through noise
+    let obs: Vec<Observation> = [1u64, 2, 4, 8, 16]
+        .iter()
+        .map(|&b| Observation { b, s: 128, seconds: 0.01 * b as f64 })
+        .collect();
+    assert!(calibrate::fit(&obs).is_none());
+
+    // the store keeps the observations but reports no fit ...
+    let (model, cluster, _) = world();
+    let mut store = CalibrationStore::for_world(&model, &cluster);
+    let cfg = ParallelConfig::new(1, 1);
+    for o in &obs {
+        store.record(cfg, o.b, o.s, o.seconds);
+    }
+    assert_eq!(store.refit(), 0);
+    assert!(store.fitted_for(cfg).is_none());
+    assert_eq!(store.n_observations(), 5);
+    // ... and the resulting profile fits nothing, so it never attaches
+    assert!(CostModel::from_profile(&model, &cluster, store.profile()).is_err());
+}
+
+#[test]
+fn profile_json_round_trip_is_bit_identical() {
+    let (model, cluster, tasks) = world();
+    let cost = CostModel::calibrated(&model, &cluster);
+    let plan = Planner::new(&cost, &cluster)
+        .plan(&tasks, PlannerOptions::default())
+        .unwrap();
+    let mut store = CalibrationStore::new(&cost);
+    let n = profile_sim_steps(&cost, &plan, &tasks, 6, 11, &mut store);
+    assert!(n > 0);
+    assert!(store.refit() > 0);
+
+    let path = tmp_path("roundtrip");
+    store.save(&path).unwrap();
+    let mut loaded = CalibrationStore::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+
+    assert_eq!(loaded.fingerprint(), store.fingerprint());
+    assert_eq!(loaded.generation(), store.generation());
+    assert_eq!(loaded.n_observations(), store.n_observations());
+    assert_eq!(loaded.entries().len(), store.entries().len());
+    for (a, b) in store.entries().iter().zip(loaded.entries()) {
+        assert_eq!(a.config, b.config);
+        assert_eq!(a.recorded, b.recorded);
+        match (a.fitted, b.fitted) {
+            (Some(x), Some(y)) => {
+                assert_eq!(x.beta0.to_bits(), y.beta0.to_bits());
+                assert_eq!(x.beta1.to_bits(), y.beta1.to_bits());
+                assert_eq!(x.beta2.to_bits(), y.beta2.to_bits());
+            }
+            (None, None) => {}
+            other => panic!("fit lost in round trip for {}: {other:?}", a.config),
+        }
+        assert_eq!(a.observations.len(), b.observations.len());
+        for (oa, ob) in a.observations.iter().zip(&b.observations) {
+            assert_eq!(oa.b, ob.b);
+            assert_eq!(oa.s, ob.s);
+            assert_eq!(oa.seconds.to_bits(), ob.seconds.to_bits());
+        }
+    }
+    // the loaded profile keys cost tables identically to the original
+    let c1 = CostModel::from_profile(&model, &cluster, store.profile()).unwrap();
+    let c2 = CostModel::from_profile(&model, &cluster, loaded.profile()).unwrap();
+    assert_eq!(cost_fingerprint(&c1), cost_fingerprint(&c2));
+}
+
+#[test]
+fn corrupt_profile_falls_back_to_analytic() {
+    let (model, cluster, _) = world();
+    let analytic_fp = cost_fingerprint(&CostModel::calibrated(&model, &cluster));
+    let path = tmp_path("corrupt");
+
+    // not JSON at all
+    std::fs::write(&path, "{ this is not json").unwrap();
+    let cost = load_profile_or_analytic(&path, &model, &cluster);
+    assert!(!cost.is_profiled());
+    assert_eq!(cost_fingerprint(&cost), analytic_fp);
+
+    // valid JSON of the wrong kind
+    std::fs::write(&path, "{\"kind\": \"something-else\"}").unwrap();
+    assert!(!load_profile_or_analytic(&path, &model, &cluster).is_profiled());
+
+    // a valid profile measured on a *different* world must not attach ...
+    let truth = FittedCost { beta0: 0.004, beta1: 2.5e-6, beta2: 1.5e-9 };
+    let big = ModelDesc::llama2_70b();
+    let mut other = CalibrationStore::for_world(&big, &cluster);
+    let c = ParallelConfig::new(8, 1);
+    for &(b, s) in &SHAPES {
+        other.record(c, b, s, truth.predict(b, s));
+    }
+    other.refit();
+    other.save(&path).unwrap();
+    assert!(!load_profile_or_analytic(&path, &model, &cluster).is_profiled());
+    // ... while its own world loads it fine
+    assert!(load_profile_or_analytic(&path, &big, &cluster).is_profiled());
+
+    // missing file
+    std::fs::remove_file(&path).ok();
+    assert!(!load_profile_or_analytic(&path, &model, &cluster).is_profiled());
+}
+
+#[test]
+fn sim_replay_fit_matches_the_cost_model() {
+    // property: a profile replayed through the SimExecutor is sampled from
+    // the analytic model, which lies exactly in the fitted family — so the
+    // per-config FittedCost must reproduce the sim's own CostModel at
+    // every observed shape
+    let (model, cluster, tasks) = world();
+    let cost = CostModel::calibrated(&model, &cluster);
+    let plan = Planner::new(&cost, &cluster)
+        .plan(&tasks, PlannerOptions::default())
+        .unwrap();
+    for seed in [3u64, 17, 91] {
+        let mut store = CalibrationStore::new(&cost);
+        let n = profile_sim_steps(&cost, &plan, &tasks, 8, seed, &mut store);
+        assert!(n > 0, "seed {seed}: no observations");
+        store.refit();
+        let mut checked = 0usize;
+        for e in store.entries() {
+            let Some(f) = e.fitted else { continue };
+            for o in &e.observations {
+                let want = cost.t_microbatch(e.config, o.b, o.s);
+                let got = f.predict(o.b, o.s);
+                assert!(
+                    (got - want).abs() / want.max(1e-12) < 1e-3,
+                    "seed {seed} {} b={} s={}: fitted {got} vs analytic {want}",
+                    e.config,
+                    o.b,
+                    o.s
+                );
+                checked += 1;
+            }
+            assert!(e.rms_rel_error().unwrap() < 1e-3, "seed {seed} {}", e.config);
+        }
+        assert!(checked > 0, "seed {seed}: no config accumulated a fittable set");
+    }
+}
+
+#[test]
+fn recalibration_rekeys_cost_tables() {
+    // acceptance: recalibration changes cost_fingerprint so the shared
+    // CostTableLru never serves a stale analytic (or stale-generation)
+    // table to a planner running on measured times
+    let (model, cluster, _) = world();
+    let analytic = CostModel::calibrated(&model, &cluster);
+    let configs = vec![ParallelConfig::new(1, 1), ParallelConfig::new(2, 1)];
+    let bounds = vec![512u32, 2048, 8192];
+    let tables = CostTables::with_capacity(8);
+    let t_analytic = tables.get_or_build(&analytic, &configs, &bounds);
+
+    // calibration pass 1: measured world runs 1.5× slower than analytic
+    let c = ParallelConfig::new(1, 1);
+    let mut store = CalibrationStore::new(&analytic);
+    for &(b, s) in &SHAPES {
+        store.record(c, b, s, 1.5 * analytic.t_microbatch(c, b, s));
+    }
+    let prof1 = CostModel::from_profile(&model, &cluster, store.profile()).unwrap();
+    assert_ne!(cost_fingerprint(&analytic), cost_fingerprint(&prof1));
+    let t1 = tables.get_or_build(&prof1, &configs, &bounds);
+    assert!(
+        !Arc::ptr_eq(&t_analytic, &t1),
+        "measured world was served the stale analytic table"
+    );
+    assert_ne!(
+        t1.per_seq_cost(c, 2048).to_bits(),
+        t_analytic.per_seq_cost(c, 2048).to_bits(),
+        "profiled table must tabulate measured times"
+    );
+
+    // recalibration: new observations bump the generation → new key again
+    store.record(c, 3, 512, 1.5 * analytic.t_microbatch(c, 3, 512));
+    let prof2 = CostModel::from_profile(&model, &cluster, store.profile()).unwrap();
+    assert_ne!(cost_fingerprint(&prof1), cost_fingerprint(&prof2));
+    let t2 = tables.get_or_build(&prof2, &configs, &bounds);
+    assert!(!Arc::ptr_eq(&t1, &t2), "stale profile generation was served");
+
+    // the analytic world still hits its original entry ...
+    let t_again = tables.get_or_build(&analytic, &configs, &bounds);
+    assert!(Arc::ptr_eq(&t_analytic, &t_again));
+    // ... and the persistence key (world fingerprint) never moved
+    assert_eq!(world_fingerprint(&model, &cluster), store.fingerprint());
+}
+
+#[test]
+fn calibrate_save_load_plan_end_to_end() {
+    // the `lobra calibrate` → `lobra train --profile` loop, sim-backed:
+    // profile under the analytic plan, persist, reload, attach, replan
+    let (model, cluster, tasks) = world();
+    let cost = CostModel::calibrated(&model, &cluster);
+    let plan = Planner::new(&cost, &cluster)
+        .plan(&tasks, PlannerOptions::default())
+        .unwrap();
+    let mut store = CalibrationStore::new(&cost);
+    let n = profile_sim_steps(&cost, &plan, &tasks, 6, 7, &mut store);
+    assert!(n > 0);
+    assert!(store.refit() > 0);
+    let path = tmp_path("e2e");
+    store.save(&path).unwrap();
+
+    let profiled = CostModel::from_profile(
+        &model,
+        &cluster,
+        CalibrationStore::load(&path).unwrap().profile(),
+    )
+    .unwrap();
+    std::fs::remove_file(&path).ok();
+    assert!(profiled.is_profiled());
+    let replan = Planner::new(&profiled, &cluster)
+        .plan(&tasks, PlannerOptions::default())
+        .expect("planning from the measured profile failed");
+    // the sim profile reproduces the analytic t(b,s) to ~1e-6, so the
+    // measured plan's expected step time must land on the analytic one
+    let rel = (replan.expected_step_time - plan.expected_step_time).abs()
+        / plan.expected_step_time;
+    assert!(
+        rel < 0.05,
+        "measured-profile plan diverged: {} vs {} (rel {rel})",
+        replan.expected_step_time,
+        plan.expected_step_time
+    );
+}
