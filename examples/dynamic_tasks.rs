@@ -71,8 +71,9 @@ fn main() {
 fn report(outcome: &ReplanOutcome, mgr: &TaskManager) {
     match outcome {
         ReplanOutcome::Unchanged => println!("  plan unchanged — training continues"),
-        ReplanOutcome::Redeployed { adjustment_seconds } => println!(
-            "  redeployed (adapters checkpointed, ~{adjustment_seconds:.0}s adjustment)\n  new plan: [{}]",
+        ReplanOutcome::Redeployed { adjustment_seconds, adjustment } => println!(
+            "  redeployed ({} replicas changed, ~{adjustment_seconds:.0}s adjustment)\n  new plan: [{}]",
+            adjustment.changed_replicas,
             mgr.plan().unwrap().notation()
         ),
         ReplanOutcome::Drained => println!("  drained"),

@@ -15,9 +15,17 @@
 //! time) to cold ones on every event; the wall-clock totals and speedup
 //! are written to `BENCH_fig13.json` (path override: `LOBRA_BENCH_JSON`).
 //!
+//! After the churn trace, the bench sweeps the **anytime replan budget**:
+//! one budget-sliced search (`LOBRA_BENCH_SLICE` plans per slice) over the
+//! final task set records the best-so-far objective after every slice —
+//! the plan-quality-vs-budget curve a serving deployment trades on — and
+//! certifies the fully-pumped plan identical to a cold one. The curve is
+//! written into `BENCH_fig13.json` as `budget_curve`.
+//!
 //! ```bash
 //! cargo bench --bench fig13_replan
 //! LOBRA_BENCH_GPUS=32 LOBRA_BENCH_EVENTS=18 cargo bench --bench fig13_replan
+//! LOBRA_BENCH_SLICE=500 cargo bench --bench fig13_replan
 //! ```
 
 use std::time::Instant;
@@ -114,12 +122,69 @@ fn main() {
         if all_identical { "yes" } else { "NO — BUG" }
     );
 
+    // --- anytime budget sweep: plan quality vs enumeration budget ---
+    let slice_plans: usize = std::env::var("LOBRA_BENCH_SLICE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(2_000);
+    let tasks = TaskSet::new(live.clone());
+    println!(
+        "\n== anytime budget sweep: best-so-far objective per {slice_plans}-plan slice =="
+    );
+    let mut sweep = PlanningSession::new(opts.clone());
+    let mut search =
+        sweep.begin_anytime(&planner, &tasks).expect("plannable final task set");
+    let mut curve: Vec<(usize, f64, f64)> = Vec::new();
+    let t_sweep = Instant::now();
+    let mut ct = Table::new(&["slice", "plans", "best step time", "wall"]);
+    loop {
+        let r = sweep.pump_anytime(&planner, &mut search, slice_plans);
+        let best = sweep
+            .anytime_best(&planner, &search)
+            .expect("anytime search always holds a feasible best-so-far plan");
+        let wall = t_sweep.elapsed().as_secs_f64();
+        curve.push((search.n_enumerated(), best.expected_step_time, wall));
+        ct.row(&[
+            curve.len().to_string(),
+            search.n_enumerated().to_string(),
+            format!("{:.4}s", best.expected_step_time),
+            fmt_secs(wall),
+        ]);
+        if r.done || curve.len() >= 10_000 {
+            break;
+        }
+    }
+    ct.print();
+    let (final_plan, _) =
+        sweep.finish_anytime(&planner, search).expect("final anytime plan");
+    let cold_final = planner.plan(&tasks, opts.clone()).expect("cold final plan");
+    let anytime_identical = final_plan.groups == cold_final.groups
+        && final_plan.expected_step_time.to_bits()
+            == cold_final.expected_step_time.to_bits();
+    println!(
+        "anytime sweep: {} slices, final plan [{}], identical to cold: {}",
+        curve.len(),
+        final_plan.notation(),
+        if anytime_identical { "yes" } else { "NO — BUG" }
+    );
+
+    let curve_json = curve
+        .iter()
+        .map(|(n, t, w)| {
+            format!(
+                "{{\"plans\": {n}, \"best_step_time\": {t:.6}, \"wall_seconds\": {w:.6}}}"
+            )
+        })
+        .collect::<Vec<_>>()
+        .join(",\n    ");
     let json = format!(
         "{{\n  \"bench\": \"fig13_replan\",\n  \"gpus\": {gpus},\n  \"events\": {n_events},\n  \
          \"cold_seconds\": {cold_total:.6},\n  \"warm_seconds\": {warm_total:.6},\n  \
          \"speedup\": {speedup:.4},\n  \"plan_identical\": {all_identical},\n  \
          \"warm_starts\": {},\n  \"cold_starts\": {},\n  \"table_hits\": {hits},\n  \
-         \"table_misses\": {misses}\n}}\n",
+         \"table_misses\": {misses},\n  \"slice_plans\": {slice_plans},\n  \
+         \"anytime_identical\": {anytime_identical},\n  \"budget_curve\": [\n    \
+         {curve_json}\n  ]\n}}\n",
         session.stats.warm_starts, session.stats.cold_starts,
     );
     match std::fs::write(&json_path, &json) {

@@ -1,0 +1,155 @@
+//! Churn-trace serving scenario (ISSUE 5): the event-driven runtime
+//! replays tenant arrivals/exits while training overlaps a budgeted
+//! anytime replan, and reports tenant-observed serving metrics —
+//! time-to-admission, steps trained during replan windows (the
+//! no-stop-the-world proof), and GPU-seconds lost to redeploys (charged
+//! only for replica groups that actually changed).
+//!
+//! The budget is metered on a deterministic sim clock (seconds per
+//! enumerated plan), so the scenario reproduces bit-for-bit across hosts;
+//! host wall-clocks are recorded alongside. Results go to
+//! `BENCH_serve.json` (override: `LOBRA_BENCH_JSON`).
+//!
+//! ```bash
+//! cargo bench --bench serve_churn
+//! LOBRA_BENCH_GPUS=32 LOBRA_BENCH_BUDGET=60 cargo bench --bench serve_churn
+//! LOBRA_BENCH_BUDGET=0 cargo bench --bench serve_churn   # unlimited + certify
+//! ```
+
+use std::time::Instant;
+
+use lobra::cluster::ClusterSpec;
+use lobra::config::ModelDesc;
+use lobra::coordinator::runtime::{
+    default_churn_trace, BudgetMeter, ServeOptions, ServeRuntime,
+};
+use lobra::costmodel::CostModel;
+use lobra::prelude::TaskSet;
+use lobra::util::bench::{fmt_secs, Table};
+
+fn env_f64(key: &str, default: f64) -> f64 {
+    std::env::var(key).ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
+fn main() {
+    let gpus: u32 = env_f64("LOBRA_BENCH_GPUS", 16.0) as u32;
+    // 0 = unlimited budget (every replan runs to certified completion)
+    let budget = env_f64("LOBRA_BENCH_BUDGET", 120.0);
+    let spacing = env_f64("LOBRA_BENCH_SPACING", 900.0);
+    let json_path = std::env::var("LOBRA_BENCH_JSON")
+        .unwrap_or_else(|_| "BENCH_serve.json".to_string());
+
+    let cluster = ClusterSpec::a100_40g(gpus);
+    let model = ModelDesc::llama2_7b();
+    let cost = CostModel::calibrated(&model, &cluster);
+    let pool = TaskSet::paper_7b_subset();
+    let trace = default_churn_trace(&pool, spacing);
+
+    let mut opts = ServeOptions::default();
+    opts.replan_budget = (budget > 0.0).then_some(budget);
+    opts.meter = BudgetMeter::SimPerPlan(1e-4);
+    opts.slice_plans = 4096;
+    opts.certify_identity = true;
+    opts.tail_steps = 8;
+
+    println!(
+        "== serve churn: {} on {} GPUs, {} events, replan budget {} ==\n",
+        model.name,
+        gpus,
+        trace.len(),
+        if budget > 0.0 { format!("{budget:.0}s") } else { "unlimited".into() },
+    );
+
+    let t0 = Instant::now();
+    let mut rt = ServeRuntime::new(&cost, &cluster, opts);
+    let report = rt.run_trace(&trace);
+    let wall = t0.elapsed().as_secs_f64();
+
+    let mut t = Table::new(&["tenant", "arrived", "admitted", "tta", "steps", "exited"]);
+    for ten in &report.tenants {
+        t.row(&[
+            ten.name.clone(),
+            format!("{:.0}s", ten.arrived_at),
+            ten.admitted_at.map_or("-".into(), |a| format!("{a:.0}s")),
+            ten.time_to_admission().map_or("-".into(), |d| format!("{d:.1}s")),
+            ten.steps_trained.to_string(),
+            ten.exited_at.map_or("-".into(), |e| format!("{e:.0}s")),
+        ]);
+    }
+    t.print();
+
+    let min_window_steps = report.min_steps_in_replan_window.unwrap_or(0);
+    let mean_tta = report.mean_time_to_admission().unwrap_or(0.0);
+    println!(
+        "\nsim horizon {:.0}s | {} steps, {} during replan windows (min {} per \
+         overlapped window) | {} windows, {} redeploys, {} identical swaps, {} \
+         budget-exhausted",
+        report.sim_seconds,
+        report.steps_total,
+        report.steps_during_replan,
+        min_window_steps,
+        report.replan_windows,
+        report.redeploys,
+        report.plan_swaps_identical,
+        report.budget_exhausted,
+    );
+    println!(
+        "GPU-seconds: {:.1} trained, {:.1} lost to redeploys | mean TTA {mean_tta:.1}s \
+         | identity {}/{} | host wall {}",
+        report.gpu_seconds_trained,
+        report.gpu_seconds_lost_redeploy,
+        report.identity_checks - report.identity_failures,
+        report.identity_checks,
+        fmt_secs(wall),
+    );
+    let no_stop_the_world =
+        report.min_steps_in_replan_window.map_or(false, |m| m >= 1);
+    println!(
+        "no stop-the-world (>=1 step in every overlapped replan window): {}",
+        if no_stop_the_world { "yes" } else { "NO — BUG" }
+    );
+
+    let tenants_json = report
+        .tenants
+        .iter()
+        .map(|ten| {
+            format!(
+                "{{\"name\": \"{}\", \"tta_seconds\": {}, \"steps\": {}}}",
+                ten.name,
+                ten.time_to_admission()
+                    .map_or("null".into(), |d| format!("{d:.3}")),
+                ten.steps_trained
+            )
+        })
+        .collect::<Vec<_>>()
+        .join(",\n    ");
+    let json = format!(
+        "{{\n  \"bench\": \"serve_churn\",\n  \"gpus\": {gpus},\n  \
+         \"replan_budget_seconds\": {budget},\n  \"events\": {},\n  \
+         \"sim_seconds\": {:.3},\n  \"steps_total\": {},\n  \
+         \"steps_during_replan\": {},\n  \"min_steps_in_replan_window\": {},\n  \
+         \"replan_windows\": {},\n  \"redeploys\": {},\n  \
+         \"plan_swaps_identical\": {},\n  \"budget_exhausted\": {},\n  \
+         \"gpu_seconds_trained\": {:.3},\n  \"gpu_seconds_lost_redeploy\": {:.3},\n  \
+         \"mean_tta_seconds\": {mean_tta:.3},\n  \"identity_checks\": {},\n  \
+         \"identity_failures\": {},\n  \"no_stop_the_world\": {no_stop_the_world},\n  \
+         \"host_wall_seconds\": {wall:.3},\n  \"tenants\": [\n    {tenants_json}\n  ]\n}}\n",
+        trace.len(),
+        report.sim_seconds,
+        report.steps_total,
+        report.steps_during_replan,
+        min_window_steps,
+        report.replan_windows,
+        report.redeploys,
+        report.plan_swaps_identical,
+        report.budget_exhausted,
+        report.gpu_seconds_trained,
+        report.gpu_seconds_lost_redeploy,
+        report.identity_checks,
+        report.identity_failures,
+    );
+    match std::fs::write(&json_path, &json) {
+        Ok(()) => println!("\nserving metrics recorded to {json_path}"),
+        Err(e) => eprintln!("\nWARNING: could not write {json_path}: {e}"),
+    }
+}

@@ -11,59 +11,75 @@
 //!   evaluation set, and the exact inner dispatch solve.
 //! * [`session`] — persistent planning sessions: the long-lived search
 //!   state between replans (previous survivor set, shared cost-table LRU,
-//!   resume checkpoints of capped searches).
-//! * [`scheduler`] — the joint-FT step loop tying it all together: per
-//!   step it builds a [`crate::exec::ExecutionPlan`] (dispatch solve +
-//!   concrete per-replica sequence assignment) and hands it to a
-//!   [`crate::exec::ReplicaExecutor`] backend. Simulated benches use the
-//!   cost-clock backend; `lobra train` runs the identical pipeline with
-//!   the PJRT backend, so both report GPU-seconds from the same dispatch
-//!   code (see the [`crate::exec`] module docs for the backend diagram).
-//! * [`tasks`] — tenant lifecycle: arrivals/exits trigger re-planning.
+//!   resume checkpoints) and the resumable **anytime search**
+//!   ([`session::AnytimeReplan`]) that spends a replan budget in slices.
+//! * [`scheduler`] — the fixed-plan joint-FT step loop behind the paper
+//!   benches: per step it builds a [`crate::exec::ExecutionPlan`]
+//!   (dispatch solve + concrete per-replica sequence assignment) and hands
+//!   it to a [`crate::exec::ReplicaExecutor`] backend.
+//! * [`tasks`] — tenant lifecycle: a **non-blocking** [`tasks::TaskManager`]
+//!   whose `apply_event` opens a background replan instead of running one,
+//!   with diff-based redeploy accounting ([`tasks::plan_adjustment`]).
+//! * [`runtime`] — the event-driven **serving runtime**: replays a churn
+//!   trace, overlapping training under the current plan with the budgeted
+//!   anytime replan, swapping plans at step boundaries.
 //!
-//! ## State flow
+//! ## The serving event loop
 //!
-//! The planner itself is stateless: `Planner::plan` derives everything —
-//! expectation buckets, candidate configs, cost table, survivor set — from
-//! scratch, which is the right mental model but the wrong cost model for a
-//! multi-tenant deployment where arrivals/exits force replans against a
-//! mostly-unchanged world. Long-lived search state therefore lives in a
-//! [`session::PlanningSession`]:
+//! The planner itself is stateless and the blocking mental model —
+//! "arrival: stop, replan, redeploy" — is the wrong *cost* model for a
+//! multi-tenant deployment: on large clusters the search takes minutes,
+//! and blocking stalls every live tenant. The coordinator therefore runs
+//! as an event loop in which replanning is a background activity:
 //!
 //! ```text
-//!                   TaskEvent (Arrive/Exit)
-//!                            │
-//!                  ┌─────────▼─────────┐  warm-start seed   ┌──────────┐
-//!                  │   TaskManager     │───────────────────►│ Planner  │
-//!                  │  PlanningSession  │  (prev survivors,   │ top-K    │
-//!                  │   ┌───────────┐   │   re-scored)        │ search   │
-//!                  │   │ CostTables│◄──┼─────────────────────┴──────────┘
-//!                  │   │   (LRU)   │   │  tables keyed by
-//!                  │   └─────▲─────┘   │  (configs, boundaries)
-//!                  └─────────┼─────────┘
-//!                            │ shared handle
-//!                  ┌─────────┴─────────┐
-//!                  │    Scheduler      │  per-step dispatch tables
-//!                  └───────────────────┘
+//!        TaskEvent (Arrive/Exit)            training steps (sim clock)
+//!                 │                                   ▲
+//!        ┌────────▼──────────┐   step boundary  ┌─────┴────────────┐
+//!        │   TaskManager     │  plan swap, diff │  SimTrainLoop    │
+//!        │  (apply_event:    │  -charged adjust │  (current plan,  │
+//!        │   opens replan)   │─────────────────►│   swappable)     │
+//!        │  PlanningSession  │                  └─────▲────────────┘
+//!        │   ┌───────────┐   │   pump slice           │ shared LRU
+//!        │   │ Anytime   │   │  (budget-metered)      │
+//!        │   │ Replan    │◄──┼────────────────────────┘
+//!        │   └───────────┘   │   between steps
+//!        │   ┌───────────┐   │
+//!        │   │ CostTables│   │  tables keyed by (configs, boundaries),
+//!        │   │   (LRU)   │   │  shared by search, dispatch and training
+//!        │   └───────────┘   │
+//!        └───────────────────┘
 //! ```
 //!
-//! * `TaskManager` holds one session across events; each replan re-scores
-//!   the previous survivor set against the new expectation buckets and
-//!   seeds the streaming search's incumbent bound, so the visitor prunes
-//!   most candidate plans with cheap table lookups. Warm-started replans
-//!   are plan-identical (bit-identical `expected_step_time`) to a cold
-//!   `Planner::plan` — seeding only accelerates, never alters.
-//! * `Scheduler` draws its per-step cost tables from the same
-//!   [`crate::costmodel::CostTables`] LRU (share the handle via
-//!   `TaskManager::tables` / `Scheduler::with_tables`), so boundary
-//!   vectors revisited by the dynamic-bucketing DP reuse their tables.
-//! * Capped searches record a resume checkpoint;
-//!   `PlanningSession::extend_capped_search` continues strictly after it
-//!   instead of re-walking the enumeration prefix.
+//! * **Events never block.** `TaskManager::apply_event` mutates the task
+//!   set and *begins* an [`session::AnytimeReplan`] (superseding a stale
+//!   in-flight one). The current deployment keeps training.
+//! * **Budgeted anytime search.** The runtime pumps one enumeration slice
+//!   between training steps, charging the slice against the replan budget
+//!   (wall-clock in production, a deterministic per-plan sim clock in
+//!   tests). The search always holds a feasible best-so-far plan; on
+//!   budget exhaustion that plan deploys, on completion the result is
+//!   plan-identical — bit-identical `expected_step_time` — to a cold
+//!   `Planner::plan` (certified by `tests/session_replan.rs` and the
+//!   runtime's own identity checks).
+//! * **Step-boundary swaps, diff-charged.** Plans swap only between steps;
+//!   [`tasks::plan_adjustment`] diffs the `(ParallelConfig, count)` groups
+//!   and only changed replicas pay checkpoint+restart — a plan-identical
+//!   replan charges zero.
+//! * **Warm state persists across everything.** The session's survivor
+//!   memo warm-starts the next search; the [`crate::costmodel::CostTables`]
+//!   LRU serves the planner's tables, the scheduler's per-step tables and
+//!   the serving loop's post-swap tables from one cache.
+//!
+//! The blocking `TaskManager::handle` survives as the unlimited-budget
+//! composition (`apply_event` + one full-budget pump + `finish_replan`), so
+//! every pre-runtime caller sees identical plans through the inverted
+//! control flow.
 
 pub mod bucketing;
 pub mod dispatcher;
 pub mod planner;
+pub mod runtime;
 pub mod scheduler;
 pub mod session;
 pub mod tasks;

@@ -943,8 +943,10 @@ impl<'a> Planner<'a> {
     /// expectation batch plus `eval` sampled batches. This is the stateless
     /// (cold) entry point: it builds a fresh [`CostTable`] and runs the
     /// pipeline unseeded. [`crate::coordinator::session::PlanningSession`]
-    /// calls [`Self::plan_pipeline`] directly with a cached table and a
-    /// warm-start seed.
+    /// instead drives [`Self::search_top_k`] / [`Self::search_top_k_resume`]
+    /// through its resumable anytime API (begin/pump/finish) with a cached
+    /// table and a warm-start seed — run to completion, that path is
+    /// plan-identical to this one.
     pub fn plan_for_buckets_robust(
         &self,
         buckets: &Buckets,

@@ -1,0 +1,774 @@
+//! The event-driven **serving runtime**: training overlapped with
+//! budgeted, anytime replanning.
+//!
+//! The paper's multi-tenant story (§5.1) replans on every task arrival or
+//! exit. The blocking [`crate::coordinator::tasks::TaskManager::handle`]
+//! runs the full plan search inside the event — on large clusters that
+//! stalls every live tenant's training for the whole search. This runtime
+//! inverts the control flow:
+//!
+//! ```text
+//!   churn trace ──► TaskEvent ──► TaskManager::apply_event (non-blocking)
+//!                                          │ opens AnytimeReplan
+//!          ┌───────────────────────────────▼───────────────────────────┐
+//!          │  event loop (sim clock)                                   │
+//!          │    ┌── training step (SimTrainLoop, current plan) ──┐     │
+//!          │    │                                                │     │
+//!          │    └── pump one search slice (budget-metered) ◄─────┘     │
+//!          │            │ done / budget exhausted                      │
+//!          │            ▼                                              │
+//!          │    swap at step boundary: finish_replan →                 │
+//!          │    charge checkpoint+restart for CHANGED groups only      │
+//!          └───────────────────────────────────────────────────────────┘
+//! ```
+//!
+//! * Training keeps stepping under the **current** deployment while the
+//!   search runs: every live replica makes progress through a replan
+//!   window (no stop-the-world) — the [`ServeReport`] records the minimum
+//!   steps observed in any window as proof.
+//! * The replan spends its budget in **slices** between steps. With an
+//!   overlapping deployment the search time hides under training; with no
+//!   deployment (cold start) the slices are exposed on the serving clock.
+//! * Budget charging is pluggable ([`BudgetMeter`]): real wall-clock for
+//!   production, a deterministic per-enumerated-plan sim clock for tests
+//!   and benches.
+//! * On exhaustion the **best-so-far** plan deploys (always feasible); on
+//!   completion the plan is the certified cold-identical result, optionally
+//!   re-verified against a cold `Planner::plan`
+//!   ([`ServeOptions::certify_identity`]).
+//! * Tenant-observed metrics: time-to-admission, steps trained (incl.
+//!   during replan windows), and GPU-seconds lost to redeploys — charged
+//!   only for replica groups that actually changed.
+
+use std::time::Instant;
+
+use crate::cluster::ClusterSpec;
+use crate::config::{TaskSet, TaskSpec};
+use crate::coordinator::planner::{Planner, PlannerOptions};
+use crate::coordinator::tasks::{EventOutcome, ReplanOutcome, TaskEvent, TaskManager};
+use crate::costmodel::CostModel;
+use crate::exec::SimTrainLoop;
+
+/// How a replan slice's search work is charged against the budget.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum BudgetMeter {
+    /// Host wall-clock of each slice (production serving).
+    Wall,
+    /// Deterministic sim clock: `seconds × plans enumerated` per slice —
+    /// host-speed-independent, so tests and benches reproduce exactly.
+    SimPerPlan(f64),
+}
+
+/// Serving-runtime knobs.
+#[derive(Debug, Clone)]
+pub struct ServeOptions {
+    /// Replan budget in seconds per window; `None` = unlimited (the swap
+    /// waits for the full search, certified plan-identical to cold). A
+    /// superseding event re-targets the open window but does **not**
+    /// restart its budget clock, so sustained churn cannot push the swap
+    /// out indefinitely — the oldest waiting tenant is admitted (to the
+    /// best-so-far plan at worst) within one budget.
+    pub replan_budget: Option<f64>,
+    /// Enumeration budget per background slice (one slice runs between
+    /// consecutive training steps).
+    pub slice_plans: usize,
+    pub meter: BudgetMeter,
+    pub planner: PlannerOptions,
+    pub seed: u64,
+    /// Per-replica checkpoint+restart seconds charged on redeploy.
+    pub restart_seconds_per_replica: f64,
+    /// After a completed (not budget-exhausted) replan, re-verify the
+    /// deployed plan against a cold `Planner::plan` — expensive, used by
+    /// tests and the churn bench to certify anytime identity end to end.
+    pub certify_identity: bool,
+    /// Training steps to run after the last event settles (lets tenants
+    /// admitted by the final replan register progress).
+    pub tail_steps: u64,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        Self {
+            // paper §5.1: adjustments stay under 3 minutes
+            replan_budget: Some(180.0),
+            slice_plans: 4096,
+            meter: BudgetMeter::SimPerPlan(1e-4),
+            planner: PlannerOptions::default(),
+            seed: 7,
+            restart_seconds_per_replica: 15.0,
+            certify_identity: false,
+            tail_steps: 4,
+        }
+    }
+}
+
+/// One churn-trace record: at sim time `at`, a tenant arrives or exits.
+#[derive(Debug, Clone)]
+pub struct TraceEvent {
+    pub at: f64,
+    pub event: TaskEvent,
+}
+
+/// Per-tenant observed service metrics.
+#[derive(Debug, Clone)]
+pub struct TenantRecord {
+    pub name: String,
+    /// Sim time the arrival was requested (trace timestamp).
+    pub arrived_at: f64,
+    /// Sim time the tenant's task first trained under a deployed plan.
+    pub admitted_at: Option<f64>,
+    /// Sim time the exit was requested.
+    pub exited_at: Option<f64>,
+    /// Training steps this tenant's task participated in.
+    pub steps_trained: u64,
+}
+
+impl TenantRecord {
+    /// Seconds from arrival request to first training step coverage.
+    pub fn time_to_admission(&self) -> Option<f64> {
+        self.admitted_at.map(|t| t - self.arrived_at)
+    }
+}
+
+/// Aggregate outcome of a served churn trace.
+#[derive(Debug, Clone, Default)]
+pub struct ServeReport {
+    pub tenants: Vec<TenantRecord>,
+    pub sim_seconds: f64,
+    pub steps_total: u64,
+    /// Steps executed while a replan window was open (overlap proof).
+    pub steps_during_replan: u64,
+    /// Replan windows opened — one per plan-changing event (a superseding
+    /// event re-targets the open window and counts again).
+    pub replan_windows: u32,
+    /// Minimum training steps observed in any replan window that had a
+    /// live deployment to overlap (`None`: no such window occurred).
+    pub min_steps_in_replan_window: Option<u64>,
+    pub redeploys: u32,
+    /// Swaps whose plan was identical (charged zero adjustment).
+    pub plan_swaps_identical: u32,
+    /// Windows closed by budget exhaustion (best-so-far plan deployed).
+    pub budget_exhausted: u32,
+    pub rejected_arrivals: u32,
+    pub gpu_seconds_trained: f64,
+    /// GPU-seconds idled by redeploys (changed replica groups only).
+    pub gpu_seconds_lost_redeploy: f64,
+    /// Completed replans re-verified against a cold plan / mismatches.
+    pub identity_checks: u32,
+    pub identity_failures: u32,
+}
+
+impl ServeReport {
+    /// Mean time-to-admission over admitted tenants.
+    pub fn mean_time_to_admission(&self) -> Option<f64> {
+        let ttas: Vec<f64> =
+            self.tenants.iter().filter_map(TenantRecord::time_to_admission).collect();
+        if ttas.is_empty() {
+            return None;
+        }
+        Some(ttas.iter().sum::<f64>() / ttas.len() as f64)
+    }
+}
+
+/// Budget bookkeeping of one open replan window.
+#[derive(Debug)]
+struct ReplanWindow {
+    budget_left: Option<f64>,
+    steps_in_window: u64,
+    /// A deployment existed to overlap the search with.
+    had_deployment: bool,
+}
+
+/// The serving runtime: owns the non-blocking [`TaskManager`], the
+/// swappable training loop and the sim clock, and replays a churn trace.
+pub struct ServeRuntime<'a> {
+    cost: &'a CostModel,
+    cluster: &'a ClusterSpec,
+    mgr: TaskManager<'a>,
+    train: Option<SimTrainLoop<'a>>,
+    /// Deployed-task index → tenant index, rebuilt at each swap.
+    deployed_tenants: Vec<usize>,
+    opts: ServeOptions,
+    now: f64,
+    window: Option<ReplanWindow>,
+    epoch: u64,
+    tenants: Vec<TenantRecord>,
+    report: ServeReport,
+}
+
+impl<'a> ServeRuntime<'a> {
+    pub fn new(cost: &'a CostModel, cluster: &'a ClusterSpec, opts: ServeOptions) -> Self {
+        let mut mgr =
+            TaskManager::new(cost, cluster, TaskSet::default(), opts.planner.clone());
+        mgr.restart_seconds_per_replica = opts.restart_seconds_per_replica;
+        Self {
+            cost,
+            cluster,
+            mgr,
+            train: None,
+            deployed_tenants: Vec::new(),
+            opts,
+            now: 0.0,
+            window: None,
+            epoch: 0,
+            tenants: Vec::new(),
+            report: ServeReport::default(),
+        }
+    }
+
+    /// The task manager (plan, session and accounting counters).
+    pub fn manager(&self) -> &TaskManager<'a> {
+        &self.mgr
+    }
+
+    /// Current sim time, seconds.
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    /// Replay a churn trace to completion and report tenant-observed
+    /// metrics. Events are delivered in timestamp order at step
+    /// granularity; each delivery opens (or re-targets) a replan window
+    /// that is pumped between training steps until it completes or its
+    /// budget runs out, and the plan swaps at the next step boundary.
+    pub fn run_trace(&mut self, trace: &[TraceEvent]) -> ServeReport {
+        let mut events: Vec<TraceEvent> = trace.to_vec();
+        events.sort_by(|a, b| a.at.total_cmp(&b.at));
+        let mut idx = 0usize;
+        // hard iteration guard: the loop always either advances the sim
+        // clock, consumes an event, or closes a window — this bound only
+        // trips on a logic bug, keeping CI from hanging
+        let mut guard = 0u64;
+        let max_ticks = 10_000_000u64;
+        loop {
+            guard += 1;
+            if guard > max_ticks {
+                debug_assert!(false, "serve runtime exceeded its tick guard");
+                break;
+            }
+            // 1. deliver every event that is due
+            while idx < events.len() && events[idx].at <= self.now {
+                self.deliver(&events[idx]);
+                idx += 1;
+            }
+            // 2. an open replan window: overlap one step with one slice
+            if self.window.is_some() {
+                self.replan_tick();
+                continue;
+            }
+            // 3. steady state: train toward the next event, or finish
+            if idx < events.len() {
+                let next_at = events[idx].at;
+                if self.train.is_some() {
+                    if !self.train_step(false) {
+                        // deployment cannot serve its batch — skip ahead
+                        self.now = next_at;
+                    }
+                } else {
+                    // idle serving process: jump to the next arrival
+                    self.now = next_at;
+                }
+                continue;
+            }
+            break;
+        }
+        // tail: let tenants admitted by the last swap register progress
+        for _ in 0..self.opts.tail_steps {
+            if self.train.is_none() || !self.train_step(false) {
+                break;
+            }
+        }
+        self.report.sim_seconds = self.now;
+        self.report.tenants = self.tenants.clone();
+        self.report.clone()
+    }
+
+    /// Deliver one trace event: update tenant records, apply it to the
+    /// task manager, and open / re-target the replan window.
+    fn deliver(&mut self, ev: &TraceEvent) {
+        let name = match &ev.event {
+            TaskEvent::Arrive(spec) => spec.name.clone(),
+            TaskEvent::Exit { name } => name.clone(),
+        };
+        let arriving = matches!(&ev.event, TaskEvent::Arrive(_));
+        match self.mgr.apply_event(ev.event.clone()) {
+            EventOutcome::Rejected => {
+                self.report.rejected_arrivals += 1;
+            }
+            EventOutcome::Unchanged => {}
+            EventOutcome::Drained => {
+                // no tasks left: the deployment tears down immediately
+                self.window = None;
+                self.train = None;
+                self.deployed_tenants.clear();
+                if let Some(t) = self
+                    .tenants
+                    .iter_mut()
+                    .rev()
+                    .find(|t| t.name == name && t.exited_at.is_none())
+                {
+                    t.exited_at = Some(ev.at);
+                }
+            }
+            EventOutcome::Planning => {
+                if arriving {
+                    self.tenants.push(TenantRecord {
+                        name,
+                        arrived_at: ev.at,
+                        admitted_at: None,
+                        exited_at: None,
+                        steps_trained: 0,
+                    });
+                } else if let Some(t) = self
+                    .tenants
+                    .iter_mut()
+                    .rev()
+                    .find(|t| t.name == name && t.exited_at.is_none())
+                {
+                    t.exited_at = Some(ev.at);
+                }
+                // open (or re-target) the window. A superseding event
+                // KEEPS the open window's remaining budget — resetting it
+                // would let sustained churn defer every swap indefinitely;
+                // carrying it bounds the oldest waiting tenant's admission
+                // by one budget, after which the best-so-far plan deploys.
+                let (steps_so_far, budget_left) = match self.window.take() {
+                    Some(w) => (w.steps_in_window, w.budget_left),
+                    None => (0, self.opts.replan_budget),
+                };
+                self.report.replan_windows += 1;
+                self.window = Some(ReplanWindow {
+                    budget_left,
+                    steps_in_window: steps_so_far,
+                    had_deployment: self.train.is_some(),
+                });
+            }
+        }
+    }
+
+    /// One tick of an open replan window: a training step under the
+    /// current plan (the overlap), then one budget-metered search slice;
+    /// when the search completes or the budget runs out, swap at this
+    /// step boundary.
+    fn replan_tick(&mut self) {
+        let stepped = self.train.is_some() && self.train_step(true);
+        let t0 = Instant::now();
+        let slice = self.mgr.pump_replan(self.opts.slice_plans);
+        let wall = t0.elapsed().as_secs_f64();
+        let (done, enumerated) = match slice {
+            Some(s) => (s.done, s.n_enumerated),
+            // no search to pump (infeasible context): adopt immediately
+            None => (true, 0),
+        };
+        let charge = match self.opts.meter {
+            BudgetMeter::Wall => wall,
+            BudgetMeter::SimPerPlan(per_plan) => per_plan * enumerated as f64,
+        };
+        if !stepped {
+            // nothing overlapped the search: its cost is exposed on the
+            // serving clock (cold starts pay for planning, live tenants
+            // hide it under training)
+            self.now += charge;
+        }
+        let exhausted = {
+            let w = self.window.as_mut().expect("replan_tick without window");
+            match &mut w.budget_left {
+                None => false,
+                Some(left) => {
+                    *left -= charge;
+                    *left <= 0.0
+                }
+            }
+        };
+        if done || exhausted {
+            if exhausted && !done {
+                self.report.budget_exhausted += 1;
+            }
+            self.swap(done);
+        }
+    }
+
+    /// Adopt the replan at a step boundary and redeploy the training loop,
+    /// charging checkpoint+restart only for changed replica groups.
+    fn swap(&mut self, completed: bool) {
+        let tasks_for_certify = self.mgr.tasks().clone();
+        let outcome = self.mgr.finish_replan();
+        if let Some(w) = self.window.take() {
+            if w.had_deployment {
+                self.report.min_steps_in_replan_window = Some(
+                    self.report
+                        .min_steps_in_replan_window
+                        .map_or(w.steps_in_window, |m| m.min(w.steps_in_window)),
+                );
+            }
+        }
+        match outcome {
+            ReplanOutcome::Unchanged => {
+                self.report.plan_swaps_identical += 1;
+            }
+            ReplanOutcome::Redeployed { adjustment_seconds, adjustment } => {
+                self.report.redeploys += 1;
+                self.report.gpu_seconds_lost_redeploy +=
+                    adjustment.gpu_seconds(self.opts.restart_seconds_per_replica);
+                // checkpoint+restore serializes through the coordinator;
+                // training is stalled for the adjustment
+                self.now += adjustment_seconds;
+            }
+            ReplanOutcome::Drained | ReplanOutcome::Rejected => {}
+        }
+        // certify anytime identity on completed searches, before the new
+        // loop starts ticking
+        if completed && self.opts.certify_identity {
+            if let Some(deployed) = self.mgr.plan() {
+                self.report.identity_checks += 1;
+                let cold = Planner::new(self.cost, self.cluster)
+                    .plan(&tasks_for_certify, self.opts.planner.clone());
+                let identical = cold.as_ref().is_some_and(|c| {
+                    c.groups == deployed.groups
+                        && c.expected_step_time.to_bits()
+                            == deployed.expected_step_time.to_bits()
+                });
+                if !identical {
+                    self.report.identity_failures += 1;
+                }
+            }
+        }
+        self.redeploy_training();
+    }
+
+    /// Rebuild the training loop for the (possibly new) plan and task set
+    /// and admit newly deployed tenants.
+    fn redeploy_training(&mut self) {
+        self.epoch += 1;
+        self.deployed_tenants.clear();
+        match self.mgr.plan() {
+            Some(plan) => {
+                let tasks = self.mgr.tasks().clone();
+                for spec in &tasks.tasks {
+                    if let Some(i) = self
+                        .tenants
+                        .iter()
+                        .rposition(|t| t.name == spec.name && t.exited_at.is_none())
+                    {
+                        if self.tenants[i].admitted_at.is_none() {
+                            self.tenants[i].admitted_at = Some(self.now);
+                        }
+                        self.deployed_tenants.push(i);
+                    } else {
+                        // keep index parity with the task set even for
+                        // tasks without a record (shouldn't happen)
+                        self.deployed_tenants.push(usize::MAX);
+                    }
+                }
+                let seed = self.opts.seed ^ self.epoch.wrapping_mul(0x9E37_79B9);
+                match &mut self.train {
+                    Some(tl) => tl.swap(plan.clone(), tasks, seed),
+                    None => {
+                        self.train = Some(SimTrainLoop::new(
+                            self.cost,
+                            plan.clone(),
+                            tasks,
+                            seed,
+                            self.mgr.tables(),
+                        ))
+                    }
+                }
+            }
+            None => {
+                self.train = None;
+            }
+        }
+    }
+
+    /// Execute one training step under the current deployment, advancing
+    /// the sim clock and tenant progress. Returns false when no step ran.
+    fn train_step(&mut self, in_window: bool) -> bool {
+        let Some(tl) = self.train.as_mut() else {
+            return false;
+        };
+        let Some(step) = tl.step() else {
+            return false;
+        };
+        self.now += step.step_time;
+        self.report.steps_total += 1;
+        self.report.gpu_seconds_trained += step.gpu_seconds;
+        if in_window {
+            self.report.steps_during_replan += 1;
+            if let Some(w) = &mut self.window {
+                w.steps_in_window += 1;
+            }
+        }
+        for &ti in &self.deployed_tenants {
+            if ti != usize::MAX {
+                self.tenants[ti].steps_trained += 1;
+            }
+        }
+        true
+    }
+}
+
+/// A ready-made churn trace over a task pool: arrivals staggered
+/// `spacing` seconds apart, then the two oldest tenants exit and the first
+/// returns — exercising admission, partial redeploys and a re-arrival. The
+/// default scenario behind `lobra serve` (without `--trace`) and the churn
+/// bench.
+pub fn default_churn_trace(pool: &TaskSet, spacing: f64) -> Vec<TraceEvent> {
+    let mut trace = Vec::new();
+    for (i, t) in pool.tasks.iter().enumerate() {
+        trace.push(TraceEvent {
+            at: i as f64 * spacing,
+            event: TaskEvent::Arrive(t.clone()),
+        });
+    }
+    let n = pool.tasks.len();
+    if n >= 2 {
+        trace.push(TraceEvent {
+            at: n as f64 * spacing,
+            event: TaskEvent::Exit { name: pool.tasks[0].name.clone() },
+        });
+        trace.push(TraceEvent {
+            at: (n + 1) as f64 * spacing,
+            event: TaskEvent::Exit { name: pool.tasks[1].name.clone() },
+        });
+        trace.push(TraceEvent {
+            at: (n + 2) as f64 * spacing,
+            event: TaskEvent::Arrive(pool.tasks[0].clone()),
+        });
+    }
+    trace
+}
+
+/// Convenience: build a runtime, replay `trace`, return the report.
+pub fn serve_trace(
+    cost: &CostModel,
+    cluster: &ClusterSpec,
+    trace: &[TraceEvent],
+    opts: ServeOptions,
+) -> ServeReport {
+    ServeRuntime::new(cost, cluster, opts).run_trace(trace)
+}
+
+/// Parse a churn-trace file. Line format (whitespace-separated, `#`
+/// comments):
+///
+/// ```text
+/// # at    op      name      batch  mean    skew  min  max
+/// 0       arrive  qa-short  128    210.0   6.0   16   2048
+/// 1800    exit    qa-short
+/// ```
+pub fn parse_trace(text: &str) -> Result<Vec<TraceEvent>, String> {
+    use crate::data::LengthDistribution;
+    let mut out = Vec::new();
+    for (ln, line) in text.lines().enumerate() {
+        let line = line.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let fields: Vec<&str> = line.split_whitespace().collect();
+        let err = |what: &str| format!("trace line {}: {what}: {line}", ln + 1);
+        if fields.len() < 3 {
+            return Err(err("expected at least `at op name`"));
+        }
+        // reject non-finite timestamps ("nan"/"inf" parse as f64!) — a NaN
+        // event time would never satisfy `at <= now` and wedge the loop
+        let at: f64 = fields[0]
+            .parse()
+            .ok()
+            .filter(|t: &f64| t.is_finite())
+            .ok_or_else(|| err("bad timestamp"))?;
+        let name = fields[2].to_string();
+        let event = match fields[1] {
+            "exit" => {
+                if fields.len() != 3 {
+                    // stray columns usually mean an arrive-shaped line
+                    // with the wrong op — fail loudly, don't run a
+                    // materially different scenario
+                    return Err(err("exit takes exactly `at exit name`"));
+                }
+                TaskEvent::Exit { name }
+            }
+            "arrive" => {
+                if fields.len() != 8 {
+                    return Err(err(
+                        "arrive needs `at arrive name batch mean skew min max`",
+                    ));
+                }
+                let batch: u32 = fields[3].parse().map_err(|_| err("bad batch"))?;
+                let mean: f64 = fields[4].parse().map_err(|_| err("bad mean"))?;
+                let skew: f64 = fields[5].parse().map_err(|_| err("bad skew"))?;
+                let min: u32 = fields[6].parse().map_err(|_| err("bad min len"))?;
+                let max: u32 = fields[7].parse().map_err(|_| err("bad max len"))?;
+                TaskEvent::Arrive(TaskSpec::new(
+                    &name,
+                    batch,
+                    LengthDistribution::fit(mean, skew, min, max),
+                ))
+            }
+            other => return Err(err(&format!("unknown op `{other}`"))),
+        };
+        out.push(TraceEvent { at, event });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelDesc;
+    use crate::data::LengthDistribution;
+
+    fn world() -> (CostModel, ClusterSpec) {
+        let cluster = ClusterSpec::a100_40g(16);
+        let cost = CostModel::calibrated(&ModelDesc::llama2_7b(), &cluster);
+        (cost, cluster)
+    }
+
+    fn fast_opts() -> ServeOptions {
+        let mut planner = PlannerOptions::default();
+        planner.calibration_multiple = 20;
+        planner.eval_batches = 1;
+        planner.max_evaluated = 200;
+        ServeOptions {
+            replan_budget: None,
+            slice_plans: 16,
+            meter: BudgetMeter::SimPerPlan(1e-3),
+            planner,
+            seed: 7,
+            restart_seconds_per_replica: 15.0,
+            certify_identity: true,
+            tail_steps: 3,
+        }
+    }
+
+    fn pool() -> TaskSet {
+        TaskSet::new(vec![
+            TaskSpec::new("qa", 128, LengthDistribution::fit(210.0, 6.0, 16, 2048)),
+            TaskSpec::new("code", 64, LengthDistribution::fit(700.0, 6.5, 16, 8192)),
+            TaskSpec::new("sum", 32, LengthDistribution::fit(3600.0, 4.3, 16, 16384)),
+        ])
+    }
+
+    #[test]
+    fn serve_overlaps_training_with_replanning() {
+        let (cost, cluster) = world();
+        let trace = default_churn_trace(&pool(), 400.0);
+        let report = serve_trace(&cost, &cluster, &trace, fast_opts());
+        // every tenant was admitted, with sane time-to-admission
+        assert_eq!(report.tenants.len(), 4, "{:#?}", report.tenants);
+        for t in &report.tenants {
+            assert!(t.admitted_at.is_some(), "tenant {} never admitted", t.name);
+            assert!(t.time_to_admission().unwrap() >= 0.0);
+            assert!(t.steps_trained > 0, "tenant {} made no progress", t.name);
+        }
+        // the acceptance bar: windows with a live deployment never
+        // stop the world — every one saw at least one training step
+        assert!(report.replan_windows >= 5, "{report:#?}");
+        let min_steps = report
+            .min_steps_in_replan_window
+            .expect("no replan window overlapped a live deployment");
+        assert!(min_steps >= 1, "a replan window stalled training: {report:#?}");
+        assert!(report.steps_during_replan >= 1);
+        // unlimited budget: every completed replan certified cold-identical
+        assert!(report.identity_checks > 0);
+        assert_eq!(report.identity_failures, 0, "anytime != cold: {report:#?}");
+        assert_eq!(report.budget_exhausted, 0);
+        assert!(report.gpu_seconds_trained > 0.0);
+        assert!(report.sim_seconds > 0.0);
+    }
+
+    #[test]
+    fn exhausted_budget_deploys_best_so_far() {
+        let (cost, cluster) = world();
+        let mut opts = fast_opts();
+        // a budget so small the very first slice exhausts it
+        opts.replan_budget = Some(1e-9);
+        opts.slice_plans = 4;
+        opts.certify_identity = false;
+        let trace = default_churn_trace(&pool(), 400.0);
+        let report = serve_trace(&cost, &cluster, &trace, opts);
+        assert!(report.budget_exhausted > 0, "{report:#?}");
+        // best-so-far plans are still feasible: tenants admitted + trained
+        for t in &report.tenants {
+            assert!(t.admitted_at.is_some(), "tenant {} never admitted", t.name);
+        }
+        assert!(report.steps_total > 0);
+    }
+
+    #[test]
+    fn unknown_exit_opens_no_replan_window() {
+        let (cost, cluster) = world();
+        let mut opts = fast_opts();
+        opts.certify_identity = false;
+        // two tenants with identical length profiles: admitting the second
+        // then draining it back leaves the plan unchanged on the re-plan
+        let a = TaskSpec::new("a", 64, LengthDistribution::fit(210.0, 6.0, 16, 2048));
+        let trace = vec![
+            TraceEvent { at: 0.0, event: TaskEvent::Arrive(a) },
+            TraceEvent {
+                at: 200.0,
+                event: TaskEvent::Exit { name: "never-there".into() },
+            },
+        ];
+        let report = serve_trace(&cost, &cluster, &trace, opts);
+        // the unknown exit changed nothing: one window (the arrival), one
+        // redeploy (the cold deploy), and only that deploy charged GPU loss
+        assert_eq!(report.replan_windows, 1, "{report:#?}");
+        assert_eq!(report.redeploys, 1, "only the initial deploy pays");
+        assert!(report.gpu_seconds_lost_redeploy > 0.0);
+        assert_eq!(report.plan_swaps_identical, 0);
+    }
+
+    #[test]
+    fn drain_tears_down_and_rearrival_redeploys() {
+        let (cost, cluster) = world();
+        let mut opts = fast_opts();
+        opts.certify_identity = false;
+        let a = TaskSpec::new("solo", 64, LengthDistribution::fit(250.0, 3.0, 16, 2048));
+        let trace = vec![
+            TraceEvent { at: 0.0, event: TaskEvent::Arrive(a.clone()) },
+            TraceEvent { at: 300.0, event: TaskEvent::Exit { name: "solo".into() } },
+            TraceEvent { at: 600.0, event: TaskEvent::Arrive(a) },
+        ];
+        let report = serve_trace(&cost, &cluster, &trace, opts);
+        // two tenant lifetimes for the same name
+        assert_eq!(report.tenants.len(), 2);
+        assert!(report.tenants[0].exited_at.is_some());
+        assert!(report.tenants[1].exited_at.is_none());
+        assert!(report.tenants[1].admitted_at.unwrap() >= 600.0);
+        assert_eq!(report.redeploys, 2, "cold deploy + re-arrival deploy");
+    }
+
+    #[test]
+    fn trace_parser_round_trips() {
+        let text = "\
+# at  op      name  batch mean  skew min max
+0     arrive  qa    128   210.0 6.0  16  2048
+120.5 arrive  sum   32    3600  4.3  16  16384   # inline comment
+900   exit    qa
+";
+        let trace = parse_trace(text).unwrap();
+        assert_eq!(trace.len(), 3);
+        assert!(matches!(&trace[0].event, TaskEvent::Arrive(s) if s.name == "qa"));
+        assert!((trace[1].at - 120.5).abs() < 1e-9);
+        assert!(matches!(&trace[2].event, TaskEvent::Exit { name } if name == "qa"));
+        assert!(parse_trace("0 arrive broken 1 2").is_err());
+        assert!(parse_trace("x arrive a 1 2 3 4 5").is_err());
+        assert!(parse_trace("nan arrive a 1 2 3 4 5").is_err(), "non-finite at");
+        assert!(parse_trace("inf exit a").is_err());
+        assert!(parse_trace("0 exit a 128 210.0 6.0 16 2048").is_err(), "stray columns");
+        assert!(parse_trace("0 vanish a").is_err());
+        assert!(parse_trace("# only comments\n\n").unwrap().is_empty());
+    }
+
+    #[test]
+    fn default_trace_shape() {
+        let trace = default_churn_trace(&pool(), 100.0);
+        assert_eq!(trace.len(), 3 + 3);
+        assert!(matches!(&trace[3].event, TaskEvent::Exit { name } if name == "qa"));
+        assert!(matches!(&trace[5].event, TaskEvent::Arrive(s) if s.name == "qa"));
+        // timestamps are sorted
+        for w in trace.windows(2) {
+            assert!(w[0].at <= w[1].at);
+        }
+    }
+}

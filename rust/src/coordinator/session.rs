@@ -30,6 +30,13 @@
 //!   [`crate::solver::partition::visit_plans_after`]) instead of
 //!   re-walking the prefix, so the adjustment budget can be spent
 //!   incrementally.
+//! * the **anytime search** ([`AnytimeReplan`]): the same resumability,
+//!   inverted into a begin/pump/finish API so a serving runtime can spend
+//!   a wall-clock replan budget in slices *between training steps* — the
+//!   search always holds a feasible best-so-far plan, and a fully-pumped
+//!   search is plan-identical to a cold `Planner::plan`. The blocking
+//!   [`PlanningSession::plan`] is now literally the unlimited-budget
+//!   anytime path (one slice of the whole `max_plans` budget).
 //!
 //! The candidate-config set is recomputed every replan (it depends on the
 //! bucket boundaries); warm-starting applies only when it matches the
@@ -37,6 +44,7 @@
 //! would index different configurations and the session falls back to a
 //! cold search.
 
+use std::sync::Arc;
 use std::time::Instant;
 
 use crate::config::{ParallelConfig, TaskSet};
@@ -46,7 +54,7 @@ use crate::coordinator::planner::{
     PlannerOptions, PlanningStats, SearchCarry,
 };
 use crate::costmodel::{cost_fingerprint, fnv1a, CostTable, CostTables};
-use crate::solver::partition::Plan;
+use crate::solver::partition::{Plan, PlanCursor};
 
 /// Counters of how the session's replans were served.
 #[derive(Debug, Clone, Default)]
@@ -108,6 +116,106 @@ fn task_fingerprint(tasks: &TaskSet) -> u64 {
     h
 }
 
+/// Merge already-held survivors with a resumed slice's candidates under
+/// the combined `cutoff`, truncating to the best-bound `k` (stable sort,
+/// so equal bounds keep DFS order) only when the merged set exceeds it —
+/// the exact rank-truncation a single search applies. Prefix candidates
+/// must come first (they precede the checkpoint in DFS order). One shared
+/// implementation for [`PlanningSession::pump_anytime`] and
+/// [`PlanningSession::extend_capped_search`]: the plan-identity rules
+/// live in one place.
+fn merge_survivors(
+    prefix: Vec<(Plan, f64)>,
+    extension: Vec<(Plan, f64)>,
+    cutoff: f64,
+    k: usize,
+) -> Vec<(Plan, f64)> {
+    let mut merged: Vec<(Plan, f64)> = prefix
+        .into_iter()
+        .filter(|(_, lb)| *lb <= cutoff)
+        .chain(extension.into_iter().filter(|(_, lb)| *lb <= cutoff))
+        .collect();
+    if merged.len() > k {
+        merged.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+        merged.truncate(k);
+    }
+    merged
+}
+
+/// A resumable **anytime** replan: the planning context (buckets,
+/// robustness batches, candidate configs, cost table, warm-start seed) is
+/// frozen by [`PlanningSession::begin_anytime`], after which the
+/// enumeration budget is spent slice by slice
+/// ([`PlanningSession::pump_anytime`]) while the search always holds a
+/// merged best-so-far survivor set — [`PlanningSession::anytime_best`]
+/// yields a valid feasible deployment at *any* point, and
+/// [`PlanningSession::finish_anytime`] adopts the result. A fully-pumped
+/// search is plan-identical to a cold blocking `Planner::plan`; a
+/// budget-exhausted one memoizes its resume checkpoint like a capped
+/// search. This is the mechanism behind the serving runtime's overlapped
+/// replanning ([`crate::coordinator::runtime`]) and the ROADMAP's
+/// "adaptive replan budgeting" item.
+#[derive(Debug)]
+pub struct AnytimeReplan {
+    /// Task-set fingerprint the context was frozen for.
+    fingerprint: u64,
+    cost_fp: u64,
+    buckets: Buckets,
+    eval: Vec<Buckets>,
+    configs: Vec<ParallelConfig>,
+    table: Arc<CostTable>,
+    n_tasks: u32,
+    /// Warm-start seed for the first slice (re-scored previous survivors).
+    seed: Option<f64>,
+    /// Enumeration position between slices.
+    cursor: PlanCursor,
+    /// Merged best-so-far survivors (≤ `max_evaluated` after truncation).
+    candidates: Vec<(Plan, f64)>,
+    best_bound: f64,
+    seeded: bool,
+    hit_cap: bool,
+    n_enumerated: usize,
+    n_survivors: usize,
+    peak_storage: usize,
+    slices: u32,
+    /// Host wall-clock spent across begin + every pumped slice.
+    spent_seconds: f64,
+}
+
+impl AnytimeReplan {
+    /// Whether the enumeration has been fully walked (further pumping is a
+    /// no-op; the finished plan is certified cold-identical).
+    pub fn enumeration_done(&self) -> bool {
+        self.cursor.is_exhausted()
+    }
+
+    /// Plans enumerated so far, across all slices.
+    pub fn n_enumerated(&self) -> usize {
+        self.n_enumerated
+    }
+
+    /// Slices pumped so far.
+    pub fn slices(&self) -> u32 {
+        self.slices
+    }
+
+    /// Host wall-clock spent in begin + slices so far.
+    pub fn spent_seconds(&self) -> f64 {
+        self.spent_seconds
+    }
+}
+
+/// What one [`PlanningSession::pump_anytime`] slice did.
+#[derive(Debug, Clone, Copy)]
+pub struct SliceReport {
+    /// Plans enumerated by this slice.
+    pub n_enumerated: usize,
+    /// Host wall-clock of this slice.
+    pub wall_seconds: f64,
+    /// The enumeration is complete (no further slices needed).
+    pub done: bool,
+}
+
 /// A long-lived planning session. Construct once per (cost model, cluster)
 /// pair and feed it every replan of that world; feeding it planners built
 /// over a *different* world invalidates the warm-start reasoning (the memo
@@ -158,13 +266,42 @@ impl PlanningSession {
     /// groups, bit-identical `expected_step_time`), but the search is
     /// seeded from the previous survivor set when the candidate-config set
     /// still matches, and the cost table comes from the shared LRU.
+    ///
+    /// Since the anytime refactor this is a thin wrapper over the resumable
+    /// search: [`Self::begin_anytime`] freezes the planning context, one
+    /// [`Self::pump_anytime`] slice of the full `max_plans` budget runs the
+    /// search (parallel and seeded, exactly as before), and
+    /// [`Self::finish_anytime`] evaluates and memoizes. The blocking path
+    /// is literally the unlimited-budget anytime path — bit-identical
+    /// results, inverted control flow.
     pub fn plan_with_stats(
         &mut self,
         planner: &Planner,
         tasks: &TaskSet,
     ) -> Option<(DeploymentPlan, PlanningStats)> {
+        let budget = self.opts.max_plans;
+        let mut search = self.begin_anytime(planner, tasks)?;
+        self.pump_anytime(planner, &mut search, budget);
+        self.finish_anytime(planner, search)
+    }
+
+    /// Freeze the planning context for a resumable **anytime** replan:
+    /// expectation buckets, robustness batches, candidate configurations,
+    /// the shared-LRU cost table and the warm-start seed are computed
+    /// exactly as the blocking path would, but no enumeration runs yet.
+    /// Spend the search budget with [`Self::pump_anytime`] and adopt the
+    /// result with [`Self::finish_anytime`] (which is valid — feasible
+    /// best-so-far — after *any* number of slices, including zero).
+    ///
+    /// Returns `None` (clearing the memo) when no plan can exist: empty
+    /// task set, no candidate configurations, or no candidate supports the
+    /// longest bucket.
+    pub fn begin_anytime(
+        &mut self,
+        planner: &Planner,
+        tasks: &TaskSet,
+    ) -> Option<AnytimeReplan> {
         let start = Instant::now();
-        let mut stats = PlanningStats::default();
         if tasks.is_empty() {
             self.memo = None;
             return None;
@@ -179,8 +316,8 @@ impl PlanningSession {
         let opts = self.opts.clone();
 
         // 1. calibration sample → expectation buckets + robustness batches
-        // (the exact code path of the stateless planner, so warm and cold
-        // replans see the same batches).
+        // (the exact code path of the stateless planner, so anytime and
+        // cold replans see the same batches).
         let (mut sampler, buckets) = expectation_buckets(tasks, &opts);
         let eval =
             robustness_batches(&mut sampler, &buckets.boundaries, opts.eval_batches);
@@ -205,35 +342,223 @@ impl PlanningSession {
             return None;
         }
 
-        // 3. cost table from the shared LRU (bit-identical to a fresh build).
+        // 3. cost table from the shared LRU (bit-identical to a fresh
+        // build). Exactly one fetch per begun replan, preserving the
+        // "one table fetch per replan" accounting invariant.
         let table = self.tables.get_or_build(planner.cost(), &configs, &buckets.boundaries);
 
-        // 4. seed the incumbent from the previous survivors, if compatible.
+        // 4. seed for the search incumbent from the previous survivors.
         let seed = self.seed_bound(planner, &table, &buckets, &configs);
 
-        let out = planner.plan_pipeline(
-            &buckets,
-            &eval,
-            tasks.len() as u32,
-            &opts,
-            &mut stats,
-            start,
-            &table,
-            &configs,
+        Some(AnytimeReplan {
+            fingerprint: task_fingerprint(tasks),
+            cost_fp,
+            buckets,
+            eval,
+            configs,
+            table,
+            n_tasks: tasks.len() as u32,
             seed,
+            cursor: PlanCursor::new(),
+            candidates: Vec::new(),
+            best_bound: f64::INFINITY,
+            seeded: false,
+            hit_cap: false,
+            n_enumerated: 0,
+            n_survivors: 0,
+            peak_storage: 0,
+            slices: 0,
+            spent_seconds: start.elapsed().as_secs_f64(),
+        })
+    }
+
+    /// Spend one enumeration slice of up to `slice_plans` plans on a
+    /// resumable replan. The first slice runs the (parallel, warm-seeded)
+    /// streaming search capped at the slice budget; later slices resume
+    /// strictly after the recorded checkpoint and merge their survivors
+    /// under the combined cutoff, exactly like
+    /// [`Self::extend_capped_search`] — so the fully-pumped search is
+    /// plan-identical to a single uncapped one. A slice that trips its cap
+    /// leaves the cursor resumable; a slice that completes the enumeration
+    /// marks the search done.
+    pub fn pump_anytime(
+        &self,
+        planner: &Planner,
+        search: &mut AnytimeReplan,
+        slice_plans: usize,
+    ) -> SliceReport {
+        if search.cursor.is_exhausted() || slice_plans == 0 {
+            return SliceReport {
+                n_enumerated: 0,
+                wall_seconds: 0.0,
+                done: search.cursor.is_exhausted(),
+            };
+        }
+        let start = Instant::now();
+        let mut opts = self.opts.clone();
+        opts.max_plans = slice_plans;
+
+        if !opts.lower_bound_filter {
+            // The "no filter" ablation has no bounds to merge across
+            // slices: run it as one capped slice, like the blocking path.
+            let found = planner.filtered_plans(&search.configs, &search.table, &search.buckets, &opts);
+            search.n_enumerated += found.n_enumerated;
+            search.n_survivors = found.survivors.len();
+            search.peak_storage = search.peak_storage.max(found.peak_storage);
+            search.hit_cap = found.hit_cap;
+            search.candidates = found.survivors;
+            search.seeded = false;
+            search.cursor.finish();
+            search.slices += 1;
+            let wall = start.elapsed().as_secs_f64();
+            search.spent_seconds += wall;
+            return SliceReport {
+                n_enumerated: search.n_enumerated,
+                wall_seconds: wall,
+                done: true,
+            };
+        }
+
+        let first = search.slices == 0;
+        let ext = match search.cursor.checkpoint() {
+            None => planner.search_top_k(
+                &search.configs,
+                &search.table,
+                &search.buckets,
+                &opts,
+                search.seed,
+            ),
+            Some(after) => {
+                let seed =
+                    Some(search.best_bound).filter(|b| b.is_finite() && *b > 0.0);
+                planner.search_top_k_resume(
+                    &search.configs,
+                    &search.table,
+                    &search.buckets,
+                    &opts,
+                    seed,
+                    after,
+                    slice_plans,
+                )
+            }
+        };
+
+        let threshold = 1.0 + self.opts.lower_bound_threshold;
+        let best = search.best_bound.min(ext.best_bound);
+        let cutoff = best * threshold;
+        let k = self.opts.max_evaluated.max(1);
+        if first {
+            search.candidates = ext.candidates;
+            search.n_survivors = ext.n_survivors;
+            search.seeded = ext.seeded;
+        } else {
+            let merged = merge_survivors(
+                std::mem::take(&mut search.candidates),
+                ext.candidates,
+                cutoff,
+                k,
+            );
+            search.n_survivors = merged.len();
+            search.candidates = merged;
+        }
+        search.best_bound = best;
+        search.n_enumerated += ext.n_enumerated;
+        search.peak_storage = search.peak_storage.max(ext.peak_storage);
+        search.hit_cap = ext.hit_cap;
+        match (ext.hit_cap, ext.resume) {
+            (true, Some(cp)) => search.cursor.set_checkpoint(cp),
+            // capped with no checkpoint can only mean an empty slice — the
+            // enumeration has nothing more to offer
+            (true, None) => search.cursor.finish(),
+            (false, _) => search.cursor.finish(),
+        }
+        search.slices += 1;
+        let wall = start.elapsed().as_secs_f64();
+        search.spent_seconds += wall;
+        SliceReport {
+            n_enumerated: ext.n_enumerated,
+            wall_seconds: wall,
+            done: search.cursor.is_exhausted(),
+        }
+    }
+
+    /// Evaluate the current best-so-far plan of an in-flight anytime
+    /// search *without* consuming it: the merged survivors (plus the
+    /// always-evaluated homogeneous fallbacks) go through the exact step-5
+    /// dispatch evaluation. Never `None` for a search that
+    /// [`Self::begin_anytime`] admitted — even with zero slices pumped, a
+    /// homogeneous plan covering the longest bucket exists. This is what
+    /// the serving runtime deploys when the replan budget expires
+    /// mid-search, and what the budget-sweep bench samples per slice.
+    pub fn anytime_best(
+        &self,
+        planner: &Planner,
+        search: &AnytimeReplan,
+    ) -> Option<DeploymentPlan> {
+        planner.evaluate_candidates(
+            search.candidates.clone(),
+            &search.buckets,
+            &search.eval,
+            search.n_tasks,
+            &self.opts,
+            &search.table,
+            &search.configs,
+        )
+    }
+
+    /// Adopt an anytime replan: run the final evaluation over the merged
+    /// survivor set, memoize the search products for the next replan (a
+    /// budget-exhausted search memoizes capped, so
+    /// [`Self::extend_capped_search`] can continue it), and account the
+    /// replan in the session stats. When the enumeration ran to
+    /// completion, the result is plan-identical — same groups,
+    /// bit-identical `expected_step_time` — to a cold [`Planner::plan`]
+    /// (certified by `tests/session_replan.rs`).
+    pub fn finish_anytime(
+        &mut self,
+        planner: &Planner,
+        search: AnytimeReplan,
+    ) -> Option<(DeploymentPlan, PlanningStats)> {
+        let start = Instant::now();
+        let plan = planner.evaluate_candidates(
+            search.candidates.clone(),
+            &search.buckets,
+            &search.eval,
+            search.n_tasks,
+            &self.opts,
+            &search.table,
+            &search.configs,
         );
-        match out {
-            Some((plan, carry)) => {
+        match plan {
+            Some(plan) => {
+                let stats = PlanningStats {
+                    n_candidate_configs: search.configs.len(),
+                    n_plans_enumerated: search.n_enumerated,
+                    n_plans_after_filter: search.n_survivors,
+                    solve_seconds: search.spent_seconds + start.elapsed().as_secs_f64(),
+                    hit_plan_cap: search.hit_cap,
+                    peak_plan_storage: search.peak_storage,
+                };
                 self.stats.plans += 1;
-                // `carry.seeded` (not `seed.is_some()`): a capped fresh
+                // `search.seeded` (not `seed.is_some()`): a capped fresh
                 // search drops its seed to reproduce the cold cap prefix
                 // and must count as a cold start.
-                if carry.seeded {
+                if search.seeded {
                     self.stats.warm_starts += 1;
                 } else {
                     self.stats.cold_starts += 1;
                 }
-                self.remember(tasks, cost_fp, configs, buckets.boundaries.clone(), carry);
+                let resume = search.cursor.checkpoint().map(|c| c.to_vec());
+                self.memo = Some(SearchMemo {
+                    fingerprint: search.fingerprint,
+                    cost_fp: search.cost_fp,
+                    configs: search.configs,
+                    boundaries: search.buckets.boundaries,
+                    candidates: search.candidates,
+                    hit_cap: search.hit_cap,
+                    resume,
+                    best_bound: search.best_bound,
+                });
                 Some((plan, stats))
             }
             None => {
@@ -302,25 +627,14 @@ impl PlanningSession {
         stats.hit_plan_cap = ext.hit_cap;
         stats.peak_plan_storage = ext.peak_storage;
 
-        // Merge prefix + extension survivors under the combined cutoff.
-        // Prefix candidates come first (they precede the checkpoint in DFS
-        // order); a re-sort only happens when the merged set exceeds K,
-        // mirroring the single-search rank-truncation.
+        // Merge prefix + extension survivors under the combined cutoff
+        // (shared rank-truncation rules: see `merge_survivors`).
         let threshold = 1.0 + opts.lower_bound_threshold;
         let best = memo.best_bound.min(ext.best_bound);
         let cutoff = best * threshold;
         let k = opts.max_evaluated.max(1);
-        let mut merged: Vec<(Plan, f64)> = memo
-            .candidates
-            .iter()
-            .filter(|(_, lb)| *lb <= cutoff)
-            .cloned()
-            .chain(ext.candidates.into_iter().filter(|(_, lb)| *lb <= cutoff))
-            .collect();
-        if merged.len() > k {
-            merged.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
-            merged.truncate(k);
-        }
+        let merged =
+            merge_survivors(memo.candidates.clone(), ext.candidates, cutoff, k);
         stats.n_plans_after_filter = merged.len();
 
         let plan = planner.evaluate_candidates(

@@ -7,15 +7,28 @@
 //! the current one, LoRA adapters are checkpointed and the joint task is
 //! restarted under the new plan (the base model needs no checkpoint).
 //!
-//! Replanning goes through a persistent [`PlanningSession`] held across
-//! events: each replan warm-starts the streaming search from the previous
-//! survivor set and draws its cost table from the session's shared LRU,
-//! producing the exact plan a cold `Planner::plan` would — just faster.
+//! The manager is **event-driven and non-blocking**: [`TaskManager::apply_event`]
+//! updates the live task set and *begins* a resumable
+//! [`AnytimeReplan`] through the persistent [`PlanningSession`] — it never
+//! runs the search itself. The caller (normally the serving runtime,
+//! [`crate::coordinator::runtime::ServeRuntime`]) pumps the search in
+//! budget slices between training steps ([`TaskManager::pump_replan`]) and
+//! adopts the result at a step boundary ([`TaskManager::finish_replan`]).
+//! The blocking [`TaskManager::handle`] survives as the
+//! unlimited-budget composition of those three calls — same plans,
+//! bit-identical `expected_step_time`, inverted control flow.
+//!
+//! Redeploy accounting is **incremental**: [`plan_adjustment`] diffs the
+//! `(ParallelConfig, count)` groups of the old and new plans, and only
+//! replicas whose group actually changed pay checkpoint+restart — a
+//! plan-identical redeploy charges exactly zero (regression-tested), and
+//! an exit that shrinks one group charges just that group's delta instead
+//! of the old flat 120 s constant.
 
 use crate::cluster::ClusterSpec;
 use crate::config::{TaskSet, TaskSpec};
 use crate::coordinator::planner::{DeploymentPlan, Planner, PlannerOptions};
-use crate::coordinator::session::PlanningSession;
+use crate::coordinator::session::{AnytimeReplan, PlanningSession, SliceReport};
 use crate::costmodel::{CostModel, CostTables};
 
 /// Events the manager reacts to.
@@ -32,8 +45,13 @@ pub enum ReplanOutcome {
     Unchanged,
     /// New plan deployed; adapters checkpointed + restarted.
     Redeployed {
-        /// Simulated adjustment cost in seconds (paper: < 3 minutes).
+        /// Simulated adjustment cost in seconds (paper: < 3 minutes),
+        /// charged only for the replica groups that actually changed.
         adjustment_seconds: f64,
+        /// The group diff the charge was computed from — carried so
+        /// callers (the serving runtime's GPU-seconds accounting) never
+        /// re-derive it under possibly divergent rules.
+        adjustment: PlanAdjustment,
     },
     /// No tasks left; the joint FT job drains.
     Drained,
@@ -43,21 +61,105 @@ pub enum ReplanOutcome {
     Rejected,
 }
 
-/// Multi-tenant task manager: owns the live task set, the current plan and
-/// the persistent [`PlanningSession`] that serves every replan.
+/// What [`TaskManager::apply_event`] did — the non-blocking counterpart of
+/// [`ReplanOutcome`]: a changed task set opens a background replan instead
+/// of running one.
+#[derive(Debug, Clone, PartialEq)]
+pub enum EventOutcome {
+    /// The task set changed; a background [`AnytimeReplan`] is now
+    /// pending — pump it and finish at a step boundary.
+    Planning,
+    /// The event left the task set unchanged (unknown `Exit`): no replan.
+    Unchanged,
+    /// Duplicate-name `Arrive`: rejected, no replan.
+    Rejected,
+    /// No tasks left; any pending replan is dropped and the plan cleared.
+    Drained,
+}
+
+/// The per-group redeploy delta between two deployment plans: replicas in
+/// groups whose `(ParallelConfig, count)` changed. Unchanged groups keep
+/// training through a redeploy and pay nothing.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct PlanAdjustment {
+    /// Replicas added plus removed across all configuration groups.
+    pub changed_replicas: u32,
+    /// GPUs under those changed replicas.
+    pub changed_gpus: u32,
+}
+
+impl PlanAdjustment {
+    /// Wall-clock adjustment: checkpoint+restore serialized through the
+    /// coordinator at `per_replica` seconds per changed replica.
+    pub fn seconds(&self, per_replica: f64) -> f64 {
+        self.changed_replicas as f64 * per_replica
+    }
+
+    /// GPU-seconds lost: every GPU under a changed replica idles for that
+    /// replica's restart.
+    pub fn gpu_seconds(&self, per_replica: f64) -> f64 {
+        self.changed_gpus as f64 * per_replica
+    }
+
+    pub fn is_zero(&self) -> bool {
+        self.changed_replicas == 0
+    }
+}
+
+/// Diff two deployment plans into the set of changed replica groups. For
+/// each configuration, `|before_count − after_count|` replicas must be
+/// torn down or brought up; replicas in the common `min(before, after)`
+/// share are untouched. Identical plans diff to zero.
+pub fn plan_adjustment(before: &DeploymentPlan, after: &DeploymentPlan) -> PlanAdjustment {
+    use std::collections::BTreeMap;
+    let mut counts: BTreeMap<crate::config::ParallelConfig, (u32, u32)> = BTreeMap::new();
+    for &(c, p) in &before.groups {
+        counts.entry(c).or_default().0 += p;
+    }
+    for &(c, p) in &after.groups {
+        counts.entry(c).or_default().1 += p;
+    }
+    let mut adj = PlanAdjustment::default();
+    for (c, (b, a)) in counts {
+        let d = b.abs_diff(a);
+        adj.changed_replicas += d;
+        adj.changed_gpus += d * c.n();
+    }
+    adj
+}
+
+/// Multi-tenant task manager: owns the live task set, the current plan,
+/// the persistent [`PlanningSession`] serving every replan, and (between
+/// `apply_event` and `finish_replan`) the in-flight background search.
 pub struct TaskManager<'a> {
     cost: &'a CostModel,
     cluster: &'a ClusterSpec,
     session: PlanningSession,
     tasks: TaskSet,
     plan: Option<DeploymentPlan>,
+    /// In-flight background replan (non-blocking path).
+    pending: Option<AnytimeReplan>,
+    /// An `apply_event` opened a replan that has not been adopted yet.
+    /// Distinct from `pending.is_some()`: a replan whose planning context
+    /// turned out infeasible has no search to pump but must still be
+    /// finished (adopting "no plan" → drain).
+    replan_open: bool,
     /// Count of redeployments (exposed for tests / reports).
     pub redeploys: u32,
-    /// Count of planner invocations — events that leave the task set
+    /// Count of planner invocations (one per begun-and-adopted replan,
+    /// whether or not it yielded a plan) — events that leave the task set
     /// unchanged (e.g. an `Exit` naming an unknown task) must not add one.
+    /// Equals `session().stats.plans` as long as every replan's world was
+    /// feasible; an infeasible replan counts here but not there.
     pub replans: u32,
-    /// Simulated checkpoint+restart cost per redeploy, seconds.
-    pub adjustment_cost: f64,
+    /// Background replans abandoned because a newer event superseded them
+    /// before they finished (the search targeted a stale task set).
+    pub superseded: u32,
+    /// Per-replica checkpoint+restart seconds; a redeploy charges
+    /// `this × changed replicas` (paper: the whole adjustment stays under
+    /// 3 minutes — LoRA checkpoints are tiny, the cost is process
+    /// restart + load).
+    pub restart_seconds_per_replica: f64,
 }
 
 impl<'a> TaskManager<'a> {
@@ -73,13 +175,21 @@ impl<'a> TaskManager<'a> {
             session: PlanningSession::new(opts),
             tasks: initial,
             plan: None,
+            pending: None,
+            replan_open: false,
             redeploys: 0,
             replans: 0,
-            // paper: "consistently less than 3 minutes"; LoRA checkpoints
-            // are tiny, the cost is dominated by process restart + load.
-            adjustment_cost: 120.0,
+            superseded: 0,
+            restart_seconds_per_replica: 15.0,
         };
-        mgr.replan();
+        if !mgr.tasks.is_empty() {
+            // initial deployment: run the anytime machinery to completion
+            // (not a redeploy — nothing was running before)
+            mgr.begin_replan();
+            let budget = mgr.session.options().max_plans;
+            mgr.pump_replan(budget);
+            mgr.adopt_pending();
+        }
         mgr
     }
 
@@ -103,55 +213,173 @@ impl<'a> TaskManager<'a> {
         self.session.tables()
     }
 
-    fn replan(&mut self) -> Option<DeploymentPlan> {
-        if self.tasks.is_empty() {
-            self.plan = None;
-            return None;
+    /// A background replan is open (begun but not yet adopted).
+    pub fn replan_pending(&self) -> bool {
+        self.replan_open
+    }
+
+    /// The in-flight search finished its enumeration (a `finish_replan`
+    /// now adopts a certified cold-identical plan).
+    pub fn replan_done(&self) -> bool {
+        self.pending.as_ref().is_some_and(AnytimeReplan::enumeration_done)
+    }
+
+    /// Begin (or restart) the background replan for the current task set.
+    fn begin_replan(&mut self) {
+        if self.pending.take().is_some() {
+            self.superseded += 1;
         }
+        let planner = Planner::new(self.cost, self.cluster);
+        self.pending = self.session.begin_anytime(&planner, &self.tasks);
+        self.replan_open = true;
+    }
+
+    /// Adopt whatever the pending search has (its final evaluation), set
+    /// it as the current plan and account the replan. `None` when the
+    /// world is infeasible for the current task set.
+    fn adopt_pending(&mut self) -> Option<DeploymentPlan> {
+        self.replan_open = false;
         self.replans += 1;
         let planner = Planner::new(self.cost, self.cluster);
-        let plan = self.session.plan(&planner, &self.tasks);
+        let plan = match self.pending.take() {
+            Some(search) => {
+                self.session.finish_anytime(&planner, search).map(|(p, _)| p)
+            }
+            // begin_anytime found no feasible context (e.g. no candidate
+            // config supports the longest bucket)
+            None => None,
+        };
         self.plan = plan.clone();
         plan
     }
 
-    /// Apply an event; re-plan with the updated task batch. Events that
-    /// leave the task set unchanged (unknown `Exit`, duplicate-name
-    /// `Arrive`) skip the replan entirely.
-    pub fn handle(&mut self, event: TaskEvent) -> ReplanOutcome {
-        let before = self.plan.clone();
-        match event {
+    /// Apply an event **without blocking on the planner**: the task set is
+    /// updated and a background [`AnytimeReplan`] is begun — superseding
+    /// any in-flight one, whose target set just went stale. Training may
+    /// continue under the current plan while the caller pumps the search
+    /// with [`Self::pump_replan`] and adopts it with
+    /// [`Self::finish_replan`] at a step boundary.
+    pub fn apply_event(&mut self, event: TaskEvent) -> EventOutcome {
+        let was_open = self.replan_open;
+        let arrived = match event {
             TaskEvent::Arrive(spec) => {
                 // `Exit` removes by name, so a duplicate name would let one
                 // tenant tear down another's task; silently renaming would
                 // leave the submitter unable to address its own task. The
                 // task set is unchanged, so no replan either.
                 if self.tasks.tasks.iter().any(|t| t.name == spec.name) {
-                    return ReplanOutcome::Rejected;
+                    return EventOutcome::Rejected;
                 }
                 self.tasks.tasks.push(spec);
+                true
             }
             TaskEvent::Exit { name } => {
                 if !self.tasks.tasks.iter().any(|t| t.name == name) {
                     // unknown task: the set did not change — a full replan
                     // here would burn minutes of planner time for nothing
-                    return ReplanOutcome::Unchanged;
+                    return EventOutcome::Unchanged;
                 }
                 self.tasks.tasks.retain(|t| t.name != name);
+                false
             }
-        }
+        };
         if self.tasks.is_empty() {
+            if self.pending.take().is_some() {
+                self.superseded += 1;
+            }
+            self.replan_open = false;
             self.plan = None;
-            return ReplanOutcome::Drained;
+            return EventOutcome::Drained;
         }
-        self.replan();
+        self.begin_replan();
+        if self.pending.is_none() && arrived {
+            // The newcomer made the world infeasible (no candidate config
+            // can serve its longest sequences — exits can only *shrink*
+            // the longest bucket, so infeasibility here is attributable to
+            // the arrival). Reject it and keep serving the previous
+            // tenants instead of draining a healthy deployment.
+            self.tasks.tasks.pop();
+            if was_open && !self.tasks.is_empty() {
+                // an earlier event's search was superseded by this begin;
+                // restart it for the restored (feasible) task set
+                self.begin_replan();
+            } else {
+                self.replan_open = false;
+            }
+            return EventOutcome::Rejected;
+        }
+        EventOutcome::Planning
+    }
+
+    /// Advance the in-flight background replan by one enumeration slice of
+    /// up to `slice_plans` plans. Returns `None` when no replan is
+    /// pending.
+    pub fn pump_replan(&mut self, slice_plans: usize) -> Option<SliceReport> {
+        let mut pending = self.pending.take()?;
+        let planner = Planner::new(self.cost, self.cluster);
+        let report = self.session.pump_anytime(&planner, &mut pending, slice_plans);
+        self.pending = Some(pending);
+        Some(report)
+    }
+
+    /// Adopt the pending replan's result at a step boundary — the
+    /// best-so-far plan when the budget expired mid-search (still a valid
+    /// feasible deployment), the certified cold-identical plan when the
+    /// enumeration completed. Charges checkpoint+restart only for the
+    /// replica groups that actually changed ([`plan_adjustment`]): a
+    /// plan-identical swap reports [`ReplanOutcome::Unchanged`] and costs
+    /// nothing.
+    pub fn finish_replan(&mut self) -> ReplanOutcome {
+        if !self.replan_open {
+            // nothing to adopt — never wipe a healthy deployment
+            return ReplanOutcome::Unchanged;
+        }
+        let before = self.plan.clone();
+        self.adopt_pending();
         match (&before, &self.plan) {
             (Some(a), Some(b)) if a.groups == b.groups => ReplanOutcome::Unchanged,
-            (_, Some(_)) => {
+            (Some(a), Some(b)) => {
                 self.redeploys += 1;
-                ReplanOutcome::Redeployed { adjustment_seconds: self.adjustment_cost }
+                let adjustment = plan_adjustment(a, b);
+                ReplanOutcome::Redeployed {
+                    adjustment_seconds: adjustment
+                        .seconds(self.restart_seconds_per_replica),
+                    adjustment,
+                }
+            }
+            (None, Some(b)) => {
+                // cold (re-)deploy after a drain: every replica starts
+                self.redeploys += 1;
+                let fresh = DeploymentPlan {
+                    groups: Vec::new(),
+                    n_tasks: b.n_tasks,
+                    expected_step_time: 0.0,
+                };
+                let adjustment = plan_adjustment(&fresh, b);
+                ReplanOutcome::Redeployed {
+                    adjustment_seconds: adjustment
+                        .seconds(self.restart_seconds_per_replica),
+                    adjustment,
+                }
             }
             (_, None) => ReplanOutcome::Drained,
+        }
+    }
+
+    /// Apply an event and replan **synchronously** — the unlimited-budget
+    /// composition of [`Self::apply_event`] + [`Self::pump_replan`] +
+    /// [`Self::finish_replan`]. Events that leave the task set unchanged
+    /// (unknown `Exit`, duplicate-name `Arrive`) skip the replan entirely.
+    pub fn handle(&mut self, event: TaskEvent) -> ReplanOutcome {
+        match self.apply_event(event) {
+            EventOutcome::Rejected => ReplanOutcome::Rejected,
+            EventOutcome::Unchanged => ReplanOutcome::Unchanged,
+            EventOutcome::Drained => ReplanOutcome::Drained,
+            EventOutcome::Planning => {
+                let budget = self.session.options().max_plans;
+                self.pump_replan(budget);
+                self.finish_replan()
+            }
         }
     }
 }
@@ -159,13 +387,17 @@ impl<'a> TaskManager<'a> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::ModelDesc;
+    use crate::config::{ModelDesc, ParallelConfig};
     use crate::data::LengthDistribution;
 
     fn world() -> (CostModel, ClusterSpec) {
         let cluster = ClusterSpec::a100_40g(16);
         let cost = CostModel::calibrated(&ModelDesc::llama2_7b(), &cluster);
         (cost, cluster)
+    }
+
+    fn dp(groups: Vec<(ParallelConfig, u32)>) -> DeploymentPlan {
+        DeploymentPlan { groups, n_tasks: 2, expected_step_time: 1.0 }
     }
 
     #[test]
@@ -179,6 +411,10 @@ mod tests {
         );
         assert!(mgr.plan().is_some());
         assert_eq!(mgr.tasks().len(), 6);
+        assert!(!mgr.replan_pending());
+        // the initial deployment is not counted as a redeploy
+        assert_eq!(mgr.redeploys, 0);
+        assert_eq!(mgr.replans, 1);
     }
 
     #[test]
@@ -200,9 +436,18 @@ mod tests {
             LengthDistribution::fit(3900.0, 0.85, 16, 16384),
         )));
         assert!(matches!(outcome, ReplanOutcome::Redeployed { .. }), "{outcome:?}");
+        // the adjustment was computed from the actual group diff
+        let after = mgr.plan().unwrap().clone();
+        if let ReplanOutcome::Redeployed { adjustment_seconds, adjustment } = outcome {
+            assert!(adjustment.changed_replicas > 0);
+            assert_eq!(adjustment, plan_adjustment(&before, &after));
+            assert_eq!(
+                adjustment_seconds,
+                adjustment.seconds(mgr.restart_seconds_per_replica)
+            );
+        }
         // every replan went through the persistent session
         assert_eq!(mgr.session().stats.plans, mgr.replans as u64);
-        let after = mgr.plan().unwrap();
         let cap_before: u64 = before.groups.iter().map(|&(c, _)| cost.max_seq_len(c)).max().unwrap();
         let cap_after: u64 = after.groups.iter().map(|&(c, _)| cost.max_seq_len(c)).max().unwrap();
         assert!(cap_after >= cap_before, "capacity must grow: {cap_before} -> {cap_after}");
@@ -220,6 +465,7 @@ mod tests {
         let out = mgr.handle(TaskEvent::Exit { name: "only".into() });
         assert_eq!(out, ReplanOutcome::Drained);
         assert!(mgr.plan().is_none());
+        assert!(!mgr.replan_pending());
     }
 
     #[test]
@@ -268,5 +514,167 @@ mod tests {
             ReplanOutcome::Drained
         );
         assert!(mgr.tasks().is_empty());
+    }
+
+    #[test]
+    fn plan_identical_redeploy_charges_zero() {
+        // regression for the flat-cost bug: the adjustment is computed
+        // from the changed groups, so an identical plan costs exactly 0
+        let c1 = ParallelConfig::new(1, 1);
+        let c8 = ParallelConfig::new(8, 1);
+        let a = dp(vec![(c1, 6), (c8, 1)]);
+        let adj = plan_adjustment(&a, &a);
+        assert!(adj.is_zero());
+        assert_eq!(adj.seconds(15.0), 0.0);
+        assert_eq!(adj.gpu_seconds(15.0), 0.0);
+    }
+
+    #[test]
+    fn adjustment_charges_only_changed_groups() {
+        let c1 = ParallelConfig::new(1, 1);
+        let c2 = ParallelConfig::new(2, 1);
+        let c8 = ParallelConfig::new(8, 1);
+        // shrink the <1,1> group by two replicas, keep <8,1> untouched
+        let before = dp(vec![(c1, 6), (c8, 1)]);
+        let after = dp(vec![(c1, 4), (c8, 1)]);
+        let adj = plan_adjustment(&before, &after);
+        assert_eq!(adj.changed_replicas, 2);
+        assert_eq!(adj.changed_gpus, 2);
+        assert_eq!(adj.seconds(15.0), 30.0);
+        // swap a <2,1> pair for one <8,1>: 2 removed + 1 added replicas
+        let before = dp(vec![(c1, 4), (c2, 2)]);
+        let after = dp(vec![(c1, 4), (c8, 1)]);
+        let adj = plan_adjustment(&before, &after);
+        assert_eq!(adj.changed_replicas, 3);
+        assert_eq!(adj.changed_gpus, 2 * 2 + 8);
+        // the diff is symmetric
+        assert_eq!(plan_adjustment(&after, &before), adj);
+        // cold deploy from nothing: every replica pays
+        let empty = dp(vec![]);
+        let adj = plan_adjustment(&empty, &after);
+        assert_eq!(adj.changed_replicas, 5);
+        assert_eq!(adj.changed_gpus, 12);
+    }
+
+    #[test]
+    fn infeasible_arrival_rejected_without_draining() {
+        // regression: an arrival no configuration can serve used to adopt
+        // plan=None and drain every healthy tenant's deployment — it must
+        // be rejected while the previous plan keeps serving
+        let (cost, cluster) = world();
+        let initial = TaskSet::new(vec![TaskSpec::new(
+            "base",
+            96,
+            LengthDistribution::fit(250.0, 3.0, 16, 2048),
+        )]);
+        let mut mgr =
+            TaskManager::new(&cost, &cluster, initial, PlannerOptions::default());
+        let healthy = mgr.plan().unwrap().clone();
+        // million-token sequences: no 16×A100-40G config holds them
+        let out = mgr.handle(TaskEvent::Arrive(TaskSpec::new(
+            "huge",
+            8,
+            LengthDistribution::fit(60_000.0, 1.0, 16, 1_000_000),
+        )));
+        assert_eq!(out, ReplanOutcome::Rejected);
+        assert_eq!(mgr.tasks().len(), 1, "infeasible tenant must not be admitted");
+        assert_eq!(
+            mgr.plan().unwrap().groups,
+            healthy.groups,
+            "healthy deployment must survive an infeasible arrival"
+        );
+        assert!(!mgr.replan_pending());
+        // the survivor set memo was cleared, but normal service continues:
+        // a feasible arrival afterwards replans as usual
+        let out = mgr.handle(TaskEvent::Arrive(TaskSpec::new(
+            "ok",
+            32,
+            LengthDistribution::fit(700.0, 4.0, 16, 4096),
+        )));
+        assert_ne!(out, ReplanOutcome::Rejected);
+        assert_eq!(mgr.tasks().len(), 2);
+        assert!(mgr.plan().is_some());
+    }
+
+    #[test]
+    fn nonblocking_event_flow_matches_blocking_handle() {
+        // the async API (apply_event → pump slices → finish) adopts the
+        // same plan the blocking handle() would, and training-visible
+        // state (current plan) is untouched until finish_replan
+        let (cost, cluster) = world();
+        let opts = PlannerOptions::default();
+        let initial = TaskSet::new(vec![TaskSpec::new(
+            "base",
+            96,
+            LengthDistribution::fit(250.0, 3.0, 16, 2048),
+        )]);
+        let arrive = TaskSpec::new(
+            "long-tail",
+            32,
+            LengthDistribution::fit(2800.0, 1.2, 16, 8192),
+        );
+
+        let mut sync_mgr =
+            TaskManager::new(&cost, &cluster, initial.clone(), opts.clone());
+        let mut async_mgr = TaskManager::new(&cost, &cluster, initial, opts);
+
+        let sync_out = sync_mgr.handle(TaskEvent::Arrive(arrive.clone()));
+        assert!(matches!(sync_out, ReplanOutcome::Redeployed { .. }));
+
+        let stale = async_mgr.plan().unwrap().clone();
+        assert_eq!(
+            async_mgr.apply_event(TaskEvent::Arrive(arrive)),
+            EventOutcome::Planning
+        );
+        assert!(async_mgr.replan_pending());
+        // the deployed plan is untouched while the search runs
+        assert_eq!(async_mgr.plan().unwrap().groups, stale.groups);
+        let mut slices = 0;
+        loop {
+            let r = async_mgr.pump_replan(16).expect("replan pending");
+            slices += 1;
+            assert!(slices < 100_000, "anytime search failed to converge");
+            if r.done {
+                break;
+            }
+        }
+        assert!(slices > 1, "slice budget too generous to exercise resume");
+        let async_out = async_mgr.finish_replan();
+        assert_eq!(async_out, sync_out);
+        assert_eq!(
+            async_mgr.plan().unwrap().groups,
+            sync_mgr.plan().unwrap().groups
+        );
+        assert_eq!(
+            async_mgr.plan().unwrap().expected_step_time.to_bits(),
+            sync_mgr.plan().unwrap().expected_step_time.to_bits()
+        );
+    }
+
+    #[test]
+    fn superseding_event_restarts_pending_replan() {
+        let (cost, cluster) = world();
+        let initial = TaskSet::new(vec![TaskSpec::new(
+            "base",
+            96,
+            LengthDistribution::fit(250.0, 3.0, 16, 2048),
+        )]);
+        let mut mgr =
+            TaskManager::new(&cost, &cluster, initial, PlannerOptions::default());
+        let a = TaskSpec::new("a", 32, LengthDistribution::fit(700.0, 4.0, 16, 4096));
+        let b = TaskSpec::new("b", 32, LengthDistribution::fit(2800.0, 1.2, 16, 8192));
+        assert_eq!(mgr.apply_event(TaskEvent::Arrive(a)), EventOutcome::Planning);
+        mgr.pump_replan(4);
+        // a second event lands while the first search is in flight: the
+        // stale-target search is abandoned and a fresh one begun
+        assert_eq!(mgr.apply_event(TaskEvent::Arrive(b)), EventOutcome::Planning);
+        assert_eq!(mgr.superseded, 1);
+        let budget = mgr.session().options().max_plans;
+        mgr.pump_replan(budget);
+        assert!(mgr.replan_done());
+        mgr.finish_replan();
+        // the adopted plan targets the *final* 3-task set
+        assert_eq!(mgr.plan().unwrap().n_tasks, 3);
+        assert_eq!(mgr.tasks().len(), 3);
     }
 }

@@ -37,7 +37,10 @@
 //! replica, the cost model's `replica_time` over its dispatched loads; per
 //! step, the max over replicas plus the synchronous LoRA sync — so the
 //! GPU-seconds reported by simulated benches and by real `lobra train` runs
-//! come from the same dispatch code path. The real backend additionally
+//! come from the same dispatch code path. For serving workloads whose
+//! deployment is *replaced* mid-run, [`SimTrainLoop`] wraps the same
+//! pipeline behind an owned, step-boundary-swappable plan (see
+//! [`crate::coordinator::runtime`]). The real backend additionally
 //! executes the assignment on the PJRT engine (replicas run concurrently
 //! via [`crate::util::par`]) and reduces gradients deterministically:
 //! per-replica partials are combined in fixed replica order with a
@@ -46,9 +49,11 @@
 
 mod pjrt;
 mod sim;
+mod steploop;
 
 pub use pjrt::{materialize_assignment, Microbatch, PjrtExecutor};
 pub use sim::SimExecutor;
+pub use steploop::{SimStep, SimTrainLoop};
 
 use std::collections::VecDeque;
 use std::sync::Arc;

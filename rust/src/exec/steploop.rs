@@ -1,0 +1,242 @@
+//! A deployment-swappable simulated training loop.
+//!
+//! [`crate::coordinator::scheduler::Scheduler`] borrows one fixed
+//! [`DeploymentPlan`] for its whole lifetime — the right shape for the
+//! paper-figure benches, where the plan never changes, but unusable by a
+//! serving runtime whose plan is *replaced* mid-run. [`SimTrainLoop`] owns
+//! its plan and task set, so the runtime can [`SimTrainLoop::swap`] both at
+//! a step boundary (the paper's redeploy point: adapters checkpointed, the
+//! joint task restarted under the new plan) while the shared cost-table
+//! LRU carries across deployments — a boundary vector that returns after a
+//! redeploy hits the cache instead of rebuilding.
+
+use std::sync::Arc;
+
+use super::{ExecutionPlan, ReplicaExecutor, SimExecutor};
+use crate::config::{ParallelConfig, TaskSet};
+use crate::coordinator::bucketing::{bucketize, BucketingOptions};
+use crate::coordinator::dispatcher::DispatchPolicy;
+use crate::coordinator::planner::DeploymentPlan;
+use crate::costmodel::{CostModel, CostTable, CostTables};
+use crate::data::MultiTaskSampler;
+
+/// One executed simulated step.
+#[derive(Debug, Clone, Copy)]
+pub struct SimStep {
+    /// Virtual-cluster step wall-clock (max replica time + LoRA sync).
+    pub step_time: f64,
+    /// `gpus_used × step_time` — the paper's headline accounting.
+    pub gpu_seconds: f64,
+    /// Table (re)build + dispatch-solve host wall-clock for this step.
+    pub solve_seconds: f64,
+}
+
+/// Simulated joint-FT training under a swappable deployment plan.
+pub struct SimTrainLoop<'a> {
+    cost: &'a CostModel,
+    plan: DeploymentPlan,
+    tasks: TaskSet,
+    sampler: MultiTaskSampler,
+    policy: DispatchPolicy,
+    bucketing: BucketingOptions,
+    /// Shared cost-table LRU (typically the planning session's).
+    tables: CostTables,
+    /// Current step's table (skips the cache lock while consecutive
+    /// batches land on the same boundaries — the common case).
+    table: Option<Arc<CostTable>>,
+    exec: SimExecutor<'a>,
+    /// Steps executed under the *current* deployment (resets on swap).
+    epoch_steps: u64,
+    /// Steps executed across all deployments.
+    total_steps: u64,
+}
+
+impl<'a> SimTrainLoop<'a> {
+    pub fn new(
+        cost: &'a CostModel,
+        plan: DeploymentPlan,
+        tasks: TaskSet,
+        seed: u64,
+        tables: CostTables,
+    ) -> Self {
+        Self {
+            sampler: MultiTaskSampler::new(&tasks, seed),
+            cost,
+            plan,
+            tasks,
+            policy: DispatchPolicy::Balanced,
+            bucketing: BucketingOptions::default(),
+            tables,
+            table: None,
+            exec: SimExecutor::new(cost),
+            epoch_steps: 0,
+            total_steps: 0,
+        }
+    }
+
+    pub fn plan(&self) -> &DeploymentPlan {
+        &self.plan
+    }
+
+    pub fn tasks(&self) -> &TaskSet {
+        &self.tasks
+    }
+
+    /// Steps executed under the current deployment.
+    pub fn epoch_steps(&self) -> u64 {
+        self.epoch_steps
+    }
+
+    /// Steps executed across all deployments this loop has run.
+    pub fn total_steps(&self) -> u64 {
+        self.total_steps
+    }
+
+    /// Swap deployment plan and task set at a step boundary. The sampler
+    /// restarts for the new task set (deterministic per `seed`); the
+    /// cost-table LRU carries over, so returning boundary vectors hit.
+    pub fn swap(&mut self, plan: DeploymentPlan, tasks: TaskSet, seed: u64) {
+        self.sampler = MultiTaskSampler::new(&tasks, seed);
+        self.plan = plan;
+        self.tasks = tasks;
+        self.table = None;
+        self.epoch_steps = 0;
+    }
+
+    /// Execute one simulated step: sample the fused batch, bucketize,
+    /// solve the MINMAX dispatch and advance the cost-model clock. `None`
+    /// when the loop has no tasks or the deployment cannot serve the
+    /// sampled batch.
+    pub fn step(&mut self) -> Option<SimStep> {
+        if self.tasks.is_empty() || self.plan.groups.is_empty() {
+            return None;
+        }
+        let batch = self.sampler.next_batch();
+        let lengths = batch.lengths();
+        let buckets = bucketize(&lengths, &self.bucketing);
+
+        let t0 = std::time::Instant::now();
+        if self.table.as_ref().map_or(true, |t| !t.covers(&buckets.boundaries)) {
+            let cfgs: Vec<ParallelConfig> =
+                self.plan.groups.iter().map(|&(c, _)| c).collect();
+            self.table =
+                Some(self.tables.get_or_build(self.cost, &cfgs, &buckets.boundaries));
+        }
+        let table_seconds = t0.elapsed().as_secs_f64();
+        let eplan = ExecutionPlan::build(
+            self.cost,
+            &self.plan,
+            self.table.clone(),
+            batch,
+            buckets,
+            self.policy,
+        )?;
+        let solve_seconds = table_seconds + eplan.solve_seconds;
+        let out = self.exec.execute_step(&eplan).ok()?;
+        self.epoch_steps += 1;
+        self.total_steps += 1;
+        Some(SimStep {
+            step_time: out.step_time,
+            gpu_seconds: self.plan.gpus_used() as f64 * out.step_time,
+            solve_seconds,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ClusterSpec;
+    use crate::config::ModelDesc;
+    use crate::coordinator::planner::{Planner, PlannerOptions};
+    use crate::coordinator::scheduler::{Scheduler, SchedulerOptions};
+
+    fn world() -> (CostModel, ClusterSpec, TaskSet) {
+        let cluster = ClusterSpec::a100_40g(16);
+        let cost = CostModel::calibrated(&ModelDesc::llama2_7b(), &cluster);
+        let tasks = TaskSet::paper_7b_subset();
+        (cost, cluster, tasks)
+    }
+
+    #[test]
+    fn steps_match_scheduler_bitwise() {
+        // the loop is the scheduler's step pipeline behind a swappable
+        // plan: same seed + same plan must produce bit-identical clocks
+        let (cost, cluster, tasks) = world();
+        let plan = Planner::new(&cost, &cluster)
+            .plan(&tasks, PlannerOptions::default())
+            .unwrap();
+        let opts = SchedulerOptions::default();
+        let mut sched = Scheduler::new(&cost, &plan, &tasks, opts.clone());
+        let mut tl = SimTrainLoop::new(
+            &cost,
+            plan.clone(),
+            tasks.clone(),
+            opts.seed,
+            CostTables::default(),
+        );
+        for step in 0..8 {
+            let a = sched.step().unwrap();
+            let b = tl.step().unwrap();
+            assert_eq!(
+                a.step_time.to_bits(),
+                b.step_time.to_bits(),
+                "step {step}: loop diverged from scheduler"
+            );
+            assert_eq!(a.gpu_seconds.to_bits(), b.gpu_seconds.to_bits(), "step {step}");
+        }
+        assert_eq!(tl.total_steps(), 8);
+    }
+
+    #[test]
+    fn swap_changes_deployment_at_step_boundary() {
+        let (cost, cluster, tasks) = world();
+        let planner = Planner::new(&cost, &cluster);
+        let plan = planner.plan(&tasks, PlannerOptions::default()).unwrap();
+        let mut tl = SimTrainLoop::new(
+            &cost,
+            plan.clone(),
+            tasks.clone(),
+            7,
+            CostTables::default(),
+        );
+        for _ in 0..3 {
+            tl.step().unwrap();
+        }
+        assert_eq!(tl.epoch_steps(), 3);
+        // shrink to a two-task world and its own plan
+        let small = TaskSet::new(tasks.tasks[..2].to_vec());
+        let plan2 = planner.plan(&small, PlannerOptions::default()).unwrap();
+        tl.swap(plan2.clone(), small.clone(), 11);
+        assert_eq!(tl.epoch_steps(), 0);
+        assert_eq!(tl.plan().groups, plan2.groups);
+        assert_eq!(tl.tasks().len(), 2);
+        let s = tl.step().unwrap();
+        assert!(s.step_time > 0.0);
+        // post-swap steps are exactly a fresh loop over the new world
+        let mut fresh =
+            SimTrainLoop::new(&cost, plan2, small, 11, CostTables::default());
+        let f = fresh.step().unwrap();
+        assert_eq!(s.step_time.to_bits(), f.step_time.to_bits());
+        assert_eq!(tl.total_steps(), 4);
+    }
+
+    #[test]
+    fn empty_tasks_or_plan_yield_no_step() {
+        let (cost, cluster, tasks) = world();
+        let plan = Planner::new(&cost, &cluster)
+            .plan(&tasks, PlannerOptions::default())
+            .unwrap();
+        let mut empty_tasks =
+            SimTrainLoop::new(&cost, plan, TaskSet::default(), 1, CostTables::default());
+        assert!(empty_tasks.step().is_none());
+        let empty_plan = DeploymentPlan {
+            groups: Vec::new(),
+            n_tasks: tasks.len() as u32,
+            expected_step_time: 0.0,
+        };
+        let mut no_plan =
+            SimTrainLoop::new(&cost, empty_plan, tasks, 1, CostTables::default());
+        assert!(no_plan.step().is_none());
+    }
+}

@@ -64,13 +64,15 @@ pub mod prelude {
     pub use crate::coordinator::bucketing::{bucketize, BucketingOptions, Buckets};
     pub use crate::coordinator::dispatcher::{Dispatcher, DispatchPlan};
     pub use crate::coordinator::planner::{DeploymentPlan, Planner, PlannerOptions};
+    pub use crate::coordinator::runtime::{ServeOptions, ServeReport, ServeRuntime};
     pub use crate::coordinator::scheduler::{Scheduler, SchedulerOptions, StepReport};
     pub use crate::coordinator::session::PlanningSession;
     pub use crate::coordinator::tasks::TaskManager;
     pub use crate::costmodel::{CostModel, CostTables};
     pub use crate::data::{DatasetProfile, LengthDistribution, MultiTaskSampler};
     pub use crate::exec::{
-        ExecutionPlan, PjrtExecutor, ReplicaExecutor, SimExecutor, StepExecution,
+        ExecutionPlan, PjrtExecutor, ReplicaExecutor, SimExecutor, SimTrainLoop,
+        StepExecution,
     };
     pub use crate::metrics::JointFtReport;
 }

@@ -4,22 +4,32 @@
 //! * `plan`      — compute the heterogeneous deployment plan (paper Eq. 2).
 //! * `simulate`  — run the joint-FT scheduler on the simulated cluster and
 //!                 report GPU-seconds (the paper's headline metric).
+//! * `serve`     — event-driven serving runtime: replay a tenant churn
+//!                 trace with training overlapped against budgeted anytime
+//!                 replanning; report tenant-observed metrics.
 //! * `calibrate` — sim-backed profiling run: execute dispatch steps, fit
 //!                 `t(b,s)` per configuration from the executor's
 //!                 microbatch observations, and write a reusable profile.
 //! * `train`     — real PJRT-executed end-to-end training on the local CPU
 //!                 (requires `make artifacts`).
 //! * `info`      — show models, datasets, and feasible configurations.
+//!
+//! The shared `--model/--gpus/--cluster/--tasks/--profile` world flags are
+//! parsed once by `World::parse` and reused by every subcommand.
 
 use anyhow::{anyhow, bail, Result};
 use lobra::cluster::ClusterSpec;
 use lobra::config::ModelDesc;
 use lobra::coordinator::planner::{Planner, PlannerOptions};
+use lobra::coordinator::runtime::{
+    default_churn_trace, parse_trace, BudgetMeter, ServeOptions, ServeRuntime,
+};
 use lobra::coordinator::scheduler::{Scheduler, SchedulerOptions};
 use lobra::costmodel::{load_profile_or_analytic, CalibrationStore, CostModel};
 use lobra::exec::profile_sim_steps;
 use lobra::prelude::TaskSet;
 use lobra::train::{Trainer, TrainerConfig};
+use lobra::util::bench::Table;
 
 const USAGE: &str = "\
 lobra — multi-tenant LoRA fine-tuning coordinator (LobRA, PVLDB'25)
@@ -31,6 +41,19 @@ USAGE:
                   [--no-config-proposal] [--no-lower-bound]
   lobra simulate  [--model ...] [--gpus N] [--cluster ...] [--tasks ...]
                   [--steps N] [--seed N] [--task-fused] [--profile PATH]
+  lobra serve     [--model ...] [--gpus N] [--cluster ...] [--tasks ...]
+                  [--trace FILE] [--replan-budget SECS] [--slice-plans N]
+                  [--sim-seconds-per-plan F] [--wall-meter] [--certify]
+                  [--spacing SECS] [--seed N] [--profile PATH]
+                  (replay an arrival/exit churn trace: training advances
+                   under the current plan while a budgeted anytime replan
+                   runs in the background; plans swap at step boundaries,
+                   charging only the replica groups that changed.
+                   --replan-budget 0 = unlimited; without --trace a
+                   default churn trace over --tasks is replayed, arrivals
+                   --spacing seconds apart. Trace lines:
+                     <at> arrive <name> <batch> <mean> <skew> <min> <max>
+                     <at> exit   <name>)
   lobra calibrate [--model ...] [--gpus N] [--cluster ...] [--tasks ...]
                   [--steps N] [--seed N] [--out PATH]
                   (run profiling steps through the sim executor, fit
@@ -137,6 +160,35 @@ fn cost_for(args: &Args, model: &ModelDesc, cluster: &ClusterSpec) -> CostModel 
     }
 }
 
+/// The simulated world a subcommand plans against, parsed once from the
+/// shared `--model/--gpus/--cluster/--tasks/--profile` flags (previously
+/// copy-pasted across `plan`/`simulate`/`train`/`calibrate`).
+struct World {
+    model: ModelDesc,
+    cluster: ClusterSpec,
+    tasks: TaskSet,
+    cost: CostModel,
+}
+
+impl World {
+    /// `with_profile`: honor `--profile PATH` for a measured cost model.
+    /// `calibrate` passes false (it *creates* profiles, so planning under
+    /// one would be circular); `info` passes false (it describes the
+    /// analytic world).
+    fn parse(args: &Args, with_profile: bool) -> Result<World> {
+        let model = model_for(args)?;
+        let gpus = args.get_parse("gpus", 16u32)?;
+        let cluster = cluster_for(&args.get("cluster", "a100"), gpus);
+        let tasks = tasks_for(&args.get("tasks", "7b-subset"));
+        let cost = if with_profile {
+            cost_for(args, &model, &cluster)
+        } else {
+            CostModel::calibrated(&model, &cluster)
+        };
+        Ok(World { model, cluster, tasks, cost })
+    }
+}
+
 fn main() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let Some(cmd) = argv.first() else {
@@ -147,11 +199,7 @@ fn main() -> Result<()> {
     match cmd.as_str() {
         "plan" => {
             let args = Args::parse(rest, &["no-config-proposal", "no-lower-bound"])?;
-            let model = model_for(&args)?;
-            let gpus = args.get_parse("gpus", 16u32)?;
-            let cluster = cluster_for(&args.get("cluster", "a100"), gpus);
-            let tasks = tasks_for(&args.get("tasks", "7b-subset"));
-            let cost = cost_for(&args, &model, &cluster);
+            let World { model, cluster, tasks, cost } = World::parse(&args, true)?;
             let planner = Planner::new(&cost, &cluster);
             let mut opts = PlannerOptions::default();
             opts.config_proposal = !args.has("no-config-proposal");
@@ -177,12 +225,8 @@ fn main() -> Result<()> {
         }
         "simulate" => {
             let args = Args::parse(rest, &["task-fused"])?;
-            let model = model_for(&args)?;
-            let gpus = args.get_parse("gpus", 16u32)?;
-            let cluster = cluster_for(&args.get("cluster", "a100"), gpus);
-            let tasks = tasks_for(&args.get("tasks", "7b-subset"));
+            let World { cluster, tasks, cost, .. } = World::parse(&args, true)?;
             let steps = args.get_parse("steps", 100usize)?;
-            let cost = cost_for(&args, &model, &cluster);
             let planner = Planner::new(&cost, &cluster);
             let plan = if args.has("task-fused") {
                 planner.plan_homogeneous(&tasks, &PlannerOptions::default())
@@ -197,16 +241,107 @@ fn main() -> Result<()> {
             let report = sched.run_steps(steps);
             println!("{}", report.summary());
         }
+        "serve" => {
+            let args = Args::parse(rest, &["certify", "wall-meter"])?;
+            let World { model, cluster, tasks, cost } = World::parse(&args, true)?;
+            let budget = args.get_parse("replan-budget", 180.0f64)?;
+            let spacing = args.get_parse("spacing", 600.0f64)?;
+            let per_plan = args.get_parse("sim-seconds-per-plan", 1e-4f64)?;
+            let trace = match args.flags.get("trace") {
+                Some(path) => {
+                    let text = std::fs::read_to_string(path)
+                        .map_err(|e| anyhow!("cannot read trace {path}: {e}"))?;
+                    parse_trace(&text).map_err(|e| anyhow!("{e}"))?
+                }
+                None => default_churn_trace(&tasks, spacing),
+            };
+            if trace.is_empty() {
+                bail!("empty churn trace");
+            }
+            let mut opts = ServeOptions::default();
+            opts.replan_budget = (budget > 0.0).then_some(budget);
+            opts.slice_plans = args.get_parse("slice-plans", opts.slice_plans)?.max(1);
+            opts.meter = if args.has("wall-meter") {
+                BudgetMeter::Wall
+            } else {
+                BudgetMeter::SimPerPlan(per_plan)
+            };
+            opts.seed = args.get_parse("seed", opts.seed)?;
+            opts.certify_identity = args.has("certify");
+            println!(
+                "serving model={} cluster={} | {} events | replan budget {} | \
+                 slice {} plans | meter {:?}",
+                model.name,
+                cluster.name,
+                trace.len(),
+                match opts.replan_budget {
+                    Some(b) => format!("{b:.0}s"),
+                    None => "unlimited".into(),
+                },
+                opts.slice_plans,
+                opts.meter,
+            );
+            let mut rt = ServeRuntime::new(&cost, &cluster, opts);
+            let report = rt.run_trace(&trace);
+
+            let mut t = Table::new(&[
+                "tenant", "arrived", "admitted", "tta", "steps", "exited",
+            ]);
+            for ten in &report.tenants {
+                t.row(&[
+                    ten.name.clone(),
+                    format!("{:.0}s", ten.arrived_at),
+                    ten.admitted_at.map_or("-".into(), |a| format!("{a:.0}s")),
+                    ten.time_to_admission()
+                        .map_or("-".into(), |d| format!("{d:.1}s")),
+                    ten.steps_trained.to_string(),
+                    ten.exited_at.map_or("-".into(), |e| format!("{e:.0}s")),
+                ]);
+            }
+            t.print();
+            println!(
+                "\nsim horizon {:.0}s | {} steps ({} during replan windows; min {} per \
+                 overlapped window) | {} replan windows, {} redeploys, {} identical \
+                 swaps, {} budget-exhausted",
+                report.sim_seconds,
+                report.steps_total,
+                report.steps_during_replan,
+                report
+                    .min_steps_in_replan_window
+                    .map_or("-".into(), |m| m.to_string()),
+                report.replan_windows,
+                report.redeploys,
+                report.plan_swaps_identical,
+                report.budget_exhausted,
+            );
+            println!(
+                "GPU-seconds: {:.1} trained, {:.1} lost to redeploys (changed groups \
+                 only) | mean time-to-admission {}",
+                report.gpu_seconds_trained,
+                report.gpu_seconds_lost_redeploy,
+                report
+                    .mean_time_to_admission()
+                    .map_or("-".into(), |d| format!("{d:.1}s")),
+            );
+            if report.identity_checks > 0 {
+                println!(
+                    "anytime identity: {}/{} completed replans plan-identical to cold{}",
+                    report.identity_checks - report.identity_failures,
+                    report.identity_checks,
+                    if report.identity_failures > 0 { " — BUG" } else { "" },
+                );
+            }
+            if let Some(plan) = rt.manager().plan() {
+                println!("final plan: [{}]", plan.notation());
+            }
+        }
         "calibrate" => {
             let args = Args::parse(rest, &[])?;
-            let model = model_for(&args)?;
-            let gpus = args.get_parse("gpus", 16u32)?;
-            let cluster = cluster_for(&args.get("cluster", "a100"), gpus);
-            let tasks = tasks_for(&args.get("tasks", "7b-subset"));
+            // calibrate *creates* profiles — never plan under one
+            let World { model, cluster, tasks, cost } = World::parse(&args, false)?;
             let steps = args.get_parse("steps", 24usize)?;
             let seed = args.get_parse("seed", 7u64)?;
             let out = args.get("out", "lobra_profile.json");
-            let cost = CostModel::calibrated(&model, &cluster);
             let plan = Planner::new(&cost, &cluster)
                 .plan(&tasks, PlannerOptions::default())
                 .ok_or_else(|| anyhow!("no feasible plan to profile under"))?;
@@ -276,11 +411,7 @@ fn main() -> Result<()> {
             // accounting). With --profile the plan comes from *measured*
             // microbatch times instead of the analytic constants.
             if args.has("model") || args.has("profile") {
-                let model = model_for(&args)?;
-                let gpus = args.get_parse("gpus", 16u32)?;
-                let cluster = cluster_for(&args.get("cluster", "a100"), gpus);
-                let tasks = tasks_for(&args.get("tasks", "7b-subset"));
-                let cost = cost_for(&args, &model, &cluster);
+                let World { model, cluster, tasks, cost } = World::parse(&args, true)?;
                 let plan = Planner::new(&cost, &cluster)
                     .plan(&tasks, PlannerOptions::default())
                     .ok_or_else(|| anyhow!("no feasible plan for the virtual cluster"))?;
@@ -346,10 +477,7 @@ fn main() -> Result<()> {
         }
         "info" => {
             let args = Args::parse(rest, &[])?;
-            let model = model_for(&args)?;
-            let gpus = args.get_parse("gpus", 16u32)?;
-            let cluster = cluster_for(&args.get("cluster", "a100"), gpus);
-            let cost = CostModel::calibrated(&model, &cluster);
+            let World { model, cluster, cost, .. } = World::parse(&args, false)?;
             let planner = Planner::new(&cost, &cluster);
             println!(
                 "model={} params={:.1}B layers={} d={}",

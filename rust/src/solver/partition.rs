@@ -270,6 +270,108 @@ pub fn dfs_prefixes(
     items
 }
 
+/// Budget-sliced enumeration cursor over the [`visit_plans`] DFS order:
+/// between slices it holds the last visited count vector as a checkpoint,
+/// and the next slice resumes strictly after it via [`visit_plans_after`]
+/// — no prefix re-walking. The concatenation of the slices is exactly the
+/// full DFS order for *any* budget schedule (property-tested below) —
+/// the resumption contract anytime replans rely on.
+///
+/// Two ways to drive it: [`Self::slice`] walks the enumeration directly
+/// (self-contained budget-sliced visiting); the planning session's
+/// anytime search instead runs its slices through the planner's fused
+/// top-K machinery (which embeds the same `visit_plans_after` resumption)
+/// and uses the cursor as the checkpoint/exhaustion bookkeeper
+/// ([`Self::set_checkpoint`] / [`Self::finish`]) between slices.
+#[derive(Debug, Clone, Default)]
+pub struct PlanCursor {
+    /// Last visited count vector (`None` until the first slice runs).
+    checkpoint: Option<Vec<u32>>,
+    /// The underlying enumeration ran to completion.
+    exhausted: bool,
+}
+
+impl PlanCursor {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Whether the enumeration has been fully walked.
+    pub fn is_exhausted(&self) -> bool {
+        self.exhausted
+    }
+
+    /// The resume checkpoint (last visited count vector), if any.
+    pub fn checkpoint(&self) -> Option<&[u32]> {
+        self.checkpoint.as_deref()
+    }
+
+    /// Adopt a checkpoint recorded by an external walk of the same
+    /// enumeration (e.g. a capped search's `resume` vector).
+    pub fn set_checkpoint(&mut self, checkpoint: Vec<u32>) {
+        self.checkpoint = Some(checkpoint);
+    }
+
+    /// Mark the enumeration complete (no further slices will visit).
+    pub fn finish(&mut self) {
+        self.exhausted = true;
+    }
+
+    /// Visit up to `budget` further plans, advancing the cursor. Returns
+    /// the number of plans visited this slice; after it, either
+    /// [`Self::is_exhausted`] is true (the walk completed) or the
+    /// checkpoint points at the last visited plan. A visitor returning
+    /// `false` also ends the slice (the cursor stays resumable at the last
+    /// visited plan).
+    pub fn slice<F: FnMut(&[u32]) -> bool>(
+        &mut self,
+        configs: &[ParallelConfig],
+        n_gpus: u32,
+        min_gpus: u32,
+        require_longest: Option<usize>,
+        budget: usize,
+        visit: &mut F,
+    ) -> usize {
+        if self.exhausted || budget == 0 {
+            return 0;
+        }
+        let mut seen = 0usize;
+        let mut last: Option<Vec<u32>> = None;
+        let mut wrapped = |counts: &[u32]| -> bool {
+            if seen >= budget {
+                return false;
+            }
+            seen += 1;
+            match &mut last {
+                Some(l) => {
+                    l.clear();
+                    l.extend_from_slice(counts);
+                }
+                None => last = Some(counts.to_vec()),
+            }
+            visit(counts)
+        };
+        let complete = match &self.checkpoint {
+            None => visit_plans(configs, n_gpus, min_gpus, require_longest, &mut wrapped),
+            Some(after) => visit_plans_after(
+                configs,
+                after,
+                n_gpus,
+                min_gpus,
+                require_longest,
+                &mut wrapped,
+            ),
+        };
+        if let Some(l) = last {
+            self.checkpoint = Some(l);
+        }
+        if complete {
+            self.exhausted = true;
+        }
+        seen
+    }
+}
+
 /// Collecting wrapper over [`visit_plans`]: materialize up to `max_plans`
 /// plans (the cap is a safety valve against runaway enumerations).
 pub fn enumerate_plans(
@@ -428,6 +530,66 @@ mod tests {
         });
         assert!(!complete);
         assert_eq!(n, 3);
+    }
+
+    #[test]
+    fn cursor_slices_concatenate_to_full_dfs_order() {
+        let mut full: Vec<Vec<u32>> = Vec::new();
+        visit_plans(&cfgs(), 8, 4, None, &mut |c| {
+            full.push(c.to_vec());
+            true
+        });
+        assert!(full.len() > 5);
+        // any budget schedule must reproduce the exact DFS order
+        for schedule in [vec![1usize; 64], vec![3, 1, 5, 2, 100], vec![full.len()], vec![2, 2]] {
+            let mut cursor = PlanCursor::new();
+            let mut seen: Vec<Vec<u32>> = Vec::new();
+            let mut total = 0usize;
+            for &budget in &schedule {
+                if cursor.is_exhausted() {
+                    break;
+                }
+                let n = cursor.slice(&cfgs(), 8, 4, None, budget, &mut |c| {
+                    seen.push(c.to_vec());
+                    true
+                });
+                assert!(n <= budget);
+                total += n;
+            }
+            // run to exhaustion with a generous tail budget
+            while !cursor.is_exhausted() {
+                total += cursor.slice(&cfgs(), 8, 4, None, 1_000, &mut |c| {
+                    seen.push(c.to_vec());
+                    true
+                });
+            }
+            assert_eq!(seen, full, "schedule {schedule:?}");
+            assert_eq!(total, full.len());
+            // an exhausted cursor visits nothing more
+            assert_eq!(cursor.slice(&cfgs(), 8, 4, None, 10, &mut |_| true), 0);
+        }
+    }
+
+    #[test]
+    fn cursor_respects_filters_and_adopted_checkpoints() {
+        let mut full: Vec<Vec<u32>> = Vec::new();
+        visit_plans(&cfgs(), 8, 4, Some(2), &mut |c| {
+            full.push(c.to_vec());
+            true
+        });
+        assert!(full.len() >= 2);
+        // a cursor handed an external checkpoint resumes strictly after it
+        let mut cursor = PlanCursor::new();
+        cursor.set_checkpoint(full[0].clone());
+        let mut seen: Vec<Vec<u32>> = Vec::new();
+        while !cursor.is_exhausted() {
+            cursor.slice(&cfgs(), 8, 4, Some(2), 1, &mut |c| {
+                seen.push(c.to_vec());
+                true
+            });
+        }
+        assert_eq!(seen, full[1..].to_vec());
+        assert_eq!(cursor.checkpoint(), Some(&full[full.len() - 1][..]));
     }
 
     #[test]

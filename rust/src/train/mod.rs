@@ -28,6 +28,7 @@ use crate::config::{ModelDesc, ParallelConfig};
 use crate::coordinator::bucketing::buckets_from_boundaries;
 use crate::coordinator::dispatcher::DispatchPolicy;
 use crate::coordinator::planner::DeploymentPlan;
+use crate::coordinator::tasks::{plan_adjustment, PlanAdjustment};
 use crate::costmodel::{CalibrationStore, CostModel};
 use crate::data::{DatasetProfile, FusedBatch, LengthDistribution, Sequence, SyntheticCorpus};
 use crate::exec::{ExecutionPlan, PjrtExecutor, ReplicaExecutor};
@@ -94,6 +95,8 @@ pub struct Trainer {
     /// wall-clock accumulates here, keyed to the virtual cluster's
     /// world ([`Self::save_profile`] persists it).
     calib: CalibrationStore,
+    /// Virtual-cluster redeploys performed ([`Self::redeploy`]).
+    redeploys: u32,
 }
 
 impl Trainer {
@@ -152,6 +155,7 @@ impl Trainer {
             lengths,
             boundaries,
             calib,
+            redeploys: 0,
         })
     }
 
@@ -166,6 +170,41 @@ impl Trainer {
         self.exec.set_cost(cost);
         self.vplan = plan;
         self
+    }
+
+    /// Redeploy the virtual cluster at a step boundary — the serving
+    /// runtime's swap path applied to a live trainer. The LoRA adapters
+    /// and optimizer state are checkpointed (in memory; a real cluster
+    /// writes [`TrainCheckpoint`] to disk before the process restart),
+    /// the deployment plan and its cost clock are swapped, and the state
+    /// is restored — training resumes at the same step count with the
+    /// same moments, so a redeploy never perturbs the optimizer
+    /// trajectory. Returns the per-group diff: only replica groups that
+    /// actually changed pay checkpoint+restart.
+    pub fn redeploy(&mut self, cost: CostModel, plan: DeploymentPlan) -> PlanAdjustment {
+        let adjustment = plan_adjustment(&self.vplan, &plan);
+        // checkpoint: adapters + Adam moments + step
+        let (m, v) = self.adam.moments();
+        let ck = TrainCheckpoint {
+            lora: self.lora.data.clone(),
+            m: m.to_vec(),
+            v: v.to_vec(),
+            step: self.adam.step_count(),
+        };
+        // swap the deployment (the redeploy point: between steps)
+        self.exec.set_cost(cost);
+        self.vplan = plan;
+        // restore: the joint task restarts under the new plan from the
+        // exact state it checkpointed
+        self.lora = ParamVector { data: ck.lora };
+        self.adam = Adam::from_state(self.cfg.adam, ck.m, ck.v, ck.step);
+        self.redeploys += 1;
+        adjustment
+    }
+
+    /// Virtual-cluster redeploys performed so far.
+    pub fn redeploys(&self) -> u32 {
+        self.redeploys
     }
 
     pub fn engine(&self) -> &Engine {

@@ -4,6 +4,10 @@
 //! absent). Engine compilation dominates test time, so the checks are
 //! grouped into two test functions sharing one engine each.
 
+use lobra::cluster::ClusterSpec;
+use lobra::config::{ModelDesc, ParallelConfig};
+use lobra::coordinator::planner::DeploymentPlan;
+use lobra::costmodel::CostModel;
 use lobra::data::SyntheticCorpus;
 use lobra::runtime::Engine;
 use lobra::train::{Trainer, TrainerConfig};
@@ -127,4 +131,33 @@ fn trainer_learns_and_checkpoints() {
     // the next step continues the pre-save sequence exactly
     let log = trainer.step().unwrap();
     assert_eq!(log.step, step_before + 1, "optimizer step count not restored");
+
+    // --- virtual-cluster redeploy (serving-runtime swap path) ------------
+    // the engine world the trainer's default deployment lives on
+    let preset = trainer.engine().manifest().preset.clone();
+    let model = ModelDesc::by_name(&preset).unwrap_or_else(ModelDesc::tiny);
+    let cluster = ClusterSpec::local_cpu(4);
+    // plan-identical redeploy: zero changed replicas, zero charge
+    let same = trainer.virtual_plan().clone();
+    let adj = trainer.redeploy(CostModel::calibrated(&model, &cluster), same);
+    assert!(adj.is_zero(), "identical plan must charge nothing: {adj:?}");
+    assert_eq!(trainer.redeploys(), 1);
+    // shrink <1,1>x4 → <1,1>x2: exactly the removed replicas pay, and the
+    // optimizer trajectory (adapters, moments, step count) survives
+    let step_pre = trainer.logs().last().unwrap().step;
+    let norm_pre = trainer.lora().norm();
+    let two = DeploymentPlan::homogeneous(
+        ParallelConfig::new(1, 1),
+        2,
+        trainer.n_tasks() as u32,
+    );
+    let adj = trainer.redeploy(CostModel::calibrated(&model, &cluster), two);
+    assert_eq!(adj.changed_replicas, 2, "{adj:?}");
+    assert_eq!(adj.changed_gpus, 2);
+    assert_eq!(trainer.redeploys(), 2);
+    assert_eq!(trainer.lora().norm(), norm_pre, "redeploy touched the adapters");
+    let log = trainer.step().unwrap();
+    assert_eq!(log.step, step_pre + 1, "optimizer step count lost in redeploy");
+    assert!(log.loss.is_finite());
+    assert_eq!(trainer.virtual_plan().n_replicas(), 2);
 }

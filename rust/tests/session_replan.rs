@@ -9,7 +9,11 @@
 //!    long churn trace with duplicate arrivals and unknown exits mixed in;
 //!  * a search that tripped the `max_plans` cap can be *extended* from its
 //!    resume checkpoint until the enumeration completes, recovering the
-//!    exact plan of an uncapped cold search.
+//!    exact plan of an uncapped cold search;
+//!  * the budget-sliced **anytime** search (begin/pump/finish) given an
+//!    unlimited budget is plan-identical to a cold `Planner::plan` for any
+//!    slice schedule, and an exhausted budget still yields a valid
+//!    feasible plan — never `None` while tasks exist.
 
 use lobra::cluster::ClusterSpec;
 use lobra::config::{ModelDesc, TaskSet, TaskSpec};
@@ -176,6 +180,91 @@ fn churn_accounting_over_twenty_events() {
     );
     let (hits, misses) = mgr.tables().stats();
     assert_eq!(hits + misses, mgr.replans as u64, "one table fetch per replan");
+}
+
+#[test]
+fn anytime_with_unlimited_budget_is_plan_identical_to_cold() {
+    // Property: for varied task subsets and slice schedules, pumping the
+    // anytime search to enumeration completion and finishing yields the
+    // exact cold plan (same groups, bit-identical expected_step_time).
+    let (cost, cluster) = world(16);
+    let planner = Planner::new(&cost, &cluster);
+    let opts = churn_opts();
+    let pool = spec_pool();
+    let cases = [
+        (vec![0usize, 2], 7usize),
+        (vec![0, 2, 5], 11),
+        (vec![1, 3, 4, 5], 16),
+    ];
+    for (case, (picks, slice_plans)) in cases.iter().enumerate() {
+        let tasks =
+            TaskSet::new(picks.iter().map(|&k| pool[k].clone()).collect());
+        let mut session = PlanningSession::new(opts.clone());
+        let mut search = session
+            .begin_anytime(&planner, &tasks)
+            .expect("plannable world");
+        let mut slices = 0u32;
+        loop {
+            let r = session.pump_anytime(&planner, &mut search, *slice_plans);
+            slices += 1;
+            assert!(slices < 100_000, "case {case}: anytime failed to converge");
+            if r.done {
+                break;
+            }
+        }
+        assert!(
+            slices > 1,
+            "case {case}: slice budget too generous to exercise resumption"
+        );
+        assert!(search.enumeration_done());
+        let (anytime, stats) = session.finish_anytime(&planner, search).unwrap();
+        assert!(!stats.hit_plan_cap, "case {case}");
+        let cold = planner.plan(&tasks, opts.clone()).unwrap();
+        assert_eq!(anytime.groups, cold.groups, "case {case}");
+        assert_eq!(
+            anytime.expected_step_time.to_bits(),
+            cold.expected_step_time.to_bits(),
+            "case {case}: anytime not bit-identical to cold"
+        );
+    }
+}
+
+#[test]
+fn exhausted_budget_still_yields_feasible_plan() {
+    // An anytime replan whose budget expires mid-search must deploy a
+    // valid feasible best-so-far plan — never None while tasks exist.
+    let (cost, cluster) = world(16);
+    let planner = Planner::new(&cost, &cluster);
+    let opts = churn_opts();
+    let pool = spec_pool();
+    let tasks =
+        TaskSet::new(vec![pool[0].clone(), pool[2].clone(), pool[5].clone()]);
+    let longest = tasks.tasks.iter().map(|t| t.lengths.max_len).max().unwrap();
+
+    let mut session = PlanningSession::new(opts.clone());
+    let mut search = session.begin_anytime(&planner, &tasks).unwrap();
+    // burn one tiny slice, then force-adopt mid-search
+    let r = session.pump_anytime(&planner, &mut search, 3);
+    assert!(!r.done, "3-plan slice cannot finish a 16-GPU enumeration");
+    let (plan, stats) =
+        session.finish_anytime(&planner, search).expect("best-so-far plan");
+    assert!(stats.hit_plan_cap, "an interrupted search memoizes as capped");
+    assert!(plan.gpus_used() >= 1 && plan.gpus_used() <= 16);
+    let cap = plan.groups.iter().map(|&(c, _)| cost.max_seq_len(c)).max().unwrap();
+    assert!(
+        cap >= longest as u64,
+        "best-so-far plan cannot serve the longest tenant: {cap} < {longest}"
+    );
+
+    // extreme case: a budget so tight not even one slice ran — the
+    // homogeneous fallbacks still produce a feasible deployment
+    let search = session.begin_anytime(&planner, &tasks).unwrap();
+    let (plan, _) = session
+        .finish_anytime(&planner, search)
+        .expect("zero-slice finish must still deploy");
+    assert!(plan.gpus_used() >= 1 && plan.gpus_used() <= 16);
+    let cap = plan.groups.iter().map(|&(c, _)| cost.max_seq_len(c)).max().unwrap();
+    assert!(cap >= longest as u64);
 }
 
 #[test]
