@@ -12,6 +12,7 @@
 use lobra::costmodel::calibrate::{fit, Observation};
 use lobra::data::SyntheticCorpus;
 use lobra::runtime::Engine;
+use lobra::util::clock::Stopwatch;
 
 fn main() -> anyhow::Result<()> {
     let mut engine = Engine::load("artifacts")?;
@@ -29,9 +30,9 @@ fn main() -> anyhow::Result<()> {
         engine.train_step((b, s), &lora, &toks, &segs)?; // warmup
         let mut best = f64::INFINITY;
         for _ in 0..3 {
-            let t0 = std::time::Instant::now();
+            let t0 = Stopwatch::start();
             engine.train_step((b, s), &lora, &toks, &segs)?;
-            best = best.min(t0.elapsed().as_secs_f64());
+            best = best.min(t0.elapsed_secs());
         }
         println!("  t({b:>2}, {s:>4}) = {best:.3}s   ({:.0} tokens/s)", (b * s) as f64 / best);
         obs.push(Observation { b, s, seconds: best });

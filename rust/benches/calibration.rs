@@ -22,7 +22,10 @@
 //! LOBRA_BENCH_GPUS=32 LOBRA_BENCH_STEPS=32 cargo bench --bench calibration
 //! ```
 
-use std::time::Instant;
+
+// Benches print their paper-figure tables by design (workspace lints deny
+// `print_stdout` in library code).
+#![allow(clippy::print_stdout)]
 
 use lobra::cluster::ClusterSpec;
 use lobra::config::ModelDesc;
@@ -31,6 +34,8 @@ use lobra::costmodel::{CalibrationStore, CostModel};
 use lobra::exec::profile_sim_steps;
 use lobra::prelude::TaskSet;
 use lobra::util::bench::{fmt_secs, Table};
+use lobra::util::clock::Stopwatch;
+use lobra::util::env as benv;
 
 /// JSON-safe float: non-finite values become `null`.
 fn json_f64(x: f64) -> String {
@@ -42,16 +47,10 @@ fn json_f64(x: f64) -> String {
 }
 
 fn main() {
-    let gpus: u32 = std::env::var("LOBRA_BENCH_GPUS")
-        .ok()
-        .and_then(|s| s.parse().ok())
-        .unwrap_or(16);
-    let steps: usize = std::env::var("LOBRA_BENCH_STEPS")
-        .ok()
-        .and_then(|s| s.parse().ok())
-        .unwrap_or(16);
-    let json_path = std::env::var("LOBRA_BENCH_JSON")
-        .unwrap_or_else(|_| "BENCH_calibration.json".to_string());
+    let gpus: u32 = benv::parse_or("LOBRA_BENCH_GPUS", 16);
+    let steps: usize = benv::parse_or("LOBRA_BENCH_STEPS", 16);
+    let json_path =
+        benv::var("LOBRA_BENCH_JSON").unwrap_or("BENCH_calibration.json").to_string();
 
     let cluster = ClusterSpec::a100_40g(gpus);
     let model = ModelDesc::llama2_7b();
@@ -65,13 +64,13 @@ fn main() {
     println!(
         "== Calibration: sim-backed fit of t(b,s), 7B / {gpus} GPUs, {steps} profiling steps ==\n"
     );
-    let t0 = Instant::now();
+    let t0 = Stopwatch::start();
     let mut store = CalibrationStore::new(&cost);
     let n_obs = profile_sim_steps(&cost, &plan, &tasks, steps, 7, &mut store);
-    let profile_s = t0.elapsed().as_secs_f64();
-    let t1 = Instant::now();
+    let profile_s = t0.elapsed_secs();
+    let t1 = Stopwatch::start();
     let n_fitted = store.refit();
-    let fit_s = t1.elapsed().as_secs_f64();
+    let fit_s = t1.elapsed_secs();
 
     let mut t = Table::new(&["config", "obs", "shapes", "rms_rel_error", "max_rel_divergence"]);
     let mut rows_json = String::new();

@@ -14,18 +14,21 @@
 //! cargo bench --bench fig10_planning
 //! ```
 
+// Benches print their paper-figure tables by design (workspace lints deny
+// `print_stdout` in library code).
+#![allow(clippy::print_stdout)]
+
 use lobra::coordinator::bucketing::{bucketize, BucketingOptions};
 use lobra::coordinator::dispatcher::{DispatchPolicy, Dispatcher};
 use lobra::coordinator::planner::{Planner, PlanningStats};
 use lobra::data::MultiTaskSampler;
 use lobra::experiments::Scenario;
 use lobra::util::bench::{fmt_secs, Table};
+use lobra::util::clock::Stopwatch;
+use lobra::util::env as benv;
 
 fn main() {
-    let steps: usize = std::env::var("LOBRA_BENCH_STEPS")
-        .ok()
-        .and_then(|s| s.parse().ok())
-        .unwrap_or(100);
+    let steps: usize = benv::parse_or("LOBRA_BENCH_STEPS", 100);
     let sc = Scenario::paper_7b_16();
     let cost = sc.cost();
     let planner = Planner::new(&cost, &sc.cluster);
@@ -49,16 +52,16 @@ fn main() {
         let lengths = batch.lengths();
 
         // two-stage: dynamic bucketing + Eq.3 dispatch on the fixed plan
-        let t0 = std::time::Instant::now();
+        let t0 = Stopwatch::start();
         let buckets = bucketize(&lengths, &opts);
         let dp = dispatcher.dispatch(&buckets, DispatchPolicy::Balanced).unwrap();
-        t_twostage_solve.push(t0.elapsed().as_secs_f64());
+        t_twostage_solve.push(t0.elapsed_secs());
         let t_decomp = dp.solver_makespan.max(1e-9);
         let t_actual = dp.predicted_step_time;
         step_times.push(t_actual);
 
         // original problem: joint re-plan for this very batch (Eq. 1)
-        let t1 = std::time::Instant::now();
+        let t1 = Stopwatch::start();
         stats = PlanningStats::default();
         let origin = planner.plan_for_buckets(
             &buckets,
@@ -67,7 +70,7 @@ fn main() {
             &mut stats,
             t1,
         );
-        t_origin_solve.push(t1.elapsed().as_secs_f64());
+        t_origin_solve.push(t1.elapsed_secs());
         if let Some(op) = origin {
             let t_origin = op.expected_step_time.max(1e-9);
             ratios_decomp.push(t_actual / t_origin);

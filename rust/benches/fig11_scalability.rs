@@ -12,25 +12,25 @@
 //! cargo bench --bench fig11_scalability
 //! ```
 
+// Benches print their paper-figure tables by design (workspace lints deny
+// `print_stdout` in library code).
+#![allow(clippy::print_stdout)]
+
 use lobra::cluster::ClusterSpec;
 use lobra::config::ModelDesc;
 use lobra::experiments::{Arm, Scenario};
 use lobra::prelude::TaskSet;
 use lobra::util::bench::Table;
+use lobra::util::clock::Stopwatch;
+use lobra::util::env as benv;
 
 fn main() {
-    let steps: usize = std::env::var("LOBRA_BENCH_STEPS")
-        .ok()
-        .and_then(|s| s.parse().ok())
-        .unwrap_or(50);
+    let steps: usize = benv::parse_or("LOBRA_BENCH_STEPS", 50);
     // the streaming planner keeps 128-GPU planning survivor-bounded; opt in
     // with LOBRA_BENCH_MAX_GPUS=128 (the default stops at the paper's 64)
-    let max_gpus: u32 = std::env::var("LOBRA_BENCH_MAX_GPUS")
-        .ok()
-        .and_then(|s| s.parse().ok())
-        .unwrap_or(64);
+    let max_gpus: u32 = benv::parse_or("LOBRA_BENCH_MAX_GPUS", 64);
     // opt-in wall-clock recording (the CI scalability job sets this)
-    let json_path = std::env::var("LOBRA_BENCH_JSON").ok();
+    let json_path = benv::var("LOBRA_BENCH_JSON").map(str::to_string);
 
     println!("== Figure 11 (left): GPU scalability, 70B, 4 tasks ({steps} steps) ==\n");
     let mut t = Table::new(&[
@@ -44,12 +44,12 @@ fn main() {
             ClusterSpec::a800_80g(gpus),
             TaskSet::paper_scalability_subset(),
         );
-        let t_fused = std::time::Instant::now();
+        let t_fused = Stopwatch::start();
         let fused = sc.arm_report(Arm::TaskFused, steps).unwrap();
-        let fused_wall = t_fused.elapsed().as_secs_f64();
-        let t_lobra = std::time::Instant::now();
+        let fused_wall = t_fused.elapsed_secs();
+        let t_lobra = Stopwatch::start();
         let lobra = sc.arm_report(Arm::Lobra, steps).unwrap();
-        let lobra_wall = t_lobra.elapsed().as_secs_f64();
+        let lobra_wall = t_lobra.elapsed_secs();
         let fg = fused.report.gpu_seconds_per_step;
         let lg = lobra.report.gpu_seconds_per_step;
         t.row(&[

@@ -8,17 +8,19 @@
 //! cargo bench --bench fig12_sensitivity
 //! ```
 
+// Benches print their paper-figure tables by design (workspace lints deny
+// `print_stdout` in library code).
+#![allow(clippy::print_stdout)]
+
 use lobra::coordinator::bucketing::BucketingOptions;
 use lobra::coordinator::planner::Planner;
 use lobra::coordinator::scheduler::{Scheduler, SchedulerOptions};
 use lobra::experiments::Scenario;
 use lobra::util::bench::Table;
+use lobra::util::env as benv;
 
 fn main() {
-    let steps: usize = std::env::var("LOBRA_BENCH_STEPS")
-        .ok()
-        .and_then(|s| s.parse().ok())
-        .unwrap_or(50);
+    let steps: usize = benv::parse_or("LOBRA_BENCH_STEPS", 50);
     let sc = Scenario::paper_7b_16();
     let cost = sc.cost();
     let planner = Planner::new(&cost, &sc.cluster);

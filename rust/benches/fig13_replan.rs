@@ -28,7 +28,10 @@
 //! LOBRA_BENCH_SLICE=500 cargo bench --bench fig13_replan
 //! ```
 
-use std::time::Instant;
+
+// Benches print their paper-figure tables by design (workspace lints deny
+// `print_stdout` in library code).
+#![allow(clippy::print_stdout)]
 
 use lobra::cluster::ClusterSpec;
 use lobra::config::{ModelDesc, TaskSet, TaskSpec};
@@ -36,18 +39,13 @@ use lobra::coordinator::planner::{Planner, PlannerOptions};
 use lobra::coordinator::session::PlanningSession;
 use lobra::costmodel::CostModel;
 use lobra::util::bench::{fmt_secs, Table};
+use lobra::util::clock::Stopwatch;
+use lobra::util::env as benv;
 
 fn main() {
-    let gpus: u32 = std::env::var("LOBRA_BENCH_GPUS")
-        .ok()
-        .and_then(|s| s.parse().ok())
-        .unwrap_or(64);
-    let n_events: usize = std::env::var("LOBRA_BENCH_EVENTS")
-        .ok()
-        .and_then(|s| s.parse().ok())
-        .unwrap_or(12);
-    let json_path = std::env::var("LOBRA_BENCH_JSON")
-        .unwrap_or_else(|_| "BENCH_fig13.json".to_string());
+    let gpus: u32 = benv::parse_or("LOBRA_BENCH_GPUS", 64);
+    let n_events: usize = benv::parse_or("LOBRA_BENCH_EVENTS", 12);
+    let json_path = benv::var("LOBRA_BENCH_JSON").unwrap_or("BENCH_fig13.json").to_string();
 
     let cluster = ClusterSpec::a800_80g(gpus);
     let model = ModelDesc::llama2_70b();
@@ -82,13 +80,13 @@ fn main() {
         next += 1;
         let tasks = TaskSet::new(live.clone());
 
-        let t0 = Instant::now();
+        let t0 = Stopwatch::start();
         let cold = planner.plan(&tasks, opts.clone()).expect("cold plan");
-        let cold_s = t0.elapsed().as_secs_f64();
+        let cold_s = t0.elapsed_secs();
 
-        let t1 = Instant::now();
+        let t1 = Stopwatch::start();
         let warm = session.plan(&planner, &tasks).expect("warm plan");
-        let warm_s = t1.elapsed().as_secs_f64();
+        let warm_s = t1.elapsed_secs();
 
         let identical = warm.groups == cold.groups
             && warm.expected_step_time.to_bits() == cold.expected_step_time.to_bits();
@@ -123,10 +121,7 @@ fn main() {
     );
 
     // --- anytime budget sweep: plan quality vs enumeration budget ---
-    let slice_plans: usize = std::env::var("LOBRA_BENCH_SLICE")
-        .ok()
-        .and_then(|s| s.parse().ok())
-        .unwrap_or(2_000);
+    let slice_plans: usize = benv::parse_or("LOBRA_BENCH_SLICE", 2_000);
     let tasks = TaskSet::new(live.clone());
     println!(
         "\n== anytime budget sweep: best-so-far objective per {slice_plans}-plan slice =="
@@ -135,14 +130,14 @@ fn main() {
     let mut search =
         sweep.begin_anytime(&planner, &tasks).expect("plannable final task set");
     let mut curve: Vec<(usize, f64, f64)> = Vec::new();
-    let t_sweep = Instant::now();
+    let t_sweep = Stopwatch::start();
     let mut ct = Table::new(&["slice", "plans", "best step time", "wall"]);
     loop {
         let r = sweep.pump_anytime(&planner, &mut search, slice_plans);
         let best = sweep
             .anytime_best(&planner, &search)
             .expect("anytime search always holds a feasible best-so-far plan");
-        let wall = t_sweep.elapsed().as_secs_f64();
+        let wall = t_sweep.elapsed_secs();
         curve.push((search.n_enumerated(), best.expected_step_time, wall));
         ct.row(&[
             curve.len().to_string(),

@@ -9,14 +9,16 @@
 //! cargo bench --bench fig7_end_to_end
 //! ```
 
+// Benches print their paper-figure tables by design (workspace lints deny
+// `print_stdout` in library code).
+#![allow(clippy::print_stdout)]
+
 use lobra::experiments::{Arm, Scenario};
 use lobra::util::bench::Table;
+use lobra::util::env as benv;
 
 fn main() {
-    let steps: usize = std::env::var("LOBRA_BENCH_STEPS")
-        .ok()
-        .and_then(|s| s.parse().ok())
-        .unwrap_or(100);
+    let steps: usize = benv::parse_or("LOBRA_BENCH_STEPS", 100);
     println!("== Figure 7: end-to-end evaluation ({steps} steps/arm) ==\n");
 
     let scenarios = [

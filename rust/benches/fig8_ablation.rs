@@ -12,16 +12,18 @@
 //! cargo bench --bench fig8_ablation
 //! ```
 
+// Benches print their paper-figure tables by design (workspace lints deny
+// `print_stdout` in library code).
+#![allow(clippy::print_stdout)]
+
 use lobra::coordinator::dispatcher::DispatchPolicy;
 use lobra::coordinator::planner::Planner;
 use lobra::experiments::{Arm, Scenario};
 use lobra::util::bench::Table;
+use lobra::util::env as benv;
 
 fn main() {
-    let steps: usize = std::env::var("LOBRA_BENCH_STEPS")
-        .ok()
-        .and_then(|s| s.parse().ok())
-        .unwrap_or(100);
+    let steps: usize = benv::parse_or("LOBRA_BENCH_STEPS", 100);
     let sc = Scenario::paper_7b_16();
     println!("== Figure 8: ablation, {} ({steps} steps/arm) ==\n", sc.label);
 

@@ -7,6 +7,10 @@
 //! cargo bench --bench fig9_case_study
 //! ```
 
+// Benches print their paper-figure tables by design (workspace lints deny
+// `print_stdout` in library code).
+#![allow(clippy::print_stdout)]
+
 use lobra::coordinator::bucketing::{bucketize, buckets_from_boundaries, BucketingOptions};
 use lobra::coordinator::dispatcher::{DispatchPolicy, Dispatcher};
 use lobra::coordinator::planner::Planner;

@@ -9,6 +9,10 @@
 //! cargo bench --bench hotpath
 //! ```
 
+// Benches print their paper-figure tables by design (workspace lints deny
+// `print_stdout` in library code).
+#![allow(clippy::print_stdout)]
+
 use lobra::coordinator::bucketing::{bucketize, BucketingOptions};
 use lobra::coordinator::dispatcher::{DispatchPolicy, Dispatcher};
 use lobra::coordinator::planner::{LowerBoundScratch, Planner};

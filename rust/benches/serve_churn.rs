@@ -16,7 +16,10 @@
 //! LOBRA_BENCH_BUDGET=0 cargo bench --bench serve_churn   # unlimited + certify
 //! ```
 
-use std::time::Instant;
+
+// Benches print their paper-figure tables by design (workspace lints deny
+// `print_stdout` in library code).
+#![allow(clippy::print_stdout)]
 
 use lobra::cluster::ClusterSpec;
 use lobra::config::ModelDesc;
@@ -26,9 +29,11 @@ use lobra::coordinator::runtime::{
 use lobra::costmodel::CostModel;
 use lobra::prelude::TaskSet;
 use lobra::util::bench::{fmt_secs, Table};
+use lobra::util::clock::Stopwatch;
+use lobra::util::env as benv;
 
 fn env_f64(key: &str, default: f64) -> f64 {
-    std::env::var(key).ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+    benv::parse_or(key, default)
 }
 
 fn main() {
@@ -36,8 +41,7 @@ fn main() {
     // 0 = unlimited budget (every replan runs to certified completion)
     let budget = env_f64("LOBRA_BENCH_BUDGET", 120.0);
     let spacing = env_f64("LOBRA_BENCH_SPACING", 900.0);
-    let json_path = std::env::var("LOBRA_BENCH_JSON")
-        .unwrap_or_else(|_| "BENCH_serve.json".to_string());
+    let json_path = benv::var("LOBRA_BENCH_JSON").unwrap_or("BENCH_serve.json").to_string();
 
     let cluster = ClusterSpec::a100_40g(gpus);
     let model = ModelDesc::llama2_7b();
@@ -60,10 +64,10 @@ fn main() {
         if budget > 0.0 { format!("{budget:.0}s") } else { "unlimited".into() },
     );
 
-    let t0 = Instant::now();
+    let t0 = Stopwatch::start();
     let mut rt = ServeRuntime::new(&cost, &cluster, opts);
     let report = rt.run_trace(&trace);
-    let wall = t0.elapsed().as_secs_f64();
+    let wall = t0.elapsed_secs();
 
     let mut t = Table::new(&["tenant", "arrived", "admitted", "tta", "steps", "exited"]);
     for ten in &report.tenants {

@@ -10,6 +10,10 @@
 //! cargo bench --bench table3_throughput
 //! ```
 
+// Benches print their paper-figure tables by design (workspace lints deny
+// `print_stdout` in library code).
+#![allow(clippy::print_stdout)]
+
 use lobra::cluster::ClusterSpec;
 use lobra::config::{ModelDesc, ParallelConfig};
 use lobra::costmodel::CostModel;

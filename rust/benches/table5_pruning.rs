@@ -20,23 +20,23 @@
 //!   cargo bench --bench table5_pruning
 //! ```
 
+// Benches print their paper-figure tables by design (workspace lints deny
+// `print_stdout` in library code).
+#![allow(clippy::print_stdout)]
+
 use lobra::cluster::ClusterSpec;
 use lobra::config::ModelDesc;
 use lobra::coordinator::planner::{Planner, PlannerOptions};
 use lobra::costmodel::CostModel;
 use lobra::prelude::TaskSet;
 use lobra::util::bench::Table;
+use lobra::util::clock::Stopwatch;
+use lobra::util::env as benv;
 
 fn main() {
-    let timeout: f64 = std::env::var("LOBRA_BENCH_TIMEOUT")
-        .ok()
-        .and_then(|s| s.parse().ok())
-        .unwrap_or(120.0);
-    let max_gpus: u32 = std::env::var("LOBRA_BENCH_MAX_GPUS")
-        .ok()
-        .and_then(|s| s.parse().ok())
-        .unwrap_or(128);
-    let json_path = std::env::var("LOBRA_BENCH_JSON").ok();
+    let timeout: f64 = benv::parse_or("LOBRA_BENCH_TIMEOUT", 120.0);
+    let max_gpus: u32 = benv::parse_or("LOBRA_BENCH_MAX_GPUS", 128);
+    let json_path = benv::var("LOBRA_BENCH_JSON").map(str::to_string);
     let tasks = TaskSet::paper_scalability_subset();
     println!(
         "== Table 5: planning cost, 70B, 4 tasks (timeout {timeout:.0}s/cell, \
@@ -96,9 +96,9 @@ fn main() {
                     continue;
                 }
             }
-            let t0 = std::time::Instant::now();
+            let t0 = Stopwatch::start();
             let result = planner.plan_with_stats(&tasks, opts);
-            let dt = t0.elapsed().as_secs_f64();
+            let dt = t0.elapsed_secs();
             match result {
                 Some((plan, stats)) => {
                     if dt > timeout || stats.hit_plan_cap {

@@ -7,14 +7,16 @@
 //! cargo bench --bench table6_sequential
 //! ```
 
+// Benches print their paper-figure tables by design (workspace lints deny
+// `print_stdout` in library code).
+#![allow(clippy::print_stdout)]
+
 use lobra::experiments::{Arm, Scenario};
 use lobra::util::bench::Table;
+use lobra::util::env as benv;
 
 fn main() {
-    let steps: usize = std::env::var("LOBRA_BENCH_STEPS")
-        .ok()
-        .and_then(|s| s.parse().ok())
-        .unwrap_or(30);
+    let steps: usize = benv::parse_or("LOBRA_BENCH_STEPS", 30);
     let sc = Scenario::paper_70b_64();
     println!("== Table 6: per-task sequential comparison, {} ({steps} steps) ==\n", sc.label);
 

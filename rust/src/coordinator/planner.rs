@@ -38,6 +38,7 @@ use crate::coordinator::dispatcher::{DispatchPolicy, Dispatcher};
 use crate::costmodel::{BucketLoad, CostModel, CostTable};
 use crate::data::MultiTaskSampler;
 use crate::solver::partition::{self, Plan};
+use crate::util::clock::Stopwatch;
 use crate::util::par::{max_threads, par_fold, par_map};
 
 /// A deployed set of heterogeneous FT replicas (the paper's Table 2 rows).
@@ -909,7 +910,7 @@ impl<'a> Planner<'a> {
         tasks: &TaskSet,
         opts: PlannerOptions,
     ) -> Option<(DeploymentPlan, PlanningStats)> {
-        let start = std::time::Instant::now();
+        let start = Stopwatch::start();
         let mut stats = PlanningStats::default();
         if tasks.is_empty() {
             return None;
@@ -933,7 +934,7 @@ impl<'a> Planner<'a> {
         n_tasks: u32,
         opts: &PlannerOptions,
         stats: &mut PlanningStats,
-        start: std::time::Instant,
+        start: Stopwatch,
     ) -> Option<DeploymentPlan> {
         self.plan_for_buckets_robust(buckets, &[], n_tasks, opts, stats, start)
     }
@@ -954,7 +955,7 @@ impl<'a> Planner<'a> {
         n_tasks: u32,
         opts: &PlannerOptions,
         stats: &mut PlanningStats,
-        start: std::time::Instant,
+        start: Stopwatch,
     ) -> Option<DeploymentPlan> {
         // 2. candidate configurations
         let configs = if opts.config_proposal {
@@ -997,7 +998,7 @@ impl<'a> Planner<'a> {
         n_tasks: u32,
         opts: &PlannerOptions,
         stats: &mut PlanningStats,
-        start: std::time::Instant,
+        start: Stopwatch,
         table: &CostTable,
         configs: &[ParallelConfig],
         seed_bound: Option<f64>,
@@ -1046,7 +1047,7 @@ impl<'a> Planner<'a> {
         // 5. inner dispatch solve per candidate (parallel, memoized)
         let plan =
             self.evaluate_candidates(candidates, buckets, eval, n_tasks, opts, table, configs)?;
-        stats.solve_seconds = start.elapsed().as_secs_f64();
+        stats.solve_seconds = start.elapsed_secs();
         Some((plan, carry))
     }
 

@@ -40,7 +40,6 @@
 //!   during replan windows), and GPU-seconds lost to redeploys — charged
 //!   only for replica groups that actually changed.
 
-use std::time::Instant;
 
 use crate::cluster::ClusterSpec;
 use crate::config::{TaskSet, TaskSpec};
@@ -48,6 +47,7 @@ use crate::coordinator::planner::{Planner, PlannerOptions};
 use crate::coordinator::tasks::{EventOutcome, ReplanOutcome, TaskEvent, TaskManager};
 use crate::costmodel::CostModel;
 use crate::exec::SimTrainLoop;
+use crate::util::clock::Stopwatch;
 
 /// How a replan slice's search work is charged against the budget.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -57,6 +57,21 @@ pub enum BudgetMeter {
     /// Deterministic sim clock: `seconds × plans enumerated` per slice —
     /// host-speed-independent, so tests and benches reproduce exactly.
     SimPerPlan(f64),
+}
+
+impl BudgetMeter {
+    /// Seconds to charge one search slice against the replan budget.
+    /// `wall_seconds` comes from a [`crate::util::clock::Stopwatch`] (the
+    /// runtime's only wall-clock consumer — rule R1 confines the raw reads
+    /// to `util::clock`); `Wall` charges it directly, `SimPerPlan` ignores
+    /// it in favor of the deterministic enumeration count, the `SimClock`
+    /// analogue for search work.
+    pub fn charge(&self, wall_seconds: f64, plans_enumerated: usize) -> f64 {
+        match self {
+            BudgetMeter::Wall => wall_seconds,
+            BudgetMeter::SimPerPlan(per_plan) => per_plan * plans_enumerated as f64,
+        }
+    }
 }
 
 /// Serving-runtime knobs.
@@ -166,6 +181,7 @@ impl ServeReport {
         if ttas.is_empty() {
             return None;
         }
+        // lint:allow(R5): sequential mean over a Vec in event order, not a parallel reduce.
         Some(ttas.iter().sum::<f64>() / ttas.len() as f64)
     }
 }
@@ -352,18 +368,15 @@ impl<'a> ServeRuntime<'a> {
     /// step boundary.
     fn replan_tick(&mut self) {
         let stepped = self.train.is_some() && self.train_step(true);
-        let t0 = Instant::now();
+        let t0 = Stopwatch::start();
         let slice = self.mgr.pump_replan(self.opts.slice_plans);
-        let wall = t0.elapsed().as_secs_f64();
+        let wall = t0.elapsed_secs();
         let (done, enumerated) = match slice {
             Some(s) => (s.done, s.n_enumerated),
             // no search to pump (infeasible context): adopt immediately
             None => (true, 0),
         };
-        let charge = match self.opts.meter {
-            BudgetMeter::Wall => wall,
-            BudgetMeter::SimPerPlan(per_plan) => per_plan * enumerated as f64,
-        };
+        let charge = self.opts.meter.charge(wall, enumerated);
         if !stepped {
             // nothing overlapped the search: its cost is exposed on the
             // serving clock (cold starts pay for planning, live tenants

@@ -23,6 +23,7 @@ use crate::costmodel::{CostModel, CostTable, CostTables};
 use crate::data::MultiTaskSampler;
 use crate::exec::{ExecutionPlan, ReplicaExecutor, SimExecutor};
 use crate::metrics::JointFtReport;
+use crate::util::clock::Stopwatch;
 
 /// Scheduler knobs — the Figure 8 ablation axes.
 #[derive(Debug, Clone)]
@@ -161,14 +162,14 @@ impl<'a> Scheduler<'a> {
         let lengths = batch.lengths();
         let buckets = self.buckets_for(&lengths);
 
-        let t0 = std::time::Instant::now();
+        let t0 = Stopwatch::start();
         if self.table.as_ref().map_or(true, |t| !t.covers(&buckets.boundaries)) {
             let cfgs: Vec<ParallelConfig> =
                 self.plan.groups.iter().map(|&(c, _)| c).collect();
             self.table =
                 Some(self.tables.get_or_build(self.cost, &cfgs, &buckets.boundaries));
         }
-        let table_seconds = t0.elapsed().as_secs_f64();
+        let table_seconds = t0.elapsed_secs();
         let eplan = ExecutionPlan::build(
             self.cost,
             self.plan,

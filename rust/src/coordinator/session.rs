@@ -45,7 +45,6 @@
 //! cold search.
 
 use std::sync::Arc;
-use std::time::Instant;
 
 use crate::config::{ParallelConfig, TaskSet};
 use crate::coordinator::bucketing::Buckets;
@@ -55,6 +54,7 @@ use crate::coordinator::planner::{
 };
 use crate::costmodel::{cost_fingerprint, fnv1a, CostTable, CostTables};
 use crate::solver::partition::{Plan, PlanCursor};
+use crate::util::clock::Stopwatch;
 
 /// Counters of how the session's replans were served.
 #[derive(Debug, Clone, Default)]
@@ -301,7 +301,7 @@ impl PlanningSession {
         planner: &Planner,
         tasks: &TaskSet,
     ) -> Option<AnytimeReplan> {
-        let start = Instant::now();
+        let start = Stopwatch::start();
         if tasks.is_empty() {
             self.memo = None;
             return None;
@@ -368,7 +368,7 @@ impl PlanningSession {
             n_survivors: 0,
             peak_storage: 0,
             slices: 0,
-            spent_seconds: start.elapsed().as_secs_f64(),
+            spent_seconds: start.elapsed_secs(),
         })
     }
 
@@ -394,7 +394,7 @@ impl PlanningSession {
                 done: search.cursor.is_exhausted(),
             };
         }
-        let start = Instant::now();
+        let start = Stopwatch::start();
         let mut opts = self.opts.clone();
         opts.max_plans = slice_plans;
 
@@ -410,7 +410,7 @@ impl PlanningSession {
             search.seeded = false;
             search.cursor.finish();
             search.slices += 1;
-            let wall = start.elapsed().as_secs_f64();
+            let wall = start.elapsed_secs();
             search.spent_seconds += wall;
             return SliceReport {
                 n_enumerated: search.n_enumerated,
@@ -473,7 +473,7 @@ impl PlanningSession {
             (false, _) => search.cursor.finish(),
         }
         search.slices += 1;
-        let wall = start.elapsed().as_secs_f64();
+        let wall = start.elapsed_secs();
         search.spent_seconds += wall;
         SliceReport {
             n_enumerated: ext.n_enumerated,
@@ -519,7 +519,7 @@ impl PlanningSession {
         planner: &Planner,
         search: AnytimeReplan,
     ) -> Option<(DeploymentPlan, PlanningStats)> {
-        let start = Instant::now();
+        let start = Stopwatch::start();
         let plan = planner.evaluate_candidates(
             search.candidates.clone(),
             &search.buckets,
@@ -535,7 +535,7 @@ impl PlanningSession {
                     n_candidate_configs: search.configs.len(),
                     n_plans_enumerated: search.n_enumerated,
                     n_plans_after_filter: search.n_survivors,
-                    solve_seconds: search.spent_seconds + start.elapsed().as_secs_f64(),
+                    solve_seconds: search.spent_seconds + start.elapsed_secs(),
                     hit_plan_cap: search.hit_cap,
                     peak_plan_storage: search.peak_storage,
                 };
@@ -605,7 +605,7 @@ impl PlanningSession {
             return None; // cost world changed (e.g. recalibration): checkpoint is stale
         }
         let resume = memo.resume.clone()?;
-        let start = Instant::now();
+        let start = Stopwatch::start();
         let mut stats = PlanningStats::default();
         let opts = self.opts.clone();
 
@@ -646,7 +646,7 @@ impl PlanningSession {
             &table,
             &configs,
         )?;
-        stats.solve_seconds = start.elapsed().as_secs_f64();
+        stats.solve_seconds = start.elapsed_secs();
 
         self.stats.extensions += 1;
         let carry = SearchCarry {

@@ -64,6 +64,7 @@ use crate::coordinator::dispatcher::{DispatchPlan, DispatchPolicy, Dispatcher};
 use crate::coordinator::planner::DeploymentPlan;
 use crate::costmodel::{BucketLoad, CalibrationStore, CostModel, CostTable, Observation};
 use crate::data::{FusedBatch, MultiTaskSampler, Sequence};
+use crate::util::clock::Stopwatch;
 use anyhow::Result;
 
 /// One replica's workload for one step: its dispatched bucket loads plus
@@ -125,14 +126,14 @@ impl ExecutionPlan {
         buckets: Buckets,
         policy: DispatchPolicy,
     ) -> Option<ExecutionPlan> {
-        let t0 = std::time::Instant::now();
+        let t0 = Stopwatch::start();
         let dispatch = match &table {
             Some(t) => {
                 Dispatcher::with_table(cost, deployment, t).dispatch(&buckets, policy)?
             }
             None => Dispatcher::new(cost, deployment).dispatch(&buckets, policy)?,
         };
-        let solve_seconds = t0.elapsed().as_secs_f64();
+        let solve_seconds = t0.elapsed_secs();
 
         // Deal concrete sequences: per bucket, a FIFO queue in batch order;
         // replicas draw from it in fixed group-major order. Deterministic

@@ -8,6 +8,7 @@ use crate::config::ParallelConfig;
 use crate::costmodel::{CostModel, Observation};
 use crate::data::SyntheticCorpus;
 use crate::runtime::{Engine, ParamVector};
+use crate::util::clock::Stopwatch;
 use crate::util::par::par_map;
 use anyhow::{anyhow, Result};
 
@@ -182,7 +183,7 @@ impl ReplicaExecutor for PjrtExecutor {
     }
 
     fn execute_step(&mut self, plan: &ExecutionPlan) -> Result<StepExecution> {
-        let t0 = std::time::Instant::now();
+        let t0 = Stopwatch::start();
         let shapes = self.engine.shapes();
         // materialize sequentially (deterministic corpus RNG order) ...
         let per_replica: Vec<(ParallelConfig, Vec<Microbatch>)> = plan
@@ -207,7 +208,7 @@ impl ReplicaExecutor for PjrtExecutor {
             let mut acc = ReplicaPartial::empty(n_params, n_tasks);
             let observe = config.n() == 1;
             for mb in mbs {
-                let mb_t0 = std::time::Instant::now();
+                let mb_t0 = Stopwatch::start();
                 let out = engine.train_step(mb.shape, lora, &mb.tokens, &mb.seg_ids)?;
                 if observe {
                     acc.observations.push((
@@ -215,7 +216,7 @@ impl ReplicaExecutor for PjrtExecutor {
                         Observation {
                             b: mb.shape.0,
                             s: mb.shape.1,
-                            seconds: mb_t0.elapsed().as_secs_f64(),
+                            seconds: mb_t0.elapsed_secs(),
                         },
                     ));
                 }
@@ -247,7 +248,7 @@ impl ReplicaExecutor for PjrtExecutor {
         Ok(StepExecution {
             replica_seconds,
             step_time,
-            wall_seconds: t0.elapsed().as_secs_f64(),
+            wall_seconds: t0.elapsed_secs(),
             observations: total.observations,
             train: Some(TrainOutput {
                 grad: total.grad,

@@ -19,6 +19,7 @@ use crate::coordinator::dispatcher::DispatchPolicy;
 use crate::coordinator::planner::DeploymentPlan;
 use crate::costmodel::{CostModel, CostTable, CostTables};
 use crate::data::MultiTaskSampler;
+use crate::util::clock::Stopwatch;
 
 /// One executed simulated step.
 #[derive(Debug, Clone, Copy)]
@@ -115,14 +116,14 @@ impl<'a> SimTrainLoop<'a> {
         let lengths = batch.lengths();
         let buckets = bucketize(&lengths, &self.bucketing);
 
-        let t0 = std::time::Instant::now();
+        let t0 = Stopwatch::start();
         if self.table.as_ref().map_or(true, |t| !t.covers(&buckets.boundaries)) {
             let cfgs: Vec<ParallelConfig> =
                 self.plan.groups.iter().map(|&(c, _)| c).collect();
             self.table =
                 Some(self.tables.get_or_build(self.cost, &cfgs, &buckets.boundaries));
         }
-        let table_seconds = t0.elapsed().as_secs_f64();
+        let table_seconds = t0.elapsed_secs();
         let eplan = ExecutionPlan::build(
             self.cost,
             &self.plan,

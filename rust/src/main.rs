@@ -17,6 +17,10 @@
 //! The shared `--model/--gpus/--cluster/--tasks/--profile` world flags are
 //! parsed once by `World::parse` and reused by every subcommand.
 
+// The CLI is the product's stdout surface (workspace lints deny
+// `print_stdout` in library code).
+#![allow(clippy::print_stdout)]
+
 use anyhow::{anyhow, bail, Result};
 use lobra::cluster::ClusterSpec;
 use lobra::config::ModelDesc;
@@ -75,12 +79,12 @@ USAGE:
 
 /// Tiny flag parser: `--key value` and boolean `--key` switches.
 struct Args {
-    flags: std::collections::HashMap<String, String>,
+    flags: std::collections::BTreeMap<String, String>,
 }
 
 impl Args {
     fn parse(argv: &[String], booleans: &[&str]) -> Result<Self> {
-        let mut flags = std::collections::HashMap::new();
+        let mut flags = std::collections::BTreeMap::new();
         let mut i = 0;
         while i < argv.len() {
             let a = &argv[i];

@@ -3,7 +3,7 @@
 use super::manifest::Manifest;
 use super::params::ParamVector;
 use anyhow::{anyhow, Result};
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::path::Path;
 
 /// Outputs of one train-step execution.
@@ -28,7 +28,7 @@ pub struct StepOutput {
 pub struct Engine {
     client: xla::PjRtClient,
     manifest: Manifest,
-    train_execs: HashMap<(u64, u64), xla::PjRtLoadedExecutable>,
+    train_execs: BTreeMap<(u64, u64), xla::PjRtLoadedExecutable>,
     eval_exec: Option<((u64, u64), xla::PjRtLoadedExecutable)>,
     base_buffer: Option<xla::PjRtBuffer>,
 }
@@ -38,7 +38,7 @@ impl Engine {
     pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
         let manifest = Manifest::load(&dir)?;
         let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
-        let mut train_execs = HashMap::new();
+        let mut train_execs = BTreeMap::new();
         let mut eval_exec = None;
         for a in &manifest.artifacts {
             let path = manifest.artifact_path(a);

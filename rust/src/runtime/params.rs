@@ -49,6 +49,7 @@ impl ParamVector {
 
     /// L2 norm (diagnostics / tests).
     pub fn norm(&self) -> f64 {
+        // lint:allow(R5): sequential reduction over one buffer — order is fixed.
         self.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
     }
 

@@ -58,6 +58,7 @@ pub fn solve_exact(p: &DispatchProblem, node_budget: usize) -> Option<Assignment
             .iter()
             .zip(d.iter())
             .map(|(g, row)| group_time(g, row))
+            // lint:allow(R5): f64::max is order-independent (no rounding drift).
             .fold(0.0f64, f64::max);
         if partial >= best.makespan {
             return;

@@ -236,6 +236,7 @@ fn local_search(p: &DispatchProblem, d: &mut [Vec<u64>], budget: usize) {
                         .enumerate()
                         .filter(|&(i, _)| i != crit && i != dst)
                         .map(|(_, &x)| x)
+                        // lint:allow(R5): f64::max is order-independent (no rounding drift).
                         .fold(0.0f64, f64::max);
                     let new_max = tc.max(td).max(others);
                     if new_max + 1e-12 < crit_t
@@ -288,6 +289,7 @@ fn local_search(p: &DispatchProblem, d: &mut [Vec<u64>], budget: usize) {
                         .enumerate()
                         .filter(|&(i, _)| i != crit && i != dst)
                         .map(|(_, &x)| x)
+                        // lint:allow(R5): f64::max is order-independent (no rounding drift).
                         .fold(0.0f64, f64::max);
                     let new_max = tc.max(td).max(others);
                     if new_max + 1e-12 < crit_t

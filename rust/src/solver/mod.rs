@@ -159,6 +159,7 @@ pub fn makespan(p: &DispatchProblem, d: &[Vec<u64>]) -> f64 {
         .iter()
         .zip(d)
         .map(|(g, row)| group_time(g, row))
+        // lint:allow(R5): f64::max is order-independent (no rounding drift).
         .fold(0.0, f64::max)
 }
 

@@ -14,9 +14,22 @@
 //! state comes back zeroed, exactly the old behavior, but now explicit in
 //! the return value instead of silent.
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, Context, Result};
 use std::io::{Read, Write};
 use std::path::Path;
+
+/// Read `bytes[at..at + 8]` as a little-endian `u64`, as a checked error
+/// instead of a panic: the caller's length guard and this slice must agree,
+/// and a corrupt file must surface as `Err`, never abort `lobra train`.
+fn read_u64_le(bytes: &[u8], at: usize, path: &Path) -> Result<u64> {
+    let end = at.checked_add(8).filter(|&e| e <= bytes.len());
+    let slice = end
+        .map(|e| &bytes[at..e])
+        .ok_or_else(|| anyhow!("checkpoint {path:?}: truncated header at byte {at}"))?;
+    let mut le = [0u8; 8];
+    le.copy_from_slice(slice);
+    Ok(u64::from_le_bytes(le))
+}
 
 /// File magic; bump the trailing digit on layout changes.
 pub const CHECKPOINT_MAGIC: &[u8; 8] = b"LOBRACK2";
@@ -72,8 +85,11 @@ impl TrainCheckpoint {
         push_f32s(&mut bytes, &self.lora);
         push_f32s(&mut bytes, &self.m);
         push_f32s(&mut bytes, &self.v);
-        let mut f = std::fs::File::create(path)?;
-        f.write_all(&bytes)?;
+        let path = path.as_ref();
+        let mut f = std::fs::File::create(path)
+            .with_context(|| format!("creating checkpoint {path:?}"))?;
+        f.write_all(&bytes)
+            .with_context(|| format!("writing checkpoint {path:?}"))?;
         Ok(())
     }
 
@@ -81,16 +97,19 @@ impl TrainCheckpoint {
     /// mismatch. Returns `(checkpoint, legacy)` where `legacy` is true for
     /// pre-optimizer-state files (adapters restored, moments zeroed).
     pub fn load(path: impl AsRef<Path>, expected_params: usize) -> Result<(Self, bool)> {
-        let mut f = std::fs::File::open(path.as_ref())?;
+        let path = path.as_ref();
+        let mut f = std::fs::File::open(path)
+            .with_context(|| format!("opening checkpoint {path:?}"))?;
         let mut bytes = Vec::new();
-        f.read_to_end(&mut bytes)?;
+        f.read_to_end(&mut bytes)
+            .with_context(|| format!("reading checkpoint {path:?}"))?;
         if bytes.len() >= 24 && &bytes[..8] == CHECKPOINT_MAGIC {
-            let n = u64::from_le_bytes(bytes[8..16].try_into().unwrap()) as usize;
-            let step = u64::from_le_bytes(bytes[16..24].try_into().unwrap());
+            let n = read_u64_le(&bytes, 8, path)? as usize;
+            let step = read_u64_le(&bytes, 16, path)?;
             if n != expected_params {
                 return Err(anyhow!(
                     "checkpoint {:?}: {} params, expected {}",
-                    path.as_ref(),
+                    path,
                     n,
                     expected_params
                 ));
@@ -99,7 +118,7 @@ impl TrainCheckpoint {
             if body.len() != 12 * n {
                 return Err(anyhow!(
                     "checkpoint {:?}: truncated body ({} bytes, expected {})",
-                    path.as_ref(),
+                    path,
                     body.len(),
                     12 * n
                 ));
@@ -119,7 +138,7 @@ impl TrainCheckpoint {
         } else {
             Err(anyhow!(
                 "checkpoint {:?}: {} bytes is neither v2 nor legacy ({} expected)",
-                path.as_ref(),
+                path,
                 bytes.len(),
                 4 * expected_params
             ))

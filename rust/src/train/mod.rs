@@ -33,6 +33,7 @@ use crate::costmodel::{CalibrationStore, CostModel};
 use crate::data::{DatasetProfile, FusedBatch, LengthDistribution, Sequence, SyntheticCorpus};
 use crate::exec::{ExecutionPlan, PjrtExecutor, ReplicaExecutor};
 use crate::runtime::{Engine, ParamVector};
+use crate::util::clock::Stopwatch;
 use crate::util::Rng;
 use anyhow::{anyhow, Result};
 
@@ -268,7 +269,7 @@ impl Trainer {
     /// engine, reduce gradients deterministically, and apply one Adam
     /// update.
     pub fn step(&mut self) -> Result<TrainLog> {
-        let t0 = std::time::Instant::now();
+        let t0 = Stopwatch::start();
         let batch = self.draw_batch();
         let buckets = buckets_from_boundaries(&batch.lengths(), &self.boundaries);
         let eplan = ExecutionPlan::build(
@@ -311,7 +312,7 @@ impl Trainer {
                 })
                 .collect(),
             microbatches: train.microbatches,
-            wall_seconds: t0.elapsed().as_secs_f64(),
+            wall_seconds: t0.elapsed_secs(),
             virtual_seconds: out.step_time,
             virtual_gpu_seconds: self.vplan.gpus_used() as f64 * out.step_time,
         };

@@ -3,18 +3,28 @@
 //! fixed-width table printing so every bench reproduces its paper artifact
 //! as a readable report.
 
-use std::time::Instant;
+use crate::util::clock::{Clock, Stopwatch, WallClock};
 
 /// Time `f` with `warmup` + `iters` runs; returns (median, mean, min) secs.
-pub fn time_fn<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> TimingResult {
+pub fn time_fn<F: FnMut()>(warmup: usize, iters: usize, f: F) -> TimingResult {
+    time_fn_with(WallClock, warmup, iters, f)
+}
+
+/// [`time_fn`] against an explicit [`Clock`] — the wall clock in the bench
+/// binaries, a deterministic `SimClock` in tests of the harness itself.
+pub fn time_fn_with<C, F>(clock: C, warmup: usize, iters: usize, mut f: F) -> TimingResult
+where
+    C: Clock + Copy,
+    F: FnMut(),
+{
     for _ in 0..warmup {
         f();
     }
     let mut samples = Vec::with_capacity(iters.max(1));
     for _ in 0..iters.max(1) {
-        let t0 = Instant::now();
+        let t0 = Stopwatch::with(clock);
         f();
-        samples.push(t0.elapsed().as_secs_f64());
+        samples.push(t0.elapsed_secs());
     }
     samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let median = samples[samples.len() / 2];
@@ -50,6 +60,9 @@ impl Table {
         self.rows.push(cells.to_vec());
     }
 
+    // The one stdout surface in library code: every bench/CLI report
+    // funnels through this printer.
+    #[allow(clippy::print_stdout)]
     pub fn print(&self) {
         let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
         for row in &self.rows {
@@ -99,6 +112,18 @@ mod tests {
         assert!(r.median >= 0.0);
         assert_eq!(r.iters, 5);
         assert!(r.min <= r.median);
+    }
+
+    #[test]
+    fn time_fn_with_sim_clock_is_exact() {
+        // the harness consumes the Clock trait: a SimClock makes its
+        // arithmetic checkable bit-exactly
+        let c = crate::util::clock::SimClock::new();
+        let r = time_fn_with(&c, 1, 4, || c.advance(2.0));
+        assert_eq!(r.median, 2.0);
+        assert_eq!(r.mean, 2.0);
+        assert_eq!(r.min, 2.0);
+        assert_eq!(r.iters, 4);
     }
 
     #[test]

@@ -1,0 +1,164 @@
+//! Wall-clock confinement (lint rule **R1**): every `Instant::now()` /
+//! `SystemTime` read in the tree lives in this module, and nowhere else.
+//!
+//! ## Why confinement
+//!
+//! The repo's headline guarantees — warm == cold plan identity,
+//! sliced-anytime == full-budget search, sim == scheduler bit-identity,
+//! thread-count-invariant gradient reduction — are *determinism*
+//! certificates. A stray wall-clock read on a decision path (a timeout
+//! that prunes a candidate, a budget check that ends a slice early) voids
+//! them silently: the test passes on a fast machine and flakes on a loaded
+//! CI runner. Routing every clock read through one module makes the
+//! wall-clock surface auditable — `detlint` (rule R1) rejects
+//! `Instant`/`SystemTime` tokens anywhere outside this file — and makes
+//! every timing consumer swappable for the deterministic [`SimClock`].
+//!
+//! Wall-clock readings are only ever *reported* (solve/step wall seconds
+//! in stats structs, bench tables) or charged against *budgets* that the
+//! deterministic paths meter with [`SimClock`]-style counters instead
+//! (`BudgetMeter::SimPerPlan`); no plan decision may branch on
+//! [`WallClock`] time.
+
+use std::cell::Cell;
+use std::sync::OnceLock;
+use std::time::Instant;
+
+/// A monotonic clock reporting seconds since its epoch.
+///
+/// Implementors: [`WallClock`] (real time, process-start epoch) for
+/// production timing, [`SimClock`] (manually advanced) for deterministic
+/// tests and simulation. Consumers — [`Stopwatch`], the bench harness
+/// (`util::bench::time_fn_with`), `BudgetMeter::Wall` charging — take the
+/// trait, never `std::time` directly.
+pub trait Clock {
+    /// Monotonic seconds since this clock's epoch.
+    fn now_secs(&self) -> f64;
+}
+
+/// Clocks pass through shared references, so a non-`Copy` clock (e.g.
+/// [`SimClock`]) can drive a [`Stopwatch`] it outlives.
+impl<C: Clock + ?Sized> Clock for &C {
+    fn now_secs(&self) -> f64 {
+        (**self).now_secs()
+    }
+}
+
+/// The real monotonic wall clock. Epoch = first read anywhere in the
+/// process, so readings are small positive floats with full `f64`
+/// precision over any realistic run length.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct WallClock;
+
+fn process_epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+impl Clock for WallClock {
+    fn now_secs(&self) -> f64 {
+        process_epoch().elapsed().as_secs_f64()
+    }
+}
+
+/// A manually-advanced deterministic clock: reads return exactly what the
+/// test or simulation has [`advance`](SimClock::advance)d to, independent
+/// of host speed. The serving runtime's `BudgetMeter::SimPerPlan` is the
+/// same idea specialized to search work (seconds per enumerated plan).
+#[derive(Debug, Default)]
+pub struct SimClock {
+    now: Cell<f64>,
+}
+
+impl SimClock {
+    /// A clock at `t = 0`.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Advance the clock by `dt` seconds (`dt` may be fractional; negative
+    /// advances are ignored to keep the clock monotonic).
+    pub fn advance(&self, dt: f64) {
+        if dt > 0.0 {
+            self.now.set(self.now.get() + dt);
+        }
+    }
+}
+
+impl Clock for SimClock {
+    fn now_secs(&self) -> f64 {
+        self.now.get()
+    }
+}
+
+/// Span timer over any [`Clock`]; the one way the rest of the tree times
+/// things. `Stopwatch::start()` is the wall-clock shorthand the old
+/// `let t0 = Instant::now(); ... t0.elapsed().as_secs_f64()` idiom maps
+/// onto.
+#[derive(Debug, Clone, Copy)]
+pub struct Stopwatch<C: Clock = WallClock> {
+    clock: C,
+    start: f64,
+}
+
+impl Stopwatch<WallClock> {
+    /// Start timing against the real wall clock.
+    pub fn start() -> Self {
+        Self::with(WallClock)
+    }
+}
+
+impl<C: Clock> Stopwatch<C> {
+    /// Start timing against `clock`.
+    pub fn with(clock: C) -> Self {
+        let start = clock.now_secs();
+        Self { clock, start }
+    }
+
+    /// Seconds elapsed on the underlying clock since this stopwatch
+    /// started.
+    pub fn elapsed_secs(&self) -> f64 {
+        self.clock.now_secs() - self.start
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wall_clock_is_monotone() {
+        let a = WallClock.now_secs();
+        let b = WallClock.now_secs();
+        assert!(a >= 0.0);
+        assert!(b >= a);
+    }
+
+    #[test]
+    fn stopwatch_measures_nonnegative_spans() {
+        let sw = Stopwatch::start();
+        assert!(sw.elapsed_secs() >= 0.0);
+    }
+
+    #[test]
+    fn sim_clock_is_deterministic() {
+        let c = SimClock::new();
+        assert_eq!(c.now_secs(), 0.0);
+        c.advance(1.5);
+        c.advance(0.25);
+        assert_eq!(c.now_secs(), 1.75);
+        c.advance(-3.0); // ignored: the clock never runs backwards
+        assert_eq!(c.now_secs(), 1.75);
+    }
+
+    #[test]
+    fn stopwatch_over_sim_clock() {
+        let c = SimClock::new();
+        c.advance(10.0);
+        let sw = Stopwatch::with(&c);
+        c.advance(2.5);
+        assert_eq!(sw.elapsed_secs(), 2.5);
+        c.advance(0.5);
+        assert_eq!(sw.elapsed_secs(), 3.0);
+    }
+}

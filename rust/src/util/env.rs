@@ -1,0 +1,75 @@
+//! Process-environment confinement (lint rule **R3**): the one place the
+//! tree reads `std::env` variables, snapshotted **once** per process.
+//!
+//! ## Why confinement
+//!
+//! `env::var` at call time is hidden mutable global state: two reads of
+//! the same knob in one run can disagree if anything calls `set_var` in
+//! between — and concurrent `set_var`/`getenv` is undefined behavior on
+//! glibc. That is exactly the race that once forced the thread-count
+//! determinism test into its own binary (see `tests/par_determinism.rs`),
+//! and it is how a mid-run env mutation could change `util::par`
+//! parallelism between the two halves of a certificate test. Confining
+//! every read to this module and snapshotting at first access makes the
+//! environment an immutable run-scoped *config*, not a channel: the value
+//! a knob had when the process started deciding things is the value it
+//! keeps. `detlint` (rule R3) rejects `env::var`/`set_var`/`remove_var`
+//! tokens anywhere outside this file.
+//!
+//! Only `LOBRA_*` variables are captured — these are the repo's tuning
+//! knobs (`LOBRA_NUM_THREADS`, the `LOBRA_BENCH_*` family). A variable
+//! set to the empty string counts as unset, so CI matrix entries can pass
+//! `""` to mean "use the built-in default" (see `.github/workflows/ci.yml`).
+
+use std::collections::BTreeMap;
+use std::sync::OnceLock;
+
+/// Every knob this module serves starts with this prefix.
+pub const PREFIX: &str = "LOBRA_";
+
+fn snapshot() -> &'static BTreeMap<String, String> {
+    static SNAP: OnceLock<BTreeMap<String, String>> = OnceLock::new();
+    SNAP.get_or_init(|| {
+        std::env::vars()
+            .filter(|(k, v)| k.starts_with(PREFIX) && !v.is_empty())
+            .collect()
+    })
+}
+
+/// The value `key` had at the process-wide snapshot (first access through
+/// this module). Returns `None` for unset or empty variables. `key` must
+/// start with [`PREFIX`] — anything else was never captured.
+pub fn var(key: &str) -> Option<&'static str> {
+    debug_assert!(
+        key.starts_with(PREFIX),
+        "util::env only snapshots {PREFIX}* variables (got {key})"
+    );
+    snapshot().get(key).map(String::as_str)
+}
+
+/// Parse `key` from the snapshot, falling back to `default` when the
+/// variable is unset, empty, or unparseable (matching the benches' old
+/// `env::var(..).ok().and_then(parse).unwrap_or(default)` idiom).
+pub fn parse_or<T: std::str::FromStr>(key: &str, default: T) -> T {
+    var(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unset_keys_fall_back() {
+        assert_eq!(var("LOBRA_TEST_NEVER_SET"), None);
+        assert_eq!(parse_or("LOBRA_TEST_NEVER_SET", 7usize), 7);
+        assert_eq!(parse_or("LOBRA_TEST_NEVER_SET", 1.5f64), 1.5);
+    }
+
+    #[test]
+    fn snapshot_is_stable_across_reads() {
+        // Whatever the first read observed is what every later read sees.
+        let first = var("LOBRA_NUM_THREADS");
+        let second = var("LOBRA_NUM_THREADS");
+        assert_eq!(first, second);
+    }
+}

@@ -123,7 +123,7 @@ impl<'a> Parser<'a> {
         }
     }
 
-    fn expect(&mut self, c: u8) -> Result<(), JsonError> {
+    fn expect_byte(&mut self, c: u8) -> Result<(), JsonError> {
         if self.peek() == Some(c) {
             self.pos += 1;
             Ok(())
@@ -185,7 +185,7 @@ impl<'a> Parser<'a> {
     }
 
     fn string(&mut self) -> Result<String, JsonError> {
-        self.expect(b'"')?;
+        self.expect_byte(b'"')?;
         let mut out = String::new();
         loop {
             match self.peek() {
@@ -223,10 +223,13 @@ impl<'a> Parser<'a> {
                     self.pos += 1;
                 }
                 Some(_) => {
-                    // consume one UTF-8 scalar
+                    // consume one UTF-8 scalar; a corrupt profile or
+                    // manifest on disk must come back as a parse error
+                    // with an offset, never a panic (this path is
+                    // reachable from `lobra serve`/`train` via --profile)
                     let s = &self.bytes[self.pos..];
                     let text = std::str::from_utf8(s).map_err(|_| self.err("bad utf8"))?;
-                    let ch = text.chars().next().unwrap();
+                    let ch = text.chars().next().ok_or_else(|| self.err("bad utf8"))?;
                     out.push(ch);
                     self.pos += ch.len_utf8();
                 }
@@ -235,7 +238,7 @@ impl<'a> Parser<'a> {
     }
 
     fn array(&mut self) -> Result<Json, JsonError> {
-        self.expect(b'[')?;
+        self.expect_byte(b'[')?;
         let mut out = Vec::new();
         self.skip_ws();
         if self.peek() == Some(b']') {
@@ -258,7 +261,7 @@ impl<'a> Parser<'a> {
     }
 
     fn object(&mut self) -> Result<Json, JsonError> {
-        self.expect(b'{')?;
+        self.expect_byte(b'{')?;
         let mut out = BTreeMap::new();
         self.skip_ws();
         if self.peek() == Some(b'}') {
@@ -269,7 +272,7 @@ impl<'a> Parser<'a> {
             self.skip_ws();
             let key = self.string()?;
             self.skip_ws();
-            self.expect(b':')?;
+            self.expect_byte(b':')?;
             self.skip_ws();
             let val = self.value()?;
             out.insert(key, val);

@@ -3,6 +3,8 @@
 //! bench harness live here).
 
 pub mod bench;
+pub mod clock;
+pub mod env;
 pub mod json;
 pub mod par;
 pub mod rng;

@@ -6,22 +6,49 @@
 //! collect-then-map barrier ([`par_fold`]).
 
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+/// Test-only worker-count override; 0 = none. See
+/// [`set_max_threads_override`].
+static THREAD_OVERRIDE: AtomicUsize = AtomicUsize::new(0);
 
 /// Worker count for the parallel primitives: `LOBRA_NUM_THREADS` if set
-/// (≥ 1), else available parallelism. Results never depend on this — the
-/// executors reduce in input order (see [`crate::exec::tree_reduce`]) and
-/// `par_map`/`par_fold` preserve it — so the env var is a tuning and
-/// determinism-*testing* knob, not a correctness one.
+/// (≥ 1; 0 or unset = auto), else available parallelism. Results never
+/// depend on this — the executors reduce in input order (see
+/// [`crate::exec::tree_reduce`]) and `par_map`/`par_fold` preserve it —
+/// so the env var is a tuning and determinism-*testing* knob, not a
+/// correctness one.
+///
+/// The env knob is read through the [`crate::util::env`] snapshot and
+/// cached here once per process: a mid-run `set_var` cannot change
+/// parallelism between two halves of a certificate test. (That race is
+/// why `tests/par_determinism.rs` lives in its own test binary —
+/// concurrent `set_var`/`getenv` is UB on glibc — and with the cache the
+/// binary isolation is now belt-and-suspenders rather than load-bearing.)
 pub fn max_threads() -> usize {
-    if let Some(n) = std::env::var("LOBRA_NUM_THREADS")
-        .ok()
-        .and_then(|s| s.parse::<usize>().ok())
-    {
-        return n.max(1);
+    let forced = THREAD_OVERRIDE.load(Ordering::Relaxed);
+    if forced > 0 {
+        return forced;
     }
-    std::thread::available_parallelism()
-        .map(|p| p.get())
-        .unwrap_or(4)
+    static CACHED: OnceLock<usize> = OnceLock::new();
+    *CACHED.get_or_init(|| {
+        match crate::util::env::parse_or::<usize>("LOBRA_NUM_THREADS", 0) {
+            0 => std::thread::available_parallelism()
+                .map(|p| p.get())
+                .unwrap_or(4),
+            n => n,
+        }
+    })
+}
+
+/// Force the worker count for determinism tests (`None` restores the
+/// cached env/auto value). The env snapshot is immutable by design
+/// (rule R3), so tests that sweep thread counts — e.g.
+/// `tests/par_determinism.rs` proving gradient reduction is
+/// thread-count-invariant — use this instead of mutating
+/// `LOBRA_NUM_THREADS` mid-process.
+pub fn set_max_threads_override(n: Option<usize>) {
+    THREAD_OVERRIDE.store(n.map_or(0, |v| v.max(1)), Ordering::Relaxed);
 }
 
 /// Parallel map preserving input order. Spawns up to `max_threads()`

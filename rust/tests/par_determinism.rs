@@ -1,15 +1,18 @@
-//! The parallel execution path is deterministic across `LOBRA_NUM_THREADS`
-//! settings: `par_map` (input-order results) + fixed-order token-weighted
+//! The parallel execution path is deterministic across worker counts:
+//! `par_map` (input-order results) + fixed-order token-weighted
 //! `tree_reduce` yield bit-identical gradients for any worker count — the
 //! property `exec::PjrtExecutor` relies on for seed-reproducible training.
 //!
-//! This test mutates the process environment, so it lives alone in its own
-//! test binary: concurrent `set_var`/`getenv` across threads is undefined
-//! behavior on glibc, and every other test binary has concurrent env
-//! readers (`util::par::max_threads`). Keep env-touching tests here only.
+//! The sweep drives `util::par::set_max_threads_override` rather than
+//! mutating `LOBRA_NUM_THREADS`: the env snapshot (`util::env`) is taken
+//! once per process, so a mid-run `set_var` is invisible by design (rule
+//! R3) — `env_mutation_after_snapshot_is_invisible` below pins that down.
+//! This binary still hosts the one `set_var` call in the test suite, so
+//! the historical isolation rule (concurrent `set_var`/`getenv` is UB on
+//! glibc) stays satisfied as belt-and-suspenders.
 
 use lobra::exec::tree_reduce;
-use lobra::util::par::par_map;
+use lobra::util::par::{par_map, set_max_threads_override};
 use lobra::util::Rng;
 
 /// Synthetic per-replica gradient partial: (weighted grad sum, tokens).
@@ -22,8 +25,8 @@ fn fake_partial(replica: usize, n_params: usize) -> (Vec<f32>, f64) {
     (grad, tokens)
 }
 
-fn reduced_gradient_with_threads(threads: &str, n_replicas: usize) -> Vec<u32> {
-    std::env::set_var("LOBRA_NUM_THREADS", threads);
+fn reduced_gradient_with_threads(threads: usize, n_replicas: usize) -> Vec<u32> {
+    set_max_threads_override(Some(threads));
     // mimic the executor: replicas produce partials under par_map (order
     // preserved), then a fixed-order token-weighted tree reduction
     let ids: Vec<usize> = (0..n_replicas).collect();
@@ -41,13 +44,31 @@ fn reduced_gradient_with_threads(threads: &str, n_replicas: usize) -> Vec<u32> {
 
 #[test]
 fn gradient_reduction_deterministic_across_thread_counts() {
-    let baseline = reduced_gradient_with_threads("1", 11);
-    for threads in ["2", "3", "8", "16"] {
+    let baseline = reduced_gradient_with_threads(1, 11);
+    for threads in [2, 3, 8, 16] {
         let got = reduced_gradient_with_threads(threads, 11);
         assert_eq!(
             got, baseline,
-            "LOBRA_NUM_THREADS={threads} changed the reduced gradient"
+            "{threads} worker threads changed the reduced gradient"
         );
     }
-    std::env::remove_var("LOBRA_NUM_THREADS");
+    set_max_threads_override(None);
+}
+
+#[test]
+fn env_mutation_after_snapshot_is_invisible() {
+    // Force the process-wide env snapshot, then mutate the environment:
+    // the snapshot must not pick it up. This is what makes the cached
+    // `max_threads()` immune to mid-run `set_var` — worker counts are
+    // fixed for the life of the process unless the override above is used.
+    let before = lobra::util::env::var("LOBRA_PAR_DET_PROBE");
+    assert_eq!(before, None, "probe var unexpectedly set in test env");
+    // lint:allow(R3): this test proves set_var is a no-op post-snapshot;
+    // it is the only env mutation in the suite and this binary is isolated.
+    std::env::set_var("LOBRA_PAR_DET_PROBE", "42");
+    assert_eq!(
+        lobra::util::env::var("LOBRA_PAR_DET_PROBE"),
+        None,
+        "env snapshot must be immutable after first read"
+    );
 }

@@ -1,0 +1,708 @@
+//! detlint: determinism/concurrency static analysis for the lobra tree.
+//!
+//! A token-level scan (comments and string literals stripped, no AST) that
+//! enforces the determinism invariants the certificate tests rely on:
+//!
+//! - **R1** — `Instant`/`SystemTime` only inside `util::clock`: wall time
+//!   must flow through the `Clock` trait so sim runs stay bit-identical.
+//! - **R2** — no `HashMap`/`HashSet` in planner/solver/dispatch/runtime
+//!   paths: iteration order must be stable across processes.
+//! - **R3** — process environment reads only inside `util::env`, which
+//!   snapshots `LOBRA_*` once per process.
+//! - **R4** — `.unwrap()`/`.expect()` in library code is ratcheted: a
+//!   checked-in per-file baseline may only shrink.
+//! - **R5** — float `sum`/`fold` reductions in deterministic paths must go
+//!   through `util::par::tree_reduce` (fixed reduction order) or carry an
+//!   annotation saying why order cannot vary.
+//!
+//! Suppressions use `// lint:allow(R?): <justification>` on the offending
+//! line or the line above; a missing justification is itself a finding.
+//!
+//! The scanner is deliberately dataflow-free: it cannot tell a sequential
+//! `iter().sum()` from a parallel one (R5) and it matches names, not
+//! resolved paths. The rules are tuned so every false positive in-tree is
+//! either fixed or carries a one-line justification.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+/// Lint rules. `AllowSyntax` covers malformed `lint:allow` comments and is
+/// never suppressible.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Rule {
+    R1,
+    R2,
+    R3,
+    R4,
+    R5,
+    AllowSyntax,
+}
+
+impl Rule {
+    pub fn code(self) -> &'static str {
+        match self {
+            Rule::R1 => "R1",
+            Rule::R2 => "R2",
+            Rule::R3 => "R3",
+            Rule::R4 => "R4",
+            Rule::R5 => "R5",
+            Rule::AllowSyntax => "allow-syntax",
+        }
+    }
+
+    fn from_code(s: &str) -> Option<Rule> {
+        match s {
+            "R1" => Some(Rule::R1),
+            "R2" => Some(Rule::R2),
+            "R3" => Some(Rule::R3),
+            "R4" => Some(Rule::R4),
+            "R5" => Some(Rule::R5),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for Rule {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.code())
+    }
+}
+
+/// One lint violation. `line == 0` marks a file-level finding (ratchet).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    pub path: String,
+    pub line: usize,
+    pub rule: Rule,
+    pub message: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.line == 0 {
+            write!(f, "{}: [{}] {}", self.path, self.rule, self.message)
+        } else {
+            write!(f, "{}:{}: [{}] {}", self.path, self.line, self.rule, self.message)
+        }
+    }
+}
+
+// --- lexer -----------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+struct Tok {
+    text: String,
+    line: usize,
+}
+
+#[derive(Debug, Clone)]
+struct AllowNote {
+    rule: Rule,
+    line: usize,
+    /// Code tokens precede the comment on its line (trailing comment).
+    code_before: bool,
+}
+
+#[derive(Debug, Default)]
+struct Lexed {
+    toks: Vec<Tok>,
+    allows: Vec<AllowNote>,
+    /// (line, reason) for `lint:allow` comments that fail to parse.
+    bad_allows: Vec<(usize, String)>,
+}
+
+/// Token text at `i`, or `""` past the end (makes lookahead patterns total).
+fn t_at(toks: &[Tok], i: usize) -> &str {
+    toks.get(i).map_or("", |t| t.text.as_str())
+}
+
+fn lex(src: &str) -> Lexed {
+    let b = src.as_bytes();
+    let mut out = Lexed::default();
+    let mut i = 0usize;
+    let mut line = 1usize;
+    while i < b.len() {
+        let c = b[i];
+        if c == b'\n' {
+            line += 1;
+            i += 1;
+        } else if c.is_ascii_whitespace() {
+            i += 1;
+        } else if c == b'/' && b.get(i + 1) == Some(&b'/') {
+            let start = i;
+            while i < b.len() && b[i] != b'\n' {
+                i += 1;
+            }
+            let code_before = out.toks.last().is_some_and(|t| t.line == line);
+            scan_allow(&src[start..i], line, code_before, &mut out);
+        } else if c == b'/' && b.get(i + 1) == Some(&b'*') {
+            let mut depth = 1usize;
+            i += 2;
+            while i < b.len() && depth > 0 {
+                if b[i] == b'/' && b.get(i + 1) == Some(&b'*') {
+                    depth += 1;
+                    i += 2;
+                } else if b[i] == b'*' && b.get(i + 1) == Some(&b'/') {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    if b[i] == b'\n' {
+                        line += 1;
+                    }
+                    i += 1;
+                }
+            }
+        } else if c == b'"' {
+            i = consume_string(b, i, &mut line);
+        } else if c == b'\'' {
+            i = consume_quote(b, i, &mut line);
+        } else if c == b'_' || c.is_ascii_alphabetic() {
+            let start = i;
+            while i < b.len() && (b[i] == b'_' || b[i].is_ascii_alphanumeric()) {
+                i += 1;
+            }
+            let ident = &src[start..i];
+            let next = b.get(i).copied();
+            if (ident == "r" || ident == "br") && matches!(next, Some(b'"') | Some(b'#')) {
+                i = consume_raw_or_ident(b, i, &mut line, src, &mut out.toks);
+            } else if ident == "b" && next == Some(b'"') {
+                i = consume_string(b, i, &mut line);
+            } else if ident == "b" && next == Some(b'\'') {
+                i = consume_quote(b, i, &mut line);
+            } else {
+                out.toks.push(Tok { text: ident.to_string(), line });
+            }
+        } else if c.is_ascii_digit() {
+            let start = i;
+            i = consume_number(b, i);
+            out.toks.push(Tok { text: src[start..i].to_string(), line });
+        } else if c == b':' && b.get(i + 1) == Some(&b':') {
+            out.toks.push(Tok { text: "::".to_string(), line });
+            i += 2;
+        } else {
+            out.toks.push(Tok { text: (c as char).to_string(), line });
+            i += 1;
+        }
+    }
+    out
+}
+
+/// Past a `"..."` literal (with escapes); `i` is at the opening quote.
+fn consume_string(b: &[u8], mut i: usize, line: &mut usize) -> usize {
+    i += 1;
+    while i < b.len() {
+        match b[i] {
+            b'\\' => i += 2,
+            b'"' => return i + 1,
+            b'\n' => {
+                *line += 1;
+                i += 1;
+            }
+            _ => i += 1,
+        }
+    }
+    i
+}
+
+/// Past a raw (byte) string `r#"..."#` / raw identifier `r#name`; `i` is
+/// just after the `r`/`br` prefix.
+fn consume_raw_or_ident(
+    b: &[u8],
+    mut i: usize,
+    line: &mut usize,
+    src: &str,
+    toks: &mut Vec<Tok>,
+) -> usize {
+    let mut hashes = 0usize;
+    while b.get(i + hashes) == Some(&b'#') {
+        hashes += 1;
+    }
+    if b.get(i + hashes) != Some(&b'"') {
+        // raw identifier (`r#fn`): emit the identifier itself
+        i += hashes;
+        let start = i;
+        while i < b.len() && (b[i] == b'_' || b[i].is_ascii_alphanumeric()) {
+            i += 1;
+        }
+        toks.push(Tok { text: src[start..i].to_string(), line: *line });
+        return i;
+    }
+    i += hashes + 1;
+    while i < b.len() {
+        let tail = &b[i + 1..];
+        if b[i] == b'"' && tail.len() >= hashes && tail[..hashes].iter().all(|&h| h == b'#') {
+            return i + 1 + hashes;
+        }
+        if b[i] == b'\n' {
+            *line += 1;
+        }
+        i += 1;
+    }
+    i
+}
+
+/// Past a `'` that starts either a char/byte-char literal or a lifetime;
+/// `i` is at the quote.
+fn consume_quote(b: &[u8], mut i: usize, line: &mut usize) -> usize {
+    let next = b.get(i + 1).copied();
+    let is_char = match next {
+        Some(b'\\') => true,
+        Some(c) if c >= 0x80 => true,
+        Some(_) => b.get(i + 2) == Some(&b'\''),
+        None => false,
+    };
+    if !is_char {
+        // lifetime: skip the quote; the identifier lexes normally
+        return i + 1;
+    }
+    i += 1;
+    if b.get(i) == Some(&b'\\') {
+        i += 2; // the backslash and the escaped byte (covers `'\''`)
+    }
+    while i < b.len() && b[i] != b'\'' {
+        if b[i] == b'\n' {
+            *line += 1;
+        }
+        i += 1;
+    }
+    i + 1
+}
+
+/// Past a numeric literal (int, float, exponent, suffix); `i` is at the
+/// first digit.
+fn consume_number(b: &[u8], mut i: usize) -> usize {
+    if b[i] == b'0' && matches!(b.get(i + 1).copied(), Some(b'x' | b'o' | b'b')) {
+        i += 2;
+        while i < b.len() && (b[i] == b'_' || b[i].is_ascii_alphanumeric()) {
+            i += 1;
+        }
+        return i;
+    }
+    while i < b.len() && (b[i] == b'_' || b[i].is_ascii_digit()) {
+        i += 1;
+    }
+    if i < b.len() && b[i] == b'.' && b.get(i + 1).is_some_and(|c| c.is_ascii_digit()) {
+        i += 1;
+        while i < b.len() && (b[i] == b'_' || b[i].is_ascii_digit()) {
+            i += 1;
+        }
+    }
+    while i < b.len() && (b[i] == b'_' || b[i].is_ascii_alphanumeric()) {
+        if matches!(b[i], b'e' | b'E') && matches!(b.get(i + 1).copied(), Some(b'+' | b'-')) {
+            i += 2;
+        } else {
+            i += 1;
+        }
+    }
+    i
+}
+
+/// Parse `lint:allow(R?): justification` out of one line comment.
+fn scan_allow(comment: &str, line: usize, code_before: bool, out: &mut Lexed) {
+    let Some(pos) = comment.find("lint:allow") else {
+        return;
+    };
+    let rest = &comment[pos + "lint:allow".len()..];
+    let Some(rest) = rest.strip_prefix('(') else {
+        out.bad_allows.push((line, "expected `(rule)` after lint:allow".to_string()));
+        return;
+    };
+    let Some(close) = rest.find(')') else {
+        out.bad_allows.push((line, "unclosed `(` in lint:allow".to_string()));
+        return;
+    };
+    let rule_code = rest[..close].trim();
+    let Some(rule) = Rule::from_code(rule_code) else {
+        out.bad_allows.push((line, format!("unknown rule `{rule_code}` in lint:allow")));
+        return;
+    };
+    let after = rest[close + 1..].trim_start();
+    let justification = after.strip_prefix(':').map(str::trim);
+    match justification {
+        Some(j) if !j.is_empty() => {
+            out.allows.push(AllowNote { rule, line, code_before });
+        }
+        _ => {
+            let why = format!("lint:allow({rule_code}) needs `: <justification>`");
+            out.bad_allows.push((line, why));
+        }
+    }
+}
+
+// --- path classification ---------------------------------------------------
+
+/// Directories scanned, relative to the repo root.
+pub const SCAN_ROOTS: [&str; 4] = ["rust/src", "rust/benches", "rust/tests", "examples"];
+
+const CLOCK_MODULE: &str = "rust/src/util/clock.rs";
+const ENV_MODULE: &str = "rust/src/util/env.rs";
+
+/// Paths where R2/R5 apply: everything feeding plan identity, dispatch,
+/// or training numerics.
+const RESTRICTED_PREFIXES: [&str; 6] = [
+    "rust/src/coordinator/",
+    "rust/src/solver/",
+    "rust/src/exec/",
+    "rust/src/runtime/",
+    "rust/src/costmodel/",
+    "rust/src/train/",
+];
+
+fn is_restricted(path: &str) -> bool {
+    path == "rust/src/main.rs" || RESTRICTED_PREFIXES.iter().any(|p| path.starts_with(p))
+}
+
+fn is_library(path: &str) -> bool {
+    path.starts_with("rust/src/")
+}
+
+// --- per-file scan ---------------------------------------------------------
+
+/// Scan result for one file: rule findings plus the R4 site count
+/// (`Some` for library files, which feed the ratchet).
+#[derive(Debug)]
+pub struct FileScan {
+    pub findings: Vec<Finding>,
+    pub unwrap_sites: Option<usize>,
+}
+
+const ENV_READ_FNS: [&str; 6] = ["var", "var_os", "vars", "vars_os", "set_var", "remove_var"];
+
+/// Run all token rules over one file. `rel_path` must be repo-root
+/// relative with forward slashes (e.g. `rust/src/solver/mod.rs`).
+pub fn scan_file(rel_path: &str, src: &str) -> FileScan {
+    let lexed = lex(src);
+    let mut findings: Vec<Finding> = Vec::new();
+    for (line, reason) in &lexed.bad_allows {
+        findings.push(Finding {
+            path: rel_path.to_string(),
+            line: *line,
+            rule: Rule::AllowSyntax,
+            message: format!("{reason}; grammar: `// lint:allow(R1): <justification>`"),
+        });
+    }
+
+    // resolve each allow note to the line it suppresses
+    let mut allowed: BTreeMap<Rule, BTreeSet<usize>> = BTreeMap::new();
+    for note in &lexed.allows {
+        let target = if note.code_before {
+            Some(note.line)
+        } else {
+            lexed.toks.iter().map(|t| t.line).find(|&l| l > note.line)
+        };
+        if let Some(t) = target {
+            allowed.entry(note.rule).or_default().insert(t);
+        }
+    }
+    let is_allowed = |rule: Rule, line: usize| -> bool {
+        allowed.get(&rule).is_some_and(|lines| lines.contains(&line))
+    };
+
+    let toks = &lexed.toks;
+    let t = |i: usize| t_at(toks, i);
+    let restricted = is_restricted(rel_path);
+
+    for i in 0..toks.len() {
+        let line = toks[i].line;
+        // R1: wall-clock types outside util::clock
+        if rel_path != CLOCK_MODULE
+            && matches!(t(i), "Instant" | "SystemTime")
+            && !is_allowed(Rule::R1, line)
+        {
+            findings.push(Finding {
+                path: rel_path.to_string(),
+                line,
+                rule: Rule::R1,
+                message: format!(
+                    "`{}` outside util::clock: take timestamps through the \
+                     Clock trait (util::clock::Stopwatch) so sim runs stay \
+                     bit-identical",
+                    t(i)
+                ),
+            });
+        }
+        // R2: hash containers in deterministic paths
+        if restricted && matches!(t(i), "HashMap" | "HashSet") && !is_allowed(Rule::R2, line) {
+            findings.push(Finding {
+                path: rel_path.to_string(),
+                line,
+                rule: Rule::R2,
+                message: format!(
+                    "`{}` in a deterministic path: iteration order varies per \
+                     process — use BTreeMap/BTreeSet",
+                    t(i)
+                ),
+            });
+        }
+        // R3: process-environment access outside util::env. The pattern is
+        // `env::<read fn>` where the path is not `util::env` (so calls into
+        // our snapshot module don't fire).
+        if rel_path != ENV_MODULE
+            && t(i) == "env"
+            && t(i + 1) == "::"
+            && ENV_READ_FNS.contains(&t(i + 2))
+            && !(i >= 2 && t(i - 1) == "::" && t(i - 2) == "util")
+            && !is_allowed(Rule::R3, line)
+        {
+            findings.push(Finding {
+                path: rel_path.to_string(),
+                line,
+                rule: Rule::R3,
+                message: format!(
+                    "`env::{}` outside util::env: read configuration through \
+                     the one-shot util::env snapshot (LOBRA_* only)",
+                    t(i + 2)
+                ),
+            });
+        }
+        // R5: float reductions in deterministic paths
+        if restricted && t(i) == "." && !is_allowed(Rule::R5, line) {
+            let sum_like = matches!(t(i + 1), "sum" | "product")
+                && t(i + 2) == "::"
+                && t(i + 3) == "<"
+                && matches!(t(i + 4), "f32" | "f64");
+            let fold_like = t(i + 1) == "fold" && t(i + 2) == "(" && is_float_start(t(i + 3));
+            if sum_like || fold_like {
+                findings.push(Finding {
+                    path: rel_path.to_string(),
+                    line,
+                    rule: Rule::R5,
+                    message: format!(
+                        "float `{}` reduction in a deterministic path: reduce \
+                         in fixed order via util::par::tree_reduce, or \
+                         annotate why evaluation order cannot vary",
+                        t(i + 1)
+                    ),
+                });
+            }
+        }
+    }
+
+    // R4: unwrap/expect census for the ratchet (library code, test mods
+    // excluded)
+    let unwrap_sites = if is_library(rel_path) {
+        let skip = test_ranges(toks);
+        let in_test = |idx: usize| skip.iter().any(|&(a, b)| idx >= a && idx < b);
+        let mut count = 0usize;
+        for i in 0..toks.len() {
+            if t(i) == "."
+                && matches!(t(i + 1), "unwrap" | "expect")
+                && t(i + 2) == "("
+                && !in_test(i)
+                && !is_allowed(Rule::R4, toks[i].line)
+            {
+                count += 1;
+            }
+        }
+        Some(count)
+    } else {
+        None
+    };
+
+    FileScan { findings, unwrap_sites }
+}
+
+/// Float-literal-ish token opening a `fold` accumulator (`0.0`, `0.0f64`,
+/// `f64::MAX`, ...).
+fn is_float_start(tok: &str) -> bool {
+    if matches!(tok, "f32" | "f64") {
+        return true;
+    }
+    let Some(first) = tok.chars().next() else {
+        return false;
+    };
+    if !first.is_ascii_digit() {
+        return false;
+    }
+    if tok.starts_with("0x") || tok.starts_with("0o") || tok.starts_with("0b") {
+        return false;
+    }
+    tok.contains('.') || tok.ends_with("f32") || tok.ends_with("f64") || tok.contains(['e', 'E'])
+}
+
+/// Token-index ranges covered by `#[cfg(test)]` items (the attribute plus
+/// the following `{...}` block or `;`-terminated item).
+fn test_ranges(toks: &[Tok]) -> Vec<(usize, usize)> {
+    let t = |i: usize| t_at(toks, i);
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i + 6 < toks.len() {
+        let is_attr = t(i) == "#"
+            && t(i + 1) == "["
+            && t(i + 2) == "cfg"
+            && t(i + 3) == "("
+            && t(i + 4) == "test"
+            && t(i + 5) == ")"
+            && t(i + 6) == "]";
+        if !is_attr {
+            i += 1;
+            continue;
+        }
+        let start = i;
+        let mut j = i + 7;
+        let mut depth = 0usize;
+        let mut end = toks.len();
+        while j < toks.len() {
+            match t(j) {
+                "{" if depth == 0 => {
+                    let mut braces = 1usize;
+                    j += 1;
+                    while j < toks.len() && braces > 0 {
+                        match t(j) {
+                            "{" => braces += 1,
+                            "}" => braces -= 1,
+                            _ => {}
+                        }
+                        j += 1;
+                    }
+                    end = j;
+                    break;
+                }
+                ";" if depth == 0 => {
+                    end = j + 1;
+                    break;
+                }
+                "(" | "[" | "{" => depth += 1,
+                ")" | "]" | "}" => depth = depth.saturating_sub(1),
+                _ => {}
+            }
+            j += 1;
+        }
+        out.push((start, end));
+        i = end.max(start + 1);
+    }
+    out
+}
+
+// --- ratchet ---------------------------------------------------------------
+
+/// Per-file R4 site counts (paths repo-root relative, forward slashes).
+pub type Ratchet = BTreeMap<String, usize>;
+
+/// Parse the checked-in baseline (`<path> <count>` lines, `#` comments).
+pub fn parse_ratchet(text: &str) -> Result<Ratchet, String> {
+    let mut out = Ratchet::new();
+    for (n, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut parts = line.split_whitespace();
+        let (Some(path), Some(count), None) = (parts.next(), parts.next(), parts.next()) else {
+            return Err(format!("ratchet line {}: expected `<path> <count>`", n + 1));
+        };
+        let count: usize = count
+            .parse()
+            .map_err(|_| format!("ratchet line {}: bad count `{count}`", n + 1))?;
+        out.insert(path.to_string(), count);
+    }
+    Ok(out)
+}
+
+/// Render the baseline file (sorted, self-describing header).
+pub fn format_ratchet(current: &Ratchet) -> String {
+    let mut s = String::from(
+        "# detlint R4 ratchet: `.unwrap()`/`.expect()` sites per library file\n\
+         # (rust/src, #[cfg(test)] blocks excluded). CI fails if any count\n\
+         # grows; regenerate with `cargo run -p detlint -- --update-ratchet`\n\
+         # only to lock in a decrease.\n",
+    );
+    for (path, count) in current {
+        if *count > 0 {
+            s.push_str(&format!("{path} {count}\n"));
+        }
+    }
+    s
+}
+
+/// Compare the census against the baseline. Counts may only fall; a fallen
+/// count must be locked in (keeps the baseline honest).
+pub fn ratchet_findings(baseline: &Ratchet, current: &Ratchet) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    let paths: BTreeSet<&String> = baseline.keys().chain(current.keys()).collect();
+    for path in paths {
+        let base = baseline.get(path).copied().unwrap_or(0);
+        let cur = current.get(path).copied().unwrap_or(0);
+        if cur > base {
+            findings.push(Finding {
+                path: path.clone(),
+                line: 0,
+                rule: Rule::R4,
+                message: format!(
+                    "{cur} `.unwrap()`/`.expect()` site(s) in library code but \
+                     the ratchet allows {base}: return a contextual error \
+                     (anyhow + Context) instead"
+                ),
+            });
+        } else if cur < base {
+            findings.push(Finding {
+                path: path.clone(),
+                line: 0,
+                rule: Rule::R4,
+                message: format!(
+                    "ratchet is stale ({base} recorded, {cur} present): run \
+                     `cargo run -p detlint -- --update-ratchet` to lock in \
+                     the improvement"
+                ),
+            });
+        }
+    }
+    findings
+}
+
+// --- tree walking ----------------------------------------------------------
+
+/// All `.rs` files under [`SCAN_ROOTS`], sorted for deterministic output.
+pub fn collect_files(root: &Path) -> std::io::Result<Vec<PathBuf>> {
+    let mut files = Vec::new();
+    for sub in SCAN_ROOTS {
+        let dir = root.join(sub);
+        if dir.is_dir() {
+            walk(&dir, &mut files)?;
+        }
+    }
+    files.sort();
+    Ok(files)
+}
+
+fn walk(dir: &Path, files: &mut Vec<PathBuf>) -> std::io::Result<()> {
+    for entry in std::fs::read_dir(dir)? {
+        let path = entry?.path();
+        if path.is_dir() {
+            walk(&path, files)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            files.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Scan the whole tree: returns rule findings plus the current R4 census.
+/// Ratchet comparison is the caller's job (the CLI and tests differ in
+/// where the baseline comes from).
+pub fn scan_tree(root: &Path) -> std::io::Result<(Vec<Finding>, Ratchet, usize)> {
+    let files = collect_files(root)?;
+    let n_files = files.len();
+    let mut findings = Vec::new();
+    let mut census = Ratchet::new();
+    for file in files {
+        let rel = file
+            .strip_prefix(root)
+            .unwrap_or(&file)
+            .components()
+            .map(|c| c.as_os_str().to_string_lossy())
+            .collect::<Vec<_>>()
+            .join("/");
+        let src = std::fs::read_to_string(&file)?;
+        let scan = scan_file(&rel, &src);
+        findings.extend(scan.findings);
+        if let Some(count) = scan.unwrap_sites {
+            if count > 0 {
+                census.insert(rel, count);
+            }
+        }
+    }
+    findings.sort_by(|a, b| (&a.path, a.line, a.rule).cmp(&(&b.path, b.line, b.rule)));
+    Ok((findings, census, n_files))
+}

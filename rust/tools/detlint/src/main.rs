@@ -1,0 +1,119 @@
+//! detlint CLI: scan the tree, compare the R4 census against the
+//! checked-in ratchet, report findings, exit nonzero on any violation.
+//!
+//! ```bash
+//! cargo run -p detlint                     # check (CI mode)
+//! cargo run -p detlint -- --update-ratchet # lock in a lower R4 baseline
+//! cargo run -p detlint -- --root ../..     # explicit repo root
+//! ```
+
+// The lint report is this binary's product; it goes to stdout by design.
+#![allow(clippy::print_stdout)]
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use detlint::{format_ratchet, parse_ratchet, ratchet_findings, scan_tree, Finding};
+
+const RATCHET_REL: &str = "rust/tools/detlint/ratchet.txt";
+
+struct Args {
+    root: Option<PathBuf>,
+    update_ratchet: bool,
+}
+
+fn parse_args() -> Result<Args, String> {
+    let mut args = Args { root: None, update_ratchet: false };
+    let mut it = std::env::args().skip(1);
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--update-ratchet" => args.update_ratchet = true,
+            "--root" => {
+                let v = it.next().ok_or("--root needs a path")?;
+                args.root = Some(PathBuf::from(v));
+            }
+            other => return Err(format!("unknown argument `{other}`")),
+        }
+    }
+    Ok(args)
+}
+
+/// Walk up from the current directory to the checkout root (the directory
+/// containing `rust/src/lib.rs`) so the tool works from the repo root, the
+/// `rust/` workspace, or anywhere below.
+fn discover_root() -> Result<PathBuf, String> {
+    let mut dir = std::env::current_dir().map_err(|e| format!("cwd: {e}"))?;
+    loop {
+        if dir.join("rust/src/lib.rs").is_file() {
+            return Ok(dir);
+        }
+        if !dir.pop() {
+            return Err("repo root not found (no rust/src/lib.rs above cwd); pass --root".into());
+        }
+    }
+}
+
+fn main() -> ExitCode {
+    match run() {
+        Ok(code) => code,
+        Err(e) => {
+            eprintln!("detlint: error: {e}");
+            ExitCode::from(2)
+        }
+    }
+}
+
+fn run() -> Result<ExitCode, String> {
+    let args = parse_args()?;
+    let root = match args.root {
+        Some(r) => r,
+        None => discover_root()?,
+    };
+    let (mut findings, census, n_files) =
+        scan_tree(&root).map_err(|e| format!("scanning {}: {e}", root.display()))?;
+
+    let ratchet_path = root.join(RATCHET_REL);
+    if args.update_ratchet {
+        std::fs::write(&ratchet_path, format_ratchet(&census))
+            .map_err(|e| format!("writing {}: {e}", ratchet_path.display()))?;
+        let sites: usize = census.values().sum();
+        println!(
+            "detlint: ratchet updated at {} ({} sites across {} files)",
+            ratchet_path.display(),
+            sites,
+            census.len()
+        );
+    } else {
+        let text = std::fs::read_to_string(&ratchet_path).map_err(|e| {
+            format!(
+                "reading {}: {e} (run `cargo run -p detlint -- --update-ratchet` \
+                 to create it)",
+                ratchet_path.display()
+            )
+        })?;
+        let baseline = parse_ratchet(&text)?;
+        findings.extend(ratchet_findings(&baseline, &census));
+    }
+
+    report(&findings, &census, n_files);
+    if findings.is_empty() {
+        Ok(ExitCode::SUCCESS)
+    } else {
+        Ok(ExitCode::FAILURE)
+    }
+}
+
+fn report(findings: &[Finding], census: &detlint::Ratchet, n_files: usize) {
+    for f in findings {
+        println!("{f}");
+    }
+    let sites: usize = census.values().sum();
+    if findings.is_empty() {
+        println!(
+            "detlint: clean — {n_files} files scanned, R4 ratchet at {sites} \
+             unwrap/expect sites"
+        );
+    } else {
+        println!("detlint: {} finding(s) across {n_files} files", findings.len());
+    }
+}

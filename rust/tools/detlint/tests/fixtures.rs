@@ -1,0 +1,109 @@
+//! Fixture-tree tests: each rule fires exactly once on its fixture, the
+//! confinement modules are exempt, and the allow grammar is enforced.
+
+use detlint::{scan_file, Rule};
+
+const RESTRICTED: &str = "rust/src/solver/fixture.rs";
+
+fn rule_count(path: &str, src: &str, rule: Rule) -> usize {
+    scan_file(path, src).findings.iter().filter(|f| f.rule == rule).count()
+}
+
+#[test]
+fn r1_fires_exactly_once() {
+    let src = include_str!("fixtures/r1_instant.rs");
+    let scan = scan_file("rust/src/exec/fixture.rs", src);
+    assert_eq!(scan.findings.len(), 1, "{:?}", scan.findings);
+    assert_eq!(scan.findings[0].rule, Rule::R1);
+    assert_eq!(scan.findings[0].line, 4);
+}
+
+#[test]
+fn r1_exempt_inside_clock_module() {
+    let src = include_str!("fixtures/r1_instant.rs");
+    assert_eq!(rule_count("rust/src/util/clock.rs", src, Rule::R1), 0);
+}
+
+#[test]
+fn r2_fires_exactly_once_in_restricted_paths_only() {
+    let src = include_str!("fixtures/r2_hashmap.rs");
+    assert_eq!(rule_count(RESTRICTED, src, Rule::R2), 1);
+    // hash containers are fine outside deterministic paths
+    assert_eq!(rule_count("rust/src/data/fixture.rs", src, Rule::R2), 0);
+}
+
+#[test]
+fn r3_fires_exactly_once() {
+    let src = include_str!("fixtures/r3_env.rs");
+    let scan = scan_file("rust/src/config/fixture.rs", src);
+    assert_eq!(scan.findings.len(), 1, "{:?}", scan.findings);
+    assert_eq!(scan.findings[0].rule, Rule::R3);
+}
+
+#[test]
+fn r3_exempt_inside_env_module_and_for_snapshot_calls() {
+    let src = include_str!("fixtures/r3_env.rs");
+    assert_eq!(rule_count("rust/src/util/env.rs", src, Rule::R3), 0);
+    // calls into the snapshot module do not fire
+    let snap = "pub fn t() -> Option<&'static str> { crate::util::env::var(\"LOBRA_X\") }\n";
+    assert_eq!(rule_count("rust/src/config/fixture.rs", snap, Rule::R3), 0);
+}
+
+#[test]
+fn r4_counts_library_sites_but_not_test_mods() {
+    let src = include_str!("fixtures/r4_unwrap.rs");
+    let scan = scan_file("rust/src/train/fixture.rs", src);
+    assert!(scan.findings.is_empty(), "{:?}", scan.findings);
+    assert_eq!(scan.unwrap_sites, Some(1));
+}
+
+#[test]
+fn r4_census_is_none_outside_library_code() {
+    let src = include_str!("fixtures/r4_unwrap.rs");
+    let scan = scan_file("rust/tests/fixture.rs", src);
+    assert_eq!(scan.unwrap_sites, None);
+}
+
+#[test]
+fn r5_sum_and_fold_each_fire_exactly_once() {
+    let sum = include_str!("fixtures/r5_sum.rs");
+    let fold = include_str!("fixtures/r5_fold.rs");
+    assert_eq!(rule_count(RESTRICTED, sum, Rule::R5), 1);
+    assert_eq!(rule_count(RESTRICTED, fold, Rule::R5), 1);
+    // sequential float math outside restricted paths is not flagged
+    assert_eq!(rule_count("rust/src/metrics/fixture.rs", sum, Rule::R5), 0);
+}
+
+#[test]
+fn allow_with_justification_suppresses_both_placements() {
+    let src = include_str!("fixtures/allow_ok.rs");
+    let scan = scan_file(RESTRICTED, src);
+    assert!(scan.findings.is_empty(), "{:?}", scan.findings);
+}
+
+#[test]
+fn allow_without_justification_is_rejected_and_does_not_suppress() {
+    let src = include_str!("fixtures/allow_bad.rs");
+    let scan = scan_file(RESTRICTED, src);
+    let syntax = scan.findings.iter().filter(|f| f.rule == Rule::AllowSyntax).count();
+    let r5 = scan.findings.iter().filter(|f| f.rule == Rule::R5).count();
+    assert_eq!(syntax, 1, "{:?}", scan.findings);
+    assert_eq!(r5, 1, "justification-free allow must not suppress");
+}
+
+#[test]
+fn allow_for_the_wrong_rule_does_not_suppress() {
+    let src = "pub fn t(xs: &[f64]) -> f64 {\n\
+               // lint:allow(R1): wrong rule on purpose.\n\
+               xs.iter().sum::<f64>()\n}\n";
+    assert_eq!(rule_count(RESTRICTED, src, Rule::R5), 1);
+}
+
+#[test]
+fn strings_and_comments_are_not_code() {
+    let src = "pub const DOC: &str = \"uses Instant and HashMap and env::var\";\n\
+               // Instant in a comment\n\
+               /* HashMap in a block comment */\n";
+    let scan = scan_file(RESTRICTED, src);
+    assert!(scan.findings.is_empty(), "{:?}", scan.findings);
+}

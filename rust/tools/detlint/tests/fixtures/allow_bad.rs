@@ -1,0 +1,7 @@
+//! Malformed-suppression fixture: a justification-free allow comment is
+//! itself a finding and does NOT silence the R5 underneath it.
+
+pub fn total(xs: &[f64]) -> f64 {
+    // lint:allow(R5)
+    xs.iter().sum::<f64>()
+}

@@ -1,0 +1,11 @@
+//! Suppression fixture: both allow placements (line above, trailing)
+//! silence R5 with a justification; zero findings expected.
+
+pub fn total(xs: &[f64]) -> f64 {
+    // lint:allow(R5): sequential reduction over one slice; order is fixed.
+    xs.iter().sum::<f64>()
+}
+
+pub fn total_trailing(xs: &[f64]) -> f64 {
+    xs.iter().sum::<f64>() // lint:allow(R5): sequential; order is fixed.
+}

@@ -1,0 +1,6 @@
+//! R1 fixture: exactly one wall-clock read outside util::clock.
+
+pub fn elapsed() -> f64 {
+    let t = std::time::Instant::now();
+    t.elapsed().as_secs_f64()
+}

@@ -1,0 +1,5 @@
+//! R2 fixture: exactly one hash container in a deterministic path.
+
+pub fn first_key(m: &std::collections::HashMap<u32, u32>) -> Option<u32> {
+    m.keys().next().copied()
+}

@@ -1,0 +1,5 @@
+//! R3 fixture: exactly one raw environment read outside util::env.
+
+pub fn threads() -> Option<String> {
+    std::env::var("LOBRA_NUM_THREADS").ok()
+}

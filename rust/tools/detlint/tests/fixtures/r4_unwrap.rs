@@ -1,0 +1,14 @@
+//! R4 fixture: one library-code unwrap; the test-mod unwrap is excluded
+//! from the census.
+
+pub fn double(x: Option<u32>) -> u32 {
+    2 * x.unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn unwrap_in_tests_is_not_counted() {
+        assert_eq!(super::double(Some(2)), Some(4).unwrap());
+    }
+}

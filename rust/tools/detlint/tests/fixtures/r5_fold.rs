@@ -1,0 +1,5 @@
+//! R5 fixture: exactly one float fold in a deterministic path.
+
+pub fn peak(xs: &[f64]) -> f64 {
+    xs.iter().copied().fold(0.0f64, f64::max)
+}

@@ -1,0 +1,5 @@
+//! R5 fixture: exactly one float reduction in a deterministic path.
+
+pub fn total(xs: &[f64]) -> f64 {
+    xs.iter().sum::<f64>()
+}

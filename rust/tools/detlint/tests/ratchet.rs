@@ -1,0 +1,58 @@
+//! Ratchet semantics: the baseline may only shrink, improvements must be
+//! locked in, and `--update-ratchet` output round-trips.
+
+use detlint::{format_ratchet, parse_ratchet, ratchet_findings, Ratchet, Rule};
+
+fn one(path: &str, count: usize) -> Ratchet {
+    let mut r = Ratchet::new();
+    r.insert(path.to_string(), count);
+    r
+}
+
+#[test]
+fn growth_is_a_regression() {
+    let findings = ratchet_findings(&one("rust/src/a.rs", 3), &one("rust/src/a.rs", 4));
+    assert_eq!(findings.len(), 1, "{findings:?}");
+    assert_eq!(findings[0].rule, Rule::R4);
+    assert!(findings[0].message.contains("ratchet allows 3"), "{}", findings[0].message);
+}
+
+#[test]
+fn new_file_with_sites_is_a_regression() {
+    let findings = ratchet_findings(&Ratchet::new(), &one("rust/src/new.rs", 1));
+    assert_eq!(findings.len(), 1, "{findings:?}");
+    assert_eq!(findings[0].rule, Rule::R4);
+}
+
+#[test]
+fn improvement_must_be_locked_in() {
+    let findings = ratchet_findings(&one("rust/src/a.rs", 3), &one("rust/src/a.rs", 2));
+    assert_eq!(findings.len(), 1, "{findings:?}");
+    assert!(findings[0].message.contains("stale"), "{}", findings[0].message);
+}
+
+#[test]
+fn matching_census_is_clean_and_update_restores_monotonicity() {
+    let baseline = one("rust/src/a.rs", 3);
+    assert!(ratchet_findings(&baseline, &baseline).is_empty());
+    // after an improvement, regenerating the baseline makes check clean again
+    let improved = one("rust/src/a.rs", 2);
+    let regenerated = parse_ratchet(&format_ratchet(&improved)).unwrap();
+    assert!(ratchet_findings(&regenerated, &improved).is_empty());
+}
+
+#[test]
+fn format_round_trips_and_drops_zero_counts() {
+    let mut census = Ratchet::new();
+    census.insert("rust/src/a.rs".to_string(), 2);
+    census.insert("rust/src/b.rs".to_string(), 0);
+    let parsed = parse_ratchet(&format_ratchet(&census)).unwrap();
+    assert_eq!(parsed, one("rust/src/a.rs", 2));
+}
+
+#[test]
+fn malformed_baselines_are_rejected() {
+    assert!(parse_ratchet("rust/src/a.rs not-a-number").is_err());
+    assert!(parse_ratchet("too many fields here 3").is_err());
+    assert!(parse_ratchet("# comments and\n\n  # blanks are fine\n").unwrap().is_empty());
+}

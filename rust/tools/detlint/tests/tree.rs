@@ -1,0 +1,21 @@
+//! End-to-end: the checked-in tree is clean and the committed R4 ratchet
+//! matches the census exactly (`cargo run -p detlint` would exit 0).
+
+use std::path::Path;
+
+use detlint::{parse_ratchet, ratchet_findings, scan_tree};
+
+#[test]
+fn repo_tree_is_clean_and_ratchet_is_current() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("../../..");
+    let root = root.canonicalize().unwrap();
+    let (mut findings, census, n_files) = scan_tree(&root).unwrap();
+    assert!(n_files > 50, "scan missed the tree: only {n_files} files");
+
+    let ratchet_path = root.join("rust/tools/detlint/ratchet.txt");
+    let baseline = parse_ratchet(&std::fs::read_to_string(&ratchet_path).unwrap()).unwrap();
+    findings.extend(ratchet_findings(&baseline, &census));
+
+    let rendered: Vec<String> = findings.iter().map(|f| f.to_string()).collect();
+    assert!(findings.is_empty(), "detlint findings:\n{}", rendered.join("\n"));
+}
