@@ -10,10 +10,26 @@
 //! host wall-clocks are recorded alongside. Results go to
 //! `BENCH_serve.json` (override: `LOBRA_BENCH_JSON`).
 //!
+//! With `LOBRA_BENCH_PLANNER_THREADS=N` the runtime plans through the
+//! async [`coordinator::service`] instead of the in-loop sync path, and
+//! the search-time split shows the overlap win: `search_seconds_total` is
+//! what the search cost, `search_seconds_unoverlapped` is the part the
+//! serving clock actually saw (≈ 0 when every slice hid behind a training
+//! step). `LOBRA_BENCH_METER=wall` charges the budget on host wall-clock
+//! (the production meter) instead of the deterministic sim meter.
+//!
+//! `LOBRA_BENCH_BASELINE=path` compares the run's JSON line-by-line
+//! against a checked-in baseline (host-wall and async-timing lines are
+//! skipped) and exits nonzero on drift; a baseline containing a
+//! `"bless": true` line is overwritten in place instead — how the first
+//! CI run on a new host locks in real numbers.
+//!
 //! ```bash
 //! cargo bench --bench serve_churn
 //! LOBRA_BENCH_GPUS=32 LOBRA_BENCH_BUDGET=60 cargo bench --bench serve_churn
 //! LOBRA_BENCH_BUDGET=0 cargo bench --bench serve_churn   # unlimited + certify
+//! LOBRA_BENCH_PLANNER_THREADS=2 LOBRA_BENCH_METER=wall \
+//!     cargo bench --bench serve_churn                    # overlapped async plan
 //! ```
 
 
@@ -41,7 +57,11 @@ fn main() {
     // 0 = unlimited budget (every replan runs to certified completion)
     let budget = env_f64("LOBRA_BENCH_BUDGET", 120.0);
     let spacing = env_f64("LOBRA_BENCH_SPACING", 900.0);
+    // 0 = deterministic in-loop sync planning; N > 0 = async planner service
+    let planner_threads: usize = benv::parse_or("LOBRA_BENCH_PLANNER_THREADS", 0usize);
+    let meter_name = benv::var("LOBRA_BENCH_METER").unwrap_or("sim");
     let json_path = benv::var("LOBRA_BENCH_JSON").unwrap_or("BENCH_serve.json").to_string();
+    let baseline_path = benv::var("LOBRA_BENCH_BASELINE");
 
     let cluster = ClusterSpec::a100_40g(gpus);
     let model = ModelDesc::llama2_7b();
@@ -51,17 +71,28 @@ fn main() {
 
     let mut opts = ServeOptions::default();
     opts.replan_budget = (budget > 0.0).then_some(budget);
-    opts.meter = BudgetMeter::SimPerPlan(1e-4);
+    opts.meter = match meter_name {
+        "wall" => BudgetMeter::Wall,
+        _ => BudgetMeter::SimPerPlan(1e-4),
+    };
     opts.slice_plans = 4096;
     opts.certify_identity = true;
     opts.tail_steps = 8;
+    opts.planner_threads = planner_threads;
 
     println!(
-        "== serve churn: {} on {} GPUs, {} events, replan budget {} ==\n",
+        "== serve churn: {} on {} GPUs, {} events, replan budget {}, {} meter, \
+         planner {} ==\n",
         model.name,
         gpus,
         trace.len(),
         if budget > 0.0 { format!("{budget:.0}s") } else { "unlimited".into() },
+        meter_name,
+        if planner_threads == 0 {
+            "sync (in-loop)".into()
+        } else {
+            format!("async service ({planner_threads} threads)")
+        },
     );
 
     let t0 = Stopwatch::start();
@@ -112,6 +143,18 @@ fn main() {
         "no stop-the-world (>=1 step in every overlapped replan window): {}",
         if no_stop_the_world { "yes" } else { "NO — BUG" }
     );
+    // The overlap split: total is what the search cost, unoverlapped is
+    // the part the serving clock was exposed to. With the async service
+    // the unoverlapped share collapses toward zero — that is the entire
+    // point of planning off-thread.
+    let overlapped = report.search_seconds_total - report.search_seconds_unoverlapped;
+    println!(
+        "search time: {:.3}s total = {:.3}s overlapped with training + {:.3}s \
+         unoverlapped (exposed on the serving clock)",
+        report.search_seconds_total,
+        overlapped.max(0.0),
+        report.search_seconds_unoverlapped,
+    );
 
     let tenants_json = report
         .tenants
@@ -129,7 +172,8 @@ fn main() {
         .join(",\n    ");
     let json = format!(
         "{{\n  \"bench\": \"serve_churn\",\n  \"gpus\": {gpus},\n  \
-         \"replan_budget_seconds\": {budget},\n  \"events\": {},\n  \
+         \"replan_budget_seconds\": {budget},\n  \"planner_threads\": {planner_threads},\n  \
+         \"meter\": \"{meter_name}\",\n  \"events\": {},\n  \
          \"sim_seconds\": {:.3},\n  \"steps_total\": {},\n  \
          \"steps_during_replan\": {},\n  \"min_steps_in_replan_window\": {},\n  \
          \"replan_windows\": {},\n  \"redeploys\": {},\n  \
@@ -137,6 +181,8 @@ fn main() {
          \"gpu_seconds_trained\": {:.3},\n  \"gpu_seconds_lost_redeploy\": {:.3},\n  \
          \"mean_tta_seconds\": {mean_tta:.3},\n  \"identity_checks\": {},\n  \
          \"identity_failures\": {},\n  \"no_stop_the_world\": {no_stop_the_world},\n  \
+         \"search_seconds_total\": {:.3},\n  \
+         \"search_seconds_unoverlapped\": {:.3},\n  \
          \"host_wall_seconds\": {wall:.3},\n  \"tenants\": [\n    {tenants_json}\n  ]\n}}\n",
         trace.len(),
         report.sim_seconds,
@@ -151,9 +197,62 @@ fn main() {
         report.gpu_seconds_lost_redeploy,
         report.identity_checks,
         report.identity_failures,
+        report.search_seconds_total,
+        report.search_seconds_unoverlapped,
     );
     match std::fs::write(&json_path, &json) {
         Ok(()) => println!("\nserving metrics recorded to {json_path}"),
         Err(e) => eprintln!("\nWARNING: could not write {json_path}: {e}"),
     }
+
+    if let Some(baseline) = baseline_path {
+        compare_against_baseline(baseline, &json);
+    }
+}
+
+/// Lines whose values depend on host speed or async slice timing — skipped
+/// by the baseline diff so the deterministic metrics are what's locked.
+fn host_dependent(line: &str) -> bool {
+    line.contains("host_wall") || line.contains("search_seconds")
+}
+
+/// Gate the deterministic serving metrics against a checked-in baseline.
+///
+/// The committed baseline may hold `"bless": true` instead of numbers: the
+/// bench then rewrites it with this run's JSON (minus the sentinel) and
+/// succeeds, so a toolchain-less commit can still check in the file and
+/// the first CI run locks in real values. Any later drift on a
+/// non-host-dependent line fails the run with a line diff.
+fn compare_against_baseline(path: &str, current: &str) {
+    let baseline = match std::fs::read_to_string(path) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("ERROR: baseline {path} unreadable: {e}");
+            std::process::exit(1);
+        }
+    };
+    if baseline.lines().any(|l| l.contains("\"bless\": true")) {
+        if let Err(e) = std::fs::write(path, current) {
+            eprintln!("ERROR: blessing baseline {path}: {e}");
+            std::process::exit(1);
+        }
+        println!("baseline {path} blessed from this run");
+        return;
+    }
+    let want: Vec<&str> = baseline.lines().filter(|l| !host_dependent(l)).collect();
+    let got: Vec<&str> = current.lines().filter(|l| !host_dependent(l)).collect();
+    if want == got {
+        println!("baseline {path}: OK ({} deterministic lines)", got.len());
+        return;
+    }
+    eprintln!("ERROR: serving metrics drifted from baseline {path}:");
+    for i in 0..want.len().max(got.len()) {
+        let w = want.get(i).copied().unwrap_or("<missing>");
+        let g = got.get(i).copied().unwrap_or("<missing>");
+        if w != g {
+            eprintln!("  - {w}");
+            eprintln!("  + {g}");
+        }
+    }
+    std::process::exit(1);
 }

@@ -23,6 +23,14 @@
 //! * [`runtime`] — the event-driven **serving runtime**: replays a churn
 //!   trace, overlapping training under the current plan with the budgeted
 //!   anytime replan, swapping plans at step boundaries.
+//! * [`service`] — the **async planner service**: a dedicated thread owns
+//!   a planning session and pumps the anytime search continuously,
+//!   publishing terminal plans through a lock-free epoch-counted cell
+//!   ([`crate::util::par::EpochCell`]); superseding events cancel the
+//!   in-flight search mid-slice via [`crate::util::par::CancelToken`].
+//!   With `--planner-threads N`, search overlaps training even on cold
+//!   starts, where the sync path's slices are exposed on the serving
+//!   clock.
 //!
 //! ## The serving event loop
 //!
@@ -81,5 +89,6 @@ pub mod dispatcher;
 pub mod planner;
 pub mod runtime;
 pub mod scheduler;
+pub mod service;
 pub mod session;
 pub mod tasks;

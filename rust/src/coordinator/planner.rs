@@ -39,7 +39,7 @@ use crate::costmodel::{BucketLoad, CostModel, CostTable};
 use crate::data::MultiTaskSampler;
 use crate::solver::partition::{self, Plan};
 use crate::util::clock::Stopwatch;
-use crate::util::par::{max_threads, par_fold, par_map};
+use crate::util::par::{max_threads, par_fold, par_map, CancelToken};
 
 /// A deployed set of heterogeneous FT replicas (the paper's Table 2 rows).
 #[derive(Debug, Clone, PartialEq)]
@@ -120,6 +120,13 @@ pub struct PlannerOptions {
     /// default is Balanced; the Figure 8 "+heterogeneous replicas" ablation
     /// arm plans self-consistently for LengthBased dispatch.
     pub inner_policy: DispatchPolicy,
+    /// Supersession token for the async planner service: when armed, the
+    /// streaming searches stop enumerating at the next visited plan and
+    /// return whatever they had. A cancelled search's results are
+    /// *discarded* by the caller (where the flag lands mid-walk is
+    /// timing-dependent), so the deterministic sync path leaves this
+    /// `None` — every determinism certificate runs with no token armed.
+    pub cancel: Option<CancelToken>,
 }
 
 impl Default for PlannerOptions {
@@ -136,6 +143,7 @@ impl Default for PlannerOptions {
             seed: 0x10b7a,
             allow_cross_server_tp: true,
             inner_policy: DispatchPolicy::Balanced,
+            cancel: None,
         }
     }
 }
@@ -598,6 +606,11 @@ impl<'a> Planner<'a> {
                 min_gpus,
                 None,
                 &mut |counts| {
+                    // supersession: an armed token ends every worker's
+                    // walk at its next visit (results will be discarded)
+                    if matches!(&opts.cancel, Some(c) if c.is_cancelled()) {
+                        return false;
+                    }
                     if enumerated.fetch_add(1, Ordering::Relaxed) >= opts.max_plans {
                         capped.store(true, Ordering::Relaxed);
                         return false;
@@ -791,6 +804,11 @@ impl<'a> Planner<'a> {
             let mut seq = 0usize;
             let mut floor = 0usize;
             let mut visitor = |counts: &[u32]| -> bool {
+                // supersession: stop before the next visit; the caller
+                // (planner service) discards a cancelled search's output
+                if matches!(&opts.cancel, Some(c) if c.is_cancelled()) {
+                    return false;
+                }
                 if enumerated.fetch_add(1, Ordering::Relaxed) >= max_plans {
                     capped.store(true, Ordering::Relaxed);
                     return false;

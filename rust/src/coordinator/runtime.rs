@@ -39,11 +39,20 @@
 //! * Tenant-observed metrics: time-to-admission, steps trained (incl.
 //!   during replan windows), and GPU-seconds lost to redeploys — charged
 //!   only for replica groups that actually changed.
+//! * With [`ServeOptions::planner_threads`] > 0 the search leaves the
+//!   event loop entirely: a [`crate::coordinator::service::PlannerService`]
+//!   thread pumps it continuously and publishes the terminal plan through
+//!   a lock-free epoch cell; the loop polls at step boundaries and adopts
+//!   via `TaskManager::finish_replan_with`. Search then overlaps training
+//!   even on cold starts — the report's
+//!   [`ServeReport::search_seconds_unoverlapped`] split collapses to the
+//!   residual polling wait instead of the full search time.
 
 
 use crate::cluster::ClusterSpec;
 use crate::config::{TaskSet, TaskSpec};
 use crate::coordinator::planner::{Planner, PlannerOptions};
+use crate::coordinator::service::{PlanUpdate, PlannerService};
 use crate::coordinator::tasks::{EventOutcome, ReplanOutcome, TaskEvent, TaskManager};
 use crate::costmodel::CostModel;
 use crate::exec::SimTrainLoop;
@@ -99,6 +108,13 @@ pub struct ServeOptions {
     /// Training steps to run after the last event settles (lets tenants
     /// admitted by the final replan register progress).
     pub tail_steps: u64,
+    /// Worker threads for the async planner service; 0 (default) keeps
+    /// the deterministic single-threaded sync path, which doubles as the
+    /// sim/test double. With N > 0 the search runs on a dedicated service
+    /// thread whose slice parallelism is scoped to N
+    /// ([`crate::util::par::with_max_threads`]), and the event loop only
+    /// polls for published plans at step boundaries.
+    pub planner_threads: usize,
 }
 
 impl Default for ServeOptions {
@@ -113,6 +129,7 @@ impl Default for ServeOptions {
             restart_seconds_per_replica: 15.0,
             certify_identity: false,
             tail_steps: 4,
+            planner_threads: 0,
         }
     }
 }
@@ -171,6 +188,15 @@ pub struct ServeReport {
     /// Completed replans re-verified against a cold plan / mismatches.
     pub identity_checks: u32,
     pub identity_failures: u32,
+    /// Total search time charged by the meter (sync) or reported by the
+    /// planner service (async), seconds.
+    pub search_seconds_total: f64,
+    /// The share of search time *exposed on the serving clock* because no
+    /// deployment was training to hide it under (cold starts). Sync: the
+    /// full charge of every unoverlapped slice. Async: only the residual
+    /// polling wait — the search itself runs off-thread, so this collapses
+    /// toward zero under the wall meter.
+    pub search_seconds_unoverlapped: f64,
 }
 
 impl ServeReport {
@@ -210,6 +236,13 @@ pub struct ServeRuntime<'a> {
     epoch: u64,
     tenants: Vec<TenantRecord>,
     report: ServeReport,
+    /// The async planner service (`planner_threads` > 0), or `None` for
+    /// the deterministic sync path.
+    service: Option<PlannerService>,
+    /// Epoch of the service request whose result this window is waiting
+    /// for (stale published epochs are ignored). Distinct from `epoch`,
+    /// which seeds training across redeploys.
+    submitted_epoch: u64,
 }
 
 impl<'a> ServeRuntime<'a> {
@@ -217,6 +250,16 @@ impl<'a> ServeRuntime<'a> {
         let mut mgr =
             TaskManager::new(cost, cluster, TaskSet::default(), opts.planner.clone());
         mgr.restart_seconds_per_replica = opts.restart_seconds_per_replica;
+        let service = (opts.planner_threads > 0).then(|| {
+            PlannerService::spawn(
+                cost.clone(),
+                cluster.clone(),
+                opts.planner.clone(),
+                opts.meter,
+                opts.slice_plans,
+                opts.planner_threads,
+            )
+        });
         Self {
             cost,
             cluster,
@@ -229,6 +272,8 @@ impl<'a> ServeRuntime<'a> {
             epoch: 0,
             tenants: Vec::new(),
             report: ServeReport::default(),
+            service,
+            submitted_epoch: 0,
         }
     }
 
@@ -313,7 +358,11 @@ impl<'a> ServeRuntime<'a> {
             }
             EventOutcome::Unchanged => {}
             EventOutcome::Drained => {
-                // no tasks left: the deployment tears down immediately
+                // no tasks left: the deployment tears down immediately,
+                // and any in-flight service search has no successor target
+                if let Some(svc) = &mut self.service {
+                    svc.cancel_current();
+                }
                 self.window = None;
                 self.train = None;
                 self.deployed_tenants.clear();
@@ -348,6 +397,7 @@ impl<'a> ServeRuntime<'a> {
                 // would let sustained churn defer every swap indefinitely;
                 // carrying it bounds the oldest waiting tenant's admission
                 // by one budget, after which the best-so-far plan deploys.
+                let fresh = self.window.is_none();
                 let (steps_so_far, budget_left) = match self.window.take() {
                     Some(w) => (w.steps_in_window, w.budget_left),
                     None => (0, self.opts.replan_budget),
@@ -358,15 +408,35 @@ impl<'a> ServeRuntime<'a> {
                     steps_in_window: steps_so_far,
                     had_deployment: self.train.is_some(),
                 });
+                // async: hand the (re-)targeted search to the service —
+                // submit cancels the superseded in-flight token itself.
+                // (A *rejected* event needs no resubmit: the restored task
+                // set is exactly what the in-flight search targets.)
+                if let Some(svc) = &mut self.service {
+                    self.submitted_epoch = svc.submit(
+                        self.mgr.tasks().clone(),
+                        self.opts.replan_budget,
+                        fresh,
+                    );
+                }
             }
         }
     }
 
-    /// One tick of an open replan window: a training step under the
+    /// One tick of an open replan window. Sync: a training step under the
     /// current plan (the overlap), then one budget-metered search slice;
     /// when the search completes or the budget runs out, swap at this
-    /// step boundary.
+    /// step boundary. Async: a training step, then a wait-free poll of the
+    /// service's publication cell.
     fn replan_tick(&mut self) {
+        if self.service.is_some() {
+            self.replan_tick_async();
+        } else {
+            self.replan_tick_sync();
+        }
+    }
+
+    fn replan_tick_sync(&mut self) {
         let stepped = self.train.is_some() && self.train_step(true);
         let t0 = Stopwatch::start();
         let slice = self.mgr.pump_replan(self.opts.slice_plans);
@@ -377,11 +447,13 @@ impl<'a> ServeRuntime<'a> {
             None => (true, 0),
         };
         let charge = self.opts.meter.charge(wall, enumerated);
+        self.report.search_seconds_total += charge;
         if !stepped {
             // nothing overlapped the search: its cost is exposed on the
             // serving clock (cold starts pay for planning, live tenants
             // hide it under training)
             self.now += charge;
+            self.report.search_seconds_unoverlapped += charge;
         }
         let exhausted = {
             let w = self.window.as_mut().expect("replan_tick without window");
@@ -401,11 +473,56 @@ impl<'a> ServeRuntime<'a> {
         }
     }
 
+    /// Async window tick: the search runs on the service thread, so the
+    /// loop just trains and polls. The published update is adopted only
+    /// when its epoch matches the window's request — a stale final (from a
+    /// superseded search that published before its cancellation landed)
+    /// is ignored, and the epoch cell has already refused to let it
+    /// overwrite a newer one.
+    fn replan_tick_async(&mut self) {
+        let stepped = self.train.is_some() && self.train_step(true);
+        let update = self
+            .service
+            .as_ref()
+            .and_then(PlannerService::poll)
+            .map(|(_, u)| u)
+            .filter(|u| u.epoch == self.submitted_epoch);
+        if let Some(u) = update {
+            self.report.search_seconds_total += u.search_seconds;
+            if u.exhausted {
+                self.report.budget_exhausted += 1;
+            }
+            let tasks_for_certify = self.mgr.tasks().clone();
+            let outcome = self.mgr.finish_replan_with(u.plan.clone());
+            self.adopt(outcome, u.done, &tasks_for_certify);
+            return;
+        }
+        if !stepped {
+            // Cold start: nothing to overlap, so the residual wait for the
+            // service is what's exposed on the serving clock — the search
+            // itself is off-thread. This (and the service's slice walls)
+            // is why async serving is wall-timing-dependent; the sync path
+            // stays the deterministic sim double.
+            let t0 = Stopwatch::start();
+            std::thread::sleep(std::time::Duration::from_millis(1));
+            let waited = t0.elapsed_secs();
+            self.now += waited;
+            self.report.search_seconds_unoverlapped += waited;
+        }
+    }
+
     /// Adopt the replan at a step boundary and redeploy the training loop,
     /// charging checkpoint+restart only for changed replica groups.
     fn swap(&mut self, completed: bool) {
         let tasks_for_certify = self.mgr.tasks().clone();
         let outcome = self.mgr.finish_replan();
+        self.adopt(outcome, completed, &tasks_for_certify);
+    }
+
+    /// Shared adoption tail of the sync swap and the async poll: close the
+    /// window (recording its overlap proof), account the outcome, certify
+    /// completed searches against a cold plan, and redeploy training.
+    fn adopt(&mut self, outcome: ReplanOutcome, completed: bool, tasks_for_certify: &TaskSet) {
         if let Some(w) = self.window.take() {
             if w.had_deployment {
                 self.report.min_steps_in_replan_window = Some(
@@ -435,7 +552,7 @@ impl<'a> ServeRuntime<'a> {
             if let Some(deployed) = self.mgr.plan() {
                 self.report.identity_checks += 1;
                 let cold = Planner::new(self.cost, self.cluster)
-                    .plan(&tasks_for_certify, self.opts.planner.clone());
+                    .plan(tasks_for_certify, self.opts.planner.clone());
                 let identical = cold.as_ref().is_some_and(|c| {
                     c.groups == deployed.groups
                         && c.expected_step_time.to_bits()
@@ -687,6 +804,27 @@ mod tests {
         assert_eq!(report.budget_exhausted, 0);
         assert!(report.gpu_seconds_trained > 0.0);
         assert!(report.sim_seconds > 0.0);
+    }
+
+    #[test]
+    fn async_service_serves_trace_and_certifies_identity() {
+        let (cost, cluster) = world();
+        let mut opts = fast_opts();
+        // unlimited budget: every adoption is a completed search, and
+        // certify_identity re-verifies each deployed plan against a cold
+        // `Planner::plan` — async == sync == cold at the plan level, even
+        // though admission timestamps are wall-timing-dependent here
+        opts.planner_threads = 2;
+        let trace = default_churn_trace(&pool(), 400.0);
+        let report = serve_trace(&cost, &cluster, &trace, opts);
+        assert_eq!(report.tenants.len(), 4, "{:#?}", report.tenants);
+        for t in &report.tenants {
+            assert!(t.admitted_at.is_some(), "tenant {} never admitted", t.name);
+        }
+        assert!(report.identity_checks > 0);
+        assert_eq!(report.identity_failures, 0, "async != cold: {report:#?}");
+        assert_eq!(report.budget_exhausted, 0);
+        assert!(report.steps_total > 0);
     }
 
     #[test]

@@ -1,0 +1,334 @@
+//! The async planner service: off-thread anytime search with lock-free
+//! plan publication.
+//!
+//! The sync serving path interleaves search and training on one thread —
+//! each replan slice runs *between* training steps, so with no overlapping
+//! deployment (cold start) the search time is exposed on the serving
+//! clock. This module promotes planning to a dedicated service thread that
+//! owns its own [`PlanningSession`] and pumps
+//! [`PlanningSession::pump_anytime_cancellable`] continuously, so search
+//! overlaps training even when nothing is deployed:
+//!
+//! ```text
+//!  event thread (ServeRuntime)              planner service thread
+//!  ───────────────────────────              ──────────────────────
+//!  TaskEvent ──► apply_event                 recv ──► drain to newest
+//!      │            (window opens)             │
+//!      ├─ cancel in-flight token ──────────►  CancelToken observed
+//!      └─ submit(epoch+1, tasks) ──────────►  inside PlanCursor slice:
+//!                                             discard slice, new search
+//!  train_step ... train_step                 pump ─ pump ─ pump ─ done
+//!      │                                       │
+//!      ▼         ┌───────────────┐             ▼
+//!  poll() ◄──────┤  EpochCell    │◄── publish(epoch, final plan)
+//!      │         │ (lock-free)   │
+//!      ▼         └───────────────┘
+//!  epoch match? ──► finish_replan_with(plan) at the step boundary
+//! ```
+//!
+//! **Supersession** is epoch-counted: every [`PlannerService::submit`]
+//! cancels the previous request's [`CancelToken`] and bumps the epoch. The
+//! token is checked inside `PlanCursor` enumeration slices (every plan),
+//! so a superseding event interrupts the search mid-slice instead of
+//! waiting for cooperative slice exhaustion; the interrupted slice's
+//! partial results are discarded wholesale (see
+//! [`PlanningSession::pump_anytime_cancellable`]). The [`EpochCell`]
+//! rejects publishes at stale epochs, so a search superseded between
+//! computing and publishing its plan can never overwrite its successor's.
+//!
+//! **Determinism.** The service publishes only *terminal* results — the
+//! search ran to enumeration completion (`done`) or its budget expired
+//! (`exhausted`, plan = best-so-far) — exactly the two adoption points of
+//! the sync path. A completed (`done`) search is built from the same
+//! certified-cold-identical machinery as the sync path (same
+//! `begin/pump/finish` calls on a `PlanningSession`), so its plan is
+//! bit-identical to a cold `Planner::plan` for the same task set — that is
+//! what `tests/async_planner.rs` certifies across thread counts, the same
+//! way warm == cold is certified today. Budget *accounting* is the one
+//! best-effort divergence: a superseding request carries the open window's
+//! remaining budget like the sync path, but if an event lands in the gap
+//! after the service finished and before the runtime adopted, the
+//! successor restarts with a full budget (the sync path, which adopts at
+//! the same tick it detects completion, has no such gap). Under the
+//! unlimited-budget certification setup this is moot; under the wall
+//! meter, budgets are timing-dependent by definition.
+//!
+//! Raw thread spawning here is sanctioned by detlint rule R6 (confined to
+//! `util::par` and this module).
+
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use crate::cluster::ClusterSpec;
+use crate::config::TaskSet;
+use crate::coordinator::planner::{DeploymentPlan, Planner, PlannerOptions};
+use crate::coordinator::runtime::BudgetMeter;
+use crate::coordinator::session::PlanningSession;
+use crate::costmodel::CostModel;
+use crate::util::par::{with_max_threads, CancelToken, EpochCell};
+
+/// A terminal search result published by the service. Every update is
+/// final for its epoch: the service publishes nothing mid-search (the
+/// expensive candidate evaluation runs once, at adoption time, exactly
+/// like the sync path — this is what keeps async == sync plan identity).
+#[derive(Debug, Clone)]
+pub struct PlanUpdate {
+    /// The request epoch this result answers (compare against the epoch
+    /// returned by [`PlannerService::submit`] before adopting).
+    pub epoch: u64,
+    /// The plan to adopt; `None` means the world is infeasible for the
+    /// requested task set (the deployment drains).
+    pub plan: Option<DeploymentPlan>,
+    /// The enumeration ran to completion: `plan` is certified
+    /// cold-identical.
+    pub done: bool,
+    /// The budget expired mid-search: `plan` is the feasible best-so-far.
+    pub exhausted: bool,
+    /// Plans enumerated across the whole search.
+    pub n_enumerated: usize,
+    /// Slices the search took.
+    pub slices: u32,
+    /// Service-side wall-clock spent searching (for the runtime's
+    /// overlapped-vs-unoverlapped split; budget charging uses the
+    /// [`BudgetMeter`], which may be the sim clock instead).
+    pub search_seconds: f64,
+}
+
+/// One search request: plan for `tasks`, reporting at `epoch`.
+struct PlanRequest {
+    epoch: u64,
+    tasks: TaskSet,
+    /// Replan budget for a fresh window; `None` = unlimited.
+    budget: Option<f64>,
+    /// This request opens a new replan window (don't carry the previous
+    /// window's remaining budget).
+    fresh: bool,
+    cancel: CancelToken,
+}
+
+enum Cmd {
+    Plan(Box<PlanRequest>),
+    Shutdown,
+}
+
+/// Handle to the planner service thread. Owned by the serving runtime;
+/// dropping it shuts the thread down (cancelling any in-flight search).
+pub struct PlannerService {
+    tx: mpsc::Sender<Cmd>,
+    cell: Arc<EpochCell<PlanUpdate>>,
+    handle: Option<JoinHandle<()>>,
+    epoch: u64,
+    current_cancel: Option<CancelToken>,
+}
+
+impl PlannerService {
+    /// Spawn the service thread. It owns a clone of the world (cost model
+    /// + cluster) and its own [`PlanningSession`]; session warm-starts are
+    /// certified plan-identical to cold searches, so the separate memo
+    /// chain changes no published plan. `threads` bounds the slice
+    /// parallelism *of the service thread only* (via
+    /// [`with_max_threads`]); the event loop's own parallelism is
+    /// untouched.
+    pub fn spawn(
+        cost: CostModel,
+        cluster: ClusterSpec,
+        opts: PlannerOptions,
+        meter: BudgetMeter,
+        slice_plans: usize,
+        threads: usize,
+    ) -> Self {
+        let (tx, rx) = mpsc::channel();
+        let cell = Arc::new(EpochCell::new());
+        let worker_cell = Arc::clone(&cell);
+        let handle = std::thread::spawn(move || {
+            let worker = Worker {
+                cost,
+                cluster,
+                session: PlanningSession::new(opts),
+                meter,
+                slice_plans,
+                cell: worker_cell,
+                window_open: false,
+                window_left: None,
+            };
+            with_max_threads(threads, || worker.run(&rx));
+        });
+        Self {
+            tx,
+            cell,
+            handle: Some(handle),
+            epoch: 0,
+            current_cancel: None,
+        }
+    }
+
+    /// Request a plan for `tasks`, superseding any in-flight search (its
+    /// token is cancelled before the new request is sent, so the service
+    /// observes the cancellation no later than the request). Returns the
+    /// request epoch: adopt a polled [`PlanUpdate`] only when its epoch
+    /// matches. `fresh` marks the start of a new replan window (full
+    /// `budget`); a non-fresh request carries the open window's remaining
+    /// budget.
+    pub fn submit(&mut self, tasks: TaskSet, budget: Option<f64>, fresh: bool) -> u64 {
+        self.cancel_current();
+        let cancel = CancelToken::new();
+        self.current_cancel = Some(cancel.clone());
+        self.epoch += 1;
+        let _ = self.tx.send(Cmd::Plan(Box::new(PlanRequest {
+            epoch: self.epoch,
+            tasks,
+            budget,
+            fresh,
+            cancel,
+        })));
+        self.epoch
+    }
+
+    /// Cancel the in-flight search (if any) without submitting a new one —
+    /// a drain event has no successor task set to search for.
+    pub fn cancel_current(&mut self) {
+        if let Some(c) = self.current_cancel.take() {
+            c.cancel();
+        }
+    }
+
+    /// Wait-free snapshot of the newest published result (the cell epoch
+    /// and the update it tags). `None` until the first publish.
+    pub fn poll(&self) -> Option<(u64, Arc<PlanUpdate>)> {
+        self.cell.read()
+    }
+
+    /// The epoch of the most recent [`Self::submit`] (0 before any).
+    pub fn submitted_epoch(&self) -> u64 {
+        self.epoch
+    }
+}
+
+impl Drop for PlannerService {
+    fn drop(&mut self) {
+        self.cancel_current();
+        let _ = self.tx.send(Cmd::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Service-thread state: the cloned world plus its own planning session
+/// and replan-window budget bookkeeping.
+struct Worker {
+    cost: CostModel,
+    cluster: ClusterSpec,
+    session: PlanningSession,
+    meter: BudgetMeter,
+    slice_plans: usize,
+    cell: Arc<EpochCell<PlanUpdate>>,
+    /// A replan window is open: a superseding (non-fresh) request carries
+    /// [`Self::window_left`] instead of a full budget.
+    window_open: bool,
+    /// Remaining budget of the open window; `None` = unlimited.
+    window_left: Option<f64>,
+}
+
+impl Worker {
+    fn run(mut self, rx: &mpsc::Receiver<Cmd>) {
+        loop {
+            let mut cmd = match rx.recv() {
+                Ok(c) => c,
+                // sender dropped without Shutdown (runtime panicked)
+                Err(_) => return,
+            };
+            // Drain to the newest request: every intermediate one was
+            // superseded (its token is already cancelled) before we ever
+            // started it, so searching for it would be pure waste.
+            while let Ok(newer) = rx.try_recv() {
+                cmd = newer;
+            }
+            match cmd {
+                Cmd::Shutdown => return,
+                Cmd::Plan(req) => self.plan(*req),
+            }
+        }
+    }
+
+    /// Run one search to a terminal state (done / exhausted / cancelled),
+    /// publishing the terminal result unless cancelled.
+    fn plan(&mut self, req: PlanRequest) {
+        let PlanRequest { epoch, tasks, budget, fresh, cancel } = req;
+        // Budget carry across supersession, mirroring the sync runtime's
+        // replan window: a fresh window starts with the full budget, a
+        // superseding request inherits what the superseded search left.
+        let mut left = if fresh || !self.window_open { budget } else { self.window_left };
+        self.window_open = true;
+
+        let planner = Planner::new(&self.cost, &self.cluster);
+        let Some(mut search) = self.session.begin_anytime(&planner, &tasks) else {
+            // Infeasible world (e.g. no candidate config supports the
+            // longest bucket): terminal "no plan" verdict, window closed.
+            self.window_open = false;
+            self.window_left = None;
+            self.cell.publish(
+                epoch,
+                Arc::new(PlanUpdate {
+                    epoch,
+                    plan: None,
+                    done: true,
+                    exhausted: false,
+                    n_enumerated: 0,
+                    slices: 0,
+                    search_seconds: 0.0,
+                }),
+            );
+            return;
+        };
+        let mut search_seconds = 0.0;
+        loop {
+            let report = self.session.pump_anytime_cancellable(
+                &planner,
+                &mut search,
+                self.slice_plans,
+                Some(&cancel),
+            );
+            search_seconds += report.wall_seconds;
+            if report.cancelled {
+                // Superseded: leave the window open carrying the remaining
+                // budget, and drop the search unfinished — the sync path's
+                // supersession likewise drops the pending search without
+                // adopting it. Nothing is published (and the EpochCell
+                // would reject this epoch anyway once the successor
+                // publishes).
+                self.window_left = left;
+                return;
+            }
+            let charge = self.meter.charge(report.wall_seconds, report.n_enumerated);
+            let mut exhausted = false;
+            if let Some(b) = left.as_mut() {
+                *b -= charge;
+                exhausted = *b <= 0.0;
+            }
+            if report.done || exhausted {
+                // capture counters before finish_anytime consumes the
+                // search
+                let n_enumerated = search.n_enumerated();
+                let slices = search.slices();
+                let plan = self.session.finish_anytime(&planner, search).map(|(p, _)| p);
+                self.window_open = false;
+                self.window_left = None;
+                self.cell.publish(
+                    epoch,
+                    Arc::new(PlanUpdate {
+                        epoch,
+                        plan,
+                        done: report.done,
+                        exhausted: exhausted && !report.done,
+                        n_enumerated,
+                        slices,
+                        search_seconds,
+                    }),
+                );
+                return;
+            }
+        }
+    }
+}

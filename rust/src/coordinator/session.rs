@@ -55,6 +55,7 @@ use crate::coordinator::planner::{
 use crate::costmodel::{cost_fingerprint, fnv1a, CostTable, CostTables};
 use crate::solver::partition::{Plan, PlanCursor};
 use crate::util::clock::Stopwatch;
+use crate::util::par::CancelToken;
 
 /// Counters of how the session's replans were served.
 #[derive(Debug, Clone, Default)]
@@ -214,6 +215,11 @@ pub struct SliceReport {
     pub wall_seconds: f64,
     /// The enumeration is complete (no further slices needed).
     pub done: bool,
+    /// A supersession token interrupted the slice: its partial results
+    /// were discarded and the search state was left exactly as it was
+    /// before the slice ran (see
+    /// [`PlanningSession::pump_anytime_cancellable`]).
+    pub cancelled: bool,
 }
 
 /// A long-lived planning session. Construct once per (cost model, cluster)
@@ -387,21 +393,64 @@ impl PlanningSession {
         search: &mut AnytimeReplan,
         slice_plans: usize,
     ) -> SliceReport {
+        self.pump_anytime_cancellable(planner, search, slice_plans, None)
+    }
+
+    /// [`Self::pump_anytime`] with a supersession token. When `cancel` is
+    /// armed (before or during the slice), the slice's partial results are
+    /// **discarded wholesale** — candidates, bounds, cursor and counters
+    /// stay exactly as they were before the slice ran — and the report
+    /// comes back `cancelled` (never `done`). Discarding is what keeps
+    /// determinism certifiable: where the flag lands mid-enumeration is
+    /// timing-dependent, so the only deterministic states are "slice never
+    /// happened" and "slice ran in full". A cancelled search is normally
+    /// dropped by its owner (the planner service starts a fresh search for
+    /// the superseding task set); if resumed instead, the next slice
+    /// re-runs from the same checkpoint as if the cancelled one had never
+    /// been attempted.
+    pub fn pump_anytime_cancellable(
+        &self,
+        planner: &Planner,
+        search: &mut AnytimeReplan,
+        slice_plans: usize,
+        cancel: Option<&CancelToken>,
+    ) -> SliceReport {
+        let armed = |c: Option<&CancelToken>| matches!(c, Some(t) if t.is_cancelled());
+        if armed(cancel) {
+            return SliceReport {
+                n_enumerated: 0,
+                wall_seconds: 0.0,
+                done: false,
+                cancelled: true,
+            };
+        }
         if search.cursor.is_exhausted() || slice_plans == 0 {
             return SliceReport {
                 n_enumerated: 0,
                 wall_seconds: 0.0,
                 done: search.cursor.is_exhausted(),
+                cancelled: false,
             };
         }
         let start = Stopwatch::start();
         let mut opts = self.opts.clone();
         opts.max_plans = slice_plans;
+        opts.cancel = cancel.cloned();
 
         if !opts.lower_bound_filter {
             // The "no filter" ablation has no bounds to merge across
             // slices: run it as one capped slice, like the blocking path.
             let found = planner.filtered_plans(&search.configs, &search.table, &search.buckets, &opts);
+            if armed(cancel) {
+                // interrupted mid-walk: the visited set is timing-dependent
+                // — throw it away, leave the search untouched
+                return SliceReport {
+                    n_enumerated: 0,
+                    wall_seconds: start.elapsed_secs(),
+                    done: false,
+                    cancelled: true,
+                };
+            }
             search.n_enumerated += found.n_enumerated;
             search.n_survivors = found.survivors.len();
             search.peak_storage = search.peak_storage.max(found.peak_storage);
@@ -416,6 +465,7 @@ impl PlanningSession {
                 n_enumerated: search.n_enumerated,
                 wall_seconds: wall,
                 done: true,
+                cancelled: false,
             };
         }
 
@@ -442,6 +492,18 @@ impl PlanningSession {
                 )
             }
         };
+        if armed(cancel) {
+            // Interrupted mid-enumeration: which plans the slice visited
+            // depends on when the flag landed, so none of its products
+            // (candidates, bounds, checkpoint, counters) may leak into the
+            // resumable state.
+            return SliceReport {
+                n_enumerated: 0,
+                wall_seconds: start.elapsed_secs(),
+                done: false,
+                cancelled: true,
+            };
+        }
 
         let threshold = 1.0 + self.opts.lower_bound_threshold;
         let best = search.best_bound.min(ext.best_bound);
@@ -479,6 +541,7 @@ impl PlanningSession {
             n_enumerated: ext.n_enumerated,
             wall_seconds: wall,
             done: search.cursor.is_exhausted(),
+            cancelled: false,
         }
     }
 

@@ -16,7 +16,13 @@
 //! adopts the result at a step boundary ([`TaskManager::finish_replan`]).
 //! The blocking [`TaskManager::handle`] survives as the
 //! unlimited-budget composition of those three calls — same plans,
-//! bit-identical `expected_step_time`, inverted control flow.
+//! bit-identical `expected_step_time`, inverted control flow. Under the
+//! async planner service ([`crate::coordinator::service`]) the search runs
+//! off-thread instead: `apply_event` still opens the replan window (its
+//! admission/supersession semantics are shared verbatim), but the
+//! service's published plan is adopted through
+//! [`TaskManager::finish_replan_with`] and the local pending search is
+//! simply never pumped.
 //!
 //! Redeploy accounting is **incremental**: [`plan_adjustment`] diffs the
 //! `(ParallelConfig, count)` groups of the old and new plans, and only
@@ -336,6 +342,32 @@ impl<'a> TaskManager<'a> {
         }
         let before = self.plan.clone();
         self.adopt_pending();
+        self.outcome_from(before)
+    }
+
+    /// Adopt a plan computed *outside* the manager — the async planner
+    /// service's published result — at a step boundary. Replan accounting
+    /// (`replans`, window close, dropping the never-pumped local pending
+    /// search) and the redeploy diff are identical to
+    /// [`Self::finish_replan`]; only the search itself happened elsewhere.
+    /// `None` means the service found the world infeasible — the
+    /// deployment drains, exactly as when the local search finds nothing.
+    pub fn finish_replan_with(&mut self, plan: Option<DeploymentPlan>) -> ReplanOutcome {
+        if !self.replan_open {
+            return ReplanOutcome::Unchanged;
+        }
+        let before = self.plan.clone();
+        self.replan_open = false;
+        self.replans += 1;
+        self.pending = None;
+        self.plan = plan;
+        self.outcome_from(before)
+    }
+
+    /// Diff the freshly adopted `self.plan` against `before` into the
+    /// caller-visible outcome, charging checkpoint+restart for the changed
+    /// replica groups only.
+    fn outcome_from(&mut self, before: Option<DeploymentPlan>) -> ReplanOutcome {
         match (&before, &self.plan) {
             (Some(a), Some(b)) if a.groups == b.groups => ReplanOutcome::Unchanged,
             (Some(a), Some(b)) => {

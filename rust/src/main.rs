@@ -48,14 +48,21 @@ USAGE:
   lobra serve     [--model ...] [--gpus N] [--cluster ...] [--tasks ...]
                   [--trace FILE] [--replan-budget SECS] [--slice-plans N]
                   [--sim-seconds-per-plan F] [--wall-meter] [--certify]
-                  [--spacing SECS] [--seed N] [--profile PATH]
+                  [--planner-threads N] [--spacing SECS] [--seed N]
+                  [--profile PATH]
                   (replay an arrival/exit churn trace: training advances
                    under the current plan while a budgeted anytime replan
                    runs in the background; plans swap at step boundaries,
                    charging only the replica groups that changed.
                    --replan-budget 0 = unlimited; without --trace a
                    default churn trace over --tasks is replayed, arrivals
-                   --spacing seconds apart. Trace lines:
+                   --spacing seconds apart. --planner-threads N > 0 moves
+                   the search to a dedicated planner-service thread with N
+                   slice workers: events cancel the in-flight search,
+                   terminal plans publish through a lock-free epoch cell
+                   and are adopted at step boundaries — plan-identical to
+                   the sync path, but search time overlaps training even
+                   on cold starts. Trace lines:
                      <at> arrive <name> <batch> <mean> <skew> <min> <max>
                      <at> exit   <name>)
   lobra calibrate [--model ...] [--gpus N] [--cluster ...] [--tasks ...]
@@ -272,9 +279,10 @@ fn main() -> Result<()> {
             };
             opts.seed = args.get_parse("seed", opts.seed)?;
             opts.certify_identity = args.has("certify");
+            opts.planner_threads = args.get_parse("planner-threads", 0usize)?;
             println!(
                 "serving model={} cluster={} | {} events | replan budget {} | \
-                 slice {} plans | meter {:?}",
+                 slice {} plans | meter {:?} | planner {}",
                 model.name,
                 cluster.name,
                 trace.len(),
@@ -284,6 +292,10 @@ fn main() -> Result<()> {
                 },
                 opts.slice_plans,
                 opts.meter,
+                match opts.planner_threads {
+                    0 => "sync (in-loop)".into(),
+                    n => format!("async service ({n} threads)"),
+                },
             );
             let mut rt = ServeRuntime::new(&cost, &cluster, opts);
             let report = rt.run_trace(&trace);
@@ -317,6 +329,12 @@ fn main() -> Result<()> {
                 report.redeploys,
                 report.plan_swaps_identical,
                 report.budget_exhausted,
+            );
+            println!(
+                "search time: {:.3}s total, {:.3}s unoverlapped (exposed on the \
+                 serving clock)",
+                report.search_seconds_total,
+                report.search_seconds_unoverlapped,
             );
             println!(
                 "GPU-seconds: {:.1} trained, {:.1} lost to redeploys (changed groups \

@@ -168,11 +168,11 @@ impl Engine {
         if parts.len() != 5 {
             return Err(anyhow!("expected 5 outputs, got {}", parts.len()));
         }
-        let task_tokens = parts.pop().unwrap().to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
-        let task_loss = parts.pop().unwrap().to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
-        let tokens_out = parts.pop().unwrap().to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
-        let grad = parts.pop().unwrap().to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
-        let loss = parts.pop().unwrap().to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+        let task_tokens = pop_output(&mut parts)?.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+        let task_loss = pop_output(&mut parts)?.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+        let tokens_out = pop_output(&mut parts)?.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+        let grad = pop_output(&mut parts)?.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+        let loss = pop_output(&mut parts)?.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
         Ok(StepOutput {
             loss: loss[0],
             grad,
@@ -197,10 +197,10 @@ impl Engine {
         if parts.len() != 4 {
             return Err(anyhow!("expected 4 outputs, got {}", parts.len()));
         }
-        let task_tokens = parts.pop().unwrap().to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
-        let task_loss = parts.pop().unwrap().to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
-        let toks = parts.pop().unwrap().to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
-        let loss = parts.pop().unwrap().to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+        let task_tokens = pop_output(&mut parts)?.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+        let task_loss = pop_output(&mut parts)?.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+        let toks = pop_output(&mut parts)?.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+        let loss = pop_output(&mut parts)?.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
         Ok((loss[0], toks[0], task_loss, task_tokens))
     }
 
@@ -212,5 +212,12 @@ impl Engine {
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }
+}
+
+/// Pop the next executable output. The arity is checked before the pops,
+/// so a miss means a malformed artifact — surfaced as an error with
+/// context, not a panic (R4).
+fn pop_output(parts: &mut Vec<xla::Literal>) -> Result<xla::Literal> {
+    parts.pop().ok_or_else(|| anyhow!("executable returned fewer outputs than declared"))
 }
 

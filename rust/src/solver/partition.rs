@@ -14,6 +14,7 @@
 //! [`enumerate_plans`] remains as the collecting wrapper.
 
 use crate::config::ParallelConfig;
+use crate::util::par::CancelToken;
 
 /// One candidate deployment plan: `counts[i]` replicas of `configs[i]`.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -332,13 +333,41 @@ impl PlanCursor {
         budget: usize,
         visit: &mut F,
     ) -> usize {
+        self.slice_cancellable(configs, n_gpus, min_gpus, require_longest, budget, None, visit)
+    }
+
+    /// [`Self::slice`] with a supersession check: `cancel`, when armed,
+    /// ends the slice *before the next visit* — a superseding event
+    /// interrupts an in-flight slice mid-walk instead of waiting for its
+    /// budget to run out. The cursor stays resumable at the last visited
+    /// plan and is never marked exhausted by a cancellation, but callers
+    /// that cancel are expected to discard the search: the set of plans
+    /// the interrupted slice visited depends on *when* the flag was
+    /// observed, so partial results are nondeterministic by construction.
+    #[allow(clippy::too_many_arguments)]
+    pub fn slice_cancellable<F: FnMut(&[u32]) -> bool>(
+        &mut self,
+        configs: &[ParallelConfig],
+        n_gpus: u32,
+        min_gpus: u32,
+        require_longest: Option<usize>,
+        budget: usize,
+        cancel: Option<&CancelToken>,
+        visit: &mut F,
+    ) -> usize {
         if self.exhausted || budget == 0 {
+            return 0;
+        }
+        if matches!(cancel, Some(c) if c.is_cancelled()) {
             return 0;
         }
         let mut seen = 0usize;
         let mut last: Option<Vec<u32>> = None;
         let mut wrapped = |counts: &[u32]| -> bool {
             if seen >= budget {
+                return false;
+            }
+            if matches!(cancel, Some(c) if c.is_cancelled()) {
                 return false;
             }
             seen += 1;
@@ -590,6 +619,46 @@ mod tests {
         }
         assert_eq!(seen, full[1..].to_vec());
         assert_eq!(cursor.checkpoint(), Some(&full[full.len() - 1][..]));
+    }
+
+    #[test]
+    fn cancelled_slice_stops_early_and_stays_resumable() {
+        let mut full: Vec<Vec<u32>> = Vec::new();
+        visit_plans(&cfgs(), 8, 4, None, &mut |c| {
+            full.push(c.to_vec());
+            true
+        });
+        assert!(full.len() > 5);
+        // cancel mid-slice (after 3 visits): the slice ends before the
+        // next visit even though its budget allows the full walk
+        let mut cursor = PlanCursor::new();
+        let token = CancelToken::new();
+        let mut seen: Vec<Vec<u32>> = Vec::new();
+        let n = cursor.slice_cancellable(&cfgs(), 8, 4, None, 1_000, Some(&token), &mut |c| {
+            seen.push(c.to_vec());
+            if seen.len() == 3 {
+                token.cancel();
+            }
+            true
+        });
+        assert_eq!(n, 3);
+        assert_eq!(seen, full[..3].to_vec());
+        assert!(!cursor.is_exhausted());
+        assert_eq!(cursor.checkpoint(), Some(&full[2][..]));
+        // an armed token means later slices visit nothing at all
+        assert_eq!(
+            cursor.slice_cancellable(&cfgs(), 8, 4, None, 10, Some(&token), &mut |_| true),
+            0
+        );
+        // a fresh (un-cancelled) resume picks up strictly after the
+        // checkpoint: slices still concatenate to the full DFS order
+        while !cursor.is_exhausted() {
+            cursor.slice_cancellable(&cfgs(), 8, 4, None, 2, None, &mut |c| {
+                seen.push(c.to_vec());
+                true
+            });
+        }
+        assert_eq!(seen, full);
     }
 
     #[test]

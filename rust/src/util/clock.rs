@@ -18,7 +18,13 @@
 //! in stats structs, bench tables) or charged against *budgets* that the
 //! deterministic paths meter with [`SimClock`]-style counters instead
 //! (`BudgetMeter::SimPerPlan`); no plan decision may branch on
-//! [`WallClock`] time.
+//! [`WallClock`] time. The async planner service
+//! (`coordinator::service`) is the one deliberately timing-dependent
+//! consumer: its slice walls feed `BudgetMeter::Wall` charging and the
+//! serving report's overlapped/unoverlapped search split — but the *plans*
+//! it publishes are terminal search results, certified bit-identical to
+//! the sync path's, so timing decides only *when* a plan lands, never
+//! *which* plan.
 
 use std::cell::Cell;
 use std::sync::OnceLock;

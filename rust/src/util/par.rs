@@ -3,14 +3,30 @@
 //!
 //! Used by the planner to evaluate candidate deployment plans concurrently
 //! ([`par_map`]) and to run the fused streaming plan search without a
-//! collect-then-map barrier ([`par_fold`]).
+//! collect-then-map barrier ([`par_fold`]). The async planner service
+//! builds on the cross-thread primitives here: [`CancelToken`]
+//! (supersession of in-flight searches), [`EpochCell`] (lock-free
+//! epoch-counted plan publication) and [`with_max_threads`] (scoped
+//! worker-count control for a service thread without mutating process
+//! globals).
+//!
+//! Raw `std::thread` spawning is confined to this module and the planner
+//! service (`coordinator::service`) by detlint rule R6: ad-hoc threads
+//! elsewhere could reorder float reductions or leak nondeterministic
+//! timing into certified paths.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::OnceLock;
+use std::cell::Cell;
+use std::sync::atomic::{AtomicBool, AtomicPtr, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock, PoisonError};
 
 /// Test-only worker-count override; 0 = none. See
 /// [`set_max_threads_override`].
 static THREAD_OVERRIDE: AtomicUsize = AtomicUsize::new(0);
+
+thread_local! {
+    /// Per-thread worker-count scope; 0 = none. See [`with_max_threads`].
+    static LOCAL_OVERRIDE: Cell<usize> = const { Cell::new(0) };
+}
 
 /// Worker count for the parallel primitives: `LOBRA_NUM_THREADS` if set
 /// (≥ 1; 0 or unset = auto), else available parallelism. Results never
@@ -26,6 +42,10 @@ static THREAD_OVERRIDE: AtomicUsize = AtomicUsize::new(0);
 /// concurrent `set_var`/`getenv` is UB on glibc — and with the cache the
 /// binary isolation is now belt-and-suspenders rather than load-bearing.)
 pub fn max_threads() -> usize {
+    let scoped = LOCAL_OVERRIDE.with(Cell::get);
+    if scoped > 0 {
+        return scoped;
+    }
     let forced = THREAD_OVERRIDE.load(Ordering::Relaxed);
     if forced > 0 {
         return forced;
@@ -49,6 +69,178 @@ pub fn max_threads() -> usize {
 /// `LOBRA_NUM_THREADS` mid-process.
 pub fn set_max_threads_override(n: Option<usize>) {
     THREAD_OVERRIDE.store(n.map_or(0, |v| v.max(1)), Ordering::Relaxed);
+}
+
+/// Run `f` with the worker count pinned to `n` (≥ 1) *on this thread
+/// only*. The innermost scope wins over both the global test override and
+/// the env/auto value, and the previous scope is restored on exit (also
+/// across unwinds). This is how the planner service thread bounds its
+/// slice parallelism (`--planner-threads`) without mutating process-wide
+/// state that the training event loop also reads.
+pub fn with_max_threads<R>(n: usize, f: impl FnOnce() -> R) -> R {
+    struct Restore(usize);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            LOCAL_OVERRIDE.with(|c| c.set(self.0));
+        }
+    }
+    let prev = LOCAL_OVERRIDE.with(|c| c.replace(n.max(1)));
+    let _restore = Restore(prev);
+    f()
+}
+
+/// Cooperative cancellation flag shared between an event thread and an
+/// in-flight plan search. Cloning shares the flag. The planner checks it
+/// inside `PlanCursor` slices (every enumerated plan), so a superseding
+/// event interrupts a search mid-slice instead of waiting for cooperative
+/// slice exhaustion. Cancellation is a *discard* signal: a cancelled
+/// search's partial results are thrown away (the enumeration prefix it
+/// covered depends on where the flag was observed), which is why the
+/// deterministic sync path never arms a token.
+#[derive(Clone, Debug, Default)]
+pub struct CancelToken(Arc<AtomicBool>);
+
+impl CancelToken {
+    /// A fresh, un-cancelled token.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Arm the flag. Idempotent; visible to all clones.
+    pub fn cancel(&self) {
+        self.0.store(true, Ordering::SeqCst);
+    }
+
+    /// Has [`Self::cancel`] been called on any clone?
+    pub fn is_cancelled(&self) -> bool {
+        self.0.load(Ordering::SeqCst)
+    }
+}
+
+/// A published value plus the epoch it belongs to.
+struct Slot<T> {
+    epoch: u64,
+    value: Arc<T>,
+}
+
+/// Lock-free epoch-counted publication cell: a single writer (or several,
+/// serialized internally) publishes `Arc<T>` snapshots tagged with a
+/// strictly increasing epoch; readers take a wait-free snapshot of the
+/// newest published value without ever blocking on the writer. This is
+/// the channel through which the planner service hands best-so-far plans
+/// to the training event loop: the loop polls at step boundaries and can
+/// never observe a torn value (it clones a whole `Arc`) or an epoch
+/// moving backwards ([`Self::publish`] rejects stale epochs).
+///
+/// # Memory reclamation
+///
+/// Superseded slots are retired, not freed inline: a publisher frees the
+/// retired list only when it observes zero in-flight readers, so a reader
+/// holding a snapshot-in-progress keeps every retired slot alive (a
+/// single-counter hazard scheme — reclamation can be deferred under
+/// constant reader traffic, never unsound). Readers increment the
+/// in-flight counter *before* loading the pointer; in the `SeqCst` total
+/// order any reader still dereferencing an old slot is therefore visible
+/// to the publisher's zero-check, and any reader that increments after
+/// that check loads the new pointer.
+pub struct EpochCell<T> {
+    ptr: AtomicPtr<Slot<T>>,
+    readers: AtomicUsize,
+    retired: Mutex<Vec<*mut Slot<T>>>,
+}
+
+// Safety: the raw pointers are owned boxes created by `publish` and freed
+// exactly once (retire list or Drop) under the publisher mutex; `T` is
+// only ever shared across threads behind `Arc<T>`, hence the
+// `Send + Sync` bound.
+unsafe impl<T: Send + Sync> Send for EpochCell<T> {}
+unsafe impl<T: Send + Sync> Sync for EpochCell<T> {}
+
+impl<T> EpochCell<T> {
+    /// An empty cell (readers observe `None` until the first publish).
+    pub fn new() -> Self {
+        Self {
+            ptr: AtomicPtr::new(std::ptr::null_mut()),
+            readers: AtomicUsize::new(0),
+            retired: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Publish `value` at `epoch`. Returns `false` (and publishes
+    /// nothing) unless `epoch` is strictly newer than the current one —
+    /// a search superseded after it computed a plan but before it
+    /// published cannot overwrite its successor's plan with a stale one.
+    pub fn publish(&self, epoch: u64, value: Arc<T>) -> bool {
+        // Publishers serialize on the retire-list mutex, making the
+        // epoch check + swap atomic with respect to other publishers.
+        // Readers never touch this lock.
+        let mut retired = self.retired.lock().unwrap_or_else(PoisonError::into_inner);
+        let cur = self.ptr.load(Ordering::SeqCst);
+        if !cur.is_null() {
+            // Safety: slots are freed only by publishers, which hold the
+            // mutex; `cur` is therefore alive here.
+            let cur_epoch = unsafe { (*cur).epoch };
+            if epoch <= cur_epoch {
+                return false;
+            }
+        }
+        let fresh = Box::into_raw(Box::new(Slot { epoch, value }));
+        let old = self.ptr.swap(fresh, Ordering::SeqCst);
+        if !old.is_null() {
+            retired.push(old);
+        }
+        if self.readers.load(Ordering::SeqCst) == 0 {
+            // No reader can be mid-snapshot on any retired slot (see the
+            // type-level safety note), and none that starts now can reach
+            // one: new readers load `fresh`.
+            for p in retired.drain(..) {
+                // Safety: retired slots were created by Box::into_raw in
+                // this function and are dropped exactly once (the drain
+                // removes them from the list).
+                unsafe { drop(Box::from_raw(p)) };
+            }
+        }
+        true
+    }
+
+    /// Wait-free snapshot of the newest published `(epoch, value)`, or
+    /// `None` before the first publish. Never blocks on publishers.
+    pub fn read(&self) -> Option<(u64, Arc<T>)> {
+        self.readers.fetch_add(1, Ordering::SeqCst);
+        let p = self.ptr.load(Ordering::SeqCst);
+        let out = if p.is_null() {
+            None
+        } else {
+            // Safety: the incremented reader count (ordered before this
+            // load) keeps the slot alive until the decrement below.
+            let slot = unsafe { &*p };
+            Some((slot.epoch, Arc::clone(&slot.value)))
+        };
+        self.readers.fetch_sub(1, Ordering::SeqCst);
+        out
+    }
+}
+
+impl<T> Default for EpochCell<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> Drop for EpochCell<T> {
+    fn drop(&mut self) {
+        let retired = self.retired.get_mut().unwrap_or_else(PoisonError::into_inner);
+        for p in retired.drain(..) {
+            // Safety: see `publish`; &mut self means no concurrent reader.
+            unsafe { drop(Box::from_raw(p)) };
+        }
+        let cur = *self.ptr.get_mut();
+        if !cur.is_null() {
+            // Safety: the current slot is the one live box not on the
+            // retire list.
+            unsafe { drop(Box::from_raw(cur)) };
+        }
+    }
 }
 
 /// Parallel map preserving input order. Spawns up to `max_threads()`
@@ -188,5 +380,64 @@ mod tests {
         let xs: Vec<u64> = (0..10_000).collect();
         let total = par_fold(xs.clone(), |&x| x, |a, b| a + b).unwrap();
         assert_eq!(total, xs.iter().sum::<u64>());
+    }
+
+    #[test]
+    fn scoped_thread_override_wins_and_restores() {
+        // single test covers scoping + precedence: the global override is
+        // process-wide, so exercising it from two parallel #[test] threads
+        // would race
+        let inner = with_max_threads(3, || {
+            // nested scope: innermost wins
+            let nested = with_max_threads(1, max_threads);
+            assert_eq!(nested, 1);
+            max_threads()
+        });
+        assert_eq!(inner, 3);
+        // the scoped override also beats the global test override, and
+        // restores to it afterwards
+        set_max_threads_override(Some(7));
+        assert_eq!(with_max_threads(2, max_threads), 2);
+        assert_eq!(max_threads(), 7);
+        set_max_threads_override(None);
+    }
+
+    #[test]
+    fn cancel_token_shared_across_clones() {
+        let t = CancelToken::new();
+        let u = t.clone();
+        assert!(!t.is_cancelled() && !u.is_cancelled());
+        u.cancel();
+        assert!(t.is_cancelled() && u.is_cancelled());
+    }
+
+    #[test]
+    fn epoch_cell_publishes_and_rejects_stale() {
+        let cell: EpochCell<Vec<u64>> = EpochCell::new();
+        assert!(cell.read().is_none());
+        assert!(cell.publish(1, Arc::new(vec![1])));
+        assert!(cell.publish(3, Arc::new(vec![3])));
+        // stale and equal epochs are rejected, newest snapshot survives
+        assert!(!cell.publish(2, Arc::new(vec![2])));
+        assert!(!cell.publish(3, Arc::new(vec![99])));
+        let (epoch, v) = cell.read().unwrap();
+        assert_eq!(epoch, 3);
+        assert_eq!(*v, vec![3]);
+    }
+
+    #[test]
+    fn epoch_cell_snapshot_outlives_supersession() {
+        let cell: EpochCell<Vec<u64>> = EpochCell::new();
+        assert!(cell.publish(1, Arc::new(vec![1, 1, 1])));
+        let (_, held) = cell.read().unwrap();
+        // superseding publishes retire the old slot but the Arc snapshot
+        // (and its contents) stay valid
+        for e in 2..64 {
+            assert!(cell.publish(e, Arc::new(vec![e, e, e])));
+        }
+        assert_eq!(*held, vec![1, 1, 1]);
+        let (epoch, newest) = cell.read().unwrap();
+        assert_eq!(epoch, 63);
+        assert_eq!(*newest, vec![63, 63, 63]);
     }
 }

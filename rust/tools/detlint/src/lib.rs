@@ -14,6 +14,10 @@
 //! - **R5** — float `sum`/`fold` reductions in deterministic paths must go
 //!   through `util::par::tree_reduce` (fixed reduction order) or carry an
 //!   annotation saying why order cannot vary.
+//! - **R6** — raw `std::thread` spawning (`spawn`/`Builder`/`scope`) only
+//!   inside `util::par` and the planner service (`coordinator::service`):
+//!   ad-hoc threads elsewhere could reorder float reductions or leak
+//!   nondeterministic timing into certified paths.
 //!
 //! Suppressions use `// lint:allow(R?): <justification>` on the offending
 //! line or the line above; a missing justification is itself a finding.
@@ -36,6 +40,7 @@ pub enum Rule {
     R3,
     R4,
     R5,
+    R6,
     AllowSyntax,
 }
 
@@ -47,6 +52,7 @@ impl Rule {
             Rule::R3 => "R3",
             Rule::R4 => "R4",
             Rule::R5 => "R5",
+            Rule::R6 => "R6",
             Rule::AllowSyntax => "allow-syntax",
         }
     }
@@ -58,6 +64,7 @@ impl Rule {
             "R3" => Some(Rule::R3),
             "R4" => Some(Rule::R4),
             "R5" => Some(Rule::R5),
+            "R6" => Some(Rule::R6),
             _ => None,
         }
     }
@@ -337,6 +344,10 @@ pub const SCAN_ROOTS: [&str; 4] = ["rust/src", "rust/benches", "rust/tests", "ex
 
 const CLOCK_MODULE: &str = "rust/src/util/clock.rs";
 const ENV_MODULE: &str = "rust/src/util/env.rs";
+/// The two modules sanctioned to spawn raw threads (R6): the data-parallel
+/// primitives and the async planner service.
+const PAR_MODULE: &str = "rust/src/util/par.rs";
+const SERVICE_MODULE: &str = "rust/src/coordinator/service.rs";
 
 /// Paths where R2/R5 apply: everything feeding plan identity, dispatch,
 /// or training numerics.
@@ -452,6 +463,27 @@ pub fn scan_file(rel_path: &str, src: &str) -> FileScan {
                 message: format!(
                     "`env::{}` outside util::env: read configuration through \
                      the one-shot util::env snapshot (LOBRA_* only)",
+                    t(i + 2)
+                ),
+            });
+        }
+        // R6: raw thread spawning outside util::par / coordinator::service
+        if rel_path != PAR_MODULE
+            && rel_path != SERVICE_MODULE
+            && t(i) == "thread"
+            && t(i + 1) == "::"
+            && matches!(t(i + 2), "spawn" | "Builder" | "scope")
+            && !is_allowed(Rule::R6, line)
+        {
+            findings.push(Finding {
+                path: rel_path.to_string(),
+                line,
+                rule: Rule::R6,
+                message: format!(
+                    "`thread::{}` outside util::par / coordinator::service: \
+                     route parallelism through par_map/par_fold (ordered \
+                     reduction) or the planner service so certified paths \
+                     never see ad-hoc thread timing",
                     t(i + 2)
                 ),
             });

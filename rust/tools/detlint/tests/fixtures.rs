@@ -75,6 +75,30 @@ fn r5_sum_and_fold_each_fire_exactly_once() {
 }
 
 #[test]
+fn r6_fires_exactly_once() {
+    let src = include_str!("fixtures/r6_thread.rs");
+    let scan = scan_file("rust/src/exec/fixture.rs", src);
+    assert_eq!(scan.findings.len(), 1, "{:?}", scan.findings);
+    assert_eq!(scan.findings[0].rule, Rule::R6);
+    assert_eq!(scan.findings[0].line, 6, "sleep and module naming are exempt");
+}
+
+#[test]
+fn r6_exempt_inside_par_and_service_modules() {
+    let src = include_str!("fixtures/r6_thread.rs");
+    assert_eq!(rule_count("rust/src/util/par.rs", src, Rule::R6), 0);
+    assert_eq!(rule_count("rust/src/coordinator/service.rs", src, Rule::R6), 0);
+}
+
+#[test]
+fn r6_catches_builder_and_scope_too() {
+    let builder = "pub fn t() { let _ = std::thread::Builder::new(); }\n";
+    let scope = "pub fn t() { std::thread::scope(|_| {}); }\n";
+    assert_eq!(rule_count("rust/src/exec/fixture.rs", builder, Rule::R6), 1);
+    assert_eq!(rule_count("rust/tests/fixture.rs", scope, Rule::R6), 1);
+}
+
+#[test]
 fn allow_with_justification_suppresses_both_placements() {
     let src = include_str!("fixtures/allow_ok.rs");
     let scan = scan_file(RESTRICTED, src);

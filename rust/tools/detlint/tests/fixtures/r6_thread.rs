@@ -1,0 +1,9 @@
+//! R6 fixture: exactly one raw thread spawn outside the sanctioned
+//! modules. `thread::sleep` is deliberately unrestricted (it creates no
+//! concurrency), and so is naming the `thread` module itself.
+
+pub fn t() {
+    let h = std::thread::spawn(|| 1 + 1);
+    std::thread::sleep(std::time::Duration::from_millis(1));
+    let _ = h.join();
+}
