@@ -22,10 +22,19 @@
 //! certifies the fully-pumped plan identical to a cold one. The curve is
 //! written into `BENCH_fig13.json` as `budget_curve`.
 //!
+//! `LOBRA_BENCH_BASELINE=path` gates the run's JSON against a checked-in
+//! baseline (timing and speedup lines are host-dependent and skipped; the
+//! identity bits, start/hit counters, and event counts are what's locked)
+//! and exits nonzero on drift. A baseline holding a `"bless": true` line
+//! is overwritten with this run instead — how the first CI run locks in
+//! real numbers from a toolchain-less commit.
+//!
 //! ```bash
 //! cargo bench --bench fig13_replan
 //! LOBRA_BENCH_GPUS=32 LOBRA_BENCH_EVENTS=18 cargo bench --bench fig13_replan
 //! LOBRA_BENCH_SLICE=500 cargo bench --bench fig13_replan
+//! LOBRA_BENCH_BASELINE=benches/baselines/BENCH_fig13.json \
+//!     cargo bench --bench fig13_replan                    # drift gate
 //! ```
 
 
@@ -38,7 +47,7 @@ use lobra::config::{ModelDesc, TaskSet, TaskSpec};
 use lobra::coordinator::planner::{Planner, PlannerOptions};
 use lobra::coordinator::session::PlanningSession;
 use lobra::costmodel::CostModel;
-use lobra::util::bench::{fmt_secs, Table};
+use lobra::util::bench::{fmt_secs, gate_against_baseline, BaselineGate, Table};
 use lobra::util::clock::Stopwatch;
 use lobra::util::env as benv;
 
@@ -46,6 +55,7 @@ fn main() {
     let gpus: u32 = benv::parse_or("LOBRA_BENCH_GPUS", 64);
     let n_events: usize = benv::parse_or("LOBRA_BENCH_EVENTS", 12);
     let json_path = benv::var("LOBRA_BENCH_JSON").unwrap_or("BENCH_fig13.json").to_string();
+    let baseline_path = benv::var("LOBRA_BENCH_BASELINE");
 
     let cluster = ClusterSpec::a800_80g(gpus);
     let model = ModelDesc::llama2_70b();
@@ -185,5 +195,43 @@ fn main() {
     match std::fs::write(&json_path, &json) {
         Ok(()) => println!("\nwall-clocks recorded to {json_path}"),
         Err(e) => eprintln!("\nWARNING: could not write {json_path}: {e}"),
+    }
+
+    if let Some(baseline) = baseline_path {
+        render_gate(baseline, &json);
+    }
+}
+
+/// Host-speed-dependent lines skipped by the baseline diff: every timing
+/// (`*_seconds`, including the budget-curve's per-slice walls, which share
+/// their lines) and the derived speedup. What remains — identity booleans,
+/// warm/cold start counts, LRU hit/miss counters, event counts — is
+/// deterministic and locked.
+fn host_dependent(line: &str) -> bool {
+    line.contains("seconds") || line.contains("speedup")
+}
+
+/// Render the shared baseline gate's outcome; exits nonzero on drift so CI
+/// fails loudly when the replan-identity metrics change.
+fn render_gate(path: &str, current: &str) {
+    match gate_against_baseline(path, current, &host_dependent) {
+        BaselineGate::Blessed => println!("baseline {path} blessed from this run"),
+        BaselineGate::Ok(n) => println!("baseline {path}: OK ({n} deterministic lines)"),
+        BaselineGate::Unreadable(e) => {
+            eprintln!("ERROR: baseline {path} unreadable: {e}");
+            std::process::exit(1);
+        }
+        BaselineGate::WriteFailed(e) => {
+            eprintln!("ERROR: blessing baseline {path}: {e}");
+            std::process::exit(1);
+        }
+        BaselineGate::Drift(diff) => {
+            eprintln!("ERROR: replan metrics drifted from baseline {path}:");
+            for (w, g) in diff {
+                eprintln!("  - {w}");
+                eprintln!("  + {g}");
+            }
+            std::process::exit(1);
+        }
     }
 }

@@ -24,12 +24,21 @@
 //! `"bless": true` line is overwritten in place instead — how the first
 //! CI run on a new host locks in real numbers.
 //!
+//! `LOBRA_BENCH_FLEET=10,100,1000` appends the **fleet-scaling sweep**:
+//! each fleet size serves a seeded `gen_churn_trace` twice — globally (1
+//! planning shard) and sharded (`LOBRA_BENCH_SHARDS`, default 4) — and the
+//! per-event replan search cost (slices and plans enumerated per replan
+//! window) goes into the JSON as `fleet_curve`. Sharded localized
+//! replanning is the headline: its per-event cost stays flat as the fleet
+//! grows, where the global search's grows with every live tenant.
+//!
 //! ```bash
 //! cargo bench --bench serve_churn
 //! LOBRA_BENCH_GPUS=32 LOBRA_BENCH_BUDGET=60 cargo bench --bench serve_churn
 //! LOBRA_BENCH_BUDGET=0 cargo bench --bench serve_churn   # unlimited + certify
 //! LOBRA_BENCH_PLANNER_THREADS=2 LOBRA_BENCH_METER=wall \
 //!     cargo bench --bench serve_churn                    # overlapped async plan
+//! LOBRA_BENCH_FLEET=10,100,1000 cargo bench --bench serve_churn  # fleet scaling
 //! ```
 
 
@@ -40,11 +49,11 @@
 use lobra::cluster::ClusterSpec;
 use lobra::config::ModelDesc;
 use lobra::coordinator::runtime::{
-    default_churn_trace, BudgetMeter, ServeOptions, ServeRuntime,
+    default_churn_trace, gen_churn_trace, BudgetMeter, ServeOptions, ServeRuntime,
 };
 use lobra::costmodel::CostModel;
 use lobra::prelude::TaskSet;
-use lobra::util::bench::{fmt_secs, Table};
+use lobra::util::bench::{fmt_secs, gate_against_baseline, BaselineGate, Table};
 use lobra::util::clock::Stopwatch;
 use lobra::util::env as benv;
 
@@ -156,6 +165,18 @@ fn main() {
         report.search_seconds_unoverlapped,
     );
 
+    // --- fleet-scaling sweep (opt-in): replan search cost vs fleet size ---
+    let fleet_json = match benv::var("LOBRA_BENCH_FLEET") {
+        Some(spec) => {
+            let fleets: Vec<usize> =
+                spec.split(',').filter_map(|s| s.trim().parse().ok()).collect();
+            let shards: usize = benv::parse_or("LOBRA_BENCH_SHARDS", 4usize).max(2);
+            let entries = fleet_sweep(&model, &fleets, shards);
+            format!(",\n  \"fleet_curve\": [\n    {}\n  ]", entries.join(",\n    "))
+        }
+        None => String::new(),
+    };
+
     let tenants_json = report
         .tenants
         .iter()
@@ -183,7 +204,7 @@ fn main() {
          \"identity_failures\": {},\n  \"no_stop_the_world\": {no_stop_the_world},\n  \
          \"search_seconds_total\": {:.3},\n  \
          \"search_seconds_unoverlapped\": {:.3},\n  \
-         \"host_wall_seconds\": {wall:.3},\n  \"tenants\": [\n    {tenants_json}\n  ]\n}}\n",
+         \"host_wall_seconds\": {wall:.3},\n  \"tenants\": [\n    {tenants_json}\n  ]{fleet_json}\n}}\n",
         trace.len(),
         report.sim_seconds,
         report.steps_total,
@@ -206,53 +227,121 @@ fn main() {
     }
 
     if let Some(baseline) = baseline_path {
-        compare_against_baseline(baseline, &json);
+        render_gate(baseline, &json);
     }
 }
 
 /// Lines whose values depend on host speed or async slice timing — skipped
 /// by the baseline diff so the deterministic metrics are what's locked.
+/// (`fleet_curve` entries embed their host wall on the same line, so the
+/// opt-in fleet sweep is informational, not baseline-gated.)
 fn host_dependent(line: &str) -> bool {
     line.contains("host_wall") || line.contains("search_seconds")
 }
 
-/// Gate the deterministic serving metrics against a checked-in baseline.
-///
-/// The committed baseline may hold `"bless": true` instead of numbers: the
-/// bench then rewrites it with this run's JSON (minus the sentinel) and
-/// succeeds, so a toolchain-less commit can still check in the file and
-/// the first CI run locks in real values. Any later drift on a
-/// non-host-dependent line fails the run with a line diff.
-fn compare_against_baseline(path: &str, current: &str) {
-    let baseline = match std::fs::read_to_string(path) {
-        Ok(s) => s,
-        Err(e) => {
+/// Render the shared baseline gate's outcome; exits nonzero on drift so CI
+/// fails loudly instead of shipping silently different serving metrics.
+fn render_gate(path: &str, current: &str) {
+    match gate_against_baseline(path, current, &host_dependent) {
+        BaselineGate::Blessed => println!("baseline {path} blessed from this run"),
+        BaselineGate::Ok(n) => println!("baseline {path}: OK ({n} deterministic lines)"),
+        BaselineGate::Unreadable(e) => {
             eprintln!("ERROR: baseline {path} unreadable: {e}");
             std::process::exit(1);
         }
-    };
-    if baseline.lines().any(|l| l.contains("\"bless\": true")) {
-        if let Err(e) = std::fs::write(path, current) {
+        BaselineGate::WriteFailed(e) => {
             eprintln!("ERROR: blessing baseline {path}: {e}");
             std::process::exit(1);
         }
-        println!("baseline {path} blessed from this run");
-        return;
-    }
-    let want: Vec<&str> = baseline.lines().filter(|l| !host_dependent(l)).collect();
-    let got: Vec<&str> = current.lines().filter(|l| !host_dependent(l)).collect();
-    if want == got {
-        println!("baseline {path}: OK ({} deterministic lines)", got.len());
-        return;
-    }
-    eprintln!("ERROR: serving metrics drifted from baseline {path}:");
-    for i in 0..want.len().max(got.len()) {
-        let w = want.get(i).copied().unwrap_or("<missing>");
-        let g = got.get(i).copied().unwrap_or("<missing>");
-        if w != g {
-            eprintln!("  - {w}");
-            eprintln!("  + {g}");
+        BaselineGate::Drift(diff) => {
+            eprintln!("ERROR: serving metrics drifted from baseline {path}:");
+            for (w, g) in diff {
+                eprintln!("  - {w}");
+                eprintln!("  + {g}");
+            }
+            std::process::exit(1);
         }
     }
-    std::process::exit(1);
+}
+
+/// The fleet-scaling sweep: serve `gen_churn_trace(fleet, 17)` once
+/// globally (1 planning shard) and once sharded, on a cluster scaled to
+/// the fleet, and report the per-replan-window search cost. Budgets are
+/// sim-metered so the cost columns reproduce across hosts; the planner is
+/// trimmed because the sweep measures search *growth*, not plan quality.
+fn fleet_sweep(model: &ModelDesc, fleets: &[usize], shards: usize) -> Vec<String> {
+    println!(
+        "\n== fleet scaling: per-event replan search cost, global vs {shards} shards ==\n"
+    );
+    let mut t = Table::new(&[
+        "fleet", "gpus", "mode", "events", "windows", "slices/replan",
+        "plans/replan", "queued", "preempt", "rejected", "host wall",
+    ]);
+    let mut entries = Vec::new();
+    for &fleet in fleets {
+        let gpus: u32 = if fleet <= 10 {
+            16
+        } else if fleet <= 100 {
+            32
+        } else {
+            64
+        };
+        let cluster = ClusterSpec::a100_40g(gpus);
+        let cost = CostModel::calibrated(model, &cluster);
+        let trace = gen_churn_trace(fleet, 17);
+        for (mode, n_shards) in [("global", 1usize), ("sharded", shards)] {
+            let mut o = ServeOptions::default();
+            o.replan_budget = Some(30.0);
+            o.meter = BudgetMeter::SimPerPlan(1e-4);
+            o.slice_plans = 4096;
+            o.certify_identity = false;
+            o.tail_steps = 2;
+            o.shards = n_shards;
+            o.rebalance_every = if n_shards > 1 { 64 } else { 0 };
+            o.planner.calibration_multiple = 10;
+            o.planner.eval_batches = 1;
+            o.planner.max_evaluated = 32;
+            o.planner.max_plans = 50_000;
+            let t0 = Stopwatch::start();
+            let report = ServeRuntime::new(&cost, &cluster, o).run_trace(&trace);
+            let wall = t0.elapsed_secs();
+            let windows = f64::from(report.replan_windows.max(1));
+            let slices_per = report.replan_slices_total as f64 / windows;
+            let plans_per = report.plans_enumerated_total as f64 / windows;
+            t.row(&[
+                fleet.to_string(),
+                gpus.to_string(),
+                format!("{mode} ({n_shards})"),
+                trace.len().to_string(),
+                report.replan_windows.to_string(),
+                format!("{slices_per:.2}"),
+                format!("{plans_per:.1}"),
+                report.queued_admissions.to_string(),
+                report.preemptions.to_string(),
+                report.rejected_arrivals.to_string(),
+                fmt_secs(wall),
+            ]);
+            entries.push(format!(
+                "{{\"fleet\": {fleet}, \"gpus\": {gpus}, \"mode\": \"{mode}\", \
+                 \"shards\": {n_shards}, \"events\": {}, \"replan_windows\": {}, \
+                 \"slices_per_replan\": {slices_per:.2}, \"plans_per_replan\": {plans_per:.1}, \
+                 \"queued\": {}, \"preemptions\": {}, \"rebalances\": {}, \"rejected\": {}, \
+                 \"mean_tta_seconds\": {}, \"jain\": {}, \"host_wall_seconds\": {wall:.3}}}",
+                trace.len(),
+                report.replan_windows,
+                report.queued_admissions,
+                report.preemptions,
+                report.rebalances,
+                report.rejected_arrivals,
+                report
+                    .mean_time_to_admission()
+                    .map_or("null".into(), |d| format!("{d:.1}")),
+                report
+                    .jain_fairness()
+                    .map_or("null".into(), |j| format!("{j:.4}")),
+            ));
+        }
+    }
+    t.print();
+    entries
 }

@@ -12,4 +12,4 @@ mod tasks;
 
 pub use model::ModelDesc;
 pub use parallel::ParallelConfig;
-pub use tasks::{TaskSet, TaskSpec};
+pub use tasks::{TaskMeta, TaskSet, TaskSpec};

@@ -3,6 +3,21 @@
 use crate::data::{DatasetProfile, LengthDistribution};
 
 
+/// Tenant-class metadata riding on a task: the priority/SLO tier drives
+/// admission control in the serving runtime (`coordinator::runtime`) —
+/// lower numbers are *more* important; an arrival that cannot be admitted
+/// may preempt a strictly lower-priority (numerically higher) tenant, and
+/// the serve report breaks time-to-admission down per tier.
+///
+/// Planning is tier-blind by design: tiers decide *who runs*, never *how*
+/// the plan search scores a task set, so every plan-identity certificate
+/// is unaffected.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct TaskMeta {
+    /// Priority/SLO tier, 0 = highest. Default 0.
+    pub tier: u8,
+}
+
 /// One fine-tuning request: a dataset (length distribution) + batch size.
 ///
 /// Mirrors the paper's Table 4 rows: each FT dataset is one task with its
@@ -14,15 +29,23 @@ pub struct TaskSpec {
     pub batch_size: u32,
     /// Sequence length distribution of the task's dataset.
     pub lengths: LengthDistribution,
+    /// Tenant-class metadata (priority tier); defaults to tier 0.
+    pub meta: TaskMeta,
 }
 
 impl TaskSpec {
     pub fn new(name: &str, batch_size: u32, lengths: LengthDistribution) -> Self {
-        Self { name: name.to_string(), batch_size, lengths }
+        Self { name: name.to_string(), batch_size, lengths, meta: TaskMeta::default() }
     }
 
     pub fn from_profile(p: &DatasetProfile) -> Self {
         Self::new(p.name, p.batch_size, p.distribution())
+    }
+
+    /// Builder-style tier override (0 = highest priority).
+    pub fn with_tier(mut self, tier: u8) -> Self {
+        self.meta.tier = tier;
+        self
     }
 }
 

@@ -31,6 +31,12 @@
 //!   With `--planner-threads N`, search overlaps training even on cold
 //!   starts, where the sync path's slices are exposed on the serving
 //!   clock.
+//! * [`shard`] — **sharded localized replanning**: tenants partition into
+//!   planning shards by sequence-length profile, each with its own GPU
+//!   capacity slice and [`session::PlanningSession`] over the shared
+//!   cost-table LRU. An event replans only its shard (O(change), not
+//!   O(fleet)); per-shard plans compose deterministically; priority tiers
+//!   drive admission (queue + preempt-lowest-tier) when capacity runs out.
 //!
 //! ## The serving event loop
 //!
@@ -91,4 +97,5 @@ pub mod runtime;
 pub mod scheduler;
 pub mod service;
 pub mod session;
+pub mod shard;
 pub mod tasks;

@@ -127,6 +127,19 @@ pub struct PlannerOptions {
     /// timing-dependent), so the deterministic sync path leaves this
     /// `None` — every determinism certificate runs with no token armed.
     pub cancel: Option<CancelToken>,
+    /// Cap the GPUs the plan search may pack (a planning *shard*'s
+    /// capacity slice). `None` plans against the whole cluster — the
+    /// global path, bit-identical to the pre-shard behaviour. `Some(g)`
+    /// is clamped to `[1, cluster.n_gpus]` by [`Self::search_gpus`].
+    pub gpu_budget: Option<u32>,
+}
+
+impl PlannerOptions {
+    /// The GPU capacity the plan search packs: the shard's
+    /// [`Self::gpu_budget`] clamped to the cluster, or the whole cluster.
+    pub fn search_gpus(&self, cluster: &ClusterSpec) -> u32 {
+        self.gpu_budget.map_or(cluster.n_gpus, |g| g.min(cluster.n_gpus)).max(1)
+    }
 }
 
 impl Default for PlannerOptions {
@@ -144,6 +157,7 @@ impl Default for PlannerOptions {
             allow_cross_server_tp: true,
             inner_policy: DispatchPolicy::Balanced,
             cancel: None,
+            gpu_budget: None,
         }
     }
 }
@@ -567,8 +581,8 @@ impl<'a> Planner<'a> {
         let supports: Vec<bool> =
             (0..configs.len()).map(|i| table.max_seq_len_at(i) >= longest).collect();
         let min_n = configs.iter().map(|c| c.n()).min().unwrap_or(1);
-        let min_gpus = self.cluster.n_gpus.saturating_sub(min_n - 1);
-        let n_gpus = self.cluster.n_gpus;
+        let n_gpus = opts.search_gpus(self.cluster);
+        let min_gpus = n_gpus.saturating_sub(min_n - 1);
         let threshold = 1.0 + opts.lower_bound_threshold;
 
         let enumerated = AtomicUsize::new(0);
@@ -754,8 +768,8 @@ impl<'a> Planner<'a> {
         let supports: Vec<bool> =
             (0..configs.len()).map(|i| table.max_seq_len_at(i) >= longest).collect();
         let min_n = configs.iter().map(|c| c.n()).min().unwrap_or(1);
-        let min_gpus = self.cluster.n_gpus.saturating_sub(min_n - 1);
-        let n_gpus = self.cluster.n_gpus;
+        let n_gpus = opts.search_gpus(self.cluster);
+        let min_gpus = n_gpus.saturating_sub(min_n - 1);
         let threshold = 1.0 + opts.lower_bound_threshold;
 
         let sequential = resume_after.is_some()
@@ -1091,7 +1105,7 @@ impl<'a> Planner<'a> {
             if self.cost.max_seq_len(*c) < longest {
                 continue;
             }
-            let count = self.cluster.n_gpus / c.n();
+            let count = opts.search_gpus(self.cluster) / c.n();
             if count == 0 {
                 continue;
             }
@@ -1143,7 +1157,7 @@ impl<'a> Planner<'a> {
             if self.cost.max_seq_len(c) < longest {
                 continue; // homogeneous plan must fit the longest sequences
             }
-            let count = self.cluster.n_gpus / c.n();
+            let count = opts.search_gpus(self.cluster) / c.n();
             if count == 0 {
                 continue;
             }

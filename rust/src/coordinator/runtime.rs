@@ -47,13 +47,26 @@
 //!   even on cold starts — the report's
 //!   [`ServeReport::search_seconds_unoverlapped`] split collapses to the
 //!   residual polling wait instead of the full search time.
+//! * With [`ServeOptions::shards`] > 1 the runtime fronts a
+//!   [`ShardManager`]: tenants partition into planning shards by
+//!   sequence-length profile, an event replans only its own shard against
+//!   that shard's GPU capacity slice (per-shard service submissions never
+//!   cancel another shard's in-flight search), infeasible-now arrivals
+//!   queue per priority tier (preempting the lowest tier when a higher
+//!   one cannot fit), and [`ServeOptions::rebalance_every`] periodically
+//!   re-slices capacity across shards. [`ServeReport`] adds the fairness
+//!   evidence: per-tier time-to-admission and Jain's index over
+//!   per-tenant GPU-seconds.
 
+
+use std::collections::{BTreeMap, BTreeSet};
 
 use crate::cluster::ClusterSpec;
 use crate::config::{TaskSet, TaskSpec};
 use crate::coordinator::planner::{Planner, PlannerOptions};
-use crate::coordinator::service::{PlanUpdate, PlannerService};
-use crate::coordinator::tasks::{EventOutcome, ReplanOutcome, TaskEvent, TaskManager};
+use crate::coordinator::service::PlannerService;
+use crate::coordinator::shard::{FleetOutcome, ShardManager};
+use crate::coordinator::tasks::{ReplanOutcome, TaskEvent};
 use crate::costmodel::CostModel;
 use crate::exec::SimTrainLoop;
 use crate::util::clock::Stopwatch;
@@ -115,6 +128,15 @@ pub struct ServeOptions {
     /// ([`crate::util::par::with_max_threads`]), and the event loop only
     /// polls for published plans at step boundaries.
     pub planner_threads: usize,
+    /// Planning shards ([`ShardManager`]). 1 (default) is the bit-exact
+    /// global path; with N > 1 tenants partition by sequence-length
+    /// profile, each shard searches only its own GPU capacity slice, and
+    /// an event replans only its shard — O(change), not O(fleet).
+    pub shards: usize,
+    /// Rebalance shard capacity slices every K training steps (0 = off).
+    /// Runs only between replan windows; shards whose slice changed reopen
+    /// their (diff-charged) replans.
+    pub rebalance_every: u64,
 }
 
 impl Default for ServeOptions {
@@ -130,6 +152,8 @@ impl Default for ServeOptions {
             certify_identity: false,
             tail_steps: 4,
             planner_threads: 0,
+            shards: 1,
+            rebalance_every: 0,
         }
     }
 }
@@ -145,6 +169,8 @@ pub struct TraceEvent {
 #[derive(Debug, Clone)]
 pub struct TenantRecord {
     pub name: String,
+    /// Priority tier at arrival (0 = highest).
+    pub tier: u8,
     /// Sim time the arrival was requested (trace timestamp).
     pub arrived_at: f64,
     /// Sim time the tenant's task first trained under a deployed plan.
@@ -153,6 +179,10 @@ pub struct TenantRecord {
     pub exited_at: Option<f64>,
     /// Training steps this tenant's task participated in.
     pub steps_trained: u64,
+    /// GPU-seconds of training attributed to this tenant (each step's
+    /// GPU-seconds split equally among deployed tenants) — the fairness
+    /// metric's allocation variable.
+    pub gpu_seconds: f64,
 }
 
 impl TenantRecord {
@@ -197,6 +227,18 @@ pub struct ServeReport {
     /// polling wait — the search itself runs off-thread, so this collapses
     /// toward zero under the wall meter.
     pub search_seconds_unoverlapped: f64,
+    /// Arrivals held in the admission queue instead of rejected.
+    pub queued_admissions: u32,
+    /// Tenants preempted to admit a higher-priority arrival.
+    pub preemptions: u32,
+    /// Capacity rebalances across planning shards that changed a slice.
+    pub rebalances: u32,
+    /// Search slices pumped (sync) or reported by the service (async) —
+    /// with [`ServeReport::replan_windows`] this is the per-event replan
+    /// search cost the sharding is meant to flatten.
+    pub replan_slices_total: u64,
+    /// Plans enumerated across all replan searches.
+    pub plans_enumerated_total: u64,
 }
 
 impl ServeReport {
@@ -210,6 +252,39 @@ impl ServeReport {
         // lint:allow(R5): sequential mean over a Vec in event order, not a parallel reduce.
         Some(ttas.iter().sum::<f64>() / ttas.len() as f64)
     }
+
+    /// Mean time-to-admission per priority tier (ascending tier; tiers
+    /// with no admitted tenant are omitted). The SLO evidence: lower tiers
+    /// should see lower TTA under contention.
+    pub fn tta_by_tier(&self) -> Vec<(u8, f64)> {
+        let mut by: BTreeMap<u8, (f64, u32)> = BTreeMap::new();
+        for t in &self.tenants {
+            if let Some(tta) = t.time_to_admission() {
+                let e = by.entry(t.tier).or_insert((0.0, 0));
+                e.0 += tta;
+                e.1 += 1;
+            }
+        }
+        by.into_iter().map(|(tier, (sum, n))| (tier, sum / n as f64)).collect()
+    }
+
+    /// Jain's fairness index over per-tenant GPU-seconds:
+    /// `(Σx)² / (n · Σx²)` — 1.0 is a perfectly even split, `1/n` is one
+    /// tenant holding everything. `None` when no tenant trained.
+    pub fn jain_fairness(&self) -> Option<f64> {
+        let (mut n, mut sum, mut sumsq) = (0u32, 0.0f64, 0.0f64);
+        for t in &self.tenants {
+            if t.gpu_seconds > 0.0 {
+                n += 1;
+                sum += t.gpu_seconds;
+                sumsq += t.gpu_seconds * t.gpu_seconds;
+            }
+        }
+        if n == 0 || sumsq == 0.0 {
+            return None;
+        }
+        Some(sum * sum / (n as f64 * sumsq))
+    }
 }
 
 /// Budget bookkeeping of one open replan window.
@@ -221,12 +296,12 @@ struct ReplanWindow {
     had_deployment: bool,
 }
 
-/// The serving runtime: owns the non-blocking [`TaskManager`], the
+/// The serving runtime: owns the non-blocking [`ShardManager`], the
 /// swappable training loop and the sim clock, and replays a churn trace.
 pub struct ServeRuntime<'a> {
     cost: &'a CostModel,
     cluster: &'a ClusterSpec,
-    mgr: TaskManager<'a>,
+    mgr: ShardManager<'a>,
     train: Option<SimTrainLoop<'a>>,
     /// Deployed-task index → tenant index, rebuilt at each swap.
     deployed_tenants: Vec<usize>,
@@ -239,25 +314,35 @@ pub struct ServeRuntime<'a> {
     /// The async planner service (`planner_threads` > 0), or `None` for
     /// the deterministic sync path.
     service: Option<PlannerService>,
-    /// Epoch of the service request whose result this window is waiting
-    /// for (stale published epochs are ignored). Distinct from `epoch`,
-    /// which seeds training across redeploys.
-    submitted_epoch: u64,
+    /// Per-shard epoch of the service request the open window awaits
+    /// (stale published epochs are ignored). Distinct from `epoch`, which
+    /// seeds training across redeploys.
+    submitted_epochs: BTreeMap<usize, u64>,
+    /// Shards the open window still awaits a published result from.
+    awaiting: BTreeSet<usize>,
+    /// Training steps since the last shard-capacity rebalance.
+    steps_since_rebalance: u64,
 }
 
 impl<'a> ServeRuntime<'a> {
     pub fn new(cost: &'a CostModel, cluster: &'a ClusterSpec, opts: ServeOptions) -> Self {
-        let mut mgr =
-            TaskManager::new(cost, cluster, TaskSet::default(), opts.planner.clone());
-        mgr.restart_seconds_per_replica = opts.restart_seconds_per_replica;
+        let mut mgr = ShardManager::new(
+            cost,
+            cluster,
+            TaskSet::default(),
+            opts.planner.clone(),
+            opts.shards,
+        );
+        mgr.set_restart_seconds(opts.restart_seconds_per_replica);
         let service = (opts.planner_threads > 0).then(|| {
-            PlannerService::spawn(
+            PlannerService::spawn_sharded(
                 cost.clone(),
                 cluster.clone(),
                 opts.planner.clone(),
                 opts.meter,
                 opts.slice_plans,
                 opts.planner_threads,
+                opts.shards,
             )
         });
         Self {
@@ -273,12 +358,14 @@ impl<'a> ServeRuntime<'a> {
             tenants: Vec::new(),
             report: ServeReport::default(),
             service,
-            submitted_epoch: 0,
+            submitted_epochs: BTreeMap::new(),
+            awaiting: BTreeSet::new(),
+            steps_since_rebalance: 0,
         }
     }
 
-    /// The task manager (plan, session and accounting counters).
-    pub fn manager(&self) -> &TaskManager<'a> {
+    /// The fleet manager (composed plan, per-shard sessions and counters).
+    pub fn manager(&self) -> &ShardManager<'a> {
         &self.mgr
     }
 
@@ -317,6 +404,19 @@ impl<'a> ServeRuntime<'a> {
                 self.replan_tick();
                 continue;
             }
+            // 2b. between windows: periodic capacity rebalance across the
+            // planning shards (drains the admission queue into any freed
+            // slice; shards whose budget changed reopen their replans)
+            if self.opts.rebalance_every > 0
+                && self.steps_since_rebalance >= self.opts.rebalance_every
+            {
+                self.steps_since_rebalance = 0;
+                let opened = self.mgr.rebalance();
+                if !opened.is_empty() {
+                    self.open_replan_window(&opened);
+                    continue;
+                }
+            }
             // 3. steady state: train toward the next event, or finish
             if idx < events.len() {
                 let next_at = events[idx].at;
@@ -340,30 +440,62 @@ impl<'a> ServeRuntime<'a> {
             }
         }
         self.report.sim_seconds = self.now;
+        self.report.queued_admissions = self.mgr.queued_admissions;
+        self.report.preemptions = self.mgr.preemptions;
+        self.report.rebalances = self.mgr.rebalances;
         self.report.tenants = self.tenants.clone();
         self.report.clone()
     }
 
     /// Deliver one trace event: update tenant records, apply it to the
-    /// task manager, and open / re-target the replan window.
+    /// fleet manager, and open / re-target the replan window.
     fn deliver(&mut self, ev: &TraceEvent) {
-        let name = match &ev.event {
-            TaskEvent::Arrive(spec) => spec.name.clone(),
-            TaskEvent::Exit { name } => name.clone(),
+        let (name, tier) = match &ev.event {
+            TaskEvent::Arrive(spec) => (spec.name.clone(), spec.meta.tier),
+            TaskEvent::Exit { name } => (name.clone(), 0),
         };
         let arriving = matches!(&ev.event, TaskEvent::Arrive(_));
         match self.mgr.apply_event(ev.event.clone()) {
-            EventOutcome::Rejected => {
+            FleetOutcome::Rejected => {
                 self.report.rejected_arrivals += 1;
             }
-            EventOutcome::Unchanged => {}
-            EventOutcome::Drained => {
+            FleetOutcome::Unchanged => {
+                // a queued tenant withdrawing is Unchanged but has a
+                // record; an unknown exit has none and this is a no-op
+                if !arriving {
+                    if let Some(t) = self
+                        .tenants
+                        .iter_mut()
+                        .rev()
+                        .find(|t| t.name == name && t.exited_at.is_none())
+                    {
+                        t.exited_at = Some(ev.at);
+                    }
+                }
+            }
+            FleetOutcome::Queued => {
+                // held for capacity, not rejected: time-to-admission is
+                // measured from the *request*, so the record opens now and
+                // admission happens at a later queue drain
+                self.tenants.push(TenantRecord {
+                    name,
+                    tier,
+                    arrived_at: ev.at,
+                    admitted_at: None,
+                    exited_at: None,
+                    steps_trained: 0,
+                    gpu_seconds: 0.0,
+                });
+            }
+            FleetOutcome::Drained => {
                 // no tasks left: the deployment tears down immediately,
                 // and any in-flight service search has no successor target
                 if let Some(svc) = &mut self.service {
                     svc.cancel_current();
                 }
                 self.window = None;
+                self.awaiting.clear();
+                self.submitted_epochs.clear();
                 self.train = None;
                 self.deployed_tenants.clear();
                 if let Some(t) = self
@@ -375,14 +507,16 @@ impl<'a> ServeRuntime<'a> {
                     t.exited_at = Some(ev.at);
                 }
             }
-            EventOutcome::Planning => {
+            FleetOutcome::Planning { opened } => {
                 if arriving {
                     self.tenants.push(TenantRecord {
                         name,
+                        tier,
                         arrived_at: ev.at,
                         admitted_at: None,
                         exited_at: None,
                         steps_trained: 0,
+                        gpu_seconds: 0.0,
                     });
                 } else if let Some(t) = self
                     .tenants
@@ -392,33 +526,45 @@ impl<'a> ServeRuntime<'a> {
                 {
                     t.exited_at = Some(ev.at);
                 }
-                // open (or re-target) the window. A superseding event
-                // KEEPS the open window's remaining budget — resetting it
-                // would let sustained churn defer every swap indefinitely;
-                // carrying it bounds the oldest waiting tenant's admission
-                // by one budget, after which the best-so-far plan deploys.
-                let fresh = self.window.is_none();
-                let (steps_so_far, budget_left) = match self.window.take() {
-                    Some(w) => (w.steps_in_window, w.budget_left),
-                    None => (0, self.opts.replan_budget),
-                };
-                self.report.replan_windows += 1;
-                self.window = Some(ReplanWindow {
-                    budget_left,
-                    steps_in_window: steps_so_far,
-                    had_deployment: self.train.is_some(),
-                });
-                // async: hand the (re-)targeted search to the service —
-                // submit cancels the superseded in-flight token itself.
-                // (A *rejected* event needs no resubmit: the restored task
-                // set is exactly what the in-flight search targets.)
-                if let Some(svc) = &mut self.service {
-                    self.submitted_epoch = svc.submit(
-                        self.mgr.tasks().clone(),
-                        self.opts.replan_budget,
-                        fresh,
-                    );
-                }
+                self.open_replan_window(&opened);
+            }
+        }
+    }
+
+    /// Open (or re-target) the replan window and, on the async path,
+    /// submit each opened shard's search to the planner service. A
+    /// superseding event KEEPS the open window's remaining budget —
+    /// resetting it would let sustained churn defer every swap
+    /// indefinitely; carrying it bounds the oldest waiting tenant's
+    /// admission by one budget, after which the best-so-far plan deploys.
+    fn open_replan_window(&mut self, opened: &[usize]) {
+        let fresh = self.window.is_none();
+        let (steps_so_far, budget_left) = match self.window.take() {
+            Some(w) => (w.steps_in_window, w.budget_left),
+            None => (0, self.opts.replan_budget),
+        };
+        self.report.replan_windows += 1;
+        self.window = Some(ReplanWindow {
+            budget_left,
+            steps_in_window: steps_so_far,
+            had_deployment: self.train.is_some(),
+        });
+        // async: hand each opened shard's search to the service —
+        // submit_shard cancels only that shard's superseded token, so a
+        // localized event never discards another shard's progress. An
+        // empty `opened` (drained-shard recompose) leaves nothing to
+        // await; the async tick finishes the window synchronously.
+        if let Some(svc) = &mut self.service {
+            for &s in opened {
+                let e = svc.submit_shard(
+                    s,
+                    self.mgr.shard_tasks(s).clone(),
+                    self.opts.replan_budget,
+                    fresh,
+                    self.mgr.gpu_budget(s),
+                );
+                self.submitted_epochs.insert(s, e);
+                self.awaiting.insert(s);
             }
         }
     }
@@ -442,10 +588,14 @@ impl<'a> ServeRuntime<'a> {
         let slice = self.mgr.pump_replan(self.opts.slice_plans);
         let wall = t0.elapsed_secs();
         let (done, enumerated) = match slice {
-            Some(s) => (s.done, s.n_enumerated),
+            Some(s) => {
+                self.report.replan_slices_total += 1;
+                (s.done, s.n_enumerated)
+            }
             // no search to pump (infeasible context): adopt immediately
             None => (true, 0),
         };
+        self.report.plans_enumerated_total += enumerated as u64;
         let charge = self.opts.meter.charge(wall, enumerated);
         self.report.search_seconds_total += charge;
         if !stepped {
@@ -473,28 +623,54 @@ impl<'a> ServeRuntime<'a> {
         }
     }
 
-    /// Async window tick: the search runs on the service thread, so the
-    /// loop just trains and polls. The published update is adopted only
-    /// when its epoch matches the window's request — a stale final (from a
-    /// superseded search that published before its cancellation landed)
-    /// is ignored, and the epoch cell has already refused to let it
-    /// overwrite a newer one.
+    /// Async window tick: the searches run on the service thread, so the
+    /// loop just trains and polls each awaited shard. A published update
+    /// is adopted only when its epoch matches that shard's request — a
+    /// stale final (from a superseded search that published before its
+    /// cancellation landed) is ignored, and the epoch cell has already
+    /// refused to let it overwrite a newer one. Each shard's plan is
+    /// adopted as it lands (the composed plan shrinks/grows per shard);
+    /// the window closes when the last awaited shard publishes.
     fn replan_tick_async(&mut self) {
         let stepped = self.train.is_some() && self.train_step(true);
-        let update = self
-            .service
-            .as_ref()
-            .and_then(PlannerService::poll)
-            .map(|(_, u)| u)
-            .filter(|u| u.epoch == self.submitted_epoch);
-        if let Some(u) = update {
+        if self.awaiting.is_empty() {
+            // nothing in flight to wait for (a drained shard's
+            // recompose-only window): finish synchronously
+            let tasks_for_certify = self.mgr.fleet_tasks();
+            let outcome = self.mgr.finish_replan();
+            self.close_window();
+            self.adopt_outcome(outcome, true, &tasks_for_certify);
+            return;
+        }
+        let ready: Vec<_> = self
+            .awaiting
+            .iter()
+            .filter_map(|&s| {
+                let submitted = *self.submitted_epochs.get(&s)?;
+                self.service
+                    .as_ref()
+                    .and_then(|svc| svc.poll_shard(s))
+                    .map(|(_, u)| (s, u))
+                    .filter(|(_, u)| u.epoch == submitted)
+            })
+            .collect();
+        let adopted = !ready.is_empty();
+        for (s, u) in ready {
             self.report.search_seconds_total += u.search_seconds;
+            self.report.replan_slices_total += u.slices as u64;
+            self.report.plans_enumerated_total += u.n_enumerated as u64;
             if u.exhausted {
                 self.report.budget_exhausted += 1;
             }
-            let tasks_for_certify = self.mgr.tasks().clone();
-            let outcome = self.mgr.finish_replan_with(u.plan.clone());
-            self.adopt(outcome, u.done, &tasks_for_certify);
+            let tasks_for_certify = self.mgr.fleet_tasks();
+            let outcome = self.mgr.finish_shard_with(s, u.plan.clone());
+            self.awaiting.remove(&s);
+            self.adopt_outcome(outcome, u.done, &tasks_for_certify);
+        }
+        if adopted {
+            if self.awaiting.is_empty() {
+                self.close_window();
+            }
             return;
         }
         if !stepped {
@@ -514,15 +690,15 @@ impl<'a> ServeRuntime<'a> {
     /// Adopt the replan at a step boundary and redeploy the training loop,
     /// charging checkpoint+restart only for changed replica groups.
     fn swap(&mut self, completed: bool) {
-        let tasks_for_certify = self.mgr.tasks().clone();
+        let tasks_for_certify = self.mgr.fleet_tasks();
         let outcome = self.mgr.finish_replan();
-        self.adopt(outcome, completed, &tasks_for_certify);
+        self.close_window();
+        self.adopt_outcome(outcome, completed, &tasks_for_certify);
     }
 
-    /// Shared adoption tail of the sync swap and the async poll: close the
-    /// window (recording its overlap proof), account the outcome, certify
-    /// completed searches against a cold plan, and redeploy training.
-    fn adopt(&mut self, outcome: ReplanOutcome, completed: bool, tasks_for_certify: &TaskSet) {
+    /// Close the replan window, recording its overlap proof, and reset the
+    /// async awaited-shard state.
+    fn close_window(&mut self) {
         if let Some(w) = self.window.take() {
             if w.had_deployment {
                 self.report.min_steps_in_replan_window = Some(
@@ -532,6 +708,19 @@ impl<'a> ServeRuntime<'a> {
                 );
             }
         }
+        self.awaiting.clear();
+        self.submitted_epochs.clear();
+    }
+
+    /// Shared adoption tail of the sync swap and the async poll: account
+    /// the outcome, certify completed searches against a cold plan, and
+    /// redeploy training.
+    fn adopt_outcome(
+        &mut self,
+        outcome: ReplanOutcome,
+        completed: bool,
+        tasks_for_certify: &TaskSet,
+    ) {
         match outcome {
             ReplanOutcome::Unchanged => {
                 self.report.plan_swaps_identical += 1;
@@ -547,8 +736,14 @@ impl<'a> ServeRuntime<'a> {
             ReplanOutcome::Drained | ReplanOutcome::Rejected => {}
         }
         // certify anytime identity on completed searches, before the new
-        // loop starts ticking
-        if completed && self.opts.certify_identity {
+        // loop starts ticking. Only the global (single-shard, uncapped)
+        // path is cold-comparable: a capacity-sliced shard search answers
+        // a different (smaller) question than `Planner::plan`.
+        if completed
+            && self.opts.certify_identity
+            && self.opts.shards <= 1
+            && self.opts.planner.gpu_budget.is_none()
+        {
             if let Some(deployed) = self.mgr.plan() {
                 self.report.identity_checks += 1;
                 let cold = Planner::new(self.cost, self.cluster)
@@ -573,7 +768,7 @@ impl<'a> ServeRuntime<'a> {
         self.deployed_tenants.clear();
         match self.mgr.plan() {
             Some(plan) => {
-                let tasks = self.mgr.tasks().clone();
+                let tasks = self.mgr.fleet_tasks();
                 for spec in &tasks.tasks {
                     if let Some(i) = self
                         .tenants
@@ -622,15 +817,20 @@ impl<'a> ServeRuntime<'a> {
         self.now += step.step_time;
         self.report.steps_total += 1;
         self.report.gpu_seconds_trained += step.gpu_seconds;
+        self.steps_since_rebalance += 1;
         if in_window {
             self.report.steps_during_replan += 1;
             if let Some(w) = &mut self.window {
                 w.steps_in_window += 1;
             }
         }
+        let deployed =
+            self.deployed_tenants.iter().filter(|&&ti| ti != usize::MAX).count();
+        let share = if deployed > 0 { step.gpu_seconds / deployed as f64 } else { 0.0 };
         for &ti in &self.deployed_tenants {
             if ti != usize::MAX {
                 self.tenants[ti].steps_trained += 1;
+                self.tenants[ti].gpu_seconds += share;
             }
         }
         true
@@ -668,6 +868,47 @@ pub fn default_churn_trace(pool: &TaskSet, spacing: f64) -> Vec<TraceEvent> {
     trace
 }
 
+/// Generate a seeded, deterministic fleet churn trace: `tenants` arrivals
+/// drawn from four workload archetypes (QA / chat / code / summarization
+/// length profiles), round-robin priority tiers, staggered arrival times
+/// with jitter, and roughly a quarter of tenants exiting after a dwell —
+/// exercising admission, queueing, preemption and shard rebalancing at
+/// fleet scale. Sorted by timestamp and reproducible from
+/// `(tenants, seed)`; the fleet-scaling bench and the shard tests share
+/// it.
+pub fn gen_churn_trace(tenants: usize, seed: u64) -> Vec<TraceEvent> {
+    use crate::data::LengthDistribution;
+    use crate::util::Rng;
+    // (archetype, batch, mean, skew, min, max)
+    const ARCHETYPES: [(&str, u32, f64, f64, u32, u32); 4] = [
+        ("qa", 24, 210.0, 6.0, 16, 2048),
+        ("chat", 16, 420.0, 4.0, 16, 4096),
+        ("code", 12, 700.0, 6.5, 16, 8192),
+        ("sum", 8, 3600.0, 4.3, 16, 16384),
+    ];
+    let mut rng = Rng::new(seed ^ 0x5eed_7ace);
+    let spacing = 240.0;
+    let mut out = Vec::new();
+    for i in 0..tenants {
+        let (arch, batch, mean, skew, min, max) = ARCHETYPES[i % ARCHETYPES.len()];
+        let tier = (i % 4) as u8;
+        let name = format!("t{i:04}-{arch}");
+        let at = i as f64 * spacing + rng.f64() * spacing * 0.5;
+        // vary the batch so identically shaped tenants still differ
+        let batch = batch + 4 * rng.below(3) as u32;
+        let spec = TaskSpec::new(&name, batch, LengthDistribution::fit(mean, skew, min, max))
+            .with_tier(tier);
+        out.push(TraceEvent { at, event: TaskEvent::Arrive(spec) });
+        if rng.below(4) == 0 {
+            // ~25% exit after a dwell, freeing capacity for later arrivals
+            let dwell = spacing * (4.0 + rng.f64() * 8.0);
+            out.push(TraceEvent { at: at + dwell, event: TaskEvent::Exit { name } });
+        }
+    }
+    out.sort_by(|a, b| a.at.total_cmp(&b.at));
+    out
+}
+
 /// Convenience: build a runtime, replay `trace`, return the report.
 pub fn serve_trace(
     cost: &CostModel,
@@ -679,16 +920,20 @@ pub fn serve_trace(
 }
 
 /// Parse a churn-trace file. Line format (whitespace-separated, `#`
-/// comments):
+/// comments; the trailing `tier` column is optional and defaults to 0 =
+/// highest priority):
 ///
 /// ```text
-/// # at    op      name      batch  mean    skew  min  max
-/// 0       arrive  qa-short  128    210.0   6.0   16   2048
+/// # at    op      name      batch  mean    skew  min  max   [tier]
+/// 0       arrive  qa-short  128    210.0   6.0   16   2048  1
 /// 1800    exit    qa-short
 /// ```
 pub fn parse_trace(text: &str) -> Result<Vec<TraceEvent>, String> {
     use crate::data::LengthDistribution;
     let mut out = Vec::new();
+    // live-in-file-order tenant names: a second arrive for a live name is
+    // almost always a typo'd exit — running it would double the tenant
+    let mut live: BTreeSet<String> = BTreeSet::new();
     for (ln, line) in text.lines().enumerate() {
         let line = line.split('#').next().unwrap_or("").trim();
         if line.is_empty() {
@@ -706,6 +951,11 @@ pub fn parse_trace(text: &str) -> Result<Vec<TraceEvent>, String> {
             .ok()
             .filter(|t: &f64| t.is_finite())
             .ok_or_else(|| err("bad timestamp"))?;
+        if at < 0.0 {
+            // the sim clock starts at 0: a negative event time would be
+            // silently delivered at startup, reordering the trace
+            return Err(err("negative timestamp"));
+        }
         let name = fields[2].to_string();
         let event = match fields[1] {
             "exit" => {
@@ -715,12 +965,13 @@ pub fn parse_trace(text: &str) -> Result<Vec<TraceEvent>, String> {
                     // materially different scenario
                     return Err(err("exit takes exactly `at exit name`"));
                 }
+                live.remove(&name);
                 TaskEvent::Exit { name }
             }
             "arrive" => {
-                if fields.len() != 8 {
+                if fields.len() != 8 && fields.len() != 9 {
                     return Err(err(
-                        "arrive needs `at arrive name batch mean skew min max`",
+                        "arrive needs `at arrive name batch mean skew min max [tier]`",
                     ));
                 }
                 let batch: u32 = fields[3].parse().map_err(|_| err("bad batch"))?;
@@ -728,11 +979,21 @@ pub fn parse_trace(text: &str) -> Result<Vec<TraceEvent>, String> {
                 let skew: f64 = fields[5].parse().map_err(|_| err("bad skew"))?;
                 let min: u32 = fields[6].parse().map_err(|_| err("bad min len"))?;
                 let max: u32 = fields[7].parse().map_err(|_| err("bad max len"))?;
-                TaskEvent::Arrive(TaskSpec::new(
-                    &name,
-                    batch,
-                    LengthDistribution::fit(mean, skew, min, max),
-                ))
+                let tier: u8 = match fields.get(8) {
+                    Some(f) => f.parse().map_err(|_| err("bad tier"))?,
+                    None => 0,
+                };
+                if !live.insert(name.clone()) {
+                    return Err(err("duplicate arrive for live tenant"));
+                }
+                TaskEvent::Arrive(
+                    TaskSpec::new(
+                        &name,
+                        batch,
+                        LengthDistribution::fit(mean, skew, min, max),
+                    )
+                    .with_tier(tier),
+                )
             }
             other => return Err(err(&format!("unknown op `{other}`"))),
         };
@@ -767,6 +1028,7 @@ mod tests {
             restart_seconds_per_replica: 15.0,
             certify_identity: true,
             tail_steps: 3,
+            ..ServeOptions::default()
         }
     }
 
@@ -909,6 +1171,93 @@ mod tests {
         assert!(parse_trace("0 exit a 128 210.0 6.0 16 2048").is_err(), "stray columns");
         assert!(parse_trace("0 vanish a").is_err());
         assert!(parse_trace("# only comments\n\n").unwrap().is_empty());
+    }
+
+    #[test]
+    fn trace_parser_tiers_and_guards() {
+        let text = "\
+0    arrive  qa   128  210.0  6.0  16  2048   3
+100  exit    qa
+200  arrive  qa   128  210.0  6.0  16  2048
+";
+        let trace = parse_trace(text).unwrap();
+        assert_eq!(trace.len(), 3);
+        assert!(
+            matches!(&trace[0].event, TaskEvent::Arrive(s) if s.meta.tier == 3),
+            "explicit tier column"
+        );
+        assert!(
+            matches!(&trace[2].event, TaskEvent::Arrive(s) if s.meta.tier == 0),
+            "tier defaults to 0 — and re-arrival after exit is legal"
+        );
+        assert!(parse_trace("-5 arrive a 1 2.0 3.0 4 5").is_err(), "negative at");
+        assert!(
+            parse_trace("0 arrive a 1 2.0 3.0 4 5 nine").is_err(),
+            "non-numeric tier"
+        );
+        let dup = "\
+0   arrive  a  1  2.0  3.0  4  5
+50  arrive  a  1  2.0  3.0  4  5
+";
+        assert!(parse_trace(dup).is_err(), "duplicate live arrive");
+    }
+
+    #[test]
+    fn gen_trace_is_deterministic_and_sorted() {
+        let a = gen_churn_trace(40, 9);
+        let b = gen_churn_trace(40, 9);
+        assert_eq!(format!("{a:?}"), format!("{b:?}"), "same (tenants, seed)");
+        let c = gen_churn_trace(40, 10);
+        assert_ne!(format!("{a:?}"), format!("{c:?}"), "seed changes the trace");
+        for w in a.windows(2) {
+            assert!(w[0].at <= w[1].at, "sorted by timestamp");
+        }
+        let arrivals: Vec<&TaskSpec> = a
+            .iter()
+            .filter_map(|e| match &e.event {
+                TaskEvent::Arrive(s) => Some(s),
+                TaskEvent::Exit { .. } => None,
+            })
+            .collect();
+        assert_eq!(arrivals.len(), 40);
+        // all four tiers and all four archetype length profiles appear
+        for tier in 0u8..4 {
+            assert!(arrivals.iter().any(|s| s.meta.tier == tier), "tier {tier}");
+        }
+        assert!(arrivals.iter().any(|s| s.lengths.max_len == 2048));
+        assert!(arrivals.iter().any(|s| s.lengths.max_len == 16384));
+        let exits = a.len() - arrivals.len();
+        assert!(exits > 0 && exits < 40 / 2, "some but not most tenants exit");
+    }
+
+    #[test]
+    fn sharded_serve_admits_and_reports_fairness() {
+        let cluster = ClusterSpec::a100_40g(32);
+        let cost = CostModel::calibrated(&ModelDesc::llama2_7b(), &cluster);
+        let mut opts = fast_opts();
+        opts.certify_identity = false;
+        opts.shards = 2;
+        opts.rebalance_every = 40;
+        let trace = gen_churn_trace(6, 11);
+        let report = serve_trace(&cost, &cluster, &trace, opts);
+        let arrivals =
+            trace.iter().filter(|e| matches!(e.event, TaskEvent::Arrive(_))).count();
+        assert_eq!(
+            report.tenants.len() + report.rejected_arrivals as usize,
+            arrivals,
+            "every arrival is recorded or rejected: {report:#?}"
+        );
+        assert!(report.steps_total > 0, "{report:#?}");
+        assert!(
+            report.tenants.iter().any(|t| t.admitted_at.is_some()),
+            "{report:#?}"
+        );
+        let jain = report.jain_fairness().expect("someone trained");
+        assert!(jain > 0.0 && jain <= 1.0 + 1e-12, "jain {jain}");
+        // per-tier TTA covers only admitted tenants and is non-negative
+        for (_, tta) in report.tta_by_tier() {
+            assert!(tta >= 0.0);
+        }
     }
 
     #[test]

@@ -56,6 +56,7 @@
 //! Raw thread spawning here is sanctioned by detlint rule R6 (confined to
 //! `util::par` and this module).
 
+use std::collections::BTreeMap;
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -65,7 +66,7 @@ use crate::config::TaskSet;
 use crate::coordinator::planner::{DeploymentPlan, Planner, PlannerOptions};
 use crate::coordinator::runtime::BudgetMeter;
 use crate::coordinator::session::PlanningSession;
-use crate::costmodel::CostModel;
+use crate::costmodel::{CostModel, CostTables};
 use crate::util::par::{with_max_threads, CancelToken, EpochCell};
 
 /// A terminal search result published by the service. Every update is
@@ -77,6 +78,9 @@ pub struct PlanUpdate {
     /// The request epoch this result answers (compare against the epoch
     /// returned by [`PlannerService::submit`] before adopting).
     pub epoch: u64,
+    /// The planning shard this result belongs to (0 for the unsharded
+    /// path — see [`PlannerService::submit_shard`]).
+    pub shard: usize,
     /// The plan to adopt; `None` means the world is infeasible for the
     /// requested task set (the deployment drains).
     pub plan: Option<DeploymentPlan>,
@@ -98,12 +102,19 @@ pub struct PlanUpdate {
 /// One search request: plan for `tasks`, reporting at `epoch`.
 struct PlanRequest {
     epoch: u64,
+    /// Planning shard the request targets — each shard has its own
+    /// publication cell, cancel token, session and window budget, so an
+    /// event on one shard never cancels another's in-flight search.
+    shard: usize,
     tasks: TaskSet,
     /// Replan budget for a fresh window; `None` = unlimited.
     budget: Option<f64>,
     /// This request opens a new replan window (don't carry the previous
     /// window's remaining budget).
     fresh: bool,
+    /// GPU capacity slice the shard's search packs (`None`: whole
+    /// cluster — the unsharded path).
+    gpu_budget: Option<u32>,
     cancel: CancelToken,
 }
 
@@ -114,22 +125,28 @@ enum Cmd {
 
 /// Handle to the planner service thread. Owned by the serving runtime;
 /// dropping it shuts the thread down (cancelling any in-flight search).
+///
+/// Sharded operation ([`Self::spawn_sharded`]) gives every planning shard
+/// its own publication cell and cancel token under one global epoch
+/// counter: submitting for shard A cancels only A's in-flight search —
+/// shard B's may be *delayed* (the worker is one thread) but is never
+/// discarded.
 pub struct PlannerService {
     tx: mpsc::Sender<Cmd>,
-    cell: Arc<EpochCell<PlanUpdate>>,
+    cells: Vec<Arc<EpochCell<PlanUpdate>>>,
     handle: Option<JoinHandle<()>>,
     epoch: u64,
-    current_cancel: Option<CancelToken>,
+    cancels: Vec<Option<CancelToken>>,
 }
 
 impl PlannerService {
-    /// Spawn the service thread. It owns a clone of the world (cost model
-    /// + cluster) and its own [`PlanningSession`]; session warm-starts are
-    /// certified plan-identical to cold searches, so the separate memo
-    /// chain changes no published plan. `threads` bounds the slice
-    /// parallelism *of the service thread only* (via
-    /// [`with_max_threads`]); the event loop's own parallelism is
-    /// untouched.
+    /// Spawn the service thread for the unsharded (single planning shard)
+    /// path. It owns a clone of the world (cost model + cluster) and its
+    /// own [`PlanningSession`]; session warm-starts are certified
+    /// plan-identical to cold searches, so the separate memo chain changes
+    /// no published plan. `threads` bounds the slice parallelism *of the
+    /// service thread only* (via [`with_max_threads`]); the event loop's
+    /// own parallelism is untouched.
     pub fn spawn(
         cost: CostModel,
         cluster: ClusterSpec,
@@ -138,29 +155,53 @@ impl PlannerService {
         slice_plans: usize,
         threads: usize,
     ) -> Self {
+        Self::spawn_sharded(cost, cluster, opts, meter, slice_plans, threads, 1)
+    }
+
+    /// Spawn the service thread with `n_shards` independent planning
+    /// shards. Each shard gets its own [`PlanningSession`] (lazily, over
+    /// one shared cost-table LRU), publication cell, cancel token and
+    /// replan-window budget.
+    pub fn spawn_sharded(
+        cost: CostModel,
+        cluster: ClusterSpec,
+        opts: PlannerOptions,
+        meter: BudgetMeter,
+        slice_plans: usize,
+        threads: usize,
+        n_shards: usize,
+    ) -> Self {
+        let n_shards = n_shards.max(1);
         let (tx, rx) = mpsc::channel();
-        let cell = Arc::new(EpochCell::new());
-        let worker_cell = Arc::clone(&cell);
+        let cells: Vec<Arc<EpochCell<PlanUpdate>>> =
+            (0..n_shards).map(|_| Arc::new(EpochCell::new())).collect();
+        let worker_cells = cells.clone();
         let handle = std::thread::spawn(move || {
             let worker = Worker {
                 cost,
                 cluster,
-                session: PlanningSession::new(opts),
+                opts,
+                tables: CostTables::default(),
+                sessions: BTreeMap::new(),
                 meter,
                 slice_plans,
-                cell: worker_cell,
-                window_open: false,
-                window_left: None,
+                cells: worker_cells,
+                window_left: BTreeMap::new(),
             };
             with_max_threads(threads, || worker.run(&rx));
         });
         Self {
             tx,
-            cell,
+            cells,
             handle: Some(handle),
             epoch: 0,
-            current_cancel: None,
+            cancels: vec![None; n_shards],
         }
+    }
+
+    /// Shards this service was spawned with.
+    pub fn n_shards(&self) -> usize {
+        self.cells.len()
     }
 
     /// Request a plan for `tasks`, superseding any in-flight search (its
@@ -169,37 +210,65 @@ impl PlannerService {
     /// request epoch: adopt a polled [`PlanUpdate`] only when its epoch
     /// matches. `fresh` marks the start of a new replan window (full
     /// `budget`); a non-fresh request carries the open window's remaining
-    /// budget.
+    /// budget. Shard-0 shorthand for [`Self::submit_shard`].
     pub fn submit(&mut self, tasks: TaskSet, budget: Option<f64>, fresh: bool) -> u64 {
-        self.cancel_current();
+        self.submit_shard(0, tasks, budget, fresh, None)
+    }
+
+    /// Request a plan for one planning shard, superseding only *that
+    /// shard's* in-flight search. `gpu_budget` caps the capacity the
+    /// shard's search packs (its slice of the cluster).
+    pub fn submit_shard(
+        &mut self,
+        shard: usize,
+        tasks: TaskSet,
+        budget: Option<f64>,
+        fresh: bool,
+        gpu_budget: Option<u32>,
+    ) -> u64 {
+        let shard = shard.min(self.cells.len() - 1);
+        if let Some(c) = self.cancels[shard].take() {
+            c.cancel();
+        }
         let cancel = CancelToken::new();
-        self.current_cancel = Some(cancel.clone());
+        self.cancels[shard] = Some(cancel.clone());
         self.epoch += 1;
         let _ = self.tx.send(Cmd::Plan(Box::new(PlanRequest {
             epoch: self.epoch,
+            shard,
             tasks,
             budget,
             fresh,
+            gpu_budget,
             cancel,
         })));
         self.epoch
     }
 
-    /// Cancel the in-flight search (if any) without submitting a new one —
-    /// a drain event has no successor task set to search for.
+    /// Cancel every in-flight search without submitting a new one — a
+    /// fleet drain has no successor task set to search for.
     pub fn cancel_current(&mut self) {
-        if let Some(c) = self.current_cancel.take() {
-            c.cancel();
+        for c in &mut self.cancels {
+            if let Some(c) = c.take() {
+                c.cancel();
+            }
         }
     }
 
     /// Wait-free snapshot of the newest published result (the cell epoch
-    /// and the update it tags). `None` until the first publish.
+    /// and the update it tags). `None` until the first publish. Shard-0
+    /// shorthand for [`Self::poll_shard`].
     pub fn poll(&self) -> Option<(u64, Arc<PlanUpdate>)> {
-        self.cell.read()
+        self.poll_shard(0)
     }
 
-    /// The epoch of the most recent [`Self::submit`] (0 before any).
+    /// Wait-free snapshot of one shard's newest published result.
+    pub fn poll_shard(&self, shard: usize) -> Option<(u64, Arc<PlanUpdate>)> {
+        self.cells.get(shard).and_then(|c| c.read())
+    }
+
+    /// The epoch of the most recent submission on any shard (0 before
+    /// any).
     pub fn submitted_epoch(&self) -> u64 {
         self.epoch
     }
@@ -215,63 +284,94 @@ impl Drop for PlannerService {
     }
 }
 
-/// Service-thread state: the cloned world plus its own planning session
-/// and replan-window budget bookkeeping.
+/// Service-thread state: the cloned world plus per-shard planning
+/// sessions (lazily created over one shared cost-table LRU) and per-shard
+/// replan-window budget bookkeeping.
 struct Worker {
     cost: CostModel,
     cluster: ClusterSpec,
-    session: PlanningSession,
+    opts: PlannerOptions,
+    /// One cost-table LRU across every shard's session.
+    tables: CostTables,
+    sessions: BTreeMap<usize, PlanningSession>,
     meter: BudgetMeter,
     slice_plans: usize,
-    cell: Arc<EpochCell<PlanUpdate>>,
-    /// A replan window is open: a superseding (non-fresh) request carries
-    /// [`Self::window_left`] instead of a full budget.
-    window_open: bool,
-    /// Remaining budget of the open window; `None` = unlimited.
-    window_left: Option<f64>,
+    cells: Vec<Arc<EpochCell<PlanUpdate>>>,
+    /// Shard → remaining budget of its open replan window (`None` value =
+    /// unlimited). Absent key = no window open on that shard; a
+    /// superseding (non-fresh) request carries the stored remainder
+    /// instead of a full budget.
+    window_left: BTreeMap<usize, Option<f64>>,
 }
 
 impl Worker {
     fn run(mut self, rx: &mpsc::Receiver<Cmd>) {
         loop {
-            let mut cmd = match rx.recv() {
+            let first = match rx.recv() {
                 Ok(c) => c,
                 // sender dropped without Shutdown (runtime panicked)
                 Err(_) => return,
             };
-            // Drain to the newest request: every intermediate one was
-            // superseded (its token is already cancelled) before we ever
-            // started it, so searching for it would be pure waste.
-            while let Ok(newer) = rx.try_recv() {
-                cmd = newer;
-            }
-            match cmd {
+            // Drain to the newest request *per shard*: an intermediate
+            // request for a shard was superseded (its token is already
+            // cancelled) before we ever started it, but requests for
+            // *other* shards are independent work and must all run.
+            let mut pending: BTreeMap<usize, PlanRequest> = BTreeMap::new();
+            let mut shutdown = false;
+            match first {
                 Cmd::Shutdown => return,
-                Cmd::Plan(req) => self.plan(*req),
+                Cmd::Plan(r) => {
+                    pending.insert(r.shard, *r);
+                }
+            }
+            while let Ok(newer) = rx.try_recv() {
+                match newer {
+                    Cmd::Shutdown => {
+                        shutdown = true;
+                        break;
+                    }
+                    Cmd::Plan(r) => {
+                        pending.insert(r.shard, *r);
+                    }
+                }
+            }
+            for (_, req) in pending {
+                self.plan(req);
+            }
+            if shutdown {
+                return;
             }
         }
     }
 
-    /// Run one search to a terminal state (done / exhausted / cancelled),
-    /// publishing the terminal result unless cancelled.
+    /// Run one shard's search to a terminal state (done / exhausted /
+    /// cancelled), publishing the terminal result unless cancelled.
     fn plan(&mut self, req: PlanRequest) {
-        let PlanRequest { epoch, tasks, budget, fresh, cancel } = req;
+        let PlanRequest { epoch, shard, tasks, budget, fresh, gpu_budget, cancel } = req;
         // Budget carry across supersession, mirroring the sync runtime's
         // replan window: a fresh window starts with the full budget, a
         // superseding request inherits what the superseded search left.
-        let mut left = if fresh || !self.window_open { budget } else { self.window_left };
-        self.window_open = true;
+        let mut left = match (fresh, self.window_left.get(&shard)) {
+            (false, Some(prev)) => *prev,
+            _ => budget,
+        };
+        self.window_left.insert(shard, left);
 
+        let session = self.sessions.entry(shard).or_insert_with(|| {
+            PlanningSession::with_tables(self.opts.clone(), self.tables.clone())
+        });
+        session.set_gpu_budget(gpu_budget);
+        let cell = &self.cells[shard.min(self.cells.len() - 1)];
         let planner = Planner::new(&self.cost, &self.cluster);
-        let Some(mut search) = self.session.begin_anytime(&planner, &tasks) else {
+        let Some(mut search) = session.begin_anytime(&planner, &tasks) else {
             // Infeasible world (e.g. no candidate config supports the
             // longest bucket): terminal "no plan" verdict, window closed.
-            self.window_open = false;
-            self.window_left = None;
-            self.cell.publish(
+            self.window_left.remove(&shard);
+            cell.publish(
                 epoch,
                 Arc::new(PlanUpdate {
                     epoch,
+                    shard,
                     plan: None,
                     done: true,
                     exhausted: false,
@@ -284,7 +384,7 @@ impl Worker {
         };
         let mut search_seconds = 0.0;
         loop {
-            let report = self.session.pump_anytime_cancellable(
+            let report = session.pump_anytime_cancellable(
                 &planner,
                 &mut search,
                 self.slice_plans,
@@ -298,7 +398,7 @@ impl Worker {
                 // adopting it. Nothing is published (and the EpochCell
                 // would reject this epoch anyway once the successor
                 // publishes).
-                self.window_left = left;
+                self.window_left.insert(shard, left);
                 return;
             }
             let charge = self.meter.charge(report.wall_seconds, report.n_enumerated);
@@ -312,13 +412,13 @@ impl Worker {
                 // search
                 let n_enumerated = search.n_enumerated();
                 let slices = search.slices();
-                let plan = self.session.finish_anytime(&planner, search).map(|(p, _)| p);
-                self.window_open = false;
-                self.window_left = None;
-                self.cell.publish(
+                let plan = session.finish_anytime(&planner, search).map(|(p, _)| p);
+                self.window_left.remove(&shard);
+                cell.publish(
                     epoch,
                     Arc::new(PlanUpdate {
                         epoch,
+                        shard,
                         plan,
                         done: report.done,
                         exhausted: exhausted && !report.done,

@@ -263,6 +263,19 @@ impl PlanningSession {
         self.memo = None;
     }
 
+    /// Re-slice the GPU capacity this session's searches may pack (a
+    /// planning shard's slice; `None` = the whole cluster). A changed
+    /// budget invalidates the memo wholesale: survivors, resume
+    /// checkpoints and `hit_cap` all describe an enumeration over the old
+    /// capacity, so resuming against them would break the plan-identity
+    /// guarantees. A no-op (same budget) keeps the memo.
+    pub fn set_gpu_budget(&mut self, budget: Option<u32>) {
+        if self.opts.gpu_budget != budget {
+            self.opts.gpu_budget = budget;
+            self.memo = None;
+        }
+    }
+
     /// Session-aware [`Planner::plan`].
     pub fn plan(&mut self, planner: &Planner, tasks: &TaskSet) -> Option<DeploymentPlan> {
         self.plan_with_stats(planner, tasks).map(|(p, _)| p)
@@ -740,7 +753,7 @@ impl PlanningSession {
         if memo.configs != configs {
             return None; // survivor count vectors index different configs
         }
-        let n_gpus = planner.cluster().n_gpus;
+        let n_gpus = self.opts.search_gpus(planner.cluster());
         let min_n = configs.iter().map(|c| c.n()).min().unwrap_or(1);
         let min_gpus = n_gpus.saturating_sub(min_n - 1);
         // The search only admits plans deploying a config that supports the

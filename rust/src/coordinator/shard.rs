@@ -1,0 +1,1026 @@
+//! Sharded localized replanning: O(change) replan cost for large fleets.
+//!
+//! The global planner re-searches the whole deployment on every tenant
+//! event, so replan cost grows with fleet size even when the event touches
+//! one tenant. This module partitions tenants into **planning shards**
+//! keyed by their sequence-length profile (tasks with similar dominant
+//! lengths co-locate, so each shard's bucket grid stays tight), gives each
+//! shard its own slice of the cluster's GPU capacity, and runs one
+//! [`TaskManager`] — hence one [`crate::coordinator::session::PlanningSession`]
+//! — per shard over a *shared* [`CostTables`] LRU. A tenant event replans
+//! only its own shard; the other shards' plans (and any in-flight searches
+//! they own) are untouched. Per-shard plans compose into the global
+//! deployment deterministically: groups merge by configuration and the
+//! expected step time is the slowest shard's (shards train concurrently on
+//! disjoint GPU slices).
+//!
+//! With `n_shards <= 1` every call is a bit-exact passthrough to the
+//! single inner [`TaskManager`] — same plans, same
+//! `expected_step_time` bits, same counters — certified by
+//! `tests/shard_replan.rs`.
+//!
+//! **Admission classes.** Tenants carry a priority tier
+//! ([`crate::config::TaskMeta`], 0 = highest). When an arrival's shard
+//! cannot be given enough capacity (the per-shard GPU floors no longer fit
+//! the cluster), the manager first tries to **rebalance** capacity across
+//! shards ([`capacity_slices`]), then **preempts** strictly
+//! lower-priority tenants (numerically higher tier, most recent admission
+//! first), and only then **holds** the arrival in an admission queue —
+//! never silently rejecting a feasible tenant. Queued and preempted
+//! tenants re-enter in (tier, FIFO) order whenever capacity frees up.
+//! Planning itself stays tier-blind: tiers decide *who runs*, never how a
+//! shard's search scores plans, so plan-identity certificates are
+//! unaffected.
+
+use std::collections::BTreeMap;
+
+use crate::cluster::ClusterSpec;
+use crate::config::{TaskSet, TaskSpec};
+use crate::coordinator::planner::{DeploymentPlan, Planner, PlannerOptions};
+use crate::coordinator::session::SliceReport;
+use crate::coordinator::tasks::{
+    plan_adjustment, EventOutcome, ReplanOutcome, TaskEvent, TaskManager,
+};
+use crate::costmodel::{CostModel, CostTables};
+use crate::solver::partition::capacity_slices;
+use crate::util::Rng;
+
+/// What a fleet-level event did — the sharded counterpart of
+/// [`EventOutcome`], extended with admission-control outcomes.
+#[derive(Debug, Clone, PartialEq)]
+pub enum FleetOutcome {
+    /// One or more shards opened a background replan (ascending shard
+    /// indices, deduplicated). An empty list still requires a
+    /// finish-replan pass: a shard drained or was preempted empty and the
+    /// composed plan must be re-adopted at the next step boundary.
+    Planning { opened: Vec<usize> },
+    /// Nothing changed (unknown exit, or a queued tenant withdrew).
+    Unchanged,
+    /// Duplicate name, or no configuration on this cluster can ever serve
+    /// the arrival's longest sequences.
+    Rejected,
+    /// The arrival is feasible but capacity is currently exhausted even
+    /// after rebalancing and preemption: held in the admission queue.
+    Queued,
+    /// No tasks left anywhere; every shard's deployment tears down.
+    Drained,
+}
+
+/// An arrival held (or a preempted tenant parked) until capacity frees.
+#[derive(Debug, Clone)]
+struct QueuedArrival {
+    spec: TaskSpec,
+    /// Queue admission sequence — FIFO order within a tier.
+    seq: u64,
+}
+
+/// Shard router + per-shard capacity governor + admission control.
+pub struct ShardManager<'a> {
+    cost: &'a CostModel,
+    cluster: &'a ClusterSpec,
+    opts: PlannerOptions,
+    n_shards: usize,
+    shards: Vec<TaskManager<'a>>,
+    budgets: Vec<Option<u32>>,
+    /// `(gpus, max supported sequence length)` of every feasible
+    /// configuration — the capacity-floor oracle.
+    config_caps: Vec<(u32, u64)>,
+    /// The composed global plan (single shard: a clone of that shard's).
+    composed: Option<DeploymentPlan>,
+    queue: Vec<QueuedArrival>,
+    next_seq: u64,
+    /// Live task name → admission sequence (preemption picks the most
+    /// recently admitted among the lowest-priority candidates).
+    seqs: BTreeMap<String, u64>,
+    /// Arrivals that entered the admission queue (held, not rejected).
+    pub queued_admissions: u32,
+    /// Tenants evicted to make room for a higher-priority arrival.
+    pub preemptions: u32,
+    /// Capacity rebalances that actually changed some shard's budget.
+    pub rebalances: u32,
+}
+
+/// Dominant-length grid for shard routing: tasks whose sampled lengths
+/// concentrate in the same band share a shard, keeping each shard's bucket
+/// boundaries (and therefore its candidate configurations) tight.
+const SHARD_GRID: [u64; 5] = [512, 2048, 8192, 32768, u64::MAX];
+
+/// Deterministically sample a task's length profile. Seeded from the
+/// distribution's parameter bits — not the name — so identically
+/// distributed tenants always land in the same shard.
+fn profile_lengths(spec: &TaskSpec) -> Vec<u32> {
+    let mut seed = 0xcbf2_9ce4_8422_2325u64;
+    for bits in [
+        spec.lengths.mu.to_bits(),
+        spec.lengths.sigma.to_bits(),
+        spec.lengths.tail_weight.to_bits(),
+        spec.lengths.tail_mu.to_bits(),
+        spec.lengths.tail_sigma.to_bits(),
+        spec.lengths.min_len as u64,
+        spec.lengths.max_len as u64,
+    ] {
+        seed ^= bits;
+        seed = seed.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    let mut rng = Rng::new(seed);
+    (0..64).map(|_| spec.lengths.sample(&mut rng)).collect()
+}
+
+/// The shard a task routes to: dominant bucket of its sampled lengths on
+/// the geometric [`SHARD_GRID`], clamped to the shard count (ties break
+/// toward the shorter bucket). Pure and deterministic — the same spec
+/// always routes identically, across processes and thread counts.
+pub fn shard_of(spec: &TaskSpec, n_shards: usize) -> usize {
+    if n_shards <= 1 {
+        return 0;
+    }
+    let mut counts = [0usize; SHARD_GRID.len()];
+    for l in profile_lengths(spec) {
+        let b = SHARD_GRID.partition_point(|&g| g < l as u64).min(SHARD_GRID.len() - 1);
+        counts[b] += 1;
+    }
+    let mut dominant = 0usize;
+    for (i, &c) in counts.iter().enumerate() {
+        if c > counts[dominant] {
+            dominant = i;
+        }
+    }
+    dominant.min(n_shards - 1)
+}
+
+/// Conservative upper bound on the longest bucket boundary the planner can
+/// derive for a task: the distribution's hard cap plus the interval-grid
+/// round-up headroom (`bucketize` widens intervals for very long tails).
+fn padded_max_len(spec: &TaskSpec) -> u64 {
+    let m = spec.lengths.max_len as u64;
+    m + (m / 64).max(512)
+}
+
+/// Mean sampled length × batch size: the task's GPU-demand proxy used to
+/// split spare capacity proportionally across shards.
+fn task_load(spec: &TaskSpec) -> f64 {
+    let lengths = profile_lengths(spec);
+    let mut total = 0.0f64;
+    for l in &lengths {
+        total += *l as f64;
+    }
+    spec.batch_size as f64 * total / lengths.len() as f64
+}
+
+/// Smallest configuration (GPUs) in `caps` holding sequences of `len`.
+fn min_config_for(caps: &[(u32, u64)], len: u64) -> Option<u32> {
+    caps.iter().filter(|&&(_, cap)| cap >= len).map(|&(n, _)| n).min()
+}
+
+/// GPU floor of a task set: the smallest configuration serving its longest
+/// (padded) sequences; an empty set needs nothing. Falls back to the
+/// un-padded requirement when the padding headroom overshoots every
+/// configuration.
+fn required_floor(caps: &[(u32, u64)], tasks: &TaskSet) -> Option<u32> {
+    let mut padded = 0u64;
+    let mut raw = 0u64;
+    for t in &tasks.tasks {
+        padded = padded.max(padded_max_len(t));
+        raw = raw.max(t.lengths.max_len as u64);
+    }
+    if padded == 0 {
+        return Some(0);
+    }
+    min_config_for(caps, padded).or_else(|| min_config_for(caps, raw))
+}
+
+/// Total GPU-demand proxy of a task set.
+fn shard_load(tasks: &TaskSet) -> f64 {
+    let mut load = 0.0f64;
+    for t in &tasks.tasks {
+        load += task_load(t);
+    }
+    load
+}
+
+/// Why a capacity-sliced admission attempt failed.
+enum AdmitFailure {
+    /// The per-shard floors (with the newcomer) no longer fit the cluster.
+    NoCapacity,
+    /// The shard's own planner rejected the arrival (its derived bucket
+    /// boundaries exceeded every configuration despite the floor
+    /// estimate) — a permanent rejection, not a capacity problem.
+    ShardRejected,
+}
+
+impl<'a> ShardManager<'a> {
+    pub fn new(
+        cost: &'a CostModel,
+        cluster: &'a ClusterSpec,
+        initial: TaskSet,
+        opts: PlannerOptions,
+        n_shards: usize,
+    ) -> Self {
+        let n_shards = n_shards.max(1);
+        let planner = Planner::new(cost, cluster);
+        let config_caps: Vec<(u32, u64)> = planner
+            .feasible_configs(opts.allow_cross_server_tp)
+            .into_iter()
+            .map(|c| (c.n(), cost.max_seq_len(c)))
+            .collect();
+
+        // Partition the initial set by length profile.
+        let mut parts: Vec<TaskSet> = (0..n_shards).map(|_| TaskSet::default()).collect();
+        for t in initial.tasks {
+            parts[shard_of(&t, n_shards)].tasks.push(t);
+        }
+
+        // Initial capacity slices. A single shard searches the whole
+        // cluster (budget None — the bit-identical global path).
+        let budgets: Vec<Option<u32>> = if n_shards <= 1 {
+            vec![None]
+        } else {
+            let floors: Vec<u32> = parts
+                .iter()
+                .map(|p| required_floor(&config_caps, p).unwrap_or(0))
+                .collect();
+            let loads: Vec<f64> = parts.iter().map(shard_load).collect();
+            match capacity_slices(cluster.n_gpus, &loads, &floors) {
+                Some(slices) => slices.into_iter().map(Some).collect(),
+                // Infeasible initial set: equal split; the per-shard
+                // managers reject what they cannot serve.
+                None => {
+                    let each = (cluster.n_gpus / n_shards as u32).max(1);
+                    vec![Some(each); n_shards]
+                }
+            }
+        };
+
+        let tables = CostTables::default();
+        let mut seqs = BTreeMap::new();
+        let mut next_seq = 0u64;
+        let shards: Vec<TaskManager<'a>> = parts
+            .into_iter()
+            .enumerate()
+            .map(|(i, p)| {
+                for t in &p.tasks {
+                    seqs.insert(t.name.clone(), next_seq);
+                    next_seq += 1;
+                }
+                let mut shard_opts = opts.clone();
+                shard_opts.gpu_budget = budgets[i];
+                TaskManager::with_tables(cost, cluster, p, shard_opts, tables.clone())
+            })
+            .collect();
+
+        let mut mgr = Self {
+            cost,
+            cluster,
+            opts,
+            n_shards,
+            shards,
+            budgets,
+            config_caps,
+            composed: None,
+            queue: Vec::new(),
+            next_seq,
+            seqs,
+            queued_admissions: 0,
+            preemptions: 0,
+            rebalances: 0,
+        };
+        mgr.recompose();
+        mgr
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.n_shards
+    }
+
+    /// The per-shard managers (counters, sessions, plans) — read-only.
+    pub fn shards(&self) -> &[TaskManager<'a>] {
+        &self.shards
+    }
+
+    /// Current GPU budget of shard `i` (`None`: whole cluster).
+    pub fn gpu_budget(&self, i: usize) -> Option<u32> {
+        self.budgets.get(i).copied().flatten()
+    }
+
+    /// Shard `i`'s live task set (the async service submits this).
+    pub fn shard_tasks(&self, i: usize) -> &TaskSet {
+        self.shards[i].tasks()
+    }
+
+    /// Arrivals currently held in the admission queue.
+    pub fn queue_len(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Every live task across all shards, shard-major order — the global
+    /// training task set. For a single shard this is exactly the inner
+    /// manager's set.
+    pub fn fleet_tasks(&self) -> TaskSet {
+        let mut out = TaskSet::default();
+        for m in &self.shards {
+            out.tasks.extend(m.tasks().tasks.iter().cloned());
+        }
+        out
+    }
+
+    /// The composed global deployment plan.
+    pub fn plan(&self) -> Option<&DeploymentPlan> {
+        self.composed.as_ref()
+    }
+
+    /// The shared cost-table LRU (one cache across every shard).
+    pub fn tables(&self) -> CostTables {
+        self.shards[0].tables()
+    }
+
+    /// Per-replica restart charge, pushed into every shard manager.
+    pub fn set_restart_seconds(&mut self, seconds: f64) {
+        for m in &mut self.shards {
+            m.restart_seconds_per_replica = seconds;
+        }
+    }
+
+    fn restart_seconds(&self) -> f64 {
+        self.shards[0].restart_seconds_per_replica
+    }
+
+    /// Total replans across all shards.
+    pub fn replans_total(&self) -> u32 {
+        self.shards.iter().map(|m| m.replans).sum()
+    }
+
+    /// Total redeploys across all shards.
+    pub fn redeploys_total(&self) -> u32 {
+        self.shards.iter().map(|m| m.redeploys).sum()
+    }
+
+    /// Any shard has an open (begun, unadopted) replan.
+    pub fn replan_pending(&self) -> bool {
+        self.shards.iter().any(TaskManager::replan_pending)
+    }
+
+    /// Every open replan has finished its enumeration (shards whose
+    /// planning context was infeasible have nothing to pump and count as
+    /// finished — adopting them drains that shard only).
+    pub fn replan_done(&self) -> bool {
+        self.shards
+            .iter()
+            .all(|m| !m.replan_pending() || m.replan_done() || !m.replan_searching())
+    }
+
+    /// Priority tier of a live task, if any shard holds it.
+    fn live_tier(&self, name: &str) -> Option<u8> {
+        for m in &self.shards {
+            if let Some(t) = m.tasks().tasks.iter().find(|t| t.name == name) {
+                return Some(t.meta.tier);
+            }
+        }
+        None
+    }
+
+    fn shard_of_live(&self, name: &str) -> Option<usize> {
+        self.shards
+            .iter()
+            .position(|m| m.tasks().tasks.iter().any(|t| t.name == name))
+    }
+
+    fn fleet_empty(&self) -> bool {
+        self.shards.iter().all(|m| m.tasks().is_empty())
+    }
+
+    /// Smallest configuration (GPUs) that can hold sequences of `len`.
+    fn required_gpus(&self, len: u64) -> Option<u32> {
+        min_config_for(&self.config_caps, len)
+    }
+
+    /// GPU floor for a shard extended by an optional newcomer.
+    fn floor_with(&self, shard: usize, extra: Option<&TaskSpec>) -> Option<u32> {
+        let mut padded = 0u64;
+        let mut raw = 0u64;
+        for t in self.shards[shard].tasks().tasks.iter().chain(extra) {
+            padded = padded.max(padded_max_len(t));
+            raw = raw.max(t.lengths.max_len as u64);
+        }
+        if padded == 0 {
+            return Some(0);
+        }
+        min_config_for(&self.config_caps, padded)
+            .or_else(|| min_config_for(&self.config_caps, raw))
+    }
+
+    fn load_with(&self, shard: usize, extra: Option<&TaskSpec>) -> f64 {
+        let mut load = 0.0f64;
+        for t in self.shards[shard].tasks().tasks.iter().chain(extra) {
+            load += task_load(t);
+        }
+        load
+    }
+
+    /// Apply one tenant event at fleet level. Non-blocking, like
+    /// [`TaskManager::apply_event`]: opened replans are pumped by the
+    /// caller and adopted at a step boundary.
+    pub fn apply_event(&mut self, event: TaskEvent) -> FleetOutcome {
+        match event {
+            TaskEvent::Arrive(spec) => self.arrive(spec),
+            TaskEvent::Exit { name } => self.exit(&name),
+        }
+    }
+
+    fn passthrough(&mut self, event: TaskEvent) -> FleetOutcome {
+        let out = match self.shards[0].apply_event(event) {
+            EventOutcome::Planning => FleetOutcome::Planning { opened: vec![0] },
+            EventOutcome::Unchanged => FleetOutcome::Unchanged,
+            EventOutcome::Rejected => FleetOutcome::Rejected,
+            EventOutcome::Drained => FleetOutcome::Drained,
+        };
+        if out == FleetOutcome::Drained {
+            self.recompose();
+        }
+        out
+    }
+
+    fn arrive(&mut self, spec: TaskSpec) -> FleetOutcome {
+        if self.n_shards <= 1 {
+            return self.passthrough(TaskEvent::Arrive(spec));
+        }
+        if self.seqs.contains_key(&spec.name)
+            || self.queue.iter().any(|q| q.spec.name == spec.name)
+        {
+            // duplicate names make exits ambiguous — same rule as the
+            // global manager, extended to cover held arrivals
+            return FleetOutcome::Rejected;
+        }
+        if self.required_gpus(spec.lengths.max_len as u64).is_none() {
+            // no configuration on this cluster ever serves it: a permanent
+            // rejection, not a hold
+            return FleetOutcome::Rejected;
+        }
+        match self.try_admit(&spec) {
+            Ok(opened) => FleetOutcome::Planning { opened },
+            Err(AdmitFailure::ShardRejected) => FleetOutcome::Rejected,
+            Err(AdmitFailure::NoCapacity) => {
+                let mut opened: Vec<usize> = Vec::new();
+                loop {
+                    let Some(victim) = self.preemption_victim(spec.meta.tier) else {
+                        break;
+                    };
+                    if let Some(s) = self.evict(&victim) {
+                        opened.push(s);
+                    }
+                    match self.try_admit(&spec) {
+                        Ok(more) => {
+                            opened.extend(more);
+                            opened.sort_unstable();
+                            opened.dedup();
+                            return FleetOutcome::Planning { opened };
+                        }
+                        Err(AdmitFailure::ShardRejected) => {
+                            // permanently unservable: same terminal answer
+                            // the global manager gives (the evictions
+                            // stand — their searches are already open)
+                            return FleetOutcome::Rejected;
+                        }
+                        Err(AdmitFailure::NoCapacity) => continue,
+                    }
+                }
+                self.enqueue(spec);
+                self.queued_admissions += 1;
+                if opened.is_empty() {
+                    FleetOutcome::Queued
+                } else {
+                    // preemptions landed but the arrival still waits: the
+                    // opened shards must be pumped and adopted
+                    opened.sort_unstable();
+                    opened.dedup();
+                    FleetOutcome::Planning { opened }
+                }
+            }
+        }
+    }
+
+    fn exit(&mut self, name: &str) -> FleetOutcome {
+        if self.n_shards <= 1 {
+            return self.passthrough(TaskEvent::Exit { name: name.to_string() });
+        }
+        if let Some(pos) = self.queue.iter().position(|q| q.spec.name == name) {
+            // a held tenant withdrew before ever being admitted
+            self.queue.remove(pos);
+            return FleetOutcome::Unchanged;
+        }
+        let Some(s) = self.shard_of_live(name) else {
+            return FleetOutcome::Unchanged;
+        };
+        let mut opened: Vec<usize> = Vec::new();
+        let mut drained_shard = false;
+        match self.shards[s].apply_event(TaskEvent::Exit { name: name.to_string() }) {
+            EventOutcome::Planning => opened.push(s),
+            EventOutcome::Drained => drained_shard = true,
+            EventOutcome::Unchanged | EventOutcome::Rejected => {}
+        }
+        self.seqs.remove(name);
+        // freed capacity: re-admit held arrivals, highest priority first
+        opened.extend(self.drain_queue());
+        opened.sort_unstable();
+        opened.dedup();
+        if self.fleet_empty() && self.queue.is_empty() && opened.is_empty() {
+            self.recompose();
+            return FleetOutcome::Drained;
+        }
+        if opened.is_empty() && !drained_shard {
+            return FleetOutcome::Unchanged;
+        }
+        // a drained shard with no reopened searches still needs a
+        // finish-replan pass to re-adopt the shrunken composed plan
+        FleetOutcome::Planning { opened }
+    }
+
+    /// Capacity-sliced admission. On success returns the shards that
+    /// opened a replan (the target shard plus any shard whose budget
+    /// changed and restarted its search).
+    ///
+    /// The **fast path** keeps replan cost O(change): when the newcomer's
+    /// shard can already serve it within its current slice, only that
+    /// shard replans — no other shard's budget (or in-flight search) is
+    /// touched. The full re-slice runs only when the shard's floor
+    /// outgrows its slice.
+    fn try_admit(&mut self, spec: &TaskSpec) -> Result<Vec<usize>, AdmitFailure> {
+        let s = shard_of(spec, self.n_shards);
+        let floor_s = self.floor_with(s, Some(spec)).ok_or(AdmitFailure::NoCapacity)?;
+        let current = self.budgets[s].unwrap_or(self.cluster.n_gpus);
+        if floor_s <= current {
+            return match self.shards[s].apply_event(TaskEvent::Arrive(spec.clone())) {
+                EventOutcome::Planning => {
+                    self.seqs.insert(spec.name.clone(), self.next_seq);
+                    self.next_seq += 1;
+                    Ok(vec![s])
+                }
+                _ => Err(AdmitFailure::ShardRejected),
+            };
+        }
+        let mut floors = Vec::with_capacity(self.n_shards);
+        let mut loads = Vec::with_capacity(self.n_shards);
+        for i in 0..self.n_shards {
+            let extra = (i == s).then_some(spec);
+            floors.push(self.floor_with(i, extra).ok_or(AdmitFailure::NoCapacity)?);
+            loads.push(self.load_with(i, extra));
+        }
+        let slices = capacity_slices(self.cluster.n_gpus, &loads, &floors)
+            .ok_or(AdmitFailure::NoCapacity)?;
+
+        // Admit into the target shard first, under its new slice — if the
+        // shard's planner still rejects (bucket boundaries beyond every
+        // configuration), nothing else has been touched.
+        let old_budget = self.budgets[s];
+        self.shards[s].set_gpu_budget(Some(slices[s]));
+        self.budgets[s] = Some(slices[s]);
+        match self.shards[s].apply_event(TaskEvent::Arrive(spec.clone())) {
+            EventOutcome::Planning => {}
+            _ => {
+                self.shards[s].set_gpu_budget(old_budget);
+                self.budgets[s] = old_budget;
+                return Err(AdmitFailure::ShardRejected);
+            }
+        }
+        self.seqs.insert(spec.name.clone(), self.next_seq);
+        self.next_seq += 1;
+
+        let mut opened = vec![s];
+        for i in 0..self.n_shards {
+            if i == s {
+                continue;
+            }
+            let b = Some(slices[i]);
+            if self.budgets[i] != b {
+                self.shards[i].set_gpu_budget(b);
+                self.budgets[i] = b;
+                if self.shards[i].reopen_replan() {
+                    opened.push(i);
+                }
+            }
+        }
+        opened.sort_unstable();
+        opened.dedup();
+        Ok(opened)
+    }
+
+    /// The most recently admitted tenant among those with a strictly lower
+    /// priority than `tier` (numerically greater). Deterministic: ties
+    /// cannot occur, admission sequences are unique.
+    fn preemption_victim(&self, tier: u8) -> Option<String> {
+        let mut best: Option<(u8, u64, String)> = None;
+        for m in &self.shards {
+            for t in &m.tasks().tasks {
+                if t.meta.tier <= tier {
+                    continue;
+                }
+                let seq = self.seqs.get(&t.name).copied().unwrap_or(0);
+                let better = match &best {
+                    None => true,
+                    Some((bt, bs, _)) => {
+                        (t.meta.tier, seq) > (*bt, *bs)
+                    }
+                };
+                if better {
+                    best = Some((t.meta.tier, seq, t.name.clone()));
+                }
+            }
+        }
+        best.map(|(_, _, name)| name)
+    }
+
+    /// Evict a live tenant back into the admission queue (it re-enters in
+    /// tier order behind its peers). Returns the shard that opened a
+    /// replan, if the eviction left it non-empty.
+    fn evict(&mut self, name: &str) -> Option<usize> {
+        let s = self.shard_of_live(name)?;
+        let spec = self.shards[s]
+            .tasks()
+            .tasks
+            .iter()
+            .find(|t| t.name == name)?
+            .clone();
+        let out = self.shards[s].apply_event(TaskEvent::Exit { name: name.to_string() });
+        self.seqs.remove(name);
+        self.enqueue(spec);
+        self.preemptions += 1;
+        (out == EventOutcome::Planning).then_some(s)
+    }
+
+    fn enqueue(&mut self, spec: TaskSpec) {
+        self.queue.push(QueuedArrival { spec, seq: self.next_seq });
+        self.next_seq += 1;
+    }
+
+    /// Try to admit held arrivals in (tier, FIFO) order. Strict priority:
+    /// the first arrival that still does not fit blocks the rest of the
+    /// queue (no backfilling past a waiting higher-priority tenant).
+    fn drain_queue(&mut self) -> Vec<usize> {
+        let mut opened = Vec::new();
+        loop {
+            let Some(pos) = self
+                .queue
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, q)| (q.spec.meta.tier, q.seq))
+                .map(|(i, _)| i)
+            else {
+                break;
+            };
+            let spec = self.queue[pos].spec.clone();
+            match self.try_admit(&spec) {
+                Ok(more) => {
+                    self.queue.remove(pos);
+                    opened.extend(more);
+                }
+                Err(AdmitFailure::ShardRejected) => {
+                    // permanently unservable from the queue — drop it
+                    // rather than wedging every lower-priority arrival
+                    self.queue.remove(pos);
+                }
+                Err(AdmitFailure::NoCapacity) => break,
+            }
+        }
+        opened
+    }
+
+    /// Periodic capacity rebalance: recompute the proportional slices from
+    /// the live load profile and restart the searches of shards whose
+    /// budget changed, then re-try held arrivals. Returns the shards that
+    /// opened a replan (empty: capacity was already balanced).
+    pub fn rebalance(&mut self) -> Vec<usize> {
+        if self.n_shards <= 1 {
+            return Vec::new();
+        }
+        let mut floors = Vec::with_capacity(self.n_shards);
+        let mut loads = Vec::with_capacity(self.n_shards);
+        for i in 0..self.n_shards {
+            let Some(f) = self.floor_with(i, None) else {
+                return Vec::new();
+            };
+            floors.push(f);
+            loads.push(self.load_with(i, None));
+        }
+        let Some(slices) = capacity_slices(self.cluster.n_gpus, &loads, &floors) else {
+            return Vec::new();
+        };
+        let mut opened = Vec::new();
+        let mut changed = false;
+        for i in 0..self.n_shards {
+            let b = Some(slices[i]);
+            if self.budgets[i] != b {
+                changed = true;
+                self.shards[i].set_gpu_budget(b);
+                self.budgets[i] = b;
+                if self.shards[i].reopen_replan() {
+                    opened.push(i);
+                }
+            }
+        }
+        if changed {
+            self.rebalances += 1;
+        }
+        opened.extend(self.drain_queue());
+        opened.sort_unstable();
+        opened.dedup();
+        opened
+    }
+
+    /// Advance the first unfinished open replan by one enumeration slice.
+    /// The returned report's `done` covers the whole fleet: true only when
+    /// *every* open shard finished. `None` when nothing is pumpable.
+    pub fn pump_replan(&mut self, slice_plans: usize) -> Option<SliceReport> {
+        if self.n_shards <= 1 {
+            return self.shards[0].pump_replan(slice_plans);
+        }
+        for i in 0..self.shards.len() {
+            if self.shards[i].replan_pending() && !self.shards[i].replan_done() {
+                if let Some(mut r) = self.shards[i].pump_replan(slice_plans) {
+                    r.done = self.replan_done();
+                    return Some(r);
+                }
+            }
+        }
+        None
+    }
+
+    /// Adopt every open shard's replan at a step boundary and diff the
+    /// *composed* plan — only replica groups that actually changed across
+    /// the whole fleet pay checkpoint+restart.
+    pub fn finish_replan(&mut self) -> ReplanOutcome {
+        if self.n_shards <= 1 {
+            let out = self.shards[0].finish_replan();
+            self.recompose();
+            return out;
+        }
+        let before = self.composed.clone();
+        for m in &mut self.shards {
+            if m.replan_pending() {
+                m.finish_replan();
+            }
+        }
+        self.recompose();
+        self.outcome_between(before)
+    }
+
+    /// Adopt a plan computed by the async planner service for one shard
+    /// (the sharded analogue of [`TaskManager::finish_replan_with`]). The
+    /// outcome diffs the composed plan, so each shard's adoption charges
+    /// only the groups it changed.
+    pub fn finish_shard_with(
+        &mut self,
+        shard: usize,
+        plan: Option<DeploymentPlan>,
+    ) -> ReplanOutcome {
+        if self.n_shards <= 1 {
+            let out = self.shards[0].finish_replan_with(plan);
+            self.recompose();
+            return out;
+        }
+        let before = self.composed.clone();
+        self.shards[shard].finish_replan_with(plan);
+        self.recompose();
+        self.outcome_between(before)
+    }
+
+    /// Diff the freshly recomposed plan against `before` into a
+    /// fleet-level outcome (mirrors the single-manager accounting).
+    fn outcome_between(&self, before: Option<DeploymentPlan>) -> ReplanOutcome {
+        let per_replica = self.restart_seconds();
+        match (&before, &self.composed) {
+            (Some(a), Some(b)) if a.groups == b.groups => ReplanOutcome::Unchanged,
+            (Some(a), Some(b)) => {
+                let adjustment = plan_adjustment(a, b);
+                ReplanOutcome::Redeployed {
+                    adjustment_seconds: adjustment.seconds(per_replica),
+                    adjustment,
+                }
+            }
+            (None, Some(b)) => {
+                let fresh = DeploymentPlan {
+                    groups: Vec::new(),
+                    n_tasks: b.n_tasks,
+                    expected_step_time: 0.0,
+                };
+                let adjustment = plan_adjustment(&fresh, b);
+                ReplanOutcome::Redeployed {
+                    adjustment_seconds: adjustment.seconds(per_replica),
+                    adjustment,
+                }
+            }
+            (_, None) => ReplanOutcome::Drained,
+        }
+    }
+
+    /// Rebuild the composed global plan from the per-shard plans: groups
+    /// merge by configuration (sorted by `(gpus, tp)` like the planner's
+    /// own output), task counts add, and the expected step time is the
+    /// slowest shard's — shards train concurrently on disjoint capacity.
+    fn recompose(&mut self) {
+        if self.n_shards <= 1 {
+            self.composed = self.shards[0].plan().cloned();
+            return;
+        }
+        let mut groups: BTreeMap<crate::config::ParallelConfig, u32> = BTreeMap::new();
+        let mut n_tasks = 0u32;
+        let mut step = 0.0f64;
+        let mut any = false;
+        for m in &self.shards {
+            if let Some(p) = m.plan() {
+                any = true;
+                for &(c, k) in &p.groups {
+                    *groups.entry(c).or_default() += k;
+                }
+                n_tasks += p.n_tasks;
+                step = step.max(p.expected_step_time);
+            }
+        }
+        self.composed = any.then(|| {
+            let mut g: Vec<_> = groups.into_iter().collect();
+            g.sort_by_key(|&(c, _)| (c.n(), c.tp));
+            DeploymentPlan { groups: g, n_tasks, expected_step_time: step }
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelDesc;
+    use crate::data::LengthDistribution;
+
+    fn world(n: u32) -> (CostModel, ClusterSpec) {
+        let cluster = ClusterSpec::a100_40g(n);
+        let cost = CostModel::calibrated(&ModelDesc::llama2_7b(), &cluster);
+        (cost, cluster)
+    }
+
+    fn fast_opts() -> PlannerOptions {
+        let mut o = PlannerOptions::default();
+        o.calibration_multiple = 20;
+        o.eval_batches = 1;
+        o.max_evaluated = 100;
+        o
+    }
+
+    fn short(name: &str) -> TaskSpec {
+        TaskSpec::new(name, 64, LengthDistribution::fit(210.0, 6.0, 16, 2048))
+    }
+
+    fn long(name: &str) -> TaskSpec {
+        TaskSpec::new(name, 32, LengthDistribution::fit(3600.0, 4.3, 16, 16384))
+    }
+
+    #[test]
+    fn shard_routing_is_deterministic_and_length_keyed() {
+        let s = short("a");
+        let l = long("b");
+        assert_eq!(shard_of(&s, 4), shard_of(&short("renamed"), 4), "name-blind");
+        assert_eq!(shard_of(&s, 1), 0);
+        assert!(shard_of(&l, 4) >= shard_of(&s, 4), "longer profile, later shard");
+        // clamped to the shard count
+        assert!(shard_of(&l, 2) <= 1);
+    }
+
+    #[test]
+    fn single_shard_matches_global_manager() {
+        let (cost, cluster) = world(16);
+        let opts = fast_opts();
+        let initial = TaskSet::new(vec![short("a"), long("b")]);
+        let mut sharded =
+            ShardManager::new(&cost, &cluster, initial.clone(), opts.clone(), 1);
+        let mut global = TaskManager::new(&cost, &cluster, initial, opts);
+        let sp = sharded.plan().expect("sharded plan");
+        let gp = global.plan().expect("global plan");
+        assert_eq!(sp.groups, gp.groups);
+        assert_eq!(
+            sp.expected_step_time.to_bits(),
+            gp.expected_step_time.to_bits()
+        );
+        // event passthrough: same outcome class, same adopted plan
+        let ev = TaskEvent::Arrive(short("c"));
+        assert_eq!(
+            sharded.apply_event(ev.clone()),
+            FleetOutcome::Planning { opened: vec![0] }
+        );
+        assert_eq!(global.apply_event(ev), EventOutcome::Planning);
+        loop {
+            let r = sharded.pump_replan(64).expect("pending");
+            if r.done {
+                break;
+            }
+        }
+        loop {
+            let r = global.pump_replan(64).expect("pending");
+            if r.done {
+                break;
+            }
+        }
+        sharded.finish_replan();
+        global.finish_replan();
+        let sp = sharded.plan().expect("sharded plan");
+        let gp = global.plan().expect("global plan");
+        assert_eq!(sp.groups, gp.groups);
+        assert_eq!(
+            sp.expected_step_time.to_bits(),
+            gp.expected_step_time.to_bits()
+        );
+    }
+
+    #[test]
+    fn localized_event_replans_only_its_shard() {
+        let (cost, cluster) = world(32);
+        let initial = TaskSet::new(vec![short("s1"), short("s2"), long("l1")]);
+        let mut mgr = ShardManager::new(&cost, &cluster, initial, fast_opts(), 2);
+        assert!(mgr.plan().is_some());
+        let replans_before: Vec<u32> = mgr.shards().iter().map(|m| m.replans).collect();
+        // a short arrival routes to shard 0; shard 1 must stay untouched
+        let out = mgr.apply_event(TaskEvent::Arrive(short("s3")));
+        let FleetOutcome::Planning { opened } = out else {
+            panic!("expected planning, got {out:?}");
+        };
+        assert!(opened.contains(&0), "{opened:?}");
+        while let Some(r) = mgr.pump_replan(10_000) {
+            if r.done {
+                break;
+            }
+        }
+        mgr.finish_replan();
+        let replans_after: Vec<u32> = mgr.shards().iter().map(|m| m.replans).collect();
+        assert!(replans_after[0] > replans_before[0]);
+        if !opened.contains(&1) {
+            assert_eq!(replans_after[1], replans_before[1], "shard 1 replanned");
+        }
+        // the composed plan covers all four tasks
+        assert_eq!(mgr.plan().expect("plan").n_tasks, 4);
+        assert_eq!(mgr.fleet_tasks().len(), 4);
+    }
+
+    #[test]
+    fn composed_plan_fits_cluster_and_is_sorted() {
+        let (cost, cluster) = world(32);
+        let initial = TaskSet::new(vec![short("a"), short("b"), long("c"), long("d")]);
+        let mgr = ShardManager::new(&cost, &cluster, initial, fast_opts(), 3);
+        let plan = mgr.plan().expect("composed plan");
+        let gpus: u32 = plan.groups.iter().map(|&(c, k)| c.n() * k).sum();
+        assert!(gpus <= cluster.n_gpus, "{gpus} > {}", cluster.n_gpus);
+        for w in plan.groups.windows(2) {
+            assert!(
+                (w[0].0.n(), w[0].0.tp) <= (w[1].0.n(), w[1].0.tp),
+                "groups unsorted: {:?}",
+                plan.groups
+            );
+        }
+        assert!(plan.expected_step_time > 0.0);
+    }
+
+    #[test]
+    fn preemption_and_queueing_respect_tiers() {
+        let (cost, cluster) = world(16);
+        // fill the cluster with low-priority long-profile tenants
+        let initial = TaskSet::new(vec![
+            long("bg-1").with_tier(3),
+            long("bg-2").with_tier(3),
+        ]);
+        let mut mgr = ShardManager::new(&cost, &cluster, initial, fast_opts(), 2);
+        // a same-tier arrival must never preempt its peers
+        let out = mgr.apply_event(TaskEvent::Arrive(long("peer").with_tier(3)));
+        assert_eq!(mgr.preemptions, 0, "same tier preempted: {out:?}");
+        // queue withdrawal is clean
+        if out == FleetOutcome::Queued {
+            assert_eq!(
+                mgr.apply_event(TaskEvent::Exit { name: "peer".into() }),
+                FleetOutcome::Unchanged
+            );
+            assert_eq!(mgr.queue_len(), 0);
+        }
+        // duplicates are rejected even while held in the queue
+        let dup = mgr.apply_event(TaskEvent::Arrive(long("bg-1").with_tier(0)));
+        assert_eq!(dup, FleetOutcome::Rejected);
+    }
+
+    #[test]
+    fn drained_shard_shrinks_composed_plan() {
+        let (cost, cluster) = world(32);
+        let initial = TaskSet::new(vec![short("a"), long("b")]);
+        let mut mgr = ShardManager::new(&cost, &cluster, initial, fast_opts(), 2);
+        let before = mgr.plan().expect("plan").clone();
+        let out = mgr.apply_event(TaskEvent::Exit { name: "b".into() });
+        let FleetOutcome::Planning { opened } = out else {
+            panic!("expected planning, got {out:?}");
+        };
+        while let Some(r) = mgr.pump_replan(10_000) {
+            if r.done {
+                break;
+            }
+        }
+        let fin = mgr.finish_replan();
+        let after = mgr.plan().expect("plan").clone();
+        assert_eq!(after.n_tasks, 1);
+        assert_ne!(before.groups, after.groups, "{opened:?} / {fin:?}");
+        // fleet-level drain
+        let out = mgr.apply_event(TaskEvent::Exit { name: "a".into() });
+        assert_eq!(out, FleetOutcome::Drained);
+        assert!(mgr.plan().is_none());
+        assert!(mgr.fleet_empty());
+    }
+}

@@ -175,10 +175,24 @@ impl<'a> TaskManager<'a> {
         initial: TaskSet,
         opts: PlannerOptions,
     ) -> Self {
+        Self::with_tables(cost, cluster, initial, opts, CostTables::default())
+    }
+
+    /// Like [`Self::new`] but sharing an existing cost-table LRU — sharded
+    /// planning ([`crate::coordinator::shard::ShardManager`]) runs one
+    /// manager per shard over a single cache so a `(config, multiple)`
+    /// table built for one shard warms every other.
+    pub fn with_tables(
+        cost: &'a CostModel,
+        cluster: &'a ClusterSpec,
+        initial: TaskSet,
+        opts: PlannerOptions,
+        tables: CostTables,
+    ) -> Self {
         let mut mgr = Self {
             cost,
             cluster,
-            session: PlanningSession::new(opts),
+            session: PlanningSession::with_tables(opts, tables),
             tasks: initial,
             plan: None,
             pending: None,
@@ -224,10 +238,43 @@ impl<'a> TaskManager<'a> {
         self.replan_open
     }
 
+    /// Re-slice this manager's GPU capacity: the planning session searches
+    /// within `budget` GPUs (clamped to the cluster) from the next replan
+    /// on. A changed budget invalidates the warm-start memo — candidates
+    /// found under a different capacity may be infeasible or non-optimal
+    /// under the new one. `None` restores full-cluster search.
+    pub fn set_gpu_budget(&mut self, budget: Option<u32>) {
+        self.session.set_gpu_budget(budget);
+    }
+
+    /// Begin a fresh background replan for the *current* task set without
+    /// an event — used after a capacity rebalance changed this shard's GPU
+    /// budget. Returns `false` (and opens nothing) when the manager has no
+    /// tasks or the planning context is infeasible under the new budget.
+    pub fn reopen_replan(&mut self) -> bool {
+        if self.tasks.is_empty() {
+            return false;
+        }
+        self.begin_replan();
+        if self.pending.is_none() {
+            self.replan_open = false;
+            return false;
+        }
+        true
+    }
+
     /// The in-flight search finished its enumeration (a `finish_replan`
     /// now adopts a certified cold-identical plan).
     pub fn replan_done(&self) -> bool {
         self.pending.as_ref().is_some_and(AnytimeReplan::enumeration_done)
+    }
+
+    /// An open replan actually has a search to pump. False with an open
+    /// window whose planning context was infeasible (nothing pending) —
+    /// the sharded manager treats such shards as finished rather than
+    /// waiting on slices that will never come.
+    pub fn replan_searching(&self) -> bool {
+        self.pending.is_some()
     }
 
     /// Begin (or restart) the background replan for the current task set.

@@ -49,7 +49,7 @@ USAGE:
                   [--trace FILE] [--replan-budget SECS] [--slice-plans N]
                   [--sim-seconds-per-plan F] [--wall-meter] [--certify]
                   [--planner-threads N] [--spacing SECS] [--seed N]
-                  [--profile PATH]
+                  [--shards N] [--rebalance-every K] [--profile PATH]
                   (replay an arrival/exit churn trace: training advances
                    under the current plan while a budgeted anytime replan
                    runs in the background; plans swap at step boundaries,
@@ -62,8 +62,15 @@ USAGE:
                    terminal plans publish through a lock-free epoch cell
                    and are adopted at step boundaries — plan-identical to
                    the sync path, but search time overlaps training even
-                   on cold starts. Trace lines:
-                     <at> arrive <name> <batch> <mean> <skew> <min> <max>
+                   on cold starts. --shards N > 1 partitions tenants into
+                   planning shards by sequence-length profile: an event
+                   replans only its own shard against that shard's GPU
+                   capacity slice (O(change), not O(fleet)), arrivals that
+                   do not fit queue per priority tier — preempting the
+                   lowest tier when a higher one cannot be admitted — and
+                   --rebalance-every K re-slices capacity across shards
+                   every K training steps. Trace lines:
+                     <at> arrive <name> <batch> <mean> <skew> <min> <max> [tier]
                      <at> exit   <name>)
   lobra calibrate [--model ...] [--gpus N] [--cluster ...] [--tasks ...]
                   [--steps N] [--seed N] [--out PATH]
@@ -280,9 +287,11 @@ fn main() -> Result<()> {
             opts.seed = args.get_parse("seed", opts.seed)?;
             opts.certify_identity = args.has("certify");
             opts.planner_threads = args.get_parse("planner-threads", 0usize)?;
+            opts.shards = args.get_parse("shards", 1usize)?.max(1);
+            opts.rebalance_every = args.get_parse("rebalance-every", 0u64)?;
             println!(
                 "serving model={} cluster={} | {} events | replan budget {} | \
-                 slice {} plans | meter {:?} | planner {}",
+                 slice {} plans | meter {:?} | planner {} | {}",
                 model.name,
                 cluster.name,
                 trace.len(),
@@ -296,7 +305,13 @@ fn main() -> Result<()> {
                     0 => "sync (in-loop)".into(),
                     n => format!("async service ({n} threads)"),
                 },
+                match (opts.shards, opts.rebalance_every) {
+                    (1, _) => "global (1 shard)".into(),
+                    (s, 0) => format!("{s} planning shards"),
+                    (s, k) => format!("{s} planning shards, rebalance every {k} steps"),
+                },
             );
+            let n_shards = opts.shards;
             let mut rt = ServeRuntime::new(&cost, &cluster, opts);
             let report = rt.run_trace(&trace);
 
@@ -345,6 +360,30 @@ fn main() -> Result<()> {
                     .mean_time_to_admission()
                     .map_or("-".into(), |d| format!("{d:.1}s")),
             );
+            println!(
+                "replan search: {} slices, {} plans enumerated across {} windows",
+                report.replan_slices_total,
+                report.plans_enumerated_total,
+                report.replan_windows,
+            );
+            if n_shards > 1 {
+                let ttas: Vec<String> = report
+                    .tta_by_tier()
+                    .into_iter()
+                    .map(|(t, d)| format!("tier{t}={d:.1}s"))
+                    .collect();
+                println!(
+                    "admission: {} queued, {} preemptions, {} rebalances | \
+                     tta by tier [{}] | Jain fairness {}",
+                    report.queued_admissions,
+                    report.preemptions,
+                    report.rebalances,
+                    ttas.join(" "),
+                    report
+                        .jain_fairness()
+                        .map_or("-".into(), |j| format!("{j:.3}")),
+                );
+            }
             if report.identity_checks > 0 {
                 println!(
                     "anytime identity: {}/{} completed replans plan-identical to cold{}",

@@ -31,7 +31,7 @@ pub fn solve_length_based(p: &DispatchProblem) -> Option<Assignment> {
                 let cb = b.costs[j] / b.replicas as f64;
                 ranges[*ia]
                     .cmp(&ranges[*ib])
-                    .then(ca.partial_cmp(&cb).unwrap())
+                    .then(ca.total_cmp(&cb))
             })?
             .0;
         d[best][j] = bj;
@@ -71,9 +71,7 @@ pub fn solve_fractional(p: &DispatchProblem) -> Option<(f64, Vec<Vec<f64>>)> {
                 .filter(|&i| p.groups[i].supports(j))
                 .collect();
             order.sort_by(|&a, &b| {
-                p.groups[a].costs[j]
-                    .partial_cmp(&p.groups[b].costs[j])
-                    .unwrap()
+                p.groups[a].costs[j].total_cmp(&p.groups[b].costs[j])
             });
             for i in order {
                 if need <= 1e-12 {
@@ -157,7 +155,7 @@ pub fn solve_balanced(p: &DispatchProblem) -> Option<Assignment> {
         }
         let mut short = bj.saturating_sub(floors);
         // Hand the leftovers to the largest fractional parts (cheapest on tie).
-        rem.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+        rem.sort_by(|a, b| b.0.total_cmp(&a.0));
         let mut k = 0;
         while short > 0 {
             let (_, i) = rem[k % rem.len()];
@@ -204,11 +202,11 @@ fn local_search(p: &DispatchProblem, d: &mut [Vec<u64>], budget: usize) {
     };
     let mut t = times(d);
     for _ in 0..budget {
-        let (crit, &crit_t) = t
-            .iter()
-            .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-            .unwrap();
+        let Some((crit, &crit_t)) =
+            t.iter().enumerate().max_by(|a, b| a.1.total_cmp(b.1))
+        else {
+            break; // no groups: nothing to improve
+        };
         // Moves of k ∈ {1, 2, 4, ...} sequences — bulk moves escape the
         // plateaus where shifting one sequence cannot reduce a replica's
         // ceiling (counts below the group's replica count).

@@ -421,6 +421,63 @@ pub fn enumerate_plans(
     out
 }
 
+/// Deterministically slice `total` GPUs across planning shards: each shard
+/// `i` receives at least `mins[i]` GPUs (its feasibility floor — enough for
+/// the smallest config supporting its longest sequence), and the remaining
+/// capacity is split proportionally to `loads` by floor + largest-remainder
+/// rounding (remainder ties broken toward the lower shard index). Shards
+/// with non-positive load get only their floor; if *every* load is
+/// non-positive the spare capacity stays unassigned (slices still sum to
+/// ≤ `total`).
+///
+/// Returns `None` when the floors alone exceed `total` (the fleet cannot
+/// be partitioned feasibly) or on a `loads`/`mins` arity mismatch.
+pub fn capacity_slices(total: u32, loads: &[f64], mins: &[u32]) -> Option<Vec<u32>> {
+    if loads.len() != mins.len() {
+        return None;
+    }
+    let floor_sum: u64 = mins.iter().map(|&m| m as u64).sum();
+    if floor_sum > total as u64 {
+        return None;
+    }
+    let mut out: Vec<u32> = mins.to_vec();
+    let spare = total - floor_sum as u32;
+    // lint:allow(R5): fixed left-to-right sum in deterministic shard-index order.
+    let load_sum: f64 = loads.iter().filter(|l| l.is_finite() && **l > 0.0).sum();
+    if spare == 0 || load_sum <= 0.0 {
+        return Some(out);
+    }
+    // Floor of each proportional share, then hand leftovers to the largest
+    // fractional remainders (ties to the lower index — sort is stable).
+    let shares: Vec<f64> = loads
+        .iter()
+        .map(|&l| {
+            if l.is_finite() && l > 0.0 {
+                spare as f64 * l / load_sum
+            } else {
+                0.0
+            }
+        })
+        .collect();
+    let mut given = 0u32;
+    let mut rem: Vec<(usize, f64)> = Vec::with_capacity(shares.len());
+    for (i, &s) in shares.iter().enumerate() {
+        let fl = (s.floor() as u32).min(spare - given);
+        out[i] += fl;
+        given += fl;
+        rem.push((i, s - s.floor()));
+    }
+    rem.sort_by(|a, b| b.1.total_cmp(&a.1));
+    for (i, _) in rem {
+        if given >= spare {
+            break;
+        }
+        out[i] += 1;
+        given += 1;
+    }
+    Some(out)
+}
+
 /// Count plans without materializing them (for Table 5 style reporting).
 pub fn count_plans(configs: &[ParallelConfig], n_gpus: u32, min_gpus: u32) -> u64 {
     // DP over gpu budget: ways[g] with configs as item types (unbounded
@@ -659,6 +716,38 @@ mod tests {
             });
         }
         assert_eq!(seen, full);
+    }
+
+    #[test]
+    fn capacity_slices_respects_floors_and_total() {
+        let s = capacity_slices(16, &[1.0, 3.0], &[2, 2]).unwrap();
+        assert_eq!(s.iter().sum::<u32>(), 16);
+        assert!(s[0] >= 2 && s[1] >= 2);
+        // 12 spare split 1:3 → 3 and 9
+        assert_eq!(s, vec![5, 11]);
+        // floors alone exceeding the total is infeasible
+        assert!(capacity_slices(3, &[1.0, 1.0], &[2, 2]).is_none());
+        // arity mismatch is an error, not a panic
+        assert!(capacity_slices(8, &[1.0], &[1, 1]).is_none());
+    }
+
+    #[test]
+    fn capacity_slices_largest_remainder_ties_to_lower_index() {
+        // 5 spare over equal loads: floors 1 each, remainders equal →
+        // the extra GPU goes to shard 0
+        let s = capacity_slices(5, &[1.0, 1.0, 1.0], &[0, 0, 0]).unwrap();
+        assert_eq!(s, vec![2, 2, 1]);
+        // determinism: same inputs, same slices
+        assert_eq!(s, capacity_slices(5, &[1.0, 1.0, 1.0], &[0, 0, 0]).unwrap());
+    }
+
+    #[test]
+    fn capacity_slices_zero_load_gets_only_floor() {
+        let s = capacity_slices(10, &[0.0, 4.0], &[1, 1]).unwrap();
+        assert_eq!(s, vec![1, 9]);
+        // all-zero loads: spare stays unassigned, floors kept
+        let s = capacity_slices(10, &[0.0, 0.0], &[1, 2]).unwrap();
+        assert_eq!(s, vec![1, 2]);
     }
 
     #[test]

@@ -87,6 +87,63 @@ impl Table {
     }
 }
 
+/// Outcome of gating a bench's JSON output against a checked-in baseline.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum BaselineGate {
+    /// The baseline held the `"bless": true` sentinel and was overwritten
+    /// with this run's output — how the first run on a new host locks in
+    /// real numbers from a toolchain-less commit.
+    Blessed,
+    /// Every deterministic (non-host-dependent) line matched; carries the
+    /// number of lines compared.
+    Ok(usize),
+    /// Deterministic lines drifted; carries `(want, got)` pairs of the
+    /// differing lines.
+    Drift(Vec<(String, String)>),
+    /// The baseline file could not be read.
+    Unreadable(String),
+    /// Blessing the baseline failed to write.
+    WriteFailed(String),
+}
+
+/// Compare a bench's JSON output line-by-line against the baseline at
+/// `path`, skipping lines `host_dependent` marks (wall-clocks and other
+/// host-speed values), so the deterministic metrics are what's locked. A
+/// baseline containing a `"bless": true` line is rewritten with `current`
+/// instead of compared. Pure apart from the file IO: no printing, no
+/// exiting — each bench renders the outcome (and exits nonzero on
+/// [`BaselineGate::Drift`]) itself.
+pub fn gate_against_baseline(
+    path: &str,
+    current: &str,
+    host_dependent: &dyn Fn(&str) -> bool,
+) -> BaselineGate {
+    let baseline = match std::fs::read_to_string(path) {
+        Ok(s) => s,
+        Err(e) => return BaselineGate::Unreadable(e.to_string()),
+    };
+    if baseline.lines().any(|l| l.contains("\"bless\": true")) {
+        return match std::fs::write(path, current) {
+            Ok(()) => BaselineGate::Blessed,
+            Err(e) => BaselineGate::WriteFailed(e.to_string()),
+        };
+    }
+    let want: Vec<&str> = baseline.lines().filter(|l| !host_dependent(l)).collect();
+    let got: Vec<&str> = current.lines().filter(|l| !host_dependent(l)).collect();
+    if want == got {
+        return BaselineGate::Ok(got.len());
+    }
+    let mut diff = Vec::new();
+    for i in 0..want.len().max(got.len()) {
+        let w = want.get(i).copied().unwrap_or("<missing>");
+        let g = got.get(i).copied().unwrap_or("<missing>");
+        if w != g {
+            diff.push((w.to_string(), g.to_string()));
+        }
+    }
+    BaselineGate::Drift(diff)
+}
+
 /// Format seconds adaptively (ns → s).
 pub fn fmt_secs(s: f64) -> String {
     if s < 1e-6 {
@@ -139,5 +196,40 @@ mod tests {
     fn table_rejects_ragged_rows() {
         let mut t = Table::new(&["a", "b"]);
         t.row(&["only-one".to_string()]);
+    }
+
+    #[test]
+    fn baseline_gate_blesses_compares_and_diffs() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("lobra_gate_{}.json", std::process::id()));
+        let path = path.to_str().expect("utf8 temp path");
+        let skip_wall = |l: &str| l.contains("wall");
+
+        // unreadable: the file does not exist yet
+        assert!(matches!(
+            gate_against_baseline(path, "x", &skip_wall),
+            BaselineGate::Unreadable(_)
+        ));
+
+        // bless: sentinel is replaced by the current run verbatim
+        std::fs::write(path, "{\n  \"bless\": true\n}\n").unwrap();
+        let run1 = "{\n  \"a\": 1,\n  \"wall\": 0.5\n}\n";
+        assert_eq!(gate_against_baseline(path, run1, &skip_wall), BaselineGate::Blessed);
+        assert_eq!(std::fs::read_to_string(path).unwrap(), run1);
+
+        // identical deterministic lines pass even when the wall drifts
+        let run2 = "{\n  \"a\": 1,\n  \"wall\": 9.9\n}\n";
+        assert_eq!(gate_against_baseline(path, run2, &skip_wall), BaselineGate::Ok(3));
+
+        // a deterministic drift is reported as (want, got) pairs
+        let run3 = "{\n  \"a\": 2,\n  \"wall\": 0.5\n}\n";
+        match gate_against_baseline(path, run3, &skip_wall) {
+            BaselineGate::Drift(d) => {
+                assert_eq!(d.len(), 1);
+                assert!(d[0].0.contains("\"a\": 1") && d[0].1.contains("\"a\": 2"));
+            }
+            other => panic!("expected drift, got {other:?}"),
+        }
+        let _ = std::fs::remove_file(path);
     }
 }
