@@ -11,7 +11,7 @@ use lobra::cluster::ClusterSpec;
 use lobra::config::ModelDesc;
 use lobra::coordinator::planner::PlannerOptions;
 use lobra::coordinator::scheduler::{Scheduler, SchedulerOptions};
-use lobra::coordinator::tasks::{ReplanOutcome, TaskEvent, TaskManager};
+use lobra::coordinator::tasks::{Event, Outcome, TaskManager};
 use lobra::costmodel::CostModel;
 use lobra::data::{DatasetProfile, LengthDistribution};
 use lobra::prelude::{TaskSet, TaskSpec};
@@ -43,7 +43,7 @@ fn main() {
 
     // Event 1: a summarization tenant with very long sequences arrives.
     println!("\n>> MeetingBank arrives (long sequences)");
-    let outcome = mgr.handle(TaskEvent::Arrive(TaskSpec::from_profile(
+    let outcome = mgr.handle(Event::Arrive(TaskSpec::from_profile(
         DatasetProfile::by_name("MeetingBank").unwrap(),
     )));
     report(&outcome, &mgr);
@@ -51,7 +51,7 @@ fn main() {
 
     // Event 2: a short-data tenant arrives; plan likely keeps shape.
     println!("\n>> small QA tenant arrives (short sequences)");
-    let outcome = mgr.handle(TaskEvent::Arrive(TaskSpec::new(
+    let outcome = mgr.handle(Event::Arrive(TaskSpec::new(
         "tiny-qa",
         64,
         LengthDistribution::fit(150.0, 3.0, 16, 1024),
@@ -61,21 +61,22 @@ fn main() {
 
     // Event 3: the long-sequence tenant finishes; capacity shifts back.
     println!("\n>> MeetingBank exits");
-    let outcome = mgr.handle(TaskEvent::Exit { name: "MeetingBank".into() });
+    let outcome = mgr.handle(Event::Exit { name: "MeetingBank".into() });
     report(&outcome, &mgr);
     simulate(&mgr, "after exit");
 
     println!("\ntotal redeployments: {}", mgr.redeploys);
 }
 
-fn report(outcome: &ReplanOutcome, mgr: &TaskManager) {
+fn report(outcome: &Outcome, mgr: &TaskManager) {
     match outcome {
-        ReplanOutcome::Unchanged => println!("  plan unchanged — training continues"),
-        ReplanOutcome::Redeployed { adjustment_seconds, adjustment } => println!(
+        Outcome::Unchanged => println!("  plan unchanged — training continues"),
+        Outcome::Redeployed { adjustment_seconds, adjustment } => println!(
             "  redeployed ({} replicas changed, ~{adjustment_seconds:.0}s adjustment)\n  new plan: [{}]",
             adjustment.changed_replicas,
             mgr.plan().unwrap().notation()
         ),
-        ReplanOutcome::Drained => println!("  drained"),
+        Outcome::Drained => println!("  drained"),
+        other => println!("  {other:?}"),
     }
 }

@@ -32,6 +32,17 @@
 //! replanning is the headline: its per-event cost stays flat as the fleet
 //! grows, where the global search's grows with every live tenant.
 //!
+//! `LOBRA_BENCH_AVAIL_TRACE` appends the **availability scenario**: a
+//! cluster-churn trace (tenant events mixed with `leave`/`preempt`/`join`
+//! lines, grammar v2) replayed through the elastic runtime. `auto`
+//! generates a seeded trace with `gen_churn_trace_elastic`; any other
+//! value is read as a trace file and validated against the bench fleet.
+//! The JSON gains an `avail` block — training throughput across the
+//! degraded windows, GPU-seconds charged to interrupted steps, and the
+//! time-to-recover curve (seconds from each capacity loss back to a
+//! full-capacity plan adoption) — all sim-metered, so the block is
+//! baseline-gated like the rest of the file.
+//!
 //! ```bash
 //! cargo bench --bench serve_churn
 //! LOBRA_BENCH_GPUS=32 LOBRA_BENCH_BUDGET=60 cargo bench --bench serve_churn
@@ -39,6 +50,7 @@
 //! LOBRA_BENCH_PLANNER_THREADS=2 LOBRA_BENCH_METER=wall \
 //!     cargo bench --bench serve_churn                    # overlapped async plan
 //! LOBRA_BENCH_FLEET=10,100,1000 cargo bench --bench serve_churn  # fleet scaling
+//! LOBRA_BENCH_AVAIL_TRACE=auto cargo bench --bench serve_churn   # elasticity
 //! ```
 
 
@@ -46,10 +58,11 @@
 // `print_stdout` in library code).
 #![allow(clippy::print_stdout)]
 
-use lobra::cluster::ClusterSpec;
+use lobra::cluster::{ClusterSpec, VirtualCluster};
 use lobra::config::ModelDesc;
 use lobra::coordinator::runtime::{
-    default_churn_trace, gen_churn_trace, BudgetMeter, ServeOptions, ServeRuntime,
+    default_churn_trace, gen_churn_trace, gen_churn_trace_elastic, parse_trace_for,
+    BudgetMeter, ServeOptions, ServeRuntime,
 };
 use lobra::costmodel::CostModel;
 use lobra::prelude::TaskSet;
@@ -165,6 +178,12 @@ fn main() {
         report.search_seconds_unoverlapped,
     );
 
+    // --- availability scenario (opt-in): cluster churn elasticity ---
+    let avail_json = match benv::var("LOBRA_BENCH_AVAIL_TRACE") {
+        Some(spec) => avail_scenario(&model, gpus, spec),
+        None => String::new(),
+    };
+
     // --- fleet-scaling sweep (opt-in): replan search cost vs fleet size ---
     let fleet_json = match benv::var("LOBRA_BENCH_FLEET") {
         Some(spec) => {
@@ -204,7 +223,7 @@ fn main() {
          \"identity_failures\": {},\n  \"no_stop_the_world\": {no_stop_the_world},\n  \
          \"search_seconds_total\": {:.3},\n  \
          \"search_seconds_unoverlapped\": {:.3},\n  \
-         \"host_wall_seconds\": {wall:.3},\n  \"tenants\": [\n    {tenants_json}\n  ]{fleet_json}\n}}\n",
+         \"host_wall_seconds\": {wall:.3},\n  \"tenants\": [\n    {tenants_json}\n  ]{avail_json}{fleet_json}\n}}\n",
         trace.len(),
         report.sim_seconds,
         report.steps_total,
@@ -262,6 +281,119 @@ fn render_gate(path: &str, current: &str) {
             std::process::exit(1);
         }
     }
+}
+
+/// The availability scenario: replay a cluster-churn trace (tenant
+/// arrivals/exits mixed with node leaves, GPU-range preemptions, and
+/// restoring joins) through the elastic runtime and report the
+/// elasticity headline — throughput across the degraded windows,
+/// GPU-seconds charged to steps the preemption interrupted, and the
+/// time-to-recover curve. `spec` is either `auto` (seeded
+/// `gen_churn_trace_elastic` on the bench fleet) or a grammar-v2 trace
+/// file validated against that fleet. Sim-metered, so every emitted
+/// metric is host-independent and baseline-gated; only the wall line is
+/// skipped by the gate.
+fn avail_scenario(model: &ModelDesc, gpus: u32, spec: &str) -> String {
+    let cluster = ClusterSpec::a100_40g(gpus);
+    let fleet = VirtualCluster::homogeneous(cluster.clone());
+    let cost = CostModel::calibrated(model, &cluster);
+    let trace = if spec == "auto" {
+        gen_churn_trace_elastic(8, 17, &fleet, 0.5, 0.5)
+    } else {
+        let text = match std::fs::read_to_string(spec) {
+            Ok(t) => t,
+            Err(e) => {
+                eprintln!("ERROR: availability trace {spec} unreadable: {e}");
+                std::process::exit(1);
+            }
+        };
+        match parse_trace_for(&text, &fleet) {
+            Ok(t) => t,
+            Err(e) => {
+                eprintln!("ERROR: availability trace {spec}: {e}");
+                std::process::exit(1);
+            }
+        }
+    };
+    let cluster_events = trace.iter().filter(|e| e.event.is_cluster()).count();
+
+    let mut o = ServeOptions::default();
+    o.replan_budget = Some(30.0);
+    o.meter = BudgetMeter::SimPerPlan(1e-4);
+    o.slice_plans = 4096;
+    o.certify_identity = false;
+    o.tail_steps = 4;
+    o.planner.calibration_multiple = 10;
+    o.planner.eval_batches = 1;
+    o.planner.max_evaluated = 32;
+    o.planner.max_plans = 50_000;
+    let t0 = Stopwatch::start();
+    let report = ServeRuntime::new(&cost, &cluster, o).run_trace(&trace);
+    let wall = t0.elapsed_secs();
+
+    println!(
+        "\n== availability ({spec}): {} events ({cluster_events} cluster) on {gpus} \
+         GPUs ==\n",
+        trace.len(),
+    );
+    let throughput = if report.sim_seconds > 0.0 {
+        report.gpu_seconds_trained / report.sim_seconds
+    } else {
+        0.0
+    };
+    let mean_ttr = if report.recoveries.is_empty() {
+        None
+    } else {
+        // lint:allow(R5): fixed-order sum over the recovery episodes
+        Some(report.recoveries.iter().sum::<f64>() / report.recoveries.len() as f64)
+    };
+    let mut t = Table::new(&["metric", "value"]);
+    t.row(&["leaves / preempts / joins".into(),
+        format!("{} / {} / {}", report.leave_events, report.preempt_events,
+            report.join_events)]);
+    t.row(&["GPU-seconds trained".into(),
+        format!("{:.1}", report.gpu_seconds_trained)]);
+    t.row(&["GPU-seconds lost (interrupted steps)".into(),
+        format!("{:.1}", report.gpu_seconds_lost_preempt)]);
+    t.row(&["GPU-seconds lost (redeploys)".into(),
+        format!("{:.1}", report.gpu_seconds_lost_redeploy)]);
+    t.row(&["throughput (GPU-s trained / sim-s)".into(),
+        format!("{throughput:.3}")]);
+    t.row(&["recoveries".into(),
+        format!("{:?}", report.recoveries.iter().map(|r| (r * 10.0).round() / 10.0)
+            .collect::<Vec<_>>())]);
+    t.row(&["mean time-to-recover".into(),
+        mean_ttr.map_or("-".into(), |m| format!("{m:.1}s"))]);
+    t.print();
+
+    let recoveries = report
+        .recoveries
+        .iter()
+        .map(|r| format!("{r:.3}"))
+        .collect::<Vec<_>>()
+        .join(", ");
+    format!(
+        ",\n  \"avail\": {{\n    \"source\": \"{spec}\",\n    \"events\": {},\n    \
+         \"cluster_events\": {cluster_events},\n    \"leaves\": {},\n    \
+         \"preempts\": {},\n    \"joins\": {},\n    \"steps_total\": {},\n    \
+         \"redeploys\": {},\n    \"gpu_seconds_trained\": {:.3},\n    \
+         \"gpu_seconds_lost_preempt\": {:.3},\n    \
+         \"gpu_seconds_lost_redeploy\": {:.3},\n    \
+         \"throughput_gpu_seconds_per_sim_second\": {throughput:.4},\n    \
+         \"recoveries_seconds\": [{recoveries}],\n    \
+         \"mean_time_to_recover_seconds\": {},\n    \
+         \"avail_host_wall_seconds\": {wall:.3}\n  }}",
+        trace.len(),
+        report.leave_events,
+        report.preempt_events,
+        report.join_events,
+        report.steps_total,
+        report.redeploys,
+        report.gpu_seconds_trained,
+        report.gpu_seconds_lost_preempt,
+        report.gpu_seconds_lost_redeploy,
+        mean_ttr.map_or("null".into(), |m| format!("{m:.3}")),
+    )
 }
 
 /// The fleet-scaling sweep: serve `gen_churn_trace(fleet, 17)` once

@@ -47,10 +47,10 @@ impl CommModel {
     /// Adjacent PP stages are placed on the same server when the stage's TP
     /// group leaves room, otherwise they cross servers.
     pub fn pp_p2p(&self, bytes: f64, tp: u32) -> f64 {
-        let bw = if tp >= self.cluster.gpus_per_server {
-            self.cluster.inter_bw_gbs
+        let bw = if tp >= self.cluster.device.gpus_per_server {
+            self.cluster.device.inter_bw_gbs
         } else {
-            self.cluster.intra_bw_gbs
+            self.cluster.device.intra_bw_gbs
         };
         COLLECTIVE_LATENCY + bytes / (bw * 1e9)
     }
@@ -59,7 +59,7 @@ impl CommModel {
     /// (LoRA-only gradients in LobRA — small but synchronized every step).
     pub fn dp_allreduce(&self, bytes: f64, n_replicas: u32) -> f64 {
         // Heterogeneous replicas generally live on different servers.
-        Self::ring_allreduce(bytes, n_replicas, self.cluster.inter_bw_gbs)
+        Self::ring_allreduce(bytes, n_replicas, self.cluster.device.inter_bw_gbs)
     }
 }
 

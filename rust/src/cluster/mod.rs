@@ -7,6 +7,12 @@
 //! must reproduce faithfully is that model's inputs: GPU memory capacity,
 //! dense-matmul rate, and intra-/inter-server bandwidth. See
 //! DESIGN.md#hardware-adaptation.
+//!
+//! The device-level inputs live in [`DeviceProfile`]; a [`ClusterSpec`] is a
+//! sized pool of one device type, and a [`VirtualCluster`] composes pools of
+//! *different* device types into one elastic fleet with a global server/GPU
+//! numbering ([`FleetAvailability`] tracks which of those GPUs are currently
+//! up under join/leave/preempt churn).
 
 mod comm;
 mod sim;
@@ -14,13 +20,16 @@ mod sim;
 pub use comm::CommModel;
 pub use sim::{GpuLedger, ReplicaSim};
 
+use std::collections::BTreeSet;
 
-
-/// Static description of a GPU cluster.
+/// Static description of one GPU generation: the per-device numbers the cost
+/// model consumes. Pools of different `DeviceProfile`s can share one
+/// [`VirtualCluster`]; cost tables key on these fields (via the world
+/// fingerprint), so each device type gets its own tables.
 #[derive(Debug, Clone, PartialEq)]
-pub struct ClusterSpec {
+pub struct DeviceProfile {
+    /// Device generation name (part of the cost-table world key).
     pub name: String,
-    pub n_gpus: u32,
     pub gpus_per_server: u32,
     /// Per-GPU memory in GiB.
     pub gpu_mem_gib: f64,
@@ -34,12 +43,11 @@ pub struct ClusterSpec {
     pub inter_bw_gbs: f64,
 }
 
-impl ClusterSpec {
+impl DeviceProfile {
     /// Paper testbed 1: servers of 8×A100-40G, 600 GB/s NVLink, 100 GB/s IB.
-    pub fn a100_40g(n_gpus: u32) -> Self {
+    pub fn a100_40g() -> Self {
         Self {
-            name: format!("{n_gpus}xA100-40G"),
-            n_gpus,
+            name: "A100-40G".to_string(),
             gpus_per_server: 8,
             gpu_mem_gib: 40.0,
             tflops: 312.0,
@@ -50,10 +58,9 @@ impl ClusterSpec {
     }
 
     /// Paper testbed 2: servers of 8×A800-80G, 400 GB/s NVLink, 200 GB/s IB.
-    pub fn a800_80g(n_gpus: u32) -> Self {
+    pub fn a800_80g() -> Self {
         Self {
-            name: format!("{n_gpus}xA800-80G"),
-            n_gpus,
+            name: "A800-80G".to_string(),
             gpus_per_server: 8,
             gpu_mem_gib: 80.0,
             tflops: 312.0,
@@ -63,13 +70,27 @@ impl ClusterSpec {
         }
     }
 
-    /// The local CPU "cluster" used by the real PJRT e2e run: bandwidth and
-    /// rate numbers are only used for simulated-clock accounting.
-    pub fn local_cpu(n_virtual: u32) -> Self {
+    /// Hopper generation: 8×H100-80G SXM, 900 GB/s NVLink, 200 GB/s IB.
+    /// Slightly lower MFU than Ampere at these batch shapes (the dense rate
+    /// outruns memory bandwidth), still ~3× effective FLOPs per GPU.
+    pub fn h100_80g() -> Self {
         Self {
-            name: format!("{n_virtual}xCPU-virtual"),
-            n_gpus: n_virtual,
-            gpus_per_server: n_virtual.max(1),
+            name: "H100-80G".to_string(),
+            gpus_per_server: 8,
+            gpu_mem_gib: 80.0,
+            tflops: 989.0,
+            mfu: 0.40,
+            intra_bw_gbs: 900.0,
+            inter_bw_gbs: 200.0,
+        }
+    }
+
+    /// The local CPU "device" used by the real PJRT e2e run: bandwidth and
+    /// rate numbers are only used for simulated-clock accounting.
+    pub fn local_cpu() -> Self {
+        Self {
+            name: "CPU-virtual".to_string(),
+            gpus_per_server: 1,
             gpu_mem_gib: 16.0,
             tflops: 0.1,
             mfu: 0.5,
@@ -78,19 +99,78 @@ impl ClusterSpec {
         }
     }
 
-    pub fn n_servers(&self) -> u32 {
-        self.n_gpus.div_ceil(self.gpus_per_server)
+    /// Device preset by CLI name. Accepts the short generation names used by
+    /// `--cluster` ("a100", "a800", "h100", "local"/"cpu") plus the full
+    /// preset spellings.
+    pub fn by_name(name: &str) -> Option<Self> {
+        match name.to_ascii_lowercase().as_str() {
+            "a100" | "a100-40g" | "a100_40g" => Some(Self::a100_40g()),
+            "a800" | "a800-80g" | "a800_80g" => Some(Self::a800_80g()),
+            "h100" | "h100-80g" | "h100_80g" => Some(Self::h100_80g()),
+            "local" | "cpu" | "cpu-virtual" => Some(Self::local_cpu()),
+            _ => None,
+        }
     }
 
     /// Effective dense rate per GPU (FLOP/s).
     pub fn effective_flops(&self) -> f64 {
         self.tflops * 1e12 * self.mfu
     }
+}
+
+/// A sized pool of one device type. Historically this struct carried the
+/// device numbers inline; they now live in [`DeviceProfile`] so one
+/// [`VirtualCluster`] can mix generations, and the old constructors are thin
+/// shims over the presets.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterSpec {
+    pub name: String,
+    pub n_gpus: u32,
+    pub device: DeviceProfile,
+}
+
+impl ClusterSpec {
+    /// A pool of `n_gpus` of the given device.
+    pub fn of(device: DeviceProfile, n_gpus: u32) -> Self {
+        Self { name: format!("{n_gpus}x{}", device.name), n_gpus, device }
+    }
+
+    /// Paper testbed 1: servers of 8×A100-40G, 600 GB/s NVLink, 100 GB/s IB.
+    pub fn a100_40g(n_gpus: u32) -> Self {
+        Self::of(DeviceProfile::a100_40g(), n_gpus)
+    }
+
+    /// Paper testbed 2: servers of 8×A800-80G, 400 GB/s NVLink, 200 GB/s IB.
+    pub fn a800_80g(n_gpus: u32) -> Self {
+        Self::of(DeviceProfile::a800_80g(), n_gpus)
+    }
+
+    /// Hopper pool (mixed-generation fleets; see `VirtualCluster::parse`).
+    pub fn h100_80g(n_gpus: u32) -> Self {
+        Self::of(DeviceProfile::h100_80g(), n_gpus)
+    }
+
+    /// The local CPU "cluster" used by the real PJRT e2e run: bandwidth and
+    /// rate numbers are only used for simulated-clock accounting.
+    pub fn local_cpu(n_virtual: u32) -> Self {
+        let mut device = DeviceProfile::local_cpu();
+        device.gpus_per_server = n_virtual.max(1);
+        Self { name: format!("{n_virtual}xCPU-virtual"), n_gpus: n_virtual, device }
+    }
+
+    pub fn n_servers(&self) -> u32 {
+        self.n_gpus.div_ceil(self.device.gpus_per_server)
+    }
+
+    /// Effective dense rate per GPU (FLOP/s).
+    pub fn effective_flops(&self) -> f64 {
+        self.device.effective_flops()
+    }
 
     /// Does a replica of `n` GPUs with TP degree `tp` span servers with its
     /// tensor-parallel group?
     pub fn tp_spans_servers(&self, tp: u32) -> bool {
-        tp > self.gpus_per_server
+        tp > self.device.gpus_per_server
     }
 
     /// Bandwidth seen by a TP group of the given degree.
@@ -104,10 +184,243 @@ impl ClusterSpec {
     pub fn tp_bandwidth(&self, tp: u32) -> f64 {
         const CROSS_SERVER_TP_PENALTY: f64 = 2.0;
         if self.tp_spans_servers(tp) {
-            self.inter_bw_gbs / CROSS_SERVER_TP_PENALTY
+            self.device.inter_bw_gbs / CROSS_SERVER_TP_PENALTY
         } else {
-            self.intra_bw_gbs
+            self.device.intra_bw_gbs
         }
+    }
+}
+
+/// A fleet of device pools with a single global server and GPU numbering:
+/// pool 0's servers come first, then pool 1's, and a server's GPUs are
+/// contiguous. Cluster churn events (`join`/`leave`/`preempt`) address this
+/// global numbering.
+#[derive(Debug, Clone, PartialEq)]
+pub struct VirtualCluster {
+    pub name: String,
+    pub pools: Vec<ClusterSpec>,
+}
+
+impl VirtualCluster {
+    pub fn homogeneous(pool: ClusterSpec) -> Self {
+        Self { name: pool.name.clone(), pools: vec![pool] }
+    }
+
+    pub fn mixed(pools: Vec<ClusterSpec>) -> Self {
+        let name = pools
+            .iter()
+            .map(|p| p.name.as_str())
+            .collect::<Vec<_>>()
+            .join("+");
+        Self { name, pools }
+    }
+
+    /// Parse a `--cluster` pool spec: `+`-separated `device[:count]`
+    /// segments, e.g. `a100:16+h100:8`. A bare device name (legacy single
+    /// pool form, `a100`) takes `default_gpus` as its size; segments of a
+    /// mixed spec must size themselves explicitly.
+    pub fn parse(spec: &str, default_gpus: u32) -> Result<Self, String> {
+        let segments: Vec<&str> = spec.split('+').collect();
+        let mut pools = Vec::new();
+        for seg in &segments {
+            let (dev_name, count) = match seg.split_once(':') {
+                Some((d, c)) => {
+                    let n: u32 = c.parse().map_err(|_| {
+                        format!("bad pool size in --cluster segment {seg:?}")
+                    })?;
+                    (d, n)
+                }
+                None if segments.len() == 1 => (*seg, default_gpus),
+                None => {
+                    return Err(format!(
+                        "mixed --cluster segment {seg:?} needs an explicit \
+                         size (device:count, e.g. h100:8)"
+                    ))
+                }
+            };
+            let device = DeviceProfile::by_name(dev_name).ok_or_else(|| {
+                format!(
+                    "unknown device {dev_name:?} in --cluster (known: a100, \
+                     a800, h100, local)"
+                )
+            })?;
+            if count == 0 {
+                return Err(format!("empty pool in --cluster segment {seg:?}"));
+            }
+            pools.push(if device.name == "CPU-virtual" {
+                ClusterSpec::local_cpu(count)
+            } else {
+                ClusterSpec::of(device, count)
+            });
+        }
+        if pools.is_empty() {
+            return Err("empty --cluster spec".to_string());
+        }
+        Ok(if pools.len() == 1 {
+            Self::homogeneous(pools.remove(0))
+        } else {
+            Self::mixed(pools)
+        })
+    }
+
+    pub fn is_mixed(&self) -> bool {
+        self.pools.len() > 1
+    }
+
+    pub fn total_gpus(&self) -> u32 {
+        self.pools.iter().map(|p| p.n_gpus).sum()
+    }
+
+    pub fn n_servers(&self) -> u32 {
+        self.pools.iter().map(|p| p.n_servers()).sum()
+    }
+
+    /// Map a global server id to `(pool index, server-within-pool)`.
+    pub fn pool_of_server(&self, server: u32) -> Option<(usize, u32)> {
+        let mut base = 0;
+        for (i, p) in self.pools.iter().enumerate() {
+            let n = p.n_servers();
+            if server < base + n {
+                return Some((i, server - base));
+            }
+            base += n;
+        }
+        None
+    }
+
+    /// Global `[start, end)` GPU-id span of a global server id. The last
+    /// server of a ragged pool (n_gpus not a multiple of gpus_per_server)
+    /// holds the remainder.
+    pub fn server_gpu_span(&self, server: u32) -> Option<(u32, u32)> {
+        let (pool, local) = self.pool_of_server(server)?;
+        let pool_base: u32 = self.pools[..pool].iter().map(|p| p.n_gpus).sum();
+        let p = &self.pools[pool];
+        let start = pool_base + local * p.device.gpus_per_server;
+        let end = (start + p.device.gpus_per_server).min(pool_base + p.n_gpus);
+        Some((start, end))
+    }
+
+    /// Map a global GPU id to its pool index.
+    pub fn pool_of_gpu(&self, gpu: u32) -> Option<usize> {
+        let mut base = 0;
+        for (i, p) in self.pools.iter().enumerate() {
+            if gpu < base + p.n_gpus {
+                return Some(i);
+            }
+            base += p.n_gpus;
+        }
+        None
+    }
+}
+
+/// Which GPUs of a [`VirtualCluster`] are currently up. Join/leave/preempt
+/// events mutate this; the serving runtime turns the per-pool available
+/// counts into planner capacity budgets. All ids are global.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetAvailability {
+    /// Globally-numbered GPUs currently down.
+    down: BTreeSet<u32>,
+    /// Per-pool pool-GPU counts (cached geometry).
+    pool_sizes: Vec<u32>,
+}
+
+impl FleetAvailability {
+    /// Full fleet: everything up.
+    pub fn full(fleet: &VirtualCluster) -> Self {
+        Self {
+            down: BTreeSet::new(),
+            pool_sizes: fleet.pools.iter().map(|p| p.n_gpus).collect(),
+        }
+    }
+
+    /// A whole server leaves (spot reclaim, hardware failure). Errors on an
+    /// unknown server id and on a server that is already fully down.
+    pub fn node_leave(
+        &mut self,
+        fleet: &VirtualCluster,
+        server: u32,
+    ) -> Result<u32, String> {
+        let (start, end) = fleet
+            .server_gpu_span(server)
+            .ok_or_else(|| format!("leave of unknown server {server}"))?;
+        let newly: Vec<u32> =
+            (start..end).filter(|g| !self.down.contains(g)).collect();
+        if newly.is_empty() {
+            return Err(format!("leave of already-down server {server}"));
+        }
+        self.down.extend(newly.iter().copied());
+        Ok(newly.len() as u32)
+    }
+
+    /// A server (re)joins: every down GPU it hosts comes back, whether it
+    /// went down via `leave` or via a `preempt` range. Errors on an unknown
+    /// server id and on a server with nothing down.
+    pub fn node_join(
+        &mut self,
+        fleet: &VirtualCluster,
+        server: u32,
+    ) -> Result<u32, String> {
+        let (start, end) = fleet
+            .server_gpu_span(server)
+            .ok_or_else(|| format!("join of unknown server {server}"))?;
+        let restored: Vec<u32> =
+            (start..end).filter(|g| self.down.contains(g)).collect();
+        if restored.is_empty() {
+            return Err(format!("join of already-up server {server}"));
+        }
+        for g in &restored {
+            self.down.remove(g);
+        }
+        Ok(restored.len() as u32)
+    }
+
+    /// A `[start, end)` global GPU range is preempted. Errors on an empty or
+    /// inverted range, a range past the fleet, and on overlap with GPUs that
+    /// are already down.
+    pub fn preempt(
+        &mut self,
+        fleet: &VirtualCluster,
+        gpu_range: (u32, u32),
+    ) -> Result<u32, String> {
+        let (start, end) = gpu_range;
+        if start >= end {
+            return Err(format!("empty preempt range [{start}, {end})"));
+        }
+        if end > fleet.total_gpus() {
+            return Err(format!(
+                "preempt range [{start}, {end}) exceeds fleet of {} GPUs",
+                fleet.total_gpus()
+            ));
+        }
+        if let Some(g) = (start..end).find(|g| self.down.contains(g)) {
+            return Err(format!(
+                "preempt range [{start}, {end}) overlaps already-down GPU {g}"
+            ));
+        }
+        self.down.extend(start..end);
+        Ok(end - start)
+    }
+
+    /// Available GPUs in one pool.
+    pub fn available_in_pool(&self, pool: usize) -> u32 {
+        let base: u32 = self.pool_sizes[..pool].iter().sum();
+        let size = self.pool_sizes[pool];
+        let down = self.down.range(base..base + size).count() as u32;
+        size - down
+    }
+
+    /// Available GPUs per pool.
+    pub fn available(&self) -> Vec<u32> {
+        (0..self.pool_sizes.len()).map(|p| self.available_in_pool(p)).collect()
+    }
+
+    pub fn total_available(&self) -> u32 {
+        let total: u32 = self.pool_sizes.iter().sum();
+        total - self.down.len() as u32
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.down.is_empty()
     }
 }
 
@@ -119,7 +432,7 @@ mod tests {
     fn presets() {
         let c = ClusterSpec::a100_40g(16);
         assert_eq!(c.n_servers(), 2);
-        assert_eq!(c.gpu_mem_gib, 40.0);
+        assert_eq!(c.device.gpu_mem_gib, 40.0);
         let c2 = ClusterSpec::a800_80g(64);
         assert_eq!(c2.n_servers(), 8);
     }
@@ -130,5 +443,110 @@ mod tests {
         assert!(!c.tp_spans_servers(8));
         assert!(c.tp_spans_servers(16));
         assert!(c.tp_bandwidth(16) < c.tp_bandwidth(8));
+    }
+
+    #[test]
+    fn device_by_name_covers_presets() {
+        for (alias, want) in [
+            ("a100", "A100-40G"),
+            ("A800", "A800-80G"),
+            ("h100", "H100-80G"),
+            ("local", "CPU-virtual"),
+        ] {
+            let d = DeviceProfile::by_name(alias).expect(alias);
+            assert_eq!(d.name, want);
+        }
+        assert!(DeviceProfile::by_name("tpu").is_none());
+    }
+
+    #[test]
+    fn shim_constructors_match_profiles() {
+        assert_eq!(ClusterSpec::a100_40g(16).device, DeviceProfile::a100_40g());
+        assert_eq!(ClusterSpec::h100_80g(8).device, DeviceProfile::h100_80g());
+        // local_cpu packs all virtual devices into one server
+        let l = ClusterSpec::local_cpu(4);
+        assert_eq!(l.device.gpus_per_server, 4);
+        assert_eq!(l.n_servers(), 1);
+    }
+
+    #[test]
+    fn parse_single_and_mixed_pools() {
+        let single = VirtualCluster::parse("a100", 16).unwrap();
+        assert!(!single.is_mixed());
+        assert_eq!(single.total_gpus(), 16);
+        assert_eq!(single.pools[0], ClusterSpec::a100_40g(16));
+
+        let sized = VirtualCluster::parse("h100:8", 16).unwrap();
+        assert_eq!(sized.total_gpus(), 8);
+
+        let mixed = VirtualCluster::parse("a100:16+h100:8", 4).unwrap();
+        assert!(mixed.is_mixed());
+        assert_eq!(mixed.total_gpus(), 24);
+        assert_eq!(mixed.n_servers(), 3);
+        assert_eq!(mixed.name, "16xA100-40G+8xH100-80G");
+
+        assert!(VirtualCluster::parse("a100+h100:8", 16).is_err());
+        assert!(VirtualCluster::parse("tpu:8", 16).is_err());
+        assert!(VirtualCluster::parse("a100:0", 16).is_err());
+    }
+
+    #[test]
+    fn global_geometry() {
+        let fleet = VirtualCluster::parse("a100:16+h100:8", 16).unwrap();
+        // servers: 0,1 = a100 pool (gpus 0..8, 8..16), 2 = h100 (16..24)
+        assert_eq!(fleet.pool_of_server(0), Some((0, 0)));
+        assert_eq!(fleet.pool_of_server(2), Some((1, 0)));
+        assert_eq!(fleet.pool_of_server(3), None);
+        assert_eq!(fleet.server_gpu_span(1), Some((8, 16)));
+        assert_eq!(fleet.server_gpu_span(2), Some((16, 24)));
+        assert_eq!(fleet.pool_of_gpu(15), Some(0));
+        assert_eq!(fleet.pool_of_gpu(16), Some(1));
+        assert_eq!(fleet.pool_of_gpu(24), None);
+    }
+
+    #[test]
+    fn ragged_last_server_span() {
+        let fleet =
+            VirtualCluster::homogeneous(ClusterSpec::a100_40g(12));
+        assert_eq!(fleet.n_servers(), 2);
+        assert_eq!(fleet.server_gpu_span(1), Some((8, 12)));
+    }
+
+    #[test]
+    fn availability_churn_round_trip() {
+        let fleet = VirtualCluster::parse("a100:16+h100:8", 16).unwrap();
+        let mut avail = FleetAvailability::full(&fleet);
+        assert!(avail.is_full());
+        assert_eq!(avail.available(), vec![16, 8]);
+
+        // preempt half of server 1, then the rest leaves as a node failure
+        assert_eq!(avail.preempt(&fleet, (12, 16)), Ok(4));
+        assert_eq!(avail.available(), vec![12, 8]);
+        assert!(avail.preempt(&fleet, (14, 18)).is_err(), "overlap rejected");
+        assert_eq!(avail.node_leave(&fleet, 1), Ok(4));
+        assert_eq!(avail.available(), vec![8, 8]);
+        assert!(avail.node_leave(&fleet, 1).is_err(), "already fully down");
+        assert!(avail.node_leave(&fleet, 9).is_err(), "unknown server");
+
+        // one join restores both the preempted range and the left half
+        assert_eq!(avail.node_join(&fleet, 1), Ok(8));
+        assert!(avail.is_full());
+        assert!(avail.node_join(&fleet, 1).is_err(), "already up");
+
+        assert_eq!(avail.preempt(&fleet, (16, 24)), Ok(8));
+        assert_eq!(avail.available(), vec![16, 0]);
+        assert_eq!(avail.total_available(), 16);
+        assert_eq!(avail.node_join(&fleet, 2), Ok(8));
+        assert!(avail.is_full());
+    }
+
+    #[test]
+    fn preempt_bounds_checked() {
+        let fleet = VirtualCluster::homogeneous(ClusterSpec::a100_40g(8));
+        let mut avail = FleetAvailability::full(&fleet);
+        assert!(avail.preempt(&fleet, (4, 4)).is_err());
+        assert!(avail.preempt(&fleet, (6, 5)).is_err());
+        assert!(avail.preempt(&fleet, (4, 9)).is_err());
+        assert!(avail.preempt(&fleet, (4, 8)).is_ok());
     }
 }

@@ -47,7 +47,7 @@
 //! as an event loop in which replanning is a background activity:
 //!
 //! ```text
-//!        TaskEvent (Arrive/Exit)            training steps (sim clock)
+//!        Event (Arrive/Exit/churn)          training steps (sim clock)
 //!                 │                                   ▲
 //!        ┌────────▼──────────┐   step boundary  ┌─────┴────────────┐
 //!        │   TaskManager     │  plan swap, diff │  SimTrainLoop    │

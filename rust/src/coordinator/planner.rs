@@ -368,7 +368,7 @@ impl<'a> Planner<'a> {
     pub fn feasible_configs(&self, allow_cross_server_tp: bool) -> Vec<ParallelConfig> {
         ParallelConfig::enumerate(
             self.cluster.n_gpus,
-            self.cluster.gpus_per_server,
+            self.cluster.device.gpus_per_server,
             allow_cross_server_tp,
         )
         .into_iter()

@@ -8,7 +8,7 @@
 //! inverts the control flow:
 //!
 //! ```text
-//!   churn trace ──► TaskEvent ──► TaskManager::apply_event (non-blocking)
+//!   churn trace ──► Event ──► TaskManager::apply_event (non-blocking)
 //!                                          │ opens AnytimeReplan
 //!          ┌───────────────────────────────▼───────────────────────────┐
 //!          │  event loop (sim clock)                                   │
@@ -57,16 +57,32 @@
 //!   re-slices capacity across shards. [`ServeReport`] adds the fairness
 //!   evidence: per-tier time-to-admission and Jain's index over
 //!   per-tenant GPU-seconds.
+//! * **Cluster churn** rides the same event stream (trace grammar v2):
+//!   `NodeLeave` / `Preempt` shrink the fleet's [`FleetAvailability`], the
+//!   interrupted step's work on the vanished GPUs is charged as
+//!   [`ServeReport::gpu_seconds_lost_preempt`], and the surviving capacity
+//!   becomes planner budgets via [`ShardManager::apply_capacity`] — the
+//!   shrink replan is diff-charged like any other redeploy, and training
+//!   state survives it (same checkpoint-swap path; `Trainer::redeploy`
+//!   carries the optimizer trajectory on the real-training side).
+//!   `NodeJoin` restores capacity; a restore to *full* clears every GPU
+//!   budget, so the next adopted plan is certified bit-identical to the
+//!   never-shrunk cold plan and the degraded episode's time-to-recover
+//!   lands in [`ServeReport::recoveries`].
+//! * **Mixed-generation fleets** ([`ServeRuntime::new_fleet`]) run one
+//!   planning shard and one training loop per device pool (the fleet step
+//!   is the slowest pool's — LoRA gradients sync at the fleet step
+//!   boundary); cluster churn maps to per-pool capacity.
 
 
 use std::collections::{BTreeMap, BTreeSet};
 
-use crate::cluster::ClusterSpec;
+use crate::cluster::{ClusterSpec, FleetAvailability, VirtualCluster};
 use crate::config::{TaskSet, TaskSpec};
 use crate::coordinator::planner::{Planner, PlannerOptions};
 use crate::coordinator::service::PlannerService;
-use crate::coordinator::shard::{FleetOutcome, ShardManager};
-use crate::coordinator::tasks::{ReplanOutcome, TaskEvent};
+use crate::coordinator::shard::ShardManager;
+use crate::coordinator::tasks::{Event, Outcome};
 use crate::costmodel::CostModel;
 use crate::exec::SimTrainLoop;
 use crate::util::clock::Stopwatch;
@@ -158,11 +174,13 @@ impl Default for ServeOptions {
     }
 }
 
-/// One churn-trace record: at sim time `at`, a tenant arrives or exits.
+/// One churn-trace record: at sim time `at`, a tenant arrives or exits —
+/// or, since trace grammar v2, a cluster event lands (server join/leave,
+/// GPU-range preemption).
 #[derive(Debug, Clone)]
 pub struct TraceEvent {
     pub at: f64,
-    pub event: TaskEvent,
+    pub event: Event,
 }
 
 /// Per-tenant observed service metrics.
@@ -239,6 +257,20 @@ pub struct ServeReport {
     pub replan_slices_total: u64,
     /// Plans enumerated across all replan searches.
     pub plans_enumerated_total: u64,
+    /// `Preempt` events delivered (GPU-range reclaims).
+    pub preempt_events: u32,
+    /// `NodeLeave` events delivered (whole-server departures).
+    pub leave_events: u32,
+    /// `NodeJoin` events delivered (server restorations).
+    pub join_events: u32,
+    /// GPU-seconds of in-flight step work lost to capacity reclaims: each
+    /// vanished GPU forfeits up to one step time of progress (the step it
+    /// was interrupted in), on top of the redeploy charge the shrink pays.
+    pub gpu_seconds_lost_preempt: f64,
+    /// Time-to-recover of each degraded episode: seconds from the first
+    /// capacity-loss event until a plan is adopted with the fleet back at
+    /// full capacity (every GPU budget cleared).
+    pub recoveries: Vec<f64>,
 }
 
 impl ServeReport {
@@ -296,15 +328,32 @@ struct ReplanWindow {
     had_deployment: bool,
 }
 
+/// One device pool's training loop plus the tenant-record index of each
+/// of its deployed tasks (rebuilt at every swap). A homogeneous fleet has
+/// exactly one entry, driven by the composed plan — bit-identical to the
+/// pre-fleet single-loop runtime.
+struct PoolLoop<'a> {
+    pool: usize,
+    tl: SimTrainLoop<'a>,
+    /// Task index (in this pool's task set) → tenant-record index.
+    tenants: Vec<usize>,
+}
+
 /// The serving runtime: owns the non-blocking [`ShardManager`], the
-/// swappable training loop and the sim clock, and replays a churn trace.
+/// swappable per-pool training loops, the fleet availability ledger and
+/// the sim clock, and replays a churn trace.
 pub struct ServeRuntime<'a> {
     cost: &'a CostModel,
     cluster: &'a ClusterSpec,
+    /// Per-pool worlds; a homogeneous fleet has exactly one.
+    worlds: Vec<(&'a CostModel, &'a ClusterSpec)>,
+    /// Owned fleet geometry (server spans) for resolving cluster events.
+    fleet: VirtualCluster,
+    /// Which GPUs are currently up, under join/leave/preempt churn.
+    avail: FleetAvailability,
     mgr: ShardManager<'a>,
-    train: Option<SimTrainLoop<'a>>,
-    /// Deployed-task index → tenant index, rebuilt at each swap.
-    deployed_tenants: Vec<usize>,
+    /// One training loop per pool with a live plan (empty = idle fleet).
+    train: Vec<PoolLoop<'a>>,
     opts: ServeOptions,
     now: f64,
     window: Option<ReplanWindow>,
@@ -322,35 +371,78 @@ pub struct ServeRuntime<'a> {
     awaiting: BTreeSet<usize>,
     /// Training steps since the last shard-capacity rebalance.
     steps_since_rebalance: u64,
+    /// Sim time of the first capacity-loss event of the current degraded
+    /// episode (`None`: fleet at full capacity, or recovery already
+    /// recorded).
+    degraded_since: Option<f64>,
+    /// Duration of the most recent fleet training step — the exposure
+    /// bound for interrupted-step loss accounting.
+    last_step_time: f64,
 }
 
 impl<'a> ServeRuntime<'a> {
     pub fn new(cost: &'a CostModel, cluster: &'a ClusterSpec, opts: ServeOptions) -> Self {
-        let mut mgr = ShardManager::new(
-            cost,
-            cluster,
-            TaskSet::default(),
-            opts.planner.clone(),
-            opts.shards,
-        );
-        mgr.set_restart_seconds(opts.restart_seconds_per_replica);
-        let service = (opts.planner_threads > 0).then(|| {
-            PlannerService::spawn_sharded(
-                cost.clone(),
-                cluster.clone(),
+        Self::new_fleet(vec![(cost, cluster)], opts)
+    }
+
+    /// A serving runtime over a mixed-generation fleet: one planning shard
+    /// and one training loop per `(cost model, cluster pool)` world. With
+    /// a single world this is exactly [`ServeRuntime::new`]; with several,
+    /// `opts.shards` is ignored (device pools *are* the shards).
+    pub fn new_fleet(
+        worlds: Vec<(&'a CostModel, &'a ClusterSpec)>,
+        opts: ServeOptions,
+    ) -> Self {
+        assert!(!worlds.is_empty(), "ServeRuntime needs at least one world");
+        let (cost, cluster) = worlds[0];
+        let mixed = worlds.len() > 1;
+        let fleet = if mixed {
+            VirtualCluster::mixed(worlds.iter().map(|&(_, cl)| cl.clone()).collect())
+        } else {
+            VirtualCluster::homogeneous(cluster.clone())
+        };
+        let avail = FleetAvailability::full(&fleet);
+        let mut mgr = if mixed {
+            ShardManager::new_fleet(worlds.clone(), TaskSet::default(), opts.planner.clone())
+        } else {
+            ShardManager::new(
+                cost,
+                cluster,
+                TaskSet::default(),
                 opts.planner.clone(),
-                opts.meter,
-                opts.slice_plans,
-                opts.planner_threads,
                 opts.shards,
             )
+        };
+        mgr.set_restart_seconds(opts.restart_seconds_per_replica);
+        let service = (opts.planner_threads > 0).then(|| {
+            if mixed {
+                PlannerService::spawn_fleet(
+                    worlds.iter().map(|&(c, cl)| (c.clone(), cl.clone())).collect(),
+                    opts.planner.clone(),
+                    opts.meter,
+                    opts.slice_plans,
+                    opts.planner_threads,
+                )
+            } else {
+                PlannerService::spawn_sharded(
+                    cost.clone(),
+                    cluster.clone(),
+                    opts.planner.clone(),
+                    opts.meter,
+                    opts.slice_plans,
+                    opts.planner_threads,
+                    opts.shards,
+                )
+            }
         });
         Self {
             cost,
             cluster,
+            worlds,
+            fleet,
+            avail,
             mgr,
-            train: None,
-            deployed_tenants: Vec::new(),
+            train: Vec::new(),
             opts,
             now: 0.0,
             window: None,
@@ -361,6 +453,8 @@ impl<'a> ServeRuntime<'a> {
             submitted_epochs: BTreeMap::new(),
             awaiting: BTreeSet::new(),
             steps_since_rebalance: 0,
+            degraded_since: None,
+            last_step_time: 0.0,
         }
     }
 
@@ -420,7 +514,7 @@ impl<'a> ServeRuntime<'a> {
             // 3. steady state: train toward the next event, or finish
             if idx < events.len() {
                 let next_at = events[idx].at;
-                if self.train.is_some() {
+                if !self.train.is_empty() {
                     if !self.train_step(false) {
                         // deployment cannot serve its batch — skip ahead
                         self.now = next_at;
@@ -435,7 +529,7 @@ impl<'a> ServeRuntime<'a> {
         }
         // tail: let tenants admitted by the last swap register progress
         for _ in 0..self.opts.tail_steps {
-            if self.train.is_none() || !self.train_step(false) {
+            if self.train.is_empty() || !self.train_step(false) {
                 break;
             }
         }
@@ -448,18 +542,25 @@ impl<'a> ServeRuntime<'a> {
     }
 
     /// Deliver one trace event: update tenant records, apply it to the
-    /// fleet manager, and open / re-target the replan window.
+    /// fleet manager, and open / re-target the replan window. Cluster
+    /// events resolve against the fleet geometry into planner capacity
+    /// instead of going through the task managers.
     fn deliver(&mut self, ev: &TraceEvent) {
+        if ev.event.is_cluster() {
+            self.deliver_cluster(ev);
+            return;
+        }
         let (name, tier) = match &ev.event {
-            TaskEvent::Arrive(spec) => (spec.name.clone(), spec.meta.tier),
-            TaskEvent::Exit { name } => (name.clone(), 0),
+            Event::Arrive(spec) => (spec.name.clone(), spec.meta.tier),
+            Event::Exit { name } => (name.clone(), 0),
+            _ => return,
         };
-        let arriving = matches!(&ev.event, TaskEvent::Arrive(_));
+        let arriving = matches!(&ev.event, Event::Arrive(_));
         match self.mgr.apply_event(ev.event.clone()) {
-            FleetOutcome::Rejected => {
+            Outcome::Rejected => {
                 self.report.rejected_arrivals += 1;
             }
-            FleetOutcome::Unchanged => {
+            Outcome::Unchanged => {
                 // a queued tenant withdrawing is Unchanged but has a
                 // record; an unknown exit has none and this is a no-op
                 if !arriving {
@@ -473,7 +574,7 @@ impl<'a> ServeRuntime<'a> {
                     }
                 }
             }
-            FleetOutcome::Queued => {
+            Outcome::Queued => {
                 // held for capacity, not rejected: time-to-admission is
                 // measured from the *request*, so the record opens now and
                 // admission happens at a later queue drain
@@ -487,7 +588,7 @@ impl<'a> ServeRuntime<'a> {
                     gpu_seconds: 0.0,
                 });
             }
-            FleetOutcome::Drained => {
+            Outcome::Drained => {
                 // no tasks left: the deployment tears down immediately,
                 // and any in-flight service search has no successor target
                 if let Some(svc) = &mut self.service {
@@ -496,8 +597,7 @@ impl<'a> ServeRuntime<'a> {
                 self.window = None;
                 self.awaiting.clear();
                 self.submitted_epochs.clear();
-                self.train = None;
-                self.deployed_tenants.clear();
+                self.train.clear();
                 if let Some(t) = self
                     .tenants
                     .iter_mut()
@@ -507,7 +607,7 @@ impl<'a> ServeRuntime<'a> {
                     t.exited_at = Some(ev.at);
                 }
             }
-            FleetOutcome::Planning { opened } => {
+            Outcome::Planning { opened } => {
                 if arriving {
                     self.tenants.push(TenantRecord {
                         name,
@@ -531,6 +631,64 @@ impl<'a> ServeRuntime<'a> {
         }
     }
 
+    /// Deliver one cluster event: update the availability ledger, charge
+    /// interrupted-step losses for reclaimed GPUs, fold the surviving
+    /// capacity into the planners' GPU budgets
+    /// ([`ShardManager::apply_capacity`]) and open / re-target the replan
+    /// window for the shards whose budget changed. Training keeps stepping
+    /// under the stale plan on the survivors until the shrink (or grow)
+    /// plan is adopted at a step boundary — the same overlap model as
+    /// tenant churn.
+    fn deliver_cluster(&mut self, ev: &TraceEvent) {
+        let resolved = match &ev.event {
+            Event::NodeJoin { server } => {
+                self.report.join_events += 1;
+                self.avail.node_join(&self.fleet, *server)
+            }
+            Event::NodeLeave { server } => {
+                self.report.leave_events += 1;
+                self.avail.node_leave(&self.fleet, *server)
+            }
+            Event::Preempt { gpu_range } => {
+                self.report.preempt_events += 1;
+                self.avail.preempt(&self.fleet, *gpu_range)
+            }
+            _ => return,
+        };
+        // `parse_trace_for` rejects geometry violations up front; a
+        // violation surviving to delivery (hand-built trace) is dropped
+        // rather than corrupting the ledger
+        let Ok(gpus_changed) = resolved else {
+            return;
+        };
+        let lost = matches!(
+            &ev.event,
+            Event::NodeLeave { .. } | Event::Preempt { .. }
+        );
+        if lost {
+            // the reclaimed GPUs were partway through the in-flight step:
+            // that work is forfeit (checkpoints land at step boundaries).
+            // Exposure is bounded by one step — the event lands mid-step
+            // and the survivors checkpoint at its boundary.
+            let exposure = (self.now - ev.at).clamp(0.0, self.last_step_time);
+            self.report.gpu_seconds_lost_preempt += gpus_changed as f64 * exposure;
+            if self.degraded_since.is_none() {
+                self.degraded_since = Some(ev.at);
+            }
+        }
+        let caps = self.avail.available();
+        let opened = self.mgr.apply_capacity(&caps);
+        if !opened.is_empty() {
+            self.open_replan_window(&opened);
+        } else if self.avail.is_full() && !self.mgr.replan_pending() {
+            // capacity restored with nothing to replan (no live tasks):
+            // the episode still closes
+            if let Some(since) = self.degraded_since.take() {
+                self.report.recoveries.push(self.now - since);
+            }
+        }
+    }
+
     /// Open (or re-target) the replan window and, on the async path,
     /// submit each opened shard's search to the planner service. A
     /// superseding event KEEPS the open window's remaining budget —
@@ -547,7 +705,7 @@ impl<'a> ServeRuntime<'a> {
         self.window = Some(ReplanWindow {
             budget_left,
             steps_in_window: steps_so_far,
-            had_deployment: self.train.is_some(),
+            had_deployment: !self.train.is_empty(),
         });
         // async: hand each opened shard's search to the service —
         // submit_shard cancels only that shard's superseded token, so a
@@ -583,7 +741,7 @@ impl<'a> ServeRuntime<'a> {
     }
 
     fn replan_tick_sync(&mut self) {
-        let stepped = self.train.is_some() && self.train_step(true);
+        let stepped = self.train_step(true);
         let t0 = Stopwatch::start();
         let slice = self.mgr.pump_replan(self.opts.slice_plans);
         let wall = t0.elapsed_secs();
@@ -605,15 +763,17 @@ impl<'a> ServeRuntime<'a> {
             self.now += charge;
             self.report.search_seconds_unoverlapped += charge;
         }
-        let exhausted = {
-            let w = self.window.as_mut().expect("replan_tick without window");
-            match &mut w.budget_left {
+        let exhausted = match self.window.as_mut() {
+            // replan_tick is only entered with an open window; if it is
+            // somehow gone, close out rather than spinning
+            None => true,
+            Some(w) => match &mut w.budget_left {
                 None => false,
                 Some(left) => {
                     *left -= charge;
                     *left <= 0.0
                 }
-            }
+            },
         };
         if done || exhausted {
             if exhausted && !done {
@@ -632,7 +792,7 @@ impl<'a> ServeRuntime<'a> {
     /// adopted as it lands (the composed plan shrinks/grows per shard);
     /// the window closes when the last awaited shard publishes.
     fn replan_tick_async(&mut self) {
-        let stepped = self.train.is_some() && self.train_step(true);
+        let stepped = self.train_step(true);
         if self.awaiting.is_empty() {
             // nothing in flight to wait for (a drained shard's
             // recompose-only window): finish synchronously
@@ -717,15 +877,15 @@ impl<'a> ServeRuntime<'a> {
     /// redeploy training.
     fn adopt_outcome(
         &mut self,
-        outcome: ReplanOutcome,
+        outcome: Outcome,
         completed: bool,
         tasks_for_certify: &TaskSet,
     ) {
         match outcome {
-            ReplanOutcome::Unchanged => {
+            Outcome::Unchanged => {
                 self.report.plan_swaps_identical += 1;
             }
-            ReplanOutcome::Redeployed { adjustment_seconds, adjustment } => {
+            Outcome::Redeployed { adjustment_seconds, adjustment } => {
                 self.report.redeploys += 1;
                 self.report.gpu_seconds_lost_redeploy +=
                     adjustment.gpu_seconds(self.opts.restart_seconds_per_replica);
@@ -733,16 +893,28 @@ impl<'a> ServeRuntime<'a> {
                 // training is stalled for the adjustment
                 self.now += adjustment_seconds;
             }
-            ReplanOutcome::Drained | ReplanOutcome::Rejected => {}
+            _ => {}
+        }
+        // an adoption with the fleet back at full capacity closes the
+        // degraded episode: record its time-to-recover
+        if self.avail.is_full() && !self.mgr.replan_pending() {
+            if let Some(since) = self.degraded_since.take() {
+                self.report.recoveries.push(self.now - since);
+            }
         }
         // certify anytime identity on completed searches, before the new
-        // loop starts ticking. Only the global (single-shard, uncapped)
-        // path is cold-comparable: a capacity-sliced shard search answers
-        // a different (smaller) question than `Planner::plan`.
+        // loop starts ticking. Only the global (single-shard, uncapped,
+        // single-world, full-capacity) path is cold-comparable: a
+        // capacity-sliced or budget-clamped search answers a different
+        // (smaller) question than `Planner::plan`. After a full capacity
+        // restore the budgets are cleared, so this gate re-arms — that is
+        // the recovery-identity certificate.
         if completed
             && self.opts.certify_identity
             && self.opts.shards <= 1
+            && self.worlds.len() <= 1
             && self.opts.planner.gpu_budget.is_none()
+            && self.avail.is_full()
         {
             if let Some(deployed) = self.mgr.plan() {
                 self.report.identity_checks += 1;
@@ -761,62 +933,107 @@ impl<'a> ServeRuntime<'a> {
         self.redeploy_training();
     }
 
-    /// Rebuild the training loop for the (possibly new) plan and task set
-    /// and admit newly deployed tenants.
+    /// Rebuild the training loops for the (possibly new) plans and task
+    /// sets and admit newly deployed tenants. A homogeneous fleet drives
+    /// one loop with the composed plan (the pre-fleet behavior, bit for
+    /// bit); a mixed fleet drives one loop per pool with a live plan.
     fn redeploy_training(&mut self) {
         self.epoch += 1;
-        self.deployed_tenants.clear();
-        match self.mgr.plan() {
-            Some(plan) => {
-                let tasks = self.mgr.fleet_tasks();
-                for spec in &tasks.tasks {
-                    if let Some(i) = self
-                        .tenants
-                        .iter()
-                        .rposition(|t| t.name == spec.name && t.exited_at.is_none())
-                    {
-                        if self.tenants[i].admitted_at.is_none() {
-                            self.tenants[i].admitted_at = Some(self.now);
-                        }
-                        self.deployed_tenants.push(i);
-                    } else {
-                        // keep index parity with the task set even for
-                        // tasks without a record (shouldn't happen)
-                        self.deployed_tenants.push(usize::MAX);
+        let mut old = std::mem::take(&mut self.train);
+        let mixed = self.worlds.len() > 1;
+        let pools: Vec<usize> =
+            if mixed { (0..self.mgr.n_shards()).collect() } else { vec![0] };
+        for p in pools {
+            let planned = if mixed {
+                self.mgr.shard_plan(p).cloned().map(|pl| {
+                    (pl, self.mgr.shard_tasks(p).clone())
+                })
+            } else {
+                self.mgr.plan().cloned().map(|pl| (pl, self.mgr.fleet_tasks()))
+            };
+            let Some((plan, tasks)) = planned else {
+                continue;
+            };
+            let mut tenants = Vec::with_capacity(tasks.tasks.len());
+            for spec in &tasks.tasks {
+                if let Some(i) = self
+                    .tenants
+                    .iter()
+                    .rposition(|t| t.name == spec.name && t.exited_at.is_none())
+                {
+                    if self.tenants[i].admitted_at.is_none() {
+                        self.tenants[i].admitted_at = Some(self.now);
                     }
+                    tenants.push(i);
+                } else {
+                    // keep index parity with the task set even for
+                    // tasks without a record (shouldn't happen)
+                    tenants.push(usize::MAX);
                 }
-                let seed = self.opts.seed ^ self.epoch.wrapping_mul(0x9E37_79B9);
-                match &mut self.train {
-                    Some(tl) => tl.swap(plan.clone(), tasks, seed),
-                    None => {
-                        self.train = Some(SimTrainLoop::new(
-                            self.cost,
-                            plan.clone(),
+            }
+            // pool 0 keeps the pre-fleet seed exactly; later pools fold
+            // their index so concurrent pools sample independent streams
+            let seed = self.opts.seed
+                ^ self.epoch.wrapping_mul(0x9E37_79B9)
+                ^ (p as u64).wrapping_mul(0x517c_c1b7_2722_0a95);
+            match old.iter().position(|pl| pl.pool == p) {
+                Some(i) => {
+                    let mut pl = old.swap_remove(i);
+                    pl.tl.swap(plan, tasks, seed);
+                    pl.tenants = tenants;
+                    self.train.push(pl);
+                }
+                None => {
+                    self.train.push(PoolLoop {
+                        pool: p,
+                        tl: SimTrainLoop::new(
+                            self.worlds[p].0,
+                            plan,
                             tasks,
                             seed,
                             self.mgr.tables(),
-                        ))
-                    }
+                        ),
+                        tenants,
+                    });
                 }
             }
-            None => {
-                self.train = None;
-            }
         }
+        // pools whose plan drained fall out of `old` and stop stepping
     }
 
-    /// Execute one training step under the current deployment, advancing
-    /// the sim clock and tenant progress. Returns false when no step ran.
+    /// Execute one *fleet* training step under the current deployment,
+    /// advancing the sim clock and tenant progress. Every pool with a live
+    /// plan steps concurrently; the fleet step is the slowest pool's (LoRA
+    /// gradients synchronize at the fleet step boundary) and GPU-seconds
+    /// are each pool's own compute. Returns false when no pool stepped.
     fn train_step(&mut self, in_window: bool) -> bool {
-        let Some(tl) = self.train.as_mut() else {
+        let mut fleet_step = 0.0f64;
+        let mut gpu_seconds = 0.0f64;
+        let mut stepped = false;
+        let mut shares: Vec<(usize, f64)> = Vec::new();
+        for pl in &mut self.train {
+            let Some(step) = pl.tl.step() else {
+                continue;
+            };
+            stepped = true;
+            fleet_step = fleet_step.max(step.step_time);
+            gpu_seconds += step.gpu_seconds;
+            let deployed = pl.tenants.iter().filter(|&&ti| ti != usize::MAX).count();
+            let share =
+                if deployed > 0 { step.gpu_seconds / deployed as f64 } else { 0.0 };
+            for &ti in &pl.tenants {
+                if ti != usize::MAX {
+                    shares.push((ti, share));
+                }
+            }
+        }
+        if !stepped {
             return false;
-        };
-        let Some(step) = tl.step() else {
-            return false;
-        };
-        self.now += step.step_time;
+        }
+        self.now += fleet_step;
+        self.last_step_time = fleet_step;
         self.report.steps_total += 1;
-        self.report.gpu_seconds_trained += step.gpu_seconds;
+        self.report.gpu_seconds_trained += gpu_seconds;
         self.steps_since_rebalance += 1;
         if in_window {
             self.report.steps_during_replan += 1;
@@ -824,14 +1041,9 @@ impl<'a> ServeRuntime<'a> {
                 w.steps_in_window += 1;
             }
         }
-        let deployed =
-            self.deployed_tenants.iter().filter(|&&ti| ti != usize::MAX).count();
-        let share = if deployed > 0 { step.gpu_seconds / deployed as f64 } else { 0.0 };
-        for &ti in &self.deployed_tenants {
-            if ti != usize::MAX {
-                self.tenants[ti].steps_trained += 1;
-                self.tenants[ti].gpu_seconds += share;
-            }
+        for (ti, share) in shares {
+            self.tenants[ti].steps_trained += 1;
+            self.tenants[ti].gpu_seconds += share;
         }
         true
     }
@@ -847,22 +1059,22 @@ pub fn default_churn_trace(pool: &TaskSet, spacing: f64) -> Vec<TraceEvent> {
     for (i, t) in pool.tasks.iter().enumerate() {
         trace.push(TraceEvent {
             at: i as f64 * spacing,
-            event: TaskEvent::Arrive(t.clone()),
+            event: Event::Arrive(t.clone()),
         });
     }
     let n = pool.tasks.len();
     if n >= 2 {
         trace.push(TraceEvent {
             at: n as f64 * spacing,
-            event: TaskEvent::Exit { name: pool.tasks[0].name.clone() },
+            event: Event::Exit { name: pool.tasks[0].name.clone() },
         });
         trace.push(TraceEvent {
             at: (n + 1) as f64 * spacing,
-            event: TaskEvent::Exit { name: pool.tasks[1].name.clone() },
+            event: Event::Exit { name: pool.tasks[1].name.clone() },
         });
         trace.push(TraceEvent {
             at: (n + 2) as f64 * spacing,
-            event: TaskEvent::Arrive(pool.tasks[0].clone()),
+            event: Event::Arrive(pool.tasks[0].clone()),
         });
     }
     trace
@@ -898,11 +1110,112 @@ pub fn gen_churn_trace(tenants: usize, seed: u64) -> Vec<TraceEvent> {
         let batch = batch + 4 * rng.below(3) as u32;
         let spec = TaskSpec::new(&name, batch, LengthDistribution::fit(mean, skew, min, max))
             .with_tier(tier);
-        out.push(TraceEvent { at, event: TaskEvent::Arrive(spec) });
+        out.push(TraceEvent { at, event: Event::Arrive(spec) });
         if rng.below(4) == 0 {
             // ~25% exit after a dwell, freeing capacity for later arrivals
             let dwell = spacing * (4.0 + rng.f64() * 8.0);
-            out.push(TraceEvent { at: at + dwell, event: TaskEvent::Exit { name } });
+            out.push(TraceEvent { at: at + dwell, event: Event::Exit { name } });
+        }
+    }
+    out.sort_by(|a, b| a.at.total_cmp(&b.at));
+    out
+}
+
+/// [`gen_churn_trace`] plus seeded **cluster-event injection**: on top of
+/// the identical tenant skeleton (same `(tenants, seed)` → same tenant
+/// lines, bit for bit), each arrival slot rolls a server `leave` with
+/// probability `leave_rate` and a half-server GPU-range `preempt` with
+/// probability `preempt_rate` against `fleet`'s geometry. Every loss
+/// schedules the server's `join` after a dwell, and any capacity still
+/// down at the end of the trace is restored — the trace always ends at
+/// full fleet capacity, so recovery-identity checks have a terminal
+/// full-capacity adoption to certify. Generation tracks a
+/// [`FleetAvailability`] ledger, so the emitted events always pass
+/// [`parse_trace_for`]-style geometry validation.
+pub fn gen_churn_trace_elastic(
+    tenants: usize,
+    seed: u64,
+    fleet: &VirtualCluster,
+    leave_rate: f64,
+    preempt_rate: f64,
+) -> Vec<TraceEvent> {
+    use crate::util::Rng;
+    let mut out = gen_churn_trace(tenants, seed);
+    let spacing = 240.0;
+    // an independent stream: injecting cluster churn must not perturb the
+    // tenant lines (the same-skeleton guarantee above)
+    let mut rng = Rng::new(seed ^ 0xc1a5_7e2e_5eed_0001);
+    let mut avail = FleetAvailability::full(fleet);
+    // (restore time, server) — applied to the ledger in time order, which
+    // the slot-sequential walk below guarantees
+    let mut pending: Vec<(f64, u32)> = Vec::new();
+    let mut last_at = 0.0f64;
+    for i in 0..tenants {
+        let at = i as f64 * spacing + spacing * 0.61;
+        last_at = at;
+        // restores due before this slot fire first
+        pending.sort_by(|a, b| a.0.total_cmp(&b.0));
+        while let Some(&(t, server)) = pending.first() {
+            if t > at {
+                break;
+            }
+            pending.remove(0);
+            if avail.node_join(fleet, server).is_ok() {
+                out.push(TraceEvent { at: t, event: Event::NodeJoin { server } });
+            }
+        }
+        // a whole server departs: pick among fully-up servers
+        if rng.f64() < leave_rate {
+            let candidates: Vec<u32> = (0..fleet.n_servers())
+                .filter(|&s| {
+                    let mut probe = avail.clone();
+                    probe.node_leave(fleet, s).is_ok()
+                })
+                .collect();
+            if !candidates.is_empty() {
+                let s = candidates[rng.below(candidates.len() as u64) as usize];
+                if avail.node_leave(fleet, s).is_ok() {
+                    out.push(TraceEvent {
+                        at,
+                        event: Event::NodeLeave { server: s },
+                    });
+                    let dwell = spacing * (2.0 + rng.f64() * 4.0);
+                    pending.push((at + dwell, s));
+                }
+            }
+        }
+        // half of one server's GPUs get reclaimed
+        if rng.f64() < preempt_rate {
+            let candidates: Vec<(u32, (u32, u32))> = (0..fleet.n_servers())
+                .filter_map(|s| {
+                    let (a, b) = fleet.server_gpu_span(s)?;
+                    let mid = a + (b - a).div_ceil(2);
+                    let mut probe = avail.clone();
+                    probe.preempt(fleet, (a, mid)).ok()?;
+                    Some((s, (a, mid)))
+                })
+                .collect();
+            if !candidates.is_empty() {
+                let (s, range) =
+                    candidates[rng.below(candidates.len() as u64) as usize];
+                if avail.preempt(fleet, range).is_ok() {
+                    out.push(TraceEvent {
+                        at: at + spacing * 0.13,
+                        event: Event::Preempt { gpu_range: range },
+                    });
+                    let dwell = spacing * (2.0 + rng.f64() * 4.0);
+                    pending.push((at + spacing * 0.13 + dwell, s));
+                }
+            }
+        }
+    }
+    // restore everything still down, in order, after the last slot
+    pending.sort_by(|a, b| a.0.total_cmp(&b.0));
+    let mut t = last_at + spacing;
+    for (due, server) in pending {
+        t = t.max(due) + spacing * 0.29;
+        if avail.node_join(fleet, server).is_ok() {
+            out.push(TraceEvent { at: t, event: Event::NodeJoin { server } });
         }
     }
     out.sort_by(|a, b| a.at.total_cmp(&b.at));
@@ -919,17 +1232,47 @@ pub fn serve_trace(
     ServeRuntime::new(cost, cluster, opts).run_trace(trace)
 }
 
-/// Parse a churn-trace file. Line format (whitespace-separated, `#`
-/// comments; the trailing `tier` column is optional and defaults to 0 =
-/// highest priority):
+/// Parse a churn-trace file — **trace grammar v2** (whitespace-separated,
+/// `#` comments). Tenant lines are unchanged from v1, bit for bit; cluster
+/// lines are new:
 ///
 /// ```text
-/// # at    op      name      batch  mean    skew  min  max   [tier]
-/// 0       arrive  qa-short  128    210.0   6.0   16   2048  1
-/// 1800    exit    qa-short
+/// # at    op       name/args                                   meaning
+/// 0       arrive   qa-short  128  210.0  6.0  16  2048  [1]  # tenant joins ([tier] optional, 0 = highest)
+/// 1800    exit     qa-short                                  # tenant leaves
+/// 2000    leave    3                                         # server 3 departs (all its GPUs down)
+/// 2600    preempt  8 12                                      # GPUs [8, 12) reclaimed
+/// 3300    join     3                                         # server 3 returns (its down GPUs restore)
 /// ```
+///
+/// This structural parse validates shapes and numbers only; it cannot
+/// check cluster events against a fleet it does not know. Use
+/// [`parse_trace_for`] to additionally reject geometry violations
+/// (unknown server, overlapping preempt range, join of an up server).
 pub fn parse_trace(text: &str) -> Result<Vec<TraceEvent>, String> {
+    parse_trace_impl(text, None)
+}
+
+/// [`parse_trace`], then validate cluster events against `fleet` in
+/// delivery order (timestamp, then line order): a `leave` must name a
+/// known, up server; a `preempt` range must lie inside the fleet and
+/// overlap nothing already down; a `join` must restore something. The
+/// runtime drops invalid cluster events at delivery — this rejects them
+/// up front with the offending line, like the tenant-line checks.
+pub fn parse_trace_for(
+    text: &str,
+    fleet: &VirtualCluster,
+) -> Result<Vec<TraceEvent>, String> {
+    parse_trace_impl(text, Some(fleet))
+}
+
+fn parse_trace_impl(
+    text: &str,
+    fleet: Option<&VirtualCluster>,
+) -> Result<Vec<TraceEvent>, String> {
     use crate::data::LengthDistribution;
+    // (line number, cleaned line) per event, for geometry errors below
+    let mut lines: Vec<(usize, String)> = Vec::new();
     let mut out = Vec::new();
     // live-in-file-order tenant names: a second arrive for a live name is
     // almost always a typo'd exit — running it would double the tenant
@@ -966,7 +1309,7 @@ pub fn parse_trace(text: &str) -> Result<Vec<TraceEvent>, String> {
                     return Err(err("exit takes exactly `at exit name`"));
                 }
                 live.remove(&name);
-                TaskEvent::Exit { name }
+                Event::Exit { name }
             }
             "arrive" => {
                 if fields.len() != 8 && fields.len() != 9 {
@@ -986,7 +1329,7 @@ pub fn parse_trace(text: &str) -> Result<Vec<TraceEvent>, String> {
                 if !live.insert(name.clone()) {
                     return Err(err("duplicate arrive for live tenant"));
                 }
-                TaskEvent::Arrive(
+                Event::Arrive(
                     TaskSpec::new(
                         &name,
                         batch,
@@ -995,9 +1338,57 @@ pub fn parse_trace(text: &str) -> Result<Vec<TraceEvent>, String> {
                     .with_tier(tier),
                 )
             }
+            "leave" | "join" => {
+                if fields.len() != 3 {
+                    return Err(err(&format!(
+                        "{} takes exactly `at {} server`",
+                        fields[1], fields[1]
+                    )));
+                }
+                let server: u32 =
+                    fields[2].parse().map_err(|_| err("bad server id"))?;
+                if fields[1] == "leave" {
+                    Event::NodeLeave { server }
+                } else {
+                    Event::NodeJoin { server }
+                }
+            }
+            "preempt" => {
+                if fields.len() != 4 {
+                    return Err(err("preempt takes exactly `at preempt start end`"));
+                }
+                let start: u32 =
+                    fields[2].parse().map_err(|_| err("bad range start"))?;
+                let end: u32 = fields[3].parse().map_err(|_| err("bad range end"))?;
+                if start >= end {
+                    return Err(err("empty preempt range"));
+                }
+                Event::Preempt { gpu_range: (start, end) }
+            }
             other => return Err(err(&format!("unknown op `{other}`"))),
         };
+        lines.push((ln, line.to_string()));
         out.push(TraceEvent { at, event });
+    }
+    if let Some(fleet) = fleet {
+        // replay the cluster events against the fleet in delivery order —
+        // stable sort by timestamp, line order breaking ties, exactly like
+        // the runtime's own event ordering
+        let mut order: Vec<usize> = (0..out.len()).collect();
+        order.sort_by(|&a, &b| out[a].at.total_cmp(&out[b].at));
+        let mut avail = FleetAvailability::full(fleet);
+        for i in order {
+            let resolved = match &out[i].event {
+                Event::NodeJoin { server } => avail.node_join(fleet, *server),
+                Event::NodeLeave { server } => avail.node_leave(fleet, *server),
+                Event::Preempt { gpu_range } => avail.preempt(fleet, *gpu_range),
+                _ => Ok(0),
+            };
+            if let Err(what) = resolved {
+                let (ln, line) = &lines[i];
+                return Err(format!("trace line {}: {what}: {line}", ln + 1));
+            }
+        }
     }
     Ok(out)
 }
@@ -1116,10 +1507,10 @@ mod tests {
         // then draining it back leaves the plan unchanged on the re-plan
         let a = TaskSpec::new("a", 64, LengthDistribution::fit(210.0, 6.0, 16, 2048));
         let trace = vec![
-            TraceEvent { at: 0.0, event: TaskEvent::Arrive(a) },
+            TraceEvent { at: 0.0, event: Event::Arrive(a) },
             TraceEvent {
                 at: 200.0,
-                event: TaskEvent::Exit { name: "never-there".into() },
+                event: Event::Exit { name: "never-there".into() },
             },
         ];
         let report = serve_trace(&cost, &cluster, &trace, opts);
@@ -1138,9 +1529,9 @@ mod tests {
         opts.certify_identity = false;
         let a = TaskSpec::new("solo", 64, LengthDistribution::fit(250.0, 3.0, 16, 2048));
         let trace = vec![
-            TraceEvent { at: 0.0, event: TaskEvent::Arrive(a.clone()) },
-            TraceEvent { at: 300.0, event: TaskEvent::Exit { name: "solo".into() } },
-            TraceEvent { at: 600.0, event: TaskEvent::Arrive(a) },
+            TraceEvent { at: 0.0, event: Event::Arrive(a.clone()) },
+            TraceEvent { at: 300.0, event: Event::Exit { name: "solo".into() } },
+            TraceEvent { at: 600.0, event: Event::Arrive(a) },
         ];
         let report = serve_trace(&cost, &cluster, &trace, opts);
         // two tenant lifetimes for the same name
@@ -1161,9 +1552,9 @@ mod tests {
 ";
         let trace = parse_trace(text).unwrap();
         assert_eq!(trace.len(), 3);
-        assert!(matches!(&trace[0].event, TaskEvent::Arrive(s) if s.name == "qa"));
+        assert!(matches!(&trace[0].event, Event::Arrive(s) if s.name == "qa"));
         assert!((trace[1].at - 120.5).abs() < 1e-9);
-        assert!(matches!(&trace[2].event, TaskEvent::Exit { name } if name == "qa"));
+        assert!(matches!(&trace[2].event, Event::Exit { name } if name == "qa"));
         assert!(parse_trace("0 arrive broken 1 2").is_err());
         assert!(parse_trace("x arrive a 1 2 3 4 5").is_err());
         assert!(parse_trace("nan arrive a 1 2 3 4 5").is_err(), "non-finite at");
@@ -1183,11 +1574,11 @@ mod tests {
         let trace = parse_trace(text).unwrap();
         assert_eq!(trace.len(), 3);
         assert!(
-            matches!(&trace[0].event, TaskEvent::Arrive(s) if s.meta.tier == 3),
+            matches!(&trace[0].event, Event::Arrive(s) if s.meta.tier == 3),
             "explicit tier column"
         );
         assert!(
-            matches!(&trace[2].event, TaskEvent::Arrive(s) if s.meta.tier == 0),
+            matches!(&trace[2].event, Event::Arrive(s) if s.meta.tier == 0),
             "tier defaults to 0 — and re-arrival after exit is legal"
         );
         assert!(parse_trace("-5 arrive a 1 2.0 3.0 4 5").is_err(), "negative at");
@@ -1215,8 +1606,8 @@ mod tests {
         let arrivals: Vec<&TaskSpec> = a
             .iter()
             .filter_map(|e| match &e.event {
-                TaskEvent::Arrive(s) => Some(s),
-                TaskEvent::Exit { .. } => None,
+                Event::Arrive(s) => Some(s),
+                _ => None,
             })
             .collect();
         assert_eq!(arrivals.len(), 40);
@@ -1241,7 +1632,7 @@ mod tests {
         let trace = gen_churn_trace(6, 11);
         let report = serve_trace(&cost, &cluster, &trace, opts);
         let arrivals =
-            trace.iter().filter(|e| matches!(e.event, TaskEvent::Arrive(_))).count();
+            trace.iter().filter(|e| matches!(e.event, Event::Arrive(_))).count();
         assert_eq!(
             report.tenants.len() + report.rejected_arrivals as usize,
             arrivals,
@@ -1264,11 +1655,169 @@ mod tests {
     fn default_trace_shape() {
         let trace = default_churn_trace(&pool(), 100.0);
         assert_eq!(trace.len(), 3 + 3);
-        assert!(matches!(&trace[3].event, TaskEvent::Exit { name } if name == "qa"));
-        assert!(matches!(&trace[5].event, TaskEvent::Arrive(s) if s.name == "qa"));
+        assert!(matches!(&trace[3].event, Event::Exit { name } if name == "qa"));
+        assert!(matches!(&trace[5].event, Event::Arrive(s) if s.name == "qa"));
         // timestamps are sorted
         for w in trace.windows(2) {
             assert!(w[0].at <= w[1].at);
         }
+    }
+
+    #[test]
+    fn trace_parser_v2_cluster_lines() {
+        let text = "\
+# grammar v2: tenant lines + cluster lines interleave
+0     arrive   qa  128  210.0  6.0  16  2048
+500   leave    1                       # server 1 departs
+900   preempt  0 4                     # GPUs [0, 4) reclaimed
+1400  join     1
+";
+        let trace = parse_trace(text).unwrap();
+        assert_eq!(trace.len(), 4);
+        assert!(matches!(trace[1].event, Event::NodeLeave { server: 1 }));
+        assert!(matches!(trace[2].event, Event::Preempt { gpu_range: (0, 4) }));
+        assert!(matches!(trace[3].event, Event::NodeJoin { server: 1 }));
+        // shape rejections, mirroring the tenant-line guard suite
+        assert!(parse_trace("0 leave 1 2").is_err(), "leave takes one arg");
+        assert!(parse_trace("0 join one").is_err(), "bad server id");
+        assert!(parse_trace("0 leave -3").is_err(), "negative server id");
+        assert!(parse_trace("0 preempt 4").is_err(), "preempt needs start+end");
+        assert!(parse_trace("0 preempt 0 4 8").is_err(), "stray columns");
+        assert!(parse_trace("0 preempt a 4").is_err(), "bad range start");
+        assert!(parse_trace("0 preempt 0 b").is_err(), "bad range end");
+        assert!(parse_trace("0 preempt 4 4").is_err(), "empty range");
+        assert!(parse_trace("0 preempt 5 4").is_err(), "inverted range");
+        assert!(parse_trace("nan leave 1").is_err(), "non-finite at");
+    }
+
+    #[test]
+    fn trace_parser_v2_geometry_guards() {
+        // two 8-GPU servers: servers {0, 1}, GPUs [0, 16)
+        let fleet = VirtualCluster::homogeneous(ClusterSpec::a100_40g(16));
+        let ok = "\
+0     leave    1
+200   preempt  0 4
+600   join     1
+900   join     0        # restores the preempted half of server 0
+";
+        assert_eq!(parse_trace_for(ok, &fleet).unwrap().len(), 4);
+        // the same text passes the structural parse but fails geometry
+        let unknown = "0 leave 2";
+        assert!(parse_trace(unknown).is_ok());
+        let e = parse_trace_for(unknown, &fleet).unwrap_err();
+        assert!(e.contains("leave of unknown server"), "{e}");
+        let double = "0 leave 1\n100 leave 1";
+        let e = parse_trace_for(double, &fleet).unwrap_err();
+        assert!(e.contains("already-down server"), "{e}");
+        let overlap = "0 preempt 0 8\n100 preempt 4 12";
+        let e = parse_trace_for(overlap, &fleet).unwrap_err();
+        assert!(e.contains("overlaps already-down GPU"), "{e}");
+        let oob = "0 preempt 12 20";
+        let e = parse_trace_for(oob, &fleet).unwrap_err();
+        assert!(e.contains("exceeds fleet"), "{e}");
+        let up_join = "0 join 0";
+        let e = parse_trace_for(up_join, &fleet).unwrap_err();
+        assert!(e.contains("already-up server"), "{e}");
+        // validation replays in delivery order (timestamp, not line order):
+        // the join line appears first in the file but fires after the leave
+        let reordered = "500 join 1\n0 leave 1";
+        assert!(parse_trace_for(reordered, &fleet).is_ok());
+    }
+
+    #[test]
+    fn gen_elastic_trace_is_deterministic_and_ends_full() {
+        let fleet = VirtualCluster::homogeneous(ClusterSpec::a100_40g(32));
+        let a = gen_churn_trace_elastic(20, 9, &fleet, 0.3, 0.3);
+        let b = gen_churn_trace_elastic(20, 9, &fleet, 0.3, 0.3);
+        assert_eq!(format!("{a:?}"), format!("{b:?}"), "same inputs, same trace");
+        // the tenant skeleton is gen_churn_trace, bit for bit
+        let skeleton: Vec<&TraceEvent> =
+            a.iter().filter(|e| !e.event.is_cluster()).collect();
+        let plain = gen_churn_trace(20, 9);
+        assert_eq!(format!("{skeleton:?}"), format!("{:?}", plain.iter().collect::<Vec<_>>()));
+        // cluster events were injected and replay cleanly to full capacity
+        let cluster: Vec<&TraceEvent> =
+            a.iter().filter(|e| e.event.is_cluster()).collect();
+        assert!(!cluster.is_empty(), "rates 0.3 must inject something");
+        let mut avail = FleetAvailability::full(&fleet);
+        for ev in &cluster {
+            let ok = match &ev.event {
+                Event::NodeJoin { server } => avail.node_join(&fleet, *server),
+                Event::NodeLeave { server } => avail.node_leave(&fleet, *server),
+                Event::Preempt { gpu_range } => avail.preempt(&fleet, *gpu_range),
+                _ => unreachable!(),
+            };
+            assert!(ok.is_ok(), "ledger-invalid event {:?}: {ok:?}", ev.event);
+        }
+        assert!(avail.is_full(), "trace must end at full capacity");
+        // rate 0 collapses to the plain trace exactly
+        let none = gen_churn_trace_elastic(20, 9, &fleet, 0.0, 0.0);
+        assert_eq!(format!("{none:?}"), format!("{plain:?}"));
+    }
+
+    #[test]
+    fn elastic_serve_recovers_from_preempt_and_join() {
+        let (cost, cluster) = world(); // 16 GPUs = servers {0, 1}
+        let a = TaskSpec::new("qa", 128, LengthDistribution::fit(210.0, 6.0, 16, 2048));
+        let trace = vec![
+            TraceEvent { at: 0.0, event: Event::Arrive(a) },
+            // half of server 0 is reclaimed mid-training…
+            TraceEvent { at: 600.0, event: Event::Preempt { gpu_range: (0, 4) } },
+            // …and comes back later
+            TraceEvent { at: 2400.0, event: Event::NodeJoin { server: 0 } },
+        ];
+        let mut rt = ServeRuntime::new(&cost, &cluster, fast_opts());
+        let report = rt.run_trace(&trace);
+        assert_eq!(report.preempt_events, 1);
+        assert_eq!(report.join_events, 1);
+        // the interrupted step's work on the 4 reclaimed GPUs is charged
+        assert!(report.gpu_seconds_lost_preempt > 0.0, "{report:#?}");
+        // three adoptions: cold deploy, shrink swap, restore swap (the
+        // latter two are redeploys when the 12-GPU plan differs, identical
+        // swaps when the cold plan already fit the survivors)
+        assert!(report.redeploys >= 1, "{report:#?}");
+        assert!(
+            report.redeploys + report.plan_swaps_identical >= 3,
+            "{report:#?}"
+        );
+        // the shrunk plan fit the surviving 12 GPUs; the restored plan is
+        // re-certified against the never-shrunk cold plan (recovery
+        // identity — budgets cleared, certify gate re-armed)
+        assert!(report.identity_checks > 0, "{report:#?}");
+        assert_eq!(report.identity_failures, 0, "{report:#?}");
+        assert_eq!(report.recoveries.len(), 1, "{report:#?}");
+        assert!(report.recoveries[0] > 0.0);
+        // after the restore the budget clamp is gone
+        assert_eq!(rt.manager().gpu_budget(0), None);
+        let plan = rt.manager().plan().expect("live deployment");
+        assert!(plan.groups.iter().map(|g| g.n()).sum::<u32>() <= 16);
+        assert!(report.steps_total > 0);
+    }
+
+    #[test]
+    fn mixed_fleet_serve_admits_on_both_pools() {
+        let a100 = ClusterSpec::a100_40g(8);
+        let h100 = ClusterSpec::h100_80g(8);
+        let model = ModelDesc::llama2_7b();
+        let cost_a = CostModel::calibrated(&model, &a100);
+        let cost_h = CostModel::calibrated(&model, &h100);
+        let mut opts = fast_opts();
+        opts.certify_identity = false; // mixed fleets are not cold-comparable
+        let qa = TaskSpec::new("qa", 64, LengthDistribution::fit(210.0, 6.0, 16, 2048));
+        let sum = TaskSpec::new("sum", 16, LengthDistribution::fit(3600.0, 4.3, 16, 16384));
+        let trace = vec![
+            TraceEvent { at: 0.0, event: Event::Arrive(qa) },
+            TraceEvent { at: 500.0, event: Event::Arrive(sum) },
+        ];
+        let mut rt = ServeRuntime::new_fleet(vec![(&cost_a, &a100), (&cost_h, &h100)], opts);
+        let report = rt.run_trace(&trace);
+        assert_eq!(report.tenants.len(), 2, "{report:#?}");
+        for t in &report.tenants {
+            assert!(t.admitted_at.is_some(), "tenant {} never admitted", t.name);
+            assert!(t.steps_trained > 0, "tenant {} made no progress", t.name);
+        }
+        assert!(rt.manager().device_mode());
+        assert_eq!(rt.manager().n_shards(), 2);
+        assert!(report.steps_total > 0);
     }
 }

@@ -12,7 +12,7 @@
 //! ```text
 //!  event thread (ServeRuntime)              planner service thread
 //!  ───────────────────────────              ──────────────────────
-//!  TaskEvent ──► apply_event                 recv ──► drain to newest
+//!  Event ─────► apply_event                  recv ──► drain to newest
 //!      │            (window opens)             │
 //!      ├─ cancel in-flight token ──────────►  CancelToken observed
 //!      └─ submit(epoch+1, tasks) ──────────►  inside PlanCursor slice:
@@ -159,9 +159,9 @@ impl PlannerService {
     }
 
     /// Spawn the service thread with `n_shards` independent planning
-    /// shards. Each shard gets its own [`PlanningSession`] (lazily, over
-    /// one shared cost-table LRU), publication cell, cancel token and
-    /// replan-window budget.
+    /// shards over one homogeneous world. Each shard gets its own
+    /// [`PlanningSession`] (lazily, over one shared cost-table LRU),
+    /// publication cell, cancel token and replan-window budget.
     pub fn spawn_sharded(
         cost: CostModel,
         cluster: ClusterSpec,
@@ -172,14 +172,30 @@ impl PlannerService {
         n_shards: usize,
     ) -> Self {
         let n_shards = n_shards.max(1);
+        let worlds = vec![(cost, cluster); n_shards];
+        Self::spawn_fleet(worlds, opts, meter, slice_plans, threads)
+    }
+
+    /// Spawn the service thread with one planning shard per `(cost model,
+    /// cluster pool)` world — the async path of a mixed-generation fleet.
+    /// Shard `i` searches exclusively against world `i`, so every pool's
+    /// plans come from its own device-typed cost tables.
+    pub fn spawn_fleet(
+        worlds: Vec<(CostModel, ClusterSpec)>,
+        opts: PlannerOptions,
+        meter: BudgetMeter,
+        slice_plans: usize,
+        threads: usize,
+    ) -> Self {
+        assert!(!worlds.is_empty(), "PlannerService needs at least one world");
+        let n_shards = worlds.len();
         let (tx, rx) = mpsc::channel();
         let cells: Vec<Arc<EpochCell<PlanUpdate>>> =
             (0..n_shards).map(|_| Arc::new(EpochCell::new())).collect();
         let worker_cells = cells.clone();
         let handle = std::thread::spawn(move || {
             let worker = Worker {
-                cost,
-                cluster,
+                worlds,
                 opts,
                 tables: CostTables::default(),
                 sessions: BTreeMap::new(),
@@ -284,12 +300,14 @@ impl Drop for PlannerService {
     }
 }
 
-/// Service-thread state: the cloned world plus per-shard planning
-/// sessions (lazily created over one shared cost-table LRU) and per-shard
-/// replan-window budget bookkeeping.
+/// Service-thread state: the cloned per-shard worlds plus per-shard
+/// planning sessions (lazily created over one shared cost-table LRU) and
+/// per-shard replan-window budget bookkeeping.
 struct Worker {
-    cost: CostModel,
-    cluster: ClusterSpec,
+    /// Shard → its `(cost model, cluster pool)` world. A homogeneous
+    /// sharded service replicates one world; a fleet service has one
+    /// entry per device pool.
+    worlds: Vec<(CostModel, ClusterSpec)>,
     opts: PlannerOptions,
     /// One cost-table LRU across every shard's session.
     tables: CostTables,
@@ -362,7 +380,8 @@ impl Worker {
         });
         session.set_gpu_budget(gpu_budget);
         let cell = &self.cells[shard.min(self.cells.len() - 1)];
-        let planner = Planner::new(&self.cost, &self.cluster);
+        let (cost, cluster) = &self.worlds[shard.min(self.worlds.len() - 1)];
+        let planner = Planner::new(cost, cluster);
         let Some(mut search) = session.begin_anytime(&planner, &tasks) else {
             // Infeasible world (e.g. no candidate config supports the
             // longest bucket): terminal "no plan" verdict, window closed.

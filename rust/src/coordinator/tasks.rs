@@ -37,16 +37,49 @@ use crate::coordinator::planner::{DeploymentPlan, Planner, PlannerOptions};
 use crate::coordinator::session::{AnytimeReplan, PlanningSession, SliceReport};
 use crate::costmodel::{CostModel, CostTables};
 
-/// Events the manager reacts to.
+/// Events the serving stack reacts to: tenant lifecycle (trace grammar v1)
+/// plus cluster capacity churn (grammar v2). One enum serves the blocking
+/// manager, the sharded fleet manager, and the serving runtime — cluster
+/// events address the [`crate::cluster::VirtualCluster`]'s global
+/// server/GPU numbering and are resolved to capacity budgets by the
+/// runtime before any planner sees them.
 #[derive(Debug, Clone)]
-pub enum TaskEvent {
+pub enum Event {
     Arrive(TaskSpec),
     Exit { name: String },
+    /// A server (re)joins the fleet: its down GPUs come back and a grow
+    /// replan is opened, diff-charged like any other redeploy.
+    NodeJoin { server: u32 },
+    /// A whole server leaves (hardware failure, scale-down).
+    NodeLeave { server: u32 },
+    /// A `[start, end)` global GPU range is spot-preempted mid-step:
+    /// checkpoint + shrink + redeploy on the surviving capacity.
+    Preempt { gpu_range: (u32, u32) },
 }
 
-/// What happened as a result of an event.
+impl Event {
+    /// Cluster capacity event (as opposed to tenant lifecycle)?
+    pub fn is_cluster(&self) -> bool {
+        matches!(
+            self,
+            Event::NodeJoin { .. } | Event::NodeLeave { .. } | Event::Preempt { .. }
+        )
+    }
+}
+
+/// What an event (or an adopted replan) did. One outcome type serves both
+/// control-flow shapes: the **non-blocking** view reports
+/// [`Outcome::Planning`] when a background replan was opened (pump it,
+/// then adopt at a step boundary — adoption reports one of the terminal
+/// variants), while the **blocking** view ([`TaskManager::handle`]) runs
+/// the search inline and only ever returns terminal variants
+/// ([`Outcome::is_terminal`]).
 #[derive(Debug, Clone, PartialEq)]
-pub enum ReplanOutcome {
+pub enum Outcome {
+    /// The task set or capacity changed; a background replan is now
+    /// pending on the listed shards (empty for a single-manager world).
+    /// Non-terminal: pump and finish at a step boundary.
+    Planning { opened: Vec<usize> },
     /// Plan unchanged — training continues uninterrupted.
     Unchanged,
     /// New plan deployed; adapters checkpointed + restarted.
@@ -59,28 +92,24 @@ pub enum ReplanOutcome {
         /// re-derive it under possibly divergent rules.
         adjustment: PlanAdjustment,
     },
-    /// No tasks left; the joint FT job drains.
-    Drained,
-    /// Arrival rejected: a live task already uses this name. `Exit`
+    /// Arrival rejected: a live task already uses this name (`Exit`
     /// removes by name, so admitting a duplicate would make teardown
-    /// ambiguous — the tenant must resubmit under a unique name.
+    /// ambiguous), the world is infeasible for it, or a malformed cluster
+    /// event addressed unknown capacity.
     Rejected,
-}
-
-/// What [`TaskManager::apply_event`] did — the non-blocking counterpart of
-/// [`ReplanOutcome`]: a changed task set opens a background replan instead
-/// of running one.
-#[derive(Debug, Clone, PartialEq)]
-pub enum EventOutcome {
-    /// The task set changed; a background [`AnytimeReplan`] is now
-    /// pending — pump it and finish at a step boundary.
-    Planning,
-    /// The event left the task set unchanged (unknown `Exit`): no replan.
-    Unchanged,
-    /// Duplicate-name `Arrive`: rejected, no replan.
-    Rejected,
+    /// No capacity anywhere for this arrival: held in the admission queue
+    /// (sharded manager only), re-admitted in (tier, FIFO) order.
+    Queued,
     /// No tasks left; any pending replan is dropped and the plan cleared.
     Drained,
+}
+
+impl Outcome {
+    /// Terminal (blocking-view) outcome — everything except an open
+    /// background replan.
+    pub fn is_terminal(&self) -> bool {
+        !matches!(self, Outcome::Planning { .. })
+    }
 }
 
 /// The per-group redeploy delta between two deployment plans: replicas in
@@ -312,25 +341,32 @@ impl<'a> TaskManager<'a> {
     /// continue under the current plan while the caller pumps the search
     /// with [`Self::pump_replan`] and adopts it with
     /// [`Self::finish_replan`] at a step boundary.
-    pub fn apply_event(&mut self, event: TaskEvent) -> EventOutcome {
+    pub fn apply_event(&mut self, event: Event) -> Outcome {
         let was_open = self.replan_open;
         let arrived = match event {
-            TaskEvent::Arrive(spec) => {
+            // Cluster capacity events are fleet-level: the runtime resolves
+            // them to GPU budgets (`set_gpu_budget` + `reopen_replan`)
+            // before any manager is involved. Reaching a bare manager with
+            // one is a no-op by construction.
+            Event::NodeJoin { .. } | Event::NodeLeave { .. } | Event::Preempt { .. } => {
+                return Outcome::Unchanged;
+            }
+            Event::Arrive(spec) => {
                 // `Exit` removes by name, so a duplicate name would let one
                 // tenant tear down another's task; silently renaming would
                 // leave the submitter unable to address its own task. The
                 // task set is unchanged, so no replan either.
                 if self.tasks.tasks.iter().any(|t| t.name == spec.name) {
-                    return EventOutcome::Rejected;
+                    return Outcome::Rejected;
                 }
                 self.tasks.tasks.push(spec);
                 true
             }
-            TaskEvent::Exit { name } => {
+            Event::Exit { name } => {
                 if !self.tasks.tasks.iter().any(|t| t.name == name) {
                     // unknown task: the set did not change — a full replan
                     // here would burn minutes of planner time for nothing
-                    return EventOutcome::Unchanged;
+                    return Outcome::Unchanged;
                 }
                 self.tasks.tasks.retain(|t| t.name != name);
                 false
@@ -342,7 +378,7 @@ impl<'a> TaskManager<'a> {
             }
             self.replan_open = false;
             self.plan = None;
-            return EventOutcome::Drained;
+            return Outcome::Drained;
         }
         self.begin_replan();
         if self.pending.is_none() && arrived {
@@ -359,9 +395,9 @@ impl<'a> TaskManager<'a> {
             } else {
                 self.replan_open = false;
             }
-            return EventOutcome::Rejected;
+            return Outcome::Rejected;
         }
-        EventOutcome::Planning
+        Outcome::Planning { opened: Vec::new() }
     }
 
     /// Advance the in-flight background replan by one enumeration slice of
@@ -380,12 +416,12 @@ impl<'a> TaskManager<'a> {
     /// feasible deployment), the certified cold-identical plan when the
     /// enumeration completed. Charges checkpoint+restart only for the
     /// replica groups that actually changed ([`plan_adjustment`]): a
-    /// plan-identical swap reports [`ReplanOutcome::Unchanged`] and costs
+    /// plan-identical swap reports [`Outcome::Unchanged`] and costs
     /// nothing.
-    pub fn finish_replan(&mut self) -> ReplanOutcome {
+    pub fn finish_replan(&mut self) -> Outcome {
         if !self.replan_open {
             // nothing to adopt — never wipe a healthy deployment
-            return ReplanOutcome::Unchanged;
+            return Outcome::Unchanged;
         }
         let before = self.plan.clone();
         self.adopt_pending();
@@ -399,9 +435,9 @@ impl<'a> TaskManager<'a> {
     /// [`Self::finish_replan`]; only the search itself happened elsewhere.
     /// `None` means the service found the world infeasible — the
     /// deployment drains, exactly as when the local search finds nothing.
-    pub fn finish_replan_with(&mut self, plan: Option<DeploymentPlan>) -> ReplanOutcome {
+    pub fn finish_replan_with(&mut self, plan: Option<DeploymentPlan>) -> Outcome {
         if !self.replan_open {
-            return ReplanOutcome::Unchanged;
+            return Outcome::Unchanged;
         }
         let before = self.plan.clone();
         self.replan_open = false;
@@ -414,13 +450,13 @@ impl<'a> TaskManager<'a> {
     /// Diff the freshly adopted `self.plan` against `before` into the
     /// caller-visible outcome, charging checkpoint+restart for the changed
     /// replica groups only.
-    fn outcome_from(&mut self, before: Option<DeploymentPlan>) -> ReplanOutcome {
+    fn outcome_from(&mut self, before: Option<DeploymentPlan>) -> Outcome {
         match (&before, &self.plan) {
-            (Some(a), Some(b)) if a.groups == b.groups => ReplanOutcome::Unchanged,
+            (Some(a), Some(b)) if a.groups == b.groups => Outcome::Unchanged,
             (Some(a), Some(b)) => {
                 self.redeploys += 1;
                 let adjustment = plan_adjustment(a, b);
-                ReplanOutcome::Redeployed {
+                Outcome::Redeployed {
                     adjustment_seconds: adjustment
                         .seconds(self.restart_seconds_per_replica),
                     adjustment,
@@ -435,13 +471,13 @@ impl<'a> TaskManager<'a> {
                     expected_step_time: 0.0,
                 };
                 let adjustment = plan_adjustment(&fresh, b);
-                ReplanOutcome::Redeployed {
+                Outcome::Redeployed {
                     adjustment_seconds: adjustment
                         .seconds(self.restart_seconds_per_replica),
                     adjustment,
                 }
             }
-            (_, None) => ReplanOutcome::Drained,
+            (_, None) => Outcome::Drained,
         }
     }
 
@@ -449,12 +485,12 @@ impl<'a> TaskManager<'a> {
     /// composition of [`Self::apply_event`] + [`Self::pump_replan`] +
     /// [`Self::finish_replan`]. Events that leave the task set unchanged
     /// (unknown `Exit`, duplicate-name `Arrive`) skip the replan entirely.
-    pub fn handle(&mut self, event: TaskEvent) -> ReplanOutcome {
+    pub fn handle(&mut self, event: Event) -> Outcome {
         match self.apply_event(event) {
-            EventOutcome::Rejected => ReplanOutcome::Rejected,
-            EventOutcome::Unchanged => ReplanOutcome::Unchanged,
-            EventOutcome::Drained => ReplanOutcome::Drained,
-            EventOutcome::Planning => {
+            Outcome::Rejected => Outcome::Rejected,
+            Outcome::Unchanged => Outcome::Unchanged,
+            Outcome::Drained => Outcome::Drained,
+            Outcome::Planning { .. } => {
                 let budget = self.session.options().max_plans;
                 self.pump_replan(budget);
                 self.finish_replan()
@@ -509,15 +545,15 @@ mod tests {
             TaskManager::new(&cost, &cluster, short, PlannerOptions::default());
         let before = mgr.plan().unwrap().clone();
         // a summarization task with a long tail arrives
-        let outcome = mgr.handle(TaskEvent::Arrive(TaskSpec::new(
+        let outcome = mgr.handle(Event::Arrive(TaskSpec::new(
             "billsum-like",
             32,
             LengthDistribution::fit(3900.0, 0.85, 16, 16384),
         )));
-        assert!(matches!(outcome, ReplanOutcome::Redeployed { .. }), "{outcome:?}");
+        assert!(matches!(outcome, Outcome::Redeployed { .. }), "{outcome:?}");
         // the adjustment was computed from the actual group diff
         let after = mgr.plan().unwrap().clone();
-        if let ReplanOutcome::Redeployed { adjustment_seconds, adjustment } = outcome {
+        if let Outcome::Redeployed { adjustment_seconds, adjustment } = outcome {
             assert!(adjustment.changed_replicas > 0);
             assert_eq!(adjustment, plan_adjustment(&before, &after));
             assert_eq!(
@@ -541,8 +577,8 @@ mod tests {
             LengthDistribution::fit(300.0, 2.0, 16, 2048),
         )]);
         let mut mgr = TaskManager::new(&cost, &cluster, one, PlannerOptions::default());
-        let out = mgr.handle(TaskEvent::Exit { name: "only".into() });
-        assert_eq!(out, ReplanOutcome::Drained);
+        let out = mgr.handle(Event::Exit { name: "only".into() });
+        assert_eq!(out, Outcome::Drained);
         assert!(mgr.plan().is_none());
         assert!(!mgr.replan_pending());
     }
@@ -557,8 +593,8 @@ mod tests {
             PlannerOptions::default(),
         );
         let replans_before = mgr.replans;
-        let out = mgr.handle(TaskEvent::Exit { name: "not-a-task".into() });
-        assert_eq!(out, ReplanOutcome::Unchanged);
+        let out = mgr.handle(Event::Exit { name: "not-a-task".into() });
+        assert_eq!(out, Outcome::Unchanged);
         assert_eq!(mgr.tasks().len(), 6);
         // regression: the unchanged task set must not trigger a replan
         assert_eq!(mgr.replans, replans_before, "unknown exit ran the planner");
@@ -573,24 +609,24 @@ mod tests {
         let mut mgr =
             TaskManager::new(&cost, &cluster, initial, PlannerOptions::default());
         let replans_before = mgr.replans;
-        let out = mgr.handle(TaskEvent::Arrive(spec.clone()));
-        assert_eq!(out, ReplanOutcome::Rejected);
+        let out = mgr.handle(Event::Arrive(spec.clone()));
+        assert_eq!(out, Outcome::Rejected);
         assert_eq!(mgr.tasks().len(), 1, "duplicate must not be admitted");
         assert_eq!(mgr.replans, replans_before, "rejection must not replan");
         // a uniquely named resubmission is admitted normally
         let mut renamed = spec;
         renamed.name = "dup-2".into();
-        let out = mgr.handle(TaskEvent::Arrive(renamed));
-        assert_ne!(out, ReplanOutcome::Rejected);
+        let out = mgr.handle(Event::Arrive(renamed));
+        assert_ne!(out, Outcome::Rejected);
         assert_eq!(mgr.tasks().len(), 2);
         // exits stay unambiguous: each name removes exactly one task
         assert_ne!(
-            mgr.handle(TaskEvent::Exit { name: "dup".into() }),
-            ReplanOutcome::Drained
+            mgr.handle(Event::Exit { name: "dup".into() }),
+            Outcome::Drained
         );
         assert_eq!(
-            mgr.handle(TaskEvent::Exit { name: "dup-2".into() }),
-            ReplanOutcome::Drained
+            mgr.handle(Event::Exit { name: "dup-2".into() }),
+            Outcome::Drained
         );
         assert!(mgr.tasks().is_empty());
     }
@@ -650,12 +686,12 @@ mod tests {
             TaskManager::new(&cost, &cluster, initial, PlannerOptions::default());
         let healthy = mgr.plan().unwrap().clone();
         // million-token sequences: no 16×A100-40G config holds them
-        let out = mgr.handle(TaskEvent::Arrive(TaskSpec::new(
+        let out = mgr.handle(Event::Arrive(TaskSpec::new(
             "huge",
             8,
             LengthDistribution::fit(60_000.0, 1.0, 16, 1_000_000),
         )));
-        assert_eq!(out, ReplanOutcome::Rejected);
+        assert_eq!(out, Outcome::Rejected);
         assert_eq!(mgr.tasks().len(), 1, "infeasible tenant must not be admitted");
         assert_eq!(
             mgr.plan().unwrap().groups,
@@ -665,12 +701,12 @@ mod tests {
         assert!(!mgr.replan_pending());
         // the survivor set memo was cleared, but normal service continues:
         // a feasible arrival afterwards replans as usual
-        let out = mgr.handle(TaskEvent::Arrive(TaskSpec::new(
+        let out = mgr.handle(Event::Arrive(TaskSpec::new(
             "ok",
             32,
             LengthDistribution::fit(700.0, 4.0, 16, 4096),
         )));
-        assert_ne!(out, ReplanOutcome::Rejected);
+        assert_ne!(out, Outcome::Rejected);
         assert_eq!(mgr.tasks().len(), 2);
         assert!(mgr.plan().is_some());
     }
@@ -697,13 +733,13 @@ mod tests {
             TaskManager::new(&cost, &cluster, initial.clone(), opts.clone());
         let mut async_mgr = TaskManager::new(&cost, &cluster, initial, opts);
 
-        let sync_out = sync_mgr.handle(TaskEvent::Arrive(arrive.clone()));
-        assert!(matches!(sync_out, ReplanOutcome::Redeployed { .. }));
+        let sync_out = sync_mgr.handle(Event::Arrive(arrive.clone()));
+        assert!(matches!(sync_out, Outcome::Redeployed { .. }));
 
         let stale = async_mgr.plan().unwrap().clone();
         assert_eq!(
-            async_mgr.apply_event(TaskEvent::Arrive(arrive)),
-            EventOutcome::Planning
+            async_mgr.apply_event(Event::Arrive(arrive)),
+            Outcome::Planning { opened: vec![] }
         );
         assert!(async_mgr.replan_pending());
         // the deployed plan is untouched while the search runs
@@ -742,11 +778,11 @@ mod tests {
             TaskManager::new(&cost, &cluster, initial, PlannerOptions::default());
         let a = TaskSpec::new("a", 32, LengthDistribution::fit(700.0, 4.0, 16, 4096));
         let b = TaskSpec::new("b", 32, LengthDistribution::fit(2800.0, 1.2, 16, 8192));
-        assert_eq!(mgr.apply_event(TaskEvent::Arrive(a)), EventOutcome::Planning);
+        assert_eq!(mgr.apply_event(Event::Arrive(a)), Outcome::Planning { opened: vec![] });
         mgr.pump_replan(4);
         // a second event lands while the first search is in flight: the
         // stale-target search is abandoned and a fresh one begun
-        assert_eq!(mgr.apply_event(TaskEvent::Arrive(b)), EventOutcome::Planning);
+        assert_eq!(mgr.apply_event(Event::Arrive(b)), Outcome::Planning { opened: vec![] });
         assert_eq!(mgr.superseded, 1);
         let budget = mgr.session().options().max_plans;
         mgr.pump_replan(budget);

@@ -139,7 +139,7 @@ impl CostModel {
 
     /// Max summed tokens per chunk (micro-batch) without OOM; 0 = infeasible.
     pub fn max_chunk_tokens(&self, cfg: ParallelConfig) -> u64 {
-        let mem = self.cluster.gpu_mem_gib * (1u64 << 30) as f64;
+        let mem = self.cluster.device.gpu_mem_gib * (1u64 << 30) as f64;
         let weights = self.model.weight_bytes_per_gpu(cfg.tp, cfg.pp) as f64;
         let free = mem - weights - MEM_OVERHEAD_GIB * (1u64 << 30) as f64;
         if free <= 0.0 {

@@ -22,13 +22,14 @@
 #![allow(clippy::print_stdout)]
 
 use anyhow::{anyhow, bail, Result};
-use lobra::cluster::ClusterSpec;
+use lobra::cluster::{ClusterSpec, VirtualCluster};
 use lobra::config::ModelDesc;
 use lobra::coordinator::planner::{Planner, PlannerOptions};
 use lobra::coordinator::runtime::{
-    default_churn_trace, parse_trace, BudgetMeter, ServeOptions, ServeRuntime,
+    default_churn_trace, parse_trace_for, BudgetMeter, ServeOptions, ServeRuntime,
 };
 use lobra::coordinator::scheduler::{Scheduler, SchedulerOptions};
+use lobra::coordinator::shard::ShardManager;
 use lobra::costmodel::{load_profile_or_analytic, CalibrationStore, CostModel};
 use lobra::exec::profile_sim_steps;
 use lobra::prelude::TaskSet;
@@ -40,9 +41,13 @@ lobra — multi-tenant LoRA fine-tuning coordinator (LobRA, PVLDB'25)
 
 USAGE:
   lobra plan      [--model 7b|32b|70b|tiny] [--gpus N]
-                  [--cluster a100|a800|local]
+                  [--cluster a100|a800|h100|local|MIXED]
                   [--tasks all|7b-subset|scalability] [--profile PATH]
                   [--no-config-proposal] [--no-lower-bound]
+                  (--cluster also takes a mixed-generation pool spec,
+                   `+`-separated device:count segments — e.g.
+                   --cluster a100:16+h100:8 — planning one shard per
+                   device pool, tasks routed by the per-type bound)
   lobra simulate  [--model ...] [--gpus N] [--cluster ...] [--tasks ...]
                   [--steps N] [--seed N] [--task-fused] [--profile PATH]
   lobra serve     [--model ...] [--gpus N] [--cluster ...] [--tasks ...]
@@ -69,9 +74,16 @@ USAGE:
                    do not fit queue per priority tier — preempting the
                    lowest tier when a higher one cannot be admitted — and
                    --rebalance-every K re-slices capacity across shards
-                   every K training steps. Trace lines:
-                     <at> arrive <name> <batch> <mean> <skew> <min> <max> [tier]
-                     <at> exit   <name>)
+                   every K training steps. A mixed --cluster spec runs
+                   one planning shard and one training loop per device
+                   pool (incompatible with --shards > 1). Trace lines
+                   (grammar v2 — cluster events shrink/restore planner
+                   capacity; preempted in-flight step work is charged):
+                     <at> arrive  <name> <batch> <mean> <skew> <min> <max> [tier]
+                     <at> exit    <name>
+                     <at> leave   <server>        # whole server departs
+                     <at> preempt <start> <end>   # GPUs [start, end) reclaimed
+                     <at> join    <server>        # server's down GPUs restore)
   lobra calibrate [--model ...] [--gpus N] [--cluster ...] [--tasks ...]
                   [--steps N] [--seed N] [--out PATH]
                   (run profiling steps through the sim executor, fit
@@ -135,16 +147,6 @@ impl Args {
     }
 }
 
-fn cluster_for(name: &str, gpus: u32) -> ClusterSpec {
-    match name {
-        "a800" => ClusterSpec::a800_80g(gpus),
-        // the local CPU world `lobra train` measures in situ — needed to
-        // reload a --save-profile'd profile (it is keyed to this world)
-        "local" => ClusterSpec::local_cpu(gpus),
-        _ => ClusterSpec::a100_40g(gpus),
-    }
-}
-
 fn tasks_for(name: &str) -> TaskSet {
     match name {
         "all" => TaskSet::paper_all(),
@@ -186,6 +188,11 @@ struct World {
     cluster: ClusterSpec,
     tasks: TaskSet,
     cost: CostModel,
+    /// Extra device pools of a mixed `--cluster a100:16+h100:8` spec —
+    /// empty for the classic single-pool worlds. A measured `--profile`
+    /// describes one device world, so it applies to the first pool only;
+    /// extra pools use their analytic cost models.
+    extra: Vec<(CostModel, ClusterSpec)>,
 }
 
 impl World {
@@ -196,14 +203,47 @@ impl World {
     fn parse(args: &Args, with_profile: bool) -> Result<World> {
         let model = model_for(args)?;
         let gpus = args.get_parse("gpus", 16u32)?;
-        let cluster = cluster_for(&args.get("cluster", "a100"), gpus);
+        let spec = args.get("cluster", "a100");
+        let fleet =
+            VirtualCluster::parse(&spec, gpus).map_err(|e| anyhow!("{e}\n{USAGE}"))?;
+        let mut pools = fleet.pools;
+        let cluster = pools.remove(0);
         let tasks = tasks_for(&args.get("tasks", "7b-subset"));
         let cost = if with_profile {
             cost_for(args, &model, &cluster)
         } else {
             CostModel::calibrated(&model, &cluster)
         };
-        Ok(World { model, cluster, tasks, cost })
+        let extra = pools
+            .into_iter()
+            .map(|p| (CostModel::calibrated(&model, &p), p))
+            .collect();
+        Ok(World { model, cluster, tasks, cost, extra })
+    }
+
+    fn is_mixed(&self) -> bool {
+        !self.extra.is_empty()
+    }
+
+    /// Owned fleet geometry over all pools (server spans for trace
+    /// validation, display name).
+    fn fleet(&self) -> VirtualCluster {
+        if self.extra.is_empty() {
+            VirtualCluster::homogeneous(self.cluster.clone())
+        } else {
+            VirtualCluster::mixed(
+                std::iter::once(self.cluster.clone())
+                    .chain(self.extra.iter().map(|(_, p)| p.clone()))
+                    .collect(),
+            )
+        }
+    }
+
+    /// Per-pool `(cost model, pool)` borrows for the fleet constructors.
+    fn worlds(&self) -> Vec<(&CostModel, &ClusterSpec)> {
+        std::iter::once((&self.cost, &self.cluster))
+            .chain(self.extra.iter().map(|(c, p)| (c, p)))
+            .collect()
     }
 }
 
@@ -217,11 +257,50 @@ fn main() -> Result<()> {
     match cmd.as_str() {
         "plan" => {
             let args = Args::parse(rest, &["no-config-proposal", "no-lower-bound"])?;
-            let World { model, cluster, tasks, cost } = World::parse(&args, true)?;
-            let planner = Planner::new(&cost, &cluster);
+            let world = World::parse(&args, true)?;
             let mut opts = PlannerOptions::default();
             opts.config_proposal = !args.has("no-config-proposal");
             opts.lower_bound_filter = !args.has("no-lower-bound");
+            if world.is_mixed() {
+                // one planning shard per device pool: tasks route by the
+                // per-type Theorem-1 bound and each pool plans against
+                // its own device's cost table
+                let mgr = ShardManager::new_fleet(world.worlds(), world.tasks.clone(), opts);
+                println!(
+                    "model={} fleet={} tasks={}",
+                    world.model.name,
+                    world.fleet().name,
+                    world.tasks.len()
+                );
+                for p in 0..mgr.n_shards() {
+                    let (_, pool) = mgr.shard_world(p);
+                    match mgr.shard_plan(p) {
+                        Some(plan) => println!(
+                            "  {}: {} tasks | [{}] | gpus_used={} step={:.3}s",
+                            pool.name,
+                            mgr.shard_tasks(p).len(),
+                            plan.notation(),
+                            plan.gpus_used(),
+                            plan.expected_step_time
+                        ),
+                        None => println!(
+                            "  {}: {} tasks | no feasible plan",
+                            pool.name,
+                            mgr.shard_tasks(p).len()
+                        ),
+                    }
+                }
+                let plan = mgr.plan().ok_or_else(|| anyhow!("no feasible plan"))?;
+                println!(
+                    "fleet: {} replicas, step {:.3}s (slowest pool — LoRA \
+                     gradients sync at the fleet step boundary)",
+                    plan.n_replicas(),
+                    plan.expected_step_time
+                );
+                return Ok(());
+            }
+            let World { model, cluster, tasks, cost, .. } = world;
+            let planner = Planner::new(&cost, &cluster);
             let (plan, stats) = planner
                 .plan_with_stats(&tasks, opts)
                 .ok_or_else(|| anyhow!("no feasible plan"))?;
@@ -243,7 +322,11 @@ fn main() -> Result<()> {
         }
         "simulate" => {
             let args = Args::parse(rest, &["task-fused"])?;
-            let World { cluster, tasks, cost, .. } = World::parse(&args, true)?;
+            let world = World::parse(&args, true)?;
+            if world.is_mixed() {
+                bail!("simulate models a single device pool; mixed --cluster specs are for plan/serve");
+            }
+            let World { cluster, tasks, cost, .. } = world;
             let steps = args.get_parse("steps", 100usize)?;
             let planner = Planner::new(&cost, &cluster);
             let plan = if args.has("task-fused") {
@@ -261,7 +344,8 @@ fn main() -> Result<()> {
         }
         "serve" => {
             let args = Args::parse(rest, &["certify", "wall-meter"])?;
-            let World { model, cluster, tasks, cost } = World::parse(&args, true)?;
+            let world = World::parse(&args, true)?;
+            let fleet = world.fleet();
             let budget = args.get_parse("replan-budget", 180.0f64)?;
             let spacing = args.get_parse("spacing", 600.0f64)?;
             let per_plan = args.get_parse("sim-seconds-per-plan", 1e-4f64)?;
@@ -269,9 +353,11 @@ fn main() -> Result<()> {
                 Some(path) => {
                     let text = std::fs::read_to_string(path)
                         .map_err(|e| anyhow!("cannot read trace {path}: {e}"))?;
-                    parse_trace(&text).map_err(|e| anyhow!("{e}"))?
+                    // validate cluster events against this fleet's
+                    // geometry up front, not at delivery
+                    parse_trace_for(&text, &fleet).map_err(|e| anyhow!("{e}"))?
                 }
-                None => default_churn_trace(&tasks, spacing),
+                None => default_churn_trace(&world.tasks, spacing),
             };
             if trace.is_empty() {
                 bail!("empty churn trace");
@@ -289,11 +375,17 @@ fn main() -> Result<()> {
             opts.planner_threads = args.get_parse("planner-threads", 0usize)?;
             opts.shards = args.get_parse("shards", 1usize)?.max(1);
             opts.rebalance_every = args.get_parse("rebalance-every", 0u64)?;
+            if world.is_mixed() && opts.shards > 1 {
+                bail!(
+                    "a mixed --cluster runs one planning shard per device \
+                     pool; drop --shards"
+                );
+            }
             println!(
                 "serving model={} cluster={} | {} events | replan budget {} | \
                  slice {} plans | meter {:?} | planner {} | {}",
-                model.name,
-                cluster.name,
+                world.model.name,
+                fleet.name,
                 trace.len(),
                 match opts.replan_budget {
                     Some(b) => format!("{b:.0}s"),
@@ -305,14 +397,19 @@ fn main() -> Result<()> {
                     0 => "sync (in-loop)".into(),
                     n => format!("async service ({n} threads)"),
                 },
-                match (opts.shards, opts.rebalance_every) {
-                    (1, _) => "global (1 shard)".into(),
-                    (s, 0) => format!("{s} planning shards"),
-                    (s, k) => format!("{s} planning shards, rebalance every {k} steps"),
+                match (world.is_mixed(), opts.shards, opts.rebalance_every) {
+                    (true, ..) => {
+                        format!("{} device pools (one shard each)", fleet.pools.len())
+                    }
+                    (false, 1, _) => "global (1 shard)".into(),
+                    (false, s, 0) => format!("{s} planning shards"),
+                    (false, s, k) => {
+                        format!("{s} planning shards, rebalance every {k} steps")
+                    }
                 },
             );
             let n_shards = opts.shards;
-            let mut rt = ServeRuntime::new(&cost, &cluster, opts);
+            let mut rt = ServeRuntime::new_fleet(world.worlds(), opts);
             let report = rt.run_trace(&trace);
 
             let mut t = Table::new(&[
@@ -366,6 +463,19 @@ fn main() -> Result<()> {
                 report.plans_enumerated_total,
                 report.replan_windows,
             );
+            if report.leave_events + report.preempt_events + report.join_events > 0 {
+                let recs: Vec<String> =
+                    report.recoveries.iter().map(|r| format!("{r:.0}s")).collect();
+                println!(
+                    "cluster churn: {} leaves, {} preempts, {} joins | {:.1} \
+                     GPU·s of interrupted-step work lost | time-to-recover [{}]",
+                    report.leave_events,
+                    report.preempt_events,
+                    report.join_events,
+                    report.gpu_seconds_lost_preempt,
+                    recs.join(" "),
+                );
+            }
             if n_shards > 1 {
                 let ttas: Vec<String> = report
                     .tta_by_tier()
@@ -399,7 +509,11 @@ fn main() -> Result<()> {
         "calibrate" => {
             let args = Args::parse(rest, &[])?;
             // calibrate *creates* profiles — never plan under one
-            let World { model, cluster, tasks, cost } = World::parse(&args, false)?;
+            let world = World::parse(&args, false)?;
+            if world.is_mixed() {
+                bail!("calibrate profiles one device world at a time; run one --cluster pool per profile");
+            }
+            let World { model, cluster, tasks, cost, .. } = world;
             let steps = args.get_parse("steps", 24usize)?;
             let seed = args.get_parse("seed", 7u64)?;
             let out = args.get("out", "lobra_profile.json");
@@ -472,7 +586,17 @@ fn main() -> Result<()> {
             // accounting). With --profile the plan comes from *measured*
             // microbatch times instead of the analytic constants.
             if args.has("model") || args.has("profile") {
-                let World { model, cluster, tasks, cost } = World::parse(&args, true)?;
+                let world = World::parse(&args, true)?;
+                if world.is_mixed() {
+                    // the real PJRT engine is one device world; the virtual
+                    // accounting clock follows its first pool
+                    println!(
+                        "mixed --cluster: accounting under the first pool \
+                         ({}) — extra pools are ignored by `train`",
+                        world.cluster.name
+                    );
+                }
+                let World { model, cluster, tasks, cost, .. } = world;
                 let plan = Planner::new(&cost, &cluster)
                     .plan(&tasks, PlannerOptions::default())
                     .ok_or_else(|| anyhow!("no feasible plan for the virtual cluster"))?;
@@ -538,7 +662,11 @@ fn main() -> Result<()> {
         }
         "info" => {
             let args = Args::parse(rest, &[])?;
-            let World { model, cluster, cost, .. } = World::parse(&args, false)?;
+            let world = World::parse(&args, false)?;
+            if world.is_mixed() {
+                bail!("info describes a single device pool; mixed --cluster specs are for plan/serve");
+            }
+            let World { model, cluster, cost, .. } = world;
             let planner = Planner::new(&cost, &cluster);
             println!(
                 "model={} params={:.1}B layers={} d={}",

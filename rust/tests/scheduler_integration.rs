@@ -6,7 +6,7 @@ use lobra::config::ModelDesc;
 use lobra::coordinator::dispatcher::DispatchPolicy;
 use lobra::coordinator::planner::{Planner, PlannerOptions};
 use lobra::coordinator::scheduler::{Scheduler, SchedulerOptions};
-use lobra::coordinator::tasks::{ReplanOutcome, TaskEvent, TaskManager};
+use lobra::coordinator::tasks::{Event, Outcome, TaskManager};
 use lobra::costmodel::CostModel;
 use lobra::data::LengthDistribution;
 use lobra::prelude::{TaskSet, TaskSpec};
@@ -82,16 +82,16 @@ fn task_manager_lifecycle_roundtrip() {
     let mut mgr = TaskManager::new(&cost, &cluster, initial, PlannerOptions::default());
     assert!(mgr.plan().is_some());
     // arrival of a long task
-    let out = mgr.handle(TaskEvent::Arrive(TaskSpec::new(
+    let out = mgr.handle(Event::Arrive(TaskSpec::new(
         "long",
         16,
         LengthDistribution::fit(5000.0, 0.8, 64, 14000),
     )));
-    assert_ne!(out, ReplanOutcome::Drained);
+    assert_ne!(out, Outcome::Drained);
     assert_eq!(mgr.tasks().len(), 3);
     // exits back down to empty
     for name in ["a", "b", "long"] {
-        mgr.handle(TaskEvent::Exit { name: name.into() });
+        mgr.handle(Event::Exit { name: name.into() });
     }
     assert!(mgr.plan().is_none());
     assert!(mgr.tasks().is_empty());

@@ -19,7 +19,7 @@ use lobra::cluster::ClusterSpec;
 use lobra::config::{ModelDesc, TaskSet, TaskSpec};
 use lobra::coordinator::planner::{Planner, PlannerOptions};
 use lobra::coordinator::session::PlanningSession;
-use lobra::coordinator::tasks::{ReplanOutcome, TaskEvent, TaskManager};
+use lobra::coordinator::tasks::{Event, Outcome, TaskManager};
 use lobra::costmodel::CostModel;
 use lobra::data::LengthDistribution;
 use lobra::util::Rng;
@@ -133,26 +133,26 @@ fn churn_accounting_over_twenty_events() {
             let pick = absent[rng.below(absent.len() as u64) as usize].clone();
             live.push(pick.name.clone());
             expected_replans += 1;
-            let out = mgr.handle(TaskEvent::Arrive(pick));
-            assert_ne!(out, ReplanOutcome::Rejected, "event {event}");
+            let out = mgr.handle(Event::Arrive(pick));
+            assert_ne!(out, Outcome::Rejected, "event {event}");
             out
         } else if roll < 0.5 && !live.is_empty() {
             // duplicate arrival: rejected, no replan
             let name = &live[rng.below(live.len() as u64) as usize];
             let dup = pool.iter().find(|s| &s.name == name).unwrap().clone();
-            let out = mgr.handle(TaskEvent::Arrive(dup));
-            assert_eq!(out, ReplanOutcome::Rejected, "event {event}");
+            let out = mgr.handle(Event::Arrive(dup));
+            assert_eq!(out, Outcome::Rejected, "event {event}");
             out
         } else if roll < 0.65 {
             // unknown exit: unchanged, no replan
-            let out = mgr.handle(TaskEvent::Exit { name: "never-arrived".into() });
-            assert_eq!(out, ReplanOutcome::Unchanged, "event {event}");
+            let out = mgr.handle(Event::Exit { name: "never-arrived".into() });
+            assert_eq!(out, Outcome::Unchanged, "event {event}");
             out
         } else if live.len() > 1 {
             // real exit leaving a non-empty set: replan expected
             let victim = live.remove(rng.below(live.len() as u64) as usize);
             expected_replans += 1;
-            mgr.handle(TaskEvent::Exit { name: victim })
+            mgr.handle(Event::Exit { name: victim })
         } else {
             // keep at least one live task so the manager never drains
             let absent: Vec<&TaskSpec> = pool
@@ -162,7 +162,7 @@ fn churn_accounting_over_twenty_events() {
             let pick = absent[rng.below(absent.len() as u64) as usize].clone();
             live.push(pick.name.clone());
             expected_replans += 1;
-            mgr.handle(TaskEvent::Arrive(pick))
+            mgr.handle(Event::Arrive(pick))
         };
         assert_eq!(
             mgr.replans, expected_replans,

@@ -27,8 +27,8 @@ use lobra::coordinator::planner::PlannerOptions;
 use lobra::coordinator::runtime::{
     gen_churn_trace, BudgetMeter, ServeOptions, ServeReport, ServeRuntime,
 };
-use lobra::coordinator::shard::{FleetOutcome, ShardManager};
-use lobra::coordinator::tasks::{EventOutcome, TaskEvent, TaskManager};
+use lobra::coordinator::shard::ShardManager;
+use lobra::coordinator::tasks::{Event, Outcome, TaskManager};
 use lobra::costmodel::CostModel;
 use lobra::data::LengthDistribution;
 use lobra::util::par::with_max_threads;
@@ -61,12 +61,12 @@ fn initial() -> TaskSet {
 
 /// The churn sequence every identity test replays: arrivals, an exit, a
 /// re-arrival — the recurring-context regime the session memo serves.
-fn churn_events() -> Vec<TaskEvent> {
+fn churn_events() -> Vec<Event> {
     vec![
-        TaskEvent::Arrive(short("c1")),
-        TaskEvent::Arrive(long("d1")),
-        TaskEvent::Exit { name: "c1".into() },
-        TaskEvent::Arrive(short("c2")),
+        Event::Arrive(short("c1")),
+        Event::Arrive(long("d1")),
+        Event::Exit { name: "c1".into() },
+        Event::Arrive(short("c2")),
     ]
 }
 
@@ -93,7 +93,7 @@ fn drive_global(threads: usize) -> Vec<Snap> {
         let mut snaps =
             vec![mgr.plan().and_then(|p| snap_groups(&p.groups, p.expected_step_time))];
         for ev in churn_events() {
-            if mgr.apply_event(ev) == EventOutcome::Planning {
+            if matches!(mgr.apply_event(ev), Outcome::Planning { .. }) {
                 while let Some(r) = mgr.pump_replan(10_000) {
                     if r.done {
                         break;
@@ -118,7 +118,7 @@ fn drive_sharded(threads: usize, n_shards: usize, gpus: u32) -> Vec<Snap> {
         let mut snaps =
             vec![mgr.plan().and_then(|p| snap_groups(&p.groups, p.expected_step_time))];
         for ev in churn_events() {
-            if let FleetOutcome::Planning { .. } = mgr.apply_event(ev) {
+            if let Outcome::Planning { .. } = mgr.apply_event(ev) {
                 while let Some(r) = mgr.pump_replan(10_000) {
                     if r.done {
                         break;
@@ -186,7 +186,7 @@ fn serve_sharded(seed: u64) -> (usize, ServeReport) {
     let trace = gen_churn_trace(6, seed);
     let arrivals = trace
         .iter()
-        .filter(|e| matches!(e.event, TaskEvent::Arrive(_)))
+        .filter(|e| matches!(e.event, Event::Arrive(_)))
         .count();
     (arrivals, ServeRuntime::new(&cost, &cluster, o).run_trace(&trace))
 }
@@ -232,13 +232,13 @@ fn preemption_never_evicts_an_equal_or_higher_tier() {
     ]);
     let mut mgr = ShardManager::new(&cost, &cluster, initial, fast_opts(), 2);
     // same tier: may queue or plan, must never preempt a peer
-    mgr.apply_event(TaskEvent::Arrive(long("peer").with_tier(3)));
+    mgr.apply_event(Event::Arrive(long("peer").with_tier(3)));
     assert_eq!(mgr.preemptions, 0, "preempted a same-tier tenant");
     // higher priority: whatever the outcome, it is never a rejection —
     // the arrival is servable on this cluster, so it is admitted (possibly
     // after preempting tier-3 tenants) or held in the queue
-    let out = mgr.apply_event(TaskEvent::Arrive(long("urgent").with_tier(0)));
-    assert_ne!(out, FleetOutcome::Rejected, "servable tier-0 arrival rejected");
+    let out = mgr.apply_event(Event::Arrive(long("urgent").with_tier(0)));
+    assert_ne!(out, Outcome::Rejected, "servable tier-0 arrival rejected");
     // conservation: every tenant is live or held — nobody is silently lost
     // (3 live arrivals so far, minus the same-tier peer if it was queued
     // and stayed there; preempted tenants re-enter the queue)
