@@ -1,25 +1,40 @@
 //! Calibration fit quality (ours): sim-backed in-situ calibration of the
 //! cost model (ROADMAP "real profiling hooks", paper Appendix D).
 //!
-//! Runs `lobra calibrate`'s loop — dispatch steps through the
-//! `SimExecutor`, which tags every executed microbatch with an exact
-//! `(b, s, seconds)` observation — then fits `t(b,s) = β₀ + β₁·bs + β₂·bs²`
-//! per parallel configuration and reports:
+//! Runs `lobra calibrate`'s loop twice over: first dispatch steps through
+//! the planner's own deployment, then a multi-GPU **cell sweep** — one
+//! homogeneous deployment per power-of-two `(tp, pp)` cell that fits the
+//! fleet — so every parallel configuration the planner could pick gets
+//! profiled, not just the ones it did. The `SimExecutor` tags every
+//! executed microbatch with an exact `(b, s, seconds, comm, bubble)`
+//! observation; the store fits `t_compute(b,s) = β₀ + β₁·bs + β₂·bs²`
+//! per configuration and the bench reports, per `(tp, pp)` cell:
 //!
 //!  * **rms_rel_error** — the fit's error against its own observations;
-//!  * **max_rel_divergence** — worst-case relative gap between the fitted
-//!    prediction and the analytic `t_microbatch` over the observed shapes.
-//!    The sim's analytic model is exactly in the fitted family, so both
-//!    numbers measure end-to-end calibration fidelity (target: ~1e-6);
+//!  * **max_rel_divergence** — worst-case relative gap between the
+//!    profiled cost model's `t_microbatch` (fitted compute + analytic
+//!    tp/pp communication) and the analytic `t_microbatch` over the
+//!    observed shapes. The sim's chunk times are exactly in the fitted
+//!    family, so both numbers measure end-to-end calibration fidelity
+//!    across the whole (tp, pp) matrix (target: ~1e-6);
 //!  * whether a deployment plan computed from the measured profile
 //!    reproduces the analytic plan.
 //!
 //! Results go to `BENCH_calibration.json` (path override:
 //! `LOBRA_BENCH_JSON`; knobs: `LOBRA_BENCH_GPUS`, `LOBRA_BENCH_STEPS`).
 //!
+//! `LOBRA_BENCH_BASELINE=path` gates the run's JSON against a checked-in
+//! baseline (the `*_seconds` wall-clocks are host-dependent and skipped;
+//! the observation counts, fit errors, and divergences are sim-exact and
+//! locked) and exits nonzero on drift. A baseline holding a
+//! `"bless": true` line is overwritten with this run instead — how the
+//! first CI run locks in real numbers from a toolchain-less commit.
+//!
 //! ```bash
 //! cargo bench --bench calibration
 //! LOBRA_BENCH_GPUS=32 LOBRA_BENCH_STEPS=32 cargo bench --bench calibration
+//! LOBRA_BENCH_BASELINE=benches/baselines/BENCH_calibration.json \
+//!     cargo bench --bench calibration                  # drift gate
 //! ```
 
 
@@ -28,12 +43,12 @@
 #![allow(clippy::print_stdout)]
 
 use lobra::cluster::ClusterSpec;
-use lobra::config::ModelDesc;
-use lobra::coordinator::planner::{Planner, PlannerOptions};
+use lobra::config::{ModelDesc, ParallelConfig};
+use lobra::coordinator::planner::{DeploymentPlan, Planner, PlannerOptions};
 use lobra::costmodel::{CalibrationStore, CostModel};
 use lobra::exec::profile_sim_steps;
 use lobra::prelude::TaskSet;
-use lobra::util::bench::{fmt_secs, Table};
+use lobra::util::bench::{fmt_secs, gate_against_baseline, BaselineGate, Table};
 use lobra::util::clock::Stopwatch;
 use lobra::util::env as benv;
 
@@ -46,15 +61,49 @@ fn json_f64(x: f64) -> String {
     }
 }
 
+/// Wall-clock lines (`profiling_seconds`, `fit_seconds`) vary per host;
+/// everything else — observation counts, fit errors, divergences — is
+/// sim-exact and locked by the baseline gate.
+fn host_dependent(line: &str) -> bool {
+    line.contains("seconds")
+}
+
+/// Render the shared baseline gate's outcome; exits nonzero on drift so
+/// CI fails loudly when the fit-quality metrics change.
+fn render_gate(path: &str, current: &str) {
+    match gate_against_baseline(path, current, &host_dependent) {
+        BaselineGate::Blessed => println!("baseline {path} blessed from this run"),
+        BaselineGate::Ok(n) => println!("baseline {path}: OK ({n} deterministic lines)"),
+        BaselineGate::Unreadable(e) => {
+            eprintln!("ERROR: baseline {path} unreadable: {e}");
+            std::process::exit(1);
+        }
+        BaselineGate::WriteFailed(e) => {
+            eprintln!("ERROR: blessing baseline {path}: {e}");
+            std::process::exit(1);
+        }
+        BaselineGate::Drift(diff) => {
+            eprintln!("ERROR: calibration metrics drifted from baseline {path}:");
+            for (w, g) in diff {
+                eprintln!("  - {w}");
+                eprintln!("  + {g}");
+            }
+            std::process::exit(1);
+        }
+    }
+}
+
 fn main() {
     let gpus: u32 = benv::parse_or("LOBRA_BENCH_GPUS", 16);
     let steps: usize = benv::parse_or("LOBRA_BENCH_STEPS", 16);
     let json_path =
         benv::var("LOBRA_BENCH_JSON").unwrap_or("BENCH_calibration.json").to_string();
+    let baseline_path = benv::var("LOBRA_BENCH_BASELINE");
 
     let cluster = ClusterSpec::a100_40g(gpus);
     let model = ModelDesc::llama2_7b();
     let tasks = TaskSet::paper_7b_subset();
+    let n_tasks = tasks.tasks.len() as u32;
     let cost = CostModel::calibrated(&model, &cluster);
     let planner = Planner::new(&cost, &cluster);
     let plan = planner
@@ -66,11 +115,36 @@ fn main() {
     );
     let t0 = Stopwatch::start();
     let mut store = CalibrationStore::new(&cost);
-    let n_obs = profile_sim_steps(&cost, &plan, &tasks, steps, 7, &mut store);
+    // First the planner's own deployment, then one homogeneous deployment
+    // per power-of-two (tp, pp) cell that fits the fleet, so the fit
+    // matrix covers every configuration the planner could have picked.
+    let mut n_obs = profile_sim_steps(&cost, &plan, &tasks, steps, 7, &mut store);
+    let mut cells = 0u32;
+    let mut pp = 1u32;
+    while pp <= gpus && pp <= model.n_layers {
+        let mut tp = 1u32;
+        while tp * pp <= gpus {
+            let config = ParallelConfig::new(tp, pp);
+            let replicas = gpus / (tp * pp);
+            let cell_plan = DeploymentPlan::homogeneous(config, replicas, n_tasks);
+            let seed = 1000 + u64::from(pp) * 64 + u64::from(tp);
+            n_obs += profile_sim_steps(&cost, &cell_plan, &tasks, steps, seed, &mut store);
+            cells += 1;
+            tp *= 2;
+        }
+        pp *= 2;
+    }
     let profile_s = t0.elapsed_secs();
     let t1 = Stopwatch::start();
     let n_fitted = store.refit();
     let fit_s = t1.elapsed_secs();
+
+    // The end-to-end check: attach the measured profile to a fresh cost
+    // model and compare its t_microbatch — fitted compute plus analytic
+    // communication — against the purely analytic one, per cell.
+    let profile = store.profile();
+    let profiled = CostModel::from_profile(&model, &cluster, profile)
+        .expect("freshly measured profile must attach to its own world");
 
     let mut t = Table::new(&["config", "obs", "shapes", "rms_rel_error", "max_rel_divergence"]);
     let mut rows_json = String::new();
@@ -80,19 +154,20 @@ fn main() {
             e.observations.iter().map(|o| (o.b, o.s)).collect();
         shapes.sort_unstable();
         shapes.dedup();
-        let (rms, max_div) = match e.fitted {
-            Some(f) => {
-                let rms = f.rms_rel_error(&e.observations).unwrap_or(f64::NAN);
-                let mut d = 0.0f64;
-                for &(b, s) in &shapes {
-                    let analytic = cost.t_microbatch(e.config, b, s);
-                    if analytic > 0.0 {
-                        d = d.max(((f.predict(b, s) - analytic) / analytic).abs());
-                    }
+        let (rms, max_div) = if e.fitted.is_some() {
+            let rms = e.rms_rel_error().unwrap_or(f64::NAN);
+            let mut d = 0.0f64;
+            for &(b, s) in &shapes {
+                let analytic = cost.t_microbatch(e.config, b, s);
+                if analytic > 0.0 {
+                    d = d.max(
+                        ((profiled.t_microbatch(e.config, b, s) - analytic) / analytic).abs(),
+                    );
                 }
-                (rms, d)
             }
-            None => (f64::NAN, f64::NAN),
+            (rms, d)
+        } else {
+            (f64::NAN, f64::NAN)
         };
         if max_div.is_finite() {
             worst_divergence = worst_divergence.max(max_div);
@@ -119,15 +194,13 @@ fn main() {
     t.print();
 
     // Close the loop: plan from the measured profile and compare.
-    let profiled = CostModel::from_profile(&model, &cluster, store.profile())
-        .expect("freshly measured profile must attach to its own world");
     let replan = Planner::new(&profiled, &cluster)
         .plan(&tasks, PlannerOptions::default())
         .expect("no feasible plan from the measured profile");
     let plans_agree = replan.groups == plan.groups;
 
     println!(
-        "\n{n_obs} observations; {n_fitted}/{} configs fitted; \
+        "\n{n_obs} observations over {cells} swept cells; {n_fitted}/{} configs fitted; \
          profiling {} + fit {}; worst divergence {worst_divergence:.3e}",
         store.entries().len(),
         fmt_secs(profile_s),
@@ -141,7 +214,7 @@ fn main() {
 
     let json = format!(
         "{{\n  \"bench\": \"calibration\",\n  \"gpus\": {gpus},\n  \"steps\": {steps},\n  \
-         \"observations\": {n_obs},\n  \"configs_fitted\": {n_fitted},\n  \
+         \"cells\": {cells},\n  \"observations\": {n_obs},\n  \"configs_fitted\": {n_fitted},\n  \
          \"configs_total\": {},\n  \"profile_generation\": {},\n  \
          \"profiling_seconds\": {profile_s:.6},\n  \"fit_seconds\": {fit_s:.6},\n  \
          \"worst_rel_divergence\": {},\n  \"plans_agree\": {plans_agree},\n  \
@@ -153,5 +226,8 @@ fn main() {
     match std::fs::write(&json_path, &json) {
         Ok(()) => println!("\nfit quality recorded to {json_path}"),
         Err(e) => eprintln!("\nWARNING: could not write {json_path}: {e}"),
+    }
+    if let Some(p) = baseline_path {
+        render_gate(p, &json);
     }
 }

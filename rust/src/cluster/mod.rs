@@ -22,6 +22,8 @@ pub use sim::{GpuLedger, ReplicaSim};
 
 use std::collections::BTreeSet;
 
+use crate::costmodel::fnv1a;
+
 /// Static description of one GPU generation: the per-device numbers the cost
 /// model consumes. Pools of different `DeviceProfile`s can share one
 /// [`VirtualCluster`]; cost tables key on these fields (via the world
@@ -115,6 +117,24 @@ impl DeviceProfile {
     /// Effective dense rate per GPU (FLOP/s).
     pub fn effective_flops(&self) -> f64 {
         self.tflops * 1e12 * self.mfu
+    }
+
+    /// Fingerprint of this device generation: every field the cost model
+    /// reads plus the generation name. Calibration profiles are keyed by
+    /// this (in addition to the `(model, cluster)` world fingerprint,
+    /// which folds it in), so in a mixed-generation fleet one pool's
+    /// measured fits can never serve another pool's planning.
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = 0xcbf29ce484222325u64;
+        for b in self.name.as_bytes() {
+            h = fnv1a(h, *b as u64);
+        }
+        h = fnv1a(h, self.gpus_per_server as u64);
+        for v in [self.gpu_mem_gib, self.tflops, self.mfu, self.intra_bw_gbs, self.inter_bw_gbs]
+        {
+            h = fnv1a(h, v.to_bits());
+        }
+        h
     }
 }
 

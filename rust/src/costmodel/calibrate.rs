@@ -53,8 +53,12 @@ use super::table::world_fingerprint;
 
 /// Schema marker of the persisted profile JSON.
 const PROFILE_KIND: &str = "lobra-calibration-profile";
-/// Bump when the persisted schema changes incompatibly.
-const PROFILE_VERSION: u64 = 1;
+/// Bump when the persisted schema changes incompatibly. Version 2 added
+/// per-observation communication/bubble attribution and the device
+/// fingerprint; version-1 profiles fitted raw wall-clocks (ascribing comm
+/// and pipeline bubble to compute), so they are rejected rather than
+/// silently reinterpreted.
+const PROFILE_VERSION: u64 = 2;
 /// Per-configuration observation cap: beyond this the store keeps a FIFO
 /// ring of the most recent measurements. Bounds the resident memory and
 /// the persisted JSON of arbitrarily long training runs (a 100k-step run
@@ -63,12 +67,44 @@ const PROFILE_VERSION: u64 = 1;
 const MAX_OBS_PER_CONFIG: usize = 4096;
 
 /// One profiled observation: a microbatch of `b` sequences × `s` tokens
-/// took `seconds`.
+/// took `seconds` of attributed wall time, of which `comm` went to TP/PP
+/// collectives and `bubble` is this microbatch's share of the pipeline
+/// fill/drain bubble. The fit regresses [`compute_seconds`]
+/// (wall − comm − bubble) so multi-GPU measurements don't ascribe
+/// communication or bubble time to the `t(b,s)` compute family.
+///
+/// [`compute_seconds`]: Observation::compute_seconds
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Observation {
     pub b: u64,
     pub s: u64,
+    /// Full attributed per-microbatch wall time (compute + comm + bubble
+    /// share), seconds.
     pub seconds: f64,
+    /// TP all-reduce + PP p2p seconds inside `seconds`.
+    pub comm: f64,
+    /// This microbatch's share of the pipeline bubble inside `seconds`.
+    pub bubble: f64,
+}
+
+impl Observation {
+    /// A single-device observation: the whole wall time is compute.
+    pub fn new(b: u64, s: u64, seconds: f64) -> Self {
+        Self { b, s, seconds, comm: 0.0, bubble: 0.0 }
+    }
+
+    /// A multi-GPU observation with explicit comm/bubble attribution.
+    pub fn with_overheads(b: u64, s: u64, seconds: f64, comm: f64, bubble: f64) -> Self {
+        Self { b, s, seconds, comm, bubble }
+    }
+
+    /// Wall time minus communication and bubble share — the quantity the
+    /// `t(b,s)` family is fitted against (clamped at zero: attribution is
+    /// measured too, so rounding can push the difference slightly
+    /// negative).
+    pub fn compute_seconds(&self) -> f64 {
+        (self.seconds - self.comm - self.bubble).max(0.0)
+    }
 }
 
 /// Fitted per-microbatch time model `t(b,s) = β₀ + β₁·b·s + β₂·b·s²`.
@@ -80,15 +116,17 @@ pub struct FittedCost {
 }
 
 impl FittedCost {
-    /// Predicted microbatch seconds.
+    /// Predicted microbatch *compute* seconds (comm and bubble are
+    /// subtracted before fitting; the cost model re-adds its analytic
+    /// communication terms on top of this prediction).
     pub fn predict(&self, b: u64, s: u64) -> f64 {
         let bs = (b * s) as f64;
         self.beta0 + self.beta1 * bs + self.beta2 * bs * s as f64
     }
 
-    /// Relative RMS error over a set of observations; `None` when the set
-    /// is empty (an empty set carries no evidence of fit quality — the old
-    /// `0.0` return read as a *perfect* fit).
+    /// Relative RMS error against the observations' compute seconds;
+    /// `None` when the set is empty (an empty set carries no evidence of
+    /// fit quality — the old `0.0` return read as a *perfect* fit).
     pub fn rms_rel_error(&self, obs: &[Observation]) -> Option<f64> {
         if obs.is_empty() {
             return None;
@@ -96,8 +134,9 @@ impl FittedCost {
         let se: f64 = obs
             .iter()
             .map(|o| {
+                let want = o.compute_seconds();
                 let p = self.predict(o.b, o.s);
-                let r = (p - o.seconds) / o.seconds.max(1e-12);
+                let r = (p - want) / want.max(1e-12);
                 r * r
             })
             .sum();
@@ -115,6 +154,19 @@ impl FittedCost {
 /// microbatch at one sequence length) are reported as `None` — the caller
 /// keeps its analytic constants for that configuration.
 pub fn fit(obs: &[Observation]) -> Option<FittedCost> {
+    fit_impl(obs, false)
+}
+
+/// Relative least squares: each observation's row and target are scaled by
+/// `1 / compute_seconds`, so every point contributes O(1) to the objective
+/// and a wild outlier cannot bend the whole fit toward itself. Used as the
+/// *ranking* fit inside [`fit_trimmed`] — the final coefficients still come
+/// from the absolute fit on the surviving observations.
+fn fit_weighted(obs: &[Observation]) -> Option<FittedCost> {
+    fit_impl(obs, true)
+}
+
+fn fit_impl(obs: &[Observation], weighted: bool) -> Option<FittedCost> {
     if obs.len() < 3 {
         return None;
     }
@@ -141,12 +193,14 @@ pub fn fit(obs: &[Observation]) -> Option<FittedCost> {
     let mut ata = [[0.0f64; 3]; 3];
     let mut aty = [0.0f64; 3];
     for (row, o) in rows.iter().zip(obs) {
-        let sr = [row[0] / scale[0], row[1] / scale[1], row[2] / scale[2]];
+        let y = o.compute_seconds();
+        let w = if weighted { 1.0 / y.max(1e-12) } else { 1.0 };
+        let sr = [w * row[0] / scale[0], w * row[1] / scale[1], w * row[2] / scale[2]];
         for i in 0..3 {
             for j in 0..3 {
                 ata[i][j] += sr[i] * sr[j];
             }
-            aty[i] += sr[i] * o.seconds;
+            aty[i] += sr[i] * w * y;
         }
     }
     // Singularity tolerance relative to the equilibrated matrix scale
@@ -195,6 +249,50 @@ fn solve3(mut a: [[f64; 3]; 3], mut y: [f64; 3], tol: f64) -> Option<[f64; 3]> {
     Some(x)
 }
 
+/// Relative residual of one observation against a candidate fit.
+fn rel_residual(f: &FittedCost, o: &Observation) -> f64 {
+    let want = o.compute_seconds();
+    ((f.predict(o.b, o.s) - want) / want.max(1e-12)).abs()
+}
+
+/// Trimmed least squares: rank observations by relative residual against a
+/// robust (relative-weighted) fit, drop the `⌈trim_fraction·n⌉` worst, and
+/// refit on the survivors. Real hardware produces occasional wild outliers
+/// — a preempted kernel, a page-fault storm mid-step — and a plain
+/// absolute least-squares fit chases them so hard that ranking residuals
+/// against *it* would drop clean points instead (the outliers end up with
+/// the smallest residuals); the 1/y-weighted ranking fit bounds each
+/// point's influence, so the outliers surface.
+///
+/// Deterministic: residual ties break by observation index. Conservative:
+/// trimming never leaves fewer than 4 points (below that the refit is as
+/// noise-driven as the outliers were), and a survivor set that turns out
+/// collinear falls back to the untrimmed fit rather than `None`.
+pub fn fit_trimmed(obs: &[Observation], trim_fraction: f64) -> Option<FittedCost> {
+    let base = fit(obs)?;
+    if trim_fraction <= 0.0 {
+        return Some(base);
+    }
+    let drop = (trim_fraction * obs.len() as f64).ceil() as usize;
+    let keep_n = obs.len().saturating_sub(drop);
+    if drop == 0 || keep_n < 4 {
+        return Some(base);
+    }
+    let ranker = match fit_weighted(obs) {
+        Some(r) => r,
+        None => return Some(base),
+    };
+    let mut by_residual: Vec<usize> = (0..obs.len()).collect();
+    by_residual.sort_by(|&i, &j| {
+        let (ri, rj) = (rel_residual(&ranker, &obs[i]), rel_residual(&ranker, &obs[j]));
+        rj.partial_cmp(&ri).unwrap_or(std::cmp::Ordering::Equal).then(i.cmp(&j))
+    });
+    let mut keep = by_residual.split_off(drop);
+    keep.sort_unstable();
+    let kept: Vec<Observation> = keep.iter().map(|&i| obs[i]).collect();
+    fit(&kept).or(Some(base))
+}
+
 /// One configuration's accumulated measurements and (re)fitted model.
 #[derive(Debug, Clone)]
 pub struct ConfigCalibration {
@@ -208,6 +306,9 @@ pub struct ConfigCalibration {
     /// Total measurements ever recorded (≥ `observations.len()`); drives
     /// the ring's replacement slot and survives persistence.
     pub recorded: u64,
+    /// Warmup measurements dropped before the first kept one (see
+    /// [`CalibrationStore::with_hygiene`]); session-local, not persisted.
+    pub warmup_dropped: u64,
 }
 
 impl ConfigCalibration {
@@ -228,10 +329,22 @@ impl ConfigCalibration {
 #[derive(Debug, Clone)]
 pub struct CalibrationStore {
     fingerprint: u64,
+    /// [`DeviceProfile`](crate::cluster::DeviceProfile) fingerprint of the
+    /// pool the measurements ran on: in a mixed fleet (`a100:16+h100:8`)
+    /// each pool is its own measurement world and may not serve another
+    /// pool's fits.
+    device: u64,
+    device_name: String,
     model: String,
     cluster: String,
     generation: u64,
     dirty: bool,
+    /// First `warmup_discard` measurements per configuration are dropped
+    /// (JIT compilation, allocator growth, cold caches).
+    warmup_discard: u32,
+    /// Fraction of worst-residual observations rejected per refit (see
+    /// [`fit_trimmed`]).
+    trim_fraction: f64,
     entries: Vec<ConfigCalibration>,
 }
 
@@ -247,17 +360,42 @@ impl CalibrationStore {
     pub fn for_world(model: &ModelDesc, cluster: &ClusterSpec) -> Self {
         Self {
             fingerprint: world_fingerprint(model, cluster),
+            device: cluster.device.fingerprint(),
+            device_name: cluster.device.name.clone(),
             model: model.name.clone(),
             cluster: cluster.name.clone(),
             generation: 0,
             dirty: false,
+            warmup_discard: 0,
+            trim_fraction: 0.0,
             entries: Vec::new(),
         }
+    }
+
+    /// Real-hardware measurement hygiene: discard the first
+    /// `warmup_discard` measurements of every configuration (JIT, cold
+    /// caches) and reject the worst `trim_fraction` of observations by
+    /// relative residual at refit time. The defaults (`0`, `0.0`)
+    /// preserve the exact old fit bit-for-bit; `trim_fraction` is clamped
+    /// to `[0, 0.5]`.
+    pub fn with_hygiene(mut self, warmup_discard: u32, trim_fraction: f64) -> Self {
+        self.warmup_discard = warmup_discard;
+        self.trim_fraction = if trim_fraction.is_finite() {
+            trim_fraction.clamp(0.0, 0.5)
+        } else {
+            0.0
+        };
+        self
     }
 
     /// Analytic world fingerprint this store's measurements belong to.
     pub fn fingerprint(&self) -> u64 {
         self.fingerprint
+    }
+
+    /// Fingerprint of the device generation the measurements ran on.
+    pub fn device_fingerprint(&self) -> u64 {
+        self.device
     }
 
     /// Human-readable model name of the measured world.
@@ -289,33 +427,55 @@ impl CalibrationStore {
         self.entries.is_empty()
     }
 
-    /// Record one microbatch measurement. Non-positive or non-finite
-    /// durations are dropped (a timer glitch must not poison the fit);
-    /// past [`MAX_OBS_PER_CONFIG`] per configuration, the oldest
-    /// measurement is replaced (FIFO ring), keeping long runs bounded.
+    /// Record one single-device microbatch measurement (comm/bubble 0).
     pub fn record(&mut self, config: ParallelConfig, b: u64, s: u64, seconds: f64) {
-        if b == 0 || s == 0 || !seconds.is_finite() || seconds <= 0.0 {
+        self.record_observation(config, Observation::new(b, s, seconds));
+    }
+
+    /// Record one microbatch measurement with full overhead attribution.
+    /// Non-positive or non-finite durations (and negative or non-finite
+    /// comm/bubble attributions) are dropped — a timer glitch must not
+    /// poison the fit. The first [`Self::with_hygiene`] `warmup_discard`
+    /// valid measurements per configuration are discarded; past
+    /// [`MAX_OBS_PER_CONFIG`] per configuration, the oldest measurement
+    /// is replaced (FIFO ring), keeping long runs bounded.
+    pub fn record_observation(&mut self, config: ParallelConfig, obs: Observation) {
+        if obs.b == 0
+            || obs.s == 0
+            || !obs.seconds.is_finite()
+            || obs.seconds <= 0.0
+            || !obs.comm.is_finite()
+            || obs.comm < 0.0
+            || !obs.bubble.is_finite()
+            || obs.bubble < 0.0
+        {
             return;
         }
-        let obs = Observation { b, s, seconds };
-        match self.entries.iter().position(|e| e.config == config) {
-            Some(i) => {
-                let e = &mut self.entries[i];
-                if e.observations.len() < MAX_OBS_PER_CONFIG {
-                    e.observations.push(obs);
-                } else {
-                    let slot = (e.recorded % MAX_OBS_PER_CONFIG as u64) as usize;
-                    e.observations[slot] = obs;
-                }
-                e.recorded += 1;
+        let i = match self.entries.iter().position(|e| e.config == config) {
+            Some(i) => i,
+            None => {
+                self.entries.push(ConfigCalibration {
+                    config,
+                    observations: Vec::new(),
+                    fitted: None,
+                    recorded: 0,
+                    warmup_dropped: 0,
+                });
+                self.entries.len() - 1
             }
-            None => self.entries.push(ConfigCalibration {
-                config,
-                observations: vec![obs],
-                fitted: None,
-                recorded: 1,
-            }),
+        };
+        let e = &mut self.entries[i];
+        if e.warmup_dropped < self.warmup_discard as u64 {
+            e.warmup_dropped += 1;
+            return;
         }
+        if e.observations.len() < MAX_OBS_PER_CONFIG {
+            e.observations.push(obs);
+        } else {
+            let slot = (e.recorded % MAX_OBS_PER_CONFIG as u64) as usize;
+            e.observations[slot] = obs;
+        }
+        e.recorded += 1;
         self.dirty = true;
     }
 
@@ -323,17 +483,18 @@ impl CalibrationStore {
     /// ([`crate::exec::StepExecution::observations`]).
     pub fn record_all(&mut self, obs: &[(ParallelConfig, Observation)]) {
         for &(config, o) in obs {
-            self.record(config, o.b, o.s, o.seconds);
+            self.record_observation(config, o);
         }
     }
 
-    /// Refit every configuration from its accumulated observations; bumps
-    /// the generation when new observations arrived since the last fit.
+    /// Refit every configuration from its accumulated observations
+    /// (trimmed least squares under [`Self::with_hygiene`]); bumps the
+    /// generation when new observations arrived since the last fit.
     /// Returns the number of configurations with a usable fit.
     pub fn refit(&mut self) -> usize {
         if self.dirty {
             for e in &mut self.entries {
-                e.fitted = fit(&e.observations);
+                e.fitted = fit_trimmed(&e.observations, self.trim_fraction);
             }
             self.generation += 1;
             self.dirty = false;
@@ -353,6 +514,7 @@ impl CalibrationStore {
         self.refit();
         CalibrationProfile {
             fingerprint: self.fingerprint,
+            device: self.device,
             generation: self.generation,
             entries: self
                 .entries
@@ -371,7 +533,9 @@ impl CalibrationStore {
         out.push_str(&format!("  \"version\": {PROFILE_VERSION},\n"));
         out.push_str(&format!("  \"model\": \"{}\",\n", self.model));
         out.push_str(&format!("  \"cluster\": \"{}\",\n", self.cluster));
+        out.push_str(&format!("  \"device_name\": \"{}\",\n", self.device_name));
         out.push_str(&format!("  \"fingerprint\": \"{:016x}\",\n", self.fingerprint));
+        out.push_str(&format!("  \"device\": \"{:016x}\",\n", self.device));
         out.push_str(&format!("  \"generation\": {},\n", self.generation));
         out.push_str("  \"configs\": [");
         for (i, e) in self.entries.iter().enumerate() {
@@ -395,8 +559,9 @@ impl CalibrationStore {
                     out.push(',');
                 }
                 out.push_str(&format!(
-                    "\n        {{\"b\": {}, \"s\": {}, \"seconds\": {:?}}}",
-                    o.b, o.s, o.seconds
+                    "\n        {{\"b\": {}, \"s\": {}, \"seconds\": {:?}, \
+                     \"comm\": {:?}, \"bubble\": {:?}}}",
+                    o.b, o.s, o.seconds, o.comm, o.bubble
                 ));
             }
             if !e.observations.is_empty() {
@@ -431,6 +596,14 @@ impl CalibrationStore {
             .ok_or_else(|| anyhow!("profile missing fingerprint"))?;
         let fingerprint = u64::from_str_radix(fp_hex, 16)
             .map_err(|_| anyhow!("bad profile fingerprint {fp_hex:?}"))?;
+        let dev_hex = j
+            .get("device")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("profile missing device fingerprint"))?;
+        let device = u64::from_str_radix(dev_hex, 16)
+            .map_err(|_| anyhow!("bad profile device fingerprint {dev_hex:?}"))?;
+        let device_name =
+            j.get("device_name").and_then(Json::as_str).unwrap_or("?").to_string();
         let generation = j
             .get("generation")
             .and_then(Json::as_u64)
@@ -485,6 +658,8 @@ impl CalibrationStore {
                             .get("seconds")
                             .and_then(Json::as_f64)
                             .ok_or_else(|| anyhow!("observation missing seconds"))?,
+                        comm: o.get("comm").and_then(Json::as_f64).unwrap_or(0.0),
+                        bubble: o.get("bubble").and_then(Json::as_f64).unwrap_or(0.0),
                     });
                 }
             }
@@ -492,9 +667,26 @@ impl CalibrationStore {
                 .get("recorded")
                 .and_then(Json::as_u64)
                 .unwrap_or(observations.len() as u64);
-            entries.push(ConfigCalibration { config, observations, fitted, recorded });
+            entries.push(ConfigCalibration {
+                config,
+                observations,
+                fitted,
+                recorded,
+                warmup_dropped: 0,
+            });
         }
-        Ok(Self { fingerprint, model, cluster, generation, dirty: false, entries })
+        Ok(Self {
+            fingerprint,
+            device,
+            device_name,
+            model,
+            cluster,
+            generation,
+            dirty: false,
+            warmup_discard: 0,
+            trim_fraction: 0.0,
+            entries,
+        })
     }
 
     /// Write the store to `path` as JSON.
@@ -518,6 +710,7 @@ impl CalibrationStore {
 #[derive(Debug, Clone, PartialEq)]
 pub struct CalibrationProfile {
     fingerprint: u64,
+    device: u64,
     generation: u64,
     entries: Vec<(ParallelConfig, FittedCost)>,
 }
@@ -526,6 +719,12 @@ impl CalibrationProfile {
     /// Analytic world fingerprint the profile was measured on.
     pub fn fingerprint(&self) -> u64 {
         self.fingerprint
+    }
+
+    /// Fingerprint of the device generation the profile was measured on
+    /// ([`DeviceProfile::fingerprint`](crate::cluster::DeviceProfile::fingerprint)).
+    pub fn device_fingerprint(&self) -> u64 {
+        self.device
     }
 
     pub fn generation(&self) -> u64 {
@@ -555,6 +754,7 @@ impl CalibrationProfile {
     /// fingerprint so recalibration re-keys every dependent cost table.
     pub(crate) fn fold_fingerprint(&self, mut h: u64) -> u64 {
         h = fnv1a(h, 0x9caf_11b7);
+        h = fnv1a(h, self.device);
         h = fnv1a(h, self.generation);
         h = fnv1a(h, self.entries.len() as u64);
         for (cfg, f) in &self.entries {
@@ -596,7 +796,7 @@ mod tests {
     fn synth(beta: FittedCost, shapes: &[(u64, u64)]) -> Vec<Observation> {
         shapes
             .iter()
-            .map(|&(b, s)| Observation { b, s, seconds: beta.predict(b, s) })
+            .map(|&(b, s)| Observation::new(b, s, beta.predict(b, s)))
             .collect()
     }
 
@@ -635,10 +835,8 @@ mod tests {
         let mut rng = crate::util::Rng::new(3);
         let obs: Vec<Observation> = [(16u64, 64u64), (8, 128), (4, 256), (2, 512), (8, 64), (4, 128), (2, 256), (1, 512)]
             .iter()
-            .map(|&(b, s)| Observation {
-                b,
-                s,
-                seconds: truth.predict(b, s) * (1.0 + 0.05 * rng.normal()),
+            .map(|&(b, s)| {
+                Observation::new(b, s, truth.predict(b, s) * (1.0 + 0.05 * rng.normal()))
             })
             .collect();
         let f = fit(&obs).unwrap();
@@ -651,9 +849,9 @@ mod tests {
 
     #[test]
     fn underdetermined_returns_none() {
-        assert!(fit(&[Observation { b: 1, s: 64, seconds: 0.1 }]).is_none());
+        assert!(fit(&[Observation::new(1, 64, 0.1)]).is_none());
         // colinear observations (same b·s and b·s²) are singular
-        let o = Observation { b: 2, s: 128, seconds: 0.5 };
+        let o = Observation::new(2, 128, 0.5);
         assert!(fit(&[o, o, o]).is_none());
     }
 
@@ -749,6 +947,117 @@ mod tests {
         store.refit();
         let f = store.fitted_for(cfg).unwrap();
         assert!((f.beta1 - truth.beta1).abs() / truth.beta1 < 1e-6);
+    }
+
+    #[test]
+    fn comm_and_bubble_are_subtracted_before_fitting() {
+        // multi-GPU observations carry comm + bubble inside the wall time;
+        // the fit must recover the *compute* family, not the wall family
+        let truth = FittedCost { beta0: 0.002, beta1: 3e-6, beta2: 2e-9 };
+        let obs: Vec<Observation> =
+            [(16u64, 64u64), (8, 128), (4, 256), (2, 512), (1, 1024), (32, 64)]
+                .iter()
+                .map(|&(b, s)| {
+                    let compute = truth.predict(b, s);
+                    let comm = 0.5 * compute;
+                    let bubble = 0.25 * compute;
+                    Observation::with_overheads(b, s, compute + comm + bubble, comm, bubble)
+                })
+                .collect();
+        let f = fit(&obs).unwrap();
+        assert!((f.beta1 - truth.beta1).abs() / truth.beta1 < 1e-6, "{f:?}");
+        assert!((f.beta2 - truth.beta2).abs() / truth.beta2 < 1e-6, "{f:?}");
+        assert!(f.rms_rel_error(&obs).unwrap() < 1e-9);
+    }
+
+    #[test]
+    fn trimmed_fit_rejects_contaminated_observations() {
+        // a contaminated observation set: two wild outliers (preemption,
+        // page-fault storms) among clean measurements
+        let truth = FittedCost { beta0: 0.003, beta1: 2e-6, beta2: 1e-9 };
+        let mut obs = synth(
+            truth,
+            &[
+                (16, 64),
+                (8, 128),
+                (4, 256),
+                (2, 512),
+                (1, 1024),
+                (32, 64),
+                (16, 128),
+                (8, 256),
+                (4, 512),
+                (2, 1024),
+            ],
+        );
+        obs[3].seconds *= 10.0;
+        obs[7].seconds *= 25.0;
+        let naive = fit(&obs).unwrap();
+        assert!(
+            (naive.beta1 - truth.beta1).abs() / truth.beta1 > 0.05,
+            "outliers should visibly bend the naive fit: {naive:?}"
+        );
+        let trimmed = fit_trimmed(&obs, 0.2).unwrap();
+        assert!((trimmed.beta0 - truth.beta0).abs() / truth.beta0 < 1e-6, "{trimmed:?}");
+        assert!((trimmed.beta1 - truth.beta1).abs() / truth.beta1 < 1e-6);
+        assert!((trimmed.beta2 - truth.beta2).abs() / truth.beta2 < 1e-6);
+    }
+
+    #[test]
+    fn trimmed_fit_defaults_preserve_plain_fit() {
+        let truth = FittedCost { beta0: 0.002, beta1: 3e-6, beta2: 2e-9 };
+        let obs = synth(truth, &[(16, 64), (8, 128), (4, 256), (2, 512), (1, 1024)]);
+        let plain = fit(&obs).unwrap();
+        let trimmed = fit_trimmed(&obs, 0.0).unwrap();
+        assert_eq!(plain.beta0.to_bits(), trimmed.beta0.to_bits());
+        assert_eq!(plain.beta1.to_bits(), trimmed.beta1.to_bits());
+        assert_eq!(plain.beta2.to_bits(), trimmed.beta2.to_bits());
+    }
+
+    #[test]
+    fn warmup_measurements_are_discarded() {
+        let truth = FittedCost { beta0: 0.003, beta1: 2e-6, beta2: 1e-9 };
+        let cluster = ClusterSpec::a100_40g(16);
+        let model = ModelDesc::llama2_7b();
+        let mut store = CalibrationStore::for_world(&model, &cluster).with_hygiene(2, 0.0);
+        let cfg = ParallelConfig::new(1, 1);
+        // the first two measurements are contaminated by compilation; they
+        // must never reach the fit
+        store.record(cfg, 16, 64, 50.0 * truth.predict(16, 64));
+        store.record(cfg, 8, 128, 50.0 * truth.predict(8, 128));
+        for &(b, s) in &[(16u64, 64u64), (8, 128), (4, 256), (2, 512), (32, 64)] {
+            store.record(cfg, b, s, truth.predict(b, s));
+        }
+        assert_eq!(store.n_observations(), 5);
+        store.refit();
+        let f = store.fitted_for(cfg).unwrap();
+        assert!((f.beta1 - truth.beta1).abs() / truth.beta1 < 1e-6, "{f:?}");
+    }
+
+    #[test]
+    fn version1_profiles_are_rejected() {
+        // v1 fitted raw wall-clocks; reinterpreting one as a v2 compute
+        // fit would ascribe comm + bubble to compute
+        let v1 = format!(
+            "{{\n  \"kind\": \"{PROFILE_KIND}\",\n  \"version\": 1,\n  \
+             \"model\": \"m\",\n  \"cluster\": \"c\",\n  \
+             \"fingerprint\": \"00000000000000aa\",\n  \"generation\": 1,\n  \
+             \"configs\": []\n}}\n"
+        );
+        let err = CalibrationStore::from_json(&v1).unwrap_err();
+        assert!(err.to_string().contains("version"), "{err}");
+    }
+
+    #[test]
+    fn store_roundtrips_overheads_and_device() {
+        let cluster = ClusterSpec::a100_40g(16);
+        let model = ModelDesc::llama2_7b();
+        let mut store = CalibrationStore::for_world(&model, &cluster);
+        let cfg = ParallelConfig::new(2, 2);
+        store.record_observation(cfg, Observation::with_overheads(4, 256, 0.5, 0.1, 0.05));
+        let back = CalibrationStore::from_json(&store.to_json()).unwrap();
+        assert_eq!(back.device_fingerprint(), store.device_fingerprint());
+        assert_eq!(back.entries()[0].observations, store.entries()[0].observations);
     }
 
     #[test]

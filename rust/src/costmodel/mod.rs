@@ -91,6 +91,17 @@ impl CostModel {
         cluster: &ClusterSpec,
         profile: CalibrationProfile,
     ) -> Result<Self> {
+        let want_device = cluster.device.fingerprint();
+        if profile.device_fingerprint() != want_device {
+            return Err(anyhow!(
+                "calibration profile was measured on a different device generation \
+                 (profile device {:016x}, this pool's {} is {:016x}) — in a mixed \
+                 fleet each pool calibrates separately",
+                profile.device_fingerprint(),
+                cluster.device.name,
+                want_device
+            ));
+        }
         let want = world_fingerprint(model, cluster);
         if profile.fingerprint() != want {
             return Err(anyhow!(
@@ -174,18 +185,15 @@ impl CostModel {
         dense + attn + head
     }
 
-    /// Time of one chunk through one pipeline *stage* (the `t(b,s)` of
-    /// Eq. 11/12): compute + TP collectives + PP p2p, per stage. With a
-    /// profiled configuration the measured fit replaces the whole analytic
-    /// sum (measurements already include comm and launch overhead).
-    pub fn t_microbatch(&self, cfg: ParallelConfig, b: u64, s: u64) -> f64 {
+    /// Analytic decomposition of one chunk's stage time into compute, TP
+    /// collectives, PP p2p and fixed launch overhead. Always analytic,
+    /// independent of any attached profile: the executors use it to
+    /// attribute measured wall time (so the calibration fit regresses
+    /// compute, not compute + comm), and [`t_microbatch`](Self::t_microbatch)
+    /// re-adds these communication terms on top of a measured compute fit.
+    pub fn microbatch_breakdown(&self, cfg: ParallelConfig, b: u64, s: u64) -> MicrobatchTime {
         if b == 0 {
-            return 0.0;
-        }
-        if let Some(f) = self.profile.as_ref().and_then(|p| p.fitted_for(cfg)) {
-            // a noisy fit can dip below zero at tiny shapes; time is not
-            // allowed to
-            return f.predict(b, s).max(0.0);
+            return MicrobatchTime { compute: 0.0, tp_comm: 0.0, pp_comm: 0.0, overhead: 0.0 };
         }
         let compute = self.flops(b, s)
             / cfg.pp as f64
@@ -208,7 +216,26 @@ impl CostModel {
         } else {
             0.0
         };
-        compute + tp_comm + pp_comm + CHUNK_OVERHEAD
+        MicrobatchTime { compute, tp_comm, pp_comm, overhead: CHUNK_OVERHEAD }
+    }
+
+    /// Time of one chunk through one pipeline *stage* (the `t(b,s)` of
+    /// Eq. 11/12): compute + TP collectives + PP p2p, per stage. With a
+    /// profiled configuration the measured *compute* fit replaces the
+    /// analytic compute + overhead (measurements subtract their comm and
+    /// bubble attribution before fitting), and the analytic communication
+    /// terms are re-added on top.
+    pub fn t_microbatch(&self, cfg: ParallelConfig, b: u64, s: u64) -> f64 {
+        if b == 0 {
+            return 0.0;
+        }
+        let t = self.microbatch_breakdown(cfg, b, s);
+        if let Some(f) = self.profile.as_ref().and_then(|p| p.fitted_for(cfg)) {
+            // a noisy fit can dip below zero at tiny shapes; time is not
+            // allowed to
+            return f.predict(b, s).max(0.0) + t.tp_comm + t.pp_comm;
+        }
+        t.compute + t.tp_comm + t.pp_comm + t.overhead
     }
 
     /// Throughput in tokens / GPU / second for chunks of shape (b, s) — the
@@ -403,10 +430,16 @@ mod tests {
         let cluster = ClusterSpec::a100_40g(16);
         let analytic = CostModel::calibrated(&model, &cluster);
         let c = cfg(2, 1);
-        // synthetic measured world running exactly 2× slower than analytic
+        // synthetic measured world running exactly 2× slower than analytic;
+        // the observations attribute the analytic TP comm so the fit
+        // regresses compute and the profiled model re-adds comm on top
         let mut store = CalibrationStore::for_world(&model, &cluster);
         for &(b, s) in &[(16u64, 512u64), (4, 2048), (1, 8192), (8, 512), (2, 2048)] {
-            store.record(c, b, s, 2.0 * analytic.t_microbatch(c, b, s));
+            let comm = analytic.microbatch_breakdown(c, b, s).tp_comm;
+            store.record_observation(
+                c,
+                Observation::with_overheads(b, s, 2.0 * analytic.t_microbatch(c, b, s), comm, 0.0),
+            );
         }
         let profiled = CostModel::from_profile(&model, &cluster, store.profile()).unwrap();
         assert!(profiled.is_profiled());
@@ -435,6 +468,39 @@ mod tests {
             other_world.clone().profile()
         )
         .is_err());
+    }
+
+    #[test]
+    fn profile_from_other_device_pool_rejected() {
+        // mixed fleet (a100:16 + h100:8): one pool's measured fits must
+        // never serve another pool's planning, and the error names the
+        // device mismatch rather than a generic world mismatch
+        let model = ModelDesc::llama2_7b();
+        let a100 = ClusterSpec::a100_40g(16);
+        let h100 = ClusterSpec::h100_80g(16);
+        let analytic = CostModel::calibrated(&model, &a100);
+        let c = cfg(2, 1);
+        let mut store = CalibrationStore::for_world(&model, &a100);
+        for &(b, s) in &[(16u64, 512u64), (4, 2048), (1, 8192), (8, 512), (2, 2048)] {
+            store.record(c, b, s, analytic.t_microbatch(c, b, s));
+        }
+        let err = CostModel::from_profile(&model, &h100, store.profile()).unwrap_err();
+        assert!(err.to_string().contains("device generation"), "{err}");
+    }
+
+    #[test]
+    fn breakdown_total_matches_t_microbatch_bitwise() {
+        let cm = cm7b_16();
+        for &c in &[cfg(1, 1), cfg(2, 1), cfg(1, 4), cfg(2, 4), cfg(8, 2)] {
+            for &(b, s) in &[(1u64, 512u64), (4, 2048), (16, 128)] {
+                let t = cm.microbatch_breakdown(c, b, s);
+                assert_eq!(
+                    (t.compute + t.tp_comm + t.pp_comm + t.overhead).to_bits(),
+                    cm.t_microbatch(c, b, s).to_bits(),
+                    "{c} ({b},{s})"
+                );
+            }
+        }
     }
 
     #[test]

@@ -71,17 +71,11 @@ pub fn world_fingerprint(
         h = fnv1a(h, v);
     }
     h = fnv1a(h, cl.n_gpus as u64);
-    // The full device identity: every float the cost model reads plus the
-    // generation name, so in a mixed-generation fleet each device type keys
-    // its own cost tables in the shared LRU.
-    let d = &cl.device;
-    for b in d.name.as_bytes() {
-        h = fnv1a(h, *b as u64);
-    }
-    h = fnv1a(h, d.gpus_per_server as u64);
-    for v in [d.gpu_mem_gib, d.tflops, d.mfu, d.intra_bw_gbs, d.inter_bw_gbs] {
-        h = fnv1a(h, v.to_bits());
-    }
+    // The full device identity (every float the cost model reads plus the
+    // generation name), so in a mixed-generation fleet each device type keys
+    // its own cost tables in the shared LRU. The same fingerprint also keys
+    // calibration profiles on its own (`DeviceProfile::fingerprint`).
+    h = fnv1a(h, cl.device.fingerprint());
     h
 }
 

@@ -310,25 +310,10 @@ pub fn profile_sim_steps(
     recorded
 }
 
-/// Deterministic binary-tree reduction in input order: pairs `(0,1)`,
-/// `(2,3)`, … are combined level by level until one value remains. The
-/// shape depends only on `items.len()`, never on thread timing, so
-/// reductions over `par_map` outputs are reproducible for any worker count.
-pub fn tree_reduce<T>(items: Vec<T>, mut combine: impl FnMut(T, T) -> T) -> Option<T> {
-    let mut level = items;
-    while level.len() > 1 {
-        let mut next = Vec::with_capacity(level.len().div_ceil(2));
-        let mut it = level.into_iter();
-        while let Some(a) = it.next() {
-            match it.next() {
-                Some(b) => next.push(combine(a, b)),
-                None => next.push(a),
-            }
-        }
-        level = next;
-    }
-    level.pop()
-}
+// `tree_reduce` moved to `util::par` so the staged runtime's tensor-
+// parallel all-reduce can share the exact combine ordering the gradient
+// reduction here uses; re-exported to keep the established path working.
+pub use crate::util::par::tree_reduce;
 
 #[cfg(test)]
 mod tests {

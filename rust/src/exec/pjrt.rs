@@ -7,10 +7,13 @@ use super::{
 use crate::config::ParallelConfig;
 use crate::costmodel::{CostModel, Observation};
 use crate::data::SyntheticCorpus;
-use crate::runtime::{Engine, ParamVector};
+use crate::runtime::{
+    Engine, NativeModel, ParamVector, StageMb, StagedEngine, StepOutput,
+};
 use crate::util::clock::Stopwatch;
 use crate::util::par::par_map;
 use anyhow::{anyhow, Result};
+use std::sync::Arc;
 
 /// One engine-executable microbatch materialized from a dispatched load.
 #[derive(Debug, Clone)]
@@ -126,21 +129,38 @@ impl ReplicaPartial {
     }
 }
 
-/// PJRT-backed executor: wraps [`runtime::Engine`](crate::runtime::Engine)
-/// and executes each replica's dispatched loads as compiled `(batch, seq)`
-/// artifacts.
+/// The model runtime a [`PjrtExecutor`] executes microbatches on.
+///
+/// `Pjrt` wraps compiled HLO artifacts on the PJRT CPU client; it realizes
+/// no tensor or pipeline parallelism, so only single-GPU replicas produce
+/// meaningful per-stage timings there. `Native` wraps the pure-Rust
+/// [`NativeModel`]: single-GPU replicas run its fused `train_step`, while
+/// multi-GPU replicas are realized by [`StagedEngine`] — pp pipeline
+/// stages over a 1F1B schedule with tp-sharded matmuls inside each stage —
+/// which is what lets real (measured, not analytic) `(b, s, seconds)`
+/// observations exist for `tp > 1` and `pp > 1` configurations.
+enum EngineBackend {
+    Pjrt(Engine),
+    Native {
+        model: Arc<NativeModel>,
+        base: Arc<ParamVector>,
+    },
+}
+
+/// Engine-backed executor: executes each replica's dispatched loads as
+/// `(batch, seq)` microbatches on an [`EngineBackend`].
 ///
 /// Replicas run concurrently via [`crate::util::par::par_map`] (the
-/// vendored PJRT stub and the CPU client are shareable across threads);
-/// microbatch materialization happens up front on one thread so the corpus
-/// RNG stream — and therefore the training data — is identical for every
-/// `LOBRA_NUM_THREADS` setting. Gradients are reduced token-weighted in
-/// fixed replica order with [`tree_reduce`], so the optimizer sees a
-/// bit-reproducible update no matter how the replicas were scheduled onto
-/// worker threads. The virtual-cluster clock is accounted with the same
-/// [`virtual_clock`] as the simulated backend.
+/// vendored PJRT stub, the CPU client and the native model are shareable
+/// across threads); microbatch materialization happens up front on one
+/// thread so the corpus RNG stream — and therefore the training data — is
+/// identical for every `LOBRA_NUM_THREADS` setting. Gradients are reduced
+/// token-weighted in fixed replica order with [`tree_reduce`], so the
+/// optimizer sees a bit-reproducible update no matter how the replicas
+/// were scheduled onto worker threads. The virtual-cluster clock is
+/// accounted with the same [`virtual_clock`] as the simulated backend.
 pub struct PjrtExecutor {
-    engine: Engine,
+    backend: EngineBackend,
     cost: CostModel,
     corpus: SyntheticCorpus,
     lora: ParamVector,
@@ -149,15 +169,72 @@ pub struct PjrtExecutor {
 impl PjrtExecutor {
     pub fn new(engine: Engine, cost: CostModel, corpus: SyntheticCorpus) -> Self {
         let n = engine.manifest().lora_param_count;
-        Self { engine, cost, corpus, lora: ParamVector::zeros(n) }
+        Self {
+            backend: EngineBackend::Pjrt(engine),
+            cost,
+            corpus,
+            lora: ParamVector::zeros(n),
+        }
     }
 
-    pub fn engine(&self) -> &Engine {
-        &self.engine
+    /// Build on the pure-Rust staged runtime instead of PJRT artifacts:
+    /// multi-GPU replica configs execute for real (tp-sharded matmuls,
+    /// pp-stage 1F1B pipeline) and every microbatch — multi-GPU included —
+    /// emits a measured calibration observation.
+    pub fn with_native(
+        model: NativeModel,
+        base: ParamVector,
+        cost: CostModel,
+        corpus: SyntheticCorpus,
+    ) -> Result<Self> {
+        if base.len() as u64 != model.base_param_count() {
+            return Err(anyhow!(
+                "base params {} != native spec {}",
+                base.len(),
+                model.base_param_count()
+            ));
+        }
+        let n = model.lora_param_count();
+        Ok(Self {
+            backend: EngineBackend::Native {
+                model: Arc::new(model),
+                base: Arc::new(base),
+            },
+            cost,
+            corpus,
+            lora: ParamVector::zeros(n),
+        })
     }
 
-    pub fn engine_mut(&mut self) -> &mut Engine {
-        &mut self.engine
+    /// The PJRT engine, when that's the backend (`None` for native).
+    pub fn engine(&self) -> Option<&Engine> {
+        match &self.backend {
+            EngineBackend::Pjrt(e) => Some(e),
+            EngineBackend::Native { .. } => None,
+        }
+    }
+
+    pub fn engine_mut(&mut self) -> Option<&mut Engine> {
+        match &mut self.backend {
+            EngineBackend::Pjrt(e) => Some(e),
+            EngineBackend::Native { .. } => None,
+        }
+    }
+
+    /// Execution platform name (PJRT client platform, or `"native"`).
+    pub fn platform(&self) -> String {
+        match &self.backend {
+            EngineBackend::Pjrt(e) => e.platform(),
+            EngineBackend::Native { .. } => "native".to_string(),
+        }
+    }
+
+    /// Microbatch shapes the backend can execute, ascending by seq.
+    pub fn shapes(&self) -> Vec<(u64, u64)> {
+        match &self.backend {
+            EngineBackend::Pjrt(e) => e.shapes(),
+            EngineBackend::Native { model, .. } => model.shapes(),
+        }
     }
 
     /// Cost model accounting the virtual-cluster clock.
@@ -177,14 +254,34 @@ impl PjrtExecutor {
     }
 }
 
+/// Fold one microbatch's training output into a replica partial — the
+/// identical accumulation for every backend path, so a backend swap can
+/// never change the loss/gradient arithmetic.
+fn accumulate(acc: &mut ReplicaPartial, out: &StepOutput, n_tasks: usize) {
+    let w = out.tokens as f64;
+    acc.loss_sum += out.loss as f64 * w;
+    acc.tokens += w;
+    for (g, gi) in acc.grad.iter_mut().zip(&out.grad) {
+        *g += gi * out.tokens;
+    }
+    for t in 0..n_tasks {
+        acc.task_loss[t] += out.task_loss[t] as f64;
+        acc.task_tokens[t] += out.task_tokens[t] as f64;
+    }
+    acc.microbatches += 1;
+}
+
 impl ReplicaExecutor for PjrtExecutor {
     fn backend(&self) -> &'static str {
-        "pjrt"
+        match self.backend {
+            EngineBackend::Pjrt(_) => "pjrt",
+            EngineBackend::Native { .. } => "native",
+        }
     }
 
     fn execute_step(&mut self, plan: &ExecutionPlan) -> Result<StepExecution> {
         let t0 = Stopwatch::start();
-        let shapes = self.engine.shapes();
+        let shapes = self.shapes();
         // materialize sequentially (deterministic corpus RNG order) ...
         let per_replica: Vec<(ParallelConfig, Vec<Microbatch>)> = plan
             .assignments
@@ -193,44 +290,94 @@ impl ReplicaExecutor for PjrtExecutor {
             .collect();
 
         let n_params = self.lora.len();
-        let n_tasks = self.engine.manifest().model.n_tasks as usize;
-        let engine = &self.engine;
+        let n_tasks = match &self.backend {
+            EngineBackend::Pjrt(e) => e.manifest().model.n_tasks as usize,
+            EngineBackend::Native { model, .. } => model.spec().n_tasks,
+        };
+        let backend = &self.backend;
         let lora = &self.lora;
         // ... then execute replicas concurrently, timing each microbatch
         // in situ: the (b, s, seconds) observations feed cost-model
-        // calibration (`costmodel::calibrate`). Only single-GPU configs
-        // are recorded: the local engine realizes no tp/pp parallelism,
-        // so a multi-GPU replica's wall-clock here is a whole-microbatch
-        // time, not the per-*stage* `t(b,s)` the cost model fits (pp
-        // division and the pipeline bubble would be double-counted) —
-        // those configs keep their analytic constants.
+        // calibration (`costmodel::calibrate`).
+        //
+        // PJRT backend: only single-GPU configs are recorded — the local
+        // engine realizes no tp/pp parallelism, so a multi-GPU replica's
+        // wall-clock there would be a whole-microbatch time, not the
+        // per-*stage* `t(b,s)` the cost model fits (pp division and the
+        // pipeline bubble would be double-counted). Native backend:
+        // multi-GPU replicas run on the staged pipeline, whose per-mb
+        // timings attribute tp comm and the bubble share explicitly, so
+        // every config observes.
         let partials: Vec<Result<ReplicaPartial>> = par_map(per_replica, |(config, mbs)| {
             let mut acc = ReplicaPartial::empty(n_params, n_tasks);
-            let observe = config.n() == 1;
-            for mb in mbs {
-                let mb_t0 = Stopwatch::start();
-                let out = engine.train_step(mb.shape, lora, &mb.tokens, &mb.seg_ids)?;
-                if observe {
-                    acc.observations.push((
-                        *config,
-                        Observation {
-                            b: mb.shape.0,
-                            s: mb.shape.1,
-                            seconds: mb_t0.elapsed_secs(),
-                        },
-                    ));
+            match backend {
+                EngineBackend::Pjrt(engine) => {
+                    let observe = config.n() == 1;
+                    for mb in mbs {
+                        let mb_t0 = Stopwatch::start();
+                        let out =
+                            engine.train_step(mb.shape, lora, &mb.tokens, &mb.seg_ids)?;
+                        if observe {
+                            acc.observations.push((
+                                *config,
+                                Observation::new(
+                                    mb.shape.0,
+                                    mb.shape.1,
+                                    mb_t0.elapsed_secs(),
+                                ),
+                            ));
+                        }
+                        accumulate(&mut acc, &out, n_tasks);
+                    }
                 }
-                let w = out.tokens as f64;
-                acc.loss_sum += out.loss as f64 * w;
-                acc.tokens += w;
-                for (g, gi) in acc.grad.iter_mut().zip(&out.grad) {
-                    *g += gi * out.tokens;
+                EngineBackend::Native { model, base } if config.n() == 1 => {
+                    for mb in mbs {
+                        let mb_t0 = Stopwatch::start();
+                        let out = model.train_step(
+                            base,
+                            lora,
+                            mb.shape,
+                            &mb.tokens,
+                            &mb.seg_ids,
+                        )?;
+                        acc.observations.push((
+                            *config,
+                            Observation::new(mb.shape.0, mb.shape.1, mb_t0.elapsed_secs()),
+                        ));
+                        accumulate(&mut acc, &out, n_tasks);
+                    }
                 }
-                for t in 0..n_tasks {
-                    acc.task_loss[t] += out.task_loss[t] as f64;
-                    acc.task_tokens[t] += out.task_tokens[t] as f64;
+                EngineBackend::Native { model, base } => {
+                    let staged = StagedEngine::new(
+                        Arc::clone(model),
+                        Arc::clone(base),
+                        config.tp as usize,
+                        config.pp as usize,
+                    )?;
+                    let stage_mbs: Vec<StageMb> = mbs
+                        .iter()
+                        .map(|mb| StageMb {
+                            shape: mb.shape,
+                            tokens: mb.tokens.clone(),
+                            seg_ids: mb.seg_ids.clone(),
+                        })
+                        .collect();
+                    for (mb, (out, timing)) in
+                        mbs.iter().zip(staged.run(lora, &stage_mbs)?)
+                    {
+                        acc.observations.push((
+                            *config,
+                            Observation::with_overheads(
+                                mb.shape.0,
+                                mb.shape.1,
+                                timing.seconds,
+                                timing.comm,
+                                timing.bubble,
+                            ),
+                        ));
+                        accumulate(&mut acc, &out, n_tasks);
+                    }
                 }
-                acc.microbatches += 1;
             }
             Ok(acc)
         });

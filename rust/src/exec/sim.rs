@@ -44,46 +44,66 @@ impl ReplicaExecutor for SimExecutor<'_> {
     fn execute_step(&mut self, plan: &ExecutionPlan) -> Result<StepExecution> {
         let (replica_seconds, step_time) = virtual_clock(self.cost, plan);
         // In profiling mode: one observation per "executed" microbatch,
-        // mirroring what the real backend reports — except the measured
-        // duration is the exact analytic chunk time, which makes this the
-        // deterministic test double for the calibration loop: a fit over
-        // these observations must reproduce the cost model it was sampled
-        // from.
+        // mirroring what the real backend reports — except every field is
+        // exact analytic arithmetic, which makes this the deterministic
+        // test double for the calibration loop. Multi-GPU configurations
+        // attribute their analytic TP/PP comm and an even per-chunk share
+        // of the pipeline bubble ((pp−1)·max chunk time, exactly as
+        // `replica_time` charges it), so a fit over these observations
+        // regresses the analytic compute family and reproduces the cost
+        // model it was sampled from.
         let mut observations = Vec::new();
         if self.record_observations {
             for a in &plan.assignments {
+                // Pre-pass: this assignment's bubble, spread over its chunks.
+                let mut max_chunk_t: f64 = 0.0;
+                let mut n_chunks: u64 = 0;
                 for load in &a.loads {
                     if load.count == 0 {
                         continue;
                     }
                     let cp = self.cost.chunks_for(a.config, load.count, load.padded_len);
                     if cp.full_chunks > 0 {
-                        let t_full =
+                        let t =
                             self.cost.t_microbatch(a.config, cp.per_chunk, load.padded_len);
-                        for _ in 0..cp.full_chunks {
-                            observations.push((
-                                a.config,
-                                Observation {
-                                    b: cp.per_chunk,
-                                    s: load.padded_len,
-                                    seconds: t_full,
-                                },
-                            ));
-                        }
+                        max_chunk_t = max_chunk_t.max(t);
                     }
                     if cp.remainder > 0 {
+                        let t =
+                            self.cost.t_microbatch(a.config, cp.remainder, load.padded_len);
+                        max_chunk_t = max_chunk_t.max(t);
+                    }
+                    n_chunks += cp.n_chunks();
+                }
+                if n_chunks == 0 {
+                    continue;
+                }
+                let bubble_share =
+                    (a.config.pp as f64 - 1.0) * max_chunk_t / n_chunks as f64;
+                for load in &a.loads {
+                    if load.count == 0 {
+                        continue;
+                    }
+                    let cp = self.cost.chunks_for(a.config, load.count, load.padded_len);
+                    let mut emit = |b: u64| {
+                        let t = self.cost.t_microbatch(a.config, b, load.padded_len);
+                        let m = self.cost.microbatch_breakdown(a.config, b, load.padded_len);
                         observations.push((
                             a.config,
-                            Observation {
-                                b: cp.remainder,
-                                s: load.padded_len,
-                                seconds: self.cost.t_microbatch(
-                                    a.config,
-                                    cp.remainder,
-                                    load.padded_len,
-                                ),
-                            },
+                            Observation::with_overheads(
+                                b,
+                                load.padded_len,
+                                t + bubble_share,
+                                m.tp_comm + m.pp_comm,
+                                bubble_share,
+                            ),
                         ));
+                    };
+                    for _ in 0..cp.full_chunks {
+                        emit(cp.per_chunk);
+                    }
+                    if cp.remainder > 0 {
+                        emit(cp.remainder);
                     }
                 }
             }
@@ -181,15 +201,21 @@ mod tests {
             .sum();
         assert!(expected > 0);
         assert_eq!(out.observations.len() as u64, expected);
-        // ... bit-identical to the analytic chunk time ...
+        // ... bit-identical to the analytic chunk time plus the chunk's
+        // bubble share (zero for pp=1), with comm attributed exactly ...
         for (cfg, o) in &out.observations {
             assert_eq!(
+                (cost.t_microbatch(*cfg, o.b, o.s) + o.bubble).to_bits(),
                 o.seconds.to_bits(),
-                cost.t_microbatch(*cfg, o.b, o.s).to_bits(),
                 "{cfg} b={} s={}",
                 o.b,
                 o.s
             );
+            let m = cost.microbatch_breakdown(*cfg, o.b, o.s);
+            assert_eq!(o.comm.to_bits(), (m.tp_comm + m.pp_comm).to_bits());
+            if cfg.pp == 1 {
+                assert_eq!(o.bubble.to_bits(), 0.0f64.to_bits());
+            }
         }
         // ... and accounting every dispatched sequence exactly once
         let obs_seqs: u64 = out.observations.iter().map(|(_, o)| o.b).sum();

@@ -86,8 +86,18 @@ USAGE:
                      <at> join    <server>        # server's down GPUs restore)
   lobra calibrate [--model ...] [--gpus N] [--cluster ...] [--tasks ...]
                   [--steps N] [--seed N] [--out PATH]
+                  [--native] [--warmup K] [--trim F]
                   (run profiling steps through the sim executor, fit
-                   t(b,s) per config, write the calibration profile)
+                   t(b,s) per config, write the calibration profile.
+                   --warmup K discards the first K observations per config
+                   (compile/cache warmup on real hardware) and --trim F
+                   drops the F fraction of worst-residual observations
+                   before the final fit. --native measures the pure-Rust
+                   staged runtime instead of the sim clock: every (tp,pp)
+                   cell with tp·pp ≤ --gpus runs a real 1F1B pipeline with
+                   tp-sharded matmuls, per-microbatch wall-clocks feed the
+                   fit with comm and bubble attributed; --steps sets the
+                   rounds per cell)
   lobra train     [--artifacts DIR] [--steps N] [--lr F] [--seed N]
                   [--log-every K]
                   [--model 7b|32b|70b|tiny] [--gpus N]
@@ -245,6 +255,129 @@ impl World {
             .chain(self.extra.iter().map(|(c, p)| (c, p)))
             .collect()
     }
+}
+
+/// Per-config fit summary shared by the `calibrate` paths.
+fn print_fit_table(store: &CalibrationStore) {
+    for e in store.entries() {
+        match (e.fitted, e.rms_rel_error()) {
+            (Some(f), Some(rms)) => println!(
+                "  {}: {:>4} obs  rms_rel_error {rms:.2e}  \
+                 t(b,s) = {:.3e} + {:.3e}·bs + {:.3e}·bs²",
+                e.config,
+                e.observations.len(),
+                f.beta0,
+                f.beta1,
+                f.beta2
+            ),
+            _ => println!(
+                "  {}: {:>4} obs  underdetermined — analytic constants kept",
+                e.config,
+                e.observations.len()
+            ),
+        }
+    }
+}
+
+/// `calibrate --native`: measure the pure-Rust staged runtime for real.
+/// Every `(tp, pp)` cell with `tp·pp ≤ gpus` (powers of two; pp bounded by
+/// the layer stack) runs `rounds` 1F1B microbatch sweeps, and the measured
+/// per-microbatch timings — tp comm and pipeline-bubble share attributed
+/// explicitly — feed the calibration store through the same hygiene
+/// pipeline a real-hardware profile uses: the first `warmup` observations
+/// per config are discarded and the fit trims a `trim` fraction of
+/// outliers.
+fn native_calibrate(
+    gpus: u32,
+    rounds: usize,
+    seed: u64,
+    warmup: u32,
+    trim: f64,
+    out: &str,
+) -> Result<()> {
+    use lobra::config::ParallelConfig;
+    use lobra::costmodel::Observation;
+    use lobra::data::SyntheticCorpus;
+    use lobra::runtime::{NativeModel, NativeSpec, StageMb, StagedEngine};
+    use std::sync::Arc;
+
+    // The micro spec's default shapes share b·s, which underdetermines
+    // the 3-parameter t(b,s) family; widen the sweep so each cell's
+    // regression has full rank.
+    let mut spec = NativeSpec::micro();
+    spec.shapes = vec![(1, 8), (2, 8), (4, 8), (2, 16), (4, 16)];
+    let n_tasks = spec.n_tasks;
+    let vocab = spec.vocab as u32;
+    let model = NativeModel::new(spec)?;
+    let n_layers = model.n_layers();
+    let shapes = model.shapes();
+    let (base, lora) = model.init_params(seed);
+    let model = Arc::new(model);
+    let base = Arc::new(base);
+
+    // The profile measures THIS runtime on the local host — key it to the
+    // local world, never to whatever virtual pool the flags requested.
+    let cluster = ClusterSpec::local_cpu(gpus);
+    let cost = CostModel::calibrated(&ModelDesc::tiny(), &cluster);
+    let mut store = CalibrationStore::new(&cost).with_hygiene(warmup, trim);
+
+    let mut corpus = SyntheticCorpus::new(vocab, n_tasks, seed ^ 0xCA11B);
+    let mut mbs: Vec<StageMb> = Vec::new();
+    for &(b, s) in &shapes {
+        let mut tokens = Vec::with_capacity((b * s) as usize);
+        let mut seg_ids = Vec::with_capacity(b as usize);
+        for row in 0..b as usize {
+            // non-decreasing task ids (the sorted-seg-ids kernel contract)
+            let task = row * n_tasks / b as usize;
+            tokens.extend(corpus.sequence_exact(task, s as usize, s as usize));
+            seg_ids.push(task as i32);
+        }
+        mbs.push(StageMb { shape: (b, s), tokens, seg_ids });
+    }
+
+    println!(
+        "native staged sweep: {gpus} GPUs, {} shapes, {rounds} rounds/cell \
+         ({warmup} warmup obs/config discarded, trim {trim:.2})",
+        mbs.len()
+    );
+    let mut cells = 0u32;
+    let mut pp = 1usize;
+    while pp <= n_layers && (pp as u32) <= gpus {
+        let mut tp = 1usize;
+        while ((tp * pp) as u32) <= gpus {
+            let staged =
+                StagedEngine::new(Arc::clone(&model), Arc::clone(&base), tp, pp)?;
+            let cfg = ParallelConfig::new(tp as u32, pp as u32);
+            for _ in 0..rounds {
+                let outs = staged.run(&lora, &mbs)?;
+                for (mb, (_, t)) in mbs.iter().zip(outs) {
+                    store.record_observation(
+                        cfg,
+                        Observation::with_overheads(
+                            mb.shape.0, mb.shape.1, t.seconds, t.comm, t.bubble,
+                        ),
+                    );
+                }
+            }
+            cells += 1;
+            tp *= 2;
+        }
+        pp *= 2;
+    }
+    store.refit();
+    println!(
+        "{} measured observations across {cells} (tp,pp) cells, generation {}",
+        store.n_observations(),
+        store.generation()
+    );
+    print_fit_table(&store);
+    store.save(out)?;
+    println!(
+        "profile written to {out} (world: model={} cluster={})",
+        store.model(),
+        store.cluster()
+    );
+    Ok(())
 }
 
 fn main() -> Result<()> {
@@ -507,7 +640,7 @@ fn main() -> Result<()> {
             }
         }
         "calibrate" => {
-            let args = Args::parse(rest, &[])?;
+            let args = Args::parse(rest, &["native"])?;
             // calibrate *creates* profiles — never plan under one
             let world = World::parse(&args, false)?;
             if world.is_mixed() {
@@ -517,6 +650,12 @@ fn main() -> Result<()> {
             let steps = args.get_parse("steps", 24usize)?;
             let seed = args.get_parse("seed", 7u64)?;
             let out = args.get("out", "lobra_profile.json");
+            let warmup = args.get_parse("warmup", 2u32)?;
+            let trim = args.get_parse("trim", 0.1f64)?;
+            if args.has("native") {
+                native_calibrate(cluster.n_gpus, steps, seed, warmup, trim, &out)?;
+                return Ok(());
+            }
             let plan = Planner::new(&cost, &cluster)
                 .plan(&tasks, PlannerOptions::default())
                 .ok_or_else(|| anyhow!("no feasible plan to profile under"))?;
@@ -526,31 +665,14 @@ fn main() -> Result<()> {
                 cluster.name,
                 plan.notation()
             );
-            let mut store = CalibrationStore::new(&cost);
+            let mut store = CalibrationStore::new(&cost).with_hygiene(warmup, trim);
             let n = profile_sim_steps(&cost, &plan, &tasks, steps, seed, &mut store);
             store.refit();
             println!(
                 "{n} microbatch observations, profile generation {}",
                 store.generation()
             );
-            for e in store.entries() {
-                match (e.fitted, e.rms_rel_error()) {
-                    (Some(f), Some(rms)) => println!(
-                        "  {}: {:>4} obs  rms_rel_error {rms:.2e}  \
-                         t(b,s) = {:.3e} + {:.3e}·bs + {:.3e}·bs²",
-                        e.config,
-                        e.observations.len(),
-                        f.beta0,
-                        f.beta1,
-                        f.beta2
-                    ),
-                    _ => println!(
-                        "  {}: {:>4} obs  underdetermined — analytic constants kept",
-                        e.config,
-                        e.observations.len()
-                    ),
-                }
-            }
+            print_fit_table(&store);
             store.save(&out)?;
             println!("profile written to {out}");
             // close the loop: a plan computed from the freshly measured
@@ -610,8 +732,8 @@ fn main() -> Result<()> {
             }
             println!(
                 "engine up: platform={} shapes={:?} lora_params={}",
-                trainer.engine().platform(),
-                trainer.engine().shapes(),
+                trainer.platform(),
+                trainer.shapes(),
                 trainer.lora().len()
             );
             trainer.run(steps, |log| {

@@ -11,8 +11,12 @@
 
 mod engine;
 mod manifest;
+pub(crate) mod native;
 mod params;
+mod staged;
 
 pub use engine::{Engine, StepOutput};
 pub use manifest::{ArtifactInfo, InitKind, Manifest, ParamEntry};
+pub use native::{NativeModel, NativeSpec, PAD_ID};
 pub use params::ParamVector;
+pub use staged::{layer_range_for_stage, MbTiming, StageMb, StagedEngine};

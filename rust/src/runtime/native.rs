@@ -1,0 +1,1584 @@
+//! Native (pure-Rust) realization of the LobRA transformer train step.
+//!
+//! The vendored `xla` crate is a path stub offline, so `Engine::load` can
+//! never execute a compiled artifact in this container. This module
+//! reproduces the Python reference graph (`python/compile/model.py`) in
+//! plain Rust so tp/pp parallel configs can actually *run*: the
+//! `StagedEngine` (`runtime::staged`) drives the per-layer forward /
+//! backward building blocks exposed here through a 1F1B microbatch
+//! pipeline, and tensor parallelism shards the four base matmuls per
+//! layer column/row-wise (see [`proj_forward`]).
+//!
+//! Numerics contract:
+//! - parameters are flat `f32` vectors ([`ParamVector`], same layout
+//!   discipline as the manifest path: a `ParamEntry` table with per-leaf
+//!   init rules);
+//! - activations and gradient accumulation are `f64` (this is what makes
+//!   the finite-difference gradient check in the tests sharp), cast to
+//!   `f32` only at the microbatch boundary;
+//! - every reduction is an explicit fixed-order loop or a
+//!   [`tree_reduce`] combine, so results are bitwise independent of
+//!   thread count (detlint R5/R6 apply to this file).
+//!
+//! Tensor-parallel sharding follows Megatron: `qkv`/`up` are
+//! column-parallel (forward needs no communication — the per-element
+//! accumulation order over the contraction dim is identical for every
+//! tp, so tp>1 forward is *bit-identical* to tp=1 here), `out`/`down`
+//! are row-parallel (forward partial sums combine through a timed
+//! deterministic tree all-reduce). LoRA adapters are rank-`r` skinny and
+//! replicated on every tp rank, as in the paper's setup.
+
+use super::engine::StepOutput;
+use super::manifest::{InitKind, ParamEntry};
+use super::params::ParamVector;
+use crate::util::clock::Stopwatch;
+use crate::util::par::tree_reduce;
+use anyhow::{anyhow, Result};
+
+/// PAD token id (python/compile/model.py: `PAD_ID = 0`).
+pub const PAD_ID: i32 = 0;
+const LN_EPS: f64 = 1e-5;
+const MASK_NEG: f64 = -1e30;
+
+/// Architecture + microbatch-shape description for the native model.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NativeSpec {
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub n_tasks: usize,
+    pub lora_rank: usize,
+    pub lora_alpha: f64,
+    pub rope_theta: f64,
+    /// Microbatch `(b, s)` shapes this model executes, ascending by seq.
+    pub shapes: Vec<(u64, u64)>,
+}
+
+impl NativeSpec {
+    /// Smallest spec that still exercises every code path (multi-head
+    /// attention with RoPE, multi-task LoRA, two shapes). Sized so debug
+    /// (unoptimized) test builds run full pipelines in milliseconds.
+    pub fn micro() -> Self {
+        Self {
+            name: "native-micro".to_string(),
+            vocab: 64,
+            d_model: 16,
+            n_layers: 4,
+            n_heads: 2,
+            d_ff: 32,
+            n_tasks: 2,
+            lora_rank: 2,
+            lora_alpha: 4.0,
+            rope_theta: 10_000.0,
+            shapes: vec![(4, 8), (2, 16)],
+        }
+    }
+}
+
+/// The four LoRA-adapted projections per transformer layer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum Proj {
+    Qkv,
+    Out,
+    Up,
+    Down,
+}
+
+pub(crate) const PROJS: [Proj; 4] = [Proj::Qkv, Proj::Out, Proj::Up, Proj::Down];
+
+impl Proj {
+    fn idx(self) -> usize {
+        match self {
+            Proj::Qkv => 0,
+            Proj::Out => 1,
+            Proj::Up => 2,
+            Proj::Down => 3,
+        }
+    }
+
+    fn tag(self) -> &'static str {
+        match self {
+            Proj::Qkv => "qkv",
+            Proj::Out => "out",
+            Proj::Up => "up",
+            Proj::Down => "down",
+        }
+    }
+
+    fn dims(self, d: usize, ff: usize) -> (usize, usize) {
+        match self {
+            Proj::Qkv => (d, 3 * d),
+            Proj::Out => (d, d),
+            Proj::Up => (d, ff),
+            Proj::Down => (ff, d),
+        }
+    }
+
+    /// Row-parallel projections shard the contraction dim under tp, so
+    /// their forward needs the all-reduce; column-parallel ones don't.
+    fn row_parallel(self) -> bool {
+        matches!(self, Proj::Out | Proj::Down)
+    }
+}
+
+/// Base-parameter offsets for one layer (into the flat base vector).
+#[derive(Debug, Clone, Copy)]
+struct LayerOffsets {
+    ln1_g: usize,
+    ln1_b: usize,
+    ln2_g: usize,
+    ln2_b: usize,
+    /// `w[Proj::idx()]` — the four dense weights, row-major `[fin, fout]`.
+    w: [usize; 4],
+}
+
+/// LoRA-parameter offsets for one layer (into the flat LoRA vector).
+/// For each projection the `B` stack `[T, fin, r]` is immediately
+/// followed by the `A` stack `[T, r, fout]` (layer_backward relies on
+/// that adjacency to split one mutable gradient slice).
+#[derive(Debug, Clone, Copy)]
+struct LoraLayerOffsets {
+    b: [usize; 4],
+    a: [usize; 4],
+}
+
+/// Per-projection geometry passed to the sharded matmul kernels.
+struct ProjDims {
+    fin: usize,
+    fout: usize,
+    rank: usize,
+    scale: f64,
+    row_parallel: bool,
+}
+
+/// Forward activations one layer must retain for its backward pass.
+pub(crate) struct LayerCache {
+    rstd1: Vec<f64>,
+    xhat1: Vec<f64>,
+    xn1: Vec<f64>,
+    u_qkv: Vec<f64>,
+    q: Vec<f64>,
+    k: Vec<f64>,
+    v: Vec<f64>,
+    probs: Vec<f64>,
+    ctx: Vec<f64>,
+    u_out: Vec<f64>,
+    rstd2: Vec<f64>,
+    xhat2: Vec<f64>,
+    xn2: Vec<f64>,
+    u_up: Vec<f64>,
+    up: Vec<f64>,
+    act: Vec<f64>,
+    u_down: Vec<f64>,
+}
+
+/// Loss-head outputs (all `f64`; cast at the StepOutput boundary).
+pub(crate) struct LossParts {
+    pub(crate) mean_loss: f64,
+    pub(crate) total_tokens: f64,
+    pub(crate) task_loss: Vec<f64>,
+    pub(crate) task_tokens: Vec<f64>,
+}
+
+/// The native model: spec + param tables + precomputed leaf offsets.
+pub struct NativeModel {
+    spec: NativeSpec,
+    base_table: Vec<ParamEntry>,
+    lora_table: Vec<ParamEntry>,
+    base_len: u64,
+    lora_len: u64,
+    embed: usize,
+    layers: Vec<LayerOffsets>,
+    lora_layers: Vec<LoraLayerOffsets>,
+    lnf_g: usize,
+    lnf_b: usize,
+}
+
+impl NativeModel {
+    pub fn new(spec: NativeSpec) -> Result<Self> {
+        if spec.d_model == 0 || spec.n_heads == 0 || spec.d_model % spec.n_heads != 0 {
+            return Err(anyhow!(
+                "d_model {} must be a positive multiple of n_heads {}",
+                spec.d_model,
+                spec.n_heads
+            ));
+        }
+        let head_dim = spec.d_model / spec.n_heads;
+        if head_dim % 2 != 0 {
+            return Err(anyhow!("head_dim {head_dim} must be even for RoPE"));
+        }
+        if spec.vocab == 0 || spec.n_layers == 0 || spec.d_ff == 0 {
+            return Err(anyhow!("vocab/n_layers/d_ff must all be positive"));
+        }
+        if spec.n_tasks == 0 || spec.lora_rank == 0 {
+            return Err(anyhow!("n_tasks/lora_rank must be positive"));
+        }
+        if spec.shapes.is_empty() {
+            return Err(anyhow!("spec needs at least one microbatch shape"));
+        }
+        let (d, ff, t, r) = (spec.d_model, spec.d_ff, spec.n_tasks, spec.lora_rank);
+        let dense_std = |fin: usize| InitKind::Normal { std: 1.0 / (fin as f64).sqrt() };
+
+        let mut base_table = Vec::new();
+        let mut off = 0u64;
+        let embed = push_leaf(
+            &mut base_table,
+            &mut off,
+            "['embed']".to_string(),
+            vec![spec.vocab as u64, d as u64],
+            InitKind::Normal { std: 0.02 },
+        );
+        let mut layers = Vec::with_capacity(spec.n_layers);
+        for li in 0..spec.n_layers {
+            let ln1_g = push_leaf(
+                &mut base_table,
+                &mut off,
+                format!("['layers'][{li}]['ln1_g']"),
+                vec![d as u64],
+                InitKind::Ones,
+            );
+            let ln1_b = push_leaf(
+                &mut base_table,
+                &mut off,
+                format!("['layers'][{li}]['ln1_b']"),
+                vec![d as u64],
+                InitKind::Zeros,
+            );
+            let ln2_g = push_leaf(
+                &mut base_table,
+                &mut off,
+                format!("['layers'][{li}]['ln2_g']"),
+                vec![d as u64],
+                InitKind::Ones,
+            );
+            let ln2_b = push_leaf(
+                &mut base_table,
+                &mut off,
+                format!("['layers'][{li}]['ln2_b']"),
+                vec![d as u64],
+                InitKind::Zeros,
+            );
+            let mut w = [0usize; 4];
+            for p in PROJS {
+                let (fin, fout) = p.dims(d, ff);
+                w[p.idx()] = push_leaf(
+                    &mut base_table,
+                    &mut off,
+                    format!("['layers'][{li}]['w_{}']", p.tag()),
+                    vec![fin as u64, fout as u64],
+                    dense_std(fin),
+                );
+            }
+            layers.push(LayerOffsets { ln1_g, ln1_b, ln2_g, ln2_b, w });
+        }
+        let lnf_g = push_leaf(
+            &mut base_table,
+            &mut off,
+            "['ln_f_g']".to_string(),
+            vec![d as u64],
+            InitKind::Ones,
+        );
+        let lnf_b = push_leaf(
+            &mut base_table,
+            &mut off,
+            "['ln_f_b']".to_string(),
+            vec![d as u64],
+            InitKind::Zeros,
+        );
+        let base_len = off;
+
+        let mut lora_table = Vec::new();
+        let mut loff = 0u64;
+        let mut lora_layers = Vec::with_capacity(spec.n_layers);
+        for li in 0..spec.n_layers {
+            let mut b_off = [0usize; 4];
+            let mut a_off = [0usize; 4];
+            for p in PROJS {
+                let (fin, fout) = p.dims(d, ff);
+                b_off[p.idx()] = push_leaf(
+                    &mut lora_table,
+                    &mut loff,
+                    format!("['layers'][{li}]['{}_lora_b']", p.tag()),
+                    vec![t as u64, fin as u64, r as u64],
+                    dense_std(fin),
+                );
+                a_off[p.idx()] = push_leaf(
+                    &mut lora_table,
+                    &mut loff,
+                    format!("['layers'][{li}]['{}_lora_a']", p.tag()),
+                    vec![t as u64, r as u64, fout as u64],
+                    InitKind::Zeros,
+                );
+            }
+            lora_layers.push(LoraLayerOffsets { b: b_off, a: a_off });
+        }
+        let lora_len = loff;
+
+        Ok(Self {
+            spec,
+            base_table,
+            lora_table,
+            base_len,
+            lora_len,
+            embed,
+            layers,
+            lora_layers,
+            lnf_g,
+            lnf_b,
+        })
+    }
+
+    pub fn spec(&self) -> &NativeSpec {
+        &self.spec
+    }
+
+    pub fn shapes(&self) -> Vec<(u64, u64)> {
+        self.spec.shapes.clone()
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.spec.n_layers
+    }
+
+    pub fn base_param_count(&self) -> u64 {
+        self.base_len
+    }
+
+    pub fn lora_param_count(&self) -> u64 {
+        self.lora_len
+    }
+
+    pub fn base_table(&self) -> &[ParamEntry] {
+        &self.base_table
+    }
+
+    pub fn lora_table(&self) -> &[ParamEntry] {
+        &self.lora_table
+    }
+
+    /// Fresh base/LoRA vectors from the per-leaf init rules. Same
+    /// contract as `Engine::init_params`: one seed drives both, with a
+    /// fixed LoRA offset ("LoRA" in ASCII).
+    pub fn init_params(&self, seed: u64) -> (ParamVector, ParamVector) {
+        let base = ParamVector::init(&self.base_table, self.base_len, seed);
+        let lora = ParamVector::init(&self.lora_table, self.lora_len, seed ^ 0x4c6f_5241);
+        (base, lora)
+    }
+
+    /// Validate a microbatch against the model contract; returns `(b, s)`
+    /// as `usize`. Mirrors `Engine::run`'s checks (sorted seg_ids etc.).
+    pub(crate) fn validate(
+        &self,
+        shape: (u64, u64),
+        tokens: &[i32],
+        seg_ids: &[i32],
+    ) -> Result<(usize, usize)> {
+        let (b, s) = (shape.0 as usize, shape.1 as usize);
+        if b == 0 || s == 0 {
+            return Err(anyhow!("degenerate microbatch shape {shape:?}"));
+        }
+        if tokens.len() != b * s {
+            return Err(anyhow!("tokens len {} != {b}x{s}", tokens.len()));
+        }
+        if seg_ids.len() != b {
+            return Err(anyhow!("seg_ids len {} != {b}", seg_ids.len()));
+        }
+        if !seg_ids.windows(2).all(|w| w[0] <= w[1]) {
+            return Err(anyhow!("seg_ids must be sorted (kernel layout contract)"));
+        }
+        for &g in seg_ids {
+            if g < 0 || g as usize >= self.spec.n_tasks {
+                return Err(anyhow!("seg id {g} outside 0..{}", self.spec.n_tasks));
+            }
+        }
+        for &tok in tokens {
+            if tok < 0 || tok as usize >= self.spec.vocab {
+                return Err(anyhow!("token {tok} outside vocab 0..{}", self.spec.vocab));
+            }
+        }
+        Ok((b, s))
+    }
+
+    /// `h = embed[tokens]` (frozen lookup, `[b*s, d]` in f64).
+    pub(crate) fn embed_forward(&self, base: &[f32], tokens: &[i32], b: usize, s: usize) -> Vec<f64> {
+        let d = self.spec.d_model;
+        let embed = &base[self.embed..self.embed + self.spec.vocab * d];
+        let mut h = vec![0f64; b * s * d];
+        for (m, &tok) in tokens.iter().enumerate() {
+            let row = &embed[tok as usize * d..tok as usize * d + d];
+            let hr = &mut h[m * d..(m + 1) * d];
+            for c in 0..d {
+                hr[c] = row[c] as f64;
+            }
+        }
+        h
+    }
+
+    fn proj_dims(&self, p: Proj) -> ProjDims {
+        let (fin, fout) = p.dims(self.spec.d_model, self.spec.d_ff);
+        ProjDims {
+            fin,
+            fout,
+            rank: self.spec.lora_rank,
+            scale: self.spec.lora_alpha / self.spec.lora_rank as f64,
+            row_parallel: p.row_parallel(),
+        }
+    }
+
+    fn lora_pair<'a>(&self, lora: &'a [f32], li: usize, p: Proj) -> (&'a [f32], &'a [f32]) {
+        let (fin, fout) = p.dims(self.spec.d_model, self.spec.d_ff);
+        let (t, r) = (self.spec.n_tasks, self.spec.lora_rank);
+        let bo = self.lora_layers[li].b[p.idx()];
+        let ao = self.lora_layers[li].a[p.idx()];
+        (&lora[bo..bo + t * fin * r], &lora[ao..ao + t * r * fout])
+    }
+
+    /// Mutable `(dB, dA)` slices for one projection's gradient region.
+    /// Relies on the B-then-A adjacency set up in `new`.
+    fn lora_pair_mut<'a>(
+        &self,
+        grad: &'a mut [f64],
+        li: usize,
+        p: Proj,
+    ) -> (&'a mut [f64], &'a mut [f64]) {
+        let (fin, fout) = p.dims(self.spec.d_model, self.spec.d_ff);
+        let (t, r) = (self.spec.n_tasks, self.spec.lora_rank);
+        let bo = self.lora_layers[li].b[p.idx()];
+        let blen = t * fin * r;
+        let alen = t * r * fout;
+        grad[bo..bo + blen + alen].split_at_mut(blen)
+    }
+
+    /// One transformer layer forward. `tp` shards the four base matmuls;
+    /// all-reduce time for the row-parallel combines accumulates into
+    /// `comm`. Returns the residual-stream output and the backward cache.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn layer_forward(
+        &self,
+        li: usize,
+        tp: usize,
+        base: &[f32],
+        lora: &[f32],
+        h: &[f64],
+        tokens: &[i32],
+        row_task: &[usize],
+        b: usize,
+        s: usize,
+        comm: &mut f64,
+    ) -> (Vec<f64>, LayerCache) {
+        let d = self.spec.d_model;
+        let ff = self.spec.d_ff;
+        let nh = self.spec.n_heads;
+        let dh = d / nh;
+        let half = dh / 2;
+        let rows = b * s;
+        let lo = self.layers[li];
+
+        // ln1 -> qkv projection
+        let g1 = &base[lo.ln1_g..lo.ln1_g + d];
+        let bb1 = &base[lo.ln1_b..lo.ln1_b + d];
+        let (xn1, xhat1, rstd1) = ln_forward(h, rows, d, g1, bb1);
+        let dq_dims = self.proj_dims(Proj::Qkv);
+        let wq = &base[lo.w[0]..lo.w[0] + d * 3 * d];
+        let (bq, aq) = self.lora_pair(lora, li, Proj::Qkv);
+        let (y_qkv, u_qkv) = proj_forward(wq, bq, aq, &xn1, rows, row_task, &dq_dims, tp, comm);
+
+        // split heads + RoPE on q/k
+        let (cos_t, sin_t) = rope_tables(s, half, self.spec.rope_theta);
+        let mut q = vec![0f64; b * nh * s * dh];
+        let mut k = vec![0f64; b * nh * s * dh];
+        let mut v = vec![0f64; b * nh * s * dh];
+        for i in 0..b {
+            for j in 0..s {
+                let src = (i * s + j) * 3 * d;
+                for hh in 0..nh {
+                    let dst = ((i * nh + hh) * s + j) * dh;
+                    for kk in 0..dh {
+                        q[dst + kk] = y_qkv[src + hh * dh + kk];
+                        k[dst + kk] = y_qkv[src + d + hh * dh + kk];
+                        v[dst + kk] = y_qkv[src + 2 * d + hh * dh + kk];
+                    }
+                }
+            }
+        }
+        apply_rope(&mut q, b * nh, s, dh, &cos_t, &sin_t, false);
+        apply_rope(&mut k, b * nh, s, dh, &cos_t, &sin_t, false);
+
+        // causal+pad masked attention
+        let inv_sqrt = 1.0 / (dh as f64).sqrt();
+        let mut probs = vec![0f64; b * nh * s * s];
+        let mut score_row = vec![0f64; s];
+        for i in 0..b {
+            for hh in 0..nh {
+                for j in 0..s {
+                    let qb = ((i * nh + hh) * s + j) * dh;
+                    for (p, slot) in score_row.iter_mut().enumerate() {
+                        if p <= j && tokens[i * s + p] != PAD_ID {
+                            let kb = ((i * nh + hh) * s + p) * dh;
+                            let mut acc = 0f64;
+                            for kk in 0..dh {
+                                acc += q[qb + kk] * k[kb + kk];
+                            }
+                            *slot = acc * inv_sqrt;
+                        } else {
+                            *slot = MASK_NEG;
+                        }
+                    }
+                    let mut mx = score_row[0];
+                    for &sc in &score_row[1..] {
+                        if sc > mx {
+                            mx = sc;
+                        }
+                    }
+                    let mut denom = 0f64;
+                    for slot in score_row.iter_mut() {
+                        *slot = (*slot - mx).exp();
+                        denom += *slot;
+                    }
+                    let pb = ((i * nh + hh) * s + j) * s;
+                    for (p, &e) in score_row.iter().enumerate() {
+                        probs[pb + p] = e / denom;
+                    }
+                }
+            }
+        }
+
+        // context + out projection + residual
+        let mut ctx = vec![0f64; rows * d];
+        for i in 0..b {
+            for hh in 0..nh {
+                for j in 0..s {
+                    let pb = ((i * nh + hh) * s + j) * s;
+                    let cb = (i * s + j) * d + hh * dh;
+                    for p in 0..s {
+                        let pv = probs[pb + p];
+                        let vb = ((i * nh + hh) * s + p) * dh;
+                        for kk in 0..dh {
+                            ctx[cb + kk] += pv * v[vb + kk];
+                        }
+                    }
+                }
+            }
+        }
+        let do_dims = self.proj_dims(Proj::Out);
+        let wo = &base[lo.w[1]..lo.w[1] + d * d];
+        let (bo, ao) = self.lora_pair(lora, li, Proj::Out);
+        let (y_out, u_out) = proj_forward(wo, bo, ao, &ctx, rows, row_task, &do_dims, tp, comm);
+        let mut h_mid = vec![0f64; rows * d];
+        for idx in 0..rows * d {
+            h_mid[idx] = h[idx] + y_out[idx];
+        }
+
+        // ln2 -> up -> gelu -> down + residual
+        let g2 = &base[lo.ln2_g..lo.ln2_g + d];
+        let bb2 = &base[lo.ln2_b..lo.ln2_b + d];
+        let (xn2, xhat2, rstd2) = ln_forward(&h_mid, rows, d, g2, bb2);
+        let du_dims = self.proj_dims(Proj::Up);
+        let wu = &base[lo.w[2]..lo.w[2] + d * ff];
+        let (bu, au) = self.lora_pair(lora, li, Proj::Up);
+        let (up, u_up) = proj_forward(wu, bu, au, &xn2, rows, row_task, &du_dims, tp, comm);
+        let mut act = vec![0f64; rows * ff];
+        for idx in 0..rows * ff {
+            act[idx] = gelu(up[idx]);
+        }
+        let dd_dims = self.proj_dims(Proj::Down);
+        let wd = &base[lo.w[3]..lo.w[3] + ff * d];
+        let (bd, ad) = self.lora_pair(lora, li, Proj::Down);
+        let (y_down, u_down) = proj_forward(wd, bd, ad, &act, rows, row_task, &dd_dims, tp, comm);
+        let mut h_out = h_mid;
+        for idx in 0..rows * d {
+            h_out[idx] += y_down[idx];
+        }
+
+        let cache = LayerCache {
+            rstd1,
+            xhat1,
+            xn1,
+            u_qkv,
+            q,
+            k,
+            v,
+            probs,
+            ctx,
+            u_out,
+            rstd2,
+            xhat2,
+            xn2,
+            u_up,
+            up,
+            act,
+            u_down,
+        };
+        (h_out, cache)
+    }
+
+    /// One transformer layer backward: consumes the forward cache,
+    /// accumulates LoRA gradients into the full-length `grad` buffer
+    /// (only this layer's regions are touched) and returns `dL/dh_in`.
+    /// The base weights are frozen, so no base gradients exist.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn layer_backward(
+        &self,
+        li: usize,
+        tp: usize,
+        base: &[f32],
+        lora: &[f32],
+        dh_out: &[f64],
+        cache: &LayerCache,
+        tokens: &[i32],
+        row_task: &[usize],
+        b: usize,
+        s: usize,
+        grad: &mut [f64],
+        comm: &mut f64,
+    ) -> Vec<f64> {
+        let d = self.spec.d_model;
+        let ff = self.spec.d_ff;
+        let nh = self.spec.n_heads;
+        let dh = d / nh;
+        let half = dh / 2;
+        let rows = b * s;
+        let lo = self.layers[li];
+
+        // MLP backward (down -> gelu -> up -> ln2)
+        let dd_dims = self.proj_dims(Proj::Down);
+        let wd = &base[lo.w[3]..lo.w[3] + ff * d];
+        let (bd, ad) = self.lora_pair(lora, li, Proj::Down);
+        let dact = {
+            let (db, da) = self.lora_pair_mut(grad, li, Proj::Down);
+            proj_backward(
+                wd, bd, ad, &cache.act, &cache.u_down, dh_out, rows, row_task, &dd_dims, tp, db,
+                da, comm,
+            )
+        };
+        let mut dup = vec![0f64; rows * ff];
+        for idx in 0..rows * ff {
+            dup[idx] = dact[idx] * gelu_grad(cache.up[idx]);
+        }
+        let du_dims = self.proj_dims(Proj::Up);
+        let wu = &base[lo.w[2]..lo.w[2] + d * ff];
+        let (bu, au) = self.lora_pair(lora, li, Proj::Up);
+        let dxn2 = {
+            let (db, da) = self.lora_pair_mut(grad, li, Proj::Up);
+            proj_backward(
+                wu, bu, au, &cache.xn2, &cache.u_up, &dup, rows, row_task, &du_dims, tp, db, da,
+                comm,
+            )
+        };
+        let g2 = &base[lo.ln2_g..lo.ln2_g + d];
+        let dln2 = ln_backward(&dxn2, &cache.xhat2, &cache.rstd2, g2, rows, d);
+        let mut dh_mid = vec![0f64; rows * d];
+        for idx in 0..rows * d {
+            dh_mid[idx] = dh_out[idx] + dln2[idx];
+        }
+
+        // attention backward (out -> softmax -> rope -> qkv -> ln1)
+        let do_dims = self.proj_dims(Proj::Out);
+        let wo = &base[lo.w[1]..lo.w[1] + d * d];
+        let (bo, ao) = self.lora_pair(lora, li, Proj::Out);
+        let dctx = {
+            let (db, da) = self.lora_pair_mut(grad, li, Proj::Out);
+            proj_backward(
+                wo, bo, ao, &cache.ctx, &cache.u_out, &dh_mid, rows, row_task, &do_dims, tp, db,
+                da, comm,
+            )
+        };
+        let inv_sqrt = 1.0 / (dh as f64).sqrt();
+        let mut dq = vec![0f64; b * nh * s * dh];
+        let mut dk = vec![0f64; b * nh * s * dh];
+        let mut dv = vec![0f64; b * nh * s * dh];
+        let mut dp_row = vec![0f64; s];
+        for i in 0..b {
+            for hh in 0..nh {
+                for j in 0..s {
+                    let pb = ((i * nh + hh) * s + j) * s;
+                    let cb = (i * s + j) * d + hh * dh;
+                    for (p, slot) in dp_row.iter_mut().enumerate() {
+                        let vb = ((i * nh + hh) * s + p) * dh;
+                        let mut acc = 0f64;
+                        for kk in 0..dh {
+                            acc += dctx[cb + kk] * cache.v[vb + kk];
+                        }
+                        *slot = acc;
+                    }
+                    for p in 0..s {
+                        let pv = cache.probs[pb + p];
+                        let vb = ((i * nh + hh) * s + p) * dh;
+                        for kk in 0..dh {
+                            dv[vb + kk] += pv * dctx[cb + kk];
+                        }
+                    }
+                    let mut dot = 0f64;
+                    for p in 0..s {
+                        dot += dp_row[p] * cache.probs[pb + p];
+                    }
+                    let qb = ((i * nh + hh) * s + j) * dh;
+                    for p in 0..s {
+                        let allowed = p <= j && tokens[i * s + p] != PAD_ID;
+                        if !allowed {
+                            continue;
+                        }
+                        let ds = cache.probs[pb + p] * (dp_row[p] - dot) * inv_sqrt;
+                        let kb = ((i * nh + hh) * s + p) * dh;
+                        for kk in 0..dh {
+                            dq[qb + kk] += ds * cache.k[kb + kk];
+                            dk[kb + kk] += ds * cache.q[qb + kk];
+                        }
+                    }
+                }
+            }
+        }
+        let (cos_t, sin_t) = rope_tables(s, half, self.spec.rope_theta);
+        apply_rope(&mut dq, b * nh, s, dh, &cos_t, &sin_t, true);
+        apply_rope(&mut dk, b * nh, s, dh, &cos_t, &sin_t, true);
+        let mut dy_qkv = vec![0f64; rows * 3 * d];
+        for i in 0..b {
+            for j in 0..s {
+                let dst = (i * s + j) * 3 * d;
+                for hh in 0..nh {
+                    let src = ((i * nh + hh) * s + j) * dh;
+                    for kk in 0..dh {
+                        dy_qkv[dst + hh * dh + kk] = dq[src + kk];
+                        dy_qkv[dst + d + hh * dh + kk] = dk[src + kk];
+                        dy_qkv[dst + 2 * d + hh * dh + kk] = dv[src + kk];
+                    }
+                }
+            }
+        }
+        let dq_dims = self.proj_dims(Proj::Qkv);
+        let wq = &base[lo.w[0]..lo.w[0] + d * 3 * d];
+        let (bq, aq) = self.lora_pair(lora, li, Proj::Qkv);
+        let dxn1 = {
+            let (db, da) = self.lora_pair_mut(grad, li, Proj::Qkv);
+            proj_backward(
+                wq, bq, aq, &cache.xn1, &cache.u_qkv, &dy_qkv, rows, row_task, &dq_dims, tp, db,
+                da, comm,
+            )
+        };
+        let g1 = &base[lo.ln1_g..lo.ln1_g + d];
+        let dln1 = ln_backward(&dxn1, &cache.xhat1, &cache.rstd1, g1, rows, d);
+        let mut dh_in = vec![0f64; rows * d];
+        for idx in 0..rows * d {
+            dh_in[idx] = dh_mid[idx] + dln1[idx];
+        }
+        dh_in
+    }
+
+    /// Final-LN + tied-embedding head + next-token loss. When
+    /// `want_grad`, also returns `dL/dh` for the residual stream entering
+    /// the head (the embedding is frozen, so no head gradient exists).
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn head_loss(
+        &self,
+        base: &[f32],
+        h: &[f64],
+        tokens: &[i32],
+        seg_ids: &[i32],
+        b: usize,
+        s: usize,
+        want_grad: bool,
+    ) -> (LossParts, Option<Vec<f64>>) {
+        let d = self.spec.d_model;
+        let vocab = self.spec.vocab;
+        let rows = b * s;
+        let gf = &base[self.lnf_g..self.lnf_g + d];
+        let bf = &base[self.lnf_b..self.lnf_b + d];
+        let (hf, xhatf, rstdf) = ln_forward(h, rows, d, gf, bf);
+        let embed = &base[self.embed..self.embed + vocab * d];
+
+        // logits = hf @ embed^T, kept per-row (micro-scale vocab)
+        let mut logits = vec![0f64; rows * vocab];
+        for m in 0..rows {
+            let hr = &hf[m * d..(m + 1) * d];
+            let lr = &mut logits[m * vocab..(m + 1) * vocab];
+            for (vv, slot) in lr.iter_mut().enumerate() {
+                let er = &embed[vv * d..vv * d + d];
+                let mut acc = 0f64;
+                for c in 0..d {
+                    acc += hr[c] * er[c] as f64;
+                }
+                *slot = acc;
+            }
+        }
+
+        let mut nll_sum = 0f64;
+        let mut total = 0f64;
+        let mut task_loss = vec![0f64; self.spec.n_tasks];
+        let mut task_tokens = vec![0f64; self.spec.n_tasks];
+        for i in 0..b {
+            for j in 0..s.saturating_sub(1) {
+                let tgt = tokens[i * s + j + 1];
+                if tgt == PAD_ID {
+                    continue;
+                }
+                let m = i * s + j;
+                let lr = &logits[m * vocab..(m + 1) * vocab];
+                let mut mx = lr[0];
+                for &x in &lr[1..] {
+                    if x > mx {
+                        mx = x;
+                    }
+                }
+                let mut denom = 0f64;
+                for &x in lr {
+                    denom += (x - mx).exp();
+                }
+                let nll = mx + denom.ln() - lr[tgt as usize];
+                nll_sum += nll;
+                total += 1.0;
+                let t = seg_ids[i] as usize;
+                task_loss[t] += nll;
+                task_tokens[t] += 1.0;
+            }
+        }
+        let loss_denom = total.max(1.0);
+        let parts = LossParts {
+            mean_loss: nll_sum / loss_denom,
+            total_tokens: total,
+            task_loss,
+            task_tokens,
+        };
+        if !want_grad {
+            return (parts, None);
+        }
+
+        let mut dhf = vec![0f64; rows * d];
+        for i in 0..b {
+            for j in 0..s.saturating_sub(1) {
+                let tgt = tokens[i * s + j + 1];
+                if tgt == PAD_ID {
+                    continue;
+                }
+                let m = i * s + j;
+                let lr = &logits[m * vocab..(m + 1) * vocab];
+                let mut mx = lr[0];
+                for &x in &lr[1..] {
+                    if x > mx {
+                        mx = x;
+                    }
+                }
+                let mut denom = 0f64;
+                for &x in lr {
+                    denom += (x - mx).exp();
+                }
+                let dr = &mut dhf[m * d..(m + 1) * d];
+                for (vv, &x) in lr.iter().enumerate() {
+                    let p = (x - mx).exp() / denom;
+                    let one = if vv == tgt as usize { 1.0 } else { 0.0 };
+                    let dl = (p - one) / loss_denom;
+                    let er = &embed[vv * d..vv * d + d];
+                    for c in 0..d {
+                        dr[c] += dl * er[c] as f64;
+                    }
+                }
+            }
+        }
+        let dh = ln_backward(&dhf, &xhatf, &rstdf, gf, rows, d);
+        (parts, Some(dh))
+    }
+
+    /// Execute one fwd+bwd microbatch unstaged (tp=1, single partition).
+    /// The staged engine with pp=1 × tp=1 runs the exact same call
+    /// sequence, which is what makes the identity certificate bitwise.
+    pub fn train_step(
+        &self,
+        base: &ParamVector,
+        lora: &ParamVector,
+        shape: (u64, u64),
+        tokens: &[i32],
+        seg_ids: &[i32],
+    ) -> Result<StepOutput> {
+        let (b, s) = self.validate(shape, tokens, seg_ids)?;
+        if base.len() as u64 != self.base_len {
+            return Err(anyhow!("base params {} != spec {}", base.len(), self.base_len));
+        }
+        if lora.len() as u64 != self.lora_len {
+            return Err(anyhow!("lora params {} != spec {}", lora.len(), self.lora_len));
+        }
+        let row_task = row_tasks(seg_ids, b, s);
+        let mut comm = 0f64;
+        let mut h = self.embed_forward(&base.data, tokens, b, s);
+        let mut caches = Vec::with_capacity(self.spec.n_layers);
+        for li in 0..self.spec.n_layers {
+            let (h_next, cache) = self.layer_forward(
+                li, 1, &base.data, &lora.data, &h, tokens, &row_task, b, s, &mut comm,
+            );
+            h = h_next;
+            caches.push(cache);
+        }
+        let (parts, dh_opt) = self.head_loss(&base.data, &h, tokens, seg_ids, b, s, true);
+        let Some(mut dh) = dh_opt else {
+            return Err(anyhow!("head_loss produced no gradient"));
+        };
+        let mut grad = vec![0f64; self.lora_len as usize];
+        for li in (0..self.spec.n_layers).rev() {
+            dh = self.layer_backward(
+                li,
+                1,
+                &base.data,
+                &lora.data,
+                &dh,
+                &caches[li],
+                tokens,
+                &row_task,
+                b,
+                s,
+                &mut grad,
+                &mut comm,
+            );
+        }
+        Ok(step_output(&parts, &grad))
+    }
+
+    /// Forward-only loss (same outputs as `Engine::eval_loss`).
+    pub fn eval_loss(
+        &self,
+        base: &ParamVector,
+        lora: &ParamVector,
+        shape: (u64, u64),
+        tokens: &[i32],
+        seg_ids: &[i32],
+    ) -> Result<(f32, f32, Vec<f32>, Vec<f32>)> {
+        let (b, s) = self.validate(shape, tokens, seg_ids)?;
+        let row_task = row_tasks(seg_ids, b, s);
+        let mut comm = 0f64;
+        let mut h = self.embed_forward(&base.data, tokens, b, s);
+        for li in 0..self.spec.n_layers {
+            let (h_next, _) = self.layer_forward(
+                li, 1, &base.data, &lora.data, &h, tokens, &row_task, b, s, &mut comm,
+            );
+            h = h_next;
+        }
+        let (parts, _) = self.head_loss(&base.data, &h, tokens, seg_ids, b, s, false);
+        Ok((
+            parts.mean_loss as f32,
+            parts.total_tokens as f32,
+            parts.task_loss.iter().map(|&x| x as f32).collect(),
+            parts.task_tokens.iter().map(|&x| x as f32).collect(),
+        ))
+    }
+}
+
+/// Cast the f64 loss head + gradient accumulators down to the f32
+/// `StepOutput` contract shared with the PJRT engine.
+pub(crate) fn step_output(parts: &LossParts, grad: &[f64]) -> StepOutput {
+    StepOutput {
+        loss: parts.mean_loss as f32,
+        grad: grad.iter().map(|&x| x as f32).collect(),
+        tokens: parts.total_tokens as f32,
+        task_loss: parts.task_loss.iter().map(|&x| x as f32).collect(),
+        task_tokens: parts.task_tokens.iter().map(|&x| x as f32).collect(),
+    }
+}
+
+/// Per-row task ids: row `m` belongs to sequence `m / s`.
+pub(crate) fn row_tasks(seg_ids: &[i32], b: usize, s: usize) -> Vec<usize> {
+    let mut out = Vec::with_capacity(b * s);
+    for &g in seg_ids.iter().take(b) {
+        for _ in 0..s {
+            out.push(g as usize);
+        }
+    }
+    out
+}
+
+fn push_leaf(
+    table: &mut Vec<ParamEntry>,
+    off: &mut u64,
+    name: String,
+    shape: Vec<u64>,
+    init: InitKind,
+) -> usize {
+    let size: u64 = shape.iter().product();
+    let entry_off = *off;
+    table.push(ParamEntry { name, shape, offset: entry_off, size, init });
+    *off += size;
+    entry_off as usize
+}
+
+/// LayerNorm forward: returns `(xn, xhat, rstd)` where
+/// `xn = xhat * g + b`, `xhat = (x - mu) * rstd`, `rstd = 1/sqrt(var+eps)`.
+fn ln_forward(
+    x: &[f64],
+    rows: usize,
+    d: usize,
+    g: &[f32],
+    b: &[f32],
+) -> (Vec<f64>, Vec<f64>, Vec<f64>) {
+    let mut xn = vec![0f64; rows * d];
+    let mut xhat = vec![0f64; rows * d];
+    let mut rstd = vec![0f64; rows];
+    let inv_d = 1.0 / d as f64;
+    for m in 0..rows {
+        let xr = &x[m * d..(m + 1) * d];
+        let mut mu = 0f64;
+        for &v in xr {
+            mu += v;
+        }
+        mu *= inv_d;
+        let mut var = 0f64;
+        for &v in xr {
+            let c = v - mu;
+            var += c * c;
+        }
+        var *= inv_d;
+        let r = 1.0 / (var + LN_EPS).sqrt();
+        rstd[m] = r;
+        let xh = &mut xhat[m * d..(m + 1) * d];
+        let xo = &mut xn[m * d..(m + 1) * d];
+        for c in 0..d {
+            let h = (xr[c] - mu) * r;
+            xh[c] = h;
+            xo[c] = h * g[c] as f64 + b[c] as f64;
+        }
+    }
+    (xn, xhat, rstd)
+}
+
+/// LayerNorm backward wrt its input (`g`/`b` are frozen base params):
+/// `dx = rstd * (dxh - mean(dxh) - xhat * mean(dxh * xhat))` with
+/// `dxh = dxn * g`.
+fn ln_backward(dxn: &[f64], xhat: &[f64], rstd: &[f64], g: &[f32], rows: usize, d: usize) -> Vec<f64> {
+    let mut dx = vec![0f64; rows * d];
+    let inv_d = 1.0 / d as f64;
+    let mut dxh = vec![0f64; d];
+    for m in 0..rows {
+        let dnr = &dxn[m * d..(m + 1) * d];
+        let xhr = &xhat[m * d..(m + 1) * d];
+        let mut m1 = 0f64;
+        let mut m2 = 0f64;
+        for c in 0..d {
+            let v = dnr[c] * g[c] as f64;
+            dxh[c] = v;
+            m1 += v;
+            m2 += v * xhr[c];
+        }
+        m1 *= inv_d;
+        m2 *= inv_d;
+        let dxr = &mut dx[m * d..(m + 1) * d];
+        for c in 0..d {
+            dxr[c] = rstd[m] * (dxh[c] - m1 - xhr[c] * m2);
+        }
+    }
+    dx
+}
+
+/// GeLU, tanh approximation (matches `jax.nn.gelu(approximate=True)`).
+fn gelu(x: f64) -> f64 {
+    let c = (2.0 / std::f64::consts::PI).sqrt();
+    0.5 * x * (1.0 + (c * (x + 0.044715 * x * x * x)).tanh())
+}
+
+fn gelu_grad(x: f64) -> f64 {
+    let c = (2.0 / std::f64::consts::PI).sqrt();
+    let t = (c * (x + 0.044715 * x * x * x)).tanh();
+    0.5 * (1.0 + t) + 0.5 * x * (1.0 - t * t) * c * (1.0 + 3.0 * 0.044715 * x * x)
+}
+
+/// Per-position RoPE cos/sin tables, `[s, half]` row-major.
+fn rope_tables(s: usize, half: usize, theta: f64) -> (Vec<f64>, Vec<f64>) {
+    let mut cos_t = vec![0f64; s * half];
+    let mut sin_t = vec![0f64; s * half];
+    for j in 0..s {
+        for i in 0..half {
+            let freq = 1.0 / theta.powf(i as f64 / half as f64);
+            let ang = j as f64 * freq;
+            cos_t[j * half + i] = ang.cos();
+            sin_t[j * half + i] = ang.sin();
+        }
+    }
+    (cos_t, sin_t)
+}
+
+/// Rotate `[x1, x2]` halves per head row; `inverse` applies the
+/// transpose rotation (the exact backward of the forward rotation).
+fn apply_rope(
+    buf: &mut [f64],
+    head_rows: usize,
+    s: usize,
+    dh: usize,
+    cos_t: &[f64],
+    sin_t: &[f64],
+    inverse: bool,
+) {
+    let half = dh / 2;
+    for row in 0..head_rows {
+        for j in 0..s {
+            let base = (row * s + j) * dh;
+            for i in 0..half {
+                let c = cos_t[j * half + i];
+                let sn = if inverse { -sin_t[j * half + i] } else { sin_t[j * half + i] };
+                let x1 = buf[base + i];
+                let x2 = buf[base + half + i];
+                buf[base + i] = x1 * c - x2 * sn;
+                buf[base + half + i] = x1 * sn + x2 * c;
+            }
+        }
+    }
+}
+
+/// Sharded dense projection forward with replicated LoRA:
+/// `y = x @ W + scale * (x @ B_task) @ A_task`. Returns `(y, u)` where
+/// `u = x @ B_task` (cached for backward).
+///
+/// Column-parallel (`!row_parallel`): output columns shard across tp;
+/// every rank holds full `x`, no communication, and the per-element
+/// accumulation order is tp-invariant (bitwise identical for any tp).
+/// Row-parallel: the contraction dim shards; per-rank partial sums are
+/// combined by a deterministic [`tree_reduce`] whose wall time
+/// accumulates into `comm`.
+#[allow(clippy::too_many_arguments)]
+fn proj_forward(
+    w: &[f32],
+    bmat: &[f32],
+    amat: &[f32],
+    x: &[f64],
+    rows: usize,
+    row_task: &[usize],
+    dims: &ProjDims,
+    tp: usize,
+    comm: &mut f64,
+) -> (Vec<f64>, Vec<f64>) {
+    let (fin, fout, r) = (dims.fin, dims.fout, dims.rank);
+    let tp = tp.max(1);
+    let mut y;
+    if !dims.row_parallel {
+        y = vec![0f64; rows * fout];
+        for shard in 0..tp {
+            let c0 = shard * fout / tp;
+            let c1 = (shard + 1) * fout / tp;
+            for m in 0..rows {
+                let xr = &x[m * fin..(m + 1) * fin];
+                let yr = &mut y[m * fout..(m + 1) * fout];
+                for (kk, &xv) in xr.iter().enumerate() {
+                    let wrow = &w[kk * fout..kk * fout + fout];
+                    for c in c0..c1 {
+                        yr[c] += xv * wrow[c] as f64;
+                    }
+                }
+            }
+        }
+    } else {
+        let mut partials: Vec<Vec<f64>> = Vec::with_capacity(tp);
+        for shard in 0..tp {
+            let k0 = shard * fin / tp;
+            let k1 = (shard + 1) * fin / tp;
+            let mut part = vec![0f64; rows * fout];
+            for m in 0..rows {
+                let xr = &x[m * fin..(m + 1) * fin];
+                let pr = &mut part[m * fout..(m + 1) * fout];
+                for kk in k0..k1 {
+                    let xv = xr[kk];
+                    let wrow = &w[kk * fout..kk * fout + fout];
+                    for c in 0..fout {
+                        pr[c] += xv * wrow[c] as f64;
+                    }
+                }
+            }
+            partials.push(part);
+        }
+        y = combine_partials(partials, comm, rows * fout);
+    }
+    // LoRA path: rank-r skinny, replicated on every tp rank, applied
+    // after the base combine so its accumulation order never depends on
+    // the sharding.
+    let mut u = vec![0f64; rows * r];
+    for m in 0..rows {
+        let t = row_task[m];
+        let xr = &x[m * fin..(m + 1) * fin];
+        let ur = &mut u[m * r..(m + 1) * r];
+        for (kk, &xv) in xr.iter().enumerate() {
+            let brow = &bmat[(t * fin + kk) * r..(t * fin + kk) * r + r];
+            for rr in 0..r {
+                ur[rr] += xv * brow[rr] as f64;
+            }
+        }
+        let yr = &mut y[m * fout..(m + 1) * fout];
+        for rr in 0..r {
+            let uv = dims.scale * ur[rr];
+            let arow = &amat[(t * r + rr) * fout..(t * r + rr) * fout + fout];
+            for c in 0..fout {
+                yr[c] += uv * arow[c] as f64;
+            }
+        }
+    }
+    (y, u)
+}
+
+/// Backward of [`proj_forward`]: accumulates `dB`/`dA` (the only
+/// trainable params) and returns `dL/dx`. The communication pattern is
+/// the transpose of forward: column-parallel layers all-reduce `dx`
+/// partials here, row-parallel layers write disjoint `dx` rows.
+#[allow(clippy::too_many_arguments)]
+fn proj_backward(
+    w: &[f32],
+    bmat: &[f32],
+    amat: &[f32],
+    x: &[f64],
+    u: &[f64],
+    dy: &[f64],
+    rows: usize,
+    row_task: &[usize],
+    dims: &ProjDims,
+    tp: usize,
+    db: &mut [f64],
+    da: &mut [f64],
+    comm: &mut f64,
+) -> Vec<f64> {
+    let (fin, fout, r) = (dims.fin, dims.fout, dims.rank);
+    let tp = tp.max(1);
+    let mut dx;
+    if !dims.row_parallel {
+        // forward sharded output columns -> the c-sum in dx shards here
+        let mut partials: Vec<Vec<f64>> = Vec::with_capacity(tp);
+        for shard in 0..tp {
+            let c0 = shard * fout / tp;
+            let c1 = (shard + 1) * fout / tp;
+            let mut part = vec![0f64; rows * fin];
+            for m in 0..rows {
+                let dyr = &dy[m * fout..(m + 1) * fout];
+                let pr = &mut part[m * fin..(m + 1) * fin];
+                for kk in 0..fin {
+                    let wrow = &w[kk * fout..kk * fout + fout];
+                    let mut acc = 0f64;
+                    for c in c0..c1 {
+                        acc += dyr[c] * wrow[c] as f64;
+                    }
+                    pr[kk] += acc;
+                }
+            }
+            partials.push(part);
+        }
+        dx = combine_partials(partials, comm, rows * fin);
+    } else {
+        // forward sharded the contraction dim -> dx rows are disjoint
+        dx = vec![0f64; rows * fin];
+        for shard in 0..tp {
+            let k0 = shard * fin / tp;
+            let k1 = (shard + 1) * fin / tp;
+            for m in 0..rows {
+                let dyr = &dy[m * fout..(m + 1) * fout];
+                let dxr = &mut dx[m * fin..(m + 1) * fin];
+                for kk in k0..k1 {
+                    let wrow = &w[kk * fout..kk * fout + fout];
+                    let mut acc = 0f64;
+                    for c in 0..fout {
+                        acc += dyr[c] * wrow[c] as f64;
+                    }
+                    dxr[kk] += acc;
+                }
+            }
+        }
+    }
+    // LoRA grads + the LoRA share of dx (replicated path, tp-invariant)
+    let mut dv = vec![0f64; r];
+    for m in 0..rows {
+        let t = row_task[m];
+        let dyr = &dy[m * fout..(m + 1) * fout];
+        let ur = &u[m * r..(m + 1) * r];
+        for rr in 0..r {
+            let arow = &amat[(t * r + rr) * fout..(t * r + rr) * fout + fout];
+            let darow = &mut da[(t * r + rr) * fout..(t * r + rr) * fout + fout];
+            let mut acc = 0f64;
+            let uscaled = dims.scale * ur[rr];
+            for c in 0..fout {
+                acc += dyr[c] * arow[c] as f64;
+                darow[c] += uscaled * dyr[c];
+            }
+            dv[rr] = dims.scale * acc;
+        }
+        let xr = &x[m * fin..(m + 1) * fin];
+        let dxr = &mut dx[m * fin..(m + 1) * fin];
+        for kk in 0..fin {
+            let brow = &bmat[(t * fin + kk) * r..(t * fin + kk) * r + r];
+            let dbrow = &mut db[(t * fin + kk) * r..(t * fin + kk) * r + r];
+            let xv = xr[kk];
+            let mut acc = 0f64;
+            for rr in 0..r {
+                dbrow[rr] += xv * dv[rr];
+                acc += dv[rr] * brow[rr] as f64;
+            }
+            dxr[kk] += acc;
+        }
+    }
+    dx
+}
+
+/// Combine per-shard partial sums with the deterministic tree all-reduce
+/// ordering, timing the combine as communication. A single partial is
+/// taken as-is (tp=1: zero comm, bit-identical to an unsharded loop).
+fn combine_partials(mut partials: Vec<Vec<f64>>, comm: &mut f64, len: usize) -> Vec<f64> {
+    if partials.len() == 1 {
+        return partials.swap_remove(0);
+    }
+    let sw = Stopwatch::start();
+    let combined = tree_reduce(partials, |mut a, b| {
+        for (av, &bv) in a.iter_mut().zip(b.iter()) {
+            *av += bv;
+        }
+        a
+    });
+    *comm += sw.elapsed_secs();
+    combined.unwrap_or_else(|| vec![0f64; len])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn micro() -> NativeModel {
+        NativeModel::new(NativeSpec::micro()).unwrap()
+    }
+
+    /// A microbatch with real content: distinct tokens per row, one row
+    /// ending in PADs, sorted seg ids.
+    fn batch(model: &NativeModel, b: usize, s: usize, seed: u64) -> (Vec<i32>, Vec<i32>) {
+        let vocab = model.spec().vocab as u64;
+        let mut rng = Rng::new(seed);
+        let mut tokens = Vec::with_capacity(b * s);
+        for i in 0..b {
+            let real = if i == b - 1 { s / 2 } else { s };
+            for j in 0..s {
+                if j < real {
+                    // 1.. so PAD never appears as a real token
+                    tokens.push((1 + rng.next_u64() % (vocab - 1)) as i32);
+                } else {
+                    tokens.push(PAD_ID);
+                }
+            }
+        }
+        let n_tasks = model.spec().n_tasks;
+        let seg_ids: Vec<i32> = (0..b).map(|i| (i * n_tasks / b) as i32).collect();
+        (tokens, seg_ids)
+    }
+
+    /// LoRA init has A = 0, which zeroes every dB; randomize the whole
+    /// vector so the gradient check exercises all paths.
+    fn randomized_lora(model: &NativeModel, seed: u64) -> ParamVector {
+        let mut lora = ParamVector::zeros(model.lora_param_count());
+        let mut rng = Rng::new(seed);
+        for x in &mut lora.data {
+            *x = rng.normal_ms(0.0, 0.05) as f32;
+        }
+        lora
+    }
+
+    #[test]
+    fn init_rules_shape_the_vectors() {
+        let m = micro();
+        let (base, lora) = m.init_params(11);
+        assert_eq!(base.len() as u64, m.base_param_count());
+        assert_eq!(lora.len() as u64, m.lora_param_count());
+        // ln gains are ones
+        let e = m
+            .base_table()
+            .iter()
+            .find(|e| e.name.contains("ln1_g"))
+            .unwrap();
+        assert!(base.leaf(e).iter().all(|&x| x == 1.0));
+        // LoRA A stacks init to zero, B stacks don't
+        for e in m.lora_table() {
+            if e.name.contains("_lora_a") {
+                assert!(lora.leaf(e).iter().all(|&x| x == 0.0), "{}", e.name);
+            } else {
+                assert!(lora.leaf(e).iter().any(|&x| x != 0.0), "{}", e.name);
+            }
+        }
+    }
+
+    #[test]
+    fn train_step_is_deterministic() {
+        let m = micro();
+        let (base, _) = m.init_params(3);
+        let lora = randomized_lora(&m, 4);
+        let (tokens, seg) = batch(&m, 4, 8, 5);
+        let a = m.train_step(&base, &lora, (4, 8), &tokens, &seg).unwrap();
+        let b = m.train_step(&base, &lora, (4, 8), &tokens, &seg).unwrap();
+        assert_eq!(a.loss.to_bits(), b.loss.to_bits());
+        assert_eq!(a.tokens, b.tokens);
+        for (x, y) in a.grad.iter().zip(&b.grad) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
+    fn eval_matches_train_loss() {
+        let m = micro();
+        let (base, _) = m.init_params(9);
+        let lora = randomized_lora(&m, 10);
+        let (tokens, seg) = batch(&m, 2, 16, 6);
+        let t = m.train_step(&base, &lora, (2, 16), &tokens, &seg).unwrap();
+        let (loss, toks, task_loss, task_tokens) =
+            m.eval_loss(&base, &lora, (2, 16), &tokens, &seg).unwrap();
+        assert_eq!(t.loss.to_bits(), loss.to_bits());
+        assert_eq!(t.tokens, toks);
+        assert_eq!(t.task_loss, task_loss);
+        assert_eq!(t.task_tokens, task_tokens);
+    }
+
+    #[test]
+    fn gradient_matches_finite_difference() {
+        let m = micro();
+        let (base, _) = m.init_params(21);
+        let lora = randomized_lora(&m, 22);
+        let (tokens, seg) = batch(&m, 4, 8, 23);
+        let out = m.train_step(&base, &lora, (4, 8), &tokens, &seg).unwrap();
+
+        // directional derivative along a random unit-ish direction
+        let mut rng = Rng::new(99);
+        let dir: Vec<f64> = (0..lora.len()).map(|_| rng.normal_ms(0.0, 1.0)).collect();
+        let eps = 1e-3f64;
+        let loss_at = |delta: f64| -> f64 {
+            let mut p = lora.clone();
+            for (x, dv) in p.data.iter_mut().zip(&dir) {
+                *x += (delta * dv) as f32;
+            }
+            let (l, _, _, _) = m.eval_loss(&base, &p, (4, 8), &tokens, &seg).unwrap();
+            l as f64
+        };
+        let fd = (loss_at(eps) - loss_at(-eps)) / (2.0 * eps);
+        let mut analytic = 0f64;
+        for (gv, dv) in out.grad.iter().zip(&dir) {
+            analytic += *gv as f64 * dv;
+        }
+        let scale = fd.abs().max(analytic.abs()).max(1e-6);
+        assert!(
+            (fd - analytic).abs() / scale < 2e-2,
+            "directional: fd={fd} analytic={analytic}"
+        );
+
+        // a few individual coordinates (spread across layers/projections)
+        let n = lora.len();
+        for &idx in &[0, n / 5, n / 3, n / 2, 2 * n / 3, n - 1] {
+            let mut plus = lora.clone();
+            plus.data[idx] += eps as f32;
+            let mut minus = lora.clone();
+            minus.data[idx] -= eps as f32;
+            let (lp, _, _, _) = m.eval_loss(&base, &plus, (4, 8), &tokens, &seg).unwrap();
+            let (lm, _, _, _) = m.eval_loss(&base, &minus, (4, 8), &tokens, &seg).unwrap();
+            let fd = (lp as f64 - lm as f64) / (2.0 * eps);
+            let an = out.grad[idx] as f64;
+            let scale = fd.abs().max(an.abs()).max(1e-4);
+            assert!(
+                (fd - an).abs() / scale < 5e-2,
+                "coord {idx}: fd={fd} analytic={an}"
+            );
+        }
+    }
+
+    #[test]
+    fn pad_only_row_changes_nothing() {
+        let m = micro();
+        let (base, _) = m.init_params(31);
+        let lora = randomized_lora(&m, 32);
+        let s = 8usize;
+        let mut rng = Rng::new(33);
+        let row: Vec<i32> = (0..s).map(|_| (1 + rng.next_u64() % 63) as i32).collect();
+        let seg1 = vec![0i32];
+        let one = m.train_step(&base, &lora, (1, 8), &row, &seg1).unwrap();
+        // same sequence plus an all-PAD row: identical loss + grad bits
+        let mut tokens = row.clone();
+        tokens.extend(std::iter::repeat(PAD_ID).take(s));
+        let seg2 = vec![0i32, 0];
+        let two = m.train_step(&base, &lora, (2, 8), &tokens, &seg2).unwrap();
+        assert_eq!(one.loss.to_bits(), two.loss.to_bits());
+        assert_eq!(one.tokens, two.tokens);
+        for (x, y) in one.grad.iter().zip(&two.grad) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
+    fn column_parallel_forward_is_tp_invariant_bitwise() {
+        // qkv/up forward never communicates: any tp must be bit-identical
+        let dims = ProjDims { fin: 16, fout: 48, rank: 2, scale: 2.0, row_parallel: false };
+        let mut rng = Rng::new(7);
+        let w: Vec<f32> = (0..16 * 48).map(|_| rng.normal_ms(0.0, 0.3) as f32).collect();
+        let bm: Vec<f32> = (0..2 * 16 * 2).map(|_| rng.normal_ms(0.0, 0.3) as f32).collect();
+        let am: Vec<f32> = (0..2 * 2 * 48).map(|_| rng.normal_ms(0.0, 0.3) as f32).collect();
+        let x: Vec<f64> = (0..5 * 16).map(|_| rng.normal_ms(0.0, 1.0)).collect();
+        let tasks = vec![0usize, 0, 1, 1, 1];
+        let mut c1 = 0f64;
+        let (y1, u1) = proj_forward(&w, &bm, &am, &x, 5, &tasks, &dims, 1, &mut c1);
+        for tp in [2, 3, 5] {
+            let mut ct = 0f64;
+            let (yt, ut) = proj_forward(&w, &bm, &am, &x, 5, &tasks, &dims, tp, &mut ct);
+            for (a, b) in y1.iter().zip(&yt) {
+                assert_eq!(a.to_bits(), b.to_bits(), "tp={tp}");
+            }
+            assert_eq!(u1, ut);
+            assert_eq!(ct, 0.0, "column-parallel forward must not communicate");
+        }
+    }
+
+    #[test]
+    fn row_parallel_forward_matches_unsharded_numerically() {
+        let dims = ProjDims { fin: 48, fout: 16, rank: 2, scale: 2.0, row_parallel: true };
+        let mut rng = Rng::new(8);
+        let w: Vec<f32> = (0..48 * 16).map(|_| rng.normal_ms(0.0, 0.3) as f32).collect();
+        let bm: Vec<f32> = (0..2 * 48 * 2).map(|_| rng.normal_ms(0.0, 0.3) as f32).collect();
+        let am: Vec<f32> = (0..2 * 2 * 16).map(|_| rng.normal_ms(0.0, 0.3) as f32).collect();
+        let x: Vec<f64> = (0..5 * 48).map(|_| rng.normal_ms(0.0, 1.0)).collect();
+        let tasks = vec![0usize, 1, 1, 1, 1];
+        let mut c1 = 0f64;
+        let (y1, _) = proj_forward(&w, &bm, &am, &x, 5, &tasks, &dims, 1, &mut c1);
+        for tp in [2, 4] {
+            let mut ct = 0f64;
+            let (yt, _) = proj_forward(&w, &bm, &am, &x, 5, &tasks, &dims, tp, &mut ct);
+            for (a, b) in y1.iter().zip(&yt) {
+                let scale = a.abs().max(1.0);
+                assert!((a - b).abs() / scale < 1e-12, "tp={tp}: {a} vs {b}");
+            }
+            assert!(ct >= 0.0);
+        }
+    }
+
+    #[test]
+    fn uneven_tp_shards_cover_every_column() {
+        // fout=48 with tp=5 gives uneven shard widths; the sharding must
+        // still partition (no divisibility requirement)
+        let fout = 48usize;
+        let tp = 5usize;
+        let mut covered = vec![false; fout];
+        for shard in 0..tp {
+            for c in (shard * fout / tp)..((shard + 1) * fout / tp) {
+                assert!(!covered[c], "column {c} assigned twice");
+                covered[c] = true;
+            }
+        }
+        assert!(covered.iter().all(|&x| x));
+    }
+
+    #[test]
+    fn rope_inverse_undoes_forward() {
+        let (cos_t, sin_t) = rope_tables(6, 4, 10_000.0);
+        let mut rng = Rng::new(12);
+        let orig: Vec<f64> = (0..2 * 6 * 8).map(|_| rng.normal_ms(0.0, 1.0)).collect();
+        let mut buf = orig.clone();
+        apply_rope(&mut buf, 2, 6, 8, &cos_t, &sin_t, false);
+        apply_rope(&mut buf, 2, 6, 8, &cos_t, &sin_t, true);
+        for (a, b) in orig.iter().zip(&buf) {
+            assert!((a - b).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn validate_rejects_malformed_batches() {
+        let m = micro();
+        let (tokens, seg) = batch(&m, 4, 8, 1);
+        assert!(m.validate((4, 8), &tokens, &seg).is_ok());
+        assert!(m.validate((4, 9), &tokens, &seg).is_err());
+        assert!(m.validate((4, 8), &tokens, &seg[..3]).is_err());
+        let unsorted = vec![1i32, 0, 0, 0];
+        assert!(m.validate((4, 8), &tokens, &unsorted).is_err());
+        let bad_task = vec![0i32, 0, 0, 99];
+        assert!(m.validate((4, 8), &tokens, &bad_task).is_err());
+        let mut bad_tok = tokens.clone();
+        bad_tok[0] = 1_000;
+        assert!(m.validate((4, 8), &bad_tok, &seg).is_err());
+    }
+}

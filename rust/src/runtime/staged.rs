@@ -1,0 +1,484 @@
+//! `StagedEngine`: tp × pp execution of the native model.
+//!
+//! The layer stack splits into `pp` contiguous partitions, each running
+//! on its own OS thread (`util::par::scoped_pipeline` — stages block on
+//! channel recvs, so they cannot share a bounded worker pool). A
+//! microbatch pipeline with the mLoRA-style 1F1B schedule flows
+//! activations forward and residual-stream gradients backward over
+//! `std::sync::mpsc` channels; the schedule is a pure function of
+//! `(pp, stage, n_microbatches)`, so message order — and therefore every
+//! computed value — is deterministic for any thread timing or
+//! `LOBRA_NUM_THREADS`. Within a stage, tp > 1 shards the base matmuls
+//! column/row-wise (`runtime::native::proj_forward`) with the
+//! `tree_reduce` combine ordering; the shards execute sequentially
+//! in-thread, which models the per-rank compute exactly once and keeps
+//! tp results thread-count-invariant by construction.
+//!
+//! Identity story (certified in `tests/staged_pipeline.rs`): with
+//! pp=1 × tp=1 the single stage executes embed → layers → head → layers
+//! in exactly the call sequence of `NativeModel::train_step`, so staged
+//! and unstaged are bit-identical. LoRA gradients accumulate in
+//! fixed order: per microbatch each stage owns disjoint layer regions,
+//! merged stage-major after the pipeline drains.
+//!
+//! Timing: each stage's per-microbatch busy time (compute + its tp
+//! combines, recv waits excluded) is measured with `Stopwatch`. The
+//! per-microbatch attributed wall time is
+//! `seconds(m) = max_stage busy(m) + bubble_share`, where
+//! `bubble_share = max(0, (T_wall - Σ_m busy(m)) / M)` spreads the
+//! pipeline fill/drain bubble evenly (zero when pp = 1 — there is no
+//! pipeline to have a bubble); `comm(m)` is the tp-combine time
+//! of the critical (max-busy) stage. `CalibrationStore::fit` subtracts
+//! both back out so fitted compute never absorbs bubble or comm.
+
+use super::engine::StepOutput;
+use super::native::{row_tasks, step_output, LayerCache, LossParts, NativeModel};
+use super::params::ParamVector;
+use crate::util::clock::Stopwatch;
+use crate::util::par::scoped_pipeline;
+use anyhow::{anyhow, Result};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+
+/// One microbatch for the pipeline (`tokens` row-major `[b, s]`,
+/// PAD = 0; `seg_ids` `[b]` sorted task ids — the `Engine` contract).
+#[derive(Debug, Clone)]
+pub struct StageMb {
+    pub shape: (u64, u64),
+    pub tokens: Vec<i32>,
+    pub seg_ids: Vec<i32>,
+}
+
+/// Per-microbatch timing attribution from a pipeline run.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MbTiming {
+    /// Attributed wall seconds: critical-stage busy + bubble share.
+    pub seconds: f64,
+    /// Tensor-parallel combine seconds on the critical stage.
+    pub comm: f64,
+    /// This microbatch's share of the pipeline fill/drain bubble.
+    pub bubble: f64,
+}
+
+/// Layer range `[lo, hi)` owned by `stage` when `n_layers` split into
+/// `pp` partitions: earlier stages take the remainder layers.
+pub fn layer_range_for_stage(n_layers: usize, pp: usize, stage: usize) -> (usize, usize) {
+    let base = n_layers / pp;
+    let rem = n_layers % pp;
+    let lo = stage * base + stage.min(rem);
+    let hi = lo + base + usize::from(stage < rem);
+    (lo, hi)
+}
+
+/// A pp-staged, tp-sharded executor over the native model.
+pub struct StagedEngine {
+    model: Arc<NativeModel>,
+    base: Arc<ParamVector>,
+    tp: usize,
+    pp: usize,
+}
+
+type Msg = (usize, Vec<f64>);
+
+/// Everything one stage thread needs; built before spawn so every stage
+/// closure has the same type.
+struct StageCtx<'a> {
+    model: &'a NativeModel,
+    base: &'a [f32],
+    lora: &'a [f32],
+    mbs: &'a [StageMb],
+    row_tasks: &'a [Vec<usize>],
+    stage: usize,
+    pp: usize,
+    tp: usize,
+    fwd_rx: Option<Receiver<Msg>>,
+    fwd_tx: Option<Sender<Msg>>,
+    bwd_rx: Option<Receiver<Msg>>,
+    bwd_tx: Option<Sender<Msg>>,
+}
+
+/// One stage's pipeline products, per microbatch.
+struct StageOut {
+    /// Full-length LoRA gradient buffers (only this stage's layer
+    /// regions are nonzero; regions are disjoint across stages).
+    grads: Vec<Vec<f64>>,
+    /// Busy seconds (compute + tp combines; recv waits excluded).
+    busy: Vec<f64>,
+    /// Tensor-parallel combine seconds.
+    comm: Vec<f64>,
+    /// Loss-head outputs; `Some` only on the last stage.
+    parts: Vec<Option<LossParts>>,
+}
+
+impl StagedEngine {
+    /// Build a `tp × pp` staged engine over a shared model + frozen base.
+    pub fn new(
+        model: Arc<NativeModel>,
+        base: Arc<ParamVector>,
+        tp: usize,
+        pp: usize,
+    ) -> Result<Self> {
+        if tp == 0 || pp == 0 {
+            return Err(anyhow!("tp and pp must be >= 1, got tp={tp} pp={pp}"));
+        }
+        if pp > model.n_layers() {
+            return Err(anyhow!(
+                "pp={pp} exceeds the {}-layer stack (a stage needs >= 1 layer)",
+                model.n_layers()
+            ));
+        }
+        if base.len() as u64 != model.base_param_count() {
+            return Err(anyhow!(
+                "base params {} != spec {}",
+                base.len(),
+                model.base_param_count()
+            ));
+        }
+        Ok(Self { model, base, tp, pp })
+    }
+
+    pub fn tp(&self) -> usize {
+        self.tp
+    }
+
+    pub fn pp(&self) -> usize {
+        self.pp
+    }
+
+    pub fn model(&self) -> &NativeModel {
+        &self.model
+    }
+
+    /// Run the 1F1B pipeline over `mbs`, returning per-microbatch step
+    /// outputs (loss head from the last stage, gradients merged
+    /// stage-major) and timing attributions.
+    pub fn run(&self, lora: &ParamVector, mbs: &[StageMb]) -> Result<Vec<(StepOutput, MbTiming)>> {
+        if mbs.is_empty() {
+            return Ok(Vec::new());
+        }
+        if lora.len() as u64 != self.model.lora_param_count() {
+            return Err(anyhow!(
+                "lora params {} != spec {}",
+                lora.len(),
+                self.model.lora_param_count()
+            ));
+        }
+        for mb in mbs {
+            self.model.validate(mb.shape, &mb.tokens, &mb.seg_ids)?;
+        }
+        let row_task_all: Vec<Vec<usize>> = mbs
+            .iter()
+            .map(|mb| row_tasks(&mb.seg_ids, mb.shape.0 as usize, mb.shape.1 as usize))
+            .collect();
+
+        let pp = self.pp;
+        let mut fwd_tx: Vec<Option<Sender<Msg>>> = (0..pp).map(|_| None).collect();
+        let mut fwd_rx: Vec<Option<Receiver<Msg>>> = (0..pp).map(|_| None).collect();
+        let mut bwd_tx: Vec<Option<Sender<Msg>>> = (0..pp).map(|_| None).collect();
+        let mut bwd_rx: Vec<Option<Receiver<Msg>>> = (0..pp).map(|_| None).collect();
+        for i in 0..pp.saturating_sub(1) {
+            let (tx, rx) = channel();
+            fwd_tx[i] = Some(tx);
+            fwd_rx[i + 1] = Some(rx);
+            let (tx, rx) = channel();
+            bwd_tx[i + 1] = Some(tx);
+            bwd_rx[i] = Some(rx);
+        }
+        let mut ctxs = Vec::with_capacity(pp);
+        for stage in 0..pp {
+            ctxs.push(StageCtx {
+                model: &self.model,
+                base: &self.base.data,
+                lora: &lora.data,
+                mbs,
+                row_tasks: &row_task_all,
+                stage,
+                pp,
+                tp: self.tp,
+                fwd_rx: fwd_rx[stage].take(),
+                fwd_tx: fwd_tx[stage].take(),
+                bwd_rx: bwd_rx[stage].take(),
+                bwd_tx: bwd_tx[stage].take(),
+            });
+        }
+
+        let wall = Stopwatch::start();
+        let results: Vec<Result<StageOut>> =
+            scoped_pipeline(ctxs.into_iter().map(|c| move || run_stage(c)).collect());
+        let t_wall = wall.elapsed_secs();
+
+        let mut stage_outs = Vec::with_capacity(pp);
+        for r in results {
+            stage_outs.push(r?);
+        }
+
+        let m_count = mbs.len();
+        let mut busy_max = vec![0f64; m_count];
+        let mut comm_at_max = vec![0f64; m_count];
+        for m in 0..m_count {
+            let mut best = 0usize;
+            for (si, so) in stage_outs.iter().enumerate() {
+                if so.busy[m] > stage_outs[best].busy[m] {
+                    best = si;
+                }
+            }
+            busy_max[m] = stage_outs[best].busy[m];
+            comm_at_max[m] = stage_outs[best].comm[m];
+        }
+        let mut total_busy = 0f64;
+        for &b in &busy_max {
+            total_busy += b;
+        }
+        // pp=1 has no pipeline: wall-vs-busy slack there is thread setup
+        // overhead, not a bubble, and must not be subtracted by the fit
+        let bubble_share = if self.pp > 1 {
+            ((t_wall - total_busy) / m_count as f64).max(0.0)
+        } else {
+            0.0
+        };
+
+        let lora_len = self.model.lora_param_count() as usize;
+        let mut out = Vec::with_capacity(m_count);
+        for m in 0..m_count {
+            let mut grad = vec![0f64; lora_len];
+            for so in &stage_outs {
+                for (g, &v) in grad.iter_mut().zip(&so.grads[m]) {
+                    *g += v;
+                }
+            }
+            let Some(parts) = stage_outs[pp - 1].parts[m].take() else {
+                return Err(anyhow!("last stage produced no loss for microbatch {m}"));
+            };
+            let timing = MbTiming {
+                seconds: busy_max[m] + bubble_share,
+                comm: comm_at_max[m],
+                bubble: bubble_share,
+            };
+            out.push((step_output(&parts, &grad), timing));
+        }
+        Ok(out)
+    }
+}
+
+/// Execute one stage's full 1F1B schedule:
+/// `F(0..w)`, then `F(m); B(m-w)` for `m in w..M`, then the cooldown
+/// `B(M-w..M)`, with `w = min(M, pp-1-stage)` warmup forwards. Every
+/// recv's producer is scheduled strictly earlier in dependency order, so
+/// the pipeline is deadlock-free with unbounded channels.
+fn run_stage(mut ctx: StageCtx<'_>) -> Result<StageOut> {
+    let m_count = ctx.mbs.len();
+    let (lo, hi) = layer_range_for_stage(ctx.model.n_layers(), ctx.pp, ctx.stage);
+    let is_first = ctx.stage == 0;
+    let is_last = ctx.stage == ctx.pp - 1;
+    let lora_len = ctx.model.lora_param_count() as usize;
+
+    let mut st = StageState {
+        grads: Vec::with_capacity(m_count),
+        busy: vec![0f64; m_count],
+        comm: vec![0f64; m_count],
+        parts: (0..m_count).map(|_| None).collect(),
+        caches: (0..m_count).map(|_| None).collect(),
+        head_h: (0..m_count).map(|_| None).collect(),
+    };
+
+    let w = (ctx.pp - 1 - ctx.stage).min(m_count);
+    for m in 0..w {
+        forward(&mut ctx, &mut st, m, lo, hi, is_first, is_last)?;
+    }
+    for m in w..m_count {
+        forward(&mut ctx, &mut st, m, lo, hi, is_first, is_last)?;
+        backward(&mut ctx, &mut st, m - w, lo, is_first, is_last, lora_len)?;
+    }
+    for j in (m_count - w)..m_count {
+        backward(&mut ctx, &mut st, j, lo, is_first, is_last, lora_len)?;
+    }
+
+    Ok(StageOut { grads: st.grads, busy: st.busy, comm: st.comm, parts: st.parts })
+}
+
+/// Mutable per-stage pipeline state threaded through the schedule ops.
+struct StageState {
+    grads: Vec<Vec<f64>>,
+    busy: Vec<f64>,
+    comm: Vec<f64>,
+    parts: Vec<Option<LossParts>>,
+    /// Forward caches per in-flight microbatch (this stage's layers).
+    caches: Vec<Option<Vec<LayerCache>>>,
+    /// Last stage only: residual stream entering the loss head.
+    head_h: Vec<Option<Vec<f64>>>,
+}
+
+fn forward(
+    ctx: &mut StageCtx<'_>,
+    st: &mut StageState,
+    m: usize,
+    lo: usize,
+    hi: usize,
+    is_first: bool,
+    is_last: bool,
+) -> Result<()> {
+    let mb = &ctx.mbs[m];
+    let (b, s) = (mb.shape.0 as usize, mb.shape.1 as usize);
+    let h_in = if is_first {
+        None
+    } else {
+        let Some(rx) = ctx.fwd_rx.as_ref() else {
+            return Err(anyhow!("stage {} missing forward receiver", ctx.stage));
+        };
+        let (idx, h) = rx
+            .recv()
+            .map_err(|_| anyhow!("forward channel closed before microbatch {m}"))?;
+        if idx != m {
+            return Err(anyhow!("pipeline order violated: got mb {idx}, expected {m}"));
+        }
+        Some(h)
+    };
+    let sw = Stopwatch::start();
+    let mut comm = 0f64;
+    let mut h = match h_in {
+        Some(h) => h,
+        None => ctx.model.embed_forward(ctx.base, &mb.tokens, b, s),
+    };
+    let mut caches = Vec::with_capacity(hi - lo);
+    for li in lo..hi {
+        let (h_next, cache) = ctx.model.layer_forward(
+            li,
+            ctx.tp,
+            ctx.base,
+            ctx.lora,
+            &h,
+            &mb.tokens,
+            &ctx.row_tasks[m],
+            b,
+            s,
+            &mut comm,
+        );
+        h = h_next;
+        caches.push(cache);
+    }
+    st.busy[m] += sw.elapsed_secs();
+    st.comm[m] += comm;
+    st.caches[m] = Some(caches);
+    if is_last {
+        st.head_h[m] = Some(h);
+    } else {
+        let Some(tx) = ctx.fwd_tx.as_ref() else {
+            return Err(anyhow!("stage {} missing forward sender", ctx.stage));
+        };
+        tx.send((m, h))
+            .map_err(|_| anyhow!("next stage hung up before microbatch {m}"))?;
+    }
+    Ok(())
+}
+
+fn backward(
+    ctx: &mut StageCtx<'_>,
+    st: &mut StageState,
+    j: usize,
+    lo: usize,
+    is_first: bool,
+    is_last: bool,
+    lora_len: usize,
+) -> Result<()> {
+    let mb = &ctx.mbs[j];
+    let (b, s) = (mb.shape.0 as usize, mb.shape.1 as usize);
+    let mut comm = 0f64;
+    let mut grad = vec![0f64; lora_len];
+    let (sw, mut dh) = if is_last {
+        let Some(h) = st.head_h[j].take() else {
+            return Err(anyhow!("no head activation for microbatch {j}"));
+        };
+        let sw = Stopwatch::start();
+        let (parts, dh_opt) =
+            ctx.model
+                .head_loss(ctx.base, &h, &mb.tokens, &mb.seg_ids, b, s, true);
+        st.parts[j] = Some(parts);
+        let Some(dh) = dh_opt else {
+            return Err(anyhow!("head_loss produced no gradient"));
+        };
+        (sw, dh)
+    } else {
+        let Some(rx) = ctx.bwd_rx.as_ref() else {
+            return Err(anyhow!("stage {} missing backward receiver", ctx.stage));
+        };
+        let (idx, dh) = rx
+            .recv()
+            .map_err(|_| anyhow!("backward channel closed before microbatch {j}"))?;
+        if idx != j {
+            return Err(anyhow!("pipeline order violated: got mb {idx}, expected {j}"));
+        }
+        (Stopwatch::start(), dh)
+    };
+    let Some(caches) = st.caches[j].take() else {
+        return Err(anyhow!("no forward cache for microbatch {j}"));
+    };
+    for (off, cache) in caches.iter().enumerate().rev() {
+        dh = ctx.model.layer_backward(
+            lo + off,
+            ctx.tp,
+            ctx.base,
+            ctx.lora,
+            &dh,
+            cache,
+            &mb.tokens,
+            &ctx.row_tasks[j],
+            b,
+            s,
+            &mut grad,
+            &mut comm,
+        );
+    }
+    st.busy[j] += sw.elapsed_secs();
+    st.comm[j] += comm;
+    if !is_first {
+        let Some(tx) = ctx.bwd_tx.as_ref() else {
+            return Err(anyhow!("stage {} missing backward sender", ctx.stage));
+        };
+        tx.send((j, dh))
+            .map_err(|_| anyhow!("previous stage hung up before microbatch {j}"))?;
+    }
+    st.grads.push(grad);
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::native::{NativeModel, NativeSpec};
+
+    #[test]
+    fn layer_ranges_partition_the_stack() {
+        for n in 1..=8usize {
+            for pp in 1..=n {
+                let mut next = 0usize;
+                for stage in 0..pp {
+                    let (lo, hi) = layer_range_for_stage(n, pp, stage);
+                    assert_eq!(lo, next, "n={n} pp={pp} stage={stage}");
+                    assert!(hi > lo, "every stage needs >= 1 layer");
+                    next = hi;
+                }
+                assert_eq!(next, n);
+            }
+        }
+    }
+
+    #[test]
+    fn new_rejects_bad_geometry() {
+        let model = Arc::new(NativeModel::new(NativeSpec::micro()).unwrap());
+        let (base, _) = model.init_params(1);
+        let base = Arc::new(base);
+        assert!(StagedEngine::new(model.clone(), base.clone(), 0, 1).is_err());
+        assert!(StagedEngine::new(model.clone(), base.clone(), 1, 0).is_err());
+        // micro has 4 layers: pp=5 cannot give every stage a layer
+        assert!(StagedEngine::new(model.clone(), base.clone(), 1, 5).is_err());
+        assert!(StagedEngine::new(model, base, 2, 4).is_ok());
+    }
+
+    #[test]
+    fn empty_run_is_empty() {
+        let model = Arc::new(NativeModel::new(NativeSpec::micro()).unwrap());
+        let (base, lora) = model.init_params(2);
+        let eng = StagedEngine::new(model, Arc::new(base), 1, 2).unwrap();
+        assert!(eng.run(&lora, &[]).unwrap().is_empty());
+    }
+}

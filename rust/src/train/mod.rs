@@ -208,8 +208,20 @@ impl Trainer {
         self.redeploys
     }
 
-    pub fn engine(&self) -> &Engine {
+    /// The PJRT engine (`None` if the executor were backed by the native
+    /// runtime; the trainer always constructs the PJRT backend today).
+    pub fn engine(&self) -> Option<&Engine> {
         self.exec.engine()
+    }
+
+    /// Execution platform name, independent of backend.
+    pub fn platform(&self) -> String {
+        self.exec.platform()
+    }
+
+    /// Compiled/executable microbatch shapes, ascending by seq.
+    pub fn shapes(&self) -> Vec<(u64, u64)> {
+        self.exec.shapes()
     }
 
     pub fn lora(&self) -> &ParamVector {

@@ -259,12 +259,12 @@ where
     if threads <= 1 || n == 1 {
         return items.iter().map(|t| f(t)).collect();
     }
-    let results = run_stealing(&items, threads, &f);
-    let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
-    for (i, r) in results {
-        out[i] = Some(r);
-    }
-    out.into_iter().map(|o| o.unwrap()).collect()
+    let mut results = run_stealing(&items, threads, &f);
+    // every index in 0..n was claimed exactly once, so sorting the
+    // (index, result) pairs restores input order without an Option
+    // placeholder vector
+    results.sort_by_key(|&(i, _)| i);
+    results.into_iter().map(|(_, r)| r).collect()
 }
 
 /// Bounded work-stealing fold: `fold` maps each item to an accumulator
@@ -324,7 +324,64 @@ where
                 local
             }));
         }
-        handles.into_iter().flat_map(|h| h.join().unwrap()).collect()
+        handles
+            .into_iter()
+            .flat_map(|h| h.join().unwrap_or_else(|e| std::panic::resume_unwind(e)))
+            .collect()
+    })
+}
+
+/// Deterministic binary-tree reduction in input order: pairs `(0,1)`,
+/// `(2,3)`, … are combined level by level until one value remains. The
+/// shape depends only on `items.len()`, never on thread timing, so
+/// reductions over `par_map` outputs — and the staged runtime's
+/// tensor-parallel all-reduces, which reuse this exact ordering — are
+/// reproducible for any worker count.
+pub fn tree_reduce<T>(items: Vec<T>, mut combine: impl FnMut(T, T) -> T) -> Option<T> {
+    let mut level = items;
+    while level.len() > 1 {
+        let mut next = Vec::with_capacity(level.len().div_ceil(2));
+        let mut it = level.into_iter();
+        while let Some(a) = it.next() {
+            match it.next() {
+                Some(b) => next.push(combine(a, b)),
+                None => next.push(a),
+            }
+        }
+        level = next;
+    }
+    level.pop()
+}
+
+/// Run one closure per pipeline stage on its own OS thread and join them
+/// all, resuming any stage panic on the caller.
+///
+/// This is the raw-thread home (rule R6) for the staged runtime's 1F1B
+/// microbatch pipeline: each stage *blocks* on channel recvs from its
+/// neighbors, so stages must not share a bounded worker pool —
+/// `max_threads()` capping would deadlock the pipeline (a stage waiting
+/// for a worker slot held by the stage it feeds). Pipeline depth is pp
+/// (≤ a replica's GPU count), so the thread count stays small and
+/// bounded by the plan, not the data.
+///
+/// Determinism: stage results are returned in stage order, and the
+/// stages themselves communicate over channels in a schedule fixed by
+/// (pp, microbatch count) alone — thread timing affects wall-clock
+/// only, never values.
+pub fn scoped_pipeline<R, F>(stages: Vec<F>) -> Vec<R>
+where
+    R: Send,
+    F: FnOnce() -> R + Send,
+{
+    std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(stages.len());
+        for stage in stages {
+            handles.push(scope.spawn(stage));
+        }
+        handles
+            .into_iter()
+            .map(|h| h.join().unwrap_or_else(|e| std::panic::resume_unwind(e)))
+            .collect()
     })
 }
 

@@ -40,7 +40,7 @@ fn collinear_shapes_hit_the_singular_pivot() {
     // singular and the fit must be refused, not inverted through noise
     let obs: Vec<Observation> = [1u64, 2, 4, 8, 16]
         .iter()
-        .map(|&b| Observation { b, s: 128, seconds: 0.01 * b as f64 })
+        .map(|&b| Observation::new(b, 128, 0.01 * b as f64))
         .collect();
     assert!(calibrate::fit(&obs).is_none());
 
@@ -96,8 +96,11 @@ fn profile_json_round_trip_is_bit_identical() {
             assert_eq!(oa.b, ob.b);
             assert_eq!(oa.s, ob.s);
             assert_eq!(oa.seconds.to_bits(), ob.seconds.to_bits());
+            assert_eq!(oa.comm.to_bits(), ob.comm.to_bits());
+            assert_eq!(oa.bubble.to_bits(), ob.bubble.to_bits());
         }
     }
+    assert_eq!(loaded.device_fingerprint(), store.device_fingerprint());
     // the loaded profile keys cost tables identically to the original
     let c1 = CostModel::from_profile(&model, &cluster, store.profile()).unwrap();
     let c2 = CostModel::from_profile(&model, &cluster, loaded.profile()).unwrap();
@@ -142,9 +145,11 @@ fn corrupt_profile_falls_back_to_analytic() {
 #[test]
 fn sim_replay_fit_matches_the_cost_model() {
     // property: a profile replayed through the SimExecutor is sampled from
-    // the analytic model, which lies exactly in the fitted family — so the
-    // per-config FittedCost must reproduce the sim's own CostModel at
-    // every observed shape
+    // the analytic model, which lies exactly in the fitted family — the
+    // fit subtracts each observation's attributed comm and bubble, so the
+    // profiled model (fitted compute + analytic comm) must reproduce the
+    // sim's own CostModel at every observed shape, multi-GPU configs
+    // included
     let (model, cluster, tasks) = world();
     let cost = CostModel::calibrated(&model, &cluster);
     let plan = Planner::new(&cost, &cluster)
@@ -155,15 +160,19 @@ fn sim_replay_fit_matches_the_cost_model() {
         let n = profile_sim_steps(&cost, &plan, &tasks, 8, seed, &mut store);
         assert!(n > 0, "seed {seed}: no observations");
         store.refit();
+        let profiled =
+            CostModel::from_profile(&model, &cluster, store.profile()).unwrap();
         let mut checked = 0usize;
         for e in store.entries() {
-            let Some(f) = e.fitted else { continue };
+            if e.fitted.is_none() {
+                continue;
+            }
             for o in &e.observations {
                 let want = cost.t_microbatch(e.config, o.b, o.s);
-                let got = f.predict(o.b, o.s);
+                let got = profiled.t_microbatch(e.config, o.b, o.s);
                 assert!(
                     (got - want).abs() / want.max(1e-12) < 1e-3,
-                    "seed {seed} {} b={} s={}: fitted {got} vs analytic {want}",
+                    "seed {seed} {} b={} s={}: profiled {got} vs analytic {want}",
                     e.config,
                     o.b,
                     o.s
@@ -174,6 +183,59 @@ fn sim_replay_fit_matches_the_cost_model() {
         }
         assert!(checked > 0, "seed {seed}: no config accumulated a fittable set");
     }
+}
+
+#[test]
+fn hygiene_rejects_stragglers_before_the_profile_attaches() {
+    // regression against a contaminated observation set: cold-start
+    // warmup microbatches and mid-run stragglers must not bend the fit
+    // the planner will consume
+    let (model, cluster, _) = world();
+    let cost = CostModel::calibrated(&model, &cluster);
+    let c = ParallelConfig::new(1, 1);
+    let feed = |store: &mut CalibrationStore| {
+        // two cold-start microbatches, 40x slow (compile + cache warmup)
+        for _ in 0..2 {
+            store.record(c, 4, 512, 40.0 * cost.t_microbatch(c, 4, 512));
+        }
+        // ... then two clean sweeps with two 25x stragglers injected
+        for rep in 0..2 {
+            for (i, &(b, s)) in SHAPES.iter().enumerate() {
+                let t = cost.t_microbatch(c, b, s);
+                let t = if rep == 1 && (i == 1 || i == 3) { 25.0 * t } else { t };
+                store.record(c, b, s, t);
+            }
+        }
+    };
+
+    let mut store = CalibrationStore::new(&cost).with_hygiene(2, 0.2);
+    feed(&mut store);
+    // warmup observations were discarded at record time
+    assert_eq!(store.n_observations(), 2 * SHAPES.len());
+    store.refit();
+    let profiled = CostModel::from_profile(&model, &cluster, store.profile()).unwrap();
+    for &(b, s) in &SHAPES {
+        let want = cost.t_microbatch(c, b, s);
+        let got = profiled.t_microbatch(c, b, s);
+        assert!(
+            (got - want).abs() / want < 1e-6,
+            "hygiene fit diverged at b={b} s={s}: {got} vs {want}"
+        );
+    }
+
+    // the same feed without hygiene produces a visibly bent fit
+    let mut naive = CalibrationStore::new(&cost);
+    feed(&mut naive);
+    naive.refit();
+    let bent = CostModel::from_profile(&model, &cluster, naive.profile()).unwrap();
+    let worst = SHAPES
+        .iter()
+        .map(|&(b, s)| {
+            let want = cost.t_microbatch(c, b, s);
+            (bent.t_microbatch(c, b, s) - want).abs() / want
+        })
+        .fold(0.0f64, f64::max);
+    assert!(worst > 0.05, "contamination should have bent the naive fit: {worst}");
 }
 
 #[test]

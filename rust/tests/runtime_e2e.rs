@@ -134,7 +134,7 @@ fn trainer_learns_and_checkpoints() {
 
     // --- virtual-cluster redeploy (serving-runtime swap path) ------------
     // the engine world the trainer's default deployment lives on
-    let preset = trainer.engine().manifest().preset.clone();
+    let preset = trainer.engine().unwrap().manifest().preset.clone();
     let model = ModelDesc::by_name(&preset).unwrap_or_else(ModelDesc::tiny);
     let cluster = ClusterSpec::local_cpu(4);
     // plan-identical redeploy: zero changed replicas, zero charge
